@@ -1,0 +1,44 @@
+//! Crossover sweep — reproduce the §5.3 dispatch thresholds.
+//!
+//! Sweeps the window size for both passes, prices the *counted*
+//! instruction mixes with the Exynos-5422 cost model, finds the
+//! linear/vHGW crossovers, and compares with the paper's measured
+//! w_y⁰ = 69 / w_x⁰ = 59.  Also prints this host's wall-clock
+//! crossovers for contrast (different silicon, different constants —
+//! same qualitative shape).
+//!
+//! ```bash
+//! cargo run --release --example crossover_sweep
+//! ```
+
+use neon_morph::bench_harness::{fig3, fig4, window_sweep};
+use neon_morph::costmodel::CostModel;
+use neon_morph::morphology::{PAPER_WX0, PAPER_WY0};
+
+fn main() {
+    let model = CostModel::exynos5422();
+    let windows = window_sweep();
+
+    println!("sweeping horizontal (rows) pass, {} windows ...", windows.len());
+    let f3 = fig3::run(&model, &windows, 3);
+    println!("sweeping vertical (cols) pass ...");
+    let f4 = fig4::run(&model, &windows, 3);
+
+    println!("\n{}", fig3::render("Fig 3 sweep (cost model, ns)", &f3, "model").to_tsv());
+    println!("{}", fig4::render("Fig 4 sweep (cost model, ns)", &f4, "model").to_tsv());
+
+    println!("crossovers:");
+    println!(
+        "  horizontal w_y0: model {:>3}  host {:>3}  paper {:>3}",
+        f3.crossover_model, f3.crossover_host, PAPER_WY0
+    );
+    println!(
+        "  vertical   w_x0: model {:>3}  host {:>3}  paper {:>3}",
+        f4.crossover_model, f4.crossover_host, PAPER_WX0
+    );
+    println!(
+        "  asymmetry (w_x0 < w_y0): model {}  paper {}",
+        f4.crossover_model < f3.crossover_model,
+        PAPER_WX0 < PAPER_WY0
+    );
+}

@@ -1,0 +1,95 @@
+//! Document cleanup — the recognition-pipeline workload the paper's
+//! introduction motivates (document/credit-card recognition systems).
+//!
+//! Takes a synthetic scanned page with salt-and-pepper noise and:
+//!   1. removes the noise with a closing∘opening pair,
+//!   2. extracts text-line masks with a wide horizontal erosion,
+//!   3. computes a morphological gradient as a cheap edge map,
+//! reporting per-stage timings on the §5.3 hybrid implementation versus
+//! the scalar vHGW baseline.
+//!
+//! ```bash
+//! cargo run --release --example document_cleanup [-- /path/to/page.pgm]
+//! ```
+
+use neon_morph::image::{read_pgm, synth, write_pgm, Image};
+use neon_morph::morphology::{self, Border, HybridThresholds, MorphConfig, PassMethod,
+                             VerticalStrategy};
+use neon_morph::neon::Native;
+
+fn count_dark(img: &Image<u8>) -> usize {
+    (0..img.height())
+        .flat_map(|y| img.row(y).iter())
+        .filter(|&&v| v < 128)
+        .count()
+}
+
+fn main() -> anyhow::Result<()> {
+    let arg = std::env::args().nth(1);
+    let page = match &arg {
+        Some(path) => read_pgm(path)?,
+        None => synth::document(600, 800, 2024),
+    };
+    println!(
+        "page: {}x{} ({} dark pixels)",
+        page.height(),
+        page.width(),
+        count_dark(&page)
+    );
+
+    let hybrid = MorphConfig::default();
+    let baseline = MorphConfig {
+        method: PassMethod::Vhgw,
+        vertical: VerticalStrategy::Transpose,
+        simd: false,
+        border: Border::Identity,
+        thresholds: HybridThresholds::paper(),
+    };
+
+    // 1. despeckle: closing kills pepper (dark specks), opening kills salt
+    let b = &mut Native;
+    let t = std::time::Instant::now();
+    let closed = morphology::closing(b, &page, 3, 3, &hybrid);
+    let despeckled = morphology::opening(b, &closed, 3, 3, &hybrid);
+    let t_hybrid = t.elapsed();
+    let t = std::time::Instant::now();
+    let closed_base = morphology::closing(b, &page, 3, 3, &baseline);
+    let _ = morphology::opening(b, &closed_base, 3, 3, &baseline);
+    let t_base = t.elapsed();
+    println!(
+        "despeckle 3x3 closing+opening: hybrid {:?} vs scalar-vHGW {:?} ({:.1}x)",
+        t_hybrid,
+        t_base,
+        t_base.as_secs_f64() / t_hybrid.as_secs_f64()
+    );
+
+    // 2. text-line mask: wide horizontal SE merges glyphs into lines
+    let t = std::time::Instant::now();
+    let lines = morphology::erode(&despeckled, 61, 3);
+    println!("text-line mask 61x3 erosion: {:?}", t.elapsed());
+
+    // 3. edge map
+    let t = std::time::Instant::now();
+    let edges = morphology::gradient(b, &despeckled, 3, 3, &hybrid);
+    println!("gradient 3x3: {:?}", t.elapsed());
+
+    let dir = std::env::temp_dir();
+    write_pgm(&page, dir.join("doc_input.pgm"))?;
+    write_pgm(&despeckled, dir.join("doc_despeckled.pgm"))?;
+    write_pgm(&lines, dir.join("doc_textlines.pgm"))?;
+    write_pgm(&edges, dir.join("doc_edges.pgm"))?;
+    println!(
+        "wrote doc_{{input,despeckled,textlines,edges}}.pgm to {}",
+        dir.display()
+    );
+
+    // the despeckle must remove isolated impulses: salt noise in the
+    // synthetic page is isolated, so dark-pixel count may only drop
+    // toward the true text mass
+    println!(
+        "dark pixels: input {} -> despeckled {}",
+        count_dark(&page),
+        count_dark(&despeckled)
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Regenerate every table and figure of the paper in one run, as
+//! markdown — the source for EXPERIMENTS.md's measured columns.
+//!
+//! ```bash
+//! cargo run --release --example paper_tables [-- --quick]
+//! ```
+
+use neon_morph::bench_harness::{self, e2e, fig3, fig4, table1};
+use neon_morph::costmodel::CostModel;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let model = CostModel::exynos5422();
+    let windows = if quick {
+        bench_harness::window_sweep_quick()
+    } else {
+        bench_harness::window_sweep()
+    };
+    let iters = if quick { 2 } else { 5 };
+
+    println!("# Paper evaluation artifacts — regenerated\n");
+
+    let rows = table1::run(&model);
+    print!("{}", table1::render(&rows).to_markdown());
+    println!();
+
+    let f3 = fig3::run(&model, &windows, iters);
+    print!(
+        "{}",
+        fig3::render("Figure 3 — horizontal pass (cost model, ns)", &f3, "model").to_markdown()
+    );
+    println!(
+        "\ncrossover w_y0: model={} host={} paper=69\n",
+        f3.crossover_model, f3.crossover_host
+    );
+
+    let f4 = fig4::run(&model, &windows, iters);
+    print!(
+        "{}",
+        fig4::render("Figure 4 — vertical pass (cost model, ns)", &f4, "model").to_markdown()
+    );
+    println!(
+        "\ncrossover w_x0: model={} host={} paper=59\n",
+        f4.crossover_model, f4.crossover_host
+    );
+
+    let e2e_rows = e2e::run(&model, if quick { &[7, 15] } else { &[3, 7, 15, 31, 61] }, iters);
+    print!("{}", e2e::render(&e2e_rows).to_markdown());
+    println!();
+
+    let s = e2e::serve_native(if quick { 32 } else { 128 }, 4, 7)?;
+    println!(
+        "serving (native, 4 workers): {:.1} req/s, p50 {:.2} ms, p99 {:.2} ms, mean batch {:.2}",
+        s.throughput_rps,
+        s.p50_us / 1e3,
+        s.p99_us / 1e3,
+        s.mean_batch
+    );
+    Ok(())
+}

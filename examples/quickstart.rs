@@ -1,0 +1,64 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use neon_morph::coordinator::Coordinator;
+use neon_morph::image::{synth, write_pgm};
+use neon_morph::morphology::{self, MorphConfig};
+use neon_morph::neon::Native;
+
+fn main() -> anyhow::Result<()> {
+    // 1. An image — the paper's 800x600 8-bit gray workload.
+    let img = synth::paper_image(42);
+    println!("image: {}x{} u8, mean {:.1}", img.height(), img.width(), img.mean());
+
+    // 2. One-call morphology (paper §5.3 final hybrid implementation).
+    let t = std::time::Instant::now();
+    let eroded = morphology::erode(&img, 7, 7);
+    println!("erode 7x7     : {:?} (native hybrid)", t.elapsed());
+    let t = std::time::Instant::now();
+    let dilated = morphology::dilate(&img, 7, 7);
+    println!("dilate 7x7    : {:?}", t.elapsed());
+
+    // 3. Derived operations.
+    let cfg = MorphConfig::default();
+    let grad = morphology::gradient(&mut Native, &img, 5, 5, &cfg);
+    println!(
+        "gradient 5x5  : range {:?} (0 on flat regions, bright on edges)",
+        grad.min_max().unwrap()
+    );
+
+    // 4. Sanity: erosion <= original <= dilation, pointwise.
+    let ok = (0..img.height()).all(|y| {
+        (0..img.width()).all(|x| {
+            eroded.get(y, x) <= img.get(y, x) && img.get(y, x) <= dilated.get(y, x)
+        })
+    });
+    println!("erode <= img <= dilate everywhere: {ok}");
+    assert!(ok);
+
+    // 5. The same through the serving layer (router + batcher + workers).
+    let coord = Coordinator::start_native(2)?;
+    let resp = coord.filter("erode", 7, 7, Arc::new(img.clone()))?;
+    let served = resp.result?;
+    println!(
+        "served erode  : backend={} queue={} µs exec={} µs",
+        resp.backend,
+        resp.queue_ns / 1000,
+        resp.exec_ns / 1000
+    );
+    assert!(served.same_pixels(&eroded), "service must equal direct call");
+    coord.shutdown();
+
+    // 6. Write results for eyeballing.
+    let dir = std::env::temp_dir();
+    write_pgm(&img, dir.join("quickstart_input.pgm"))?;
+    write_pgm(&eroded, dir.join("quickstart_eroded.pgm"))?;
+    write_pgm(&grad, dir.join("quickstart_gradient.pgm"))?;
+    println!("wrote quickstart_{{input,eroded,gradient}}.pgm to {}", dir.display());
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! END-TO-END DRIVER: proves all three layers compose on a real
+//! workload.
+//!
+//!   L1 Pallas kernels (python, compile time)
+//!     → L2 JAX separable-morphology graph (python, compile time)
+//!       → HLO-text artifacts (`make artifacts`)
+//!         → L3 rust coordinator: router → dynamic batcher → worker
+//!           pool → PJRT CPU client executing the artifacts,
+//!           cross-checked against the native rust engine.
+//!
+//! Serves a mixed batch of requests against both artifact shapes
+//! (256×256 and the paper's 800×600), reports throughput, latency
+//! percentiles, batching effectiveness and the backend mix, and
+//! verifies every single response against the native implementation.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_pipeline
+//! ```
+
+use std::sync::Arc;
+
+use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use neon_morph::image::synth;
+use neon_morph::runtime::{Engine, NativeEngine};
+
+fn main() -> anyhow::Result<()> {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(96);
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        queue_capacity: requests + 16,
+        max_batch: 16,
+        backend: BackendChoice::Auto,
+        artifact_dir: Some("artifacts".into()),
+        precompile: false, // compile lazily; affinity batching amortizes it
+        ..CoordinatorConfig::default()
+    })?;
+    let manifest = coord
+        .manifest()
+        .ok_or_else(|| anyhow::anyhow!("artifacts missing — run `make artifacts` first"))?;
+
+    // the workload: every morphology artifact over both shapes, round-robin
+    let metas: Vec<_> = manifest
+        .names()
+        .filter_map(|n| manifest.get(n))
+        .filter(|m| m.kind == "morphology")
+        .cloned()
+        .collect();
+    println!("serving {} requests over {} artifact variants", requests, metas.len());
+
+    let img_small = Arc::new(synth::document(256, 256, 7));
+    let img_paper = Arc::new(synth::document(600, 800, 8));
+
+    let t0 = std::time::Instant::now();
+    let submitted: Vec<_> = (0..requests)
+        .map(|i| {
+            let m = &metas[i % metas.len()];
+            let img = if m.height == 256 { &img_small } else { &img_paper };
+            (m.clone(), img.clone(), coord.submit(&m.op, m.w_x, m.w_y, img.clone()))
+        })
+        .collect();
+
+    let mut native = NativeEngine::default();
+    let mut by_backend = std::collections::BTreeMap::<&'static str, usize>::new();
+    let mut verified = 0usize;
+    for (meta, img, ticket) in submitted {
+        let resp = ticket?.wait()?;
+        let out = resp.result?;
+        *by_backend.entry(resp.backend).or_default() += 1;
+        // verify EVERY response against the native engine
+        let want = native.run(&meta, &img)?;
+        anyhow::ensure!(
+            out.same_pixels(&want),
+            "response {} from {} disagrees with native",
+            meta.name,
+            resp.backend
+        );
+        verified += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = coord.metrics();
+
+    println!("\nall {verified} responses verified against the native engine ✓");
+    println!("backend mix: {by_backend:?}");
+    println!(
+        "throughput: {:.1} req/s over {:.2}s ({} workers)",
+        snap.completed as f64 / wall,
+        wall,
+        4
+    );
+    println!("{snap}");
+    anyhow::ensure!(snap.failed == 0, "no request may fail");
+    anyhow::ensure!(
+        by_backend.get("xla-pjrt").copied().unwrap_or(0) == requests,
+        "every request should have hit the XLA backend"
+    );
+    coord.shutdown();
+    println!("serve_pipeline OK");
+    Ok(())
+}

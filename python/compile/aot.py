@@ -1,0 +1,149 @@
+"""AOT compile path: lower every L2 variant to HLO *text* + manifest.
+
+Interchange is HLO text, NOT a serialized ``HloModuleProto``: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Outputs ``<outdir>/<name>.hlo.txt`` per variant plus ``manifest.json``
+describing each artifact (op, window, shape, dtype, input/output layout)
+for the rust runtime (`rust/src/runtime/manifest.rs`).
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DTYPE = "u8"  # the paper's image type: 8-bit unsigned integer
+
+# Variant grid lowered by default.  Shapes: the paper's 800×600 gray image
+# (rows × cols = 600×800) plus a small shape for fast integration tests.
+SHAPES = ((600, 800), (256, 256))
+OPS = ("erode", "dilate", "opening", "closing", "gradient")
+WINDOWS = ((3, 3), (7, 7), (15, 15))
+# Reduced grid for --quick (CI / smoke).
+QUICK_SHAPES = ((256, 256),)
+QUICK_OPS = ("erode", "dilate")
+QUICK_WINDOWS = ((3, 3),)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, height: int, width: int) -> str:
+    spec = jax.ShapeDtypeStruct((height, width), jnp.uint8)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def variant_name(op: str, h: int, w: int, w_x: int, w_y: int) -> str:
+    return f"{op}_{h}x{w}_w{w_x}x{w_y}"
+
+
+def build_variants(shapes, ops, windows, method: str, vertical: str):
+    """Yield (name, fn, metadata) for the full variant grid."""
+    for h, w in shapes:
+        for op in ops:
+            for w_x, w_y in windows:
+                name = variant_name(op, h, w, w_x, w_y)
+                fn = model.build_op(op, w_x, w_y, method=method, vertical=vertical)
+                meta = {
+                    "name": name,
+                    "kind": "morphology",
+                    "op": op,
+                    "height": h,
+                    "width": w,
+                    "w_x": w_x,
+                    "w_y": w_y,
+                    "method": method,
+                    "vertical": vertical,
+                    "dtype": DTYPE,
+                    "input": {"shape": [h, w], "dtype": DTYPE},
+                    "output": {"shape": [h, w], "dtype": DTYPE},
+                }
+                yield name, fn, meta
+        # one standalone transpose artifact per shape
+        name = f"transpose_{h}x{w}"
+        meta = {
+            "name": name,
+            "kind": "transpose",
+            "op": "transpose",
+            "height": h,
+            "width": w,
+            "w_x": 0,
+            "w_y": 0,
+            "method": "tiled",
+            "vertical": "-",
+            "dtype": DTYPE,
+            "input": {"shape": [h, w], "dtype": DTYPE},
+            "output": {"shape": [w, h], "dtype": DTYPE},
+        }
+        yield name, model.build_transpose(), meta
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--quick", action="store_true", help="reduced variant grid")
+    # Default is the optimized log-depth window reduction (L1 perf
+    # deliverable): identical results to "linear"/"hybrid" (pytest-proven)
+    # with ceil(log2 w)+1 combines instead of w-1 — ~2x fewer vector ops
+    # at w=15 (EXPERIMENTS.md §Perf, iteration 4).  Use --method hybrid
+    # for the paper-faithful §5.3 dispatch.
+    ap.add_argument("--method", default="logtree", choices=model.PASS_METHODS)
+    # "direct" avoids lowering two tile-grid transpose pallas_calls per
+    # cols pass; under interpret-mode emulation those dominated serving
+    # latency (exec p50 33.6 ms -> 0.5 ms on 256x256, EXPERIMENTS.md
+    # §Perf iteration 4).
+    ap.add_argument("--vertical", default="direct",
+                    choices=model.VERTICAL_STRATEGIES)
+    args = ap.parse_args(argv)
+
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    shapes = QUICK_SHAPES if args.quick else SHAPES
+    ops = QUICK_OPS if args.quick else OPS
+    windows = QUICK_WINDOWS if args.quick else WINDOWS
+
+    manifest = {"format": 1, "dtype": DTYPE, "artifacts": []}
+    t0 = time.time()
+    for name, fn, meta in build_variants(shapes, ops, windows,
+                                         args.method, args.vertical):
+        t = time.time()
+        text = lower_fn(fn, meta["height"], meta["width"])
+        fname = f"{name}.hlo.txt"
+        (outdir / fname).write_text(text)
+        meta["file"] = fname
+        meta["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        meta["hlo_bytes"] = len(text)
+        manifest["artifacts"].append(meta)
+        print(f"  lowered {name:<28} {len(text):>9} chars  {time.time()-t:5.1f}s",
+              flush=True)
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json "
+          f"to {outdir} in {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,269 @@
+"""L1 Pallas kernels: 1-D running min/max passes for separable morphology.
+
+Three kernel families, mirroring the paper's §5 implementations, adapted
+from ARM NEON to the TPU/Pallas idiom (see DESIGN.md §Hardware-Adaptation):
+
+* ``linear``  — the paper's §5.1.2/§5.2.2 *linear implementation*: an
+  unrolled chain of ``w`` elementwise min/max ops over statically shifted
+  slices of a VMEM block.  On NEON one ``vminq_u8`` combines 16 u8 lanes;
+  here one ``jnp.minimum`` on a ``(rows, lanes)`` VMEM tile is the exact
+  analogue, with the VPU processing whole tile rows per op.
+* ``logtree`` — our optimized variant of ``linear`` (L1 perf deliverable):
+  the same window min computed with ⌈log₂ w⌉ doubling steps plus one
+  final combine, instead of ``w - 1`` sequential combines.
+* ``vhgw``    — van Herk/Gil-Werman: per-segment prefix/suffix scans of
+  segment length ``w`` (``lax.cummin``/``cummax`` in VMEM scratch), then
+  one combine per output element — O(1) combines per pixel, independent
+  of ``w``.  This is the paper's §5.1.1 baseline, vectorized.
+
+Each kernel exists for a window along axis 0 (rows — the paper's
+*horizontal pass*) and along axis 1 (cols — the paper's *vertical pass*,
+direct strategy).  The transpose-based vertical strategy lives in the L2
+model (transpose ∘ rows-pass ∘ transpose).
+
+Blocking strategy: we always tile the NON-window axis, so a block holds
+the full (identity-padded) window extent and no halo exchange between
+grid steps is needed; every input element is read into VMEM exactly once
+per pass.  Kernels run with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); the lowered HLO is what ships to the rust runtime.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile (lane count) for the tiled, non-window axis.  128 matches
+# the TPU VPU lane width; the row-tile for direct col-passes matches the
+# 8-sublane register shape.
+DEFAULT_LANES = 128
+DEFAULT_SUBLANES = 8
+
+METHODS = ("linear", "logtree", "vhgw")
+
+
+def _comb(op: str):
+    if op not in ("min", "max"):
+        raise ValueError(f"op must be 'min' or 'max', got {op!r}")
+    return jnp.minimum if op == "min" else jnp.maximum
+
+
+def _cum(op: str):
+    return lax.cummin if op == "min" else lax.cummax
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _check_window(window: int):
+    if window % 2 != 1 or window < 1:
+        raise ValueError(f"window must be odd and >= 1, got {window}")
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies (window along axis 0; axis 1 obtained by symmetric slicing)
+# ---------------------------------------------------------------------------
+
+
+def _linear_body(x_ref, o_ref, *, window, n_out, axis, op):
+    """Unrolled min/max chain — paper's linear implementation."""
+    comb = _comb(op)
+
+    def shifted(k):
+        return x_ref[k : k + n_out, :] if axis == 0 else x_ref[:, k : k + n_out]
+
+    val = shifted(0)
+    for k in range(1, window):
+        val = comb(val, shifted(k))
+    o_ref[...] = val
+
+
+def _logtree_body(x_ref, o_ref, *, window, n_out, axis, op):
+    """Doubling-tree window min/max: ⌈log₂ w⌉ + 1 combines."""
+    comb = _comb(op)
+    f = x_ref[...]
+    span = 1  # f holds running min over [i, i + span)
+    while 2 * span <= window:
+        if axis == 0:
+            f = comb(f[: f.shape[0] - span, :], f[span:, :])
+        else:
+            f = comb(f[:, : f.shape[1] - span], f[:, span:])
+        span *= 2
+    # min over [i, i+window) = comb(f(i), f(i + window - span))
+    off = window - span
+    if axis == 0:
+        o_ref[...] = comb(f[0:n_out, :], f[off : off + n_out, :])
+    else:
+        o_ref[...] = comb(f[:, 0:n_out], f[:, off : off + n_out])
+
+
+def _vhgw_body(x_ref, o_ref, *, window, n_out, axis, op, nseg):
+    """van Herk/Gil-Werman: segment prefix (R) / suffix (S) scans, then
+    out[i] = comb(S[i], R[i + w - 1])."""
+    comb = _comb(op)
+    cum = _cum(op)
+    x = x_ref[...]
+    if axis == 1:
+        x = x.T  # (padded, tile) view of the scan axis first
+    tile = x.shape[1]
+    segs = x.reshape(nseg, window, tile)
+    r = cum(segs, axis=1)
+    s = cum(segs[:, ::-1, :], axis=1)[:, ::-1, :]
+    r = r.reshape(nseg * window, tile)
+    s = s.reshape(nseg * window, tile)
+    out = comb(s[0:n_out, :], r[window - 1 : window - 1 + n_out, :])
+    o_ref[...] = out if axis == 0 else out.T
+
+
+_BODIES = {"linear": _linear_body, "logtree": _logtree_body, "vhgw": _vhgw_body}
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+
+def _pass_rows(img, window: int, op: str, method: str, lanes: int):
+    """Window along axis 0 (rows); grid tiles axis 1 (cols)."""
+    _check_window(window)
+    if window == 1:
+        return img
+    h, w = img.shape
+    wing = window // 2
+    ident = ref.reduction_identity(op, img.dtype)
+
+    if method == "vhgw":
+        nseg = -(-(h + 2 * wing) // window)
+        padded_h = nseg * window
+    else:
+        nseg = 0
+        padded_h = h + 2 * wing
+
+    wp = _ceil_to(w, lanes)
+    padded = jnp.pad(
+        img,
+        ((wing, padded_h - h - wing), (0, wp - w)),
+        constant_values=ident,
+    )
+
+    kwargs = dict(window=window, n_out=h, axis=0, op=op)
+    if method == "vhgw":
+        kwargs["nseg"] = nseg
+    body = functools.partial(_BODIES[method], **kwargs)
+
+    out = pl.pallas_call(
+        body,
+        grid=(wp // lanes,),
+        in_specs=[pl.BlockSpec((padded_h, lanes), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((h, lanes), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((h, wp), img.dtype),
+        interpret=True,
+    )(padded)
+    return out[:, :w]
+
+
+def _pass_cols(img, window: int, op: str, method: str, sublanes: int):
+    """Window along axis 1 (cols); grid tiles axis 0 (rows) — the paper's
+    direct vertical strategy (unaligned loads on NEON; static offset
+    slices of the VMEM block here)."""
+    _check_window(window)
+    if window == 1:
+        return img
+    h, w = img.shape
+    wing = window // 2
+    ident = ref.reduction_identity(op, img.dtype)
+
+    if method == "vhgw":
+        nseg = -(-(w + 2 * wing) // window)
+        padded_w = nseg * window
+    else:
+        nseg = 0
+        padded_w = w + 2 * wing
+
+    hp = _ceil_to(h, sublanes)
+    padded = jnp.pad(
+        img,
+        ((0, hp - h), (wing, padded_w - w - wing)),
+        constant_values=ident,
+    )
+
+    kwargs = dict(window=window, n_out=w, axis=1, op=op)
+    if method == "vhgw":
+        kwargs["nseg"] = nseg
+    body = functools.partial(_BODIES[method], **kwargs)
+
+    out = pl.pallas_call(
+        body,
+        grid=(hp // sublanes,),
+        in_specs=[pl.BlockSpec((sublanes, padded_w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((sublanes, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hp, w), img.dtype),
+        interpret=True,
+    )(padded)
+    return out[:h, :]
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def filter_rows(img, window: int, op: str, method: str = "logtree",
+                lanes: int = DEFAULT_LANES):
+    """Running ``op`` over a ``window`` of ROWS (paper's horizontal pass).
+
+    ``method`` ∈ {"linear", "logtree", "vhgw"}.
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}, want one of {METHODS}")
+    return _pass_rows(img, window, op, method, lanes)
+
+
+def filter_cols(img, window: int, op: str, method: str = "logtree",
+                sublanes: int = DEFAULT_SUBLANES):
+    """Running ``op`` over a ``window`` of COLUMNS (paper's vertical pass,
+    direct strategy)."""
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}, want one of {METHODS}")
+    return _pass_cols(img, window, op, method, sublanes)
+
+
+def min_filter_rows(img, w_y, method="logtree"):
+    return filter_rows(img, w_y, "min", method)
+
+
+def max_filter_rows(img, w_y, method="logtree"):
+    return filter_rows(img, w_y, "max", method)
+
+
+def min_filter_cols(img, w_x, method="logtree"):
+    return filter_cols(img, w_x, "min", method)
+
+
+def max_filter_cols(img, w_x, method="logtree"):
+    return filter_cols(img, w_x, "max", method)
+
+
+def combine_count(window: int, method: str) -> int:
+    """Number of elementwise combine ops per block the method performs —
+    the cost-model input used in DESIGN.md §Perf (analogue of the paper's
+    instruction counts)."""
+    _check_window(window)
+    if window == 1:
+        return 0
+    if method == "linear":
+        return window - 1
+    if method == "logtree":
+        return math.floor(math.log2(window)) + 1
+    if method == "vhgw":
+        # two scans of length w per segment + one final combine, amortized
+        # per output element: 2 scan-steps + 1 (the classic "3 comparisons
+        # per point" of vHGW).
+        return 3
+    raise ValueError(f"unknown method {method!r}")

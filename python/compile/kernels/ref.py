@@ -1,0 +1,189 @@
+"""Pure-jnp reference oracles for the morphology + transpose kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+is checked against these functions by pytest (allclose / exact-equal for
+integer dtypes).
+
+Conventions (shared by the whole stack — python, HLO artifacts and the
+rust native implementations):
+
+* Images are 2-D arrays indexed ``[row, col]`` (= ``[y, x]``).
+* A rectangular structuring element of size ``w_x × w_y`` spans ``w_x``
+  columns and ``w_y`` rows, anchored at its center; windows are odd
+  (``w = 2*wing + 1``).
+* Border policy is **identity padding**: out-of-image samples contribute
+  the identity of the reduction (``255``/dtype-max for erosion=min,
+  ``0``/dtype-min for dilation=max), i.e. the reduction effectively runs
+  over the intersection of the window with the image.  Output has the
+  same shape as the input.  (The paper "processes edges separately";
+  identity padding is the standard way to make that well defined.)
+
+Paper terminology mapping (the paper names passes by their SIMD
+iteration direction, which is the *opposite* of the window direction):
+
+* paper "horizontal pass", SE ``1 × w_y``  →  ``min_filter_rows``
+  (window spans ``w_y`` ROWS, SIMD runs along contiguous columns).
+* paper "vertical pass", SE ``w_x × 1``    →  ``min_filter_cols``
+  (window spans ``w_x`` COLUMNS within each row).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def reduction_identity(op: str, dtype) -> int:
+    """Identity element for ``op`` (``"min"`` or ``"max"``) at ``dtype``."""
+    if op not in ("min", "max"):
+        raise ValueError(f"op must be 'min' or 'max', got {op!r}")
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        info = jnp.iinfo(dtype)
+        return info.max if op == "min" else info.min
+    return jnp.inf if op == "min" else -jnp.inf
+
+
+def _combine(op: str):
+    return jnp.minimum if op == "min" else jnp.maximum
+
+
+def pad_axis(img, wing: int, axis: int, op: str):
+    """Pad ``img`` by ``wing`` identity elements on both sides of ``axis``."""
+    if wing == 0:
+        return img
+    pad = [(0, 0)] * img.ndim
+    pad[axis] = (wing, wing)
+    return jnp.pad(img, pad, constant_values=reduction_identity(op, img.dtype))
+
+
+def filter_1d(img, window: int, axis: int, op: str):
+    """Running min/max of odd ``window`` along ``axis`` (identity borders).
+
+    Direct (O(w)-slices) formulation — the oracle everything else is
+    measured against.
+    """
+    if window % 2 != 1 or window < 1:
+        raise ValueError(f"window must be odd and >= 1, got {window}")
+    wing = window // 2
+    padded = pad_axis(img, wing, axis, op)
+    comb = _combine(op)
+    n = img.shape[axis]
+    out = jnp.take(padded, jnp.arange(0, n), axis=axis)
+    for k in range(1, window):
+        out = comb(out, jnp.take(padded, jnp.arange(k, k + n), axis=axis))
+    return out
+
+
+def min_filter_rows(img, w_y: int):
+    """Paper's *horizontal pass* of erosion: window of ``w_y`` rows."""
+    return filter_1d(img, w_y, axis=0, op="min")
+
+
+def max_filter_rows(img, w_y: int):
+    return filter_1d(img, w_y, axis=0, op="max")
+
+
+def min_filter_cols(img, w_x: int):
+    """Paper's *vertical pass* of erosion: window of ``w_x`` columns."""
+    return filter_1d(img, w_x, axis=1, op="min")
+
+
+def max_filter_cols(img, w_x: int):
+    return filter_1d(img, w_x, axis=1, op="max")
+
+
+def erode(img, w_x: int, w_y: int):
+    """2-D erosion with a rectangular ``w_x × w_y`` SE (separable form)."""
+    return min_filter_cols(min_filter_rows(img, w_y), w_x)
+
+
+def dilate(img, w_x: int, w_y: int):
+    return max_filter_cols(max_filter_rows(img, w_y), w_x)
+
+
+def erode_nonseparable(img, w_x: int, w_y: int):
+    """Direct 2-D sliding-window erosion — used to *prove* separability."""
+    wing_x, wing_y = w_x // 2, w_y // 2
+    p = pad_axis(pad_axis(img, wing_y, 0, "min"), wing_x, 1, "min")
+    h, w = img.shape
+    out = None
+    for dy in range(w_y):
+        for dx in range(w_x):
+            tile = p[dy : dy + h, dx : dx + w]
+            out = tile if out is None else jnp.minimum(out, tile)
+    return out
+
+
+def dilate_nonseparable(img, w_x: int, w_y: int):
+    wing_x, wing_y = w_x // 2, w_y // 2
+    p = pad_axis(pad_axis(img, wing_y, 0, "max"), wing_x, 1, "max")
+    h, w = img.shape
+    out = None
+    for dy in range(w_y):
+        for dx in range(w_x):
+            tile = p[dy : dy + h, dx : dx + w]
+            out = tile if out is None else jnp.maximum(out, tile)
+    return out
+
+
+def opening(img, w_x: int, w_y: int):
+    return dilate(erode(img, w_x, w_y), w_x, w_y)
+
+
+def closing(img, w_x: int, w_y: int):
+    return erode(dilate(img, w_x, w_y), w_x, w_y)
+
+
+def gradient(img, w_x: int, w_y: int):
+    """Morphological gradient = dilation - erosion (non-negative by
+    construction since dilation >= erosion pointwise)."""
+    return dilate(img, w_x, w_y) - erode(img, w_x, w_y)
+
+
+def tophat(img, w_x: int, w_y: int):
+    """White top-hat = src - opening (saturating for unsigned dtypes)."""
+    o = opening(img, w_x, w_y)
+    return jnp.where(img > o, img - o, jnp.zeros_like(img))
+
+
+def blackhat(img, w_x: int, w_y: int):
+    """Black top-hat = closing - src (saturating for unsigned dtypes)."""
+    c = closing(img, w_x, w_y)
+    return jnp.where(c > img, c - img, jnp.zeros_like(img))
+
+
+def transpose(img):
+    """Matrix/image transpose oracle."""
+    return jnp.transpose(img)
+
+
+def vhgw_1d(img, window: int, axis: int, op: str):
+    """van Herk/Gil-Werman running min/max — numpy reference of the
+    *algorithm* (not just the result), used to cross-check the Pallas vHGW
+    kernel's segment decomposition and the rust implementation's logic.
+
+    out[i] = comb(S[i], R[i + w - 1]) over the identity-padded array,
+    where R is the per-segment prefix scan and S the per-segment suffix
+    scan with segment length ``w``.
+    """
+    if window % 2 != 1 or window < 1:
+        raise ValueError(f"window must be odd and >= 1, got {window}")
+    if window == 1:
+        return jnp.asarray(img)
+    wing = window // 2
+    arr = np.asarray(img)
+    arr = np.moveaxis(arr, axis, -1)
+    n = arr.shape[-1]
+    ident = reduction_identity(op, arr.dtype)
+    # pad left wing, right wing, then up to a segment multiple
+    nseg = -(-(n + 2 * wing) // window)
+    total = nseg * window
+    padded = np.full(arr.shape[:-1] + (total,), ident, dtype=arr.dtype)
+    padded[..., wing : wing + n] = arr
+    segs = padded.reshape(arr.shape[:-1] + (nseg, window))
+    fn = np.minimum if op == "min" else np.maximum
+    r = fn.accumulate(segs, axis=-1)
+    s = fn.accumulate(segs[..., ::-1], axis=-1)[..., ::-1]
+    r = r.reshape(arr.shape[:-1] + (total,))
+    s = s.reshape(arr.shape[:-1] + (total,))
+    idx = np.arange(n)
+    out = fn(s[..., idx], r[..., idx + window - 1])
+    return jnp.asarray(np.moveaxis(out, -1, axis))

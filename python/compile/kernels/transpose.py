@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: tiled matrix/image transpose.
+
+TPU adaptation of the paper's §4 NEON vtrn transpose networks.  On NEON
+an 8×8.16 transpose is a fixed network of 32 ``vtrn``/permute
+instructions between sixteen 128-bit loads/stores; on TPU the analogous
+structure is a *tiled* transpose: the BlockSpec index maps move tile
+(i, j) of the input to tile (j, i) of the output (the HBM↔VMEM schedule,
+playing the role of the load/store addressing), and the in-VMEM ``.T``
+per tile lowers to the Mosaic sublane/lane shuffle network (playing the
+role of the vtrn network).
+
+``transpose8x8_u16`` / ``transpose16x16_u8`` are the paper's Table 1
+single-tile cases; ``transpose_tiled`` is the whole-image version used by
+the L2 vertical pass.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+def transpose_tiled(img, tile: int = 8):
+    """Transpose a 2-D array via ``tile × tile`` VMEM blocks.
+
+    Dimensions need not be tile multiples; the input is zero-padded to the
+    tile grid and the output cropped (pad values never reach live output
+    cells).
+    """
+    if img.ndim != 2:
+        raise ValueError(f"expected a 2-D array, got shape {img.shape}")
+    if tile < 1:
+        raise ValueError(f"tile must be >= 1, got {tile}")
+    h, w = img.shape
+    hp, wp = _ceil_to(h, tile), _ceil_to(w, tile)
+    padded = jnp.pad(img, ((0, hp - h), (0, wp - w)))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(hp // tile, wp // tile),
+        in_specs=[pl.BlockSpec((tile, tile), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((wp, hp), img.dtype),
+        interpret=True,
+    )(padded)
+    return out[:w, :h]
+
+
+def transpose8x8_u16(m):
+    """Paper Table 1, row 1: 8×8 matrix of 16-bit unsigned ints."""
+    if m.shape != (8, 8) or m.dtype != jnp.uint16:
+        raise ValueError(f"expected u16[8,8], got {m.dtype}[{m.shape}]")
+    return transpose_tiled(m, tile=8)
+
+
+def transpose16x16_u8(m):
+    """Paper Table 1, row 2: 16×16 matrix of 8-bit unsigned ints."""
+    if m.shape != (16, 16) or m.dtype != jnp.uint8:
+        raise ValueError(f"expected u8[16,16], got {m.dtype}[{m.shape}]")
+    return transpose_tiled(m, tile=16)

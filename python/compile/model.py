@@ -1,0 +1,160 @@
+"""L2: the separable-morphology compute graph (build-time JAX).
+
+Composes the L1 Pallas kernels (``kernels.morph1d``, ``kernels.transpose``)
+into the paper's full operations:
+
+* a 2-D erosion/dilation with a rectangular ``w_x × w_y`` SE is a
+  rows-window pass (paper's *horizontal* pass, ``1 × w_y``) followed by a
+  cols-window pass (paper's *vertical* pass, ``w_x × 1``);
+* the vertical pass has two strategies, exactly as in §5.2 —
+  ``"transpose"`` (baseline: transpose ∘ rows-pass ∘ transpose, using the
+  tiled transpose kernel) and ``"direct"`` (the linear §5.2.2 form);
+* per-pass algorithm choice is ``"linear"``, ``"logtree"``, ``"vhgw"`` or
+  ``"hybrid"`` — hybrid applies the paper's §5.3 policy: linear for
+  windows up to the crossover (w_y⁰ = 69 / w_x⁰ = 59), vHGW above;
+* derived ops (opening, closing, gradient, top-hat, black-hat) are the
+  standard compositions over erode/dilate.
+
+Everything here is traced once by ``aot.py`` and shipped to rust as HLO
+text; python never runs at serving time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import morph1d
+from .kernels import transpose as tk
+
+# Paper §5.3 crossover thresholds (Exynos 5422 measurements).
+W_Y0 = 69  # horizontal pass: linear wins for w_y <= 69
+W_X0 = 59  # vertical pass:   linear wins for w_x <= 59
+
+PASS_METHODS = ("linear", "logtree", "vhgw", "hybrid")
+VERTICAL_STRATEGIES = ("transpose", "direct")
+OPS = ("erode", "dilate", "opening", "closing", "gradient", "tophat", "blackhat")
+
+
+def resolve_method(method: str, window: int, threshold: int) -> str:
+    """Resolve ``"hybrid"`` to a concrete kernel for this window size."""
+    if method not in PASS_METHODS:
+        raise ValueError(f"unknown method {method!r}, want one of {PASS_METHODS}")
+    if method != "hybrid":
+        return method
+    return "linear" if window <= threshold else "vhgw"
+
+
+def pass_rows(img, w_y: int, op: str, method: str = "hybrid"):
+    """Paper's horizontal pass: running ``op`` over ``w_y`` rows."""
+    m = resolve_method(method, w_y, W_Y0)
+    return morph1d.filter_rows(img, w_y, op, m)
+
+
+def pass_cols(img, w_x: int, op: str, method: str = "hybrid",
+              vertical: str = "transpose"):
+    """Paper's vertical pass: running ``op`` over ``w_x`` columns.
+
+    ``vertical="transpose"`` reproduces §5.2.1 (transpose, fast
+    rows-pass, transpose back); ``"direct"`` reproduces §5.2.2.
+    """
+    if vertical not in VERTICAL_STRATEGIES:
+        raise ValueError(
+            f"unknown vertical strategy {vertical!r}, want one of {VERTICAL_STRATEGIES}"
+        )
+    m = resolve_method(method, w_x, W_X0)
+    if w_x == 1:
+        return img
+    if vertical == "direct":
+        return morph1d.filter_cols(img, w_x, op, m)
+    t = tk.transpose_tiled(img)
+    t = morph1d.filter_rows(t, w_x, op, m)
+    return tk.transpose_tiled(t)
+
+
+def _morph(img, w_x: int, w_y: int, op: str, method: str, vertical: str):
+    out = pass_rows(img, w_y, op, method) if w_y > 1 else img
+    return pass_cols(out, w_x, op, method, vertical)
+
+
+def erode(img, w_x: int, w_y: int, method: str = "hybrid",
+          vertical: str = "transpose"):
+    """2-D erosion with a ``w_x × w_y`` rectangular SE."""
+    return _morph(img, w_x, w_y, "min", method, vertical)
+
+
+def dilate(img, w_x: int, w_y: int, method: str = "hybrid",
+           vertical: str = "transpose"):
+    """2-D dilation with a ``w_x × w_y`` rectangular SE."""
+    return _morph(img, w_x, w_y, "max", method, vertical)
+
+
+def opening(img, w_x: int, w_y: int, method: str = "hybrid",
+            vertical: str = "transpose"):
+    return dilate(erode(img, w_x, w_y, method, vertical), w_x, w_y, method, vertical)
+
+
+def closing(img, w_x: int, w_y: int, method: str = "hybrid",
+            vertical: str = "transpose"):
+    return erode(dilate(img, w_x, w_y, method, vertical), w_x, w_y, method, vertical)
+
+
+def gradient(img, w_x: int, w_y: int, method: str = "hybrid",
+             vertical: str = "transpose"):
+    """Morphological gradient: dilation − erosion (≥ 0 pointwise)."""
+    return dilate(img, w_x, w_y, method, vertical) - erode(
+        img, w_x, w_y, method, vertical
+    )
+
+
+def tophat(img, w_x: int, w_y: int, method: str = "hybrid",
+           vertical: str = "transpose"):
+    """White top-hat: src − opening, saturating for unsigned dtypes."""
+    o = opening(img, w_x, w_y, method, vertical)
+    return jnp.where(img > o, img - o, jnp.zeros_like(img))
+
+
+def blackhat(img, w_x: int, w_y: int, method: str = "hybrid",
+             vertical: str = "transpose"):
+    """Black top-hat: closing − src, saturating for unsigned dtypes."""
+    c = closing(img, w_x, w_y, method, vertical)
+    return jnp.where(c > img, c - img, jnp.zeros_like(img))
+
+
+_OP_FNS = {
+    "erode": erode,
+    "dilate": dilate,
+    "opening": opening,
+    "closing": closing,
+    "gradient": gradient,
+    "tophat": tophat,
+    "blackhat": blackhat,
+}
+
+
+def op_fn(op: str):
+    """Look up the callable for a named op."""
+    if op not in _OP_FNS:
+        raise ValueError(f"unknown op {op!r}, want one of {sorted(_OP_FNS)}")
+    return _OP_FNS[op]
+
+
+def build_op(op: str, w_x: int, w_y: int, method: str = "hybrid",
+             vertical: str = "transpose"):
+    """Return ``img -> (result,)`` for a named op with baked-in parameters
+    — the unit ``aot.py`` lowers to one HLO artifact (1-tuple output to
+    match the rust loader's ``to_tuple1`` convention)."""
+    f = op_fn(op)
+
+    def fn(img):
+        return (f(img, w_x, w_y, method=method, vertical=vertical),)
+
+    fn.__name__ = f"{op}_w{w_x}x{w_y}"
+    return fn
+
+
+def build_transpose():
+    """Return ``img -> (img.T,)`` as a standalone artifact."""
+
+    def fn(img):
+        return (tk.transpose_tiled(img),)
+
+    fn.__name__ = "transpose"
+    return fn

@@ -1,0 +1,174 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal of the compile path — every kernel
+method (linear / logtree / vhgw), both window axes, both reductions,
+exact equality on integer dtypes.  Hypothesis sweeps shapes, windows and
+dtypes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import morph1d, ref
+from compile.kernels import transpose as tk
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def rand_img(h, w, dtype=np.uint8):
+    info = np.iinfo(dtype)
+    return jnp.asarray(
+        RNG.integers(info.min, int(info.max) + 1, size=(h, w), dtype=dtype)
+    )
+
+
+odd_windows = st.integers(0, 7).map(lambda k: 2 * k + 1)
+small_dims = st.tuples(st.integers(1, 40), st.integers(1, 40))
+
+
+# ---------------------------------------------------------------------------
+# fixed-case grid (fast, exhaustive over methods)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", morph1d.METHODS)
+@pytest.mark.parametrize("op", ["min", "max"])
+@pytest.mark.parametrize("window", [1, 3, 5, 9, 15, 31])
+def test_rows_pass_matches_ref(method, op, window):
+    img = rand_img(37, 53)
+    want = ref.filter_1d(img, window, axis=0, op=op)
+    got = morph1d.filter_rows(img, window, op, method)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("method", morph1d.METHODS)
+@pytest.mark.parametrize("op", ["min", "max"])
+@pytest.mark.parametrize("window", [1, 3, 5, 9, 15, 31])
+def test_cols_pass_matches_ref(method, op, window):
+    img = rand_img(29, 61)
+    want = ref.filter_1d(img, window, axis=1, op=op)
+    got = morph1d.filter_cols(img, window, op, method)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("window", [3, 7, 15])
+def test_window_larger_than_axis(window):
+    img = rand_img(4, 5)
+    for axis, fn in [(0, morph1d.filter_rows), (1, morph1d.filter_cols)]:
+        want = ref.filter_1d(img, window * 3 + (window % 2 == 0), axis, "min")
+        got = fn(img, window * 3 + (window % 2 == 0), "min", "vhgw")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_even_window_rejected():
+    img = rand_img(8, 8)
+    with pytest.raises(ValueError):
+        morph1d.filter_rows(img, 4, "min")
+    with pytest.raises(ValueError):
+        morph1d.filter_cols(img, 2, "max")
+    with pytest.raises(ValueError):
+        morph1d.filter_rows(img, 3, "median")  # bad op
+    with pytest.raises(ValueError):
+        morph1d.filter_rows(img, 3, "min", method="quantum")
+
+
+def test_vhgw_oracle_matches_direct_oracle():
+    img = rand_img(33, 47)
+    for axis in (0, 1):
+        for op in ("min", "max"):
+            a = ref.filter_1d(img, 9, axis, op)
+            b = ref.vhgw_1d(img, 9, axis, op)
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=small_dims, window=odd_windows, op=st.sampled_from(["min", "max"]),
+       method=st.sampled_from(morph1d.METHODS), seed=st.integers(0, 2**31))
+def test_rows_pass_hypothesis(dims, window, op, method, seed):
+    h, w = dims
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.integers(0, 256, size=(h, w), dtype=np.uint8))
+    want = ref.filter_1d(img, window, axis=0, op=op)
+    got = morph1d.filter_rows(img, window, op, method)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=small_dims, window=odd_windows, op=st.sampled_from(["min", "max"]),
+       method=st.sampled_from(morph1d.METHODS), seed=st.integers(0, 2**31))
+def test_cols_pass_hypothesis(dims, window, op, method, seed):
+    h, w = dims
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.integers(0, 256, size=(h, w), dtype=np.uint8))
+    want = ref.filter_1d(img, window, axis=1, op=op)
+    got = morph1d.filter_cols(img, window, op, method)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims=small_dims, seed=st.integers(0, 2**31),
+       dtype=st.sampled_from([np.uint8, np.uint16, np.int32]),
+       tile=st.sampled_from([4, 8, 16]))
+def test_transpose_tiled_hypothesis(dims, seed, dtype, tile):
+    h, w = dims
+    rng = np.random.default_rng(seed)
+    info = np.iinfo(dtype)
+    img = jnp.asarray(rng.integers(info.min, int(info.max) + 1, size=(h, w), dtype=dtype))
+    got = tk.transpose_tiled(img, tile=tile)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(img).T)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims=st.tuples(st.integers(1, 24), st.integers(1, 24)),
+       window=st.integers(0, 5).map(lambda k: 2 * k + 1),
+       seed=st.integers(0, 2**31))
+def test_u16_images_also_supported(dims, window, seed):
+    h, w = dims
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.integers(0, 65536, size=(h, w), dtype=np.uint16))
+    want = ref.filter_1d(img, window, axis=0, op="min")
+    got = morph1d.filter_rows(img, window, "min", "logtree")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Table-1 transpose kernels
+# ---------------------------------------------------------------------------
+
+
+def test_transpose8x8_u16():
+    m = jnp.asarray(RNG.integers(0, 65536, size=(8, 8), dtype=np.uint16))
+    np.testing.assert_array_equal(np.asarray(tk.transpose8x8_u16(m)), np.asarray(m).T)
+
+
+def test_transpose16x16_u8():
+    m = jnp.asarray(RNG.integers(0, 256, size=(16, 16), dtype=np.uint8))
+    np.testing.assert_array_equal(np.asarray(tk.transpose16x16_u8(m)), np.asarray(m).T)
+
+
+def test_transpose_specializations_validate_input():
+    bad = jnp.zeros((8, 8), jnp.uint8)
+    with pytest.raises(ValueError):
+        tk.transpose8x8_u16(bad)
+    with pytest.raises(ValueError):
+        tk.transpose16x16_u8(jnp.zeros((16, 16), jnp.uint16))
+    with pytest.raises(ValueError):
+        tk.transpose_tiled(jnp.zeros((4, 4, 4), jnp.uint8))
+
+
+def test_combine_count_census():
+    # linear: w-1 combines; logtree: floor(log2 w)+1; vhgw: 3 flat
+    assert morph1d.combine_count(31, "linear") == 30
+    assert morph1d.combine_count(31, "logtree") == 5
+    assert morph1d.combine_count(31, "vhgw") == 3
+    assert morph1d.combine_count(1, "linear") == 0
+    # the optimized tree must never exceed the paper's chain
+    for w in range(3, 123, 2):
+        assert morph1d.combine_count(w, "logtree") <= morph1d.combine_count(w, "linear")

@@ -1,0 +1,133 @@
+"""L2 correctness: the separable-morphology graph vs the oracle —
+separability, derived ops, method/strategy equivalence, hybrid routing.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xBEEF)
+
+
+def rand_img(h, w):
+    return jnp.asarray(RNG.integers(0, 256, size=(h, w), dtype=np.uint8))
+
+
+@pytest.mark.parametrize("method", model.PASS_METHODS)
+@pytest.mark.parametrize("vertical", model.VERTICAL_STRATEGIES)
+@pytest.mark.parametrize("se", [(3, 3), (5, 9), (9, 5), (1, 7), (7, 1)])
+def test_erode_dilate_match_oracle(method, vertical, se):
+    w_x, w_y = se
+    img = rand_img(33, 45)
+    np.testing.assert_array_equal(
+        np.asarray(model.erode(img, w_x, w_y, method, vertical)),
+        np.asarray(ref.erode(img, w_x, w_y)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(model.dilate(img, w_x, w_y, method, vertical)),
+        np.asarray(ref.dilate(img, w_x, w_y)),
+    )
+
+
+def test_separability_against_nonseparable_oracle():
+    img = rand_img(24, 28)
+    for (w_x, w_y) in [(3, 5), (7, 3)]:
+        np.testing.assert_array_equal(
+            np.asarray(model.erode(img, w_x, w_y)),
+            np.asarray(ref.erode_nonseparable(img, w_x, w_y)),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(model.dilate(img, w_x, w_y)),
+            np.asarray(ref.dilate_nonseparable(img, w_x, w_y)),
+        )
+
+
+@pytest.mark.parametrize("op", model.OPS)
+def test_all_ops_match_ref(op):
+    img = rand_img(30, 34)
+    got = model.op_fn(op)(img, 5, 3)
+    want = getattr(ref, op if op != "erode" and op != "dilate" else op)(img, 5, 3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_build_op_returns_one_tuple():
+    img = rand_img(16, 16)
+    fn = model.build_op("erode", 3, 3)
+    out = fn(img)
+    assert isinstance(out, tuple) and len(out) == 1
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(ref.erode(img, 3, 3)))
+
+
+def test_build_transpose():
+    img = rand_img(20, 12)
+    (out,) = model.build_transpose()(img)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(img).T)
+
+
+def test_hybrid_resolution_uses_paper_thresholds():
+    assert model.resolve_method("hybrid", 69, model.W_Y0) == "linear"
+    assert model.resolve_method("hybrid", 71, model.W_Y0) == "vhgw"
+    assert model.resolve_method("hybrid", 59, model.W_X0) == "linear"
+    assert model.resolve_method("hybrid", 61, model.W_X0) == "vhgw"
+    assert model.resolve_method("vhgw", 3, model.W_Y0) == "vhgw"
+    with pytest.raises(ValueError):
+        model.resolve_method("banana", 3, 69)
+
+
+def test_unknown_op_rejected():
+    with pytest.raises(ValueError):
+        model.build_op("sharpen", 3, 3)
+    img = rand_img(8, 8)
+    with pytest.raises(ValueError):
+        model.pass_cols(img, 3, "min", vertical="diagonal")
+
+
+def test_opening_antiextensive_closing_extensive():
+    img = rand_img(26, 26)
+    o = np.asarray(model.opening(img, 5, 5))
+    c = np.asarray(model.closing(img, 5, 5))
+    a = np.asarray(img)
+    assert (o <= a).all()
+    assert (c >= a).all()
+
+
+def test_gradient_tophat_blackhat_nonnegative():
+    img = rand_img(22, 22)
+    for op in ("gradient", "tophat", "blackhat"):
+        out = np.asarray(model.op_fn(op)(img, 5, 5))
+        assert out.dtype == np.uint8
+        assert (out <= 255).all()  # no wraparound artifacts
+        # value at a flat region must be 0: make a flat image and check
+    flat = jnp.full((12, 12), 77, jnp.uint8)
+    for op in ("gradient", "tophat", "blackhat"):
+        out = np.asarray(model.op_fn(op)(flat, 3, 3))
+        assert (out == 0).all(), op
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    dims=st.tuples(st.integers(2, 32), st.integers(2, 32)),
+    wx=st.integers(0, 4).map(lambda k: 2 * k + 1),
+    wy=st.integers(0, 4).map(lambda k: 2 * k + 1),
+    method=st.sampled_from(model.PASS_METHODS),
+    seed=st.integers(0, 2**31),
+)
+def test_erode_hypothesis(dims, wx, wy, method, seed):
+    h, w = dims
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.integers(0, 256, size=(h, w), dtype=np.uint8))
+    got = model.erode(img, wx, wy, method)
+    want = ref.erode(img, wx, wy)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_duality_model_level():
+    img = rand_img(20, 24)
+    inv = 255 - img
+    e = np.asarray(model.erode(img, 5, 7))
+    d = np.asarray(model.dilate(inv, 5, 7))
+    np.testing.assert_array_equal(e, 255 - d)

@@ -1,0 +1,104 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A. the §5.1.2 *two-row trick* (shared window reduction) vs a naive
+//!     one-row-at-a-time linear pass;
+//!  B. the vertical strategy: §5.2.2 direct (unaligned loads) vs
+//!     §5.2.1 transpose sandwich, for the linear method across windows;
+//!  C. batching/affinity in the coordinator: max_batch 1 vs 16 on a
+//!     mixed artifact workload (XLA backend when artifacts exist).
+//!
+//! Run: `cargo bench --bench ablations`
+
+use std::sync::Arc;
+
+use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use neon_morph::costmodel::CostModel;
+use neon_morph::image::synth;
+use neon_morph::morphology::{linear, MorphOp};
+use neon_morph::neon::{Counting, Native};
+use neon_morph::runtime::Manifest;
+use neon_morph::util::timing;
+
+fn main() {
+    let model = CostModel::exynos5422();
+    let img = synth::paper_image(0xAB1);
+
+    println!("## A. two-row trick (rows linear pass, 800x600)\n");
+    println!("| w | paired model ns | single model ns | paired host ns | single host ns | model gain |");
+    println!("|---|----------------|-----------------|----------------|----------------|-----------|");
+    for w in [3usize, 7, 15, 31, 61] {
+        let mut c = Counting::new();
+        let _ = linear::rows_simd_linear(&mut c, &img, w, MorphOp::Erode);
+        let paired = model.price_ns(&c.mix);
+        let mut c = Counting::new();
+        let _ = linear::rows_simd_linear_single(&mut c, &img, w, MorphOp::Erode);
+        let single = model.price_ns(&c.mix);
+        let hp = timing::bench(1, 5, || linear::rows_simd_linear(&mut Native, &img, w, MorphOp::Erode)).min_ns;
+        let hs = timing::bench(1, 5, || {
+            linear::rows_simd_linear_single(&mut Native, &img, w, MorphOp::Erode)
+        })
+        .min_ns;
+        println!(
+            "| {w} | {paired:.0} | {single:.0} | {hp:.0} | {hs:.0} | {:.2}x |",
+            single / paired
+        );
+    }
+
+    println!("\n## B. vertical strategy: direct vs transpose sandwich (linear, 800x600)\n");
+    println!("| w | direct model ns | sandwich model ns | direct host ns | sandwich host ns |");
+    println!("|---|-----------------|-------------------|----------------|------------------|");
+    for w in [3usize, 7, 15, 31, 61] {
+        let mut c = Counting::new();
+        let _ = linear::cols_simd_linear(&mut c, &img, w, MorphOp::Erode);
+        let direct = model.price_ns(&c.mix);
+        let mut c = Counting::new();
+        let t = neon_morph::transpose::transpose_image(&mut c, &img);
+        let f = linear::rows_simd_linear(&mut c, &t, w, MorphOp::Erode);
+        let _ = neon_morph::transpose::transpose_image(&mut c, &f);
+        let sandwich = model.price_ns(&c.mix);
+        let hd = timing::bench(1, 5, || linear::cols_simd_linear(&mut Native, &img, w, MorphOp::Erode)).min_ns;
+        let hs = timing::bench(1, 5, || {
+            let t = neon_morph::transpose::transpose_image(&mut Native, &img);
+            let f = linear::rows_simd_linear(&mut Native, &t, w, MorphOp::Erode);
+            neon_morph::transpose::transpose_image(&mut Native, &f)
+        })
+        .min_ns;
+        println!("| {w} | {direct:.0} | {sandwich:.0} | {hd:.0} | {hs:.0} |");
+    }
+
+    println!("\n## C. coordinator batching: max_batch 1 vs 16 (xla backend)\n");
+    if Manifest::load("artifacts").is_err() {
+        println!("(skipped: artifacts not built)");
+        return;
+    }
+    for max_batch in [1usize, 16] {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            queue_capacity: 512,
+            max_batch,
+            backend: BackendChoice::Auto,
+            artifact_dir: Some("artifacts".into()),
+            precompile: false,
+            ..CoordinatorConfig::default()
+        })
+        .expect("coordinator");
+        let img = Arc::new(synth::noise(256, 256, 3));
+        let ops = ["erode", "dilate", "gradient"];
+        let t0 = std::time::Instant::now();
+        let tickets: Vec<_> = (0..48)
+            .map(|i| coord.submit(ops[i % 3], 3, 3, img.clone()).unwrap())
+            .collect();
+        for t in tickets {
+            t.wait().unwrap().result.unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = coord.metrics();
+        println!(
+            "max_batch={max_batch:>2}: {:.1} req/s, mean batch {:.2}, exec p50 {:.1} ms",
+            48.0 / wall,
+            snap.mean_batch_size(),
+            snap.exec_p50_us / 1e3
+        );
+        coord.shutdown();
+    }
+}

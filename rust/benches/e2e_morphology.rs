@@ -1,0 +1,27 @@
+//! Bench: the conclusion's headline claim — final hybrid erosion vs the
+//! vHGW-without-SIMD baseline, end to end (2-D, 800×600), plus the
+//! coordinator serving benchmark (throughput/latency through L3).
+//!
+//! Run: `cargo bench --bench e2e_morphology`
+//! Env: `NEON_MORPH_QUICK=1` for a reduced run.
+
+use neon_morph::bench_harness::e2e;
+use neon_morph::costmodel::CostModel;
+
+fn main() {
+    let quick = std::env::var("NEON_MORPH_QUICK").is_ok();
+    let model = CostModel::exynos5422();
+    let windows = if quick { vec![7, 15] } else { vec![3, 7, 15, 31, 61, 91] };
+    let results = e2e::run(&model, &windows, if quick { 2 } else { 5 });
+    print!("{}", e2e::render(&results).to_markdown());
+    println!();
+
+    for &workers in if quick { &[2usize][..] } else { &[1usize, 2, 4, 8][..] } {
+        let s = e2e::serve_native(if quick { 32 } else { 192 }, workers, 7)
+            .expect("serving bench");
+        println!(
+            "serve: {:>3} reqs x {} workers -> {:>7.1} req/s | p50 {:>7.2} ms | p99 {:>7.2} ms | mean batch {:.2}",
+            s.requests, s.workers, s.throughput_rps, s.p50_us / 1e3, s.p99_us / 1e3, s.mean_batch
+        );
+    }
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate the paper's Figure 4 (vertical-pass erosion time
+//! vs w_x on 800×600 u8; series vHGW / vHGW+SIMD-transpose /
+//! linear+SIMD / hybrid).
+//!
+//! Run: `cargo bench --bench fig4_vertical`
+//! Env: `NEON_MORPH_QUICK=1` reduces the sweep.
+
+use neon_morph::bench_harness::{self, fig4};
+use neon_morph::costmodel::CostModel;
+
+fn main() {
+    let quick = std::env::var("NEON_MORPH_QUICK").is_ok();
+    let windows = if quick {
+        bench_harness::window_sweep_quick()
+    } else {
+        bench_harness::window_sweep()
+    };
+    let model = CostModel::exynos5422();
+    let s = fig4::run(&model, &windows, if quick { 2 } else { 5 });
+    print!(
+        "{}",
+        fig4::render(
+            "Figure 4 — vertical pass erosion, cost model (Exynos-5422 ns)",
+            &s,
+            "model"
+        )
+        .to_markdown()
+    );
+    println!();
+    print!(
+        "{}",
+        fig4::render("Figure 4 — host wall-clock (ns)", &s, "host").to_markdown()
+    );
+    println!(
+        "\ncrossover w_x0: model={} host={} (paper: 59)",
+        s.crossover_model, s.crossover_host
+    );
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate the paper's Table 1 (matrix transpose, scalar vs
+//! NEON; 8×8.16 and 16×16.8).
+//!
+//! Run: `cargo bench --bench table1_transpose`
+//! Env: `NEON_MORPH_QUICK=1` for fewer host-timing repetitions.
+
+use neon_morph::bench_harness::table1;
+use neon_morph::costmodel::CostModel;
+
+fn main() {
+    let model = CostModel::exynos5422();
+    let rows = table1::run(&model);
+    print!("{}", table1::render(&rows).to_markdown());
+    println!();
+    for r in &rows {
+        println!(
+            "{}.{}: paper {:.1}x | model {:.1}x | host {:.1}x",
+            r.case,
+            if r.case == "8x8" { "u16" } else { "u8" },
+            r.paper_ratio(),
+            r.model_ratio(),
+            r.host_ratio()
+        );
+    }
+}

@@ -1,0 +1,190 @@
+//! Figure 3: horizontal-pass erosion time vs `w_y` (800×600 u8).
+//!
+//! Series, exactly the paper's: van Herk/Gil-Werman without SIMD,
+//! vHGW with SIMD, linear with SIMD, and the §5.3 hybrid.  The paper's
+//! observations to reproduce: SIMD speeds vHGW up >3×; linear at
+//! `w_y = 3` is ~14× over scalar vHGW; the linear/vHGW+SIMD crossover
+//! sits at `w_y⁰ = 69`.
+
+use crate::costmodel::CostModel;
+use crate::image::{synth, Image};
+use crate::morphology::{linear, vhgw, MorphOp};
+use crate::neon::{Backend, Counting, Native};
+use crate::util::timing;
+
+use super::report::Table;
+
+pub const SERIES: [&str; 4] = ["vhgw", "vhgw_simd", "linear_simd", "hybrid"];
+
+/// One sweep point: per-series times in ns.
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub window: usize,
+    pub model_ns: [f64; 4],
+    pub host_ns: [f64; 4],
+}
+
+/// Sweep result with derived crossovers.
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    pub points: Vec<Point>,
+    /// Largest window where linear_simd <= vhgw_simd (cost model).
+    pub crossover_model: usize,
+    /// Same, from host wall-clock.
+    pub crossover_host: usize,
+}
+
+fn pass<B: Backend>(b: &mut B, img: &Image<u8>, window: usize, series: usize) -> Image<u8> {
+    match series {
+        0 => vhgw::rows_scalar_vhgw(b, img, window, MorphOp::Erode),
+        1 => vhgw::rows_simd_vhgw(b, img, window, MorphOp::Erode),
+        2 => linear::rows_simd_linear(b, img, window, MorphOp::Erode),
+        _ => unreachable!(),
+    }
+}
+
+pub(super) fn sweep_generic(
+    model: &CostModel,
+    windows: &[usize],
+    host_iters: usize,
+    threshold: usize,
+    run_pass: impl PassRunner,
+) -> Sweep {
+    let img = synth::paper_image(0xF16);
+    let mut points = Vec::new();
+    for &w in windows {
+        let mut model_ns = [0.0f64; 4];
+        let mut host_ns = [0.0f64; 4];
+        for s in 0..3 {
+            let mut c = Counting::new();
+            let out = run_pass.run_counting(&mut c, &img, w, s);
+            std::hint::black_box(out);
+            model_ns[s] = model.price_ns(&c.mix);
+            host_ns[s] = timing::bench(1, host_iters, || {
+                run_pass.run_native(&mut Native, &img, w, s)
+            })
+            .min_ns;
+        }
+        // hybrid: the §5.3 dispatch — linear below threshold, vHGW above
+        let pick = if w <= threshold { 2 } else { 1 };
+        model_ns[3] = model_ns[pick];
+        host_ns[3] = host_ns[pick];
+        points.push(Point {
+            window: w,
+            model_ns,
+            host_ns,
+        });
+    }
+    let crossover = |get: &dyn Fn(&Point) -> (f64, f64)| {
+        points
+            .iter()
+            .filter(|p| {
+                let (lin, vh) = get(p);
+                lin <= vh
+            })
+            .map(|p| p.window)
+            .max()
+            .unwrap_or(1)
+    };
+    Sweep {
+        crossover_model: crossover(&|p: &Point| (p.model_ns[2], p.model_ns[1])),
+        crossover_host: crossover(&|p: &Point| (p.host_ns[2], p.host_ns[1])),
+        points,
+    }
+}
+
+/// Trait gluing the counting/native runs of one figure's pass set.
+pub trait PassRunner {
+    fn run_counting(&self, b: &mut Counting, img: &Image<u8>, w: usize, series: usize)
+        -> Image<u8>;
+    fn run_native(&self, b: &mut Native, img: &Image<u8>, w: usize, series: usize) -> Image<u8>;
+}
+
+struct RowsRunner;
+
+impl PassRunner for RowsRunner {
+    fn run_counting(
+        &self,
+        b: &mut Counting,
+        img: &Image<u8>,
+        w: usize,
+        series: usize,
+    ) -> Image<u8> {
+        pass(b, img, w, series)
+    }
+
+    fn run_native(&self, b: &mut Native, img: &Image<u8>, w: usize, series: usize) -> Image<u8> {
+        pass(b, img, w, series)
+    }
+}
+
+/// Run the Fig. 3 sweep.
+pub fn run(model: &CostModel, windows: &[usize], host_iters: usize) -> Sweep {
+    sweep_generic(
+        model,
+        windows,
+        host_iters,
+        crate::morphology::PAPER_WY0,
+        RowsRunner,
+    )
+}
+
+/// Render a sweep as a table (`mode` = "model" or "host").
+pub fn render(title: &str, sweep: &Sweep, mode: &str) -> Table {
+    let mut t = Table::new(
+        title,
+        &["w", "vhgw_ns", "vhgw_simd_ns", "linear_simd_ns", "hybrid_ns"],
+    );
+    for p in &sweep.points {
+        let v = if mode == "host" { &p.host_ns } else { &p.model_ns };
+        t.row(vec![
+            p.window.to_string(),
+            format!("{:.0}", v[0]),
+            format!("{:.0}", v[1]),
+            format!("{:.0}", v[2]),
+            format!("{:.0}", v[3]),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shapes_match_paper() {
+        if cfg!(debug_assertions) {
+            eprintln!("SKIP in debug: 800x600 instruction-counting sweep (runs under --release / make test)");
+            return;
+        }
+        let model = CostModel::exynos5422();
+        let s = run(&model, &[3, 31, 61, 91, 121], 1);
+        let at = |w: usize| s.points.iter().find(|p| p.window == w).unwrap();
+
+        // SIMD speeds up vHGW substantially (paper: >3x)
+        let p = at(31);
+        let simd_speedup = p.model_ns[0] / p.model_ns[1];
+        assert!(simd_speedup > 2.5, "vhgw simd speedup {simd_speedup}");
+
+        // linear at w=3 crushes scalar vHGW (paper: 14x)
+        let p3 = at(3);
+        let lin_speedup = p3.model_ns[0] / p3.model_ns[2];
+        assert!(lin_speedup > 6.0, "linear w=3 speedup {lin_speedup}");
+
+        // crossover exists and is in the paper's neighborhood
+        assert!(
+            (45..=95).contains(&s.crossover_model),
+            "crossover {} (paper 69)",
+            s.crossover_model
+        );
+
+        // hybrid is the min of the two SIMD series everywhere
+        for p in &s.points {
+            assert!(p.model_ns[3] <= p.model_ns[1] * 1.001);
+            if p.window <= 61 {
+                assert!((p.model_ns[3] - p.model_ns[2]).abs() < 1e-9);
+            }
+        }
+    }
+}

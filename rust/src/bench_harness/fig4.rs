@@ -1,0 +1,135 @@
+//! Figure 4: vertical-pass erosion time vs `w_x` (800×600 u8).
+//!
+//! Series: vHGW without SIMD (direct scalar per-row), vHGW with SIMD
+//! (the §5.2.1 baseline: NEON transpose → SIMD rows pass → transpose),
+//! linear with SIMD (§5.2.2 direct, unaligned offset loads), hybrid.
+//! Paper observations: SIMD vHGW ≈ 3× over scalar for `w_x ≥ 3`; linear
+//! at `w_x = 3` is 11× over scalar vHGW; crossover `w_x⁰ = 59` — lower
+//! than Fig. 3's 69 "because passes work with memory asymmetrically".
+
+use crate::costmodel::CostModel;
+use crate::image::Image;
+use crate::morphology::{linear, vhgw, MorphOp};
+use crate::neon::{Backend, Counting, Native};
+use crate::transpose;
+
+use super::fig3::{sweep_generic, PassRunner, Sweep};
+use super::report::Table;
+
+pub const SERIES: [&str; 4] = ["vhgw", "vhgw_simd_transpose", "linear_simd", "hybrid"];
+
+fn pass<B: Backend>(b: &mut B, img: &Image<u8>, window: usize, series: usize) -> Image<u8> {
+    match series {
+        0 => vhgw::cols_scalar_vhgw(b, img, window, MorphOp::Erode),
+        1 => {
+            // §5.2.1: transpose sandwich with the §4 NEON tiles
+            let t = transpose::transpose_image(b, img);
+            let f = vhgw::rows_simd_vhgw(b, &t, window, MorphOp::Erode);
+            transpose::transpose_image(b, &f)
+        }
+        2 => linear::cols_simd_linear(b, img, window, MorphOp::Erode),
+        _ => unreachable!(),
+    }
+}
+
+struct ColsRunner;
+
+impl PassRunner for ColsRunner {
+    fn run_counting(
+        &self,
+        b: &mut Counting,
+        img: &Image<u8>,
+        w: usize,
+        series: usize,
+    ) -> Image<u8> {
+        pass(b, img, w, series)
+    }
+
+    fn run_native(&self, b: &mut Native, img: &Image<u8>, w: usize, series: usize) -> Image<u8> {
+        pass(b, img, w, series)
+    }
+}
+
+/// Run the Fig. 4 sweep.
+pub fn run(model: &CostModel, windows: &[usize], host_iters: usize) -> Sweep {
+    sweep_generic(
+        model,
+        windows,
+        host_iters,
+        crate::morphology::PAPER_WX0,
+        ColsRunner,
+    )
+}
+
+/// Render (same layout as Fig. 3, vertical-series names).
+pub fn render(title: &str, sweep: &Sweep, mode: &str) -> Table {
+    let mut t = Table::new(
+        title,
+        &["w", "vhgw_ns", "vhgw_simd_T_ns", "linear_simd_ns", "hybrid_ns"],
+    );
+    for p in &sweep.points {
+        let v = if mode == "host" { &p.host_ns } else { &p.model_ns };
+        t.row(vec![
+            p.window.to_string(),
+            format!("{:.0}", v[0]),
+            format!("{:.0}", v[1]),
+            format!("{:.0}", v[2]),
+            format!("{:.0}", v[3]),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_shapes_match_paper() {
+        if cfg!(debug_assertions) {
+            eprintln!("SKIP in debug: 800x600 instruction-counting sweep (runs under --release / make test)");
+            return;
+        }
+        let model = CostModel::exynos5422();
+        // dense near the expected crossover so its position resolves
+        let s = run(&model, &[3, 31, 51, 55, 59, 63, 67, 91], 1);
+        let at = |w: usize| s.points.iter().find(|p| p.window == w).unwrap();
+
+        // linear at w=3 beats scalar vHGW decisively (paper: 11x)
+        let p3 = at(3);
+        let lin_speedup = p3.model_ns[0] / p3.model_ns[2];
+        assert!(lin_speedup > 4.0, "linear w=3 speedup {lin_speedup}");
+
+        // crossover near the paper's 59
+        assert!(
+            (39..=79).contains(&s.crossover_model),
+            "crossover {} (paper 59)",
+            s.crossover_model
+        );
+
+        // the transpose-sandwich vHGW is ~flat in window size
+        let flat = at(91).model_ns[1] / at(31).model_ns[1];
+        let _ = at(3);
+        assert!(flat < 1.3, "vhgw+transpose should be ~flat: {flat}");
+    }
+
+    #[test]
+    fn vertical_crossover_below_horizontal() {
+        if cfg!(debug_assertions) {
+            eprintln!("SKIP in debug: full dual sweep (runs under --release / make test)");
+            return;
+        }
+        // §5.3: "values w_x0 and w_y0 are different, because passes work
+        // with memory asymmetrically" — w_x0 < w_y0
+        let model = CostModel::exynos5422();
+        let windows: Vec<usize> = (1..=60).map(|k| 2 * k + 1).collect();
+        let f3 = super::super::fig3::run(&model, &windows, 1);
+        let f4 = run(&model, &windows, 1);
+        assert!(
+            f4.crossover_model < f3.crossover_model,
+            "wx0 {} should be < wy0 {}",
+            f4.crossover_model,
+            f3.crossover_model
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Regenerates every table and figure of the paper's evaluation.
+//!
+//! | artifact | function | paper |
+//! |----------|----------|-------|
+//! | Table 1  | [`table1::run`] | 8×8.16 / 16×16.8 transpose, scalar vs NEON |
+//! | Figure 3 | [`fig3::run`]   | horizontal-pass erosion time vs `w_y` |
+//! | Figure 4 | [`fig4::run`]   | vertical-pass erosion time vs `w_x` |
+//! | headline | [`e2e::run`]    | final hybrid vs vHGW-no-SIMD, ≥3× |
+//!
+//! Every experiment reports **two** measurements side by side:
+//!
+//! * `model` — the calibrated Exynos-5422 cost model applied to the
+//!   *counted* instruction mix of the simulated NEON implementation
+//!   (this is the reproduction of the paper's numbers; see DESIGN.md
+//!   §Substitutions), and
+//! * `host` — real wall-clock time of the same algorithm running
+//!   through the zero-cost [`crate::neon::Native`] backend on this
+//!   machine (different silicon, same code — shapes should agree,
+//!   absolute values will not).
+//!
+//! The binaries under `rust/benches/` and the `neon-morph bench` CLI
+//! subcommand are thin wrappers over these functions.
+
+pub mod e2e;
+pub mod fig3;
+pub mod fig4;
+pub mod report;
+pub mod table1;
+
+/// Default odd-window sweep used by Fig. 3 / Fig. 4 (the paper sweeps
+/// roughly 3..120).
+pub fn window_sweep() -> Vec<usize> {
+    let mut v: Vec<usize> = (1..=15).map(|k| 2 * k + 1).collect(); // 3..31
+    v.extend([35, 41, 47, 53, 59, 65, 69, 75, 81, 91, 101, 111, 121]);
+    v
+}
+
+/// Smaller sweep for smoke tests / debug builds.
+pub fn window_sweep_quick() -> Vec<usize> {
+    vec![3, 7, 15, 31, 61, 91]
+}

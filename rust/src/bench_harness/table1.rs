@@ -1,0 +1,187 @@
+//! Table 1: execution time of matrix transpose, scalar vs NEON.
+//!
+//! Paper values (Samsung Exynos 5422): 8×8.16 — 114 ns scalar, 20 ns
+//! SIMD (5.7×); 16×16.8 — 565 ns scalar, 47 ns SIMD (12×).
+
+use crate::costmodel::CostModel;
+use crate::neon::{Counting, Native};
+use crate::transpose;
+use crate::util::timing;
+
+use super::report::Table;
+
+/// One Table 1 row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub case: &'static str,
+    pub dtype: &'static str,
+    /// Paper's measured numbers (ns).
+    pub paper_scalar_ns: f64,
+    pub paper_simd_ns: f64,
+    /// Cost-model prices of our counted instruction mixes (ns).
+    pub model_scalar_ns: f64,
+    pub model_simd_ns: f64,
+    /// Wall-clock on this host (ns / call, batched).
+    pub host_scalar_ns: f64,
+    pub host_simd_ns: f64,
+}
+
+impl Row {
+    pub fn paper_ratio(&self) -> f64 {
+        self.paper_scalar_ns / self.paper_simd_ns
+    }
+
+    pub fn model_ratio(&self) -> f64 {
+        self.model_scalar_ns / self.model_simd_ns
+    }
+
+    pub fn host_ratio(&self) -> f64 {
+        self.host_scalar_ns / self.host_simd_ns
+    }
+}
+
+/// Measure both Table 1 cases.
+pub fn run(model: &CostModel) -> Vec<Row> {
+    // --- 8x8 u16 ---
+    let src16: Vec<u16> = (0..64).map(|i| (i * 2654435761u64 % 65536) as u16).collect();
+    let mut dst16 = vec![0u16; 64];
+
+    let mut c = Counting::new();
+    transpose::transpose8x8_u16_scalar(&mut c, &src16, &mut dst16);
+    let m_scalar_8 = model.price_ns_marginal(&c.mix);
+    let mut c = Counting::new();
+    transpose::transpose8x8_u16(&mut c, &src16, &mut dst16);
+    let m_simd_8 = model.price_ns_marginal(&c.mix);
+
+    let h_scalar_8 = timing::bench_batched(3, 15, 20_000, || {
+        let mut d = [0u16; 64];
+        transpose::transpose8x8_u16_scalar(&mut Native, &src16, &mut d);
+        d[63]
+    })
+    .p50_ns;
+    let h_simd_8 = timing::bench_batched(3, 15, 20_000, || {
+        let mut d = [0u16; 64];
+        transpose::transpose8x8_u16(&mut Native, &src16, &mut d);
+        d[63]
+    })
+    .p50_ns;
+
+    // --- 16x16 u8 ---
+    let src8: Vec<u8> = (0..256).map(|i| (i * 37 % 251) as u8).collect();
+    let mut dst8 = vec![0u8; 256];
+
+    let mut c = Counting::new();
+    transpose::transpose16x16_u8_scalar(&mut c, &src8, &mut dst8);
+    let m_scalar_16 = model.price_ns_marginal(&c.mix);
+    let mut c = Counting::new();
+    transpose::transpose16x16_u8(&mut c, &src8, &mut dst8);
+    let m_simd_16 = model.price_ns_marginal(&c.mix);
+
+    let h_scalar_16 = timing::bench_batched(3, 15, 10_000, || {
+        let mut d = [0u8; 256];
+        transpose::transpose16x16_u8_scalar(&mut Native, &src8, &mut d);
+        d[255]
+    })
+    .p50_ns;
+    let h_simd_16 = timing::bench_batched(3, 15, 10_000, || {
+        let mut d = [0u8; 256];
+        transpose::transpose16x16_u8(&mut Native, &src8, &mut d);
+        d[255]
+    })
+    .p50_ns;
+
+    vec![
+        Row {
+            case: "8x8",
+            dtype: "16-bit unsigned int",
+            paper_scalar_ns: 114.0,
+            paper_simd_ns: 20.0,
+            model_scalar_ns: m_scalar_8,
+            model_simd_ns: m_simd_8,
+            host_scalar_ns: h_scalar_8,
+            host_simd_ns: h_simd_8,
+        },
+        Row {
+            case: "16x16",
+            dtype: "8-bit unsigned int",
+            paper_scalar_ns: 565.0,
+            paper_simd_ns: 47.0,
+            model_scalar_ns: m_scalar_16,
+            model_simd_ns: m_simd_16,
+            host_scalar_ns: h_scalar_16,
+            host_simd_ns: h_simd_16,
+        },
+    ]
+}
+
+/// Render the rows as the paper's table plus our two measurement modes.
+pub fn render(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Table 1 — matrix transpose execution time (paper: Exynos 5422)",
+        &[
+            "Matrix", "Data type", "paper scalar", "paper SIMD", "paper x",
+            "model scalar", "model SIMD", "model x", "host scalar", "host SIMD",
+            "host x",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.case.to_string(),
+            r.dtype.to_string(),
+            format!("{:.0} ns", r.paper_scalar_ns),
+            format!("{:.0} ns", r.paper_simd_ns),
+            format!("{:.1}x", r.paper_ratio()),
+            format!("{:.0} ns", r.model_scalar_ns),
+            format!("{:.0} ns", r.model_simd_ns),
+            format!("{:.1}x", r.model_ratio()),
+            format!("{:.0} ns", r.host_scalar_ns),
+            format!("{:.0} ns", r.host_simd_ns),
+            format!("{:.1}x", r.host_ratio()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_reproduces_paper_ratios() {
+        if cfg!(debug_assertions) {
+            eprintln!("SKIP in debug: batched host timing (runs under --release / make test)");
+            return;
+        }
+        let rows = run(&CostModel::exynos5422());
+        let r8 = &rows[0];
+        // paper: 5.7x — model must land within ±35%
+        assert!(
+            (r8.model_ratio() / r8.paper_ratio() - 1.0).abs() < 0.35,
+            "8x8 ratio {} vs paper {}",
+            r8.model_ratio(),
+            r8.paper_ratio()
+        );
+        let r16 = &rows[1];
+        assert!(
+            (r16.model_ratio() / r16.paper_ratio() - 1.0).abs() < 0.35,
+            "16x16 ratio {} vs paper {}",
+            r16.model_ratio(),
+            r16.paper_ratio()
+        );
+        // absolute scale: within 2x of the paper's nanoseconds
+        for r in &rows {
+            assert!(r.model_scalar_ns > r.paper_scalar_ns / 2.0);
+            assert!(r.model_scalar_ns < r.paper_scalar_ns * 2.0);
+            assert!(r.model_simd_ns > r.paper_simd_ns / 2.0);
+            assert!(r.model_simd_ns < r.paper_simd_ns * 2.0);
+        }
+    }
+
+    #[test]
+    fn render_has_both_rows() {
+        let rows = run(&CostModel::exynos5422());
+        let md = render(&rows).to_markdown();
+        assert!(md.contains("8x8"));
+        assert!(md.contains("16x16"));
+    }
+}

@@ -1,0 +1,198 @@
+//! Service metrics: counters + log-bucketed latency histograms, all
+//! lock-free (atomics) so the hot path never contends.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log2 latency buckets (ns): bucket i covers [2^i, 2^{i+1}).
+const BUCKETS: usize = 48;
+
+/// Lock-free histogram of nanosecond latencies with power-of-two
+/// buckets.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_ns: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, ns: u64) {
+        let idx = (64 - ns.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile (bucket upper bound), q in [0, 1].
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+}
+
+/// All service-level metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    /// Requests rejected by backpressure (queue full).
+    pub shed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub queue_latency: Histogram,
+    pub exec_latency: Histogram,
+    pub total_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            queue_p50_us: self.queue_latency.quantile_ns(0.5) as f64 / 1e3,
+            queue_p99_us: self.queue_latency.quantile_ns(0.99) as f64 / 1e3,
+            exec_p50_us: self.exec_latency.quantile_ns(0.5) as f64 / 1e3,
+            exec_p99_us: self.exec_latency.quantile_ns(0.99) as f64 / 1e3,
+            total_mean_us: self.total_latency.mean_ns() / 1e3,
+            total_p50_us: self.total_latency.quantile_ns(0.5) as f64 / 1e3,
+            total_p99_us: self.total_latency.quantile_ns(0.99) as f64 / 1e3,
+        }
+    }
+}
+
+/// Point-in-time metric values for reporting.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub queue_p50_us: f64,
+    pub queue_p99_us: f64,
+    pub exec_p50_us: f64,
+    pub exec_p99_us: f64,
+    pub total_mean_us: f64,
+    pub total_p50_us: f64,
+    pub total_p99_us: f64,
+}
+
+impl Snapshot {
+    /// Mean requests per batch (batching effectiveness).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+}
+
+impl std::fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "submitted={} completed={} failed={} shed={} batches={} (mean size {:.2}) \
+             queue p50/p99 = {:.0}/{:.0} µs, exec p50/p99 = {:.0}/{:.0} µs, \
+             total mean/p50/p99 = {:.0}/{:.0}/{:.0} µs",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.shed,
+            self.batches,
+            self.mean_batch_size(),
+            self.queue_p50_us,
+            self.queue_p99_us,
+            self.exec_p50_us,
+            self.exec_p99_us,
+            self.total_mean_us,
+            self.total_p50_us,
+            self.total_p99_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let h = Histogram::default();
+        for ns in [100u64, 200, 400, 800, 1600, 3200, 100_000] {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 7);
+        let p50 = h.quantile_ns(0.5);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 400 && p50 <= 2048, "p50 bucket bound: {p50}");
+    }
+
+    #[test]
+    fn histogram_mean() {
+        let h = Histogram::default();
+        h.record(1000);
+        h.record(3000);
+        assert!((h.mean_ns() - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_latency_is_safe() {
+        let h = Histogram::default();
+        h.record(0);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_ns(0.5) >= 1);
+    }
+
+    #[test]
+    fn snapshot_batch_size() {
+        let m = Metrics::default();
+        m.batches.store(4, Ordering::Relaxed);
+        m.batched_requests.store(10, Ordering::Relaxed);
+        assert!((m.snapshot().mean_batch_size() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,440 @@
+//! L3 coordinator: the morphology filtering service.
+//!
+//! Architecture (std threads; the offline build has no tokio, and the
+//! PJRT CPU client is synchronous anyway):
+//!
+//! ```text
+//!  submit() ──► BatchQueue (bounded, key-grouped)  ──► worker 0 ─► reply
+//!     │               │  backpressure: reject when full  worker 1 ─► reply
+//!     └─ Ticket ◄─────┘  batches keyed by (op, shape, w) ...
+//! ```
+//!
+//! Each worker owns its engines — an optional [`XlaRuntime`] (PJRT,
+//! executing the python-AOT artifacts; `PjRtLoadedExecutable` is not
+//! `Sync`, so runtimes are never shared) and a [`NativeEngine`]
+//! (pure-rust §5.3 hybrid morphology).  The **router** picks per
+//! request: an artifact match on the XLA backend when available, native
+//! otherwise (or as directed by [`BackendChoice`]).
+
+pub mod metrics;
+pub mod queue;
+pub mod request;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::image::Image;
+use crate::morphology::MorphConfig;
+use crate::runtime::{ArtifactMeta, Engine, Manifest, NativeEngine, XlaRuntime};
+use metrics::{Metrics, Snapshot};
+use queue::{BatchQueue, Pull};
+use request::{FilterRequest, FilterResponse, Pending, Ticket};
+
+/// Which engine(s) the router may use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// XLA for shapes with artifacts, native for everything else.
+    Auto,
+    /// Never touch PJRT (no artifacts needed).
+    NativeOnly,
+    /// Only run requests that have a compiled artifact; others fail.
+    XlaOnly,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    /// Bound on queued requests (backpressure limit).
+    pub queue_capacity: usize,
+    /// Max same-key requests a worker takes per pull.
+    pub max_batch: usize,
+    pub backend: BackendChoice,
+    /// Artifact directory (required unless `NativeOnly`).
+    pub artifact_dir: Option<PathBuf>,
+    /// Configuration of the native engine.
+    pub morph: MorphConfig,
+    /// Compile all artifacts at startup instead of lazily.
+    pub precompile: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: std::thread::available_parallelism().map_or(2, |n| n.get().min(8)),
+            queue_capacity: 1024,
+            max_batch: 16,
+            backend: BackendChoice::Auto,
+            artifact_dir: Some(PathBuf::from("artifacts")),
+            morph: MorphConfig::default(),
+            precompile: false,
+        }
+    }
+}
+
+/// The running service.
+pub struct Coordinator {
+    queue: Arc<BatchQueue>,
+    metrics: Arc<Metrics>,
+    manifest: Option<Arc<Manifest>>,
+    next_id: AtomicU64,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn workers and return the running coordinator.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let manifest = match (&cfg.backend, &cfg.artifact_dir) {
+            (BackendChoice::NativeOnly, _) => None,
+            (_, Some(dir)) => match Manifest::load(dir) {
+                Ok(m) => Some(Arc::new(m)),
+                Err(e) if cfg.backend == BackendChoice::XlaOnly => {
+                    return Err(e.context("XlaOnly backend requires artifacts"));
+                }
+                Err(_) => None, // Auto degrades to native
+            },
+            (BackendChoice::XlaOnly, None) => {
+                return Err(anyhow!("XlaOnly backend requires artifact_dir"));
+            }
+            (_, None) => None,
+        };
+
+        let queue = Arc::new(BatchQueue::new(cfg.queue_capacity, cfg.max_batch));
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let manifest = manifest.clone();
+            let cfg = cfg.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("morph-worker-{wid}"))
+                .spawn(move || worker_loop(wid, &cfg, manifest, &queue, &metrics))
+                .context("spawning worker")?;
+            workers.push(handle);
+        }
+        Ok(Coordinator {
+            queue,
+            metrics,
+            manifest,
+            next_id: AtomicU64::new(1),
+            workers,
+        })
+    }
+
+    /// Convenience: start with defaults and `NativeOnly` backend.
+    pub fn start_native(workers: usize) -> Result<Coordinator> {
+        Coordinator::start(CoordinatorConfig {
+            workers,
+            backend: BackendChoice::NativeOnly,
+            artifact_dir: None,
+            ..CoordinatorConfig::default()
+        })
+    }
+
+    /// Submit a request.  Fails fast when the queue is full
+    /// (backpressure) or closed.
+    pub fn submit(
+        &self,
+        op: &str,
+        w_x: usize,
+        w_y: usize,
+        image: Arc<Image<u8>>,
+    ) -> Result<Ticket> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending {
+            req: FilterRequest {
+                id,
+                op: op.to_string(),
+                w_x,
+                w_y,
+                image,
+                enqueued: Instant::now(),
+            },
+            reply: tx,
+        };
+        match self.queue.push(pending) {
+            Ok(()) => {
+                Metrics::inc(&self.metrics.submitted);
+                Ok(Ticket { id, rx })
+            }
+            Err(_) => {
+                Metrics::inc(&self.metrics.shed);
+                Err(anyhow!("queue full: request shed (backpressure)"))
+            }
+        }
+    }
+
+    /// Submit and block for the result.
+    pub fn filter(
+        &self,
+        op: &str,
+        w_x: usize,
+        w_y: usize,
+        image: Arc<Image<u8>>,
+    ) -> Result<FilterResponse> {
+        self.submit(op, w_x, w_y, image)?.wait()
+    }
+
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_deref()
+    }
+
+    /// Close the queue, drain and join workers.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Build the native-path artifact description for a request with no
+/// compiled artifact.
+fn synthetic_meta(req: &FilterRequest) -> ArtifactMeta {
+    let (h, w) = (req.image.height(), req.image.width());
+    ArtifactMeta {
+        name: req.batch_key(),
+        kind: if req.op == "transpose" {
+            "transpose".into()
+        } else {
+            "morphology".into()
+        },
+        op: req.op.clone(),
+        height: h,
+        width: w,
+        w_x: req.w_x,
+        w_y: req.w_y,
+        method: "hybrid".into(),
+        vertical: "transpose".into(),
+        dtype: "u8".into(),
+        file: String::new(),
+        out_shape: if req.op == "transpose" { (w, h) } else { (h, w) },
+    }
+}
+
+fn worker_loop(
+    wid: usize,
+    cfg: &CoordinatorConfig,
+    manifest: Option<Arc<Manifest>>,
+    queue: &BatchQueue,
+    metrics: &Metrics,
+) {
+    let mut native = NativeEngine::new(cfg.morph);
+    let mut xla: Option<XlaRuntime> = match (&cfg.backend, &cfg.artifact_dir, &manifest) {
+        (BackendChoice::NativeOnly, _, _) | (_, _, None) => None,
+        (_, Some(dir), Some(_)) => XlaRuntime::new(dir).ok(),
+        (_, None, _) => None,
+    };
+    if cfg.precompile {
+        if let Some(rt) = xla.as_mut() {
+            let _ = rt.precompile(|_| true);
+        }
+    }
+
+    let mut affinity: Option<String> = None;
+    loop {
+        match queue.pull(affinity.as_deref(), Duration::from_millis(100)) {
+            Pull::Closed => break,
+            Pull::Batch(batch) => {
+                Metrics::inc(&metrics.batches);
+                metrics
+                    .batched_requests
+                    .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                affinity = batch.first().map(|p| p.req.batch_key());
+                for p in batch {
+                    serve_one(wid, cfg, &manifest, &mut native, &mut xla, metrics, p);
+                }
+            }
+        }
+    }
+}
+
+fn serve_one(
+    wid: usize,
+    cfg: &CoordinatorConfig,
+    manifest: &Option<Arc<Manifest>>,
+    native: &mut NativeEngine,
+    xla: &mut Option<XlaRuntime>,
+    metrics: &Metrics,
+    p: Pending,
+) {
+    let queue_ns = p.req.enqueued.elapsed().as_nanos() as u64;
+    let (h, w) = (p.req.image.height(), p.req.image.width());
+    let compiled = manifest
+        .as_ref()
+        .and_then(|m| m.find(&p.req.op, h, w, p.req.w_x, p.req.w_y).cloned());
+
+    let t = Instant::now();
+    let (result, backend): (Result<Image<u8>>, &'static str) =
+        if cfg.backend == BackendChoice::XlaOnly {
+            match (compiled, xla.as_mut()) {
+                (Some(meta), Some(rt)) => (rt.run(&meta, &p.req.image), rt.backend_name()),
+                (None, _) => (
+                    Err(anyhow!("no artifact for {} (XlaOnly backend)", p.req.batch_key())),
+                    "xla-pjrt",
+                ),
+                (Some(_), None) => (
+                    Err(anyhow!("XLA runtime unavailable on worker {wid}")),
+                    "xla-pjrt",
+                ),
+            }
+        } else if let (Some(meta), Some(rt)) = (compiled.as_ref(), xla.as_mut()) {
+            match rt.run(meta, &p.req.image) {
+                // Auto: degrade to native on runtime errors
+                Err(_) => (
+                    native.run(&synthetic_meta(&p.req), &p.req.image),
+                    native.backend_name(),
+                ),
+                ok => (ok, rt.backend_name()),
+            }
+        } else {
+            (
+                native.run(&synthetic_meta(&p.req), &p.req.image),
+                native.backend_name(),
+            )
+        };
+    let exec_ns = t.elapsed().as_nanos() as u64;
+
+    metrics.queue_latency.record(queue_ns);
+    metrics.exec_latency.record(exec_ns);
+    metrics.total_latency.record(queue_ns + exec_ns);
+    if result.is_ok() {
+        Metrics::inc(&metrics.completed);
+    } else {
+        Metrics::inc(&metrics.failed);
+    }
+    // receiver may have given up; dropping the response is fine
+    let _ = p.reply.send(FilterResponse {
+        id: p.req.id,
+        result,
+        queue_ns,
+        exec_ns,
+        backend,
+        worker: wid,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+    use crate::morphology;
+    use crate::neon::Native;
+
+    #[test]
+    fn native_coordinator_round_trip() {
+        let coord = Coordinator::start_native(2).unwrap();
+        let img = Arc::new(synth::noise(32, 48, 5));
+        let resp = coord.filter("erode", 5, 3, img.clone()).unwrap();
+        assert_eq!(resp.backend, "native");
+        let want = morphology::erode(&img, 5, 3);
+        assert!(resp.result.unwrap().same_pixels(&want));
+        let snap = coord.metrics();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.failed, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_complete() {
+        let coord = Coordinator::start_native(4).unwrap();
+        let img = Arc::new(synth::noise(24, 24, 6));
+        let tickets: Vec<_> = (0..40)
+            .map(|i| {
+                let op = if i % 2 == 0 { "erode" } else { "dilate" };
+                coord.submit(op, 3, 3, img.clone()).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            let r = t.wait().unwrap();
+            assert!(r.result.is_ok());
+        }
+        let snap = coord.metrics();
+        assert_eq!(snap.completed, 40);
+        assert!(snap.batches <= 40);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn unknown_op_fails_cleanly() {
+        let coord = Coordinator::start_native(1).unwrap();
+        let img = Arc::new(synth::noise(8, 8, 2));
+        let resp = coord.filter("sharpen", 3, 3, img).unwrap();
+        assert!(resp.result.is_err());
+        assert_eq!(coord.metrics().failed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backpressure_sheds_when_overloaded() {
+        // 1 worker, tiny queue, many submissions of slow-ish work
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 2,
+            max_batch: 1,
+            backend: BackendChoice::NativeOnly,
+            artifact_dir: None,
+            morph: MorphConfig::default(),
+            precompile: false,
+        })
+        .unwrap();
+        let img = Arc::new(synth::paper_image(3));
+        let mut shed = 0;
+        let mut tickets = Vec::new();
+        for _ in 0..64 {
+            match coord.submit("opening", 15, 15, img.clone()) {
+                Ok(t) => tickets.push(t),
+                Err(_) => shed += 1,
+            }
+        }
+        assert!(shed > 0, "expected at least one shed under overload");
+        assert_eq!(coord.metrics().shed, shed);
+        for t in tickets {
+            assert!(t.wait().unwrap().result.is_ok());
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn transpose_request_swaps_dims() {
+        let coord = Coordinator::start_native(1).unwrap();
+        let img = Arc::new(synth::noise(10, 20, 8));
+        let out = coord.filter("transpose", 0, 0, img.clone()).unwrap().result.unwrap();
+        assert_eq!((out.height(), out.width()), (20, 10));
+        let want = crate::transpose::transpose_image(&mut Native, &img);
+        assert!(out.same_pixels(&want));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn drop_shuts_down_workers() {
+        let coord = Coordinator::start_native(2).unwrap();
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let _ = coord.filter("erode", 3, 3, img);
+        drop(coord); // must not hang
+    }
+}

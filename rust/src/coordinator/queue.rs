@@ -1,0 +1,232 @@
+//! The dynamic batching queue.
+//!
+//! Requests are grouped by [`FilterRequest::batch_key`]; a worker pull
+//! returns up to `max_batch` requests *of one key*, preferring the key
+//! the worker executed last (executable-cache affinity — on the XLA
+//! backend switching keys means touching a different compiled module).
+//! Total occupancy is bounded: pushes beyond `capacity` are rejected so
+//! overload sheds load at the front door instead of growing latency
+//! without bound (backpressure).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::request::Pending;
+
+/// Pop result.
+pub(crate) enum Pull {
+    /// A batch of same-key requests.
+    Batch(Vec<Pending>),
+    /// Queue is shut down and drained.
+    Closed,
+}
+
+struct State {
+    by_key: BTreeMap<String, VecDeque<Pending>>,
+    len: usize,
+    closed: bool,
+}
+
+/// Bounded, key-grouping MPMC queue.
+pub(crate) struct BatchQueue {
+    state: Mutex<State>,
+    nonempty: Condvar,
+    capacity: usize,
+    max_batch: usize,
+}
+
+impl BatchQueue {
+    pub fn new(capacity: usize, max_batch: usize) -> Self {
+        BatchQueue {
+            state: Mutex::new(State {
+                by_key: BTreeMap::new(),
+                len: 0,
+                closed: false,
+            }),
+            nonempty: Condvar::new(),
+            capacity: capacity.max(1),
+            max_batch: max_batch.max(1),
+        }
+    }
+
+    /// Enqueue; `Err(p)` gives the request back when full or closed.
+    pub fn push(&self, p: Pending) -> Result<(), Pending> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.len >= self.capacity {
+            return Err(p);
+        }
+        st.by_key.entry(p.req.batch_key()).or_default().push_back(p);
+        st.len += 1;
+        drop(st);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue a batch, blocking up to `wait` when empty.
+    ///
+    /// `affinity` is the key the caller last served; if it still has
+    /// pending requests it is preferred, otherwise the longest queue is
+    /// taken (drains hot keys first).
+    pub fn pull(&self, affinity: Option<&str>, wait: Duration) -> Pull {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.len > 0 {
+                let key = affinity
+                    .filter(|k| st.by_key.get(*k).is_some_and(|q| !q.is_empty()))
+                    .map(str::to_string)
+                    .or_else(|| {
+                        st.by_key
+                            .iter()
+                            .max_by_key(|(_, q)| q.len())
+                            .map(|(k, _)| k.clone())
+                    });
+                if let Some(key) = key {
+                    let q = st.by_key.get_mut(&key).unwrap();
+                    let n = q.len().min(self.max_batch);
+                    let batch: Vec<Pending> = q.drain(..n).collect();
+                    if q.is_empty() {
+                        st.by_key.remove(&key);
+                    }
+                    st.len -= batch.len();
+                    return Pull::Batch(batch);
+                }
+            }
+            if st.closed {
+                return Pull::Closed;
+            }
+            let (next, timeout) = self.nonempty.wait_timeout(st, wait).unwrap();
+            st = next;
+            if timeout.timed_out() && st.len == 0 {
+                if st.closed {
+                    return Pull::Closed;
+                }
+                // spurious empty wakeup: loop again (callers rely on
+                // pull blocking until work or close)
+            }
+        }
+    }
+
+    /// Current occupancy.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().len
+    }
+
+    /// Close the queue; pending work is still drained by `pull`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.nonempty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+    use crate::image::Image;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    fn pending(op: &str, w: usize, img: &Arc<Image<u8>>) -> Pending {
+        let (tx, _rx) = mpsc::channel();
+        std::mem::forget(_rx);
+        Pending {
+            req: super::super::request::FilterRequest {
+                id: 0,
+                op: op.into(),
+                w_x: w,
+                w_y: w,
+                image: img.clone(),
+                enqueued: Instant::now(),
+            },
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn batches_group_by_key() {
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let q = BatchQueue::new(100, 8);
+        for _ in 0..3 {
+            q.push(pending("erode", 3, &img)).ok().unwrap();
+        }
+        for _ in 0..2 {
+            q.push(pending("dilate", 3, &img)).ok().unwrap();
+        }
+        let Pull::Batch(b1) = q.pull(None, Duration::from_millis(10)) else {
+            panic!("expected batch");
+        };
+        assert_eq!(b1.len(), 3); // longest queue first
+        assert!(b1.iter().all(|p| p.req.op == "erode"));
+        let Pull::Batch(b2) = q.pull(None, Duration::from_millis(10)) else {
+            panic!("expected batch");
+        };
+        assert_eq!(b2.len(), 2);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn max_batch_respected() {
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let q = BatchQueue::new(100, 4);
+        for _ in 0..10 {
+            q.push(pending("erode", 3, &img)).ok().unwrap();
+        }
+        let Pull::Batch(b) = q.pull(None, Duration::from_millis(10)) else {
+            panic!();
+        };
+        assert_eq!(b.len(), 4);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn affinity_preferred() {
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let q = BatchQueue::new(100, 8);
+        for _ in 0..5 {
+            q.push(pending("erode", 3, &img)).ok().unwrap();
+        }
+        q.push(pending("dilate", 3, &img)).ok().unwrap();
+        let key = pending("dilate", 3, &img).req.batch_key();
+        let Pull::Batch(b) = q.pull(Some(&key), Duration::from_millis(10)) else {
+            panic!();
+        };
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].req.op, "dilate");
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let q = BatchQueue::new(2, 8);
+        assert!(q.push(pending("erode", 3, &img)).is_ok());
+        assert!(q.push(pending("erode", 3, &img)).is_ok());
+        assert!(q.push(pending("erode", 3, &img)).is_err());
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let q = BatchQueue::new(10, 8);
+        q.push(pending("erode", 3, &img)).ok().unwrap();
+        q.close();
+        assert!(q.push(pending("erode", 3, &img)).is_err());
+        assert!(matches!(q.pull(None, Duration::from_millis(1)), Pull::Batch(_)));
+        assert!(matches!(q.pull(None, Duration::from_millis(1)), Pull::Closed));
+    }
+
+    #[test]
+    fn pull_wakes_on_push_from_other_thread() {
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let q = Arc::new(BatchQueue::new(10, 8));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pull(None, Duration::from_millis(50)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(pending("erode", 3, &img)).ok().unwrap();
+        match h.join().unwrap() {
+            Pull::Batch(b) => assert_eq!(b.len(), 1),
+            Pull::Closed => panic!("should have received the batch"),
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Request/response types of the filtering service.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::image::Image;
+
+/// A filtering request: apply `op` with a `w_x × w_y` SE to `image`.
+#[derive(Clone, Debug)]
+pub struct FilterRequest {
+    pub id: u64,
+    /// erode / dilate / opening / closing / gradient / tophat /
+    /// blackhat / transpose.
+    pub op: String,
+    pub w_x: usize,
+    pub w_y: usize,
+    /// Shared, zero-copy input image.
+    pub image: Arc<Image<u8>>,
+    pub enqueued: Instant,
+}
+
+impl FilterRequest {
+    /// Batching key: requests with the same key run the same compiled
+    /// executable (same op, shape and window), so grouping them
+    /// maximizes executable-cache affinity.
+    pub fn batch_key(&self) -> String {
+        format!(
+            "{}:{}x{}:w{}x{}",
+            self.op,
+            self.image.height(),
+            self.image.width(),
+            self.w_x,
+            self.w_y
+        )
+    }
+}
+
+/// Completed request.
+#[derive(Debug)]
+pub struct FilterResponse {
+    pub id: u64,
+    pub result: anyhow::Result<Image<u8>>,
+    /// Time spent queued before a worker picked the request up.
+    pub queue_ns: u64,
+    /// Execution time inside the engine.
+    pub exec_ns: u64,
+    /// Which engine ran it ("xla-pjrt" or "native").
+    pub backend: &'static str,
+    /// Worker that executed the request.
+    pub worker: usize,
+}
+
+/// A submitted request paired with its response channel.
+pub(crate) struct Pending {
+    pub req: FilterRequest,
+    pub reply: mpsc::Sender<FilterResponse>,
+}
+
+/// Ticket returned by `submit`: await the response.
+pub struct Ticket {
+    pub id: u64,
+    pub(crate) rx: mpsc::Receiver<FilterResponse>,
+}
+
+impl Ticket {
+    /// Block until the response arrives.
+    pub fn wait(self) -> anyhow::Result<FilterResponse> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator dropped request {}", self.id))
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<FilterResponse> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+
+    #[test]
+    fn batch_key_groups_identical_work() {
+        let img = Arc::new(synth::noise(10, 12, 1));
+        let mk = |op: &str, wx, wy| FilterRequest {
+            id: 0,
+            op: op.into(),
+            w_x: wx,
+            w_y: wy,
+            image: img.clone(),
+            enqueued: Instant::now(),
+        };
+        assert_eq!(mk("erode", 3, 3).batch_key(), mk("erode", 3, 3).batch_key());
+        assert_ne!(mk("erode", 3, 3).batch_key(), mk("erode", 5, 3).batch_key());
+        assert_ne!(mk("erode", 3, 3).batch_key(), mk("dilate", 3, 3).batch_key());
+    }
+}

@@ -1,0 +1,357 @@
+//! Image containers, I/O and synthetic workload generation.
+//!
+//! The paper's experiments run on an 800×600 gray image with 8-bit
+//! unsigned data; [`Image<u8>`] is the crate-wide pixel container.  The
+//! container is stride-aware so row-aligned SIMD passes can work on
+//! padded rows without copying.
+
+mod pgm;
+pub mod synth;
+
+pub use pgm::{read_pgm, write_pgm};
+
+/// Pixel element: the subset of integer types the paper's kernels use.
+pub trait Pixel:
+    Copy
+    + Ord
+    + Default
+    + Send
+    + Sync
+    + std::fmt::Debug
+    + std::fmt::Display
+    + 'static
+{
+    /// Identity of `min` (all-ones) — erosion's padding value.
+    const MAX_VALUE: Self;
+    /// Identity of `max` (zero) — dilation's padding value.
+    const MIN_VALUE: Self;
+    fn from_u8(v: u8) -> Self;
+    fn to_u64(self) -> u64;
+}
+
+impl Pixel for u8 {
+    const MAX_VALUE: u8 = u8::MAX;
+    const MIN_VALUE: u8 = u8::MIN;
+    fn from_u8(v: u8) -> Self {
+        v
+    }
+    fn to_u64(self) -> u64 {
+        self as u64
+    }
+}
+
+impl Pixel for u16 {
+    const MAX_VALUE: u16 = u16::MAX;
+    const MIN_VALUE: u16 = u16::MIN;
+    fn from_u8(v: u8) -> Self {
+        v as u16
+    }
+    fn to_u64(self) -> u64 {
+        self as u64
+    }
+}
+
+/// A 2-D image with `height` rows × `width` columns, row-major storage
+/// with an explicit row `stride` (in elements, `stride >= width`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Image<T: Pixel = u8> {
+    height: usize,
+    width: usize,
+    stride: usize,
+    data: Vec<T>,
+}
+
+impl<T: Pixel> Image<T> {
+    /// A `height × width` image filled with `value`, stride == width.
+    pub fn filled(height: usize, width: usize, value: T) -> Self {
+        Self {
+            height,
+            width,
+            stride: width,
+            data: vec![value; height * width],
+        }
+    }
+
+    /// A zero image.
+    pub fn zeros(height: usize, width: usize) -> Self {
+        Self::filled(height, width, T::default())
+    }
+
+    /// Wrap a row-major vector (len must equal `height * width`).
+    pub fn from_vec(height: usize, width: usize, data: Vec<T>) -> Self {
+        assert_eq!(
+            data.len(),
+            height * width,
+            "from_vec: data length {} != {}x{}",
+            data.len(),
+            height,
+            width
+        );
+        Self {
+            height,
+            width,
+            stride: width,
+            data,
+        }
+    }
+
+    /// Build from a per-pixel function `f(row, col)`.
+    pub fn from_fn(height: usize, width: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(height * width);
+        for y in 0..height {
+            for x in 0..width {
+                data.push(f(y, x));
+            }
+        }
+        Self::from_vec(height, width, data)
+    }
+
+    /// A copy with each row padded to `stride` elements (pad = `fill`).
+    /// SIMD passes use this so 16-lane stores never cross a row end.
+    pub fn with_stride(&self, stride: usize, fill: T) -> Self {
+        assert!(stride >= self.width, "stride {} < width {}", stride, self.width);
+        let mut data = vec![fill; self.height * stride];
+        for y in 0..self.height {
+            let src = self.row(y);
+            data[y * stride..y * stride + self.width].copy_from_slice(src);
+        }
+        Self {
+            height: self.height,
+            width: self.width,
+            stride,
+            data,
+        }
+    }
+
+    /// Drop any row padding, making `stride == width`.
+    pub fn compact(&self) -> Self {
+        if self.stride == self.width {
+            return self.clone();
+        }
+        let mut data = Vec::with_capacity(self.height * self.width);
+        for y in 0..self.height {
+            data.extend_from_slice(self.row(y));
+        }
+        Self::from_vec(self.height, self.width, data)
+    }
+
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Total pixels (excludes padding).
+    pub fn pixels(&self) -> usize {
+        self.height * self.width
+    }
+
+    /// Row `y` as a slice of `width` elements (excludes padding).
+    #[inline]
+    pub fn row(&self, y: usize) -> &[T] {
+        &self.data[y * self.stride..y * self.stride + self.width]
+    }
+
+    /// Row `y` including its padding (`stride` elements).
+    #[inline]
+    pub fn row_padded(&self, y: usize) -> &[T] {
+        &self.data[y * self.stride..(y + 1) * self.stride]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, y: usize) -> &mut [T] {
+        &mut self.data[y * self.stride..y * self.stride + self.width]
+    }
+
+    #[inline]
+    pub fn row_padded_mut(&mut self, y: usize) -> &mut [T] {
+        &mut self.data[y * self.stride..(y + 1) * self.stride]
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize) -> T {
+        debug_assert!(y < self.height && x < self.width);
+        self.data[y * self.stride + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, v: T) {
+        debug_assert!(y < self.height && x < self.width);
+        self.data[y * self.stride + x] = v;
+    }
+
+    /// Raw storage, including padding.
+    pub fn raw(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn raw_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Row-major `height*width` copy without padding.
+    pub fn to_vec(&self) -> Vec<T> {
+        if self.stride == self.width {
+            return self.data.clone();
+        }
+        let mut out = Vec::with_capacity(self.pixels());
+        for y in 0..self.height {
+            out.extend_from_slice(self.row(y));
+        }
+        out
+    }
+
+    /// Pointwise equality ignoring padding.
+    pub fn same_pixels(&self, other: &Self) -> bool {
+        self.height == other.height
+            && self.width == other.width
+            && (0..self.height).all(|y| self.row(y) == other.row(y))
+    }
+
+    /// First differing pixel `(y, x, self, other)`, if any — test helper.
+    pub fn first_diff(&self, other: &Self) -> Option<(usize, usize, T, T)> {
+        if self.height != other.height || self.width != other.width {
+            return Some((usize::MAX, usize::MAX, T::default(), T::default()));
+        }
+        for y in 0..self.height {
+            for x in 0..self.width {
+                let (a, b) = (self.get(y, x), other.get(y, x));
+                if a != b {
+                    return Some((y, x, a, b));
+                }
+            }
+        }
+        None
+    }
+
+    /// Transposed copy (naive; fast versions live in [`crate::transpose`]).
+    pub fn transposed(&self) -> Self {
+        let mut out = Self::zeros(self.width, self.height);
+        for y in 0..self.height {
+            for x in 0..self.width {
+                out.set(x, y, self.get(y, x));
+            }
+        }
+        out
+    }
+
+    /// Min and max pixel value (None for empty images).
+    pub fn min_max(&self) -> Option<(T, T)> {
+        let mut it = (0..self.height).flat_map(|y| self.row(y).iter().copied());
+        let first = it.next()?;
+        let mut mn = first;
+        let mut mx = first;
+        for v in it {
+            if v < mn {
+                mn = v;
+            }
+            if v > mx {
+                mx = v;
+            }
+        }
+        Some((mn, mx))
+    }
+
+    /// Mean pixel value (0.0 for empty images).
+    pub fn mean(&self) -> f64 {
+        if self.pixels() == 0 {
+            return 0.0;
+        }
+        let sum: u64 = (0..self.height)
+            .flat_map(|y| self.row(y).iter().map(|v| v.to_u64()))
+            .sum();
+        sum as f64 / self.pixels() as f64
+    }
+}
+
+impl Image<u8> {
+    /// Borrow pixels as raw bytes (requires compact stride).
+    pub fn as_bytes(&self) -> &[u8] {
+        assert_eq!(
+            self.stride, self.width,
+            "as_bytes requires a compact image; call .compact() first"
+        );
+        &self.data
+    }
+
+    /// Build from raw bytes, row-major.
+    pub fn from_bytes(height: usize, width: usize, bytes: &[u8]) -> Self {
+        Self::from_vec(height, width, bytes.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filled_and_get_set() {
+        let mut img = Image::<u8>::filled(3, 4, 7);
+        assert_eq!(img.height(), 3);
+        assert_eq!(img.width(), 4);
+        assert_eq!(img.get(2, 3), 7);
+        img.set(1, 2, 200);
+        assert_eq!(img.get(1, 2), 200);
+        assert_eq!(img.pixels(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "from_vec")]
+    fn from_vec_wrong_len_panics() {
+        let _ = Image::<u8>::from_vec(2, 2, vec![0; 5]);
+    }
+
+    #[test]
+    fn stride_round_trip() {
+        let img = Image::from_fn(5, 7, |y, x| (y * 10 + x) as u8);
+        let padded = img.with_stride(16, 0xFF);
+        assert_eq!(padded.stride(), 16);
+        assert!(padded.same_pixels(&img));
+        assert_eq!(padded.row_padded(0)[7], 0xFF);
+        let back = padded.compact();
+        assert_eq!(back, img);
+        assert_eq!(back.to_vec(), img.to_vec());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let img = Image::from_fn(4, 9, |y, x| (y * 16 + x) as u8);
+        let t = img.transposed();
+        assert_eq!(t.height(), 9);
+        assert_eq!(t.width(), 4);
+        assert_eq!(t.get(3, 2), img.get(2, 3));
+        assert!(t.transposed().same_pixels(&img));
+    }
+
+    #[test]
+    fn min_max_mean() {
+        let img = Image::from_vec(2, 2, vec![1u8, 2, 3, 10]);
+        assert_eq!(img.min_max(), Some((1, 10)));
+        assert!((img.mean() - 4.0).abs() < 1e-12);
+        let empty = Image::<u8>::zeros(0, 0);
+        assert_eq!(empty.min_max(), None);
+        assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn first_diff_finds_mismatch() {
+        let a = Image::from_vec(2, 2, vec![1u8, 2, 3, 4]);
+        let mut b = a.clone();
+        assert_eq!(a.first_diff(&b), None);
+        b.set(1, 0, 9);
+        assert_eq!(a.first_diff(&b), Some((1, 0, 3, 9)));
+    }
+
+    #[test]
+    fn u16_pixels_work() {
+        let img = Image::<u16>::from_fn(3, 3, |y, x| (y * 1000 + x) as u16);
+        assert_eq!(img.get(2, 2), 2002);
+        assert_eq!(u16::MAX_VALUE, 65535);
+    }
+}

@@ -1,0 +1,123 @@
+//! Minimal PGM (P5 binary / P2 ascii) reader and writer.
+//!
+//! The paper's workload is an 8-bit gray image; PGM is the simplest
+//! interchange that real tools (ImageMagick, OpenCV, GIMP) all read, so
+//! the examples can consume and emit actual files.
+
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use super::Image;
+
+/// Write `img` as binary PGM (P5, maxval 255).
+pub fn write_pgm(img: &Image<u8>, path: impl AsRef<Path>) -> io::Result<()> {
+    let mut f = fs::File::create(path)?;
+    write!(f, "P5\n{} {}\n255\n", img.width(), img.height())?;
+    for y in 0..img.height() {
+        f.write_all(img.row(y))?;
+    }
+    Ok(())
+}
+
+/// Read a PGM file (P5 binary or P2 ascii, maxval <= 255).
+pub fn read_pgm(path: impl AsRef<Path>) -> io::Result<Image<u8>> {
+    let mut bytes = Vec::new();
+    fs::File::open(path)?.read_to_end(&mut bytes)?;
+    parse_pgm(&bytes)
+}
+
+/// Parse PGM from a byte buffer.
+pub fn parse_pgm(bytes: &[u8]) -> io::Result<Image<u8>> {
+    let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg.to_string());
+    let mut pos = 0usize;
+
+    // token reader skipping whitespace and '#' comments
+    let next_token = |pos: &mut usize| -> io::Result<String> {
+        loop {
+            while *pos < bytes.len() && bytes[*pos].is_ascii_whitespace() {
+                *pos += 1;
+            }
+            if *pos < bytes.len() && bytes[*pos] == b'#' {
+                while *pos < bytes.len() && bytes[*pos] != b'\n' {
+                    *pos += 1;
+                }
+                continue;
+            }
+            break;
+        }
+        let start = *pos;
+        while *pos < bytes.len() && !bytes[*pos].is_ascii_whitespace() {
+            *pos += 1;
+        }
+        if start == *pos {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "pgm: eof"));
+        }
+        Ok(String::from_utf8_lossy(&bytes[start..*pos]).into_owned())
+    };
+
+    let magic = next_token(&mut pos)?;
+    if magic != "P5" && magic != "P2" {
+        return Err(bad(&format!("pgm: unsupported magic {magic:?}")));
+    }
+    let width: usize = next_token(&mut pos)?.parse().map_err(|_| bad("pgm: bad width"))?;
+    let height: usize = next_token(&mut pos)?.parse().map_err(|_| bad("pgm: bad height"))?;
+    let maxval: usize = next_token(&mut pos)?.parse().map_err(|_| bad("pgm: bad maxval"))?;
+    if maxval == 0 || maxval > 255 {
+        return Err(bad(&format!("pgm: unsupported maxval {maxval}")));
+    }
+
+    let n = width * height;
+    let data = if magic == "P5" {
+        // single whitespace after maxval, then raw bytes
+        pos += 1;
+        if bytes.len() < pos + n {
+            return Err(bad("pgm: truncated raster"));
+        }
+        bytes[pos..pos + n].to_vec()
+    } else {
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v: usize = next_token(&mut pos)?.parse().map_err(|_| bad("pgm: bad pixel"))?;
+            if v > maxval {
+                return Err(bad("pgm: pixel > maxval"));
+            }
+            data.push(v as u8);
+        }
+        data
+    };
+    Ok(Image::from_vec(height, width, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p5_round_trip() {
+        let img = Image::from_fn(13, 29, |y, x| (y * 31 + x * 7) as u8);
+        let dir = std::env::temp_dir().join("neon_morph_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.pgm");
+        write_pgm(&img, &path).unwrap();
+        let back = read_pgm(&path).unwrap();
+        assert!(back.same_pixels(&img));
+    }
+
+    #[test]
+    fn p2_ascii_with_comments() {
+        let txt = b"P2\n# comment line\n3 2\n255\n0 1 2\n250 251 252\n";
+        let img = parse_pgm(txt).unwrap();
+        assert_eq!(img.height(), 2);
+        assert_eq!(img.width(), 3);
+        assert_eq!(img.get(0, 2), 2);
+        assert_eq!(img.get(1, 0), 250);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_pgm(b"P6\n1 1\n255\nx").is_err());
+        assert!(parse_pgm(b"P5\n4 4\n255\nxy").is_err()); // truncated
+        assert!(parse_pgm(b"P2\n1 1\n70000\n0").is_err()); // 16-bit maxval
+    }
+}

@@ -1,0 +1,184 @@
+//! Synthetic workload generators.
+//!
+//! The paper benchmarks on a real 800×600 gray photograph.  Min/max
+//! filters are data-independent in running time, so any image of the same
+//! dimensions and dtype reproduces the timing behaviour; these generators
+//! also produce *structured* content (document page, shapes) so the
+//! examples demonstrate visually meaningful morphology, and noise images
+//! so tests exercise arbitrary data.
+
+use super::Image;
+
+/// Paper workload dimensions: "gray image of width of 800 pixels and
+/// height of 600 pixels with 8-bit unsigned integer data".
+pub const PAPER_WIDTH: usize = 800;
+pub const PAPER_HEIGHT: usize = 600;
+
+/// Deterministic xorshift64* PRNG — no external deps, stable across
+/// platforms so tests and benches are reproducible.
+#[derive(Clone, Debug)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    #[inline]
+    pub fn next_u8(&mut self) -> u8 {
+        (self.next_u64() >> 56) as u8
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+/// Uniform random noise image — the default test/bench workload.
+pub fn noise(height: usize, width: usize, seed: u64) -> Image<u8> {
+    let mut rng = Rng::new(seed);
+    Image::from_fn(height, width, |_, _| rng.next_u8())
+}
+
+/// The paper's workload shape filled with noise.
+pub fn paper_image(seed: u64) -> Image<u8> {
+    noise(PAPER_HEIGHT, PAPER_WIDTH, seed)
+}
+
+/// Smooth diagonal gradient (useful for eyeballing pass direction bugs).
+pub fn gradient(height: usize, width: usize) -> Image<u8> {
+    Image::from_fn(height, width, |y, x| {
+        let h = (height.max(2) - 1) as f64;
+        let w = (width.max(2) - 1) as f64;
+        (255.0 * (y as f64 / h + x as f64 / w) / 2.0) as u8
+    })
+}
+
+/// Checkerboard with `cell`-pixel squares (black 0 / white 255).
+pub fn checkerboard(height: usize, width: usize, cell: usize) -> Image<u8> {
+    let cell = cell.max(1);
+    Image::from_fn(height, width, |y, x| {
+        if ((y / cell) + (x / cell)) % 2 == 0 {
+            0
+        } else {
+            255
+        }
+    })
+}
+
+/// A document-like page: white background, dark horizontal "text line"
+/// strokes with varying lengths plus salt noise — the recognition-system
+/// workload the paper's introduction motivates (morphology is used there
+/// to clean/extract text structure).
+pub fn document(height: usize, width: usize, seed: u64) -> Image<u8> {
+    let mut img = Image::filled(height, width, 245u8);
+    let mut rng = Rng::new(seed);
+    let line_height = 8usize;
+    let line_gap = 6usize;
+    let mut y = line_gap;
+    while y + line_height < height {
+        // words of random length separated by spaces
+        let mut x = 4 + rng.below(12);
+        while x + 6 < width {
+            let word = 12 + rng.below(40);
+            let end = (x + word).min(width - 2);
+            for yy in y..y + line_height {
+                for xx in x..end {
+                    // glyph texture: mostly dark with internal variation
+                    let v = 20 + (rng.next_u8() % 60);
+                    img.set(yy, xx, v);
+                }
+            }
+            x = end + 4 + rng.below(10);
+        }
+        y += line_height + line_gap;
+    }
+    // salt noise: isolated bright/dark specks that opening/closing remove
+    for _ in 0..(height * width / 400) {
+        let yy = rng.below(height);
+        let xx = rng.below(width);
+        img.set(yy, xx, if rng.next_u8() & 1 == 0 { 0 } else { 255 });
+    }
+    img
+}
+
+/// Sparse impulse image: identity background with `count` random spikes —
+/// the adversarial case for running-min correctness (every spike must
+/// propagate to exactly the window footprint).
+pub fn impulses(height: usize, width: usize, count: usize, seed: u64) -> Image<u8> {
+    let mut img = Image::filled(height, width, 128u8);
+    let mut rng = Rng::new(seed);
+    for _ in 0..count {
+        let y = rng.below(height.max(1));
+        let x = rng.below(width.max(1));
+        img.set(y, x, if rng.next_u8() & 1 == 0 { 0 } else { 255 });
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noise_is_deterministic() {
+        let a = noise(32, 32, 42);
+        let b = noise(32, 32, 42);
+        let c = noise(32, 32, 43);
+        assert!(a.same_pixels(&b));
+        assert!(!a.same_pixels(&c));
+    }
+
+    #[test]
+    fn paper_image_dims() {
+        let img = paper_image(1);
+        assert_eq!(img.height(), 600);
+        assert_eq!(img.width(), 800);
+    }
+
+    #[test]
+    fn gradient_monotone_on_diagonal() {
+        let g = gradient(64, 64);
+        assert!(g.get(0, 0) <= g.get(32, 32));
+        assert!(g.get(32, 32) <= g.get(63, 63));
+    }
+
+    #[test]
+    fn checkerboard_alternates() {
+        let c = checkerboard(8, 8, 2);
+        assert_eq!(c.get(0, 0), 0);
+        assert_eq!(c.get(0, 2), 255);
+        assert_eq!(c.get(2, 0), 255);
+        assert_eq!(c.get(2, 2), 0);
+    }
+
+    #[test]
+    fn document_has_text_and_background() {
+        let d = document(120, 200, 7);
+        let (mn, mx) = d.min_max().unwrap();
+        assert!(mn < 64, "expected dark strokes, min={mn}");
+        assert!(mx > 200, "expected light background, max={mx}");
+    }
+
+    #[test]
+    fn impulses_change_exactly_some_pixels() {
+        let img = impulses(50, 50, 20, 3);
+        let changed = (0..50)
+            .flat_map(|y| (0..50).map(move |x| (y, x)))
+            .filter(|&(y, x)| img.get(y, x) != 128)
+            .count();
+        assert!(changed > 0 && changed <= 20);
+    }
+}

@@ -1,0 +1,51 @@
+//! # neon-morph
+//!
+//! Production reproduction of *“Fast Implementation of Morphological
+//! Filtering Using ARM NEON Extension”* (Limonova, Terekhin, Nikolaev,
+//! Arlazarov — CS.DC 2020) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper speeds up erosion/dilation with rectangular structuring
+//! elements by (1) exploiting separability into 1-D passes, (2) choosing
+//! per pass between the van Herk/Gil-Werman algorithm (O(1) comparisons
+//! per pixel) and a *linear* algorithm (O(w) comparisons but perfectly
+//! SIMD-parallel), with a measured crossover (w_y⁰ = 69, w_x⁰ = 59 on
+//! Exynos 5422), and (3) fast SIMD matrix transpose (8×8.16 / 16×16.8
+//! vtrn networks) so the vertical pass can reuse the horizontal code.
+//!
+//! Crate layout (see `DESIGN.md` for the full inventory):
+//!
+//! * [`image`] — stride-aware `u8`/`u16` image containers, PGM I/O,
+//!   synthetic workload generators (the paper's 800×600 gray input).
+//! * [`neon`] — an ARM NEON *simulator*: 128-bit register types plus the
+//!   instruction subset the paper uses, behind a [`neon::Backend`] trait
+//!   with a fast native implementation and a counting implementation
+//!   that records the exact instruction mix (the substituted hardware
+//!   substrate — we have no Exynos 5422; see DESIGN.md §Substitutions).
+//! * [`costmodel`] — per-instruction-class latencies (Cortex-A15-like)
+//!   that price an instruction mix in nanoseconds, reproducing the
+//!   paper's Table 1 / Fig 3 / Fig 4 scales and crossovers.
+//! * [`transpose`] — scalar, cache-blocked and NEON 8×8.16 / 16×16.8
+//!   tile transposes (§4), plus whole-image tiled transpose.
+//! * [`morphology`] — the paper's algorithm suite: naive 2-D baseline,
+//!   vHGW and linear 1-D passes (scalar + SIMD), separable composition,
+//!   the §5.3 hybrid dispatch, and derived operations.
+//! * [`runtime`] — PJRT bridge executing the AOT-lowered JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) from Rust; python is never on the
+//!   request path.
+//! * [`coordinator`] — the serving layer: router, dynamic batcher,
+//!   worker pool, backpressure and metrics.
+//! * [`bench_harness`] — sweep drivers that regenerate every table and
+//!   figure of the paper's evaluation (Table 1, Fig 3, Fig 4).
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod costmodel;
+pub mod image;
+pub mod morphology;
+pub mod neon;
+pub mod runtime;
+pub mod util;
+pub mod transpose;
+
+pub use image::Image;
+pub use morphology::{Border, MorphOp, PassMethod, VerticalStrategy};

@@ -1,0 +1,416 @@
+//! `neon-morph` — CLI for the morphology filtering stack.
+//!
+//! Subcommands:
+//!
+//! * `filter`    — apply one operation to a PGM image (native or XLA).
+//! * `bench`     — regenerate the paper's evaluation artifacts
+//!   (`table1`, `fig3`, `fig4`, `e2e`, or `all`).
+//! * `serve`     — drive the coordinator with a synthetic request load
+//!   and report throughput/latency.
+//! * `calibrate` — re-derive the §5.3 crossover thresholds from the
+//!   instruction mixes + cost model.
+//! * `demo`      — generate a document image, clean it with morphology,
+//!   write before/after PGMs.
+//! * `info`      — artifact manifest + runtime platform summary.
+//!
+//! Argument parsing is hand-rolled (`--key value` pairs) because the
+//! offline build has no clap; see `Args`.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use neon_morph::bench_harness::{self, e2e, fig3, fig4, table1};
+use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use neon_morph::costmodel::CostModel;
+use neon_morph::image::{read_pgm, synth, write_pgm};
+use neon_morph::morphology::{self, hybrid, Border, HybridThresholds, MorphConfig,
+                             PassMethod, VerticalStrategy};
+use neon_morph::neon::Native;
+use neon_morph::runtime::{Manifest, XlaRuntime};
+
+/// Minimal `--key value` / `--flag` argument map.
+struct Args {
+    positional: Vec<String>,
+    named: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut named = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    named.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    named.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    named.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, named })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).map(String::as_str)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.get(key).is_some_and(|v| v != "false")
+    }
+}
+
+const USAGE: &str = "\
+neon-morph — fast separable morphological filtering (Limonova et al., CS.DC 2020)
+
+USAGE:
+    neon-morph <COMMAND> [OPTIONS]
+
+COMMANDS:
+    filter     --input in.pgm --output out.pgm [--op erode] [--wx 5] [--wy 5]
+               [--backend auto|native|xla] [--method hybrid|linear|vhgw]
+               [--vertical direct|transpose] [--border identity|replicate]
+               [--no-simd] [--artifacts DIR]
+    bench      <table1|fig3|fig4|e2e|all> [--quick] [--tsv] [--iters N]
+    serve      [--requests 256] [--workers 4] [--window 7]
+               [--backend native|xla|auto] [--artifacts DIR]
+    calibrate  [--max-window 121]
+    demo       [--outdir /tmp] [--height 600] [--width 800]
+    info       [--artifacts DIR]
+";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "filter" => cmd_filter(&args),
+        "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "demo" => cmd_demo(&args),
+        "info" => cmd_info(&args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn parse_morph_config(args: &Args) -> Result<MorphConfig> {
+    let method = match args.get("method").unwrap_or("hybrid") {
+        "hybrid" => PassMethod::Hybrid,
+        "linear" => PassMethod::Linear,
+        "vhgw" => PassMethod::Vhgw,
+        m => bail!("unknown --method {m:?}"),
+    };
+    let vertical = match args.get("vertical").unwrap_or("direct") {
+        "transpose" => VerticalStrategy::Transpose,
+        "direct" => VerticalStrategy::Direct,
+        v => bail!("unknown --vertical {v:?}"),
+    };
+    let border = match args.get("border").unwrap_or("identity") {
+        "identity" => Border::Identity,
+        "replicate" => Border::Replicate,
+        b => bail!("unknown --border {b:?}"),
+    };
+    Ok(MorphConfig {
+        method,
+        vertical,
+        simd: !args.flag("no-simd"),
+        border,
+        thresholds: HybridThresholds::paper(),
+    })
+}
+
+fn parse_backend(args: &Args) -> Result<BackendChoice> {
+    Ok(match args.get("backend").unwrap_or("auto") {
+        "auto" => BackendChoice::Auto,
+        "native" => BackendChoice::NativeOnly,
+        "xla" => BackendChoice::XlaOnly,
+        b => bail!("unknown --backend {b:?}"),
+    })
+}
+
+fn cmd_filter(args: &Args) -> Result<()> {
+    let input = args.get("input").ok_or_else(|| anyhow!("--input required"))?;
+    let output = args.get("output").ok_or_else(|| anyhow!("--output required"))?;
+    let op = args.get("op").unwrap_or("erode").to_string();
+    let w_x = args.get_usize("wx", 5)?;
+    let w_y = args.get_usize("wy", 5)?;
+    let backend = parse_backend(args)?;
+    let morph = parse_morph_config(args)?;
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+
+    let img = Arc::new(read_pgm(input).with_context(|| format!("reading {input}"))?);
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        backend,
+        artifact_dir: Some(artifacts),
+        morph,
+        ..CoordinatorConfig::default()
+    })?;
+    let resp = coord.filter(&op, w_x, w_y, img)?;
+    let out = resp.result?;
+    write_pgm(&out, output).with_context(|| format!("writing {output}"))?;
+    println!(
+        "{} {}x{} SE={}x{} via {} in {:.2} ms -> {}",
+        op,
+        out.height(),
+        out.width(),
+        w_x,
+        w_y,
+        resp.backend,
+        resp.exec_ns as f64 / 1e6,
+        output
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    if !["table1", "fig3", "fig4", "e2e", "all"].contains(&which) {
+        bail!("unknown bench {which:?} (want table1|fig3|fig4|e2e|all)");
+    }
+    let quick = args.flag("quick");
+    let tsv = args.flag("tsv");
+    let iters = args.get_usize("iters", if quick { 2 } else { 5 })?;
+    let model = CostModel::exynos5422();
+    let windows = if quick {
+        bench_harness::window_sweep_quick()
+    } else {
+        bench_harness::window_sweep()
+    };
+
+    if which == "table1" || which == "all" {
+        let rows = table1::run(&model);
+        print!("{}", table1::render(&rows).to_markdown());
+        println!();
+    }
+    if which == "fig3" || which == "all" {
+        let s = fig3::run(&model, &windows, iters);
+        let t_model = fig3::render(
+            "Figure 3 — horizontal pass erosion, cost model (Exynos 5422, ns)",
+            &s,
+            "model",
+        );
+        let t_host = fig3::render("Figure 3 — horizontal pass erosion, host wall-clock (ns)", &s, "host");
+        if tsv {
+            print!("{}", t_model.to_tsv());
+        } else {
+            print!("{}", t_model.to_markdown());
+            println!();
+            print!("{}", t_host.to_markdown());
+        }
+        println!(
+            "crossover w_y0: model={} host={} (paper: 69)\n",
+            s.crossover_model, s.crossover_host
+        );
+    }
+    if which == "fig4" || which == "all" {
+        let s = fig4::run(&model, &windows, iters);
+        let t_model = fig4::render(
+            "Figure 4 — vertical pass erosion, cost model (Exynos 5422, ns)",
+            &s,
+            "model",
+        );
+        let t_host = fig4::render("Figure 4 — vertical pass erosion, host wall-clock (ns)", &s, "host");
+        if tsv {
+            print!("{}", t_model.to_tsv());
+        } else {
+            print!("{}", t_model.to_markdown());
+            println!();
+            print!("{}", t_host.to_markdown());
+        }
+        println!(
+            "crossover w_x0: model={} host={} (paper: 59)\n",
+            s.crossover_model, s.crossover_host
+        );
+    }
+    if which == "e2e" || which == "all" {
+        let ws = if quick { vec![7, 15] } else { vec![3, 7, 15, 31, 61] };
+        let results = e2e::run(&model, &ws, iters);
+        print!("{}", e2e::render(&results).to_markdown());
+        println!();
+        let s = e2e::serve_native(if quick { 32 } else { 256 }, 4, 7)?;
+        println!(
+            "serving: {} reqs, {} workers -> {:.1} req/s, p50 {:.1} ms, p99 {:.1} ms, mean batch {:.2}",
+            s.requests,
+            s.workers,
+            s.throughput_rps,
+            s.p50_us / 1e3,
+            s.p99_us / 1e3,
+            s.mean_batch
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.get_usize("requests", 256)?;
+    let workers = args.get_usize("workers", 4)?;
+    let window = args.get_usize("window", 7)?;
+    let backend = parse_backend(args)?;
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+
+    if backend == BackendChoice::NativeOnly {
+        let s = e2e::serve_native(requests, workers, window)?;
+        println!(
+            "completed {} requests on {} workers in {:.2}s: {:.1} req/s, \
+             p50 {:.2} ms, p99 {:.2} ms, mean batch {:.2}, shed {}",
+            s.requests, s.workers, s.wall_s, s.throughput_rps,
+            s.p50_us / 1e3, s.p99_us / 1e3, s.mean_batch, s.shed
+        );
+        return Ok(());
+    }
+
+    // XLA/Auto path: serve the artifact shapes
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers,
+        queue_capacity: requests + 8,
+        backend,
+        artifact_dir: Some(artifacts),
+        precompile: true,
+        ..CoordinatorConfig::default()
+    })?;
+    let manifest = coord
+        .manifest()
+        .ok_or_else(|| anyhow!("no artifacts found — run `make artifacts`"))?;
+    let metas: Vec<_> = manifest
+        .ops_for_shape(256, 256)
+        .into_iter()
+        .filter(|m| m.kind == "morphology")
+        .cloned()
+        .collect();
+    if metas.is_empty() {
+        bail!("no 256x256 artifacts in manifest");
+    }
+    let img = Arc::new(synth::noise(256, 256, 1));
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = (0..requests)
+        .map(|i| {
+            let m = &metas[i % metas.len()];
+            coord.submit(&m.op, m.w_x, m.w_y, img.clone())
+        })
+        .collect::<Result<_>>()?;
+    let mut xla_count = 0u64;
+    for t in tickets {
+        let r = t.wait()?;
+        r.result?;
+        if r.backend == "xla-pjrt" {
+            xla_count += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = coord.metrics();
+    println!(
+        "completed {} requests ({} on xla-pjrt) on {} workers in {:.2}s: {:.1} req/s\n{}",
+        snap.completed,
+        xla_count,
+        workers,
+        wall,
+        snap.completed as f64 / wall,
+        snap
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let max_window = args.get_usize("max-window", 121)?;
+    let model = CostModel::exynos5422();
+    let probe = synth::paper_image(7);
+    let t = hybrid::calibrate_thresholds(&model, &probe, max_window);
+    println!(
+        "calibrated crossovers on 800x600 u8 (cost model):\n\
+         w_y0 = {} (paper: {})\n\
+         w_x0 = {} (paper: {})",
+        t.wy0,
+        morphology::PAPER_WY0,
+        t.wx0,
+        morphology::PAPER_WX0
+    );
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> Result<()> {
+    let outdir = PathBuf::from(args.get("outdir").unwrap_or("/tmp"));
+    let h = args.get_usize("height", 600)?;
+    let w = args.get_usize("width", 800)?;
+    std::fs::create_dir_all(&outdir)?;
+
+    let doc = synth::document(h, w, 42);
+    write_pgm(&doc, outdir.join("demo_input.pgm"))?;
+
+    let b = &mut Native;
+    let cfg = MorphConfig::default();
+    let cleaned = morphology::closing(b, &doc, 3, 3, &cfg); // drop salt noise
+    let opened = morphology::opening(b, &cleaned, 3, 3, &cfg); // drop pepper
+    write_pgm(&opened, outdir.join("demo_cleaned.pgm"))?;
+    let grad = morphology::gradient(b, &doc, 3, 3, &cfg);
+    write_pgm(&grad, outdir.join("demo_gradient.pgm"))?;
+    let lines = morphology::erode(&doc, 41, 1);
+    write_pgm(&lines, outdir.join("demo_textlines.pgm"))?;
+
+    println!(
+        "wrote demo_input.pgm, demo_cleaned.pgm, demo_gradient.pgm, demo_textlines.pgm to {}",
+        outdir.display()
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("manifest: {} artifacts in {}", m.len(), dir.display());
+            for name in m.names() {
+                let a = m.get(name).unwrap();
+                println!(
+                    "  {:<28} {}x{} SE {}x{} [{}]",
+                    a.name, a.height, a.width, a.w_x, a.w_y, a.kind
+                );
+            }
+        }
+        Err(e) => println!("no manifest: {e:#}"),
+    }
+    match XlaRuntime::new(&dir) {
+        Ok(rt) => println!("pjrt platform: {}", rt.platform()),
+        Err(e) => println!("pjrt unavailable: {e:#}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,238 @@
+//! Binary morphology — extension on top of the paper's gray-scale
+//! operators.
+//!
+//! Document-recognition pipelines (the paper's motivating domain)
+//! typically binarize before structural analysis.  For 0/255 images,
+//! gray erosion/dilation specialize to set erosion/dilation, so the fast
+//! §5.3 hybrid machinery is reused unchanged; this module adds the
+//! binarization boundary and the common binary compositions.
+
+use super::{morphology, MorphConfig, MorphOp};
+use crate::image::Image;
+use crate::neon::Backend;
+
+/// Foreground value of a binary image (background is 0).
+pub const FG: u8 = 255;
+
+/// Threshold to a binary image: `>= thresh` → foreground.
+pub fn threshold(src: &Image<u8>, thresh: u8) -> Image<u8> {
+    Image::from_fn(src.height(), src.width(), |y, x| {
+        if src.get(y, x) >= thresh {
+            FG
+        } else {
+            0
+        }
+    })
+}
+
+/// Otsu's threshold (maximal between-class variance) — the standard
+/// automatic binarizer for document images.
+pub fn otsu_threshold(src: &Image<u8>) -> u8 {
+    let mut hist = [0u64; 256];
+    for y in 0..src.height() {
+        for &v in src.row(y) {
+            hist[v as usize] += 1;
+        }
+    }
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 128;
+    }
+    let sum_all: f64 = hist.iter().enumerate().map(|(v, &c)| v as f64 * c as f64).sum();
+    let (mut w_bg, mut sum_bg) = (0f64, 0f64);
+    let (mut best_t, mut best_var) = (128u8, -1f64);
+    for t in 0..256 {
+        w_bg += hist[t] as f64;
+        if w_bg == 0.0 {
+            continue;
+        }
+        let w_fg = total as f64 - w_bg;
+        if w_fg == 0.0 {
+            break;
+        }
+        sum_bg += t as f64 * hist[t] as f64;
+        let mean_bg = sum_bg / w_bg;
+        let mean_fg = (sum_all - sum_bg) / w_fg;
+        let var = w_bg * w_fg * (mean_bg - mean_fg) * (mean_bg - mean_fg);
+        if var > best_var {
+            best_var = var;
+            best_t = t as u8;
+        }
+    }
+    best_t.saturating_add(1)
+}
+
+/// True iff every pixel is 0 or [`FG`].
+pub fn is_binary(img: &Image<u8>) -> bool {
+    (0..img.height()).all(|y| img.row(y).iter().all(|&v| v == 0 || v == FG))
+}
+
+/// Binary erosion: foreground survives only where the whole SE fits.
+pub fn erode_binary<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<u8> {
+    debug_assert!(is_binary(src), "erode_binary expects a 0/255 image");
+    morphology(b, src, MorphOp::Erode, w_x, w_y, cfg)
+}
+
+/// Binary dilation: foreground grows by the SE footprint.
+pub fn dilate_binary<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<u8> {
+    debug_assert!(is_binary(src), "dilate_binary expects a 0/255 image");
+    morphology(b, src, MorphOp::Dilate, w_x, w_y, cfg)
+}
+
+/// Remove foreground components thinner than the SE (binary opening).
+pub fn open_binary<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<u8> {
+    let e = erode_binary(b, src, w_x, w_y, cfg);
+    dilate_binary(b, &e, w_x, w_y, cfg)
+}
+
+/// Fill background gaps thinner than the SE (binary closing).
+pub fn close_binary<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<u8> {
+    let d = dilate_binary(b, src, w_x, w_y, cfg);
+    erode_binary(b, &d, w_x, w_y, cfg)
+}
+
+/// Boundary extraction: src − erosion (one-SE-thick outline).
+pub fn boundary<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<u8> {
+    let e = erode_binary(b, src, w_x, w_y, cfg);
+    Image::from_fn(src.height(), src.width(), |y, x| {
+        src.get(y, x).saturating_sub(e.get(y, x))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+    use crate::neon::Native;
+
+    fn cfg() -> MorphConfig {
+        MorphConfig::default()
+    }
+
+    fn square(n: usize, y0: usize, x0: usize, side: usize) -> Image<u8> {
+        Image::from_fn(n, n, |y, x| {
+            if (y0..y0 + side).contains(&y) && (x0..x0 + side).contains(&x) {
+                FG
+            } else {
+                0
+            }
+        })
+    }
+
+    #[test]
+    fn threshold_splits_at_value() {
+        let img = Image::from_vec(1, 4, vec![0u8, 99, 100, 255]);
+        let t = threshold(&img, 100);
+        assert_eq!(t.to_vec(), vec![0, 0, FG, FG]);
+        assert!(is_binary(&t));
+    }
+
+    #[test]
+    fn otsu_separates_bimodal() {
+        // bimodal image: dark text (~30) on light paper (~220)
+        let img = Image::from_fn(40, 40, |y, x| if (y + x) % 5 == 0 { 30 } else { 220 });
+        let t = otsu_threshold(&img);
+        assert!(t > 30 && t <= 220, "otsu threshold {t}");
+        let b = threshold(&img, t);
+        assert!(is_binary(&b));
+        assert_eq!(b.get(0, 0), 0); // dark -> background
+        assert_eq!(b.get(0, 1), FG); // light -> foreground
+    }
+
+    #[test]
+    fn binary_erosion_shrinks_by_wing() {
+        let img = square(20, 5, 5, 8); // 8x8 square
+        let e = erode_binary(&mut Native, &img, 3, 3, &cfg());
+        // 3x3 SE removes a 1-pixel rim: 6x6 survives at (6,6)
+        let want = square(20, 6, 6, 6);
+        assert!(e.same_pixels(&want), "{:?}", e.first_diff(&want));
+    }
+
+    #[test]
+    fn binary_dilation_grows_by_wing() {
+        let img = square(20, 8, 8, 4);
+        let d = dilate_binary(&mut Native, &img, 3, 3, &cfg());
+        let want = square(20, 7, 7, 6);
+        assert!(d.same_pixels(&want));
+    }
+
+    #[test]
+    fn opening_removes_thin_bridge() {
+        // two 5x5 blobs joined by a 1-px bridge; 3x3 opening cuts the bridge
+        let mut img = square(20, 3, 2, 5);
+        let right = square(20, 3, 12, 5);
+        for y in 0..20 {
+            for x in 0..20 {
+                if right.get(y, x) == FG {
+                    img.set(y, x, FG);
+                }
+            }
+        }
+        for x in 7..12 {
+            img.set(5, x, FG); // the bridge
+        }
+        let opened = open_binary(&mut Native, &img, 3, 3, &cfg());
+        assert_eq!(opened.get(5, 9), 0, "bridge must be cut");
+        assert_eq!(opened.get(5, 4), FG, "left blob survives");
+        assert_eq!(opened.get(5, 14), FG, "right blob survives");
+    }
+
+    #[test]
+    fn closing_fills_small_hole() {
+        let mut img = square(20, 4, 4, 10);
+        img.set(8, 8, 0); // pinhole
+        let closed = close_binary(&mut Native, &img, 3, 3, &cfg());
+        assert_eq!(closed.get(8, 8), FG);
+    }
+
+    #[test]
+    fn boundary_is_one_pixel_ring() {
+        let img = square(21, 5, 5, 9);
+        let ring = boundary(&mut Native, &img, 3, 3, &cfg());
+        assert_eq!(ring.get(5, 5), FG); // corner on the ring
+        assert_eq!(ring.get(9, 9), 0); // interior removed
+        assert_eq!(ring.get(0, 0), 0); // background stays empty
+    }
+
+    #[test]
+    fn pipeline_binarize_then_clean_document() {
+        let page = synth::document(120, 160, 9);
+        let t = otsu_threshold(&page);
+        let bin = threshold(&page, t);
+        let cleaned = close_binary(&mut Native, &bin, 3, 3, &cfg());
+        assert!(is_binary(&cleaned));
+        // structure preserved: still has both classes
+        let (mn, mx) = cleaned.min_max().unwrap();
+        assert_eq!((mn, mx), (0, FG));
+    }
+}

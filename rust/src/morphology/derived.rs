@@ -1,0 +1,147 @@
+//! Derived morphological operations (§2: "other morphological
+//! operations, such as opening, closing, morphological gradient, can be
+//! expressed via erosion, dilation and arithmetical operations").
+
+use super::{morphology, MorphConfig, MorphOp};
+use crate::image::Image;
+use crate::neon::Backend;
+
+/// Opening: dilation of the erosion.  Removes bright structures smaller
+/// than the SE.
+pub fn opening<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<u8> {
+    let e = morphology(b, src, MorphOp::Erode, w_x, w_y, cfg);
+    morphology(b, &e, MorphOp::Dilate, w_x, w_y, cfg)
+}
+
+/// Closing: erosion of the dilation.  Removes dark structures smaller
+/// than the SE.
+pub fn closing<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<u8> {
+    let d = morphology(b, src, MorphOp::Dilate, w_x, w_y, cfg);
+    morphology(b, &d, MorphOp::Erode, w_x, w_y, cfg)
+}
+
+/// Morphological gradient: dilation − erosion (edge strength).
+pub fn gradient<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<u8> {
+    let d = morphology(b, src, MorphOp::Dilate, w_x, w_y, cfg);
+    let e = morphology(b, src, MorphOp::Erode, w_x, w_y, cfg);
+    pixelwise_sub(&d, &e)
+}
+
+/// White top-hat: src − opening (bright details smaller than the SE).
+pub fn tophat<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<u8> {
+    let o = opening(b, src, w_x, w_y, cfg);
+    pixelwise_sub(src, &o)
+}
+
+/// Black top-hat: closing − src (dark details smaller than the SE).
+pub fn blackhat<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<u8> {
+    let c = closing(b, src, w_x, w_y, cfg);
+    pixelwise_sub(&c, src)
+}
+
+/// Saturating pixelwise subtraction `a - b` (clamped at 0).
+fn pixelwise_sub(a: &Image<u8>, b: &Image<u8>) -> Image<u8> {
+    assert_eq!(a.height(), b.height());
+    assert_eq!(a.width(), b.width());
+    Image::from_fn(a.height(), a.width(), |y, x| {
+        a.get(y, x).saturating_sub(b.get(y, x))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+    use crate::neon::Native;
+
+    fn cfg() -> MorphConfig {
+        MorphConfig::default()
+    }
+
+    #[test]
+    fn opening_is_antiextensive_closing_extensive() {
+        let img = synth::noise(30, 40, 14);
+        let o = opening(&mut Native, &img, 5, 5, &cfg());
+        let c = closing(&mut Native, &img, 5, 5, &cfg());
+        for y in 0..30 {
+            for x in 0..40 {
+                assert!(o.get(y, x) <= img.get(y, x), "opening must shrink");
+                assert!(c.get(y, x) >= img.get(y, x), "closing must grow");
+            }
+        }
+    }
+
+    #[test]
+    fn opening_closing_idempotent() {
+        let img = synth::document(64, 96, 4);
+        let o1 = opening(&mut Native, &img, 5, 3, &cfg());
+        let o2 = opening(&mut Native, &o1, 5, 3, &cfg());
+        assert!(o1.same_pixels(&o2), "opening idempotence");
+        let c1 = closing(&mut Native, &img, 5, 3, &cfg());
+        let c2 = closing(&mut Native, &c1, 5, 3, &cfg());
+        assert!(c1.same_pixels(&c2), "closing idempotence");
+    }
+
+    #[test]
+    fn gradient_zero_on_flat_image() {
+        let img = crate::image::Image::filled(20, 20, 77u8);
+        let g = gradient(&mut Native, &img, 5, 5, &cfg());
+        assert_eq!(g.min_max(), Some((0, 0)));
+    }
+
+    #[test]
+    fn gradient_positive_at_edges() {
+        let img = synth::checkerboard(32, 32, 8);
+        let g = gradient(&mut Native, &img, 3, 3, &cfg());
+        assert_eq!(g.get(8, 8), 255); // block corner is an edge
+        assert_eq!(g.get(4, 4), 0); // block interior is flat
+    }
+
+    #[test]
+    fn tophat_extracts_small_bright_speck() {
+        let mut img = crate::image::Image::filled(21, 21, 10u8);
+        img.set(10, 10, 200); // speck smaller than SE
+        let t = tophat(&mut Native, &img, 5, 5, &cfg());
+        assert_eq!(t.get(10, 10), 190);
+        assert_eq!(t.get(0, 0), 0);
+    }
+
+    #[test]
+    fn blackhat_extracts_small_dark_speck() {
+        let mut img = crate::image::Image::filled(21, 21, 200u8);
+        img.set(10, 10, 15);
+        let bh = blackhat(&mut Native, &img, 5, 5, &cfg());
+        assert_eq!(bh.get(10, 10), 185);
+        assert_eq!(bh.get(20, 20), 0);
+    }
+}

@@ -1,0 +1,404 @@
+//! The paper's *linear* 1-D passes (§5.1.2 horizontal, §5.2.2 vertical):
+//! O(w) combines per pixel but branch-free and perfectly data-parallel.
+//!
+//! Horizontal (rows-window) pass: the §5.1.2 listing fills **two
+//! adjacent output rows per iteration** — their windows share `w_y - 2`
+//! rows, so the shared reduction is computed once (`w_y` combines for 2
+//! rows ≈ `w_y/2` per row instead of `w_y - 1`).
+//!
+//! Vertical (cols-window) pass: the §5.2.2 listing — for each 16-pixel
+//! chunk the window reduction is an unrolled chain of *offset* vector
+//! loads (`vld1q_u8(src + x - wing + j)`), which are unaligned; this is
+//! the memory asymmetry that makes w_x⁰ < w_y⁰ (§5.3).
+//!
+//! Both passes exist in scalar form (the "without SIMD" baselines) and
+//! NEON form, all four generic over [`Backend`].
+
+use super::{wing_of, MorphOp};
+use crate::image::Image;
+use crate::neon::Backend;
+
+/// Rows-window pass, NEON, two output rows per iteration (§5.1.2).
+pub fn rows_simd_linear<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+) -> Image<u8> {
+    let wing = wing_of(window, "w_y");
+    let (h, w) = (src.height(), src.width());
+    if window == 1 || h == 0 || w == 0 {
+        return src.clone();
+    }
+    let mut dst = Image::zeros(h, w);
+    b.record_stream((h * w) as u64, (h * w) as u64);
+    let w16 = w - w % 16;
+
+    let mut y = 0usize;
+    while y < h {
+        let pair = y + 1 < h; // last row of odd-height images is alone
+        // common rows shared by outputs y and y+1: [y-wing+1, y+wing]
+        let c0 = (y + 1).saturating_sub(wing);
+        let c1 = (y + wing).min(h - 1);
+        // the extreme rows each output owns exclusively
+        let top = if y >= wing { Some(y - wing) } else { None };
+        let bot = if y + wing + 1 < h { Some(y + wing + 1) } else { None };
+
+        let mut x = 0usize;
+        while x < w16 {
+            b.scalar_overhead(2); // chunk loop + address arithmetic
+            let mut val = b.vld1q_u8(&src.row(c0)[x..]);
+            for k in c0 + 1..=c1 {
+                let v = b.vld1q_u8(&src.row(k)[x..]);
+                val = op.simd(b, val, v);
+            }
+            let out0 = match top {
+                Some(t) => {
+                    let v = b.vld1q_u8(&src.row(t)[x..]);
+                    op.simd(b, val, v)
+                }
+                None => val,
+            };
+            b.vst1q_u8(&mut dst.row_mut(y)[x..], out0);
+            if pair {
+                let out1 = match bot {
+                    Some(t) => {
+                        let v = b.vld1q_u8(&src.row(t)[x..]);
+                        op.simd(b, val, v)
+                    }
+                    None => val,
+                };
+                b.vst1q_u8(&mut dst.row_mut(y + 1)[x..], out1);
+            }
+            x += 16;
+        }
+        // right-edge tail: same structure, scalar ("edges processed
+        // separately")
+        for x in w16..w {
+            b.scalar_overhead(2);
+            let mut val = b.scalar_load_u8(src.row(c0), x);
+            for k in c0 + 1..=c1 {
+                let v = b.scalar_load_u8(src.row(k), x);
+                val = op.scalar(b, val, v);
+            }
+            let out0 = match top {
+                Some(t) => {
+                    let v = b.scalar_load_u8(src.row(t), x);
+                    op.scalar(b, val, v)
+                }
+                None => val,
+            };
+            b.scalar_store_u8(dst.row_mut(y), x, out0);
+            if pair {
+                let out1 = match bot {
+                    Some(t) => {
+                        let v = b.scalar_load_u8(src.row(t), x);
+                        op.scalar(b, val, v)
+                    }
+                    None => val,
+                };
+                b.scalar_store_u8(dst.row_mut(y + 1), x, out1);
+            }
+        }
+        y += 2;
+    }
+    dst
+}
+
+/// ABLATION variant: rows-window pass, NEON, one output row at a time —
+/// no shared-reduction trick, `w_y - 1` combines per row instead of
+/// ~`w_y/2 + 1`.  Exists to quantify the §5.1.2 two-row optimization
+/// (see `cargo bench --bench ablations`).
+pub fn rows_simd_linear_single<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+) -> Image<u8> {
+    let wing = wing_of(window, "w_y");
+    let (h, w) = (src.height(), src.width());
+    if window == 1 || h == 0 || w == 0 {
+        return src.clone();
+    }
+    let mut dst = Image::zeros(h, w);
+    b.record_stream((h * w) as u64, (h * w) as u64);
+    let w16 = w - w % 16;
+
+    for y in 0..h {
+        let y0 = y.saturating_sub(wing);
+        let y1 = (y + wing).min(h - 1);
+        let mut x = 0usize;
+        while x < w16 {
+            b.scalar_overhead(2);
+            let mut val = b.vld1q_u8(&src.row(y0)[x..]);
+            for k in y0 + 1..=y1 {
+                let v = b.vld1q_u8(&src.row(k)[x..]);
+                val = op.simd(b, val, v);
+            }
+            b.vst1q_u8(&mut dst.row_mut(y)[x..], val);
+            x += 16;
+        }
+        for x in w16..w {
+            b.scalar_overhead(1);
+            let mut val = b.scalar_load_u8(src.row(y0), x);
+            for k in y0 + 1..=y1 {
+                let v = b.scalar_load_u8(src.row(k), x);
+                val = op.scalar(b, val, v);
+            }
+            b.scalar_store_u8(dst.row_mut(y), x, val);
+        }
+    }
+    dst
+}
+
+/// Rows-window pass, scalar (the "without SIMD" comparator with the same
+/// two-row structure).
+pub fn rows_scalar_linear<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+) -> Image<u8> {
+    let wing = wing_of(window, "w_y");
+    let (h, w) = (src.height(), src.width());
+    if window == 1 || h == 0 || w == 0 {
+        return src.clone();
+    }
+    let mut dst = Image::zeros(h, w);
+    b.record_stream((h * w) as u64, (h * w) as u64);
+
+    let mut y = 0usize;
+    while y < h {
+        let pair = y + 1 < h;
+        let c0 = (y + 1).saturating_sub(wing);
+        let c1 = (y + wing).min(h - 1);
+        let top = if y >= wing { Some(y - wing) } else { None };
+        let bot = if y + wing + 1 < h { Some(y + wing + 1) } else { None };
+        for x in 0..w {
+            b.scalar_overhead(1);
+            let mut val = b.scalar_load_u8(src.row(c0), x);
+            for k in c0 + 1..=c1 {
+                b.scalar_overhead(1);
+                let v = b.scalar_load_u8(src.row(k), x);
+                val = op.scalar(b, val, v);
+            }
+            let out0 = match top {
+                Some(t) => {
+                    let v = b.scalar_load_u8(src.row(t), x);
+                    op.scalar(b, val, v)
+                }
+                None => val,
+            };
+            b.scalar_store_u8(dst.row_mut(y), x, out0);
+            if pair {
+                let out1 = match bot {
+                    Some(t) => {
+                        let v = b.scalar_load_u8(src.row(t), x);
+                        op.scalar(b, val, v)
+                    }
+                    None => val,
+                };
+                b.scalar_store_u8(dst.row_mut(y + 1), x, out1);
+            }
+        }
+        y += 2;
+    }
+    dst
+}
+
+/// Cols-window pass, NEON, direct strategy with offset loads (§5.2.2).
+///
+/// Each source row is staged once into an identity-padded row buffer
+/// (cache-resident, reused across rows) so the unrolled offset loads
+/// never leave the buffer; all window loads are unaligned, matching the
+/// `vld1q_u8(src + x - wing + j)` pattern of the listing.
+pub fn cols_simd_linear<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+) -> Image<u8> {
+    let wing = wing_of(window, "w_x");
+    let (h, w) = (src.height(), src.width());
+    if window == 1 || h == 0 || w == 0 {
+        return src.clone();
+    }
+    let mut dst = Image::zeros(h, w);
+    b.record_stream((h * w) as u64, (h * w) as u64);
+    let w16 = w - w % 16;
+    // padded row buffer: buf[j] = src[y][j - wing], identity outside
+    let mut buf = vec![op.identity(); w + 2 * wing + 16];
+
+    for y in 0..h {
+        buf[..wing].fill(op.identity());
+        buf[wing..wing + w].copy_from_slice(src.row(y));
+        buf[wing + w..].fill(op.identity());
+        b.record_bytes(w as u64, w as u64); // cache-resident staging copy
+
+        let mut x = 0usize;
+        while x < w16 {
+            b.scalar_overhead(2);
+            // window for output x covers src columns [x-wing, x+wing]
+            // = buf[x .. x+window)
+            let mut val = b.vld1q_u8_unaligned(&buf[x..]);
+            for j in 1..window {
+                let v = b.vld1q_u8_unaligned(&buf[x + j..]);
+                val = op.simd(b, val, v);
+            }
+            b.vst1q_u8(&mut dst.row_mut(y)[x..], val);
+            x += 16;
+        }
+        for x in w16..w {
+            b.scalar_overhead(1);
+            let mut val = b.scalar_load_u8(&buf, x);
+            for j in 1..window {
+                let v = b.scalar_load_u8(&buf, x + j);
+                val = op.scalar(b, val, v);
+            }
+            b.scalar_store_u8(dst.row_mut(y), x, val);
+        }
+    }
+    dst
+}
+
+/// Cols-window pass, scalar.
+pub fn cols_scalar_linear<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+) -> Image<u8> {
+    let wing = wing_of(window, "w_x");
+    let (h, w) = (src.height(), src.width());
+    if window == 1 || h == 0 || w == 0 {
+        return src.clone();
+    }
+    let mut dst = Image::zeros(h, w);
+    b.record_stream((h * w) as u64, (h * w) as u64);
+
+    for y in 0..h {
+        let row = src.row(y);
+        for x in 0..w {
+            b.scalar_overhead(1);
+            let x0 = x.saturating_sub(wing);
+            let x1 = (x + wing).min(w - 1);
+            let mut val = b.scalar_load_u8(row, x0);
+            for j in x0 + 1..=x1 {
+                b.scalar_overhead(1);
+                let v = b.scalar_load_u8(row, j);
+                val = op.scalar(b, val, v);
+            }
+            b.scalar_store_u8(dst.row_mut(y), x, val);
+        }
+    }
+    dst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+    use crate::morphology::naive;
+    use crate::neon::{Counting, InstrClass, Native};
+
+    fn check_rows(h: usize, w: usize, window: usize, op: MorphOp, seed: u64) {
+        let img = synth::noise(h, w, seed);
+        let want = naive::rows_naive(&mut Native, &img, window, op);
+        let simd = rows_simd_linear(&mut Native, &img, window, op);
+        let scal = rows_scalar_linear(&mut Native, &img, window, op);
+        assert!(
+            simd.same_pixels(&want),
+            "rows simd {h}x{w} w={window} {op:?}: {:?}",
+            simd.first_diff(&want)
+        );
+        assert!(
+            scal.same_pixels(&want),
+            "rows scalar {h}x{w} w={window} {op:?}: {:?}",
+            scal.first_diff(&want)
+        );
+    }
+
+    fn check_cols(h: usize, w: usize, window: usize, op: MorphOp, seed: u64) {
+        let img = synth::noise(h, w, seed);
+        let want = naive::cols_naive(&mut Native, &img, window, op);
+        let simd = cols_simd_linear(&mut Native, &img, window, op);
+        let scal = cols_scalar_linear(&mut Native, &img, window, op);
+        assert!(
+            simd.same_pixels(&want),
+            "cols simd {h}x{w} w={window} {op:?}: {:?}",
+            simd.first_diff(&want)
+        );
+        assert!(
+            scal.same_pixels(&want),
+            "cols scalar {h}x{w} w={window} {op:?}: {:?}",
+            scal.first_diff(&want)
+        );
+    }
+
+    #[test]
+    fn rows_matches_naive_across_windows() {
+        for &window in &[1, 3, 5, 9, 15, 31] {
+            check_rows(23, 37, window, MorphOp::Erode, 1);
+            check_rows(23, 37, window, MorphOp::Dilate, 2);
+        }
+    }
+
+    #[test]
+    fn cols_matches_naive_across_windows() {
+        for &window in &[1, 3, 5, 9, 15, 31] {
+            check_cols(19, 41, window, MorphOp::Erode, 3);
+            check_cols(19, 41, window, MorphOp::Dilate, 4);
+        }
+    }
+
+    #[test]
+    fn window_larger_than_image() {
+        check_rows(5, 20, 13, MorphOp::Erode, 5);
+        check_cols(20, 5, 13, MorphOp::Dilate, 6);
+    }
+
+    #[test]
+    fn simd_aligned_widths_and_tails() {
+        for &w in &[16, 32, 48, 17, 31, 15, 1] {
+            check_rows(8, w, 5, MorphOp::Erode, w as u64);
+            check_cols(8, w, 5, MorphOp::Erode, w as u64 + 100);
+        }
+    }
+
+    #[test]
+    fn odd_and_even_heights() {
+        // the two-row trick must handle the odd last row
+        for &h in &[1, 2, 3, 7, 8] {
+            check_rows(h, 20, 3, MorphOp::Erode, h as u64);
+        }
+    }
+
+    #[test]
+    fn cols_pass_loads_are_unaligned_class() {
+        let img = synth::noise(4, 32, 11);
+        let mut c = Counting::new();
+        let _ = cols_simd_linear(&mut c, &img, 5, MorphOp::Erode);
+        assert!(c.mix.get(InstrClass::SimdLoadUnaligned) > 0);
+        assert_eq!(c.mix.get(InstrClass::SimdLoad), 0);
+        // rows pass: all aligned
+        let mut c = Counting::new();
+        let _ = rows_simd_linear(&mut c, &img, 5, MorphOp::Erode);
+        assert!(c.mix.get(InstrClass::SimdLoad) > 0);
+        assert_eq!(c.mix.get(InstrClass::SimdLoadUnaligned), 0);
+    }
+
+    #[test]
+    fn two_row_trick_saves_combines() {
+        // per 2 output rows the shared reduction is computed once:
+        // combines ≈ w_y per 2 rows (+2 edge combines), vs 2(w_y-1) naive
+        let img = synth::noise(64, 64, 12);
+        let mut c = Counting::new();
+        let _ = rows_simd_linear(&mut c, &img, 15, MorphOp::Erode);
+        let per_chunk =
+            c.mix.get(InstrClass::SimdMinMax) as f64 / (64.0 / 2.0 * 64.0 / 16.0);
+        assert!(
+            per_chunk < 16.5,
+            "expected ~w_y+1 combines per 2-row chunk, got {per_chunk}"
+        );
+    }
+}

@@ -1,0 +1,249 @@
+//! Morphological filtering (paper §2, §5): erosion / dilation with
+//! rectangular structuring elements, separable implementation.
+//!
+//! Algorithm inventory (all generic over [`crate::neon::Backend`], so
+//! the same code runs at native speed or with instruction accounting):
+//!
+//! | pass | algorithm | SIMD | module | paper |
+//! |------|-----------|------|--------|-------|
+//! | rows (horizontal, SE `1×w_y`) | linear | scalar + NEON | [`linear`] | §5.1.2 |
+//! | rows | vHGW | scalar + NEON | [`vhgw`] | §5.1.1 |
+//! | cols (vertical, SE `w_x×1`) | linear (direct, unaligned) | scalar + NEON | [`linear`] | §5.2.2 |
+//! | cols | vHGW direct | scalar | [`vhgw`] | §5.2 baseline (no SIMD) |
+//! | cols | transpose ∘ rows-vHGW ∘ transpose | NEON | [`separable`] | §5.2.1 |
+//! | 2-D | naive sliding window | scalar | [`naive`] | §2 definition |
+//! | 2-D | separable composition + hybrid dispatch | both | [`separable`], [`hybrid`] | §5.3 |
+//!
+//! Conventions (identical to `python/compile/kernels/ref.py` and the HLO
+//! artifacts): images are `[row, col]`, the SE is `w_x` columns × `w_y`
+//! rows with odd sides and centered anchor, out-of-image samples take
+//! the reduction identity (min → 255, max → 0), output size == input
+//! size.
+
+pub mod binary;
+pub mod derived;
+pub mod hybrid;
+pub mod linear;
+pub mod naive;
+pub mod separable;
+pub mod vhgw;
+
+use crate::image::Image;
+use crate::neon::Backend;
+
+pub use derived::{blackhat, closing, gradient, opening, tophat};
+pub use hybrid::{HybridThresholds, PAPER_WX0, PAPER_WY0};
+pub use separable::{dilate, erode, morphology};
+
+/// Which reduction a pass performs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MorphOp {
+    /// Windowed minimum.
+    Erode,
+    /// Windowed maximum.
+    Dilate,
+}
+
+impl MorphOp {
+    /// The reduction identity — the padding value for out-of-image taps.
+    #[inline(always)]
+    pub fn identity(self) -> u8 {
+        match self {
+            MorphOp::Erode => u8::MAX,
+            MorphOp::Dilate => u8::MIN,
+        }
+    }
+
+    /// Scalar combine (accounted through the backend).
+    #[inline(always)]
+    pub fn scalar<B: Backend>(self, b: &mut B, x: u8, y: u8) -> u8 {
+        match self {
+            MorphOp::Erode => b.scalar_min_u8(x, y),
+            MorphOp::Dilate => b.scalar_max_u8(x, y),
+        }
+    }
+
+    /// Vector combine (accounted through the backend).
+    #[inline(always)]
+    pub fn simd<B: Backend>(
+        self,
+        b: &mut B,
+        x: crate::neon::U8x16,
+        y: crate::neon::U8x16,
+    ) -> crate::neon::U8x16 {
+        match self {
+            MorphOp::Erode => b.vminq_u8(x, y),
+            MorphOp::Dilate => b.vmaxq_u8(x, y),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MorphOp::Erode => "erode",
+            MorphOp::Dilate => "dilate",
+        }
+    }
+
+    /// The dual operation (erosion ↔ dilation).
+    pub fn dual(self) -> MorphOp {
+        match self {
+            MorphOp::Erode => MorphOp::Dilate,
+            MorphOp::Dilate => MorphOp::Erode,
+        }
+    }
+}
+
+/// Per-pass algorithm selection (paper §5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PassMethod {
+    /// O(w) combines per pixel, branch-free, SIMD-perfect (§5.1.2/§5.2.2).
+    Linear,
+    /// van Herk/Gil-Werman: O(1) combines per pixel, 2× extra memory
+    /// (§5.1.1).
+    Vhgw,
+    /// §5.3 policy: Linear below the crossover threshold, Vhgw above.
+    Hybrid,
+}
+
+impl PassMethod {
+    pub fn name(self) -> &'static str {
+        match self {
+            PassMethod::Linear => "linear",
+            PassMethod::Vhgw => "vhgw",
+            PassMethod::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// How the vertical (cols-window) pass is realized (paper §5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VerticalStrategy {
+    /// §5.2.1 baseline: transpose → rows pass → transpose, reusing the
+    /// SIMD-friendly horizontal code and the §4 NEON transpose tiles.
+    Transpose,
+    /// §5.2.2: operate in place with offset (unaligned) loads.
+    Direct,
+}
+
+impl VerticalStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            VerticalStrategy::Transpose => "transpose",
+            VerticalStrategy::Direct => "direct",
+        }
+    }
+}
+
+/// Border handling.  The whole stack's canonical semantics is
+/// [`Border::Identity`]; [`Border::Replicate`] is provided as an
+/// extension (implemented by pre-padding with replicated edges).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Border {
+    /// Out-of-image taps contribute the reduction identity (255 for
+    /// erode, 0 for dilate) — reduction over the window∩image.
+    Identity,
+    /// Out-of-image taps replicate the nearest edge pixel.
+    Replicate,
+}
+
+/// Full configuration of a separable morphology invocation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MorphConfig {
+    pub method: PassMethod,
+    pub vertical: VerticalStrategy,
+    /// Use the SIMD implementations (false = the paper's "without SIMD"
+    /// baselines).
+    pub simd: bool,
+    pub border: Border,
+    /// Crossover thresholds used when `method == Hybrid`.
+    pub thresholds: HybridThresholds,
+}
+
+impl Default for MorphConfig {
+    /// The paper's §5.3 "final fast morphology implementation": hybrid
+    /// dispatch; the vertical pass resolves to the *direct* §5.2.2 form
+    /// for linear windows (below the crossover) and to the §5.2.1
+    /// transpose sandwich for vHGW windows (above it) — vHGW always
+    /// sandwiches regardless of this setting.  `Direct` measured
+    /// 1.7-3.5x faster end-to-end than forcing the sandwich for linear
+    /// too (EXPERIMENTS.md §Perf, iteration 1).
+    fn default() -> Self {
+        MorphConfig {
+            method: PassMethod::Hybrid,
+            vertical: VerticalStrategy::Direct,
+            simd: true,
+            border: Border::Identity,
+            thresholds: HybridThresholds::paper(),
+        }
+    }
+}
+
+/// Validate an odd window size, returning its wing.
+pub(crate) fn wing_of(window: usize, what: &str) -> usize {
+    assert!(
+        window >= 1 && window % 2 == 1,
+        "{what} window must be odd and >= 1, got {window}"
+    );
+    window / 2
+}
+
+/// Pre-pad an image by (wing_x, wing_y) replicated edges — the
+/// [`Border::Replicate`] lowering.  The result is filtered with identity
+/// borders and cropped back by the caller.
+pub(crate) fn replicate_pad(img: &Image<u8>, wing_x: usize, wing_y: usize) -> Image<u8> {
+    let (h, w) = (img.height(), img.width());
+    if h == 0 || w == 0 {
+        return img.clone();
+    }
+    Image::from_fn(h + 2 * wing_y, w + 2 * wing_x, |y, x| {
+        let sy = y.saturating_sub(wing_y).min(h - 1);
+        let sx = x.saturating_sub(wing_x).min(w - 1);
+        img.get(sy, sx)
+    })
+}
+
+/// Crop the center `h × w` region starting at (wing_y, wing_x).
+pub(crate) fn crop(img: &Image<u8>, wing_y: usize, wing_x: usize, h: usize, w: usize) -> Image<u8> {
+    Image::from_fn(h, w, |y, x| img.get(y + wing_y, x + wing_x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_values() {
+        assert_eq!(MorphOp::Erode.identity(), 255);
+        assert_eq!(MorphOp::Dilate.identity(), 0);
+        assert_eq!(MorphOp::Erode.dual(), MorphOp::Dilate);
+    }
+
+    #[test]
+    #[should_panic(expected = "window must be odd")]
+    fn even_window_rejected() {
+        wing_of(4, "test");
+    }
+
+    #[test]
+    fn replicate_pad_and_crop_round_trip() {
+        let img = Image::from_fn(3, 4, |y, x| (10 * y + x) as u8);
+        let p = replicate_pad(&img, 2, 1);
+        assert_eq!(p.height(), 5);
+        assert_eq!(p.width(), 8);
+        assert_eq!(p.get(0, 0), img.get(0, 0)); // corner replication
+        assert_eq!(p.get(0, 7), img.get(0, 3));
+        assert_eq!(p.get(4, 0), img.get(2, 0));
+        let c = crop(&p, 1, 2, 3, 4);
+        assert!(c.same_pixels(&img));
+    }
+
+    #[test]
+    fn default_config_is_paper_final() {
+        let c = MorphConfig::default();
+        assert_eq!(c.method, PassMethod::Hybrid);
+        assert_eq!(c.vertical, VerticalStrategy::Direct);
+        assert!(c.simd);
+        assert_eq!(c.thresholds.wy0, PAPER_WY0);
+        assert_eq!(c.thresholds.wx0, PAPER_WX0);
+    }
+}

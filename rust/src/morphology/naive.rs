@@ -1,0 +1,128 @@
+//! Naive 2-D sliding-window erosion/dilation — the §2 definition,
+//! computed directly.  O(w_x·w_y) per pixel; exists as the correctness
+//! oracle every fast implementation is tested against, and as the
+//! "non-separable" comparator proving the separability claim.
+
+use super::{wing_of, MorphOp};
+use crate::image::Image;
+use crate::neon::Backend;
+
+/// Direct 2-D windowed reduction with identity borders.
+pub fn morph2d_naive<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    w_x: usize,
+    w_y: usize,
+    op: MorphOp,
+) -> Image<u8> {
+    let wing_x = wing_of(w_x, "w_x");
+    let wing_y = wing_of(w_y, "w_y");
+    let (h, w) = (src.height(), src.width());
+    let mut dst = Image::zeros(h, w);
+    b.record_stream((h * w) as u64, (h * w) as u64);
+    for y in 0..h {
+        let y0 = y.saturating_sub(wing_y);
+        let y1 = (y + wing_y).min(h.saturating_sub(1));
+        for x in 0..w {
+            let x0 = x.saturating_sub(wing_x);
+            let x1 = (x + wing_x).min(w.saturating_sub(1));
+            let mut acc = op.identity();
+            for yy in y0..=y1 {
+                let row = src.row(yy);
+                for xx in x0..=x1 {
+                    let v = b.scalar_load_u8(row, xx);
+                    acc = op.scalar(b, acc, v);
+                }
+            }
+            b.scalar_store_u8(dst.row_mut(y), x, acc);
+        }
+    }
+    dst
+}
+
+/// Naive 1-D reduction over a window of ROWS (oracle for the fast rows
+/// passes).
+pub fn rows_naive<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+) -> Image<u8> {
+    morph2d_naive(b, src, 1, window, op)
+}
+
+/// Naive 1-D reduction over a window of COLUMNS (oracle for the fast
+/// cols passes).
+pub fn cols_naive<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+) -> Image<u8> {
+    morph2d_naive(b, src, window, 1, op)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+    use crate::neon::Native;
+
+    #[test]
+    fn erosion_of_impulse_is_window_footprint() {
+        // A single dark pixel must erode to exactly a w_x × w_y block.
+        let mut img = Image::filled(11, 11, 200u8);
+        img.set(5, 5, 10);
+        let out = morph2d_naive(&mut Native, &img, 3, 5, MorphOp::Erode);
+        for y in 0..11 {
+            for x in 0..11 {
+                let inside = (3..=7).contains(&y) && (4..=6).contains(&x);
+                assert_eq!(out.get(y, x), if inside { 10 } else { 200 }, "at ({y},{x})");
+            }
+        }
+    }
+
+    #[test]
+    fn dilation_of_impulse_is_window_footprint() {
+        let mut img = Image::filled(9, 9, 50u8);
+        img.set(4, 4, 250);
+        let out = morph2d_naive(&mut Native, &img, 5, 3, MorphOp::Dilate);
+        for y in 0..9 {
+            for x in 0..9 {
+                let inside = (3..=5).contains(&y) && (2..=6).contains(&x);
+                assert_eq!(out.get(y, x), if inside { 250 } else { 50 });
+            }
+        }
+    }
+
+    #[test]
+    fn window_one_is_identity() {
+        let img = synth::noise(13, 17, 5);
+        let out = morph2d_naive(&mut Native, &img, 1, 1, MorphOp::Erode);
+        assert!(out.same_pixels(&img));
+    }
+
+    #[test]
+    fn borders_use_identity_not_wraparound() {
+        // all-dark image: erosion must stay dark at the borders (identity
+        // padding only shrinks the window, it never injects 255 into the
+        // output because min(255, dark) = dark)
+        let img = Image::filled(5, 5, 3u8);
+        let out = morph2d_naive(&mut Native, &img, 5, 5, MorphOp::Erode);
+        assert!(out.same_pixels(&img));
+        // all-bright: dilation symmetric
+        let img = Image::filled(5, 5, 250u8);
+        let out = morph2d_naive(&mut Native, &img, 5, 5, MorphOp::Dilate);
+        assert!(out.same_pixels(&img));
+    }
+
+    #[test]
+    fn rows_then_cols_equals_2d() {
+        // separability at the oracle level
+        let img = synth::noise(20, 24, 8);
+        let a = morph2d_naive(&mut Native, &img, 5, 7, MorphOp::Erode);
+        let r = rows_naive(&mut Native, &img, 7, MorphOp::Erode);
+        let c = cols_naive(&mut Native, &r, 5, MorphOp::Erode);
+        assert!(a.same_pixels(&c));
+    }
+}

@@ -1,0 +1,249 @@
+//! Separable composition (§5): a 2-D `w_x × w_y` erosion/dilation as a
+//! rows-window pass followed by a cols-window pass, with the §5.2
+//! vertical strategies and the §5.3 hybrid dispatch.
+
+use super::hybrid::resolve_method;
+use super::{linear, vhgw, wing_of};
+use super::{Border, MorphConfig, MorphOp, PassMethod, VerticalStrategy};
+use crate::image::Image;
+use crate::neon::Backend;
+use crate::transpose;
+
+/// One rows-window (paper "horizontal") pass with a *resolved* method.
+pub fn pass_rows<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+    method: PassMethod,
+    simd: bool,
+    thresholds: super::HybridThresholds,
+) -> Image<u8> {
+    let m = resolve_method(method, window, thresholds.wy0);
+    match (m, simd) {
+        (PassMethod::Linear, true) => linear::rows_simd_linear(b, src, window, op),
+        (PassMethod::Linear, false) => linear::rows_scalar_linear(b, src, window, op),
+        (PassMethod::Vhgw, true) => vhgw::rows_simd_vhgw(b, src, window, op),
+        (PassMethod::Vhgw, false) => vhgw::rows_scalar_vhgw(b, src, window, op),
+        (PassMethod::Hybrid, _) => unreachable!("resolve_method returns concrete"),
+    }
+}
+
+/// One cols-window (paper "vertical") pass with a *resolved* method.
+///
+/// * `simd == false` → direct scalar implementations (the paper's
+///   "without SIMD" comparators never transpose).
+/// * `simd == true`, [`VerticalStrategy::Transpose`] → the §5.2.1
+///   sandwich: NEON tiled transpose, SIMD rows pass, transpose back.
+/// * `simd == true`, [`VerticalStrategy::Direct`] → §5.2.2 offset-load
+///   linear pass; vHGW has no direct SIMD form in the paper, so it falls
+///   back to the transpose sandwich.
+pub fn pass_cols<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+    method: PassMethod,
+    simd: bool,
+    vertical: VerticalStrategy,
+    thresholds: super::HybridThresholds,
+) -> Image<u8> {
+    let m = resolve_method(method, window, thresholds.wx0);
+    if !simd {
+        return match m {
+            PassMethod::Linear => linear::cols_scalar_linear(b, src, window, op),
+            PassMethod::Vhgw => vhgw::cols_scalar_vhgw(b, src, window, op),
+            PassMethod::Hybrid => unreachable!(),
+        };
+    }
+    match (m, vertical) {
+        (PassMethod::Linear, VerticalStrategy::Direct) => {
+            linear::cols_simd_linear(b, src, window, op)
+        }
+        (PassMethod::Linear, VerticalStrategy::Transpose) => {
+            transpose_sandwich(b, src, window, op, PassMethod::Linear, thresholds)
+        }
+        (PassMethod::Vhgw, _) => {
+            transpose_sandwich(b, src, window, op, PassMethod::Vhgw, thresholds)
+        }
+        (PassMethod::Hybrid, _) => unreachable!(),
+    }
+}
+
+/// §5.2.1: transpose → SIMD rows pass → transpose back, with the §4 NEON
+/// transpose tiles.
+fn transpose_sandwich<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+    method: PassMethod,
+    thresholds: super::HybridThresholds,
+) -> Image<u8> {
+    let t = transpose::transpose_image(b, src);
+    let filtered = pass_rows(b, &t, window, op, method, true, thresholds);
+    transpose::transpose_image(b, &filtered)
+}
+
+/// Full separable 2-D morphology under a [`MorphConfig`].
+pub fn morphology<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    op: MorphOp,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<u8> {
+    let wing_x = wing_of(w_x, "w_x");
+    let wing_y = wing_of(w_y, "w_y");
+    if src.height() == 0 || src.width() == 0 {
+        return src.clone();
+    }
+
+    if cfg.border == Border::Replicate {
+        let padded = super::replicate_pad(src, wing_x, wing_y);
+        let mut inner = *cfg;
+        inner.border = Border::Identity;
+        let out = morphology(b, &padded, op, w_x, w_y, &inner);
+        return super::crop(&out, wing_y, wing_x, src.height(), src.width());
+    }
+
+    let after_rows = if w_y > 1 {
+        pass_rows(b, src, w_y, op, cfg.method, cfg.simd, cfg.thresholds)
+    } else {
+        src.clone()
+    };
+    if w_x > 1 {
+        pass_cols(
+            b,
+            &after_rows,
+            w_x,
+            op,
+            cfg.method,
+            cfg.simd,
+            cfg.vertical,
+            cfg.thresholds,
+        )
+    } else {
+        after_rows
+    }
+}
+
+/// Erosion with the paper's final (§5.3) configuration, native speed.
+pub fn erode(src: &Image<u8>, w_x: usize, w_y: usize) -> Image<u8> {
+    morphology(
+        &mut crate::neon::Native,
+        src,
+        MorphOp::Erode,
+        w_x,
+        w_y,
+        &MorphConfig::default(),
+    )
+}
+
+/// Dilation with the paper's final (§5.3) configuration, native speed.
+pub fn dilate(src: &Image<u8>, w_x: usize, w_y: usize) -> Image<u8> {
+    morphology(
+        &mut crate::neon::Native,
+        src,
+        MorphOp::Dilate,
+        w_x,
+        w_y,
+        &MorphConfig::default(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+    use crate::morphology::naive;
+    use crate::neon::Native;
+
+    fn configs() -> Vec<MorphConfig> {
+        let mut out = Vec::new();
+        for method in [PassMethod::Linear, PassMethod::Vhgw, PassMethod::Hybrid] {
+            for vertical in [VerticalStrategy::Transpose, VerticalStrategy::Direct] {
+                for simd in [false, true] {
+                    out.push(MorphConfig {
+                        method,
+                        vertical,
+                        simd,
+                        border: Border::Identity,
+                        thresholds: super::super::HybridThresholds::paper(),
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn all_configs_match_naive() {
+        let img = synth::noise(37, 45, 77);
+        for &(w_x, w_y) in &[(3, 3), (5, 9), (9, 5), (1, 7), (7, 1), (15, 15)] {
+            for op in [MorphOp::Erode, MorphOp::Dilate] {
+                let want = naive::morph2d_naive(&mut Native, &img, w_x, w_y, op);
+                for cfg in configs() {
+                    let got = morphology(&mut Native, &img, op, w_x, w_y, &cfg);
+                    assert!(
+                        got.same_pixels(&want),
+                        "{op:?} {w_x}x{w_y} cfg={cfg:?} diff={:?}",
+                        got.first_diff(&want)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simple_api_matches_naive() {
+        let img = synth::document(60, 80, 3);
+        let e = erode(&img, 5, 3);
+        let d = dilate(&img, 3, 5);
+        assert!(e.same_pixels(&naive::morph2d_naive(&mut Native, &img, 5, 3, MorphOp::Erode)));
+        assert!(d.same_pixels(&naive::morph2d_naive(&mut Native, &img, 3, 5, MorphOp::Dilate)));
+    }
+
+    #[test]
+    fn replicate_border_differs_from_identity_only_at_edges() {
+        let img = synth::noise(20, 20, 9);
+        let mut cfg = MorphConfig::default();
+        let ident = morphology(&mut Native, &img, MorphOp::Erode, 5, 5, &cfg);
+        cfg.border = Border::Replicate;
+        let repl = morphology(&mut Native, &img, MorphOp::Erode, 5, 5, &cfg);
+        // interior must agree
+        for y in 2..18 {
+            for x in 2..18 {
+                assert_eq!(ident.get(y, x), repl.get(y, x), "interior ({y},{x})");
+            }
+        }
+        // replicate never exceeds identity for erosion (identity pads 255)
+        for y in 0..20 {
+            for x in 0..20 {
+                assert!(repl.get(y, x) <= ident.get(y, x));
+            }
+        }
+    }
+
+    #[test]
+    fn erosion_dilation_duality() {
+        // erode(img) == 255 - dilate(255 - img) for symmetric SEs
+        let img = synth::noise(24, 31, 21);
+        let inv = crate::image::Image::from_fn(24, 31, |y, x| 255 - img.get(y, x));
+        let e = erode(&img, 7, 5);
+        let d = dilate(&inv, 7, 5);
+        for y in 0..24 {
+            for x in 0..31 {
+                assert_eq!(e.get(y, x), 255 - d.get(y, x));
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_1x1_is_identity() {
+        let img = synth::noise(10, 10, 1);
+        assert!(erode(&img, 1, 1).same_pixels(&img));
+        assert!(dilate(&img, 1, 1).same_pixels(&img));
+    }
+}

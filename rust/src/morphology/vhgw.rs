@@ -1,0 +1,389 @@
+//! van Herk / Gil-Werman 1-D passes (§5.1.1): O(1) combines per pixel
+//! independent of window size, at the price of extra memory ("doubled
+//! image size", §5.1.1) and extra streaming traffic.
+//!
+//! Decomposition: over the identity-padded axis split into segments of
+//! length `w`, with `R` the per-segment prefix reduction and `S` the
+//! per-segment suffix reduction,
+//!
+//! ```text
+//! out[i] = comb(S[i], R[i + w - 1])        (window = [i, i + w))
+//! ```
+//!
+//! Our implementation materializes `R` (one padded image) and fuses the
+//! `S` scan with the merge, carrying the running suffix in a single row
+//! buffer — 3 combines per point, the classic vHGW census.
+//!
+//! The rows-window pass vectorizes trivially (16 columns per `vminq`,
+//! all aligned); the cols-window scalar pass is the paper's "vertical
+//! without SIMD" comparator (its SIMD counterpart is the §5.2.1
+//! transpose sandwich in [`super::separable`]).
+
+use super::{wing_of, MorphOp};
+use crate::image::Image;
+use crate::neon::{Backend, U8x16};
+
+/// Segment count covering `n + 2*wing` samples with segment length `w`.
+#[inline]
+pub(crate) fn seg_count(n: usize, window: usize) -> usize {
+    let wing = window / 2;
+    (n + 2 * wing).div_ceil(window)
+}
+
+/// Rows-window vHGW pass, NEON (the §5.1.1 baseline *with* SIMD).
+pub fn rows_simd_vhgw<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+) -> Image<u8> {
+    let wing = wing_of(window, "w_y");
+    let (h, w) = (src.height(), src.width());
+    if window == 1 || h == 0 || w == 0 {
+        return src.clone();
+    }
+    let nseg = seg_count(h, window);
+    let ph = nseg * window; // padded height
+    let mut dst = Image::zeros(h, w);
+    let w16 = w - w % 16;
+
+    // streaming: src read twice (R scan + S scan), R written + read,
+    // dst written — the "additional memory = doubled image size" cost
+    b.record_stream((2 * h * w + ph * w) as u64, (ph * w + h * w) as u64);
+
+    // padded virtual source row: P(i) = src[i - wing], identity outside
+    let ident_row = vec![op.identity(); w];
+    let prow = |i: usize| -> &[u8] {
+        if (wing..wing + h).contains(&i) {
+            src.row(i - wing)
+        } else {
+            &ident_row
+        }
+    };
+
+    // R: per-segment prefix reduction, ascending, streaming by rows
+    let mut r = vec![0u8; ph * w];
+    for i in 0..ph {
+        let p = prow(i);
+        if i % window == 0 {
+            // segment start: copy
+            let (head, tail) = r.split_at_mut(i * w);
+            let _ = head;
+            let row_i = &mut tail[..w];
+            let mut x = 0;
+            while x < w16 {
+                b.scalar_overhead(1);
+                let v = b.vld1q_u8(&p[x..]);
+                b.vst1q_u8(&mut row_i[x..], v);
+                x += 16;
+            }
+            for x in w16..w {
+                let v = b.scalar_load_u8(p, x);
+                b.scalar_store_u8(row_i, x, v);
+            }
+        } else {
+            let (prev, cur) = r.split_at_mut(i * w);
+            let prev_row = &prev[(i - 1) * w..];
+            let cur_row = &mut cur[..w];
+            let mut x = 0;
+            while x < w16 {
+                b.scalar_overhead(1);
+                let a = b.vld1q_u8(&prev_row[x..]);
+                let v = b.vld1q_u8(&p[x..]);
+                let m = op.simd(b, a, v);
+                b.vst1q_u8(&mut cur_row[x..], m);
+                x += 16;
+            }
+            for x in w16..w {
+                let a = b.scalar_load_u8(prev_row, x);
+                let v = b.scalar_load_u8(p, x);
+                let m = op.scalar(b, a, v);
+                b.scalar_store_u8(cur_row, x, m);
+            }
+        }
+    }
+
+    // S scan fused with merge, descending with a carried row buffer
+    let mut s_row = vec![op.identity(); w];
+    for i in (0..ph).rev() {
+        let p = prow(i);
+        let seg_last = i % window == window - 1;
+        let mut x = 0;
+        while x < w16 {
+            b.scalar_overhead(1);
+            let v = b.vld1q_u8(&p[x..]);
+            let s = if seg_last {
+                v
+            } else {
+                let prev = b.vld1q_u8(&s_row[x..]);
+                op.simd(b, prev, v)
+            };
+            b.vst1q_u8(&mut s_row[x..], s);
+            if i < h {
+                // out[i] = comb(S[i], R[i + window - 1])
+                let rr = b.vld1q_u8(&r[(i + window - 1) * w + x..]);
+                let o = op.simd(b, s, rr);
+                b.vst1q_u8(&mut dst.row_mut(i)[x..], o);
+            }
+            x += 16;
+        }
+        for x in w16..w {
+            let v = b.scalar_load_u8(p, x);
+            let s = if seg_last {
+                v
+            } else {
+                let prev = b.scalar_load_u8(&s_row, x);
+                op.scalar(b, prev, v)
+            };
+            b.scalar_store_u8(&mut s_row, x, s);
+            if i < h {
+                let rr = b.scalar_load_u8(&r, (i + window - 1) * w + x);
+                let o = op.scalar(b, s, rr);
+                b.scalar_store_u8(dst.row_mut(i), x, o);
+            }
+        }
+    }
+    dst
+}
+
+/// Rows-window vHGW pass, scalar (the paper's Fig. 3 "without SIMD"
+/// baseline).
+pub fn rows_scalar_vhgw<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+) -> Image<u8> {
+    let wing = wing_of(window, "w_y");
+    let (h, w) = (src.height(), src.width());
+    if window == 1 || h == 0 || w == 0 {
+        return src.clone();
+    }
+    let nseg = seg_count(h, window);
+    let ph = nseg * window;
+    let mut dst = Image::zeros(h, w);
+    b.record_stream((2 * h * w + ph * w) as u64, (ph * w + h * w) as u64);
+
+    let ident_row = vec![op.identity(); w];
+    let prow = |i: usize| -> &[u8] {
+        if (wing..wing + h).contains(&i) {
+            src.row(i - wing)
+        } else {
+            &ident_row
+        }
+    };
+
+    let mut r = vec![0u8; ph * w];
+    for i in 0..ph {
+        let p = prow(i);
+        b.scalar_overhead(1);
+        if i % window == 0 {
+            for x in 0..w {
+                let v = b.scalar_load_u8(p, x);
+                b.scalar_store_u8(&mut r[i * w..], x, v);
+            }
+        } else {
+            for x in 0..w {
+                b.scalar_overhead(1);
+                let a = b.scalar_load_u8(&r, (i - 1) * w + x);
+                let v = b.scalar_load_u8(p, x);
+                let m = op.scalar(b, a, v);
+                b.scalar_store_u8(&mut r[i * w..], x, m);
+            }
+        }
+    }
+
+    let mut s_row = vec![op.identity(); w];
+    for i in (0..ph).rev() {
+        let p = prow(i);
+        let seg_last = i % window == window - 1;
+        b.scalar_overhead(1);
+        for x in 0..w {
+            b.scalar_overhead(1);
+            let v = b.scalar_load_u8(p, x);
+            let s = if seg_last {
+                v
+            } else {
+                let prev = b.scalar_load_u8(&s_row, x);
+                op.scalar(b, prev, v)
+            };
+            b.scalar_store_u8(&mut s_row, x, s);
+            if i < h {
+                let rr = b.scalar_load_u8(&r, (i + window - 1) * w + x);
+                let o = op.scalar(b, s, rr);
+                b.scalar_store_u8(dst.row_mut(i), x, o);
+            }
+        }
+    }
+    dst
+}
+
+/// Cols-window vHGW pass, scalar, direct (the paper's Fig. 4 "without
+/// SIMD" comparator).  Per-row 1-D problems; the R buffer is one padded
+/// row, reused (cache-resident).
+pub fn cols_scalar_vhgw<B: Backend>(
+    b: &mut B,
+    src: &Image<u8>,
+    window: usize,
+    op: MorphOp,
+) -> Image<u8> {
+    let wing = wing_of(window, "w_x");
+    let (h, w) = (src.height(), src.width());
+    if window == 1 || h == 0 || w == 0 {
+        return src.clone();
+    }
+    let nseg = seg_count(w, window);
+    let pw = nseg * window;
+    let mut dst = Image::zeros(h, w);
+    // src read twice, dst written; R is cache-resident per row
+    b.record_stream((2 * h * w) as u64, (h * w) as u64);
+
+    let mut r = vec![0u8; pw];
+    for y in 0..h {
+        let row = src.row(y);
+        let pval = |b: &mut B, j: usize| -> u8 {
+            if (wing..wing + w).contains(&j) {
+                b.scalar_load_u8(row, j - wing)
+            } else {
+                op.identity()
+            }
+        };
+        // R: per-segment prefix, ascending
+        for j in 0..pw {
+            b.scalar_overhead(1);
+            let v = pval(b, j);
+            let val = if j % window == 0 {
+                v
+            } else {
+                let a = b.scalar_load_u8(&r, j - 1);
+                op.scalar(b, a, v)
+            };
+            b.scalar_store_u8(&mut r, j, val);
+        }
+        // S fused with merge, descending with a scalar carry
+        let mut s = op.identity();
+        for j in (0..pw).rev() {
+            b.scalar_overhead(1);
+            let v = pval(b, j);
+            s = if j % window == window - 1 {
+                v
+            } else {
+                op.scalar(b, s, v)
+            };
+            if j < w {
+                let rr = b.scalar_load_u8(&r, j + window - 1);
+                let o = op.scalar(b, s, rr);
+                b.scalar_store_u8(dst.row_mut(y), j, o);
+            }
+        }
+    }
+    dst
+}
+
+/// Expose the per-chunk combine census for documentation/tests: vHGW
+/// performs 3 combines per point regardless of window size.
+pub fn combines_per_point() -> u64 {
+    3
+}
+
+#[allow(dead_code)]
+fn _assert_u8x16_used(_: U8x16) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+    use crate::morphology::naive;
+    use crate::neon::{Counting, InstrClass, Native};
+
+    fn check_rows(h: usize, w: usize, window: usize, op: MorphOp, seed: u64) {
+        let img = synth::noise(h, w, seed);
+        let want = naive::rows_naive(&mut Native, &img, window, op);
+        let simd = rows_simd_vhgw(&mut Native, &img, window, op);
+        let scal = rows_scalar_vhgw(&mut Native, &img, window, op);
+        assert!(
+            simd.same_pixels(&want),
+            "vhgw rows simd {h}x{w} w={window} {op:?}: {:?}",
+            simd.first_diff(&want)
+        );
+        assert!(
+            scal.same_pixels(&want),
+            "vhgw rows scalar {h}x{w} w={window} {op:?}: {:?}",
+            scal.first_diff(&want)
+        );
+    }
+
+    #[test]
+    fn rows_matches_naive_across_windows() {
+        for &window in &[1, 3, 5, 7, 15, 31, 61] {
+            check_rows(29, 37, window, MorphOp::Erode, 1);
+            check_rows(29, 37, window, MorphOp::Dilate, 2);
+        }
+    }
+
+    #[test]
+    fn cols_matches_naive_across_windows() {
+        for &window in &[1, 3, 5, 7, 15, 31, 61] {
+            for &op in &[MorphOp::Erode, MorphOp::Dilate] {
+                let img = synth::noise(21, 43, window as u64);
+                let want = naive::cols_naive(&mut Native, &img, window, op);
+                let got = cols_scalar_vhgw(&mut Native, &img, window, op);
+                assert!(
+                    got.same_pixels(&want),
+                    "vhgw cols w={window} {op:?}: {:?}",
+                    got.first_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn window_spanning_whole_image() {
+        check_rows(5, 24, 15, MorphOp::Erode, 3);
+        let img = synth::noise(24, 5, 4);
+        let want = naive::cols_naive(&mut Native, &img, 15, MorphOp::Dilate);
+        let got = cols_scalar_vhgw(&mut Native, &img, 15, MorphOp::Dilate);
+        assert!(got.same_pixels(&want));
+    }
+
+    #[test]
+    fn segment_boundary_sizes() {
+        // heights that are exact multiples / off-by-one of the segment
+        for &h in &[14, 15, 16, 29, 30, 31] {
+            check_rows(h, 20, 5, MorphOp::Erode, h as u64);
+        }
+    }
+
+    #[test]
+    fn simd_combine_count_is_window_independent() {
+        // the defining vHGW property: combines per pixel ~3, flat in w
+        // combine-flatness needs h >> w (padding quantization); the probe
+        // is tall but narrow to keep debug builds fast
+        let img = synth::noise(360, 160, 5);
+        let count = |window: usize| {
+            let mut c = Counting::new();
+            let _ = rows_simd_vhgw(&mut c, &img, window, MorphOp::Erode);
+            c.mix.get(InstrClass::SimdMinMax) as f64
+        };
+        let at5 = count(5);
+        let at61 = count(61);
+        assert!(
+            (at61 / at5) < 1.35,
+            "vHGW combines should be ~flat in window: {at5} vs {at61}"
+        );
+    }
+
+    #[test]
+    fn impulse_propagates_exactly_window() {
+        let mut img = Image::filled(31, 20, 200u8);
+        img.set(15, 10, 7);
+        let out = rows_simd_vhgw(&mut Native, &img, 9, MorphOp::Erode);
+        for y in 0..31 {
+            let want = if (11..=19).contains(&y) { 7 } else { 200 };
+            assert_eq!(out.get(y, 10), want, "row {y}");
+            assert_eq!(out.get(y, 9), 200); // columns untouched
+        }
+    }
+
+    use crate::image::Image;
+}

@@ -1,0 +1,360 @@
+//! The [`Backend`] trait: compute-and-account intrinsics.
+//!
+//! Every algorithm in [`crate::morphology`] and [`crate::transpose`] is
+//! written once, generic over `B: Backend`.  Each intrinsic method has a
+//! default implementation that performs the architectural semantics (via
+//! [`super::regs`]) and then calls [`Backend::record`].  The two
+//! implementations differ only in `record`:
+//!
+//! * [`Native`]   — `record` is an empty `#[inline(always)]` body; LLVM
+//!   erases all accounting and the lane loops vectorize on the host, so
+//!   this is the real wall-clock implementation.
+//! * [`Counting`] — `record` accumulates an [`InstrMix`] for the
+//!   Exynos-5422 cost model ([`crate::costmodel`]).
+//!
+//! Scalar (non-SIMD) reference code uses the `scalar_*` helpers so its
+//! instruction mix is accounted through the same funnel.
+
+use super::counters::{InstrClass, InstrMix};
+use super::regs::{self, U16x8, U32x2, U32x4, U64x2, U8x16};
+
+/// Compute-and-account SIMD backend.  See module docs.
+pub trait Backend {
+    /// Record `n` executed instructions of class `class`.
+    fn record(&mut self, class: InstrClass, n: u64);
+
+    /// Record memory traffic in bytes (reads, writes) — every access.
+    fn record_bytes(&mut self, read: u64, written: u64);
+
+    /// Record unique DRAM-streamed bytes (each buffer counted once per
+    /// sweep) — called once per pass by the algorithm with its true
+    /// streaming footprint; drives the cost model's bandwidth term.
+    fn record_stream(&mut self, read: u64, written: u64);
+
+    // -- vector loads / stores ------------------------------------------
+
+    #[inline(always)]
+    fn vld1q_u8(&mut self, src: &[u8]) -> U8x16 {
+        self.record(InstrClass::SimdLoad, 1);
+        self.record_bytes(16, 0);
+        regs::vld1q_u8(src)
+    }
+
+    /// `vld1q` at an arbitrary (unaligned) offset — §5.2.2's
+    /// `vld1q_u8(src + x - wing + j)` pattern.
+    #[inline(always)]
+    fn vld1q_u8_unaligned(&mut self, src: &[u8]) -> U8x16 {
+        self.record(InstrClass::SimdLoadUnaligned, 1);
+        self.record_bytes(16, 0);
+        regs::vld1q_u8(src)
+    }
+
+    #[inline(always)]
+    fn vst1q_u8(&mut self, dst: &mut [u8], v: U8x16) {
+        self.record(InstrClass::SimdStore, 1);
+        self.record_bytes(0, 16);
+        regs::vst1q_u8(dst, v);
+    }
+
+    #[inline(always)]
+    fn vld1q_u16(&mut self, src: &[u16]) -> U16x8 {
+        self.record(InstrClass::SimdLoad, 1);
+        self.record_bytes(16, 0);
+        regs::vld1q_u16(src)
+    }
+
+    #[inline(always)]
+    fn vst1q_u16(&mut self, dst: &mut [u16], v: U16x8) {
+        self.record(InstrClass::SimdStore, 1);
+        self.record_bytes(0, 16);
+        regs::vst1q_u16(dst, v);
+    }
+
+    #[inline(always)]
+    fn vdupq_n_u8(&mut self, v: u8) -> U8x16 {
+        self.record(InstrClass::SimdPermute, 1);
+        regs::vdupq_n_u8(v)
+    }
+
+    // -- vector min / max -----------------------------------------------
+
+    #[inline(always)]
+    fn vminq_u8(&mut self, a: U8x16, b: U8x16) -> U8x16 {
+        self.record(InstrClass::SimdMinMax, 1);
+        regs::vminq_u8(a, b)
+    }
+
+    #[inline(always)]
+    fn vmaxq_u8(&mut self, a: U8x16, b: U8x16) -> U8x16 {
+        self.record(InstrClass::SimdMinMax, 1);
+        regs::vmaxq_u8(a, b)
+    }
+
+    #[inline(always)]
+    fn vminq_u16(&mut self, a: U16x8, b: U16x8) -> U16x8 {
+        self.record(InstrClass::SimdMinMax, 1);
+        regs::vminq_u16(a, b)
+    }
+
+    #[inline(always)]
+    fn vmaxq_u16(&mut self, a: U16x8, b: U16x8) -> U16x8 {
+        self.record(InstrClass::SimdMinMax, 1);
+        regs::vmaxq_u16(a, b)
+    }
+
+    // -- permutations -----------------------------------------------------
+
+    #[inline(always)]
+    fn vtrnq_u8(&mut self, a: U8x16, b: U8x16) -> (U8x16, U8x16) {
+        self.record(InstrClass::SimdPermute, 1);
+        regs::vtrnq_u8(a, b)
+    }
+
+    #[inline(always)]
+    fn vtrnq_u16(&mut self, a: U16x8, b: U16x8) -> (U16x8, U16x8) {
+        self.record(InstrClass::SimdPermute, 1);
+        regs::vtrnq_u16(a, b)
+    }
+
+    #[inline(always)]
+    fn vtrnq_u32(&mut self, a: U32x4, b: U32x4) -> (U32x4, U32x4) {
+        self.record(InstrClass::SimdPermute, 1);
+        regs::vtrnq_u32(a, b)
+    }
+
+    #[inline(always)]
+    fn vtrnq_u64(&mut self, a: U64x2, b: U64x2) -> (U64x2, U64x2) {
+        self.record(InstrClass::SimdPermute, 1);
+        regs::vtrnq_u64(a, b)
+    }
+
+    #[inline(always)]
+    fn vget_low_u32(&mut self, a: U32x4) -> U32x2 {
+        self.record(InstrClass::SimdCombine, 1);
+        regs::vget_low_u32(a)
+    }
+
+    #[inline(always)]
+    fn vget_high_u32(&mut self, a: U32x4) -> U32x2 {
+        self.record(InstrClass::SimdCombine, 1);
+        regs::vget_high_u32(a)
+    }
+
+    #[inline(always)]
+    fn vcombine_u32(&mut self, lo: U32x2, hi: U32x2) -> U32x4 {
+        self.record(InstrClass::SimdCombine, 1);
+        regs::vcombine_u32(lo, hi)
+    }
+
+    // -- reinterprets (free auxiliaries, §4) -------------------------------
+
+    #[inline(always)]
+    fn reinterpret_u32_u16(&mut self, v: U16x8) -> U32x4 {
+        self.record(InstrClass::SimdReinterpret, 1);
+        regs::reinterpret_u32_u16(v)
+    }
+
+    #[inline(always)]
+    fn reinterpret_u16_u32(&mut self, v: U32x4) -> U16x8 {
+        self.record(InstrClass::SimdReinterpret, 1);
+        regs::reinterpret_u16_u32(v)
+    }
+
+    #[inline(always)]
+    fn reinterpret_u16_u8(&mut self, v: U8x16) -> U16x8 {
+        self.record(InstrClass::SimdReinterpret, 1);
+        regs::reinterpret_u16_u8(v)
+    }
+
+    #[inline(always)]
+    fn reinterpret_u8_u16(&mut self, v: U16x8) -> U8x16 {
+        self.record(InstrClass::SimdReinterpret, 1);
+        regs::reinterpret_u8_u16(v)
+    }
+
+    #[inline(always)]
+    fn reinterpret_u32_u8(&mut self, v: U8x16) -> U32x4 {
+        self.record(InstrClass::SimdReinterpret, 1);
+        regs::reinterpret_u32_u8(v)
+    }
+
+    #[inline(always)]
+    fn reinterpret_u8_u32(&mut self, v: U32x4) -> U8x16 {
+        self.record(InstrClass::SimdReinterpret, 1);
+        regs::reinterpret_u8_u32(v)
+    }
+
+    #[inline(always)]
+    fn reinterpret_u64_u8(&mut self, v: U8x16) -> U64x2 {
+        self.record(InstrClass::SimdReinterpret, 1);
+        regs::reinterpret_u64_u8(v)
+    }
+
+    #[inline(always)]
+    fn reinterpret_u8_u64(&mut self, v: U64x2) -> U8x16 {
+        self.record(InstrClass::SimdReinterpret, 1);
+        regs::reinterpret_u8_u64(v)
+    }
+
+    // -- scalar accounting (for the non-SIMD reference implementations) --
+
+    #[inline(always)]
+    fn scalar_load_u8(&mut self, src: &[u8], idx: usize) -> u8 {
+        self.record(InstrClass::ScalarLoad, 1);
+        self.record_bytes(1, 0);
+        src[idx]
+    }
+
+    #[inline(always)]
+    fn scalar_store_u8(&mut self, dst: &mut [u8], idx: usize, v: u8) {
+        self.record(InstrClass::ScalarStore, 1);
+        self.record_bytes(0, 1);
+        dst[idx] = v;
+    }
+
+    #[inline(always)]
+    fn scalar_load_u16(&mut self, src: &[u16], idx: usize) -> u16 {
+        self.record(InstrClass::ScalarLoad, 1);
+        self.record_bytes(2, 0);
+        src[idx]
+    }
+
+    #[inline(always)]
+    fn scalar_store_u16(&mut self, dst: &mut [u16], idx: usize, v: u16) {
+        self.record(InstrClass::ScalarStore, 1);
+        self.record_bytes(0, 2);
+        dst[idx] = v;
+    }
+
+    #[inline(always)]
+    fn scalar_min_u8(&mut self, a: u8, b: u8) -> u8 {
+        self.record(InstrClass::ScalarCmp, 1);
+        a.min(b)
+    }
+
+    #[inline(always)]
+    fn scalar_max_u8(&mut self, a: u8, b: u8) -> u8 {
+        self.record(InstrClass::ScalarCmp, 1);
+        a.max(b)
+    }
+
+    /// Loop / index-arithmetic overhead: `n` scalar ALU instructions.
+    #[inline(always)]
+    fn scalar_overhead(&mut self, n: u64) {
+        self.record(InstrClass::ScalarAlu, n);
+    }
+}
+
+/// Full-speed backend: accounting compiles away entirely.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Native;
+
+impl Backend for Native {
+    #[inline(always)]
+    fn record(&mut self, _class: InstrClass, _n: u64) {}
+
+    #[inline(always)]
+    fn record_bytes(&mut self, _read: u64, _written: u64) {}
+
+    #[inline(always)]
+    fn record_stream(&mut self, _read: u64, _written: u64) {}
+}
+
+/// Accounting backend: accumulates the instruction mix.
+#[derive(Clone, Debug, Default)]
+pub struct Counting {
+    pub mix: InstrMix,
+}
+
+impl Counting {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot for regional accounting via [`InstrMix::since`].
+    pub fn snapshot(&self) -> InstrMix {
+        self.mix
+    }
+}
+
+impl Backend for Counting {
+    #[inline(always)]
+    fn record(&mut self, class: InstrClass, n: u64) {
+        self.mix.bump(class, n);
+    }
+
+    #[inline(always)]
+    fn record_bytes(&mut self, read: u64, written: u64) {
+        self.mix.bytes_read += read;
+        self.mix.bytes_written += written;
+    }
+
+    #[inline(always)]
+    fn record_stream(&mut self, read: u64, written: u64) {
+        self.mix.stream_read += read;
+        self.mix.stream_written += written;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_backend_accounts() {
+        let mut b = Counting::new();
+        let data: Vec<u8> = (0..32).collect();
+        let v = b.vld1q_u8(&data);
+        let w = b.vld1q_u8(&data[16..]);
+        let m = b.vminq_u8(v, w);
+        let mut out = vec![0u8; 16];
+        b.vst1q_u8(&mut out, m);
+        assert_eq!(b.mix.get(InstrClass::SimdLoad), 2);
+        assert_eq!(b.mix.get(InstrClass::SimdMinMax), 1);
+        assert_eq!(b.mix.get(InstrClass::SimdStore), 1);
+        assert_eq!(b.mix.bytes_read, 32);
+        assert_eq!(b.mix.bytes_written, 16);
+        assert_eq!(out[0], 0); // min(0, 16)
+    }
+
+    #[test]
+    fn native_backend_computes_identically() {
+        let data: Vec<u8> = (0..32).rev().collect();
+        let mut n = Native;
+        let mut c = Counting::new();
+        let a1 = n.vld1q_u8(&data);
+        let a2 = c.vld1q_u8(&data);
+        assert_eq!(a1, a2);
+        let k1 = n.vdupq_n_u8(20);
+        let m1 = n.vmaxq_u8(a1, k1);
+        let k2 = c.vdupq_n_u8(20);
+        let m2 = c.vmaxq_u8(a2, k2);
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn reinterpret_counted_as_free_class() {
+        let mut b = Counting::new();
+        let v = b.vdupq_n_u8(1);
+        let _ = b.reinterpret_u16_u8(v);
+        assert_eq!(b.mix.get(InstrClass::SimdReinterpret), 1);
+        assert_eq!(b.mix.total_costed(), 1); // only the vdup
+    }
+
+    #[test]
+    fn scalar_helpers_account() {
+        let mut b = Counting::new();
+        let src = vec![5u8, 9];
+        let mut dst = vec![0u8; 2];
+        let x = b.scalar_load_u8(&src, 0);
+        let y = b.scalar_load_u8(&src, 1);
+        let m = b.scalar_min_u8(x, y);
+        b.scalar_store_u8(&mut dst, 0, m);
+        b.scalar_overhead(3);
+        assert_eq!(dst[0], 5);
+        assert_eq!(b.mix.get(InstrClass::ScalarLoad), 2);
+        assert_eq!(b.mix.get(InstrClass::ScalarCmp), 1);
+        assert_eq!(b.mix.get(InstrClass::ScalarStore), 1);
+        assert_eq!(b.mix.get(InstrClass::ScalarAlu), 3);
+    }
+}

@@ -1,0 +1,265 @@
+//! Instruction-class accounting.
+//!
+//! Each simulated instruction belongs to one [`InstrClass`]; an
+//! [`InstrMix`] is the histogram of classes executed by a pass.  The mix
+//! is what the paper's efficiency arguments are actually about (§4
+//! counts "16 load/store instructions, 32 data permutation instructions
+//! and 16 auxiliary instructions" for the 8×8.16 transpose) and is the
+//! input of [`crate::costmodel`].
+
+use std::fmt;
+use std::ops::{Add, AddAssign};
+
+/// Classes of (simulated) instructions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum InstrClass {
+    /// `vld1q` — 128-bit vector load (16-byte aligned stream).
+    SimdLoad,
+    /// `vld1q` at an arbitrary offset — the paper's §5.2.2 vertical pass
+    /// issues loads at `x - wing + j` which are not 16-byte aligned;
+    /// Cortex-A15 charges extra for these ("passes work with memory
+    /// asymmetrically", §5.3 — the reason w_x⁰ < w_y⁰).
+    SimdLoadUnaligned,
+    /// `vst1q` — 128-bit vector store.
+    SimdStore,
+    /// `vminq` / `vmaxq` — vector min/max.
+    SimdMinMax,
+    /// `vtrnq` / `vdupq` — vector permutation.
+    SimdPermute,
+    /// `vcombine` / `vget_low` / `vget_high` — register-half plumbing.
+    SimdCombine,
+    /// `vreinterpretq` — auxiliary casts; §4: "do not affect efficiency".
+    SimdReinterpret,
+    /// Scalar element load.
+    ScalarLoad,
+    /// Scalar element store.
+    ScalarStore,
+    /// Scalar compare / min / max.
+    ScalarCmp,
+    /// Scalar address/index arithmetic and loop overhead.
+    ScalarAlu,
+}
+
+impl InstrClass {
+    pub const ALL: [InstrClass; 11] = [
+        InstrClass::SimdLoad,
+        InstrClass::SimdLoadUnaligned,
+        InstrClass::SimdStore,
+        InstrClass::SimdMinMax,
+        InstrClass::SimdPermute,
+        InstrClass::SimdCombine,
+        InstrClass::SimdReinterpret,
+        InstrClass::ScalarLoad,
+        InstrClass::ScalarStore,
+        InstrClass::ScalarCmp,
+        InstrClass::ScalarAlu,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            InstrClass::SimdLoad => "simd_load",
+            InstrClass::SimdLoadUnaligned => "simd_load_u",
+            InstrClass::SimdStore => "simd_store",
+            InstrClass::SimdMinMax => "simd_minmax",
+            InstrClass::SimdPermute => "simd_permute",
+            InstrClass::SimdCombine => "simd_combine",
+            InstrClass::SimdReinterpret => "simd_reinterpret",
+            InstrClass::ScalarLoad => "scalar_load",
+            InstrClass::ScalarStore => "scalar_store",
+            InstrClass::ScalarCmp => "scalar_cmp",
+            InstrClass::ScalarAlu => "scalar_alu",
+        }
+    }
+
+    pub fn is_simd(self) -> bool {
+        matches!(
+            self,
+            InstrClass::SimdLoad
+                | InstrClass::SimdLoadUnaligned
+                | InstrClass::SimdStore
+                | InstrClass::SimdMinMax
+                | InstrClass::SimdPermute
+                | InstrClass::SimdCombine
+                | InstrClass::SimdReinterpret
+        )
+    }
+}
+
+/// Histogram of executed instructions by class, plus bytes moved to and
+/// from memory (for the cost model's bandwidth term).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InstrMix {
+    counts: [u64; 11],
+    /// Bytes read from memory (vector + scalar loads), counting every
+    /// access — mostly cache traffic.
+    pub bytes_read: u64,
+    /// Bytes written to memory (vector + scalar stores), every access.
+    pub bytes_written: u64,
+    /// Unique bytes streamed *from DRAM* (each input/temp buffer counted
+    /// once per sweep over it) — reported by the algorithm via
+    /// [`crate::neon::Backend::record_stream`]; drives the cost model's
+    /// bandwidth term.
+    pub stream_read: u64,
+    /// Unique bytes streamed *to DRAM*.
+    pub stream_written: u64,
+}
+
+impl InstrMix {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline(always)]
+    pub fn bump(&mut self, class: InstrClass, n: u64) {
+        self.counts[class as usize] += n;
+    }
+
+    pub fn get(&self, class: InstrClass) -> u64 {
+        self.counts[class as usize]
+    }
+
+    /// Total instruction count, excluding free reinterprets.
+    pub fn total_costed(&self) -> u64 {
+        InstrClass::ALL
+            .iter()
+            .filter(|c| !matches!(c, InstrClass::SimdReinterpret))
+            .map(|&c| self.get(c))
+            .sum()
+    }
+
+    /// Total instruction count including reinterprets.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn simd_total(&self) -> u64 {
+        InstrClass::ALL
+            .iter()
+            .filter(|c| c.is_simd())
+            .map(|&c| self.get(c))
+            .sum()
+    }
+
+    pub fn scalar_total(&self) -> u64 {
+        self.total() - self.simd_total()
+    }
+
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+
+    /// `self - other` clamped at zero per class — mix of a region when
+    /// `other` is a snapshot taken at its start.
+    pub fn since(&self, snapshot: &InstrMix) -> InstrMix {
+        let mut out = InstrMix::default();
+        for (i, slot) in out.counts.iter_mut().enumerate() {
+            *slot = self.counts[i].saturating_sub(snapshot.counts[i]);
+        }
+        out.bytes_read = self.bytes_read.saturating_sub(snapshot.bytes_read);
+        out.bytes_written = self.bytes_written.saturating_sub(snapshot.bytes_written);
+        out.stream_read = self.stream_read.saturating_sub(snapshot.stream_read);
+        out.stream_written = self.stream_written.saturating_sub(snapshot.stream_written);
+        out
+    }
+
+    /// Total unique DRAM-streamed bytes.
+    pub fn stream_total(&self) -> u64 {
+        self.stream_read + self.stream_written
+    }
+}
+
+impl Add for InstrMix {
+    type Output = InstrMix;
+    fn add(self, rhs: InstrMix) -> InstrMix {
+        let mut out = self;
+        out += rhs;
+        out
+    }
+}
+
+impl AddAssign for InstrMix {
+    fn add_assign(&mut self, rhs: InstrMix) {
+        for i in 0..self.counts.len() {
+            self.counts[i] += rhs.counts[i];
+        }
+        self.bytes_read += rhs.bytes_read;
+        self.bytes_written += rhs.bytes_written;
+        self.stream_read += rhs.stream_read;
+        self.stream_written += rhs.stream_written;
+    }
+}
+
+impl fmt::Display for InstrMix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for &c in &InstrClass::ALL {
+            let n = self.get(c);
+            if n > 0 {
+                if !first {
+                    write!(f, " ")?;
+                }
+                write!(f, "{}={}", c.name(), n)?;
+                first = false;
+            }
+        }
+        if self.bytes_total() > 0 {
+            write!(f, " rd={}B wr={}B", self.bytes_read, self.bytes_written)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_get() {
+        let mut m = InstrMix::new();
+        m.bump(InstrClass::SimdLoad, 3);
+        m.bump(InstrClass::SimdMinMax, 5);
+        m.bump(InstrClass::SimdReinterpret, 7);
+        assert_eq!(m.get(InstrClass::SimdLoad), 3);
+        assert_eq!(m.total(), 15);
+        assert_eq!(m.total_costed(), 8); // reinterprets excluded
+        assert_eq!(m.simd_total(), 15);
+        assert_eq!(m.scalar_total(), 0);
+    }
+
+    #[test]
+    fn since_subtracts() {
+        let mut m = InstrMix::new();
+        m.bump(InstrClass::ScalarLoad, 10);
+        m.bytes_read = 100;
+        let snap = m;
+        m.bump(InstrClass::ScalarLoad, 5);
+        m.bump(InstrClass::ScalarStore, 2);
+        m.bytes_read = 160;
+        let d = m.since(&snap);
+        assert_eq!(d.get(InstrClass::ScalarLoad), 5);
+        assert_eq!(d.get(InstrClass::ScalarStore), 2);
+        assert_eq!(d.bytes_read, 60);
+    }
+
+    #[test]
+    fn sum_mixes() {
+        let mut a = InstrMix::new();
+        a.bump(InstrClass::SimdStore, 1);
+        let mut b = InstrMix::new();
+        b.bump(InstrClass::SimdStore, 2);
+        b.bytes_written = 32;
+        let c = a + b;
+        assert_eq!(c.get(InstrClass::SimdStore), 3);
+        assert_eq!(c.bytes_written, 32);
+    }
+
+    #[test]
+    fn display_compact() {
+        let mut m = InstrMix::new();
+        m.bump(InstrClass::SimdLoad, 2);
+        let s = format!("{m}");
+        assert!(s.contains("simd_load=2"));
+        assert!(!s.contains("scalar"));
+    }
+}

@@ -1,0 +1,35 @@
+//! ARM NEON simulator — the substituted hardware substrate.
+//!
+//! The paper's measurements were taken on a Samsung Exynos 5422 with the
+//! NEON SIMD extension; this environment has neither.  Per the
+//! substitution policy (DESIGN.md §Substitutions) we build the closest
+//! synthetic equivalent that exercises the same code paths:
+//!
+//! * [`regs`] — 128-bit Q-register / 64-bit D-register value types
+//!   (`U8x16`, `U16x8`, `U32x4`, `U32x2`, …) with the exact semantics of
+//!   the instruction subset the paper uses (`vld1q`/`vst1q`, `vminq`/
+//!   `vmaxq`, `vtrnq`, `vcombine`, `vget_low/high`, `vdupq`,
+//!   `vreinterpretq`).
+//! * [`counters`] — instruction-class accounting ([`InstrMix`]): every
+//!   simulated instruction increments its class, giving the *instruction
+//!   mix* of a pass.  The paper's efficiency claims are properties of
+//!   this mix (counts of load/store, min/max, permute per pixel) times
+//!   per-class cost; [`crate::costmodel`] prices a mix in Exynos-like
+//!   nanoseconds.
+//! * [`backend`] — the [`Backend`] trait: each intrinsic is a default
+//!   method that computes via [`regs`] and records via
+//!   [`Backend::record`].  Two implementations:
+//!   [`Native`] (recording is a no-op that compiles away — algorithms run
+//!   at full host speed for wall-clock benches) and [`Counting`]
+//!   (accumulates an [`InstrMix`] for the cost model).  Every morphology
+//!   and transpose algorithm in this crate is written once, generic over
+//!   `Backend`, so the counted stream and the executed stream can never
+//!   drift apart.
+
+pub mod backend;
+pub mod counters;
+pub mod regs;
+
+pub use backend::{Backend, Counting, Native};
+pub use counters::{InstrClass, InstrMix};
+pub use regs::{U16x4, U16x8, U32x2, U32x4, U64x2, U8x16, U8x8};

@@ -1,0 +1,375 @@
+//! NEON register value types and pure instruction semantics.
+//!
+//! Q registers are 128-bit (`U8x16`, `U16x8`, `U32x4`, `U64x2`), D
+//! registers are their 64-bit halves (`U8x8`, `U16x4`, `U32x2`).  The
+//! free functions implement the exact architectural semantics of each
+//! instruction; accounting lives in [`super::backend`].
+//!
+//! Lane order follows the ARM little-endian convention: lane 0 is the
+//! lowest-addressed element of a `vld1q` load.
+
+/// 128-bit Q register viewed as 16 × u8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct U8x16(pub [u8; 16]);
+
+/// 128-bit Q register viewed as 8 × u16.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct U16x8(pub [u16; 8]);
+
+/// 128-bit Q register viewed as 4 × u32.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct U32x4(pub [u32; 4]);
+
+/// 128-bit Q register viewed as 2 × u64.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct U64x2(pub [u64; 2]);
+
+/// 64-bit D register viewed as 8 × u8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct U8x8(pub [u8; 8]);
+
+/// 64-bit D register viewed as 4 × u16.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct U16x4(pub [u16; 4]);
+
+/// 64-bit D register viewed as 2 × u32.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct U32x2(pub [u32; 2]);
+
+// ---------------------------------------------------------------------------
+// byte-level views (vreinterpretq semantics: pure bit reinterpretation)
+// ---------------------------------------------------------------------------
+
+macro_rules! q_bytes {
+    ($ty:ty, $n:expr, $elem:ty) => {
+        impl $ty {
+            /// Little-endian byte image of the register.
+            #[inline(always)]
+            pub fn to_bytes(self) -> [u8; 16] {
+                let mut out = [0u8; 16];
+                for (i, v) in self.0.iter().enumerate() {
+                    let b = v.to_le_bytes();
+                    out[i * (16 / $n)..(i + 1) * (16 / $n)].copy_from_slice(&b);
+                }
+                out
+            }
+
+            /// Build from a little-endian byte image.
+            #[inline(always)]
+            pub fn from_bytes(bytes: [u8; 16]) -> Self {
+                let mut lanes = [0 as $elem; $n];
+                const W: usize = 16 / $n;
+                for (i, lane) in lanes.iter_mut().enumerate() {
+                    let mut b = [0u8; W];
+                    b.copy_from_slice(&bytes[i * W..(i + 1) * W]);
+                    *lane = <$elem>::from_le_bytes(b);
+                }
+                Self(lanes)
+            }
+        }
+    };
+}
+
+q_bytes!(U8x16, 16, u8);
+q_bytes!(U16x8, 8, u16);
+q_bytes!(U32x4, 4, u32);
+q_bytes!(U64x2, 2, u64);
+
+// ---------------------------------------------------------------------------
+// loads / stores
+// ---------------------------------------------------------------------------
+
+/// `VLD1.8 {q}, [r]` — load 16 consecutive u8.
+#[inline(always)]
+pub fn vld1q_u8(src: &[u8]) -> U8x16 {
+    let mut v = [0u8; 16];
+    v.copy_from_slice(&src[..16]);
+    U8x16(v)
+}
+
+/// `VST1.8 {q}, [r]` — store 16 consecutive u8.
+#[inline(always)]
+pub fn vst1q_u8(dst: &mut [u8], v: U8x16) {
+    dst[..16].copy_from_slice(&v.0);
+}
+
+/// `VLD1.16 {q}, [r]` — load 8 consecutive u16.
+#[inline(always)]
+pub fn vld1q_u16(src: &[u16]) -> U16x8 {
+    let mut v = [0u16; 8];
+    v.copy_from_slice(&src[..8]);
+    U16x8(v)
+}
+
+/// `VST1.16 {q}, [r]` — store 8 consecutive u16.
+#[inline(always)]
+pub fn vst1q_u16(dst: &mut [u16], v: U16x8) {
+    dst[..8].copy_from_slice(&v.0);
+}
+
+/// `VDUP.8 q, r` — broadcast a scalar to all 16 lanes.
+#[inline(always)]
+pub fn vdupq_n_u8(v: u8) -> U8x16 {
+    U8x16([v; 16])
+}
+
+// ---------------------------------------------------------------------------
+// min / max
+// ---------------------------------------------------------------------------
+
+/// `VMIN.U8 q, q, q` — lane-wise minimum of 16 u8 pairs.
+#[inline(always)]
+pub fn vminq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i].min(b.0[i]);
+    }
+    U8x16(out)
+}
+
+/// `VMAX.U8 q, q, q` — lane-wise maximum of 16 u8 pairs.
+#[inline(always)]
+pub fn vmaxq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i].max(b.0[i]);
+    }
+    U8x16(out)
+}
+
+/// `VMIN.U16` — lane-wise minimum of 8 u16 pairs.
+#[inline(always)]
+pub fn vminq_u16(a: U16x8, b: U16x8) -> U16x8 {
+    let mut out = [0u16; 8];
+    for i in 0..8 {
+        out[i] = a.0[i].min(b.0[i]);
+    }
+    U16x8(out)
+}
+
+/// `VMAX.U16` — lane-wise maximum of 8 u16 pairs.
+#[inline(always)]
+pub fn vmaxq_u16(a: U16x8, b: U16x8) -> U16x8 {
+    let mut out = [0u16; 8];
+    for i in 0..8 {
+        out[i] = a.0[i].max(b.0[i]);
+    }
+    U16x8(out)
+}
+
+// ---------------------------------------------------------------------------
+// permutations: vtrn / vcombine / vget (the §4 transpose building blocks)
+// ---------------------------------------------------------------------------
+
+/// `VTRN.8 q, q` — treat the pair as 2×2 matrices of u8 and transpose
+/// each: even lanes of `b` swap with odd lanes of `a` (paper Fig. 2).
+#[inline(always)]
+pub fn vtrnq_u8(a: U8x16, b: U8x16) -> (U8x16, U8x16) {
+    let mut x = a.0;
+    let mut y = b.0;
+    for i in (0..16).step_by(2) {
+        let t = x[i + 1];
+        x[i + 1] = y[i];
+        y[i] = t;
+    }
+    (U8x16(x), U8x16(y))
+}
+
+/// `VTRN.16 q, q` — 2×2 transpose of u16 element pairs.
+#[inline(always)]
+pub fn vtrnq_u16(a: U16x8, b: U16x8) -> (U16x8, U16x8) {
+    let mut x = a.0;
+    let mut y = b.0;
+    for i in (0..8).step_by(2) {
+        let t = x[i + 1];
+        x[i + 1] = y[i];
+        y[i] = t;
+    }
+    (U16x8(x), U16x8(y))
+}
+
+/// `VTRN.32 q, q` — 2×2 transpose of u32 element pairs.
+#[inline(always)]
+pub fn vtrnq_u32(a: U32x4, b: U32x4) -> (U32x4, U32x4) {
+    let mut x = a.0;
+    let mut y = b.0;
+    for i in (0..4).step_by(2) {
+        let t = x[i + 1];
+        x[i + 1] = y[i];
+        y[i] = t;
+    }
+    (U32x4(x), U32x4(y))
+}
+
+/// `VGET_LOW.32` — low D half of a Q register (register-allocation-level
+/// on A32: free; counted separately so the cost model can zero it).
+#[inline(always)]
+pub fn vget_low_u32(a: U32x4) -> U32x2 {
+    U32x2([a.0[0], a.0[1]])
+}
+
+/// `VGET_HIGH.32` — high D half of a Q register.
+#[inline(always)]
+pub fn vget_high_u32(a: U32x4) -> U32x2 {
+    U32x2([a.0[2], a.0[3]])
+}
+
+/// `VCOMBINE.32` — join two D halves into one Q register.
+#[inline(always)]
+pub fn vcombine_u32(lo: U32x2, hi: U32x2) -> U32x4 {
+    U32x4([lo.0[0], lo.0[1], hi.0[0], hi.0[1]])
+}
+
+/// `VSWP d, d`-style half swap expressed at Q level: returns
+/// `(lo(a) ++ lo(b), hi(a) ++ hi(b))` — the 64-bit-block transpose step
+/// used by the 16×16 network.
+#[inline(always)]
+pub fn vtrnq_u64(a: U64x2, b: U64x2) -> (U64x2, U64x2) {
+    (U64x2([a.0[0], b.0[0]]), U64x2([a.0[1], b.0[1]]))
+}
+
+// ---------------------------------------------------------------------------
+// reinterprets (pure bit casts; "auxiliary instructions ... do not affect
+// efficiency" — §4)
+// ---------------------------------------------------------------------------
+
+/// `vreinterpretq_u32_u16`
+#[inline(always)]
+pub fn reinterpret_u32_u16(v: U16x8) -> U32x4 {
+    U32x4::from_bytes(v.to_bytes())
+}
+
+/// `vreinterpretq_u16_u32`
+#[inline(always)]
+pub fn reinterpret_u16_u32(v: U32x4) -> U16x8 {
+    U16x8::from_bytes(v.to_bytes())
+}
+
+/// `vreinterpretq_u16_u8`
+#[inline(always)]
+pub fn reinterpret_u16_u8(v: U8x16) -> U16x8 {
+    U16x8::from_bytes(v.to_bytes())
+}
+
+/// `vreinterpretq_u8_u16`
+#[inline(always)]
+pub fn reinterpret_u8_u16(v: U16x8) -> U8x16 {
+    U8x16::from_bytes(v.to_bytes())
+}
+
+/// `vreinterpretq_u32_u8`
+#[inline(always)]
+pub fn reinterpret_u32_u8(v: U8x16) -> U32x4 {
+    U32x4::from_bytes(v.to_bytes())
+}
+
+/// `vreinterpretq_u8_u32`
+#[inline(always)]
+pub fn reinterpret_u8_u32(v: U32x4) -> U8x16 {
+    U8x16::from_bytes(v.to_bytes())
+}
+
+/// `vreinterpretq_u64_u32`
+#[inline(always)]
+pub fn reinterpret_u64_u32(v: U32x4) -> U64x2 {
+    U64x2::from_bytes(v.to_bytes())
+}
+
+/// `vreinterpretq_u32_u64`
+#[inline(always)]
+pub fn reinterpret_u32_u64(v: U64x2) -> U32x4 {
+    U32x4::from_bytes(v.to_bytes())
+}
+
+/// `vreinterpretq_u64_u8`
+#[inline(always)]
+pub fn reinterpret_u64_u8(v: U8x16) -> U64x2 {
+    U64x2::from_bytes(v.to_bytes())
+}
+
+/// `vreinterpretq_u8_u64`
+#[inline(always)]
+pub fn reinterpret_u8_u64(v: U64x2) -> U8x16 {
+    U8x16::from_bytes(v.to_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_store_round_trip() {
+        let src: Vec<u8> = (0..32).collect();
+        let v = vld1q_u8(&src[4..]);
+        assert_eq!(v.0[0], 4);
+        assert_eq!(v.0[15], 19);
+        let mut dst = [0u8; 20];
+        vst1q_u8(&mut dst[2..], v);
+        assert_eq!(&dst[2..18], &src[4..20]);
+    }
+
+    #[test]
+    fn min_max_lanewise() {
+        let a = U8x16([0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]);
+        let b = vdupq_n_u8(7);
+        assert_eq!(vminq_u8(a, b).0[..4], [0, 1, 2, 3]);
+        assert_eq!(vminq_u8(a, b).0[12..], [7, 7, 7, 7]);
+        assert_eq!(vmaxq_u8(a, b).0[..4], [7, 7, 7, 7]);
+        assert_eq!(vmaxq_u8(a, b).0[15], 15);
+    }
+
+    #[test]
+    fn vtrn16_matches_paper_fig2() {
+        // Paper Fig. 2: VTRN.16 swaps odd lanes of a with even lanes of b.
+        let a = U16x8([0, 1, 2, 3, 4, 5, 6, 7]);
+        let b = U16x8([10, 11, 12, 13, 14, 15, 16, 17]);
+        let (x, y) = vtrnq_u16(a, b);
+        assert_eq!(x.0, [0, 10, 2, 12, 4, 14, 6, 16]);
+        assert_eq!(y.0, [1, 11, 3, 13, 5, 15, 7, 17]);
+    }
+
+    #[test]
+    fn vtrn_is_involution() {
+        let a = U8x16([3; 16]);
+        let mut b = U8x16([9; 16]);
+        b.0[0] = 1;
+        let (x, y) = vtrnq_u8(a, b);
+        let (x2, y2) = vtrnq_u8(x, y);
+        assert_eq!(x2, a);
+        assert_eq!(y2, b);
+    }
+
+    #[test]
+    fn combine_get_round_trip() {
+        let q = U32x4([1, 2, 3, 4]);
+        let lo = vget_low_u32(q);
+        let hi = vget_high_u32(q);
+        assert_eq!(lo.0, [1, 2]);
+        assert_eq!(hi.0, [3, 4]);
+        assert_eq!(vcombine_u32(lo, hi), q);
+    }
+
+    #[test]
+    fn reinterpret_preserves_bytes() {
+        let v = U8x16([0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]);
+        let as_u16 = reinterpret_u16_u8(v);
+        // little-endian: lane 0 of u16 view is bytes (0, 1) -> 0x0100
+        assert_eq!(as_u16.0[0], 0x0100);
+        assert_eq!(reinterpret_u8_u16(as_u16), v);
+        let as_u32 = reinterpret_u32_u8(v);
+        assert_eq!(as_u32.0[0], 0x03020100);
+        assert_eq!(reinterpret_u8_u32(as_u32), v);
+        let as_u64 = reinterpret_u64_u8(v);
+        assert_eq!(as_u64.0[0], 0x0706050403020100);
+        assert_eq!(reinterpret_u8_u64(as_u64), v);
+    }
+
+    #[test]
+    fn vtrn64_swaps_halves() {
+        let a = U64x2([1, 2]);
+        let b = U64x2([3, 4]);
+        let (x, y) = vtrnq_u64(a, b);
+        assert_eq!(x.0, [1, 3]);
+        assert_eq!(y.0, [2, 4]);
+    }
+}

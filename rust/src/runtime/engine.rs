@@ -1,0 +1,126 @@
+//! Execution engines: the [`Engine`] trait abstracts "run artifact
+//! `name` on an image" so the coordinator can run against the real PJRT
+//! runtime ([`super::XlaRuntime`]) or the in-process native
+//! implementation ([`NativeEngine`]) — the latter both serves as the
+//! router's fast path for shapes without artifacts and lets coordinator
+//! tests run without compiled artifacts.
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::ArtifactMeta;
+use crate::image::Image;
+use crate::morphology::{self, MorphConfig, MorphOp};
+use crate::neon::Native;
+
+/// Something that can execute a named morphology/transpose artifact.
+pub trait Engine: Send {
+    /// Execute the operation described by `meta` on `img`.
+    fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>>;
+
+    /// Short backend label for metrics/logs.
+    fn backend_name(&self) -> &'static str;
+}
+
+/// Pure-rust engine: executes the op with the crate's native morphology
+/// (paper §5.3 final configuration).
+#[derive(Clone, Debug, Default)]
+pub struct NativeEngine {
+    cfg: MorphConfig,
+}
+
+impl NativeEngine {
+    pub fn new(cfg: MorphConfig) -> Self {
+        NativeEngine { cfg }
+    }
+}
+
+impl Engine for NativeEngine {
+    fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
+        if img.height() != meta.height || img.width() != meta.width {
+            return Err(anyhow!(
+                "image {}x{} does not match artifact {} ({}x{})",
+                img.height(),
+                img.width(),
+                meta.name,
+                meta.height,
+                meta.width
+            ));
+        }
+        let b = &mut Native;
+        let (w_x, w_y) = (meta.w_x, meta.w_y);
+        let out = match meta.op.as_str() {
+            "erode" => morphology::morphology(b, img, MorphOp::Erode, w_x, w_y, &self.cfg),
+            "dilate" => morphology::morphology(b, img, MorphOp::Dilate, w_x, w_y, &self.cfg),
+            "opening" => morphology::opening(b, img, w_x, w_y, &self.cfg),
+            "closing" => morphology::closing(b, img, w_x, w_y, &self.cfg),
+            "gradient" => morphology::gradient(b, img, w_x, w_y, &self.cfg),
+            "tophat" => morphology::tophat(b, img, w_x, w_y, &self.cfg),
+            "blackhat" => morphology::blackhat(b, img, w_x, w_y, &self.cfg),
+            "transpose" => crate::transpose::transpose_image(b, img),
+            other => return Err(anyhow!("unknown op {other:?}")),
+        };
+        Ok(out)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+
+    fn meta(op: &str, h: usize, w: usize, wx: usize, wy: usize) -> ArtifactMeta {
+        ArtifactMeta {
+            name: format!("{op}_{h}x{w}_w{wx}x{wy}"),
+            kind: "morphology".into(),
+            op: op.into(),
+            height: h,
+            width: w,
+            w_x: wx,
+            w_y: wy,
+            method: "hybrid".into(),
+            vertical: "transpose".into(),
+            dtype: "u8".into(),
+            file: String::new(),
+            out_shape: if op == "transpose" { (w, h) } else { (h, w) },
+        }
+    }
+
+    #[test]
+    fn native_engine_runs_all_ops() {
+        let img = synth::noise(32, 48, 3);
+        let mut e = NativeEngine::default();
+        for op in ["erode", "dilate", "opening", "closing", "gradient", "tophat", "blackhat"] {
+            let out = e.run(&meta(op, 32, 48, 3, 3), &img).unwrap();
+            assert_eq!((out.height(), out.width()), (32, 48), "{op}");
+        }
+        let t = e.run(&meta("transpose", 32, 48, 0, 0), &img).unwrap();
+        assert_eq!((t.height(), t.width()), (48, 32));
+    }
+
+    #[test]
+    fn native_engine_checks_shape() {
+        let img = synth::noise(8, 8, 1);
+        let mut e = NativeEngine::default();
+        assert!(e.run(&meta("erode", 16, 16, 3, 3), &img).is_err());
+    }
+
+    #[test]
+    fn native_engine_rejects_unknown_op() {
+        let img = synth::noise(8, 8, 1);
+        let mut e = NativeEngine::default();
+        assert!(e.run(&meta("sharpen", 8, 8, 3, 3), &img).is_err());
+    }
+
+    #[test]
+    fn native_matches_direct_call() {
+        let img = synth::noise(24, 40, 9);
+        let mut e = NativeEngine::default();
+        let got = e.run(&meta("erode", 24, 40, 5, 7), &img).unwrap();
+        let want = morphology::erode(&img, 5, 7);
+        assert!(got.same_pixels(&want));
+    }
+}

@@ -1,0 +1,222 @@
+//! `artifacts/manifest.json` — the contract between the python AOT
+//! compile path (`python/compile/aot.py`) and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Metadata of one AOT artifact (one lowered HLO module).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// "morphology" or "transpose".
+    pub kind: String,
+    /// erode / dilate / opening / closing / gradient / transpose.
+    pub op: String,
+    pub height: usize,
+    pub width: usize,
+    pub w_x: usize,
+    pub w_y: usize,
+    pub method: String,
+    pub vertical: String,
+    pub dtype: String,
+    /// File name (relative to the manifest directory).
+    pub file: String,
+    /// Output shape `[rows, cols]`.
+    pub out_shape: (usize, usize),
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Json) -> Result<ArtifactMeta> {
+        let f = |k: &str| {
+            v.str_field(k)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("artifact missing string field {k:?}"))
+        };
+        let u = |k: &str| {
+            v.usize_field(k)
+                .ok_or_else(|| anyhow!("artifact missing integer field {k:?}"))
+        };
+        let out = v
+            .get("output")
+            .and_then(|o| o.get("shape"))
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifact missing output.shape"))?;
+        if out.len() != 2 {
+            bail!("output.shape must be rank 2");
+        }
+        let out_shape = (
+            out[0].as_usize().ok_or_else(|| anyhow!("bad output.shape[0]"))?,
+            out[1].as_usize().ok_or_else(|| anyhow!("bad output.shape[1]"))?,
+        );
+        Ok(ArtifactMeta {
+            name: f("name")?,
+            kind: f("kind")?,
+            op: f("op")?,
+            height: u("height")?,
+            width: u("width")?,
+            w_x: u("w_x")?,
+            w_y: u("w_y")?,
+            method: f("method")?,
+            vertical: f("vertical")?,
+            dtype: f("dtype")?,
+            file: f("file")?,
+            out_shape,
+        })
+    }
+}
+
+/// The parsed manifest: artifact index keyed by name.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dtype: String,
+    by_name: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (factored out for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = json::parse(text).context("parsing manifest.json")?;
+        let format = root
+            .usize_field("format")
+            .ok_or_else(|| anyhow!("manifest missing format"))?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let dtype = root
+            .str_field("dtype")
+            .ok_or_else(|| anyhow!("manifest missing dtype"))?
+            .to_string();
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?;
+        let mut by_name = BTreeMap::new();
+        for a in arts {
+            let meta = ArtifactMeta::from_json(a)?;
+            if by_name.insert(meta.name.clone(), meta.clone()).is_some() {
+                bail!("duplicate artifact name {:?}", meta.name);
+            }
+        }
+        Ok(Manifest {
+            dir,
+            dtype,
+            by_name,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(String::as_str)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Find the artifact for (op, image shape, window).
+    pub fn find(
+        &self,
+        op: &str,
+        height: usize,
+        width: usize,
+        w_x: usize,
+        w_y: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.by_name.values().find(|m| {
+            m.op == op && m.height == height && m.width == width && m.w_x == w_x && m.w_y == w_y
+        })
+    }
+
+    /// All distinct (op, w_x, w_y) combinations served for a shape.
+    pub fn ops_for_shape(&self, height: usize, width: usize) -> Vec<&ArtifactMeta> {
+        self.by_name
+            .values()
+            .filter(|m| m.height == height && m.width == width)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "dtype": "u8",
+      "artifacts": [
+        {"name": "erode_256x256_w3x3", "kind": "morphology", "op": "erode",
+         "height": 256, "width": 256, "w_x": 3, "w_y": 3,
+         "method": "hybrid", "vertical": "transpose", "dtype": "u8",
+         "input": {"shape": [256, 256], "dtype": "u8"},
+         "output": {"shape": [256, 256], "dtype": "u8"},
+         "file": "erode_256x256_w3x3.hlo.txt"},
+        {"name": "transpose_256x256", "kind": "transpose", "op": "transpose",
+         "height": 256, "width": 256, "w_x": 0, "w_y": 0,
+         "method": "tiled", "vertical": "-", "dtype": "u8",
+         "input": {"shape": [256, 256], "dtype": "u8"},
+         "output": {"shape": [256, 256], "dtype": "u8"},
+         "file": "transpose_256x256.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.dtype, "u8");
+        let e = m.find("erode", 256, 256, 3, 3).unwrap();
+        assert_eq!(e.name, "erode_256x256_w3x3");
+        assert_eq!(e.out_shape, (256, 256));
+        assert_eq!(m.path_of(e), PathBuf::from("/tmp/a/erode_256x256_w3x3.hlo.txt"));
+        assert!(m.find("erode", 256, 256, 5, 5).is_none());
+        assert_eq!(m.ops_for_shape(256, 256).len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("\"format\": 1", "\"format\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let dup = SAMPLE.replace("transpose_256x256\", \"kind\": \"transpose",
+                                 "erode_256x256_w3x3\", \"kind\": \"transpose");
+        assert!(Manifest::parse(&dup, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // integration-level check, skipped when artifacts aren't built
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(!m.is_empty());
+            assert!(m.find("erode", 256, 256, 3, 3).is_some());
+        }
+    }
+}

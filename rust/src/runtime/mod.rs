@@ -1,0 +1,17 @@
+//! Runtime layer: everything needed to execute the python-AOT-lowered
+//! JAX/Pallas artifacts from rust — python is never on the request path.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` (the python↔rust
+//!   contract) and index artifacts by (op, shape, window).
+//! * [`xla_rt`] — [`XlaRuntime`]: PJRT CPU client + lazy compile cache;
+//!   `run_u8` feeds a u8 image literal through a compiled HLO module.
+//! * [`engine`] — the [`Engine`] abstraction + [`NativeEngine`] (pure
+//!   rust fallback/fast path) so the coordinator is backend-agnostic.
+
+pub mod engine;
+pub mod manifest;
+pub mod xla_rt;
+
+pub use engine::{Engine, NativeEngine};
+pub use manifest::{ArtifactMeta, Manifest};
+pub use xla_rt::XlaRuntime;

@@ -1,0 +1,152 @@
+//! The PJRT runtime: load AOT-lowered HLO text, compile once per
+//! artifact on the CPU PJRT client, execute from the rust hot path.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! DESIGN.md): jax ≥ 0.5 emits 64-bit instruction ids in serialized
+//! protos which xla_extension 0.5.1 rejects; the text parser reassigns
+//! ids.  Each artifact is compiled lazily on first use and cached.
+//!
+//! `PjRtLoadedExecutable` wraps a raw pointer and is not `Send`, so a
+//! runtime instance is thread-local by construction; the coordinator
+//! gives each worker thread its own [`XlaRuntime`] (the PJRT CPU client
+//! is cheap and the compiled executables share nothing mutable).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::engine::Engine;
+use super::manifest::{ArtifactMeta, Manifest};
+use crate::image::Image;
+
+/// PJRT-backed artifact executor with a compile cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client over the given artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of executables compiled so far (cache size).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Compile (or fetch from cache) the executable for `meta`.
+    fn executable(&mut self, meta: &ArtifactMeta) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&meta.name) {
+            let path = self.manifest.path_of(meta);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+            )
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", meta.name))?;
+            self.cache.insert(meta.name.clone(), exe);
+        }
+        Ok(&self.cache[&meta.name])
+    }
+
+    /// Warm the cache for every artifact matching `pred`.
+    pub fn precompile(&mut self, pred: impl Fn(&ArtifactMeta) -> bool) -> Result<usize> {
+        let metas: Vec<ArtifactMeta> = self
+            .manifest
+            .names()
+            .filter_map(|n| self.manifest.get(n).cloned())
+            .filter(|m| pred(m))
+            .collect();
+        let mut n = 0;
+        for m in &metas {
+            self.executable(m)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Execute artifact `meta` on a u8 image, returning the u8 image
+    /// result (the lowered functions return a 1-tuple).
+    pub fn run_u8(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
+        if img.height() != meta.height || img.width() != meta.width {
+            return Err(anyhow!(
+                "image {}x{} does not match artifact {} ({}x{})",
+                img.height(),
+                img.width(),
+                meta.name,
+                meta.height,
+                meta.width
+            ));
+        }
+        let compact;
+        let img = if img.stride() == img.width() {
+            img
+        } else {
+            compact = img.compact();
+            &compact
+        };
+        let input = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[meta.height, meta.width],
+            img.as_bytes(),
+        )
+        .context("creating input literal")?;
+
+        let (out_h, out_w) = meta.out_shape;
+        let exe = self.executable(meta)?;
+        let result = exe
+            .execute::<xla::Literal>(&[input])
+            .with_context(|| format!("executing {}", meta.name))?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+
+        let n = out.element_count();
+        if n != out_h * out_w {
+            return Err(anyhow!(
+                "artifact {} returned {} elements, expected {}x{}",
+                meta.name,
+                n,
+                out_h,
+                out_w
+            ));
+        }
+        let data: Vec<u8> = out.to_vec().context("copying output literal")?;
+        Ok(Image::from_vec(out_h, out_w, data))
+    }
+}
+
+impl Engine for XlaRuntime {
+    fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
+        self.run_u8(meta, img)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+// `xla::PjRtClient`/`PjRtLoadedExecutable` wrap C++ objects that the
+// PJRT CPU plugin allows to be *used* from one thread at a time but
+// *moved* between threads; the coordinator moves each runtime into its
+// worker thread at spawn and never shares it.
+unsafe impl Send for XlaRuntime {}

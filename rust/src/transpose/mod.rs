@@ -1,0 +1,138 @@
+//! Matrix / image transpose (paper §4).
+//!
+//! * [`scalar`] — element-wise transpose, the paper's "without SIMD"
+//!   baseline for Table 1.
+//! * [`neon`] — the paper's vtrn networks: 8×8.16 in 64 instructions
+//!   (16 load/store + 32 permutation + 16 free reinterprets) and
+//!   16×16.8 in 152 instructions (32 + 72 + 48), exactly the §4 counts.
+//! * Whole-image transpose ([`transpose_image`]) tiles the NEON networks
+//!   over the image with scalar edge handling — this is what the
+//!   baseline *vertical* morphology pass (§5.2.1) uses.
+
+pub mod neon;
+pub mod scalar;
+
+use crate::image::Image;
+use crate::neon::Backend;
+
+pub use neon::{transpose16x16_u8, transpose8x8_u16};
+pub use scalar::{transpose16x16_u8_scalar, transpose8x8_u16_scalar};
+
+/// Transpose a u8 image using 16×16 NEON tiles for the aligned interior
+/// and scalar copies for the right/bottom edges.
+pub fn transpose_image<B: Backend>(b: &mut B, img: &Image<u8>) -> Image<u8> {
+    let (h, w) = (img.height(), img.width());
+    let mut out = Image::zeros(w, h);
+    b.record_stream((h * w) as u64, (h * w) as u64);
+
+    let th = h - h % 16;
+    let tw = w - w % 16;
+    // interior: 16x16 NEON tiles, loaded/stored directly from the
+    // strided rows (no staging copies — EXPERIMENTS.md §Perf iter. 2)
+    for by in (0..th).step_by(16) {
+        for bx in (0..tw).step_by(16) {
+            let mut rows = [crate::neon::U8x16([0; 16]); 16];
+            for (r, reg) in rows.iter_mut().enumerate() {
+                *reg = b.vld1q_u8(&img.row(by + r)[bx..]);
+            }
+            neon::transpose16x16_regs(b, &mut rows);
+            for (r, reg) in rows.iter().enumerate() {
+                b.vst1q_u8(&mut out.row_mut(bx + r)[by..], *reg);
+            }
+        }
+    }
+    // right edge columns (accounted as scalar work)
+    for y in 0..h {
+        for x in tw..w {
+            let v = b.scalar_load_u8(img.row(y), x);
+            b.scalar_store_u8(out.row_mut(x), y, v);
+        }
+    }
+    // bottom edge rows (excluding the corner already done above)
+    for y in th..h {
+        for x in 0..tw {
+            let v = b.scalar_load_u8(img.row(y), x);
+            b.scalar_store_u8(out.row_mut(x), y, v);
+        }
+    }
+    out
+}
+
+/// Scalar whole-image transpose (baseline for benches).
+pub fn transpose_image_scalar<B: Backend>(b: &mut B, img: &Image<u8>) -> Image<u8> {
+    let (h, w) = (img.height(), img.width());
+    let mut out = Image::zeros(w, h);
+    b.record_stream((h * w) as u64, (h * w) as u64);
+    for y in 0..h {
+        for x in 0..w {
+            let v = b.scalar_load_u8(img.row(y), x);
+            b.scalar_store_u8(out.row_mut(x), y, v);
+        }
+    }
+    out
+}
+
+/// Cache-blocked scalar transpose (the fair non-SIMD comparator for
+/// large images, where naive scalar thrashes the cache).
+pub fn transpose_image_blocked<B: Backend>(
+    b: &mut B,
+    img: &Image<u8>,
+    block: usize,
+) -> Image<u8> {
+    let block = block.max(1);
+    let (h, w) = (img.height(), img.width());
+    let mut out = Image::zeros(w, h);
+    b.record_stream((h * w) as u64, (h * w) as u64);
+    for by in (0..h).step_by(block) {
+        for bx in (0..w).step_by(block) {
+            for y in by..(by + block).min(h) {
+                for x in bx..(bx + block).min(w) {
+                    let v = b.scalar_load_u8(img.row(y), x);
+                    b.scalar_store_u8(out.row_mut(x), y, v);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+    use crate::neon::{Counting, Native};
+
+    #[test]
+    fn image_transpose_matches_naive_all_shapes() {
+        for &(h, w) in &[(16, 16), (32, 48), (17, 33), (600, 800), (1, 5), (15, 15)] {
+            let img = synth::noise(h, w, (h * 1000 + w) as u64);
+            let want = img.transposed();
+            let got = transpose_image(&mut Native, &img);
+            assert!(got.same_pixels(&want), "neon tiled {h}x{w}");
+            let got_s = transpose_image_scalar(&mut Native, &img);
+            assert!(got_s.same_pixels(&want), "scalar {h}x{w}");
+            let got_b = transpose_image_blocked(&mut Native, &img, 32);
+            assert!(got_b.same_pixels(&want), "blocked {h}x{w}");
+        }
+    }
+
+    #[test]
+    fn tiled_transpose_instruction_mix_is_mostly_simd() {
+        let img = synth::noise(64, 64, 9);
+        let mut c = Counting::new();
+        let _ = transpose_image(&mut c, &img);
+        // 16 tiles * (16 ld + 16 st) vector mem ops, zero scalar loads
+        assert_eq!(c.mix.get(crate::neon::InstrClass::SimdLoad), 16 * 16);
+        assert_eq!(c.mix.get(crate::neon::InstrClass::ScalarLoad), 0);
+    }
+
+    #[test]
+    fn edges_fall_back_to_scalar() {
+        let img = synth::noise(18, 18, 10);
+        let mut c = Counting::new();
+        let got = transpose_image(&mut c, &img);
+        assert!(got.same_pixels(&img.transposed()));
+        // 1 NEON tile + (18*18 - 256) scalar edge pixels
+        assert_eq!(c.mix.get(crate::neon::InstrClass::ScalarLoad), (18 * 18 - 256) as u64);
+    }
+}

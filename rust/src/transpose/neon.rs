@@ -1,0 +1,219 @@
+//! The paper's §4 NEON transpose networks, ported intrinsic-for-intrinsic.
+//!
+//! * [`transpose8x8_u16`] is the paper's 8×8.16 listing verbatim:
+//!   4 `vtrnq_u16` + 4 `vtrnq_u32` + 8 `vcombine`/16 `vget` between 8
+//!   loads and 8 stores — 16 load/store + 32 data-permutation + 16
+//!   auxiliary reinterprets, the exact §4 instruction census.
+//! * [`transpose16x16_u8`] is the 16×16.8 network: a four-level vtrn
+//!   ladder (`vtrn.8`, `vtrn.16`, `vtrn.32`, then 64-bit half exchange
+//!   via `vget`/`vcombine`) — 32 load/store + 72 data-permutation,
+//!   matching the §4 census (our auxiliary-reinterpret count is 64 vs
+//!   the paper's 48: aux instructions are view changes the compiler may
+//!   or may not materialize, and are free in the cost model either way).
+
+use crate::neon::{Backend, U8x16};
+
+/// Transpose an 8×8 matrix of u16 (row-major, 64 elements).
+///
+/// Faithful port of the paper's §4 source listing.
+pub fn transpose8x8_u16<B: Backend>(b: &mut B, src: &[u16], dst: &mut [u16]) {
+    debug_assert!(src.len() >= 64 && dst.len() >= 64);
+    // 8 loads + 4 vtrn.16: transpose 2×2 blocks of u16
+    let r0 = b.vld1q_u16(&src[0..]);
+    let r1 = b.vld1q_u16(&src[8..]);
+    let r2 = b.vld1q_u16(&src[16..]);
+    let r3 = b.vld1q_u16(&src[24..]);
+    let r4 = b.vld1q_u16(&src[32..]);
+    let r5 = b.vld1q_u16(&src[40..]);
+    let r6 = b.vld1q_u16(&src[48..]);
+    let r7 = b.vld1q_u16(&src[56..]);
+    let t0 = b.vtrnq_u16(r0, r1);
+    let t1 = b.vtrnq_u16(r2, r3);
+    let t2 = b.vtrnq_u16(r4, r5);
+    let t3 = b.vtrnq_u16(r6, r7);
+
+    // 4 vtrn.32: transpose 2×2 blocks of u32 (pairs of u16)
+    let t00 = b.reinterpret_u32_u16(t0.0);
+    let t10 = b.reinterpret_u32_u16(t1.0);
+    let t20 = b.reinterpret_u32_u16(t2.0);
+    let t30 = b.reinterpret_u32_u16(t3.0);
+    let t01 = b.reinterpret_u32_u16(t0.1);
+    let t11 = b.reinterpret_u32_u16(t1.1);
+    let t21 = b.reinterpret_u32_u16(t2.1);
+    let t31 = b.reinterpret_u32_u16(t3.1);
+    let x0 = b.vtrnq_u32(t00, t10);
+    let x1 = b.vtrnq_u32(t20, t30);
+    let x2 = b.vtrnq_u32(t01, t11);
+    let x3 = b.vtrnq_u32(t21, t31);
+
+    // 8 stores of vcombine(vget_low/high …): transpose 2×2 blocks of u64
+    let lo = |b: &mut B, p: crate::neon::U32x4, q: crate::neon::U32x4| {
+        let l0 = b.vget_low_u32(p);
+        let l1 = b.vget_low_u32(q);
+        b.vcombine_u32(l0, l1)
+    };
+    let hi = |b: &mut B, p: crate::neon::U32x4, q: crate::neon::U32x4| {
+        let h0 = b.vget_high_u32(p);
+        let h1 = b.vget_high_u32(q);
+        b.vcombine_u32(h0, h1)
+    };
+
+    let d0 = lo(b, x0.0, x1.0);
+    let d0 = b.reinterpret_u16_u32(d0);
+    b.vst1q_u16(&mut dst[0..], d0);
+    let d1 = lo(b, x2.0, x3.0);
+    let d1 = b.reinterpret_u16_u32(d1);
+    b.vst1q_u16(&mut dst[8..], d1);
+    let d2 = lo(b, x0.1, x1.1);
+    let d2 = b.reinterpret_u16_u32(d2);
+    b.vst1q_u16(&mut dst[16..], d2);
+    let d3 = lo(b, x2.1, x3.1);
+    let d3 = b.reinterpret_u16_u32(d3);
+    b.vst1q_u16(&mut dst[24..], d3);
+    let d4 = hi(b, x0.0, x1.0);
+    let d4 = b.reinterpret_u16_u32(d4);
+    b.vst1q_u16(&mut dst[32..], d4);
+    let d5 = hi(b, x2.0, x3.0);
+    let d5 = b.reinterpret_u16_u32(d5);
+    b.vst1q_u16(&mut dst[40..], d5);
+    let d6 = hi(b, x0.1, x1.1);
+    let d6 = b.reinterpret_u16_u32(d6);
+    b.vst1q_u16(&mut dst[48..], d6);
+    let d7 = hi(b, x2.1, x3.1);
+    let d7 = b.reinterpret_u16_u32(d7);
+    b.vst1q_u16(&mut dst[56..], d7);
+}
+
+/// Transpose a 16×16 matrix of u8 (row-major, 256 elements).
+///
+/// Four-level vtrn ladder; level `d` transposes 2^d-byte blocks between
+/// register slots `i` and `i + 2^d`, results written back in place, so
+/// after all levels slot `i` holds column `i`.
+pub fn transpose16x16_u8<B: Backend>(b: &mut B, src: &[u8], dst: &mut [u8]) {
+    debug_assert!(src.len() >= 256 && dst.len() >= 256);
+    let mut rows: [U8x16; 16] = [U8x16([0; 16]); 16];
+    for (i, row) in rows.iter_mut().enumerate() {
+        *row = b.vld1q_u8(&src[i * 16..]);
+    }
+    transpose16x16_regs(b, &mut rows);
+    for (i, row) in rows.iter().enumerate() {
+        b.vst1q_u8(&mut dst[i * 16..], *row);
+    }
+}
+
+/// The register-only 16×16 vtrn ladder: transposes 16 loaded row
+/// registers in place (slot `i` ends up holding column `i`).  Exposed so
+/// whole-image tiling can load/store straight from strided rows without
+/// staging buffers.
+pub fn transpose16x16_regs<B: Backend>(b: &mut B, rows: &mut [U8x16; 16]) {
+    // level 0: vtrn.8 between slots (i, i+1)
+    for i in (0..16).step_by(2) {
+        let (x, y) = b.vtrnq_u8(rows[i], rows[i + 1]);
+        rows[i] = x;
+        rows[i + 1] = y;
+    }
+    // level 1: vtrn.16 between slots (i, i+2)
+    for g in (0..16).step_by(4) {
+        for i in g..g + 2 {
+            let a = b.reinterpret_u16_u8(rows[i]);
+            let c = b.reinterpret_u16_u8(rows[i + 2]);
+            let (x, y) = b.vtrnq_u16(a, c);
+            rows[i] = b.reinterpret_u8_u16(x);
+            rows[i + 2] = b.reinterpret_u8_u16(y);
+        }
+    }
+    // level 2: vtrn.32 between slots (i, i+4)
+    for g in (0..16).step_by(8) {
+        for i in g..g + 4 {
+            let a = b.reinterpret_u32_u8(rows[i]);
+            let c = b.reinterpret_u32_u8(rows[i + 4]);
+            let (x, y) = b.vtrnq_u32(a, c);
+            rows[i] = b.reinterpret_u8_u32(x);
+            rows[i + 4] = b.reinterpret_u8_u32(y);
+        }
+    }
+    // level 3: 64-bit half exchange between slots (i, i+8) via
+    // vget/vcombine (the paper's way of writing vtrn.64, which A32 lacks)
+    for i in 0..8 {
+        let a = b.reinterpret_u32_u8(rows[i]);
+        let c = b.reinterpret_u32_u8(rows[i + 8]);
+        let alo = b.vget_low_u32(a);
+        let ahi = b.vget_high_u32(a);
+        let clo = b.vget_low_u32(c);
+        let chi = b.vget_high_u32(c);
+        let lo = b.vcombine_u32(alo, clo);
+        let hi = b.vcombine_u32(ahi, chi);
+        rows[i] = b.reinterpret_u8_u32(lo);
+        rows[i + 8] = b.reinterpret_u8_u32(hi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::{Counting, InstrClass, Native};
+
+    fn want_t<T: Copy>(src: &[T], n: usize) -> Vec<T> {
+        (0..n * n).map(|i| src[(i % n) * n + i / n]).collect()
+    }
+
+    #[test]
+    fn neon_8x8_u16_matches_scalar() {
+        let src: Vec<u16> = (0..64).map(|i| (i * 321) as u16).collect();
+        let mut dst = vec![0u16; 64];
+        transpose8x8_u16(&mut Native, &src, &mut dst);
+        assert_eq!(dst, want_t(&src, 8));
+    }
+
+    #[test]
+    fn neon_16x16_u8_matches_scalar() {
+        let src: Vec<u8> = (0..=255).map(|i| (i as u32 * 37 % 251) as u8).collect();
+        let mut dst = vec![0u8; 256];
+        transpose16x16_u8(&mut Native, &src, &mut dst);
+        assert_eq!(dst, want_t(&src, 16));
+    }
+
+    #[test]
+    fn paper_census_8x8() {
+        // §4: "64 instructions: 16 load/store, 32 data permutation and 16
+        // auxiliary instructions"
+        let src: Vec<u16> = (0..64).collect();
+        let mut dst = vec![0u16; 64];
+        let mut c = Counting::new();
+        transpose8x8_u16(&mut c, &src, &mut dst);
+        let m = &c.mix;
+        let loadstore = m.get(InstrClass::SimdLoad) + m.get(InstrClass::SimdStore);
+        let perm = m.get(InstrClass::SimdPermute) + m.get(InstrClass::SimdCombine);
+        assert_eq!(loadstore, 16);
+        assert_eq!(perm, 32);
+        assert_eq!(m.get(InstrClass::SimdReinterpret), 16);
+        assert_eq!(m.scalar_total(), 0);
+    }
+
+    #[test]
+    fn paper_census_16x16() {
+        // §4: "152 instructions (32 load/store, 72 data permutation and
+        // 48 auxiliary...)" — we match load/store and permutation counts;
+        // reinterpret (free) count differs by view bookkeeping.
+        let src: Vec<u8> = (0..=255).collect();
+        let mut dst = vec![0u8; 256];
+        let mut c = Counting::new();
+        transpose16x16_u8(&mut c, &src, &mut dst);
+        let m = &c.mix;
+        let loadstore = m.get(InstrClass::SimdLoad) + m.get(InstrClass::SimdStore);
+        let perm = m.get(InstrClass::SimdPermute) + m.get(InstrClass::SimdCombine);
+        assert_eq!(loadstore, 32);
+        assert_eq!(perm, 72);
+        assert_eq!(m.scalar_total(), 0);
+    }
+
+    #[test]
+    fn transpose_is_involution() {
+        let src: Vec<u8> = (0..=255).map(|i| (i as u32 * 89 % 256) as u8).collect();
+        let mut once = vec![0u8; 256];
+        let mut twice = vec![0u8; 256];
+        transpose16x16_u8(&mut Native, &src, &mut once);
+        transpose16x16_u8(&mut Native, &once, &mut twice);
+        assert_eq!(twice, src);
+    }
+}

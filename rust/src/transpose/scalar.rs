@@ -1,0 +1,86 @@
+//! Scalar (non-SIMD) tile transposes — the paper's Table 1 baselines.
+//!
+//! These are deliberately the straightforward element loops a compiler
+//! sees without vectorization hints; the instruction accounting (64
+//! loads + 64 stores for 8×8.16, 256 + 256 for 16×16.8) feeds the cost
+//! model's "without SIMD" column.
+
+use crate::neon::Backend;
+
+/// 8×8 u16 tile transpose, element by element.
+///
+/// `src` and `dst` are row-major 64-element buffers; `src_stride` /
+/// `dst_stride` are row strides in elements (8 for a dense tile).
+pub fn transpose8x8_u16_scalar<B: Backend>(
+    b: &mut B,
+    src: &[u16],
+    dst: &mut [u16],
+) {
+    debug_assert!(src.len() >= 64 && dst.len() >= 64);
+    for y in 0..8 {
+        for x in 0..8 {
+            let v = b.scalar_load_u16(src, y * 8 + x);
+            b.scalar_store_u16(dst, x * 8 + y, v);
+        }
+    }
+}
+
+/// 16×16 u8 tile transpose, element by element.
+pub fn transpose16x16_u8_scalar<B: Backend>(b: &mut B, src: &[u8], dst: &mut [u8]) {
+    debug_assert!(src.len() >= 256 && dst.len() >= 256);
+    for y in 0..16 {
+        for x in 0..16 {
+            let v = b.scalar_load_u8(src, y * 16 + x);
+            b.scalar_store_u8(dst, x * 16 + y, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::{Counting, InstrClass, Native};
+
+    #[test]
+    fn scalar_8x8_transposes() {
+        let src: Vec<u16> = (0..64).collect();
+        let mut dst = vec![0u16; 64];
+        transpose8x8_u16_scalar(&mut Native, &src, &mut dst);
+        for y in 0..8 {
+            for x in 0..8 {
+                assert_eq!(dst[x * 8 + y], src[y * 8 + x]);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_16x16_transposes() {
+        let src: Vec<u8> = (0..=255).collect();
+        let mut dst = vec![0u8; 256];
+        transpose16x16_u8_scalar(&mut Native, &src, &mut dst);
+        for y in 0..16 {
+            for x in 0..16 {
+                assert_eq!(dst[x * 16 + y], src[y * 16 + x]);
+            }
+        }
+    }
+
+    #[test]
+    fn instruction_counts_match_paper_baseline() {
+        // Table 1 baseline mixes: pure element loads + stores.
+        let src: Vec<u16> = (0..64).collect();
+        let mut dst = vec![0u16; 64];
+        let mut c = Counting::new();
+        transpose8x8_u16_scalar(&mut c, &src, &mut dst);
+        assert_eq!(c.mix.get(InstrClass::ScalarLoad), 64);
+        assert_eq!(c.mix.get(InstrClass::ScalarStore), 64);
+        assert_eq!(c.mix.simd_total(), 0);
+
+        let src8: Vec<u8> = (0..=255).collect();
+        let mut dst8 = vec![0u8; 256];
+        let mut c = Counting::new();
+        transpose16x16_u8_scalar(&mut c, &src8, &mut dst8);
+        assert_eq!(c.mix.get(InstrClass::ScalarLoad), 256);
+        assert_eq!(c.mix.get(InstrClass::ScalarStore), 256);
+    }
+}

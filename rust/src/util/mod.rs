@@ -1,0 +1,16 @@
+//! Small self-contained utilities.
+//!
+//! The offline build has no serde / criterion / proptest, so this module
+//! provides the pieces the rest of the crate needs:
+//!
+//! * [`json`] — a strict recursive-descent JSON parser (for
+//!   `artifacts/manifest.json`) and a minimal writer.
+//! * [`timing`] — measurement helpers used by the bench harness
+//!   (warmup + repetition with min/mean/p50 reporting).
+//! * [`prop`] — a tiny property-testing loop over the deterministic
+//!   [`crate::image::synth::Rng`]: random cases, shrink-free but
+//!   seed-reported so failures reproduce exactly.
+
+pub mod json;
+pub mod prop;
+pub mod timing;

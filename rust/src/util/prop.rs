@@ -1,0 +1,83 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! [`forall`] runs a property over `n` random cases drawn from a
+//! deterministic seed; on failure it panics with the failing case seed
+//! so the exact case replays.  No shrinking — generators are kept small
+//! instead.
+
+use crate::image::synth::Rng;
+
+/// Run `prop(case_rng, case_index)` for `n` cases.  Each case gets its
+/// own deterministically-derived RNG.
+pub fn forall(seed: u64, n: usize, mut prop: impl FnMut(&mut Rng, usize)) {
+    for i in 0..n {
+        let case_seed = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(i as u64 + 1);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, i);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at case {i} (root seed {seed}, case seed {case_seed}): {msg}");
+        }
+    }
+}
+
+/// Random odd window in `[1, max]`.
+pub fn odd_window(rng: &mut Rng, max: usize) -> usize {
+    let max = max.max(1);
+    let k = rng.below(max.div_ceil(2));
+    2 * k + 1
+}
+
+/// Random image dimensions `(h, w)` within `[1, max_h] × [1, max_w]`.
+pub fn dims(rng: &mut Rng, max_h: usize, max_w: usize) -> (usize, usize) {
+    (1 + rng.below(max_h), 1 + rng.below(max_w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(42, 25, |_, _| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn forall_reports_failing_case() {
+        forall(42, 10, |rng, _| {
+            assert!(rng.below(10) != usize::MAX); // always true
+            assert!(rng.below(3) < 2, "sometimes false");
+        });
+    }
+
+    #[test]
+    fn odd_window_is_odd_and_bounded() {
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let w = odd_window(&mut rng, 31);
+            assert!(w % 2 == 1 && (1..=31).contains(&w));
+        }
+    }
+
+    #[test]
+    fn dims_in_range() {
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let (h, w) = dims(&mut rng, 40, 60);
+            assert!((1..=40).contains(&h) && (1..=60).contains(&w));
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Measurement helpers for the bench harness (criterion is unavailable
+//! offline): warmup, repeated timing, robust statistics.
+
+use std::time::Instant;
+
+/// Statistics over repeated timings (nanoseconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stats {
+    pub iters: usize,
+    pub min_ns: f64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        Stats {
+            iters: n,
+            min_ns: ns[0],
+            mean_ns: ns.iter().sum::<f64>() / n as f64,
+            p50_ns: ns[n / 2],
+            max_ns: ns[n - 1],
+        }
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+/// Each run is timed individually (use [`bench_batched`] for sub-µs
+/// functions).
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    Stats::from_samples(samples)
+}
+
+/// Time `f` in batches of `batch` calls per sample — for fast functions
+/// where a single call is below timer resolution.  Reported numbers are
+/// per call.
+pub fn bench_batched<T>(
+    warmup: usize,
+    samples: usize,
+    batch: usize,
+    mut f: impl FnMut() -> T,
+) -> Stats {
+    let batch = batch.max(1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f());
+        }
+        out.push(t.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    Stats::from_samples(out)
+}
+
+/// Pick a batch size so one sample takes roughly `target_us`
+/// microseconds.
+pub fn auto_batch<T>(target_us: f64, mut f: impl FnMut() -> T) -> usize {
+    let t = Instant::now();
+    std::hint::black_box(f());
+    let one = t.elapsed().as_nanos().max(1) as f64;
+    ((target_us * 1000.0 / one).ceil() as usize).clamp(1, 10_000_000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = bench(1, 16, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.min_ns > 0.0);
+        assert!(s.min_ns <= s.p50_ns);
+        assert!(s.p50_ns <= s.max_ns);
+        assert!(s.min_ns <= s.mean_ns && s.mean_ns <= s.max_ns);
+        assert_eq!(s.iters, 16);
+    }
+
+    #[test]
+    fn batched_reports_per_call() {
+        let single = bench(2, 8, || std::hint::black_box(3u64).pow(7));
+        let batched = bench_batched(2, 8, 1000, || std::hint::black_box(3u64).pow(7));
+        // batched per-call time must not exceed raw single-call timing
+        // (which includes timer overhead)
+        assert!(batched.p50_ns <= single.p50_ns * 2.0 + 100.0);
+    }
+
+    #[test]
+    fn auto_batch_positive() {
+        let b = auto_batch(100.0, || 1 + 1);
+        assert!(b >= 1);
+    }
+}

@@ -1,0 +1,111 @@
+//! Integration tests driving the `neon-morph` binary end to end.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_neon-morph"))
+}
+
+fn tmpdir() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("neon_morph_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = bin().arg("--help").output().unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("USAGE"));
+    assert!(s.contains("bench"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = bin().arg("explode").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn demo_then_filter_round_trip() {
+    let dir = tmpdir();
+    let out = bin()
+        .args(["demo", "--outdir"])
+        .arg(&dir)
+        .args(["--height", "120", "--width", "160"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let input = dir.join("demo_input.pgm");
+    assert!(input.exists());
+
+    let output = dir.join("filtered.pgm");
+    let out = bin()
+        .args(["filter", "--op", "dilate", "--wx", "5", "--wy", "3", "--backend", "native"])
+        .arg("--input")
+        .arg(&input)
+        .arg("--output")
+        .arg(&output)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // verify the CLI result equals the library call
+    let img = neon_morph::image::read_pgm(&input).unwrap();
+    let want = neon_morph::morphology::dilate(&img, 5, 3);
+    let got = neon_morph::image::read_pgm(&output).unwrap();
+    assert!(got.same_pixels(&want));
+}
+
+#[test]
+fn filter_rejects_missing_input() {
+    let out = bin()
+        .args(["filter", "--input", "/nonexistent.pgm", "--output", "/tmp/x.pgm"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn bench_table1_runs() {
+    let out = bin().args(["bench", "table1"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("Table 1"));
+    assert!(s.contains("16x16"));
+}
+
+#[test]
+fn bench_rejects_unknown_target() {
+    let out = bin().args(["bench", "fig9"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn calibrate_small_window_runs() {
+    let out = bin().args(["calibrate", "--max-window", "9"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("w_y0"));
+    assert!(s.contains("w_x0"));
+}
+
+#[test]
+fn info_reports_manifest_or_absence() {
+    let out = bin().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("manifest") || s.contains("no manifest"));
+}
+
+#[test]
+fn serve_native_small_load() {
+    let out = bin()
+        .args(["serve", "--backend", "native", "--requests", "12", "--workers", "2", "--window", "3"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("completed 12 requests"));
+}

@@ -1,0 +1,174 @@
+//! Integration tests over the full L3 path: coordinator → router →
+//! (XLA | native) engines, with concurrency, mixed backends and
+//! failure handling.
+
+use std::sync::Arc;
+
+use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use neon_morph::image::synth;
+use neon_morph::morphology::{self, MorphConfig};
+use neon_morph::neon::Native;
+use neon_morph::runtime::Manifest;
+
+fn artifacts_built() -> bool {
+    Manifest::load("artifacts").is_ok()
+}
+
+fn auto_coordinator(workers: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers,
+        backend: BackendChoice::Auto,
+        artifact_dir: Some("artifacts".into()),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn auto_routes_artifact_shapes_to_xla_and_others_to_native() {
+    if !artifacts_built() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let coord = auto_coordinator(1);
+    // 256x256 erode w3x3 has an artifact -> xla
+    let img = Arc::new(synth::noise(256, 256, 11));
+    let r = coord.filter("erode", 3, 3, img.clone()).unwrap();
+    assert_eq!(r.backend, "xla-pjrt");
+    let want = morphology::erode(&img, 3, 3);
+    assert!(r.result.unwrap().same_pixels(&want));
+
+    // 100x100 has no artifact -> native
+    let img2 = Arc::new(synth::noise(100, 100, 12));
+    let r2 = coord.filter("erode", 3, 3, img2.clone()).unwrap();
+    assert_eq!(r2.backend, "native");
+    assert!(r2.result.unwrap().same_pixels(&morphology::erode(&img2, 3, 3)));
+    coord.shutdown();
+}
+
+#[test]
+fn xla_only_fails_for_uncompiled_shape() {
+    if !artifacts_built() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        backend: BackendChoice::XlaOnly,
+        artifact_dir: Some("artifacts".into()),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let img = Arc::new(synth::noise(100, 100, 13));
+    let r = coord.filter("erode", 3, 3, img).unwrap();
+    assert!(r.result.is_err(), "no artifact for 100x100 -> must fail");
+    let ok = Arc::new(synth::noise(256, 256, 14));
+    let r2 = coord.filter("erode", 3, 3, ok).unwrap();
+    assert_eq!(r2.backend, "xla-pjrt");
+    assert!(r2.result.is_ok());
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_concurrent_load_from_many_threads() {
+    if !artifacts_built() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let coord = Arc::new(auto_coordinator(4));
+    let img_art = Arc::new(synth::noise(256, 256, 15));
+    let img_nat = Arc::new(synth::noise(64, 64, 16));
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        let coord = coord.clone();
+        let img_art = img_art.clone();
+        let img_nat = img_nat.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..6 {
+                let (op, img) = match (t + i) % 3 {
+                    0 => ("erode", img_art.clone()),
+                    1 => ("dilate", img_art.clone()),
+                    _ => ("gradient", img_nat.clone()),
+                };
+                let w = if img.height() == 256 { 3 } else { 5 };
+                let r = coord.filter(op, w, w, img).unwrap();
+                r.result.unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, 36);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.mean_batch_size() >= 1.0);
+}
+
+#[test]
+fn native_fallback_when_artifact_dir_missing() {
+    // Auto + nonexistent dir must degrade to native, not fail
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        backend: BackendChoice::Auto,
+        artifact_dir: Some("/nonexistent/artifacts".into()),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let img = Arc::new(synth::noise(32, 32, 17));
+    let r = coord.filter("erode", 3, 3, img.clone()).unwrap();
+    assert_eq!(r.backend, "native");
+    assert!(r.result.unwrap().same_pixels(&morphology::erode(&img, 3, 3)));
+    coord.shutdown();
+}
+
+#[test]
+fn xla_only_without_artifacts_fails_to_start() {
+    let r = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        backend: BackendChoice::XlaOnly,
+        artifact_dir: Some("/nonexistent/artifacts".into()),
+        ..CoordinatorConfig::default()
+    });
+    assert!(r.is_err());
+}
+
+#[test]
+fn derived_ops_through_full_xla_path() {
+    if !artifacts_built() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let coord = auto_coordinator(2);
+    let img = Arc::new(synth::document(256, 256, 18));
+    let cfg = MorphConfig::default();
+    for (op, wx, wy) in [("opening", 7usize, 7usize), ("closing", 7, 7), ("gradient", 15, 15)] {
+        let r = coord.filter(op, wx, wy, img.clone()).unwrap();
+        assert_eq!(r.backend, "xla-pjrt", "{op}");
+        let got = r.result.unwrap();
+        let want = match op {
+            "opening" => morphology::opening(&mut Native, &img, wx, wy, &cfg),
+            "closing" => morphology::closing(&mut Native, &img, wx, wy, &cfg),
+            _ => morphology::gradient(&mut Native, &img, wx, wy, &cfg),
+        };
+        assert!(got.same_pixels(&want), "{op} xla != native");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn queue_latency_reported_nonzero_under_load() {
+    let coord = Coordinator::start_native(1).unwrap();
+    let img = Arc::new(synth::paper_image(19));
+    let tickets: Vec<_> = (0..8)
+        .map(|_| coord.submit("opening", 9, 9, img.clone()).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().unwrap().result.unwrap();
+    }
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, 8);
+    // with a single worker the later requests must have queued
+    assert!(snap.queue_p99_us > 0.0);
+    coord.shutdown();
+}

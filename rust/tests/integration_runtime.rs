@@ -1,0 +1,137 @@
+//! Integration tests over the PJRT runtime: the python-AOT-lowered
+//! artifacts must agree bit-for-bit with the native rust implementation.
+//!
+//! Requires `make artifacts`; every test skips cleanly (with a notice)
+//! when the manifest is missing so `cargo test` works pre-build.
+
+use neon_morph::image::synth;
+use neon_morph::runtime::{Engine, Manifest, NativeEngine, XlaRuntime};
+
+fn runtime_or_skip() -> Option<XlaRuntime> {
+    match XlaRuntime::new("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#})");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_contains_expected_grid() {
+    let Ok(m) = Manifest::load("artifacts") else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    // aot.py default grid: 2 shapes x (5 ops x 3 windows + transpose)
+    assert!(m.len() >= 32, "expected >=32 artifacts, got {}", m.len());
+    for op in ["erode", "dilate", "opening", "closing", "gradient"] {
+        for (wx, wy) in [(3, 3), (7, 7), (15, 15)] {
+            assert!(
+                m.find(op, 256, 256, wx, wy).is_some(),
+                "missing {op} 256x256 w{wx}x{wy}"
+            );
+            assert!(
+                m.find(op, 600, 800, wx, wy).is_some(),
+                "missing {op} 600x800 w{wx}x{wy}"
+            );
+        }
+    }
+    assert!(m.get("transpose_256x256").is_some());
+    assert!(m.get("transpose_600x800").is_some());
+}
+
+#[test]
+fn xla_artifacts_match_native_on_256() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut native = NativeEngine::default();
+    let img = synth::noise(256, 256, 4242);
+    let metas: Vec<_> = rt
+        .manifest()
+        .ops_for_shape(256, 256)
+        .into_iter()
+        .cloned()
+        .collect();
+    assert!(!metas.is_empty());
+    for meta in metas {
+        let got = rt.run(&meta, &img).unwrap_or_else(|e| panic!("{}: {e:#}", meta.name));
+        let want = native.run(&meta, &img).unwrap();
+        assert!(
+            got.same_pixels(&want),
+            "{} disagrees with native: {:?}",
+            meta.name,
+            got.first_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn xla_paper_shape_artifact_matches_native() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut native = NativeEngine::default();
+    let img = synth::paper_image(7);
+    let meta = rt
+        .manifest()
+        .find("erode", 600, 800, 7, 7)
+        .expect("600x800 erode w7x7 artifact")
+        .clone();
+    let got = rt.run(&meta, &img).unwrap();
+    let want = native.run(&meta, &img).unwrap();
+    assert!(got.same_pixels(&want), "{:?}", got.first_diff(&want));
+}
+
+#[test]
+fn xla_transpose_artifact() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let img = synth::noise(256, 256, 5);
+    let meta = rt.manifest().get("transpose_256x256").unwrap().clone();
+    let got = rt.run(&meta, &img).unwrap();
+    assert!(got.same_pixels(&img.transposed()));
+}
+
+#[test]
+fn xla_rejects_wrong_shape() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let meta = rt.manifest().find("erode", 256, 256, 3, 3).unwrap().clone();
+    let img = synth::noise(100, 100, 6);
+    assert!(rt.run(&meta, &img).is_err());
+}
+
+#[test]
+fn strided_images_are_compacted_before_upload() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let meta = rt.manifest().find("dilate", 256, 256, 3, 3).unwrap().clone();
+    let img = synth::noise(256, 256, 7);
+    let strided = img.with_stride(320, 0xAB);
+    let got = rt.run(&meta, &strided).unwrap();
+    let want = rt.run(&meta, &img).unwrap();
+    assert!(got.same_pixels(&want));
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let meta = rt.manifest().find("erode", 256, 256, 3, 3).unwrap().clone();
+    let img = synth::noise(256, 256, 8);
+    assert_eq!(rt.compiled_count(), 0);
+    let _ = rt.run(&meta, &img).unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+    let t = std::time::Instant::now();
+    for _ in 0..3 {
+        let _ = rt.run(&meta, &img).unwrap();
+    }
+    let warm = t.elapsed();
+    assert_eq!(rt.compiled_count(), 1, "no recompilation");
+    // warm executions must be far below compile time (~100ms each)
+    assert!(warm.as_millis() < 3000, "warm runs too slow: {warm:?}");
+}
+
+#[test]
+fn precompile_warms_all_256_artifacts() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = rt
+        .precompile(|m| m.height == 256 && m.kind == "morphology")
+        .unwrap();
+    assert!(n >= 15, "expected >=15 morphology artifacts at 256, got {n}");
+    assert_eq!(rt.compiled_count(), n);
+}

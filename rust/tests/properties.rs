@@ -1,0 +1,263 @@
+//! Property-based tests over the morphology/transpose invariants.
+//!
+//! Uses the in-crate harness (`util::prop`) — random cases from a
+//! deterministic seed, failing case seeds reported in the panic.
+
+use std::sync::Arc;
+
+use neon_morph::image::synth::{self, Rng};
+use neon_morph::image::Image;
+use neon_morph::morphology::{self, naive, Border, HybridThresholds, MorphConfig, MorphOp,
+                             PassMethod, VerticalStrategy};
+use neon_morph::neon::Native;
+use neon_morph::util::prop::{dims, forall, odd_window};
+
+fn random_image(rng: &mut Rng, max_h: usize, max_w: usize) -> Image<u8> {
+    let (h, w) = dims(rng, max_h, max_w);
+    let seed = rng.next_u64();
+    synth::noise(h, w, seed)
+}
+
+fn all_configs() -> Vec<MorphConfig> {
+    let mut out = Vec::new();
+    for method in [PassMethod::Linear, PassMethod::Vhgw, PassMethod::Hybrid] {
+        for vertical in [VerticalStrategy::Transpose, VerticalStrategy::Direct] {
+            for simd in [false, true] {
+                out.push(MorphConfig {
+                    method,
+                    vertical,
+                    simd,
+                    border: Border::Identity,
+                    thresholds: HybridThresholds::paper(),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_every_config_matches_naive_2d() {
+    forall(101, 40, |rng, _| {
+        let img = random_image(rng, 40, 56);
+        let w_x = odd_window(rng, 11);
+        let w_y = odd_window(rng, 11);
+        let op = if rng.below(2) == 0 { MorphOp::Erode } else { MorphOp::Dilate };
+        let want = naive::morph2d_naive(&mut Native, &img, w_x, w_y, op);
+        for cfg in all_configs() {
+            let got = morphology::morphology(&mut Native, &img, op, w_x, w_y, &cfg);
+            assert!(
+                got.same_pixels(&want),
+                "cfg {cfg:?} op {op:?} se {w_x}x{w_y} img {}x{} diff {:?}",
+                img.height(),
+                img.width(),
+                got.first_diff(&want)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_erosion_below_dilation_above() {
+    forall(102, 60, |rng, _| {
+        let img = random_image(rng, 48, 48);
+        let w_x = odd_window(rng, 9);
+        let w_y = odd_window(rng, 9);
+        let e = morphology::erode(&img, w_x, w_y);
+        let d = morphology::dilate(&img, w_x, w_y);
+        for y in 0..img.height() {
+            for x in 0..img.width() {
+                assert!(e.get(y, x) <= img.get(y, x));
+                assert!(d.get(y, x) >= img.get(y, x));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_duality_erode_dilate() {
+    forall(103, 60, |rng, _| {
+        let img = random_image(rng, 40, 40);
+        let w_x = odd_window(rng, 9);
+        let w_y = odd_window(rng, 9);
+        let inv = Image::from_fn(img.height(), img.width(), |y, x| 255 - img.get(y, x));
+        let e = morphology::erode(&img, w_x, w_y);
+        let d = morphology::dilate(&inv, w_x, w_y);
+        for y in 0..img.height() {
+            for x in 0..img.width() {
+                assert_eq!(e.get(y, x), 255 - d.get(y, x), "at ({y},{x})");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_erosion_monotone_in_image() {
+    // img1 <= img2 pointwise  =>  erode(img1) <= erode(img2)
+    forall(104, 40, |rng, _| {
+        let a = random_image(rng, 32, 32);
+        let deltas = Image::from_fn(a.height(), a.width(), |_, _| rng.next_u8() % 40);
+        let b = Image::from_fn(a.height(), a.width(), |y, x| {
+            a.get(y, x).saturating_add(deltas.get(y, x))
+        });
+        let w = odd_window(rng, 9);
+        let ea = morphology::erode(&a, w, w);
+        let eb = morphology::erode(&b, w, w);
+        for y in 0..a.height() {
+            for x in 0..a.width() {
+                assert!(ea.get(y, x) <= eb.get(y, x));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_erosion_decreasing_in_window() {
+    // larger SE => smaller (or equal) erosion everywhere
+    forall(105, 40, |rng, _| {
+        let img = random_image(rng, 36, 36);
+        let w1 = odd_window(rng, 7);
+        let w2 = w1 + 2 * (1 + rng.below(3));
+        let e1 = morphology::erode(&img, w1, w1);
+        let e2 = morphology::erode(&img, w2, w2);
+        for y in 0..img.height() {
+            for x in 0..img.width() {
+                assert!(e2.get(y, x) <= e1.get(y, x));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_opening_closing_idempotent_and_sandwich() {
+    forall(106, 25, |rng, _| {
+        let img = random_image(rng, 32, 32);
+        let w = odd_window(rng, 7);
+        let cfg = MorphConfig::default();
+        let o = morphology::opening(&mut Native, &img, w, w, &cfg);
+        let c = morphology::closing(&mut Native, &img, w, w, &cfg);
+        let oo = morphology::opening(&mut Native, &o, w, w, &cfg);
+        let cc = morphology::closing(&mut Native, &c, w, w, &cfg);
+        assert!(oo.same_pixels(&o), "opening idempotence");
+        assert!(cc.same_pixels(&c), "closing idempotence");
+        for y in 0..img.height() {
+            for x in 0..img.width() {
+                assert!(o.get(y, x) <= img.get(y, x), "opening anti-extensive");
+                assert!(c.get(y, x) >= img.get(y, x), "closing extensive");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_transpose_involution_and_tile_equivalence() {
+    forall(107, 60, |rng, _| {
+        let img = random_image(rng, 70, 70);
+        let t = neon_morph::transpose::transpose_image(&mut Native, &img);
+        assert_eq!(t.height(), img.width());
+        assert_eq!(t.width(), img.height());
+        let tt = neon_morph::transpose::transpose_image(&mut Native, &t);
+        assert!(tt.same_pixels(&img), "involution");
+        let ts = neon_morph::transpose::transpose_image_scalar(&mut Native, &img);
+        assert!(t.same_pixels(&ts), "neon tiles == scalar");
+    });
+}
+
+#[test]
+fn prop_cols_pass_equals_transpose_sandwich() {
+    // cols-pass(img) == transpose(rows-pass(transpose(img))) for the
+    // linear method — the identity §5.2.1 relies on
+    forall(108, 30, |rng, _| {
+        let img = random_image(rng, 40, 40);
+        let w = odd_window(rng, 11);
+        let op = if rng.below(2) == 0 { MorphOp::Erode } else { MorphOp::Dilate };
+        let direct = morphology::linear::cols_simd_linear(&mut Native, &img, w, op);
+        let t = img.transposed();
+        let rows = morphology::linear::rows_simd_linear(&mut Native, &t, w, op);
+        let sandwich = rows.transposed();
+        assert!(direct.same_pixels(&sandwich), "{:?}", direct.first_diff(&sandwich));
+    });
+}
+
+#[test]
+fn prop_gradient_zero_on_flat() {
+    forall(109, 25, |rng, _| {
+        let (h, w) = dims(rng, 24, 24);
+        let flat = Image::filled(h, w, rng.next_u8());
+        let wz = odd_window(rng, 7);
+        let g = morphology::gradient(&mut Native, &flat, wz, wz, &MorphConfig::default());
+        assert_eq!(g.min_max().map(|(_, mx)| mx), Some(0), "flat image has zero gradient");
+    });
+}
+
+#[test]
+fn prop_replicate_border_never_exceeds_identity_for_erosion() {
+    forall(110, 25, |rng, _| {
+        let img = random_image(rng, 28, 28);
+        let w = odd_window(rng, 9);
+        let mut cfg = MorphConfig::default();
+        let ident = morphology::morphology(&mut Native, &img, MorphOp::Erode, w, w, &cfg);
+        cfg.border = Border::Replicate;
+        let repl = morphology::morphology(&mut Native, &img, MorphOp::Erode, w, w, &cfg);
+        for y in 0..img.height() {
+            for x in 0..img.width() {
+                assert!(repl.get(y, x) <= ident.get(y, x));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pgm_round_trip() {
+    forall(111, 25, |rng, _| {
+        let img = random_image(rng, 30, 30);
+        let dir = std::env::temp_dir().join("neon_morph_prop_pgm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("t{}.pgm", rng.next_u64()));
+        neon_morph::image::write_pgm(&img, &path).unwrap();
+        let back = neon_morph::image::read_pgm(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(back.same_pixels(&img));
+    });
+}
+
+#[test]
+fn prop_coordinator_results_equal_direct_calls() {
+    let coord = neon_morph::coordinator::Coordinator::start_native(3).unwrap();
+    forall(112, 20, |rng, _| {
+        let img = Arc::new(random_image(rng, 40, 40));
+        let w_x = odd_window(rng, 9);
+        let w_y = odd_window(rng, 9);
+        let op = ["erode", "dilate", "gradient"][rng.below(3)];
+        let resp = coord.filter(op, w_x, w_y, img.clone()).unwrap();
+        let got = resp.result.unwrap();
+        let cfg = MorphConfig::default();
+        let want = match op {
+            "erode" => morphology::erode(&img, w_x, w_y),
+            "dilate" => morphology::dilate(&img, w_x, w_y),
+            _ => morphology::gradient(&mut Native, &img, w_x, w_y, &cfg),
+        };
+        assert!(got.same_pixels(&want), "{op} {w_x}x{w_y}");
+    });
+    coord.shutdown();
+}
+
+#[test]
+fn prop_instruction_mix_scales_linearly_with_pixels() {
+    // the basis of the cost-model substitution: mixes are linear in
+    // image size, so crossovers derived on probes transfer to the
+    // paper's workload
+    use neon_morph::neon::{Backend as _, Counting};
+    forall(113, 10, |rng, _| {
+        let w = odd_window(rng, 9).max(3);
+        let img1 = synth::noise(32, 64, 1);
+        let img2 = synth::noise(64, 64, 2); // 2x the rows
+        let count = |img: &Image<u8>| {
+            let mut c = Counting::new();
+            let _ = morphology::linear::rows_simd_linear(&mut c, img, w, MorphOp::Erode);
+            c.mix.simd_total() as f64
+        };
+        let r = count(&img2) / count(&img1);
+        assert!((r - 2.0).abs() < 0.25, "expected ~2x ops for 2x rows, got {r}");
+    });
+}
