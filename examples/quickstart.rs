@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     // 5. The same through the serving layer (router + batcher + workers).
     let coord = Coordinator::start_native(2)?;
     let resp = coord.filter("erode", 7, 7, Arc::new(img.clone()))?;
-    let served = resp.result?;
+    let served = resp.result?.expect_u8();
     println!(
         "served erode  : backend={} queue={} µs exec={} µs",
         resp.backend,

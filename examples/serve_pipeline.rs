@@ -68,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     let mut verified = 0usize;
     for (meta, img, ticket) in submitted {
         let resp = ticket?.wait()?;
-        let out = resp.result?;
+        let out = resp.result?.expect_u8();
         *by_backend.entry(resp.backend).or_default() += 1;
         // verify EVERY response against the native engine
         let want = native.run(&meta, &img)?;

@@ -155,6 +155,46 @@ def transpose(img):
     return jnp.transpose(img)
 
 
+# ---------------------------------------------------------------------------
+# explicit u16 mirrors
+#
+# ``filter_1d`` and friends are dtype-generic already; these wrappers pin
+# the 16-bit contract the rust stack's ``MorphPixel`` u16 path mirrors
+# (identity = 65535/0, dtype preserved end to end) and are what the
+# cross-language golden fixture (fixtures/parity_u16.json, generated by
+# python/tools/gen_parity_fixture.py) is built from.
+# ---------------------------------------------------------------------------
+
+
+def _as_u16(img):
+    img = jnp.asarray(img)
+    if img.dtype != jnp.uint16:
+        raise ValueError(f"expected a uint16 image, got {img.dtype}")
+    return img
+
+
+def erode_u16(img, w_x: int, w_y: int):
+    """2-D u16 erosion (identity borders = 65535), dtype-preserving."""
+    out = erode(_as_u16(img), w_x, w_y)
+    assert out.dtype == jnp.uint16
+    return out
+
+
+def dilate_u16(img, w_x: int, w_y: int):
+    """2-D u16 dilation (identity borders = 0), dtype-preserving."""
+    out = dilate(_as_u16(img), w_x, w_y)
+    assert out.dtype == jnp.uint16
+    return out
+
+
+def opening_u16(img, w_x: int, w_y: int):
+    return dilate_u16(erode_u16(img, w_x, w_y), w_x, w_y)
+
+
+def closing_u16(img, w_x: int, w_y: int):
+    return erode_u16(dilate_u16(img, w_x, w_y), w_x, w_y)
+
+
 def vhgw_1d(img, window: int, axis: int, op: str):
     """van Herk/Gil-Werman running min/max — numpy reference of the
     *algorithm* (not just the result), used to cross-check the Pallas vHGW

@@ -6,6 +6,9 @@ exact equality on integer dtypes.  Hypothesis sweeps shapes, windows and
 dtypes.
 """
 
+import json
+import pathlib
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -15,6 +18,10 @@ from compile.kernels import morph1d, ref
 from compile.kernels import transpose as tk
 
 RNG = np.random.default_rng(0xC0FFEE)
+
+PARITY_FIXTURE = (
+    pathlib.Path(__file__).resolve().parents[2] / "fixtures" / "parity_u16.json"
+)
 
 
 def rand_img(h, w, dtype=np.uint8):
@@ -161,6 +168,47 @@ def test_transpose_specializations_validate_input():
         tk.transpose16x16_u8(jnp.zeros((16, 16), jnp.uint16))
     with pytest.raises(ValueError):
         tk.transpose_tiled(jnp.zeros((4, 4, 4), jnp.uint8))
+
+
+# ---------------------------------------------------------------------------
+# cross-language u16 golden fixture (shared with rust/tests/parity_fixture.rs)
+# ---------------------------------------------------------------------------
+
+
+def _parity_cases():
+    doc = json.loads(PARITY_FIXTURE.read_text())
+    assert doc["format"] == 1 and doc["dtype"] == "u16"
+    return doc["cases"]
+
+
+def test_u16_parity_fixture_matches_ref_oracle():
+    ops = {
+        "erode": ref.erode_u16,
+        "dilate": ref.dilate_u16,
+        "opening": ref.opening_u16,
+        "closing": ref.closing_u16,
+    }
+    cases = _parity_cases()
+    assert len(cases) >= 6
+    for c in cases:
+        h, w = c["height"], c["width"]
+        img = np.array(c["input"], dtype=np.uint16).reshape(h, w)
+        want = np.array(c["expected"], dtype=np.uint16).reshape(h, w)
+        got = np.asarray(ops[c["op"]](jnp.asarray(img), c["w_x"], c["w_y"]))
+        np.testing.assert_array_equal(got, want, err_msg=c["name"])
+
+
+def test_u16_wrappers_reject_wrong_dtype():
+    img8 = jnp.zeros((4, 4), jnp.uint8)
+    with pytest.raises(ValueError):
+        ref.erode_u16(img8, 3, 3)
+
+
+def test_u16_wrappers_preserve_values_above_u8_range():
+    img = jnp.full((6, 6), 40_000, jnp.uint16)
+    out = np.asarray(ref.closing_u16(img, 3, 3))
+    assert out.dtype == np.uint16
+    np.testing.assert_array_equal(out, np.asarray(img))
 
 
 def test_combine_count_census():

@@ -1,0 +1,75 @@
+"""Generate the cross-language u16 golden fixture.
+
+Writes ``fixtures/parity_u16.json``: a set of small u16 images plus the
+expected outputs of the ref.py oracle (identity borders, separable
+form).  Both ``python/tests/test_kernels.py`` and the rust test
+``rust/tests/parity_fixture.rs`` consume the file, pinning the two
+implementations to one golden truth.
+
+Run from the repository root:
+
+    PYTHONPATH=python python3 python/tools/gen_parity_fixture.py
+"""
+
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from compile.kernels import ref  # noqa: E402
+
+SEED = 20260727
+
+# (op, height, width, w_x, w_y) — includes degenerate axes and windows
+# larger than an axis
+CASES = [
+    ("erode", 7, 9, 5, 3),
+    ("dilate", 7, 9, 3, 5),
+    ("erode", 5, 16, 1, 7),
+    ("dilate", 16, 5, 7, 1),
+    ("opening", 8, 8, 3, 3),
+    ("closing", 8, 8, 3, 3),
+    ("erode", 1, 11, 3, 3),
+    ("dilate", 11, 1, 3, 3),
+]
+
+OPS = {
+    "erode": ref.erode,
+    "dilate": ref.dilate,
+    "opening": ref.opening,
+    "closing": ref.closing,
+}
+
+
+def main() -> None:
+    rng = np.random.default_rng(SEED)
+    cases = []
+    for op, h, w, w_x, w_y in CASES:
+        img = rng.integers(0, 65536, size=(h, w), dtype=np.uint16)
+        out = np.asarray(OPS[op](img, w_x, w_y), dtype=np.uint16)
+        assert out.shape == (h, w)
+        cases.append(
+            {
+                "name": f"{op}_{h}x{w}_w{w_x}x{w_y}",
+                "op": op,
+                "height": h,
+                "width": w,
+                "w_x": w_x,
+                "w_y": w_y,
+                "input": [int(v) for v in img.ravel()],
+                "expected": [int(v) for v in out.ravel()],
+            }
+        )
+
+    doc = {"format": 1, "dtype": "u16", "seed": SEED, "cases": cases}
+    out_path = pathlib.Path(__file__).resolve().parents[2] / "fixtures" / "parity_u16.json"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {out_path} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+//! Bench: the Fig. 3 sweep on the 800×600 **u16** workload — the §4
+//! 8×8.16 scenario (8 SIMD lanes per op instead of 16, 2× streamed
+//! bytes; series shapes match the u8 sweep, absolute prices ~2×).
+//!
+//! Run: `cargo bench --bench fig3_u16`
+//! Env: `NEON_MORPH_QUICK=1` reduces the sweep.
+
+use neon_morph::bench_harness::{self, fig3};
+use neon_morph::costmodel::CostModel;
+
+fn main() {
+    let quick = std::env::var("NEON_MORPH_QUICK").is_ok();
+    let windows = if quick {
+        bench_harness::window_sweep_quick()
+    } else {
+        bench_harness::window_sweep()
+    };
+    let model = CostModel::exynos5422();
+    let s = fig3::run_u16(&model, &windows, if quick { 2 } else { 5 });
+    print!(
+        "{}",
+        fig3::render(
+            "Figure 3 (u16) — horizontal pass erosion on 800x600 u16, cost model (ns)",
+            &s,
+            "model"
+        )
+        .to_markdown()
+    );
+    println!();
+    print!(
+        "{}",
+        fig3::render("Figure 3 (u16) — host wall-clock (ns)", &s, "host").to_markdown()
+    );
+    println!(
+        "\nu16 crossover w_y0: model={} host={}",
+        s.crossover_model, s.crossover_host
+    );
+}

@@ -34,7 +34,7 @@ fn pass<B: Backend>(b: &mut B, img: &Image<u8>, window: usize, series: usize) ->
 
 struct ColsRunner;
 
-impl PassRunner for ColsRunner {
+impl PassRunner<u8> for ColsRunner {
     fn run_counting(
         &self,
         b: &mut Counting,
@@ -52,8 +52,10 @@ impl PassRunner for ColsRunner {
 
 /// Run the Fig. 4 sweep.
 pub fn run(model: &CostModel, windows: &[usize], host_iters: usize) -> Sweep {
+    let img = crate::image::synth::paper_image(0xF16);
     sweep_generic(
         model,
+        &img,
         windows,
         host_iters,
         crate::morphology::PAPER_WX0,

@@ -4,6 +4,7 @@
 //! |----------|----------|-------|
 //! | Table 1  | [`table1::run`] | 8×8.16 / 16×16.8 transpose, scalar vs NEON |
 //! | Figure 3 | [`fig3::run`]   | horizontal-pass erosion time vs `w_y` |
+//! | Fig 3 u16 | [`fig3::run_u16`] | the same sweep on the 800×600 u16 workload (8 lanes/op) |
 //! | Figure 4 | [`fig4::run`]   | vertical-pass erosion time vs `w_x` |
 //! | headline | [`e2e::run`]    | final hybrid vs vHGW-no-SIMD, ≥3× |
 //!

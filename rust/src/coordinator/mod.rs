@@ -6,7 +6,7 @@
 //! ```text
 //!  submit() ──► BatchQueue (bounded, key-grouped)  ──► worker 0 ─► reply
 //!     │               │  backpressure: reject when full  worker 1 ─► reply
-//!     └─ Ticket ◄─────┘  batches keyed by (op, shape, w) ...
+//!     └─ Ticket ◄─────┘  batches keyed by (op, dtype, shape, w) ...
 //! ```
 //!
 //! Each worker owns its engines — an optional [`XlaRuntime`] (PJRT,
@@ -15,6 +15,12 @@
 //! (pure-rust §5.3 hybrid morphology).  The **router** picks per
 //! request: an artifact match on the XLA backend when available, native
 //! otherwise (or as directed by [`BackendChoice`]).
+//!
+//! Depth routing: requests carry a depth-tagged
+//! [`request::ImagePayload`] (`u8` or `u16`); batch keys include the
+//! dtype so batches never mix depths.  AOT artifacts exist only for
+//! `u8`, so u16 requests always execute on the native engine (and fail
+//! under [`BackendChoice::XlaOnly`]).
 
 pub mod metrics;
 pub mod queue;
@@ -33,7 +39,7 @@ use crate::morphology::MorphConfig;
 use crate::runtime::{ArtifactMeta, Engine, Manifest, NativeEngine, XlaRuntime};
 use metrics::{Metrics, Snapshot};
 use queue::{BatchQueue, Pull};
-use request::{FilterRequest, FilterResponse, Pending, Ticket};
+use request::{FilterOutput, FilterRequest, FilterResponse, ImagePayload, Pending, Ticket};
 
 /// Which engine(s) the router may use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -137,14 +143,14 @@ impl Coordinator {
         })
     }
 
-    /// Submit a request.  Fails fast when the queue is full
-    /// (backpressure) or closed.
-    pub fn submit(
+    /// Submit a request with a depth-tagged payload.  Fails fast when
+    /// the queue is full (backpressure) or closed.
+    pub fn submit_image(
         &self,
         op: &str,
         w_x: usize,
         w_y: usize,
-        image: Arc<Image<u8>>,
+        image: impl Into<ImagePayload>,
     ) -> Result<Ticket> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
@@ -154,7 +160,7 @@ impl Coordinator {
                 op: op.to_string(),
                 w_x,
                 w_y,
-                image,
+                image: image.into(),
                 enqueued: Instant::now(),
             },
             reply: tx,
@@ -171,7 +177,29 @@ impl Coordinator {
         }
     }
 
-    /// Submit and block for the result.
+    /// Submit a u8 request.
+    pub fn submit(
+        &self,
+        op: &str,
+        w_x: usize,
+        w_y: usize,
+        image: Arc<Image<u8>>,
+    ) -> Result<Ticket> {
+        self.submit_image(op, w_x, w_y, image)
+    }
+
+    /// Submit a u16 request.
+    pub fn submit_u16(
+        &self,
+        op: &str,
+        w_x: usize,
+        w_y: usize,
+        image: Arc<Image<u16>>,
+    ) -> Result<Ticket> {
+        self.submit_image(op, w_x, w_y, image)
+    }
+
+    /// Submit a u8 request and block for the result.
     pub fn filter(
         &self,
         op: &str,
@@ -180,6 +208,17 @@ impl Coordinator {
         image: Arc<Image<u8>>,
     ) -> Result<FilterResponse> {
         self.submit(op, w_x, w_y, image)?.wait()
+    }
+
+    /// Submit a u16 request and block for the result.
+    pub fn filter_u16(
+        &self,
+        op: &str,
+        w_x: usize,
+        w_y: usize,
+        image: Arc<Image<u16>>,
+    ) -> Result<FilterResponse> {
+        self.submit_u16(op, w_x, w_y, image)?.wait()
     }
 
     pub fn metrics(&self) -> Snapshot {
@@ -230,7 +269,7 @@ fn synthetic_meta(req: &FilterRequest) -> ArtifactMeta {
         w_y: req.w_y,
         method: "hybrid".into(),
         vertical: "transpose".into(),
-        dtype: "u8".into(),
+        dtype: req.image.dtype().into(),
         file: String::new(),
         out_shape: if req.op == "transpose" { (w, h) } else { (h, w) },
     }
@@ -284,39 +323,67 @@ fn serve_one(
 ) {
     let queue_ns = p.req.enqueued.elapsed().as_nanos() as u64;
     let (h, w) = (p.req.image.height(), p.req.image.width());
-    let compiled = manifest
-        .as_ref()
-        .and_then(|m| m.find(&p.req.op, h, w, p.req.w_x, p.req.w_y).cloned());
+    // compiled artifacts exist only for u8 payloads
+    let compiled = match &p.req.image {
+        ImagePayload::U8(_) => manifest
+            .as_ref()
+            .and_then(|m| m.find(&p.req.op, h, w, p.req.w_x, p.req.w_y).cloned()),
+        ImagePayload::U16(_) => None,
+    };
 
     let t = Instant::now();
-    let (result, backend): (Result<Image<u8>>, &'static str) =
-        if cfg.backend == BackendChoice::XlaOnly {
-            match (compiled, xla.as_mut()) {
-                (Some(meta), Some(rt)) => (rt.run(&meta, &p.req.image), rt.backend_name()),
-                (None, _) => (
-                    Err(anyhow!("no artifact for {} (XlaOnly backend)", p.req.batch_key())),
-                    "xla-pjrt",
-                ),
-                (Some(_), None) => (
-                    Err(anyhow!("XLA runtime unavailable on worker {wid}")),
-                    "xla-pjrt",
-                ),
-            }
-        } else if let (Some(meta), Some(rt)) = (compiled.as_ref(), xla.as_mut()) {
-            match rt.run(meta, &p.req.image) {
-                // Auto: degrade to native on runtime errors
-                Err(_) => (
-                    native.run(&synthetic_meta(&p.req), &p.req.image),
+    let (result, backend): (Result<FilterOutput>, &'static str) = match &p.req.image {
+        ImagePayload::U8(img) => {
+            if cfg.backend == BackendChoice::XlaOnly {
+                match (compiled, xla.as_mut()) {
+                    (Some(meta), Some(rt)) => (
+                        rt.run(&meta, img).map(FilterOutput::U8),
+                        rt.backend_name(),
+                    ),
+                    (None, _) => (
+                        Err(anyhow!("no artifact for {} (XlaOnly backend)", p.req.batch_key())),
+                        "xla-pjrt",
+                    ),
+                    (Some(_), None) => (
+                        Err(anyhow!("XLA runtime unavailable on worker {wid}")),
+                        "xla-pjrt",
+                    ),
+                }
+            } else if let (Some(meta), Some(rt)) = (compiled.as_ref(), xla.as_mut()) {
+                match rt.run(meta, img) {
+                    // Auto: degrade to native on runtime errors
+                    Err(_) => (
+                        native.run(&synthetic_meta(&p.req), img).map(FilterOutput::U8),
+                        native.backend_name(),
+                    ),
+                    ok => (ok.map(FilterOutput::U8), rt.backend_name()),
+                }
+            } else {
+                (
+                    native.run(&synthetic_meta(&p.req), img).map(FilterOutput::U8),
                     native.backend_name(),
-                ),
-                ok => (ok, rt.backend_name()),
+                )
             }
-        } else {
-            (
-                native.run(&synthetic_meta(&p.req), &p.req.image),
-                native.backend_name(),
-            )
-        };
+        }
+        ImagePayload::U16(img) => {
+            if cfg.backend == BackendChoice::XlaOnly {
+                (
+                    Err(anyhow!(
+                        "no u16 artifacts exist (XlaOnly backend, {})",
+                        p.req.batch_key()
+                    )),
+                    "xla-pjrt",
+                )
+            } else {
+                (
+                    native
+                        .run_u16(&synthetic_meta(&p.req), img)
+                        .map(FilterOutput::U16),
+                    native.backend_name(),
+                )
+            }
+        }
+    };
     let exec_ns = t.elapsed().as_nanos() as u64;
 
     metrics.queue_latency.record(queue_ns);
@@ -352,9 +419,48 @@ mod tests {
         let resp = coord.filter("erode", 5, 3, img.clone()).unwrap();
         assert_eq!(resp.backend, "native");
         let want = morphology::erode(&img, 5, 3);
-        assert!(resp.result.unwrap().same_pixels(&want));
+        assert!(resp.result.unwrap().expect_u8().same_pixels(&want));
         let snap = coord.metrics();
         assert_eq!(snap.completed, 1);
+        assert_eq!(snap.failed, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn u16_coordinator_round_trip() {
+        let coord = Coordinator::start_native(2).unwrap();
+        let img = Arc::new(synth::noise_u16(32, 48, 5));
+        let resp = coord.filter_u16("erode", 5, 3, img.clone()).unwrap();
+        assert_eq!(resp.backend, "native");
+        let want = morphology::erode(&img, 5, 3);
+        assert!(resp.result.unwrap().expect_u16().same_pixels(&want));
+        let snap = coord.metrics();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.failed, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn mixed_depth_requests_batch_separately() {
+        let coord = Coordinator::start_native(2).unwrap();
+        let img8 = Arc::new(synth::noise(24, 24, 6));
+        let img16 = Arc::new(synth::noise_u16(24, 24, 6));
+        let mut tickets = Vec::new();
+        for i in 0..20 {
+            let t = if i % 2 == 0 {
+                coord.submit("erode", 3, 3, img8.clone()).unwrap()
+            } else {
+                coord.submit_u16("erode", 3, 3, img16.clone()).unwrap()
+            };
+            tickets.push((i, t));
+        }
+        for (i, t) in tickets {
+            let r = t.wait().unwrap();
+            let out = r.result.unwrap();
+            assert_eq!(out.dtype(), if i % 2 == 0 { "u8" } else { "u16" });
+        }
+        let snap = coord.metrics();
+        assert_eq!(snap.completed, 20);
         assert_eq!(snap.failed, 0);
         coord.shutdown();
     }
@@ -423,9 +529,30 @@ mod tests {
     fn transpose_request_swaps_dims() {
         let coord = Coordinator::start_native(1).unwrap();
         let img = Arc::new(synth::noise(10, 20, 8));
-        let out = coord.filter("transpose", 0, 0, img.clone()).unwrap().result.unwrap();
+        let out = coord
+            .filter("transpose", 0, 0, img.clone())
+            .unwrap()
+            .result
+            .unwrap()
+            .expect_u8();
         assert_eq!((out.height(), out.width()), (20, 10));
         let want = crate::transpose::transpose_image(&mut Native, &img);
+        assert!(out.same_pixels(&want));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn u16_transpose_uses_8x8_tiles_end_to_end() {
+        let coord = Coordinator::start_native(1).unwrap();
+        let img = Arc::new(synth::noise_u16(16, 24, 8));
+        let out = coord
+            .filter_u16("transpose", 0, 0, img.clone())
+            .unwrap()
+            .result
+            .unwrap()
+            .expect_u16();
+        assert_eq!((out.height(), out.width()), (24, 16));
+        let want = crate::transpose::transpose_image_u16(&mut Native, &img);
         assert!(out.same_pixels(&want));
         coord.shutdown();
     }

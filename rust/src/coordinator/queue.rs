@@ -137,7 +137,7 @@ mod tests {
                 op: op.into(),
                 w_x: w,
                 w_y: w,
-                image: img.clone(),
+                image: img.clone().into(),
                 enqueued: Instant::now(),
             },
             reply: tx,

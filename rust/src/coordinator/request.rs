@@ -1,10 +1,89 @@
 //! Request/response types of the filtering service.
+//!
+//! Requests carry a depth-tagged payload ([`ImagePayload`]): the same
+//! service filters `u8` and `u16` images, and the batch key includes the
+//! dtype so a batch never mixes depths (different depths run different
+//! compiled executables / kernel instantiations).
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::image::Image;
+use crate::morphology::MorphPixel;
+
+/// Pixel depth of a request payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PixelDepth {
+    U8,
+    U16,
+}
+
+impl PixelDepth {
+    /// dtype tag used in batch keys and artifact manifests (sourced
+    /// from [`MorphPixel::DTYPE`] — single point of truth).
+    pub fn dtype(self) -> &'static str {
+        match self {
+            PixelDepth::U8 => <u8 as MorphPixel>::DTYPE,
+            PixelDepth::U16 => <u16 as MorphPixel>::DTYPE,
+        }
+    }
+
+    /// SIMD lanes of one 128-bit op at this depth (sourced from
+    /// [`MorphPixel::LANES`]).
+    pub fn lanes(self) -> usize {
+        match self {
+            PixelDepth::U8 => <u8 as MorphPixel>::LANES,
+            PixelDepth::U16 => <u16 as MorphPixel>::LANES,
+        }
+    }
+}
+
+/// Shared, zero-copy input image at either pixel depth.
+#[derive(Clone, Debug)]
+pub enum ImagePayload {
+    U8(Arc<Image<u8>>),
+    U16(Arc<Image<u16>>),
+}
+
+impl ImagePayload {
+    pub fn height(&self) -> usize {
+        match self {
+            ImagePayload::U8(img) => img.height(),
+            ImagePayload::U16(img) => img.height(),
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        match self {
+            ImagePayload::U8(img) => img.width(),
+            ImagePayload::U16(img) => img.width(),
+        }
+    }
+
+    pub fn depth(&self) -> PixelDepth {
+        match self {
+            ImagePayload::U8(_) => PixelDepth::U8,
+            ImagePayload::U16(_) => PixelDepth::U16,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        self.depth().dtype()
+    }
+}
+
+impl From<Arc<Image<u8>>> for ImagePayload {
+    fn from(img: Arc<Image<u8>>) -> Self {
+        ImagePayload::U8(img)
+    }
+}
+
+impl From<Arc<Image<u16>>> for ImagePayload {
+    fn from(img: Arc<Image<u16>>) -> Self {
+        ImagePayload::U16(img)
+    }
+}
 
 /// A filtering request: apply `op` with a `w_x × w_y` SE to `image`.
 #[derive(Clone, Debug)]
@@ -15,19 +94,21 @@ pub struct FilterRequest {
     pub op: String,
     pub w_x: usize,
     pub w_y: usize,
-    /// Shared, zero-copy input image.
-    pub image: Arc<Image<u8>>,
+    /// Shared, zero-copy, depth-tagged input image.
+    pub image: ImagePayload,
     pub enqueued: Instant,
 }
 
 impl FilterRequest {
     /// Batching key: requests with the same key run the same compiled
-    /// executable (same op, shape and window), so grouping them
-    /// maximizes executable-cache affinity.
+    /// executable (same op, dtype, shape and window), so grouping them
+    /// maximizes executable-cache affinity.  Depth is part of the key —
+    /// a u8 batch and a u16 batch never mix.
     pub fn batch_key(&self) -> String {
         format!(
-            "{}:{}x{}:w{}x{}",
+            "{}:{}:{}x{}:w{}x{}",
             self.op,
+            self.image.dtype(),
             self.image.height(),
             self.image.width(),
             self.w_x,
@@ -36,11 +117,51 @@ impl FilterRequest {
     }
 }
 
+/// A completed request's image result, depth-tagged.
+#[derive(Clone, Debug)]
+pub enum FilterOutput {
+    U8(Image<u8>),
+    U16(Image<u16>),
+}
+
+impl FilterOutput {
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            FilterOutput::U8(_) => PixelDepth::U8.dtype(),
+            FilterOutput::U16(_) => PixelDepth::U16.dtype(),
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            FilterOutput::U8(img) => (img.height(), img.width()),
+            FilterOutput::U16(img) => (img.height(), img.width()),
+        }
+    }
+
+    /// Unwrap a u8 result; panics on a u16 payload (submitting u8 always
+    /// yields u8).
+    pub fn expect_u8(self) -> Image<u8> {
+        match self {
+            FilterOutput::U8(img) => img,
+            FilterOutput::U16(_) => panic!("u16 response where u8 was expected"),
+        }
+    }
+
+    /// Unwrap a u16 result; panics on a u8 payload.
+    pub fn expect_u16(self) -> Image<u16> {
+        match self {
+            FilterOutput::U16(img) => img,
+            FilterOutput::U8(_) => panic!("u8 response where u16 was expected"),
+        }
+    }
+}
+
 /// Completed request.
 #[derive(Debug)]
 pub struct FilterResponse {
     pub id: u64,
-    pub result: anyhow::Result<Image<u8>>,
+    pub result: anyhow::Result<FilterOutput>,
     /// Time spent queued before a worker picked the request up.
     pub queue_ns: u64,
     /// Execution time inside the engine.
@@ -90,11 +211,51 @@ mod tests {
             op: op.into(),
             w_x: wx,
             w_y: wy,
-            image: img.clone(),
+            image: img.clone().into(),
             enqueued: Instant::now(),
         };
         assert_eq!(mk("erode", 3, 3).batch_key(), mk("erode", 3, 3).batch_key());
         assert_ne!(mk("erode", 3, 3).batch_key(), mk("erode", 5, 3).batch_key());
         assert_ne!(mk("erode", 3, 3).batch_key(), mk("dilate", 3, 3).batch_key());
+    }
+
+    #[test]
+    fn batch_key_separates_depths() {
+        let img8 = Arc::new(synth::noise(10, 12, 1));
+        let img16 = Arc::new(synth::noise_u16(10, 12, 1));
+        let mk = |image: ImagePayload| FilterRequest {
+            id: 0,
+            op: "erode".into(),
+            w_x: 3,
+            w_y: 3,
+            image,
+            enqueued: Instant::now(),
+        };
+        let k8 = mk(img8.into()).batch_key();
+        let k16 = mk(img16.into()).batch_key();
+        assert_ne!(k8, k16, "depth must be part of the batch key");
+        assert!(k8.contains(":u8:"), "{k8}");
+        assert!(k16.contains(":u16:"), "{k16}");
+    }
+
+    #[test]
+    fn payload_reports_depth_and_dims() {
+        let p: ImagePayload = Arc::new(synth::noise_u16(5, 7, 2)).into();
+        assert_eq!(p.depth(), PixelDepth::U16);
+        assert_eq!((p.height(), p.width()), (5, 7));
+        assert_eq!(p.dtype(), "u16");
+        assert_eq!(PixelDepth::U8.lanes(), 16);
+        assert_eq!(PixelDepth::U16.lanes(), 8);
+    }
+
+    #[test]
+    fn output_unwrappers() {
+        let o = FilterOutput::U8(synth::noise(3, 4, 1));
+        assert_eq!(o.dtype(), "u8");
+        assert_eq!(o.dims(), (3, 4));
+        let img = o.expect_u8();
+        assert_eq!(img.height(), 3);
+        let o16 = FilterOutput::U16(synth::noise_u16(3, 4, 1));
+        assert_eq!(o16.expect_u16().width(), 4);
     }
 }

@@ -22,6 +22,23 @@
 
 use crate::neon::{InstrClass, InstrMix};
 
+/// SIMD lane count of one 128-bit vector op at a given pixel dtype:
+/// `u8` ops process 16 lanes, `u16` ops 8 (the §4 tile shapes 16×16.8
+/// and 8×8.16).  A u16 pass therefore needs ~2× the vector instructions
+/// and streams 2× the bytes per pixel — the counted mixes already
+/// reflect this, so the same per-instruction-class prices stay honest
+/// across depths (asserted in `rust/tests/counting_u16.rs`).
+pub fn simd_lanes(dtype: &str) -> Option<usize> {
+    use crate::morphology::MorphPixel;
+    if dtype == <u8 as MorphPixel>::DTYPE {
+        Some(<u8 as MorphPixel>::LANES)
+    } else if dtype == <u16 as MorphPixel>::DTYPE {
+        Some(<u16 as MorphPixel>::LANES)
+    } else {
+        None
+    }
+}
+
 /// Per-instruction-class cycle costs + memory system parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CostModel {
@@ -105,6 +122,16 @@ impl CostModel {
         let b = self.breakdown(mix);
         b.compute_ns + b.memory_ns
     }
+
+    /// Marginal price per pixel — the unit for cross-depth comparisons
+    /// (a u16 pass should land near 2× the u8 per-pixel price on the
+    /// same dimensions: half the lanes per op, twice the bytes).
+    pub fn price_ns_per_pixel(&self, mix: &InstrMix, pixels: usize) -> f64 {
+        if pixels == 0 {
+            return 0.0;
+        }
+        self.price_ns_marginal(mix) / pixels as f64
+    }
 }
 
 impl Default for CostModel {
@@ -156,6 +183,30 @@ mod tests {
         let mut u = InstrMix::new();
         u.bump(InstrClass::SimdLoadUnaligned, 100);
         assert!(m.price_ns_marginal(&u) > m.price_ns_marginal(&a));
+    }
+
+    #[test]
+    fn lanes_table_matches_paper_tiles() {
+        assert_eq!(simd_lanes("u8"), Some(16));
+        assert_eq!(simd_lanes("u16"), Some(8));
+        assert_eq!(simd_lanes("f32"), None);
+    }
+
+    #[test]
+    fn u16_pass_prices_about_double_per_pixel() {
+        // half the lanes per op + double the streamed bytes ⇒ the u16
+        // per-pixel price lands near 2× the u8 one on equal dimensions
+        use crate::image::synth;
+        use crate::morphology::{linear, MorphOp};
+        let m = CostModel::exynos5422();
+        let px = 64 * 64;
+        let mut c8 = Counting::new();
+        let _ = linear::rows_simd_linear(&mut c8, &synth::noise(64, 64, 4), 9, MorphOp::Erode);
+        let mut c16 = Counting::new();
+        let _ =
+            linear::rows_simd_linear(&mut c16, &synth::noise_u16(64, 64, 4), 9, MorphOp::Erode);
+        let r = m.price_ns_per_pixel(&c16.mix, px) / m.price_ns_per_pixel(&c8.mix, px);
+        assert!((1.7..=2.3).contains(&r), "u16/u8 per-pixel price ratio {r}");
     }
 
     #[test]

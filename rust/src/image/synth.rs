@@ -39,6 +39,11 @@ impl Rng {
         (self.next_u64() >> 56) as u8
     }
 
+    #[inline]
+    pub fn next_u16(&mut self) -> u16 {
+        (self.next_u64() >> 48) as u16
+    }
+
     /// Uniform in `[0, n)`.
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
@@ -55,6 +60,18 @@ pub fn noise(height: usize, width: usize, seed: u64) -> Image<u8> {
 /// The paper's workload shape filled with noise.
 pub fn paper_image(seed: u64) -> Image<u8> {
     noise(PAPER_HEIGHT, PAPER_WIDTH, seed)
+}
+
+/// Uniform random 16-bit noise image — the u16 test/bench workload
+/// (full 0..=65535 range, so u16-only values exercise the wide lanes).
+pub fn noise_u16(height: usize, width: usize, seed: u64) -> Image<u16> {
+    let mut rng = Rng::new(seed);
+    Image::from_fn(height, width, |_, _| rng.next_u16())
+}
+
+/// The paper's workload shape at 16-bit depth (§4's 8×8.16 scenario).
+pub fn paper_image_u16(seed: u64) -> Image<u16> {
+    noise_u16(PAPER_HEIGHT, PAPER_WIDTH, seed)
 }
 
 /// Smooth diagonal gradient (useful for eyeballing pass direction bugs).
@@ -146,6 +163,18 @@ mod tests {
         let img = paper_image(1);
         assert_eq!(img.height(), 600);
         assert_eq!(img.width(), 800);
+        let img16 = paper_image_u16(1);
+        assert_eq!(img16.height(), 600);
+        assert_eq!(img16.width(), 800);
+    }
+
+    #[test]
+    fn u16_noise_uses_the_full_range() {
+        let img = noise_u16(64, 64, 99);
+        let (mn, mx) = img.min_max().unwrap();
+        assert!(mx > u8::MAX as u16, "u16 noise must exceed the u8 range");
+        assert!(mn < 1000, "u16 noise should reach low values too");
+        assert!(noise_u16(8, 8, 5).same_pixels(&noise_u16(8, 8, 5)));
     }
 
     #[test]

@@ -28,12 +28,36 @@
 //!   tile transposes (§4), plus whole-image tiled transpose.
 //! * [`morphology`] — the paper's algorithm suite: naive 2-D baseline,
 //!   vHGW and linear 1-D passes (scalar + SIMD), separable composition,
-//!   the §5.3 hybrid dispatch, and derived operations.
+//!   the §5.3 hybrid dispatch, and derived operations.  Every pass is
+//!   generic over [`morphology::MorphPixel`], so the same code filters
+//!   `Image<u8>` (16 SIMD lanes/op, 16×16.8 transpose tiles) and
+//!   `Image<u16>` (8 lanes/op, 8×8.16 tiles) — the two depths the
+//!   paper's §4 transpose shapes exist for.
 //! * [`runtime`] — PJRT bridge executing the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) from Rust; python is never on the
 //!   request path.
 //! * [`coordinator`] — the serving layer: router, dynamic batcher,
-//!   worker pool, backpressure and metrics.
+//!   worker pool, backpressure and metrics.  Requests carry
+//!   depth-tagged payloads (`u8`/`u16`); batch keys include the dtype,
+//!   and u16 work always routes to the native engine (AOT artifacts
+//!   are u8-only).
+//!
+//! ## Pixel-depth dispatch rules
+//!
+//! * Library calls: `erode`/`dilate`/`morphology` and every derived op
+//!   accept `&Image<u8>` or `&Image<u16>`; the depth is inferred and
+//!   every `PassMethod` × [`VerticalStrategy`] × simd combination works
+//!   at both depths (differential-tested against the naive oracle in
+//!   `rust/tests/differential_u16.rs`).
+//! * The [`VerticalStrategy::Transpose`] sandwich dispatches the §4
+//!   tile shape by depth: 16×16.8 for `u8`, 8×8.16 for `u16`.
+//! * Service calls: [`coordinator::Coordinator::submit`] /
+//!   [`coordinator::Coordinator::submit_u16`] tag the payload; results
+//!   come back as [`coordinator::request::FilterOutput`] (`expect_u8` /
+//!   `expect_u16`).
+//! * Cost accounting: a u16 pass issues ~2× the vector instructions per
+//!   pixel (8 lanes/op vs 16) and streams 2× the bytes; see
+//!   [`costmodel::simd_lanes`].
 //! * [`bench_harness`] — sweep drivers that regenerate every table and
 //!   figure of the paper's evaluation (Table 1, Fig 3, Fig 4).
 
@@ -48,4 +72,4 @@ pub mod util;
 pub mod transpose;
 
 pub use image::Image;
-pub use morphology::{Border, MorphOp, PassMethod, VerticalStrategy};
+pub use morphology::{Border, MorphOp, MorphPixel, PassMethod, VerticalStrategy};

@@ -89,7 +89,7 @@ COMMANDS:
                [--backend auto|native|xla] [--method hybrid|linear|vhgw]
                [--vertical direct|transpose] [--border identity|replicate]
                [--no-simd] [--artifacts DIR]
-    bench      <table1|fig3|fig4|e2e|all> [--quick] [--tsv] [--iters N]
+    bench      <table1|fig3|fig3u16|fig4|e2e|all> [--quick] [--tsv] [--iters N]
     serve      [--requests 256] [--workers 4] [--window 7]
                [--backend native|xla|auto] [--artifacts DIR]
     calibrate  [--max-window 121]
@@ -180,7 +180,7 @@ fn cmd_filter(args: &Args) -> Result<()> {
         ..CoordinatorConfig::default()
     })?;
     let resp = coord.filter(&op, w_x, w_y, img)?;
-    let out = resp.result?;
+    let out = resp.result?.expect_u8();
     write_pgm(&out, output).with_context(|| format!("writing {output}"))?;
     println!(
         "{} {}x{} SE={}x{} via {} in {:.2} ms -> {}",
@@ -203,8 +203,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .first()
         .map(String::as_str)
         .unwrap_or("all");
-    if !["table1", "fig3", "fig4", "e2e", "all"].contains(&which) {
-        bail!("unknown bench {which:?} (want table1|fig3|fig4|e2e|all)");
+    if !["table1", "fig3", "fig3u16", "fig4", "e2e", "all"].contains(&which) {
+        bail!("unknown bench {which:?} (want table1|fig3|fig3u16|fig4|e2e|all)");
     }
     let quick = args.flag("quick");
     let tsv = args.flag("tsv");
@@ -238,6 +238,30 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         println!(
             "crossover w_y0: model={} host={} (paper: 69)\n",
+            s.crossover_model, s.crossover_host
+        );
+    }
+    if which == "fig3u16" || which == "all" {
+        let s = fig3::run_u16(&model, &windows, iters);
+        let t_model = fig3::render(
+            "Figure 3 (u16) — horizontal pass erosion on 800x600 u16, cost model (ns)",
+            &s,
+            "model",
+        );
+        let t_host = fig3::render(
+            "Figure 3 (u16) — horizontal pass erosion on 800x600 u16, host wall-clock (ns)",
+            &s,
+            "host",
+        );
+        if tsv {
+            print!("{}", t_model.to_tsv());
+        } else {
+            print!("{}", t_model.to_markdown());
+            println!();
+            print!("{}", t_host.to_markdown());
+        }
+        println!(
+            "u16 crossover w_y0: model={} host={} (8 lanes/op vs 16 at u8)\n",
             s.crossover_model, s.crossover_host
         );
     }

@@ -1,80 +1,81 @@
 //! Derived morphological operations (§2: "other morphological
 //! operations, such as opening, closing, morphological gradient, can be
-//! expressed via erosion, dilation and arithmetical operations").
+//! expressed via erosion, dilation and arithmetical operations") —
+//! generic over the pixel depth.
 
-use super::{morphology, MorphConfig, MorphOp};
+use super::{morphology, MorphConfig, MorphOp, MorphPixel};
 use crate::image::Image;
 use crate::neon::Backend;
 
 /// Opening: dilation of the erosion.  Removes bright structures smaller
 /// than the SE.
-pub fn opening<B: Backend>(
+pub fn opening<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
-) -> Image<u8> {
+) -> Image<P> {
     let e = morphology(b, src, MorphOp::Erode, w_x, w_y, cfg);
     morphology(b, &e, MorphOp::Dilate, w_x, w_y, cfg)
 }
 
 /// Closing: erosion of the dilation.  Removes dark structures smaller
 /// than the SE.
-pub fn closing<B: Backend>(
+pub fn closing<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
-) -> Image<u8> {
+) -> Image<P> {
     let d = morphology(b, src, MorphOp::Dilate, w_x, w_y, cfg);
     morphology(b, &d, MorphOp::Erode, w_x, w_y, cfg)
 }
 
 /// Morphological gradient: dilation − erosion (edge strength).
-pub fn gradient<B: Backend>(
+pub fn gradient<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
-) -> Image<u8> {
+) -> Image<P> {
     let d = morphology(b, src, MorphOp::Dilate, w_x, w_y, cfg);
     let e = morphology(b, src, MorphOp::Erode, w_x, w_y, cfg);
     pixelwise_sub(&d, &e)
 }
 
 /// White top-hat: src − opening (bright details smaller than the SE).
-pub fn tophat<B: Backend>(
+pub fn tophat<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
-) -> Image<u8> {
+) -> Image<P> {
     let o = opening(b, src, w_x, w_y, cfg);
     pixelwise_sub(src, &o)
 }
 
 /// Black top-hat: closing − src (dark details smaller than the SE).
-pub fn blackhat<B: Backend>(
+pub fn blackhat<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
-) -> Image<u8> {
+) -> Image<P> {
     let c = closing(b, src, w_x, w_y, cfg);
     pixelwise_sub(&c, src)
 }
 
 /// Saturating pixelwise subtraction `a - b` (clamped at 0).
-fn pixelwise_sub(a: &Image<u8>, b: &Image<u8>) -> Image<u8> {
+fn pixelwise_sub<P: MorphPixel>(a: &Image<P>, b: &Image<P>) -> Image<P> {
     assert_eq!(a.height(), b.height());
     assert_eq!(a.width(), b.width());
     Image::from_fn(a.height(), a.width(), |y, x| {
-        a.get(y, x).saturating_sub(b.get(y, x))
+        a.get(y, x).sat_sub(b.get(y, x))
     })
 }
 
@@ -120,6 +121,13 @@ mod tests {
     }
 
     #[test]
+    fn gradient_zero_on_flat_image_u16() {
+        let img = crate::image::Image::filled(20, 20, 40_000u16);
+        let g = gradient(&mut Native, &img, 5, 5, &cfg());
+        assert_eq!(g.min_max(), Some((0, 0)));
+    }
+
+    #[test]
     fn gradient_positive_at_edges() {
         let img = synth::checkerboard(32, 32, 8);
         let g = gradient(&mut Native, &img, 3, 3, &cfg());
@@ -133,6 +141,16 @@ mod tests {
         img.set(10, 10, 200); // speck smaller than SE
         let t = tophat(&mut Native, &img, 5, 5, &cfg());
         assert_eq!(t.get(10, 10), 190);
+        assert_eq!(t.get(0, 0), 0);
+    }
+
+    #[test]
+    fn tophat_extracts_speck_above_u8_range() {
+        // a u16 speck whose contrast exceeds 255 — impossible at u8 depth
+        let mut img = crate::image::Image::filled(21, 21, 1_000u16);
+        img.set(10, 10, 60_000);
+        let t = tophat(&mut Native, &img, 5, 5, &cfg());
+        assert_eq!(t.get(10, 10), 59_000);
         assert_eq!(t.get(0, 0), 0);
     }
 

@@ -6,9 +6,12 @@
 //! [`calibrate_thresholds`] re-derives both numbers on *this* stack by
 //! pricing the counted instruction mixes of both algorithms across the
 //! window sweep with the cost model — the reproduction of the §5.3
-//! claim (see `EXPERIMENTS.md`).
+//! claim (see `EXPERIMENTS.md`).  Pricing and calibration are generic
+//! over the pixel depth: a `u16` probe counts 8-lane vector ops and 2×
+//! the streamed bytes, so its crossovers may legitimately differ from
+//! the u8 ones.
 
-use super::{linear, vhgw, MorphOp, PassMethod};
+use super::{linear, vhgw, MorphOp, MorphPixel, PassMethod};
 use crate::costmodel::CostModel;
 use crate::image::Image;
 use crate::neon::Counting;
@@ -28,6 +31,13 @@ pub struct HybridThresholds {
 
 impl HybridThresholds {
     /// The paper's measured thresholds.
+    ///
+    /// These are u8 measurements, but they are also the default for u16
+    /// dispatch: both SIMD series scale near-uniformly (~2×) when lanes
+    /// halve and bytes double (see `fig3::run_u16`), so the crossover
+    /// is approximately depth-stable.  Workloads that care can re-derive
+    /// exact u16 thresholds with [`calibrate_thresholds`] on a u16
+    /// probe and put them in [`crate::morphology::MorphConfig`].
     pub fn paper() -> Self {
         HybridThresholds {
             wy0: PAPER_WY0,
@@ -58,9 +68,9 @@ pub fn resolve_method(method: PassMethod, window: usize, threshold: usize) -> Pa
 
 /// Cost-model price (ns) of one SIMD rows pass at `window` on a probe
 /// image — used by calibration and the Fig. 3 harness.
-pub fn price_rows_pass(
+pub fn price_rows_pass<P: MorphPixel>(
     model: &CostModel,
-    probe: &Image<u8>,
+    probe: &Image<P>,
     window: usize,
     method: PassMethod,
 ) -> f64 {
@@ -78,10 +88,11 @@ pub fn price_rows_pass(
 }
 
 /// Cost-model price (ns) of one SIMD cols pass at `window` on a probe
-/// image (linear = §5.2.2 direct; vHGW = §5.2.1 transpose sandwich).
-pub fn price_cols_pass(
+/// image (linear = §5.2.2 direct; vHGW = §5.2.1 transpose sandwich at
+/// this pixel depth).
+pub fn price_cols_pass<P: MorphPixel>(
     model: &CostModel,
-    probe: &Image<u8>,
+    probe: &Image<P>,
     window: usize,
     method: PassMethod,
 ) -> f64 {
@@ -91,9 +102,9 @@ pub fn price_cols_pass(
             let _ = linear::cols_simd_linear(&mut c, probe, window, MorphOp::Erode);
         }
         PassMethod::Vhgw => {
-            let t = crate::transpose::transpose_image(&mut c, probe);
+            let t = P::transpose_image(&mut c, probe);
             let f = vhgw::rows_simd_vhgw(&mut c, &t, window, MorphOp::Erode);
-            let _ = crate::transpose::transpose_image(&mut c, &f);
+            let _ = P::transpose_image(&mut c, &f);
         }
         PassMethod::Hybrid => panic!("price a concrete method"),
     }
@@ -102,11 +113,11 @@ pub fn price_cols_pass(
 
 /// Find the largest odd window for which linear is still no slower than
 /// vHGW under the cost model (scanning odd windows up to `max_window`).
-fn crossover(
+fn crossover<P: MorphPixel>(
     model: &CostModel,
-    probe: &Image<u8>,
+    probe: &Image<P>,
     max_window: usize,
-    price: impl Fn(&CostModel, &Image<u8>, usize, PassMethod) -> f64,
+    price: impl Fn(&CostModel, &Image<P>, usize, PassMethod) -> f64,
 ) -> usize {
     let mut last_linear_win = 1;
     let mut w = 3;
@@ -126,12 +137,13 @@ fn crossover(
 
 /// Re-derive the §5.3 crossovers from the instruction mixes + cost model.
 ///
-/// `probe` should share the workload's aspect/dtype; size only needs to
-/// be large enough to amortize per-call overhead (mixes scale linearly
-/// in pixels, so the crossover is size-stable — verified in tests).
-pub fn calibrate_thresholds(
+/// `probe` should share the workload's aspect *and dtype*; size only
+/// needs to be large enough to amortize per-call overhead (mixes scale
+/// linearly in pixels, so the crossover is size-stable — verified in
+/// tests).
+pub fn calibrate_thresholds<P: MorphPixel>(
     model: &CostModel,
-    probe: &Image<u8>,
+    probe: &Image<P>,
     max_window: usize,
 ) -> HybridThresholds {
     HybridThresholds {
@@ -175,6 +187,21 @@ mod tests {
         assert!(cl3 < cv3, "linear must win small windows (cols)");
     }
 
+    #[test]
+    fn u16_pass_prices_higher_than_u8() {
+        // 8 lanes/op instead of 16, 2x the streamed bytes: a u16 pass on
+        // the same dimensions must price higher than the u8 one
+        let model = CostModel::exynos5422();
+        let probe8 = synth::noise(60, 80, 3);
+        let probe16 = synth::noise_u16(60, 80, 3);
+        let p8 = price_rows_pass(&model, &probe8, 9, PassMethod::Linear);
+        let p16 = price_rows_pass(&model, &probe16, 9, PassMethod::Linear);
+        assert!(
+            p16 > 1.5 * p8,
+            "u16 rows pass should price ~2x u8: {p8} vs {p16}"
+        );
+    }
+
     // The full crossover sweep (w up to 121 on the 800x600 workload) is
     // minutes-slow without optimization, so the exact §5.3 reproduction
     // lives in tests/paper_parity.rs and runs in release; this smoke
@@ -187,5 +214,14 @@ mod tests {
         // linear wins everywhere this far below the crossover
         assert_eq!(t.wy0, 21);
         assert_eq!(t.wx0, 21);
+    }
+
+    #[test]
+    fn calibrate_thresholds_u16_smoke() {
+        let model = CostModel::exynos5422();
+        let probe = synth::noise_u16(100, 120, 7);
+        let t = calibrate_thresholds(&model, &probe, 13);
+        assert_eq!(t.wy0, 13, "linear must win small u16 windows (rows)");
+        assert_eq!(t.wx0, 13, "linear must win small u16 windows (cols)");
     }
 }

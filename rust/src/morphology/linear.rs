@@ -6,33 +6,37 @@
 //! rows, so the shared reduction is computed once (`w_y` combines for 2
 //! rows ≈ `w_y/2` per row instead of `w_y - 1`).
 //!
-//! Vertical (cols-window) pass: the §5.2.2 listing — for each 16-pixel
-//! chunk the window reduction is an unrolled chain of *offset* vector
-//! loads (`vld1q_u8(src + x - wing + j)`), which are unaligned; this is
-//! the memory asymmetry that makes w_x⁰ < w_y⁰ (§5.3).
+//! Vertical (cols-window) pass: the §5.2.2 listing — for each
+//! [`MorphPixel::LANES`]-pixel chunk the window reduction is an unrolled
+//! chain of *offset* vector loads (`vld1q(src + x - wing + j)`), which
+//! are unaligned; this is the memory asymmetry that makes w_x⁰ < w_y⁰
+//! (§5.3).
 //!
 //! Both passes exist in scalar form (the "without SIMD" baselines) and
-//! NEON form, all four generic over [`Backend`].
+//! NEON form, all four generic over [`Backend`] *and* over
+//! [`MorphPixel`]: the same code processes 16 `u8` lanes or 8 `u16`
+//! lanes per vector op.
 
-use super::{wing_of, MorphOp};
+use super::{wing_of, MorphOp, MorphPixel};
 use crate::image::Image;
 use crate::neon::Backend;
 
 /// Rows-window pass, NEON, two output rows per iteration (§5.1.2).
-pub fn rows_simd_linear<B: Backend>(
+pub fn rows_simd_linear<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
-) -> Image<u8> {
+) -> Image<P> {
     let wing = wing_of(window, "w_y");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
         return src.clone();
     }
+    let px = std::mem::size_of::<P>() as u64;
     let mut dst = Image::zeros(h, w);
-    b.record_stream((h * w) as u64, (h * w) as u64);
-    let w16 = w - w % 16;
+    b.record_stream((h * w) as u64 * px, (h * w) as u64 * px);
+    let wv = w - w % P::LANES;
 
     let mut y = 0usize;
     while y < h {
@@ -45,59 +49,59 @@ pub fn rows_simd_linear<B: Backend>(
         let bot = if y + wing + 1 < h { Some(y + wing + 1) } else { None };
 
         let mut x = 0usize;
-        while x < w16 {
+        while x < wv {
             b.scalar_overhead(2); // chunk loop + address arithmetic
-            let mut val = b.vld1q_u8(&src.row(c0)[x..]);
+            let mut val = P::vload(b, &src.row(c0)[x..]);
             for k in c0 + 1..=c1 {
-                let v = b.vld1q_u8(&src.row(k)[x..]);
-                val = op.simd(b, val, v);
+                let v = P::vload(b, &src.row(k)[x..]);
+                val = op.simd::<P, _>(b, val, v);
             }
             let out0 = match top {
                 Some(t) => {
-                    let v = b.vld1q_u8(&src.row(t)[x..]);
-                    op.simd(b, val, v)
+                    let v = P::vload(b, &src.row(t)[x..]);
+                    op.simd::<P, _>(b, val, v)
                 }
                 None => val,
             };
-            b.vst1q_u8(&mut dst.row_mut(y)[x..], out0);
+            P::vstore(b, &mut dst.row_mut(y)[x..], out0);
             if pair {
                 let out1 = match bot {
                     Some(t) => {
-                        let v = b.vld1q_u8(&src.row(t)[x..]);
-                        op.simd(b, val, v)
+                        let v = P::vload(b, &src.row(t)[x..]);
+                        op.simd::<P, _>(b, val, v)
                     }
                     None => val,
                 };
-                b.vst1q_u8(&mut dst.row_mut(y + 1)[x..], out1);
+                P::vstore(b, &mut dst.row_mut(y + 1)[x..], out1);
             }
-            x += 16;
+            x += P::LANES;
         }
         // right-edge tail: same structure, scalar ("edges processed
         // separately")
-        for x in w16..w {
+        for x in wv..w {
             b.scalar_overhead(2);
-            let mut val = b.scalar_load_u8(src.row(c0), x);
+            let mut val = P::load(b, src.row(c0), x);
             for k in c0 + 1..=c1 {
-                let v = b.scalar_load_u8(src.row(k), x);
+                let v = P::load(b, src.row(k), x);
                 val = op.scalar(b, val, v);
             }
             let out0 = match top {
                 Some(t) => {
-                    let v = b.scalar_load_u8(src.row(t), x);
+                    let v = P::load(b, src.row(t), x);
                     op.scalar(b, val, v)
                 }
                 None => val,
             };
-            b.scalar_store_u8(dst.row_mut(y), x, out0);
+            P::store(b, dst.row_mut(y), x, out0);
             if pair {
                 let out1 = match bot {
                     Some(t) => {
-                        let v = b.scalar_load_u8(src.row(t), x);
+                        let v = P::load(b, src.row(t), x);
                         op.scalar(b, val, v)
                     }
                     None => val,
                 };
-                b.scalar_store_u8(dst.row_mut(y + 1), x, out1);
+                P::store(b, dst.row_mut(y + 1), x, out1);
             }
         }
         y += 2;
@@ -109,43 +113,44 @@ pub fn rows_simd_linear<B: Backend>(
 /// no shared-reduction trick, `w_y - 1` combines per row instead of
 /// ~`w_y/2 + 1`.  Exists to quantify the §5.1.2 two-row optimization
 /// (see `cargo bench --bench ablations`).
-pub fn rows_simd_linear_single<B: Backend>(
+pub fn rows_simd_linear_single<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
-) -> Image<u8> {
+) -> Image<P> {
     let wing = wing_of(window, "w_y");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
         return src.clone();
     }
+    let px = std::mem::size_of::<P>() as u64;
     let mut dst = Image::zeros(h, w);
-    b.record_stream((h * w) as u64, (h * w) as u64);
-    let w16 = w - w % 16;
+    b.record_stream((h * w) as u64 * px, (h * w) as u64 * px);
+    let wv = w - w % P::LANES;
 
     for y in 0..h {
         let y0 = y.saturating_sub(wing);
         let y1 = (y + wing).min(h - 1);
         let mut x = 0usize;
-        while x < w16 {
+        while x < wv {
             b.scalar_overhead(2);
-            let mut val = b.vld1q_u8(&src.row(y0)[x..]);
+            let mut val = P::vload(b, &src.row(y0)[x..]);
             for k in y0 + 1..=y1 {
-                let v = b.vld1q_u8(&src.row(k)[x..]);
-                val = op.simd(b, val, v);
+                let v = P::vload(b, &src.row(k)[x..]);
+                val = op.simd::<P, _>(b, val, v);
             }
-            b.vst1q_u8(&mut dst.row_mut(y)[x..], val);
-            x += 16;
+            P::vstore(b, &mut dst.row_mut(y)[x..], val);
+            x += P::LANES;
         }
-        for x in w16..w {
+        for x in wv..w {
             b.scalar_overhead(1);
-            let mut val = b.scalar_load_u8(src.row(y0), x);
+            let mut val = P::load(b, src.row(y0), x);
             for k in y0 + 1..=y1 {
-                let v = b.scalar_load_u8(src.row(k), x);
+                let v = P::load(b, src.row(k), x);
                 val = op.scalar(b, val, v);
             }
-            b.scalar_store_u8(dst.row_mut(y), x, val);
+            P::store(b, dst.row_mut(y), x, val);
         }
     }
     dst
@@ -153,19 +158,20 @@ pub fn rows_simd_linear_single<B: Backend>(
 
 /// Rows-window pass, scalar (the "without SIMD" comparator with the same
 /// two-row structure).
-pub fn rows_scalar_linear<B: Backend>(
+pub fn rows_scalar_linear<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
-) -> Image<u8> {
+) -> Image<P> {
     let wing = wing_of(window, "w_y");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
         return src.clone();
     }
+    let px = std::mem::size_of::<P>() as u64;
     let mut dst = Image::zeros(h, w);
-    b.record_stream((h * w) as u64, (h * w) as u64);
+    b.record_stream((h * w) as u64 * px, (h * w) as u64 * px);
 
     let mut y = 0usize;
     while y < h {
@@ -176,29 +182,29 @@ pub fn rows_scalar_linear<B: Backend>(
         let bot = if y + wing + 1 < h { Some(y + wing + 1) } else { None };
         for x in 0..w {
             b.scalar_overhead(1);
-            let mut val = b.scalar_load_u8(src.row(c0), x);
+            let mut val = P::load(b, src.row(c0), x);
             for k in c0 + 1..=c1 {
                 b.scalar_overhead(1);
-                let v = b.scalar_load_u8(src.row(k), x);
+                let v = P::load(b, src.row(k), x);
                 val = op.scalar(b, val, v);
             }
             let out0 = match top {
                 Some(t) => {
-                    let v = b.scalar_load_u8(src.row(t), x);
+                    let v = P::load(b, src.row(t), x);
                     op.scalar(b, val, v)
                 }
                 None => val,
             };
-            b.scalar_store_u8(dst.row_mut(y), x, out0);
+            P::store(b, dst.row_mut(y), x, out0);
             if pair {
                 let out1 = match bot {
                     Some(t) => {
-                        let v = b.scalar_load_u8(src.row(t), x);
+                        let v = P::load(b, src.row(t), x);
                         op.scalar(b, val, v)
                     }
                     None => val,
                 };
-                b.scalar_store_u8(dst.row_mut(y + 1), x, out1);
+                P::store(b, dst.row_mut(y + 1), x, out1);
             }
         }
         y += 2;
@@ -211,70 +217,73 @@ pub fn rows_scalar_linear<B: Backend>(
 /// Each source row is staged once into an identity-padded row buffer
 /// (cache-resident, reused across rows) so the unrolled offset loads
 /// never leave the buffer; all window loads are unaligned, matching the
-/// `vld1q_u8(src + x - wing + j)` pattern of the listing.
-pub fn cols_simd_linear<B: Backend>(
+/// `vld1q(src + x - wing + j)` pattern of the listing.
+pub fn cols_simd_linear<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
-) -> Image<u8> {
+) -> Image<P> {
     let wing = wing_of(window, "w_x");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
         return src.clone();
     }
+    let px = std::mem::size_of::<P>() as u64;
     let mut dst = Image::zeros(h, w);
-    b.record_stream((h * w) as u64, (h * w) as u64);
-    let w16 = w - w % 16;
+    b.record_stream((h * w) as u64 * px, (h * w) as u64 * px);
+    let wv = w - w % P::LANES;
+    let ident: P = op.identity();
     // padded row buffer: buf[j] = src[y][j - wing], identity outside
-    let mut buf = vec![op.identity(); w + 2 * wing + 16];
+    let mut buf = vec![ident; w + 2 * wing + P::LANES];
 
     for y in 0..h {
-        buf[..wing].fill(op.identity());
+        buf[..wing].fill(ident);
         buf[wing..wing + w].copy_from_slice(src.row(y));
-        buf[wing + w..].fill(op.identity());
-        b.record_bytes(w as u64, w as u64); // cache-resident staging copy
+        buf[wing + w..].fill(ident);
+        b.record_bytes(w as u64 * px, w as u64 * px); // cache-resident staging copy
 
         let mut x = 0usize;
-        while x < w16 {
+        while x < wv {
             b.scalar_overhead(2);
             // window for output x covers src columns [x-wing, x+wing]
             // = buf[x .. x+window)
-            let mut val = b.vld1q_u8_unaligned(&buf[x..]);
+            let mut val = P::vload_unaligned(b, &buf[x..]);
             for j in 1..window {
-                let v = b.vld1q_u8_unaligned(&buf[x + j..]);
-                val = op.simd(b, val, v);
+                let v = P::vload_unaligned(b, &buf[x + j..]);
+                val = op.simd::<P, _>(b, val, v);
             }
-            b.vst1q_u8(&mut dst.row_mut(y)[x..], val);
-            x += 16;
+            P::vstore(b, &mut dst.row_mut(y)[x..], val);
+            x += P::LANES;
         }
-        for x in w16..w {
+        for x in wv..w {
             b.scalar_overhead(1);
-            let mut val = b.scalar_load_u8(&buf, x);
+            let mut val = P::load(b, &buf, x);
             for j in 1..window {
-                let v = b.scalar_load_u8(&buf, x + j);
+                let v = P::load(b, &buf, x + j);
                 val = op.scalar(b, val, v);
             }
-            b.scalar_store_u8(dst.row_mut(y), x, val);
+            P::store(b, dst.row_mut(y), x, val);
         }
     }
     dst
 }
 
 /// Cols-window pass, scalar.
-pub fn cols_scalar_linear<B: Backend>(
+pub fn cols_scalar_linear<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
-) -> Image<u8> {
+) -> Image<P> {
     let wing = wing_of(window, "w_x");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
         return src.clone();
     }
+    let px = std::mem::size_of::<P>() as u64;
     let mut dst = Image::zeros(h, w);
-    b.record_stream((h * w) as u64, (h * w) as u64);
+    b.record_stream((h * w) as u64 * px, (h * w) as u64 * px);
 
     for y in 0..h {
         let row = src.row(y);
@@ -282,13 +291,13 @@ pub fn cols_scalar_linear<B: Backend>(
             b.scalar_overhead(1);
             let x0 = x.saturating_sub(wing);
             let x1 = (x + wing).min(w - 1);
-            let mut val = b.scalar_load_u8(row, x0);
+            let mut val = P::load(b, row, x0);
             for j in x0 + 1..=x1 {
                 b.scalar_overhead(1);
-                let v = b.scalar_load_u8(row, j);
+                let v = P::load(b, row, j);
                 val = op.scalar(b, val, v);
             }
-            b.scalar_store_u8(dst.row_mut(y), x, val);
+            P::store(b, dst.row_mut(y), x, val);
         }
     }
     dst
@@ -370,6 +379,24 @@ mod tests {
         // the two-row trick must handle the odd last row
         for &h in &[1, 2, 3, 7, 8] {
             check_rows(h, 20, 3, MorphOp::Erode, h as u64);
+        }
+    }
+
+    #[test]
+    fn u16_rows_and_cols_match_naive() {
+        // the same generic code at 16-bit depth (8 lanes/op)
+        for &(h, w) in &[(9, 24), (7, 13), (16, 8)] {
+            let img = synth::noise_u16(h, w, (h * 100 + w) as u64);
+            for &window in &[3, 5, 9] {
+                for op in [MorphOp::Erode, MorphOp::Dilate] {
+                    let want_r = naive::rows_naive(&mut Native, &img, window, op);
+                    let got_r = rows_simd_linear(&mut Native, &img, window, op);
+                    assert!(got_r.same_pixels(&want_r), "u16 rows {h}x{w} w={window}");
+                    let want_c = naive::cols_naive(&mut Native, &img, window, op);
+                    let got_c = cols_simd_linear(&mut Native, &img, window, op);
+                    assert!(got_c.same_pixels(&want_c), "u16 cols {h}x{w} w={window}");
+                }
+            }
         }
     }
 

@@ -2,7 +2,9 @@
 //! rectangular structuring elements, separable implementation.
 //!
 //! Algorithm inventory (all generic over [`crate::neon::Backend`], so
-//! the same code runs at native speed or with instruction accounting):
+//! the same code runs at native speed or with instruction accounting,
+//! and over [`MorphPixel`], so the same code runs on `u8` and `u16`
+//! images):
 //!
 //! | pass | algorithm | SIMD | module | paper |
 //! |------|-----------|------|--------|-------|
@@ -14,11 +16,31 @@
 //! | 2-D | naive sliding window | scalar | [`naive`] | §2 definition |
 //! | 2-D | separable composition + hybrid dispatch | both | [`separable`], [`hybrid`] | §5.3 |
 //!
+//! ## Pixel depth dispatch
+//!
+//! The paper's §4 fast transpose exists in two shapes — 16×16 tiles of
+//! 8-bit elements and 8×8 tiles of 16-bit elements — precisely because
+//! morphology is needed at both depths.  [`MorphPixel`] carries
+//! everything a pass needs to be depth-polymorphic:
+//!
+//! * the reduction identities (`Pixel::MAX_VALUE` / `Pixel::MIN_VALUE`),
+//! * the associated 128-bit SIMD lane type ([`crate::neon::U8x16`] with
+//!   16 lanes for `u8`, [`crate::neon::U16x8`] with 8 lanes for `u16`)
+//!   and the matching `vminq`/`vmaxq`/load/store intrinsics,
+//! * the whole-image NEON transpose at the right tile shape (16×16.8
+//!   for `u8`, 8×8.16 for `u16`), used by the
+//!   [`VerticalStrategy::Transpose`] sandwich.
+//!
+//! A u16 pass therefore issues exactly 2× the vector instructions per
+//! pixel of the u8 pass (8 lanes/op instead of 16) and streams 2× the
+//! bytes; the cost model prices both honestly from the counted mix (see
+//! `rust/tests/counting_u16.rs`).
+//!
 //! Conventions (identical to `python/compile/kernels/ref.py` and the HLO
 //! artifacts): images are `[row, col]`, the SE is `w_x` columns × `w_y`
 //! rows with odd sides and centered anchor, out-of-image samples take
-//! the reduction identity (min → 255, max → 0), output size == input
-//! size.
+//! the reduction identity (min → dtype MAX, max → 0), output size ==
+//! input size.
 
 pub mod binary;
 pub mod derived;
@@ -28,12 +50,196 @@ pub mod naive;
 pub mod separable;
 pub mod vhgw;
 
-use crate::image::Image;
-use crate::neon::Backend;
+use crate::image::{Image, Pixel};
+use crate::neon::{Backend, U16x8, U8x16};
 
 pub use derived::{blackhat, closing, gradient, opening, tophat};
 pub use hybrid::{HybridThresholds, PAPER_WX0, PAPER_WY0};
 pub use separable::{dilate, erode, morphology};
+
+/// A pixel depth the morphology stack can filter: scalar + SIMD min/max,
+/// loads/stores at both alignments, and the §4 tiled transpose for this
+/// element width.  Implemented for `u8` (16 lanes) and `u16` (8 lanes).
+pub trait MorphPixel: Pixel {
+    /// The 128-bit SIMD register view holding [`MorphPixel::LANES`]
+    /// elements of this depth.
+    type Vec: Copy + std::fmt::Debug + PartialEq;
+
+    /// Elements per 128-bit vector op: 16 for `u8`, 8 for `u16` — the
+    /// §4 tile shapes 16×16.8 and 8×8.16.
+    const LANES: usize;
+
+    /// dtype tag used in batch keys, manifests and reports.
+    const DTYPE: &'static str;
+
+    /// Aligned vector load of [`MorphPixel::LANES`] elements.
+    fn vload<B: Backend>(b: &mut B, src: &[Self]) -> Self::Vec;
+
+    /// Unaligned (offset) vector load — the §5.2.2 vertical pattern.
+    fn vload_unaligned<B: Backend>(b: &mut B, src: &[Self]) -> Self::Vec;
+
+    /// Vector store of [`MorphPixel::LANES`] elements.
+    fn vstore<B: Backend>(b: &mut B, dst: &mut [Self], v: Self::Vec);
+
+    /// Lane-wise `vminq`.
+    fn vmin<B: Backend>(b: &mut B, x: Self::Vec, y: Self::Vec) -> Self::Vec;
+
+    /// Lane-wise `vmaxq`.
+    fn vmax<B: Backend>(b: &mut B, x: Self::Vec, y: Self::Vec) -> Self::Vec;
+
+    /// Accounted scalar element load.
+    fn load<B: Backend>(b: &mut B, src: &[Self], idx: usize) -> Self;
+
+    /// Accounted scalar element store.
+    fn store<B: Backend>(b: &mut B, dst: &mut [Self], idx: usize, v: Self);
+
+    /// Accounted scalar min.
+    fn min_s<B: Backend>(b: &mut B, x: Self, y: Self) -> Self;
+
+    /// Accounted scalar max.
+    fn max_s<B: Backend>(b: &mut B, x: Self, y: Self) -> Self;
+
+    /// Whole-image NEON tiled transpose at this depth (§4): 16×16.8
+    /// tiles for `u8`, 8×8.16 tiles for `u16`.  This is what the
+    /// [`VerticalStrategy::Transpose`] sandwich dispatches through.
+    fn transpose_image<B: Backend>(b: &mut B, img: &Image<Self>) -> Image<Self>;
+
+    /// Saturating subtraction (derived operations).
+    fn sat_sub(self, other: Self) -> Self;
+
+    /// Value inversion `MAX - v` (erosion/dilation duality).
+    fn invert(self) -> Self;
+}
+
+impl MorphPixel for u8 {
+    type Vec = U8x16;
+    const LANES: usize = 16;
+    const DTYPE: &'static str = "u8";
+
+    #[inline(always)]
+    fn vload<B: Backend>(b: &mut B, src: &[u8]) -> U8x16 {
+        b.vld1q_u8(src)
+    }
+
+    #[inline(always)]
+    fn vload_unaligned<B: Backend>(b: &mut B, src: &[u8]) -> U8x16 {
+        b.vld1q_u8_unaligned(src)
+    }
+
+    #[inline(always)]
+    fn vstore<B: Backend>(b: &mut B, dst: &mut [u8], v: U8x16) {
+        b.vst1q_u8(dst, v);
+    }
+
+    #[inline(always)]
+    fn vmin<B: Backend>(b: &mut B, x: U8x16, y: U8x16) -> U8x16 {
+        b.vminq_u8(x, y)
+    }
+
+    #[inline(always)]
+    fn vmax<B: Backend>(b: &mut B, x: U8x16, y: U8x16) -> U8x16 {
+        b.vmaxq_u8(x, y)
+    }
+
+    #[inline(always)]
+    fn load<B: Backend>(b: &mut B, src: &[u8], idx: usize) -> u8 {
+        b.scalar_load_u8(src, idx)
+    }
+
+    #[inline(always)]
+    fn store<B: Backend>(b: &mut B, dst: &mut [u8], idx: usize, v: u8) {
+        b.scalar_store_u8(dst, idx, v);
+    }
+
+    #[inline(always)]
+    fn min_s<B: Backend>(b: &mut B, x: u8, y: u8) -> u8 {
+        b.scalar_min_u8(x, y)
+    }
+
+    #[inline(always)]
+    fn max_s<B: Backend>(b: &mut B, x: u8, y: u8) -> u8 {
+        b.scalar_max_u8(x, y)
+    }
+
+    fn transpose_image<B: Backend>(b: &mut B, img: &Image<u8>) -> Image<u8> {
+        crate::transpose::transpose_image(b, img)
+    }
+
+    #[inline(always)]
+    fn sat_sub(self, other: u8) -> u8 {
+        self.saturating_sub(other)
+    }
+
+    #[inline(always)]
+    fn invert(self) -> u8 {
+        u8::MAX - self
+    }
+}
+
+impl MorphPixel for u16 {
+    type Vec = U16x8;
+    const LANES: usize = 8;
+    const DTYPE: &'static str = "u16";
+
+    #[inline(always)]
+    fn vload<B: Backend>(b: &mut B, src: &[u16]) -> U16x8 {
+        b.vld1q_u16(src)
+    }
+
+    #[inline(always)]
+    fn vload_unaligned<B: Backend>(b: &mut B, src: &[u16]) -> U16x8 {
+        b.vld1q_u16_unaligned(src)
+    }
+
+    #[inline(always)]
+    fn vstore<B: Backend>(b: &mut B, dst: &mut [u16], v: U16x8) {
+        b.vst1q_u16(dst, v);
+    }
+
+    #[inline(always)]
+    fn vmin<B: Backend>(b: &mut B, x: U16x8, y: U16x8) -> U16x8 {
+        b.vminq_u16(x, y)
+    }
+
+    #[inline(always)]
+    fn vmax<B: Backend>(b: &mut B, x: U16x8, y: U16x8) -> U16x8 {
+        b.vmaxq_u16(x, y)
+    }
+
+    #[inline(always)]
+    fn load<B: Backend>(b: &mut B, src: &[u16], idx: usize) -> u16 {
+        b.scalar_load_u16(src, idx)
+    }
+
+    #[inline(always)]
+    fn store<B: Backend>(b: &mut B, dst: &mut [u16], idx: usize, v: u16) {
+        b.scalar_store_u16(dst, idx, v);
+    }
+
+    #[inline(always)]
+    fn min_s<B: Backend>(b: &mut B, x: u16, y: u16) -> u16 {
+        b.scalar_min_u16(x, y)
+    }
+
+    #[inline(always)]
+    fn max_s<B: Backend>(b: &mut B, x: u16, y: u16) -> u16 {
+        b.scalar_max_u16(x, y)
+    }
+
+    fn transpose_image<B: Backend>(b: &mut B, img: &Image<u16>) -> Image<u16> {
+        crate::transpose::transpose_image_u16(b, img)
+    }
+
+    #[inline(always)]
+    fn sat_sub(self, other: u16) -> u16 {
+        self.saturating_sub(other)
+    }
+
+    #[inline(always)]
+    fn invert(self) -> u16 {
+        u16::MAX - self
+    }
+}
 
 /// Which reduction a pass performs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -45,35 +251,33 @@ pub enum MorphOp {
 }
 
 impl MorphOp {
-    /// The reduction identity — the padding value for out-of-image taps.
+    /// The reduction identity — the padding value for out-of-image taps
+    /// (dtype MAX for erode, dtype MIN for dilate).
     #[inline(always)]
-    pub fn identity(self) -> u8 {
+    pub fn identity<P: MorphPixel>(self) -> P {
         match self {
-            MorphOp::Erode => u8::MAX,
-            MorphOp::Dilate => u8::MIN,
+            MorphOp::Erode => P::MAX_VALUE,
+            MorphOp::Dilate => P::MIN_VALUE,
         }
     }
 
     /// Scalar combine (accounted through the backend).
     #[inline(always)]
-    pub fn scalar<B: Backend>(self, b: &mut B, x: u8, y: u8) -> u8 {
+    pub fn scalar<P: MorphPixel, B: Backend>(self, b: &mut B, x: P, y: P) -> P {
         match self {
-            MorphOp::Erode => b.scalar_min_u8(x, y),
-            MorphOp::Dilate => b.scalar_max_u8(x, y),
+            MorphOp::Erode => P::min_s(b, x, y),
+            MorphOp::Dilate => P::max_s(b, x, y),
         }
     }
 
-    /// Vector combine (accounted through the backend).
+    /// Vector combine (accounted through the backend).  `P` is not
+    /// inferable from `P::Vec` alone, so call sites use
+    /// `op.simd::<P, _>(..)`.
     #[inline(always)]
-    pub fn simd<B: Backend>(
-        self,
-        b: &mut B,
-        x: crate::neon::U8x16,
-        y: crate::neon::U8x16,
-    ) -> crate::neon::U8x16 {
+    pub fn simd<P: MorphPixel, B: Backend>(self, b: &mut B, x: P::Vec, y: P::Vec) -> P::Vec {
         match self {
-            MorphOp::Erode => b.vminq_u8(x, y),
-            MorphOp::Dilate => b.vmaxq_u8(x, y),
+            MorphOp::Erode => P::vmin(b, x, y),
+            MorphOp::Dilate => P::vmax(b, x, y),
         }
     }
 
@@ -119,7 +323,9 @@ impl PassMethod {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum VerticalStrategy {
     /// §5.2.1 baseline: transpose → rows pass → transpose, reusing the
-    /// SIMD-friendly horizontal code and the §4 NEON transpose tiles.
+    /// SIMD-friendly horizontal code and the §4 NEON transpose tiles
+    /// (16×16.8 for u8, 8×8.16 for u16 — dispatched through
+    /// [`MorphPixel::transpose_image`]).
     Transpose,
     /// §5.2.2: operate in place with offset (unaligned) loads.
     Direct,
@@ -139,8 +345,9 @@ impl VerticalStrategy {
 /// extension (implemented by pre-padding with replicated edges).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Border {
-    /// Out-of-image taps contribute the reduction identity (255 for
-    /// erode, 0 for dilate) — reduction over the window∩image.
+    /// Out-of-image taps contribute the reduction identity (dtype MAX
+    /// for erode, dtype MIN for dilate) — reduction over the
+    /// window∩image.
     Identity,
     /// Out-of-image taps replicate the nearest edge pixel.
     Replicate,
@@ -190,7 +397,11 @@ pub(crate) fn wing_of(window: usize, what: &str) -> usize {
 /// Pre-pad an image by (wing_x, wing_y) replicated edges — the
 /// [`Border::Replicate`] lowering.  The result is filtered with identity
 /// borders and cropped back by the caller.
-pub(crate) fn replicate_pad(img: &Image<u8>, wing_x: usize, wing_y: usize) -> Image<u8> {
+pub(crate) fn replicate_pad<P: Pixel>(
+    img: &Image<P>,
+    wing_x: usize,
+    wing_y: usize,
+) -> Image<P> {
     let (h, w) = (img.height(), img.width());
     if h == 0 || w == 0 {
         return img.clone();
@@ -203,7 +414,13 @@ pub(crate) fn replicate_pad(img: &Image<u8>, wing_x: usize, wing_y: usize) -> Im
 }
 
 /// Crop the center `h × w` region starting at (wing_y, wing_x).
-pub(crate) fn crop(img: &Image<u8>, wing_y: usize, wing_x: usize, h: usize, w: usize) -> Image<u8> {
+pub(crate) fn crop<P: Pixel>(
+    img: &Image<P>,
+    wing_y: usize,
+    wing_x: usize,
+    h: usize,
+    w: usize,
+) -> Image<P> {
     Image::from_fn(h, w, |y, x| img.get(y + wing_y, x + wing_x))
 }
 
@@ -212,10 +429,29 @@ mod tests {
     use super::*;
 
     #[test]
-    fn identity_values() {
-        assert_eq!(MorphOp::Erode.identity(), 255);
-        assert_eq!(MorphOp::Dilate.identity(), 0);
+    fn identity_values_per_depth() {
+        assert_eq!(MorphOp::Erode.identity::<u8>(), 255);
+        assert_eq!(MorphOp::Dilate.identity::<u8>(), 0);
+        assert_eq!(MorphOp::Erode.identity::<u16>(), 65535);
+        assert_eq!(MorphOp::Dilate.identity::<u16>(), 0);
         assert_eq!(MorphOp::Erode.dual(), MorphOp::Dilate);
+    }
+
+    #[test]
+    fn lane_constants_match_paper_tiles() {
+        // §4: 16×16 tiles of 8-bit elements, 8×8 tiles of 16-bit ones
+        assert_eq!(<u8 as MorphPixel>::LANES, 16);
+        assert_eq!(<u16 as MorphPixel>::LANES, 8);
+        assert_eq!(<u8 as MorphPixel>::DTYPE, "u8");
+        assert_eq!(<u16 as MorphPixel>::DTYPE, "u16");
+    }
+
+    #[test]
+    fn sat_sub_and_invert() {
+        assert_eq!(MorphPixel::sat_sub(3u8, 5u8), 0);
+        assert_eq!(MorphPixel::sat_sub(5u16, 3u16), 2);
+        assert_eq!(7u8.invert(), 248);
+        assert_eq!(7u16.invert(), 65528);
     }
 
     #[test]
@@ -235,6 +471,15 @@ mod tests {
         assert_eq!(p.get(4, 0), img.get(2, 0));
         let c = crop(&p, 1, 2, 3, 4);
         assert!(c.same_pixels(&img));
+    }
+
+    #[test]
+    fn replicate_pad_works_on_u16() {
+        let img = Image::from_fn(2, 2, |y, x| (1000 * y + x) as u16);
+        let p = replicate_pad(&img, 1, 1);
+        assert_eq!(p.get(0, 0), img.get(0, 0));
+        assert_eq!(p.get(3, 3), img.get(1, 1));
+        assert!(crop(&p, 1, 1, 2, 2).same_pixels(&img));
     }
 
     #[test]

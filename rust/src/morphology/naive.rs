@@ -1,40 +1,42 @@
 //! Naive 2-D sliding-window erosion/dilation — the §2 definition,
 //! computed directly.  O(w_x·w_y) per pixel; exists as the correctness
-//! oracle every fast implementation is tested against, and as the
-//! "non-separable" comparator proving the separability claim.
+//! oracle every fast implementation is tested against (at both pixel
+//! depths), and as the "non-separable" comparator proving the
+//! separability claim.
 
-use super::{wing_of, MorphOp};
+use super::{wing_of, MorphOp, MorphPixel};
 use crate::image::Image;
 use crate::neon::Backend;
 
 /// Direct 2-D windowed reduction with identity borders.
-pub fn morph2d_naive<B: Backend>(
+pub fn morph2d_naive<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     w_x: usize,
     w_y: usize,
     op: MorphOp,
-) -> Image<u8> {
+) -> Image<P> {
     let wing_x = wing_of(w_x, "w_x");
     let wing_y = wing_of(w_y, "w_y");
     let (h, w) = (src.height(), src.width());
+    let px = std::mem::size_of::<P>() as u64;
     let mut dst = Image::zeros(h, w);
-    b.record_stream((h * w) as u64, (h * w) as u64);
+    b.record_stream((h * w) as u64 * px, (h * w) as u64 * px);
     for y in 0..h {
         let y0 = y.saturating_sub(wing_y);
         let y1 = (y + wing_y).min(h.saturating_sub(1));
         for x in 0..w {
             let x0 = x.saturating_sub(wing_x);
             let x1 = (x + wing_x).min(w.saturating_sub(1));
-            let mut acc = op.identity();
+            let mut acc: P = op.identity();
             for yy in y0..=y1 {
                 let row = src.row(yy);
                 for xx in x0..=x1 {
-                    let v = b.scalar_load_u8(row, xx);
+                    let v = P::load(b, row, xx);
                     acc = op.scalar(b, acc, v);
                 }
             }
-            b.scalar_store_u8(dst.row_mut(y), x, acc);
+            P::store(b, dst.row_mut(y), x, acc);
         }
     }
     dst
@@ -42,23 +44,23 @@ pub fn morph2d_naive<B: Backend>(
 
 /// Naive 1-D reduction over a window of ROWS (oracle for the fast rows
 /// passes).
-pub fn rows_naive<B: Backend>(
+pub fn rows_naive<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
-) -> Image<u8> {
+) -> Image<P> {
     morph2d_naive(b, src, 1, window, op)
 }
 
 /// Naive 1-D reduction over a window of COLUMNS (oracle for the fast
 /// cols passes).
-pub fn cols_naive<B: Backend>(
+pub fn cols_naive<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
-) -> Image<u8> {
+) -> Image<P> {
     morph2d_naive(b, src, window, 1, op)
 }
 
@@ -96,17 +98,34 @@ mod tests {
     }
 
     #[test]
+    fn u16_impulse_footprint() {
+        // same law at 16-bit depth, with values above u8 range
+        let mut img = Image::filled(9, 9, 40_000u16);
+        img.set(4, 4, 300);
+        let out = morph2d_naive(&mut Native, &img, 3, 3, MorphOp::Erode);
+        for y in 0..9 {
+            for x in 0..9 {
+                let inside = (3..=5).contains(&y) && (3..=5).contains(&x);
+                assert_eq!(out.get(y, x), if inside { 300 } else { 40_000 });
+            }
+        }
+    }
+
+    #[test]
     fn window_one_is_identity() {
         let img = synth::noise(13, 17, 5);
         let out = morph2d_naive(&mut Native, &img, 1, 1, MorphOp::Erode);
         assert!(out.same_pixels(&img));
+        let img16 = synth::noise_u16(13, 17, 5);
+        let out16 = morph2d_naive(&mut Native, &img16, 1, 1, MorphOp::Dilate);
+        assert!(out16.same_pixels(&img16));
     }
 
     #[test]
     fn borders_use_identity_not_wraparound() {
         // all-dark image: erosion must stay dark at the borders (identity
-        // padding only shrinks the window, it never injects 255 into the
-        // output because min(255, dark) = dark)
+        // padding only shrinks the window, it never injects MAX into the
+        // output because min(MAX, dark) = dark)
         let img = Image::filled(5, 5, 3u8);
         let out = morph2d_naive(&mut Native, &img, 5, 5, MorphOp::Erode);
         assert!(out.same_pixels(&img));

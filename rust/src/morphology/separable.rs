@@ -1,24 +1,26 @@
 //! Separable composition (§5): a 2-D `w_x × w_y` erosion/dilation as a
 //! rows-window pass followed by a cols-window pass, with the §5.2
-//! vertical strategies and the §5.3 hybrid dispatch.
+//! vertical strategies and the §5.3 hybrid dispatch — generic over the
+//! pixel depth ([`MorphPixel`]): the same pass code serves `u8` (16
+//! SIMD lanes, 16×16.8 transpose tiles) and `u16` (8 lanes, 8×8.16
+//! tiles).
 
 use super::hybrid::resolve_method;
 use super::{linear, vhgw, wing_of};
-use super::{Border, MorphConfig, MorphOp, PassMethod, VerticalStrategy};
+use super::{Border, MorphConfig, MorphOp, MorphPixel, PassMethod, VerticalStrategy};
 use crate::image::Image;
 use crate::neon::Backend;
-use crate::transpose;
 
 /// One rows-window (paper "horizontal") pass with a *resolved* method.
-pub fn pass_rows<B: Backend>(
+pub fn pass_rows<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
     method: PassMethod,
     simd: bool,
     thresholds: super::HybridThresholds,
-) -> Image<u8> {
+) -> Image<P> {
     let m = resolve_method(method, window, thresholds.wy0);
     match (m, simd) {
         (PassMethod::Linear, true) => linear::rows_simd_linear(b, src, window, op),
@@ -34,20 +36,21 @@ pub fn pass_rows<B: Backend>(
 /// * `simd == false` → direct scalar implementations (the paper's
 ///   "without SIMD" comparators never transpose).
 /// * `simd == true`, [`VerticalStrategy::Transpose`] → the §5.2.1
-///   sandwich: NEON tiled transpose, SIMD rows pass, transpose back.
+///   sandwich: NEON tiled transpose at this pixel depth, SIMD rows
+///   pass, transpose back.
 /// * `simd == true`, [`VerticalStrategy::Direct`] → §5.2.2 offset-load
 ///   linear pass; vHGW has no direct SIMD form in the paper, so it falls
 ///   back to the transpose sandwich.
-pub fn pass_cols<B: Backend>(
+pub fn pass_cols<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
     method: PassMethod,
     simd: bool,
     vertical: VerticalStrategy,
     thresholds: super::HybridThresholds,
-) -> Image<u8> {
+) -> Image<P> {
     let m = resolve_method(method, window, thresholds.wx0);
     if !simd {
         return match m {
@@ -71,29 +74,31 @@ pub fn pass_cols<B: Backend>(
 }
 
 /// §5.2.1: transpose → SIMD rows pass → transpose back, with the §4 NEON
-/// transpose tiles.
-fn transpose_sandwich<B: Backend>(
+/// transpose tiles of this depth (16×16.8 for `u8`, 8×8.16 for `u16` —
+/// dispatched through [`MorphPixel::transpose_image`]).
+fn transpose_sandwich<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
     method: PassMethod,
     thresholds: super::HybridThresholds,
-) -> Image<u8> {
-    let t = transpose::transpose_image(b, src);
+) -> Image<P> {
+    let t = P::transpose_image(b, src);
     let filtered = pass_rows(b, &t, window, op, method, true, thresholds);
-    transpose::transpose_image(b, &filtered)
+    P::transpose_image(b, &filtered)
 }
 
-/// Full separable 2-D morphology under a [`MorphConfig`].
-pub fn morphology<B: Backend>(
+/// Full separable 2-D morphology under a [`MorphConfig`], at either
+/// pixel depth.
+pub fn morphology<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     op: MorphOp,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
-) -> Image<u8> {
+) -> Image<P> {
     let wing_x = wing_of(w_x, "w_x");
     let wing_y = wing_of(w_y, "w_y");
     if src.height() == 0 || src.width() == 0 {
@@ -129,8 +134,9 @@ pub fn morphology<B: Backend>(
     }
 }
 
-/// Erosion with the paper's final (§5.3) configuration, native speed.
-pub fn erode(src: &Image<u8>, w_x: usize, w_y: usize) -> Image<u8> {
+/// Erosion with the paper's final (§5.3) configuration, native speed,
+/// at either pixel depth.
+pub fn erode<P: MorphPixel>(src: &Image<P>, w_x: usize, w_y: usize) -> Image<P> {
     morphology(
         &mut crate::neon::Native,
         src,
@@ -141,8 +147,9 @@ pub fn erode(src: &Image<u8>, w_x: usize, w_y: usize) -> Image<u8> {
     )
 }
 
-/// Dilation with the paper's final (§5.3) configuration, native speed.
-pub fn dilate(src: &Image<u8>, w_x: usize, w_y: usize) -> Image<u8> {
+/// Dilation with the paper's final (§5.3) configuration, native speed,
+/// at either pixel depth.
+pub fn dilate<P: MorphPixel>(src: &Image<P>, w_x: usize, w_y: usize) -> Image<P> {
     morphology(
         &mut crate::neon::Native,
         src,
@@ -197,8 +204,36 @@ mod tests {
     }
 
     #[test]
+    fn all_configs_match_naive_u16() {
+        // the same exhaustive config sweep at 16-bit depth
+        let img = synth::noise_u16(21, 27, 78);
+        for &(w_x, w_y) in &[(3, 3), (5, 9), (1, 7), (7, 1)] {
+            for op in [MorphOp::Erode, MorphOp::Dilate] {
+                let want = naive::morph2d_naive(&mut Native, &img, w_x, w_y, op);
+                for cfg in configs() {
+                    let got = morphology(&mut Native, &img, op, w_x, w_y, &cfg);
+                    assert!(
+                        got.same_pixels(&want),
+                        "u16 {op:?} {w_x}x{w_y} cfg={cfg:?} diff={:?}",
+                        got.first_diff(&want)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn simple_api_matches_naive() {
         let img = synth::document(60, 80, 3);
+        let e = erode(&img, 5, 3);
+        let d = dilate(&img, 3, 5);
+        assert!(e.same_pixels(&naive::morph2d_naive(&mut Native, &img, 5, 3, MorphOp::Erode)));
+        assert!(d.same_pixels(&naive::morph2d_naive(&mut Native, &img, 3, 5, MorphOp::Dilate)));
+    }
+
+    #[test]
+    fn simple_api_matches_naive_u16() {
+        let img = synth::noise_u16(40, 56, 9);
         let e = erode(&img, 5, 3);
         let d = dilate(&img, 3, 5);
         assert!(e.same_pixels(&naive::morph2d_naive(&mut Native, &img, 5, 3, MorphOp::Erode)));
@@ -228,7 +263,7 @@ mod tests {
 
     #[test]
     fn erosion_dilation_duality() {
-        // erode(img) == 255 - dilate(255 - img) for symmetric SEs
+        // erode(img) == MAX - dilate(MAX - img) for symmetric SEs
         let img = synth::noise(24, 31, 21);
         let inv = crate::image::Image::from_fn(24, 31, |y, x| 255 - img.get(y, x));
         let e = erode(&img, 7, 5);
@@ -245,5 +280,8 @@ mod tests {
         let img = synth::noise(10, 10, 1);
         assert!(erode(&img, 1, 1).same_pixels(&img));
         assert!(dilate(&img, 1, 1).same_pixels(&img));
+        let img16 = synth::noise_u16(10, 10, 1);
+        assert!(erode(&img16, 1, 1).same_pixels(&img16));
+        assert!(dilate(&img16, 1, 1).same_pixels(&img16));
     }
 }

@@ -14,14 +14,15 @@
 //! `S` scan with the merge, carrying the running suffix in a single row
 //! buffer — 3 combines per point, the classic vHGW census.
 //!
-//! The rows-window pass vectorizes trivially (16 columns per `vminq`,
-//! all aligned); the cols-window scalar pass is the paper's "vertical
-//! without SIMD" comparator (its SIMD counterpart is the §5.2.1
-//! transpose sandwich in [`super::separable`]).
+//! The rows-window pass vectorizes trivially ([`MorphPixel::LANES`]
+//! columns per `vminq`, all aligned); the cols-window scalar pass is the
+//! paper's "vertical without SIMD" comparator (its SIMD counterpart is
+//! the §5.2.1 transpose sandwich in [`super::separable`]).  All passes
+//! are generic over the pixel depth.
 
-use super::{wing_of, MorphOp};
+use super::{wing_of, MorphOp, MorphPixel};
 use crate::image::Image;
-use crate::neon::{Backend, U8x16};
+use crate::neon::Backend;
 
 /// Segment count covering `n + 2*wing` samples with segment length `w`.
 #[inline]
@@ -30,13 +31,30 @@ pub(crate) fn seg_count(n: usize, window: usize) -> usize {
     (n + 2 * wing).div_ceil(window)
 }
 
+/// Padded virtual source row of the rows-window scans:
+/// `P(i) = src[i - wing]`, `ident_row` outside the image.
+#[inline]
+fn padded_row<'a, P: MorphPixel>(
+    src: &'a Image<P>,
+    ident_row: &'a [P],
+    wing: usize,
+    h: usize,
+    i: usize,
+) -> &'a [P] {
+    if (wing..wing + h).contains(&i) {
+        src.row(i - wing)
+    } else {
+        ident_row
+    }
+}
+
 /// Rows-window vHGW pass, NEON (the §5.1.1 baseline *with* SIMD).
-pub fn rows_simd_vhgw<B: Backend>(
+pub fn rows_simd_vhgw<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
-) -> Image<u8> {
+) -> Image<P> {
     let wing = wing_of(window, "w_y");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
@@ -44,25 +62,23 @@ pub fn rows_simd_vhgw<B: Backend>(
     }
     let nseg = seg_count(h, window);
     let ph = nseg * window; // padded height
+    let px = std::mem::size_of::<P>() as u64;
     let mut dst = Image::zeros(h, w);
-    let w16 = w - w % 16;
+    let wv = w - w % P::LANES;
 
     // streaming: src read twice (R scan + S scan), R written + read,
     // dst written — the "additional memory = doubled image size" cost
-    b.record_stream((2 * h * w + ph * w) as u64, (ph * w + h * w) as u64);
+    b.record_stream(
+        (2 * h * w + ph * w) as u64 * px,
+        (ph * w + h * w) as u64 * px,
+    );
 
     // padded virtual source row: P(i) = src[i - wing], identity outside
-    let ident_row = vec![op.identity(); w];
-    let prow = |i: usize| -> &[u8] {
-        if (wing..wing + h).contains(&i) {
-            src.row(i - wing)
-        } else {
-            &ident_row
-        }
-    };
+    let ident_row = vec![op.identity::<P>(); w];
+    let prow = |i: usize| padded_row(src, &ident_row, wing, h, i);
 
     // R: per-segment prefix reduction, ascending, streaming by rows
-    let mut r = vec![0u8; ph * w];
+    let mut r = vec![P::default(); ph * w];
     for i in 0..ph {
         let p = prow(i);
         if i % window == 0 {
@@ -71,75 +87,75 @@ pub fn rows_simd_vhgw<B: Backend>(
             let _ = head;
             let row_i = &mut tail[..w];
             let mut x = 0;
-            while x < w16 {
+            while x < wv {
                 b.scalar_overhead(1);
-                let v = b.vld1q_u8(&p[x..]);
-                b.vst1q_u8(&mut row_i[x..], v);
-                x += 16;
+                let v = P::vload(b, &p[x..]);
+                P::vstore(b, &mut row_i[x..], v);
+                x += P::LANES;
             }
-            for x in w16..w {
-                let v = b.scalar_load_u8(p, x);
-                b.scalar_store_u8(row_i, x, v);
+            for x in wv..w {
+                let v = P::load(b, p, x);
+                P::store(b, row_i, x, v);
             }
         } else {
             let (prev, cur) = r.split_at_mut(i * w);
             let prev_row = &prev[(i - 1) * w..];
             let cur_row = &mut cur[..w];
             let mut x = 0;
-            while x < w16 {
+            while x < wv {
                 b.scalar_overhead(1);
-                let a = b.vld1q_u8(&prev_row[x..]);
-                let v = b.vld1q_u8(&p[x..]);
-                let m = op.simd(b, a, v);
-                b.vst1q_u8(&mut cur_row[x..], m);
-                x += 16;
+                let a = P::vload(b, &prev_row[x..]);
+                let v = P::vload(b, &p[x..]);
+                let m = op.simd::<P, _>(b, a, v);
+                P::vstore(b, &mut cur_row[x..], m);
+                x += P::LANES;
             }
-            for x in w16..w {
-                let a = b.scalar_load_u8(prev_row, x);
-                let v = b.scalar_load_u8(p, x);
+            for x in wv..w {
+                let a = P::load(b, prev_row, x);
+                let v = P::load(b, p, x);
                 let m = op.scalar(b, a, v);
-                b.scalar_store_u8(cur_row, x, m);
+                P::store(b, cur_row, x, m);
             }
         }
     }
 
     // S scan fused with merge, descending with a carried row buffer
-    let mut s_row = vec![op.identity(); w];
+    let mut s_row = vec![op.identity::<P>(); w];
     for i in (0..ph).rev() {
         let p = prow(i);
         let seg_last = i % window == window - 1;
         let mut x = 0;
-        while x < w16 {
+        while x < wv {
             b.scalar_overhead(1);
-            let v = b.vld1q_u8(&p[x..]);
+            let v = P::vload(b, &p[x..]);
             let s = if seg_last {
                 v
             } else {
-                let prev = b.vld1q_u8(&s_row[x..]);
-                op.simd(b, prev, v)
+                let prev = P::vload(b, &s_row[x..]);
+                op.simd::<P, _>(b, prev, v)
             };
-            b.vst1q_u8(&mut s_row[x..], s);
+            P::vstore(b, &mut s_row[x..], s);
             if i < h {
                 // out[i] = comb(S[i], R[i + window - 1])
-                let rr = b.vld1q_u8(&r[(i + window - 1) * w + x..]);
-                let o = op.simd(b, s, rr);
-                b.vst1q_u8(&mut dst.row_mut(i)[x..], o);
+                let rr = P::vload(b, &r[(i + window - 1) * w + x..]);
+                let o = op.simd::<P, _>(b, s, rr);
+                P::vstore(b, &mut dst.row_mut(i)[x..], o);
             }
-            x += 16;
+            x += P::LANES;
         }
-        for x in w16..w {
-            let v = b.scalar_load_u8(p, x);
+        for x in wv..w {
+            let v = P::load(b, p, x);
             let s = if seg_last {
                 v
             } else {
-                let prev = b.scalar_load_u8(&s_row, x);
+                let prev = P::load(b, &s_row, x);
                 op.scalar(b, prev, v)
             };
-            b.scalar_store_u8(&mut s_row, x, s);
+            P::store(b, &mut s_row, x, s);
             if i < h {
-                let rr = b.scalar_load_u8(&r, (i + window - 1) * w + x);
+                let rr = P::load(b, &r, (i + window - 1) * w + x);
                 let o = op.scalar(b, s, rr);
-                b.scalar_store_u8(dst.row_mut(i), x, o);
+                P::store(b, dst.row_mut(i), x, o);
             }
         }
     }
@@ -148,12 +164,12 @@ pub fn rows_simd_vhgw<B: Backend>(
 
 /// Rows-window vHGW pass, scalar (the paper's Fig. 3 "without SIMD"
 /// baseline).
-pub fn rows_scalar_vhgw<B: Backend>(
+pub fn rows_scalar_vhgw<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
-) -> Image<u8> {
+) -> Image<P> {
     let wing = wing_of(window, "w_y");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
@@ -161,57 +177,55 @@ pub fn rows_scalar_vhgw<B: Backend>(
     }
     let nseg = seg_count(h, window);
     let ph = nseg * window;
+    let px = std::mem::size_of::<P>() as u64;
     let mut dst = Image::zeros(h, w);
-    b.record_stream((2 * h * w + ph * w) as u64, (ph * w + h * w) as u64);
+    b.record_stream(
+        (2 * h * w + ph * w) as u64 * px,
+        (ph * w + h * w) as u64 * px,
+    );
 
-    let ident_row = vec![op.identity(); w];
-    let prow = |i: usize| -> &[u8] {
-        if (wing..wing + h).contains(&i) {
-            src.row(i - wing)
-        } else {
-            &ident_row
-        }
-    };
+    let ident_row = vec![op.identity::<P>(); w];
+    let prow = |i: usize| padded_row(src, &ident_row, wing, h, i);
 
-    let mut r = vec![0u8; ph * w];
+    let mut r = vec![P::default(); ph * w];
     for i in 0..ph {
         let p = prow(i);
         b.scalar_overhead(1);
         if i % window == 0 {
             for x in 0..w {
-                let v = b.scalar_load_u8(p, x);
-                b.scalar_store_u8(&mut r[i * w..], x, v);
+                let v = P::load(b, p, x);
+                P::store(b, &mut r[i * w..], x, v);
             }
         } else {
             for x in 0..w {
                 b.scalar_overhead(1);
-                let a = b.scalar_load_u8(&r, (i - 1) * w + x);
-                let v = b.scalar_load_u8(p, x);
+                let a = P::load(b, &r, (i - 1) * w + x);
+                let v = P::load(b, p, x);
                 let m = op.scalar(b, a, v);
-                b.scalar_store_u8(&mut r[i * w..], x, m);
+                P::store(b, &mut r[i * w..], x, m);
             }
         }
     }
 
-    let mut s_row = vec![op.identity(); w];
+    let mut s_row = vec![op.identity::<P>(); w];
     for i in (0..ph).rev() {
         let p = prow(i);
         let seg_last = i % window == window - 1;
         b.scalar_overhead(1);
         for x in 0..w {
             b.scalar_overhead(1);
-            let v = b.scalar_load_u8(p, x);
+            let v = P::load(b, p, x);
             let s = if seg_last {
                 v
             } else {
-                let prev = b.scalar_load_u8(&s_row, x);
+                let prev = P::load(b, &s_row, x);
                 op.scalar(b, prev, v)
             };
-            b.scalar_store_u8(&mut s_row, x, s);
+            P::store(b, &mut s_row, x, s);
             if i < h {
-                let rr = b.scalar_load_u8(&r, (i + window - 1) * w + x);
+                let rr = P::load(b, &r, (i + window - 1) * w + x);
                 let o = op.scalar(b, s, rr);
-                b.scalar_store_u8(dst.row_mut(i), x, o);
+                P::store(b, dst.row_mut(i), x, o);
             }
         }
     }
@@ -221,12 +235,12 @@ pub fn rows_scalar_vhgw<B: Backend>(
 /// Cols-window vHGW pass, scalar, direct (the paper's Fig. 4 "without
 /// SIMD" comparator).  Per-row 1-D problems; the R buffer is one padded
 /// row, reused (cache-resident).
-pub fn cols_scalar_vhgw<B: Backend>(
+pub fn cols_scalar_vhgw<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: &Image<P>,
     window: usize,
     op: MorphOp,
-) -> Image<u8> {
+) -> Image<P> {
     let wing = wing_of(window, "w_x");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
@@ -234,16 +248,17 @@ pub fn cols_scalar_vhgw<B: Backend>(
     }
     let nseg = seg_count(w, window);
     let pw = nseg * window;
+    let px = std::mem::size_of::<P>() as u64;
     let mut dst = Image::zeros(h, w);
     // src read twice, dst written; R is cache-resident per row
-    b.record_stream((2 * h * w) as u64, (h * w) as u64);
+    b.record_stream((2 * h * w) as u64 * px, (h * w) as u64 * px);
 
-    let mut r = vec![0u8; pw];
+    let mut r = vec![P::default(); pw];
     for y in 0..h {
         let row = src.row(y);
-        let pval = |b: &mut B, j: usize| -> u8 {
+        let pval = |b: &mut B, j: usize| -> P {
             if (wing..wing + w).contains(&j) {
-                b.scalar_load_u8(row, j - wing)
+                P::load(b, row, j - wing)
             } else {
                 op.identity()
             }
@@ -255,13 +270,13 @@ pub fn cols_scalar_vhgw<B: Backend>(
             let val = if j % window == 0 {
                 v
             } else {
-                let a = b.scalar_load_u8(&r, j - 1);
+                let a = P::load(b, &r, j - 1);
                 op.scalar(b, a, v)
             };
-            b.scalar_store_u8(&mut r, j, val);
+            P::store(b, &mut r, j, val);
         }
         // S fused with merge, descending with a scalar carry
-        let mut s = op.identity();
+        let mut s: P = op.identity();
         for j in (0..pw).rev() {
             b.scalar_overhead(1);
             let v = pval(b, j);
@@ -271,9 +286,9 @@ pub fn cols_scalar_vhgw<B: Backend>(
                 op.scalar(b, s, v)
             };
             if j < w {
-                let rr = b.scalar_load_u8(&r, j + window - 1);
+                let rr = P::load(b, &r, j + window - 1);
                 let o = op.scalar(b, s, rr);
-                b.scalar_store_u8(dst.row_mut(y), j, o);
+                P::store(b, dst.row_mut(y), j, o);
             }
         }
     }
@@ -286,13 +301,11 @@ pub fn combines_per_point() -> u64 {
     3
 }
 
-#[allow(dead_code)]
-fn _assert_u8x16_used(_: U8x16) {}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::image::synth;
+    use crate::image::Image;
     use crate::morphology::naive;
     use crate::neon::{Counting, InstrClass, Native};
 
@@ -333,6 +346,20 @@ mod tests {
                     "vhgw cols w={window} {op:?}: {:?}",
                     got.first_diff(&want)
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn u16_vhgw_matches_naive() {
+        for &window in &[3, 7, 15] {
+            for op in [MorphOp::Erode, MorphOp::Dilate] {
+                let img = synth::noise_u16(19, 23, window as u64 + 7);
+                let want_r = naive::rows_naive(&mut Native, &img, window, op);
+                assert!(rows_simd_vhgw(&mut Native, &img, window, op).same_pixels(&want_r));
+                assert!(rows_scalar_vhgw(&mut Native, &img, window, op).same_pixels(&want_r));
+                let want_c = naive::cols_naive(&mut Native, &img, window, op);
+                assert!(cols_scalar_vhgw(&mut Native, &img, window, op).same_pixels(&want_c));
             }
         }
     }
@@ -384,6 +411,4 @@ mod tests {
             assert_eq!(out.get(y, 9), 200); // columns untouched
         }
     }
-
-    use crate::image::Image;
 }

@@ -63,6 +63,16 @@ pub trait Backend {
         regs::vld1q_u16(src)
     }
 
+    /// `vld1q.16` at an arbitrary (unaligned) element offset — the u16
+    /// counterpart of [`Backend::vld1q_u8_unaligned`] for the §5.2.2
+    /// vertical pass at 16-bit depth.
+    #[inline(always)]
+    fn vld1q_u16_unaligned(&mut self, src: &[u16]) -> U16x8 {
+        self.record(InstrClass::SimdLoadUnaligned, 1);
+        self.record_bytes(16, 0);
+        regs::vld1q_u16(src)
+    }
+
     #[inline(always)]
     fn vst1q_u16(&mut self, dst: &mut [u16], v: U16x8) {
         self.record(InstrClass::SimdStore, 1);
@@ -234,6 +244,18 @@ pub trait Backend {
 
     #[inline(always)]
     fn scalar_max_u8(&mut self, a: u8, b: u8) -> u8 {
+        self.record(InstrClass::ScalarCmp, 1);
+        a.max(b)
+    }
+
+    #[inline(always)]
+    fn scalar_min_u16(&mut self, a: u16, b: u16) -> u16 {
+        self.record(InstrClass::ScalarCmp, 1);
+        a.min(b)
+    }
+
+    #[inline(always)]
+    fn scalar_max_u16(&mut self, a: u16, b: u16) -> u16 {
         self.record(InstrClass::ScalarCmp, 1);
         a.max(b)
     }

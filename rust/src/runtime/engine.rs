@@ -4,25 +4,41 @@
 //! implementation ([`NativeEngine`]) — the latter both serves as the
 //! router's fast path for shapes without artifacts and lets coordinator
 //! tests run without compiled artifacts.
+//!
+//! Depth dispatch: [`Engine::run`] serves u8 images, [`Engine::run_u16`]
+//! serves u16 ones.  The native engine implements both through one
+//! generic body ([`MorphPixel`]); the XLA runtime only has u8 artifacts
+//! and keeps the default erroring `run_u16`, so the coordinator routes
+//! u16 requests to the native engine.
 
 use anyhow::{anyhow, Result};
 
 use super::manifest::ArtifactMeta;
 use crate::image::Image;
-use crate::morphology::{self, MorphConfig, MorphOp};
+use crate::morphology::{self, MorphConfig, MorphOp, MorphPixel};
 use crate::neon::Native;
 
 /// Something that can execute a named morphology/transpose artifact.
 pub trait Engine: Send {
-    /// Execute the operation described by `meta` on `img`.
+    /// Execute the operation described by `meta` on a u8 image.
     fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>>;
+
+    /// Execute on a u16 image.  Backends without 16-bit support keep
+    /// this default and the router falls back to the native engine.
+    fn run_u16(&mut self, meta: &ArtifactMeta, img: &Image<u16>) -> Result<Image<u16>> {
+        let _ = (meta, img);
+        Err(anyhow!(
+            "backend {:?} has no u16 support",
+            self.backend_name()
+        ))
+    }
 
     /// Short backend label for metrics/logs.
     fn backend_name(&self) -> &'static str;
 }
 
 /// Pure-rust engine: executes the op with the crate's native morphology
-/// (paper §5.3 final configuration).
+/// (paper §5.3 final configuration) at either pixel depth.
 #[derive(Clone, Debug, Default)]
 pub struct NativeEngine {
     cfg: MorphConfig,
@@ -32,10 +48,9 @@ impl NativeEngine {
     pub fn new(cfg: MorphConfig) -> Self {
         NativeEngine { cfg }
     }
-}
 
-impl Engine for NativeEngine {
-    fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
+    /// Depth-generic execution body shared by `run` and `run_u16`.
+    fn run_any<P: MorphPixel>(&self, meta: &ArtifactMeta, img: &Image<P>) -> Result<Image<P>> {
         if img.height() != meta.height || img.width() != meta.width {
             return Err(anyhow!(
                 "image {}x{} does not match artifact {} ({}x{})",
@@ -56,10 +71,20 @@ impl Engine for NativeEngine {
             "gradient" => morphology::gradient(b, img, w_x, w_y, &self.cfg),
             "tophat" => morphology::tophat(b, img, w_x, w_y, &self.cfg),
             "blackhat" => morphology::blackhat(b, img, w_x, w_y, &self.cfg),
-            "transpose" => crate::transpose::transpose_image(b, img),
+            "transpose" => P::transpose_image(b, img),
             other => return Err(anyhow!("unknown op {other:?}")),
         };
         Ok(out)
+    }
+}
+
+impl Engine for NativeEngine {
+    fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
+        self.run_any(meta, img)
+    }
+
+    fn run_u16(&mut self, meta: &ArtifactMeta, img: &Image<u16>) -> Result<Image<u16>> {
+        self.run_any(meta, img)
     }
 
     fn backend_name(&self) -> &'static str {
@@ -73,8 +98,12 @@ mod tests {
     use crate::image::synth;
 
     fn meta(op: &str, h: usize, w: usize, wx: usize, wy: usize) -> ArtifactMeta {
+        meta_dtype(op, h, w, wx, wy, "u8")
+    }
+
+    fn meta_dtype(op: &str, h: usize, w: usize, wx: usize, wy: usize, dt: &str) -> ArtifactMeta {
         ArtifactMeta {
-            name: format!("{op}_{h}x{w}_w{wx}x{wy}"),
+            name: format!("{op}_{h}x{w}_w{wx}x{wy}_{dt}"),
             kind: "morphology".into(),
             op: op.into(),
             height: h,
@@ -83,7 +112,7 @@ mod tests {
             w_y: wy,
             method: "hybrid".into(),
             vertical: "transpose".into(),
-            dtype: "u8".into(),
+            dtype: dt.into(),
             file: String::new(),
             out_shape: if op == "transpose" { (w, h) } else { (h, w) },
         }
@@ -99,6 +128,21 @@ mod tests {
         }
         let t = e.run(&meta("transpose", 32, 48, 0, 0), &img).unwrap();
         assert_eq!((t.height(), t.width()), (48, 32));
+    }
+
+    #[test]
+    fn native_engine_runs_all_ops_u16() {
+        let img = synth::noise_u16(24, 32, 3);
+        let mut e = NativeEngine::default();
+        for op in ["erode", "dilate", "opening", "closing", "gradient", "tophat", "blackhat"] {
+            let out = e.run_u16(&meta_dtype(op, 24, 32, 3, 3, "u16"), &img).unwrap();
+            assert_eq!((out.height(), out.width()), (24, 32), "{op}");
+        }
+        let t = e
+            .run_u16(&meta_dtype("transpose", 24, 32, 0, 0, "u16"), &img)
+            .unwrap();
+        assert_eq!((t.height(), t.width()), (32, 24));
+        assert!(t.same_pixels(&img.transposed()));
     }
 
     #[test]
@@ -120,6 +164,17 @@ mod tests {
         let img = synth::noise(24, 40, 9);
         let mut e = NativeEngine::default();
         let got = e.run(&meta("erode", 24, 40, 5, 7), &img).unwrap();
+        let want = morphology::erode(&img, 5, 7);
+        assert!(got.same_pixels(&want));
+    }
+
+    #[test]
+    fn native_matches_direct_call_u16() {
+        let img = synth::noise_u16(24, 40, 9);
+        let mut e = NativeEngine::default();
+        let got = e
+            .run_u16(&meta_dtype("erode", 24, 40, 5, 7, "u16"), &img)
+            .unwrap();
         let want = morphology::erode(&img, 5, 7);
         assert!(got.same_pixels(&want));
     }

@@ -10,143 +10,229 @@
 //! runtime instance is thread-local by construction; the coordinator
 //! gives each worker thread its own [`XlaRuntime`] (the PJRT CPU client
 //! is cheap and the compiled executables share nothing mutable).
+//!
+//! ## Offline stub
+//!
+//! The real implementation needs the external `xla` crate, which the
+//! offline build cannot fetch, so it is gated behind the `pjrt` cargo
+//! feature (see `rust/Cargo.toml`).  Without the feature this module
+//! exports a stub [`XlaRuntime`] whose constructor always errors; the
+//! coordinator's `Auto` routing then degrades to the native engine and
+//! every integration test that needs real artifacts skips cleanly.
+//! Artifacts are u8-only either way — u16 requests always run native.
 
-use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::collections::HashMap;
 
-use anyhow::{anyhow, Context, Result};
+    use anyhow::{anyhow, Context, Result};
 
-use super::engine::Engine;
-use super::manifest::{ArtifactMeta, Manifest};
-use crate::image::Image;
+    use super::super::engine::Engine;
+    use super::super::manifest::{ArtifactMeta, Manifest};
+    use crate::image::Image;
 
-/// PJRT-backed artifact executor with a compile cache.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl XlaRuntime {
-    /// Create a CPU PJRT client over the given artifact directory.
-    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<XlaRuntime> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(XlaRuntime {
-            client,
-            manifest,
-            cache: HashMap::new(),
-        })
+    /// PJRT-backed artifact executor with a compile cache.
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
+    impl XlaRuntime {
+        /// Create a CPU PJRT client over the given artifact directory.
+        pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<XlaRuntime> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(XlaRuntime {
+                client,
+                manifest,
+                cache: HashMap::new(),
+            })
+        }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
 
-    /// Number of executables compiled so far (cache size).
-    pub fn compiled_count(&self) -> usize {
-        self.cache.len()
-    }
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    /// Compile (or fetch from cache) the executable for `meta`.
-    fn executable(&mut self, meta: &ArtifactMeta) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(&meta.name) {
-            let path = self.manifest.path_of(meta);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        /// Number of executables compiled so far (cache size).
+        pub fn compiled_count(&self) -> usize {
+            self.cache.len()
+        }
+
+        /// Compile (or fetch from cache) the executable for `meta`.
+        fn executable(&mut self, meta: &ArtifactMeta) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(&meta.name) {
+                let path = self.manifest.path_of(meta);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+                )
+                .with_context(|| format!("loading HLO text {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling artifact {}", meta.name))?;
+                self.cache.insert(meta.name.clone(), exe);
+            }
+            Ok(&self.cache[&meta.name])
+        }
+
+        /// Warm the cache for every artifact matching `pred`.
+        pub fn precompile(&mut self, pred: impl Fn(&ArtifactMeta) -> bool) -> Result<usize> {
+            let metas: Vec<ArtifactMeta> = self
+                .manifest
+                .names()
+                .filter_map(|n| self.manifest.get(n).cloned())
+                .filter(|m| pred(m))
+                .collect();
+            let mut n = 0;
+            for m in &metas {
+                self.executable(m)?;
+                n += 1;
+            }
+            Ok(n)
+        }
+
+        /// Execute artifact `meta` on a u8 image, returning the u8 image
+        /// result (the lowered functions return a 1-tuple).
+        pub fn run_u8(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
+            if img.height() != meta.height || img.width() != meta.width {
+                return Err(anyhow!(
+                    "image {}x{} does not match artifact {} ({}x{})",
+                    img.height(),
+                    img.width(),
+                    meta.name,
+                    meta.height,
+                    meta.width
+                ));
+            }
+            let compact;
+            let img = if img.stride() == img.width() {
+                img
+            } else {
+                compact = img.compact();
+                &compact
+            };
+            let input = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U8,
+                &[meta.height, meta.width],
+                img.as_bytes(),
             )
-            .with_context(|| format!("loading HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact {}", meta.name))?;
-            self.cache.insert(meta.name.clone(), exe);
+            .context("creating input literal")?;
+
+            let (out_h, out_w) = meta.out_shape;
+            let exe = self.executable(meta)?;
+            let result = exe
+                .execute::<xla::Literal>(&[input])
+                .with_context(|| format!("executing {}", meta.name))?[0][0]
+                .to_literal_sync()?;
+            let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+
+            let n = out.element_count();
+            if n != out_h * out_w {
+                return Err(anyhow!(
+                    "artifact {} returned {} elements, expected {}x{}",
+                    meta.name,
+                    n,
+                    out_h,
+                    out_w
+                ));
+            }
+            let data: Vec<u8> = out.to_vec().context("copying output literal")?;
+            Ok(Image::from_vec(out_h, out_w, data))
         }
-        Ok(&self.cache[&meta.name])
     }
 
-    /// Warm the cache for every artifact matching `pred`.
-    pub fn precompile(&mut self, pred: impl Fn(&ArtifactMeta) -> bool) -> Result<usize> {
-        let metas: Vec<ArtifactMeta> = self
-            .manifest
-            .names()
-            .filter_map(|n| self.manifest.get(n).cloned())
-            .filter(|m| pred(m))
-            .collect();
-        let mut n = 0;
-        for m in &metas {
-            self.executable(m)?;
-            n += 1;
+    impl Engine for XlaRuntime {
+        fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
+            self.run_u8(meta, img)
         }
-        Ok(n)
+
+        fn backend_name(&self) -> &'static str {
+            "xla-pjrt"
+        }
     }
 
-    /// Execute artifact `meta` on a u8 image, returning the u8 image
-    /// result (the lowered functions return a 1-tuple).
-    pub fn run_u8(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
-        if img.height() != meta.height || img.width() != meta.width {
-            return Err(anyhow!(
-                "image {}x{} does not match artifact {} ({}x{})",
-                img.height(),
-                img.width(),
-                meta.name,
-                meta.height,
-                meta.width
-            ));
-        }
-        let compact;
-        let img = if img.stride() == img.width() {
-            img
-        } else {
-            compact = img.compact();
-            &compact
-        };
-        let input = xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::U8,
-            &[meta.height, meta.width],
-            img.as_bytes(),
-        )
-        .context("creating input literal")?;
+    // `xla::PjRtClient`/`PjRtLoadedExecutable` wrap C++ objects that the
+    // PJRT CPU plugin allows to be *used* from one thread at a time but
+    // *moved* between threads; the coordinator moves each runtime into its
+    // worker thread at spawn and never shares it.
+    unsafe impl Send for XlaRuntime {}
+}
 
-        let (out_h, out_w) = meta.out_shape;
-        let exe = self.executable(meta)?;
-        let result = exe
-            .execute::<xla::Literal>(&[input])
-            .with_context(|| format!("executing {}", meta.name))?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use anyhow::{bail, Result};
 
-        let n = out.element_count();
-        if n != out_h * out_w {
-            return Err(anyhow!(
-                "artifact {} returned {} elements, expected {}x{}",
-                meta.name,
-                n,
-                out_h,
-                out_w
-            ));
+    use super::super::engine::Engine;
+    use super::super::manifest::{ArtifactMeta, Manifest};
+    use crate::image::Image;
+
+    /// Offline stub: construction always fails, so `Auto` routing
+    /// degrades to the native engine and artifact-dependent tests skip.
+    pub struct XlaRuntime {
+        manifest: Manifest,
+    }
+
+    impl XlaRuntime {
+        pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<XlaRuntime> {
+            // Load (and validate) the manifest first so the error message
+            // distinguishes "no artifacts" from "no PJRT support".
+            let _manifest = Manifest::load(artifact_dir)?;
+            bail!(
+                "PJRT support is not compiled in (build with --features pjrt \
+                 and a vendored `xla` crate)"
+            );
         }
-        let data: Vec<u8> = out.to_vec().context("copying output literal")?;
-        Ok(Image::from_vec(out_h, out_w, data))
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (pjrt feature disabled)".to_string()
+        }
+
+        pub fn compiled_count(&self) -> usize {
+            0
+        }
+
+        pub fn precompile(&mut self, _pred: impl Fn(&ArtifactMeta) -> bool) -> Result<usize> {
+            Ok(0)
+        }
+
+        pub fn run_u8(&mut self, meta: &ArtifactMeta, _img: &Image<u8>) -> Result<Image<u8>> {
+            bail!("PJRT support not compiled in (artifact {})", meta.name)
+        }
+    }
+
+    impl Engine for XlaRuntime {
+        fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
+            self.run_u8(meta, img)
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "xla-pjrt"
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn stub_constructor_always_errors() {
+            // without artifacts: the manifest error surfaces
+            assert!(XlaRuntime::new("/nonexistent/artifacts").is_err());
+        }
     }
 }
 
-impl Engine for XlaRuntime {
-    fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
-        self.run_u8(meta, img)
-    }
-
-    fn backend_name(&self) -> &'static str {
-        "xla-pjrt"
-    }
-}
-
-// `xla::PjRtClient`/`PjRtLoadedExecutable` wrap C++ objects that the
-// PJRT CPU plugin allows to be *used* from one thread at a time but
-// *moved* between threads; the coordinator moves each runtime into its
-// worker thread at spawn and never shares it.
-unsafe impl Send for XlaRuntime {}
+#[cfg(feature = "pjrt")]
+pub use real::XlaRuntime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::XlaRuntime;

@@ -5,9 +5,12 @@
 //! * [`neon`] — the paper's vtrn networks: 8×8.16 in 64 instructions
 //!   (16 load/store + 32 permutation + 16 free reinterprets) and
 //!   16×16.8 in 152 instructions (32 + 72 + 48), exactly the §4 counts.
-//! * Whole-image transpose ([`transpose_image`]) tiles the NEON networks
-//!   over the image with scalar edge handling — this is what the
-//!   baseline *vertical* morphology pass (§5.2.1) uses.
+//! * Whole-image transposes tile the NEON networks over the image with
+//!   scalar edge handling: [`transpose_image`] uses 16×16.8 tiles for
+//!   `u8`, [`transpose_image_u16`] uses 8×8.16 tiles for `u16` — these
+//!   are what the baseline *vertical* morphology pass (§5.2.1) uses at
+//!   each depth, dispatched through
+//!   [`crate::morphology::MorphPixel::transpose_image`].
 
 pub mod neon;
 pub mod scalar;
@@ -53,6 +56,43 @@ pub fn transpose_image<B: Backend>(b: &mut B, img: &Image<u8>) -> Image<u8> {
         for x in 0..tw {
             let v = b.scalar_load_u8(img.row(y), x);
             b.scalar_store_u8(out.row_mut(x), y, v);
+        }
+    }
+    out
+}
+
+/// Transpose a u16 image using the paper's 8×8.16 NEON tiles for the
+/// aligned interior and scalar copies for the right/bottom edges — the
+/// 16-bit counterpart of [`transpose_image`].
+pub fn transpose_image_u16<B: Backend>(b: &mut B, img: &Image<u16>) -> Image<u16> {
+    let (h, w) = (img.height(), img.width());
+    let mut out = Image::zeros(w, h);
+    b.record_stream((2 * h * w) as u64, (2 * h * w) as u64);
+
+    let th = h - h % 8;
+    let tw = w - w % 8;
+    for by in (0..th).step_by(8) {
+        for bx in (0..tw).step_by(8) {
+            let mut rows = [crate::neon::U16x8([0; 8]); 8];
+            for (r, reg) in rows.iter_mut().enumerate() {
+                *reg = b.vld1q_u16(&img.row(by + r)[bx..]);
+            }
+            neon::transpose8x8_regs(b, &mut rows);
+            for (r, reg) in rows.iter().enumerate() {
+                b.vst1q_u16(&mut out.row_mut(bx + r)[by..], *reg);
+            }
+        }
+    }
+    for y in 0..h {
+        for x in tw..w {
+            let v = b.scalar_load_u16(img.row(y), x);
+            b.scalar_store_u16(out.row_mut(x), y, v);
+        }
+    }
+    for y in th..h {
+        for x in 0..tw {
+            let v = b.scalar_load_u16(img.row(y), x);
+            b.scalar_store_u16(out.row_mut(x), y, v);
         }
     }
     out
@@ -117,12 +157,33 @@ mod tests {
     }
 
     #[test]
+    fn u16_image_transpose_matches_naive_all_shapes() {
+        for &(h, w) in &[(8, 8), (16, 24), (17, 33), (100, 80), (1, 5), (7, 7)] {
+            let img = synth::noise_u16(h, w, (h * 1000 + w) as u64);
+            let want = img.transposed();
+            let got = transpose_image_u16(&mut Native, &img);
+            assert!(got.same_pixels(&want), "neon 8x8.16 tiled {h}x{w}");
+        }
+    }
+
+    #[test]
     fn tiled_transpose_instruction_mix_is_mostly_simd() {
         let img = synth::noise(64, 64, 9);
         let mut c = Counting::new();
         let _ = transpose_image(&mut c, &img);
         // 16 tiles * (16 ld + 16 st) vector mem ops, zero scalar loads
         assert_eq!(c.mix.get(crate::neon::InstrClass::SimdLoad), 16 * 16);
+        assert_eq!(c.mix.get(crate::neon::InstrClass::ScalarLoad), 0);
+    }
+
+    #[test]
+    fn u16_tiled_transpose_uses_8x8_tiles() {
+        // 64x64 u16 → (64/8)^2 = 64 tiles × 8 loads = 512 vector loads
+        let img = synth::noise_u16(64, 64, 9);
+        let mut c = Counting::new();
+        let _ = transpose_image_u16(&mut c, &img);
+        assert_eq!(c.mix.get(crate::neon::InstrClass::SimdLoad), 64 * 8);
+        assert_eq!(c.mix.get(crate::neon::InstrClass::SimdStore), 64 * 8);
         assert_eq!(c.mix.get(crate::neon::InstrClass::ScalarLoad), 0);
     }
 
@@ -134,5 +195,15 @@ mod tests {
         assert!(got.same_pixels(&img.transposed()));
         // 1 NEON tile + (18*18 - 256) scalar edge pixels
         assert_eq!(c.mix.get(crate::neon::InstrClass::ScalarLoad), (18 * 18 - 256) as u64);
+    }
+
+    #[test]
+    fn u16_edges_fall_back_to_scalar() {
+        let img = synth::noise_u16(10, 10, 10);
+        let mut c = Counting::new();
+        let got = transpose_image_u16(&mut c, &img);
+        assert!(got.same_pixels(&img.transposed()));
+        // 1 NEON 8x8 tile + (10*10 - 64) scalar edge pixels
+        assert_eq!(c.mix.get(crate::neon::InstrClass::ScalarLoad), (10 * 10 - 64) as u64);
     }
 }

@@ -3,7 +3,9 @@
 //! * [`transpose8x8_u16`] is the paper's 8×8.16 listing verbatim:
 //!   4 `vtrnq_u16` + 4 `vtrnq_u32` + 8 `vcombine`/16 `vget` between 8
 //!   loads and 8 stores — 16 load/store + 32 data-permutation + 16
-//!   auxiliary reinterprets, the exact §4 instruction census.
+//!   auxiliary reinterprets, the exact §4 instruction census.  Its
+//!   register-only core is [`transpose8x8_regs`], used by the
+//!   whole-image u16 tiling.
 //! * [`transpose16x16_u8`] is the 16×16.8 network: a four-level vtrn
 //!   ladder (`vtrn.8`, `vtrn.16`, `vtrn.32`, then 64-bit half exchange
 //!   via `vget`/`vcombine`) — 32 load/store + 72 data-permutation,
@@ -11,26 +13,18 @@
 //!   the paper's 48: aux instructions are view changes the compiler may
 //!   or may not materialize, and are free in the cost model either way).
 
-use crate::neon::{Backend, U8x16};
+use crate::neon::{Backend, U16x8, U32x4, U8x16};
 
-/// Transpose an 8×8 matrix of u16 (row-major, 64 elements).
-///
-/// Faithful port of the paper's §4 source listing.
-pub fn transpose8x8_u16<B: Backend>(b: &mut B, src: &[u16], dst: &mut [u16]) {
-    debug_assert!(src.len() >= 64 && dst.len() >= 64);
-    // 8 loads + 4 vtrn.16: transpose 2×2 blocks of u16
-    let r0 = b.vld1q_u16(&src[0..]);
-    let r1 = b.vld1q_u16(&src[8..]);
-    let r2 = b.vld1q_u16(&src[16..]);
-    let r3 = b.vld1q_u16(&src[24..]);
-    let r4 = b.vld1q_u16(&src[32..]);
-    let r5 = b.vld1q_u16(&src[40..]);
-    let r6 = b.vld1q_u16(&src[48..]);
-    let r7 = b.vld1q_u16(&src[56..]);
-    let t0 = b.vtrnq_u16(r0, r1);
-    let t1 = b.vtrnq_u16(r2, r3);
-    let t2 = b.vtrnq_u16(r4, r5);
-    let t3 = b.vtrnq_u16(r6, r7);
+/// The register-only 8×8.16 vtrn network: transposes 8 loaded row
+/// registers in place (slot `i` ends up holding column `i`).  Exposed so
+/// whole-image tiling can load/store straight from strided rows without
+/// staging buffers (mirroring [`transpose16x16_regs`]).
+pub fn transpose8x8_regs<B: Backend>(b: &mut B, rows: &mut [U16x8; 8]) {
+    // 4 vtrn.16: transpose 2×2 blocks of u16
+    let t0 = b.vtrnq_u16(rows[0], rows[1]);
+    let t1 = b.vtrnq_u16(rows[2], rows[3]);
+    let t2 = b.vtrnq_u16(rows[4], rows[5]);
+    let t3 = b.vtrnq_u16(rows[6], rows[7]);
 
     // 4 vtrn.32: transpose 2×2 blocks of u32 (pairs of u16)
     let t00 = b.reinterpret_u32_u16(t0.0);
@@ -46,42 +40,50 @@ pub fn transpose8x8_u16<B: Backend>(b: &mut B, src: &[u16], dst: &mut [u16]) {
     let x2 = b.vtrnq_u32(t01, t11);
     let x3 = b.vtrnq_u32(t21, t31);
 
-    // 8 stores of vcombine(vget_low/high …): transpose 2×2 blocks of u64
-    let lo = |b: &mut B, p: crate::neon::U32x4, q: crate::neon::U32x4| {
+    // 2×2 transpose of u64 blocks via vcombine(vget_low/high …)
+    let lo = |b: &mut B, p: U32x4, q: U32x4| {
         let l0 = b.vget_low_u32(p);
         let l1 = b.vget_low_u32(q);
         b.vcombine_u32(l0, l1)
     };
-    let hi = |b: &mut B, p: crate::neon::U32x4, q: crate::neon::U32x4| {
+    let hi = |b: &mut B, p: U32x4, q: U32x4| {
         let h0 = b.vget_high_u32(p);
         let h1 = b.vget_high_u32(q);
         b.vcombine_u32(h0, h1)
     };
 
     let d0 = lo(b, x0.0, x1.0);
-    let d0 = b.reinterpret_u16_u32(d0);
-    b.vst1q_u16(&mut dst[0..], d0);
+    rows[0] = b.reinterpret_u16_u32(d0);
     let d1 = lo(b, x2.0, x3.0);
-    let d1 = b.reinterpret_u16_u32(d1);
-    b.vst1q_u16(&mut dst[8..], d1);
+    rows[1] = b.reinterpret_u16_u32(d1);
     let d2 = lo(b, x0.1, x1.1);
-    let d2 = b.reinterpret_u16_u32(d2);
-    b.vst1q_u16(&mut dst[16..], d2);
+    rows[2] = b.reinterpret_u16_u32(d2);
     let d3 = lo(b, x2.1, x3.1);
-    let d3 = b.reinterpret_u16_u32(d3);
-    b.vst1q_u16(&mut dst[24..], d3);
+    rows[3] = b.reinterpret_u16_u32(d3);
     let d4 = hi(b, x0.0, x1.0);
-    let d4 = b.reinterpret_u16_u32(d4);
-    b.vst1q_u16(&mut dst[32..], d4);
+    rows[4] = b.reinterpret_u16_u32(d4);
     let d5 = hi(b, x2.0, x3.0);
-    let d5 = b.reinterpret_u16_u32(d5);
-    b.vst1q_u16(&mut dst[40..], d5);
+    rows[5] = b.reinterpret_u16_u32(d5);
     let d6 = hi(b, x0.1, x1.1);
-    let d6 = b.reinterpret_u16_u32(d6);
-    b.vst1q_u16(&mut dst[48..], d6);
+    rows[6] = b.reinterpret_u16_u32(d6);
     let d7 = hi(b, x2.1, x3.1);
-    let d7 = b.reinterpret_u16_u32(d7);
-    b.vst1q_u16(&mut dst[56..], d7);
+    rows[7] = b.reinterpret_u16_u32(d7);
+}
+
+/// Transpose an 8×8 matrix of u16 (row-major, 64 elements).
+///
+/// Faithful port of the paper's §4 source listing: 8 loads, the
+/// [`transpose8x8_regs`] vtrn network, 8 stores.
+pub fn transpose8x8_u16<B: Backend>(b: &mut B, src: &[u16], dst: &mut [u16]) {
+    debug_assert!(src.len() >= 64 && dst.len() >= 64);
+    let mut rows: [U16x8; 8] = [U16x8([0; 8]); 8];
+    for (i, row) in rows.iter_mut().enumerate() {
+        *row = b.vld1q_u16(&src[i * 8..]);
+    }
+    transpose8x8_regs(b, &mut rows);
+    for (i, row) in rows.iter().enumerate() {
+        b.vst1q_u16(&mut dst[i * 8..], *row);
+    }
 }
 
 /// Transpose a 16×16 matrix of u8 (row-major, 256 elements).
@@ -171,6 +173,22 @@ mod tests {
         let mut dst = vec![0u8; 256];
         transpose16x16_u8(&mut Native, &src, &mut dst);
         assert_eq!(dst, want_t(&src, 16));
+    }
+
+    #[test]
+    fn regs_8x8_is_involution() {
+        let mut rows: [U16x8; 8] =
+            std::array::from_fn(|i| U16x8(std::array::from_fn(|j| (i * 8 + j) as u16)));
+        let orig = rows;
+        transpose8x8_regs(&mut Native, &mut rows);
+        // slot i holds column i
+        for (i, r) in rows.iter().enumerate() {
+            for (j, &v) in r.0.iter().enumerate() {
+                assert_eq!(v, orig[j].0[i]);
+            }
+        }
+        transpose8x8_regs(&mut Native, &mut rows);
+        assert_eq!(rows, orig);
     }
 
     #[test]

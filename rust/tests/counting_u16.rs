@@ -1,0 +1,139 @@
+//! Counting-backend regression tests for the u16 path: the instruction
+//! mixes must reflect 8 lanes per 128-bit op (`vminq_u16`/`vmaxq_u16`,
+//! §4's 8×8.16 shape) so the cost model's prices stay honest, and the
+//! u16 vertical transpose sandwich must demonstrably run on the 8×8.16
+//! NEON tiles.
+
+use neon_morph::costmodel::{simd_lanes, CostModel};
+use neon_morph::image::synth;
+use neon_morph::morphology::{linear, separable, vhgw, HybridThresholds, MorphOp, PassMethod,
+                             VerticalStrategy};
+use neon_morph::neon::{Counting, InstrClass};
+
+/// Same dimensions, same window, both depths: the u16 pass must issue
+/// exactly 2× the vector min/max, loads and stores (8 lanes vs 16).
+#[test]
+fn u16_linear_rows_issues_double_the_vector_ops() {
+    // 64 divides by both lane counts, so there is no scalar tail and
+    // the 2x relation is exact
+    let img8 = synth::noise(64, 64, 11);
+    let img16 = synth::noise_u16(64, 64, 11);
+    for window in [3usize, 9, 15] {
+        for op in [MorphOp::Erode, MorphOp::Dilate] {
+            let mut c8 = Counting::new();
+            let _ = linear::rows_simd_linear(&mut c8, &img8, window, op);
+            let mut c16 = Counting::new();
+            let _ = linear::rows_simd_linear(&mut c16, &img16, window, op);
+            for class in [
+                InstrClass::SimdMinMax,
+                InstrClass::SimdLoad,
+                InstrClass::SimdStore,
+            ] {
+                assert_eq!(
+                    c16.mix.get(class),
+                    2 * c8.mix.get(class),
+                    "w={window} {op:?} {class:?}: u16 must be exactly 2x u8 (8 vs 16 lanes)"
+                );
+            }
+            assert!(c16.mix.get(InstrClass::SimdMinMax) > 0);
+            // streamed bytes also double (2-byte elements)
+            assert_eq!(c16.mix.stream_read, 2 * c8.mix.stream_read);
+            assert_eq!(c16.mix.stream_written, 2 * c8.mix.stream_written);
+        }
+    }
+}
+
+/// Exact census of a minimal fully-vectorized u16 case: 2×8 image,
+/// window 3.  One 8-lane chunk, rows 0 and 1 share the whole window:
+/// 2 vector loads, 1 vminq_u16, 2 vector stores.
+#[test]
+fn u16_minimal_case_exact_census() {
+    let img = synth::noise_u16(2, 8, 1);
+    let mut c = Counting::new();
+    let _ = linear::rows_simd_linear(&mut c, &img, 3, MorphOp::Erode);
+    assert_eq!(c.mix.get(InstrClass::SimdLoad), 2);
+    assert_eq!(c.mix.get(InstrClass::SimdMinMax), 1);
+    assert_eq!(c.mix.get(InstrClass::SimdStore), 2);
+    assert_eq!(c.mix.get(InstrClass::ScalarLoad), 0, "no scalar tail at w=8");
+}
+
+/// §5.2.2 vertical pass: unaligned load count per row is
+/// `window × width/LANES` — lanes = 8 for u16, so 2× the u8 count.
+#[test]
+fn u16_cols_linear_unaligned_load_census() {
+    let img8 = synth::noise(8, 16, 2);
+    let img16 = synth::noise_u16(8, 16, 2);
+    let window = 5;
+    let mut c8 = Counting::new();
+    let _ = linear::cols_simd_linear(&mut c8, &img8, window, MorphOp::Erode);
+    let mut c16 = Counting::new();
+    let _ = linear::cols_simd_linear(&mut c16, &img16, window, MorphOp::Erode);
+    // u8: 1 chunk of 16 lanes per row; u16: 2 chunks of 8 lanes
+    assert_eq!(c8.mix.get(InstrClass::SimdLoadUnaligned), 8 * window as u64);
+    assert_eq!(
+        c16.mix.get(InstrClass::SimdLoadUnaligned),
+        8 * 2 * window as u64
+    );
+}
+
+/// The u16 vertical vHGW path must run through the §4 8×8.16 transpose
+/// tiles: on a 64×64 image each transpose is 64 tiles, each tile is
+/// exactly 8 vtrn (4 `vtrnq_u16` + 4 `vtrnq_u32` → SimdPermute) and
+/// 24 vget/vcombine (SimdCombine); the vHGW rows pass between the two
+/// transposes contributes zero permutes.  This pins the dispatch: if
+/// the u16 sandwich ever fell back to scalar transpose or 16×16 tiles,
+/// these exact counts would break.
+#[test]
+fn u16_transpose_sandwich_uses_8x8_16_tiles() {
+    let img = synth::noise_u16(64, 64, 3);
+    let mut c = Counting::new();
+    let out = separable::pass_cols(
+        &mut c,
+        &img,
+        15,
+        MorphOp::Erode,
+        PassMethod::Vhgw,
+        true,
+        VerticalStrategy::Transpose,
+        HybridThresholds::paper(),
+    );
+    assert_eq!((out.height(), out.width()), (64, 64));
+    let tiles = (64 / 8) * (64 / 8); // per transpose
+    assert_eq!(
+        c.mix.get(InstrClass::SimdPermute),
+        (2 * tiles * 8) as u64,
+        "2 transposes x 64 tiles x (4 vtrn.16 + 4 vtrn.32)"
+    );
+    assert_eq!(
+        c.mix.get(InstrClass::SimdCombine),
+        (2 * tiles * 24) as u64,
+        "2 transposes x 64 tiles x (16 vget + 8 vcombine)"
+    );
+    assert_eq!(
+        c.mix.get(InstrClass::ScalarLoad),
+        0,
+        "64x64 u16 is fully tiled — no scalar edge work"
+    );
+    assert!(c.mix.get(InstrClass::SimdMinMax) > 0, "vHGW combines present");
+}
+
+/// The cost model's lane table and the counted mixes agree: pricing a
+/// u16 mix per pixel lands at ~2× the u8 price on equal dimensions.
+#[test]
+fn lane_table_consistent_with_counted_prices() {
+    assert_eq!(simd_lanes("u8"), Some(16));
+    assert_eq!(simd_lanes("u16"), Some(8));
+    let model = CostModel::exynos5422();
+    let img8 = synth::noise(64, 64, 7);
+    let img16 = synth::noise_u16(64, 64, 7);
+    let mut c8 = Counting::new();
+    let _ = vhgw::rows_simd_vhgw(&mut c8, &img8, 15, MorphOp::Erode);
+    let mut c16 = Counting::new();
+    let _ = vhgw::rows_simd_vhgw(&mut c16, &img16, 15, MorphOp::Erode);
+    let r = model.price_ns_per_pixel(&c16.mix, 64 * 64)
+        / model.price_ns_per_pixel(&c8.mix, 64 * 64);
+    assert!(
+        (1.7..=2.3).contains(&r),
+        "u16 vHGW should price ~2x u8 per pixel, got {r}"
+    );
+}

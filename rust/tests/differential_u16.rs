@@ -1,0 +1,236 @@
+//! Differential / property test harness for the 16-bit morphology path
+//! (oracle-testing discipline à la Ehrensperger et al., arXiv:1504.01052).
+//!
+//! Every generic pass — {linear, vhgw} × {scalar, SIMD} × {horizontal,
+//! vertical} — and the full separable composition under every
+//! `MorphConfig` × both borders are checked against the naive 2-D
+//! oracle on random u16 images from a seeded PRNG (no external deps),
+//! including stride-padded inputs and degenerate (1×N, N×1, 1×1)
+//! shapes.
+
+use neon_morph::image::synth::{self, Rng};
+use neon_morph::image::Image;
+use neon_morph::morphology::{self, linear, naive, vhgw, Border, HybridThresholds, MorphConfig,
+                             MorphOp, PassMethod, VerticalStrategy};
+use neon_morph::neon::Native;
+use neon_morph::util::prop::{dims, forall, odd_window};
+
+fn random_u16(rng: &mut Rng, max_h: usize, max_w: usize) -> Image<u16> {
+    let (h, w) = dims(rng, max_h, max_w);
+    let seed = rng.next_u64();
+    synth::noise_u16(h, w, seed)
+}
+
+fn ops() -> [MorphOp; 2] {
+    [MorphOp::Erode, MorphOp::Dilate]
+}
+
+fn all_configs() -> Vec<MorphConfig> {
+    let mut out = Vec::new();
+    for method in [PassMethod::Linear, PassMethod::Vhgw, PassMethod::Hybrid] {
+        for vertical in [VerticalStrategy::Transpose, VerticalStrategy::Direct] {
+            for simd in [false, true] {
+                for border in [Border::Identity, Border::Replicate] {
+                    out.push(MorphConfig {
+                        method,
+                        vertical,
+                        simd,
+                        border,
+                        thresholds: HybridThresholds::paper(),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Replicate-border oracle: replicate-pad, identity-border naive, crop.
+fn naive_replicate(img: &Image<u16>, w_x: usize, w_y: usize, op: MorphOp) -> Image<u16> {
+    let (wing_x, wing_y) = (w_x / 2, w_y / 2);
+    let (h, w) = (img.height(), img.width());
+    let padded = Image::from_fn(h + 2 * wing_y, w + 2 * wing_x, |y, x| {
+        let sy = y.saturating_sub(wing_y).min(h - 1);
+        let sx = x.saturating_sub(wing_x).min(w - 1);
+        img.get(sy, sx)
+    });
+    let full = naive::morph2d_naive(&mut Native, &padded, w_x, w_y, op);
+    Image::from_fn(h, w, |y, x| full.get(y + wing_y, x + wing_x))
+}
+
+#[test]
+fn prop_u16_individual_passes_match_oracle() {
+    // linear/vhgw × scalar/simd × rows/cols, identity borders
+    forall(201, 30, |rng, _| {
+        let img = random_u16(rng, 36, 44);
+        let window = odd_window(rng, 11);
+        for op in ops() {
+            let want_rows = naive::rows_naive(&mut Native, &img, window, op);
+            let want_cols = naive::cols_naive(&mut Native, &img, window, op);
+
+            let cases: [(&str, Image<u16>, &Image<u16>); 6] = [
+                (
+                    "rows linear simd",
+                    linear::rows_simd_linear(&mut Native, &img, window, op),
+                    &want_rows,
+                ),
+                (
+                    "rows linear scalar",
+                    linear::rows_scalar_linear(&mut Native, &img, window, op),
+                    &want_rows,
+                ),
+                (
+                    "rows vhgw simd",
+                    vhgw::rows_simd_vhgw(&mut Native, &img, window, op),
+                    &want_rows,
+                ),
+                (
+                    "rows vhgw scalar",
+                    vhgw::rows_scalar_vhgw(&mut Native, &img, window, op),
+                    &want_rows,
+                ),
+                (
+                    "cols linear simd",
+                    linear::cols_simd_linear(&mut Native, &img, window, op),
+                    &want_cols,
+                ),
+                (
+                    "cols vhgw scalar",
+                    vhgw::cols_scalar_vhgw(&mut Native, &img, window, op),
+                    &want_cols,
+                ),
+            ];
+            for (name, got, want) in &cases {
+                assert!(
+                    got.same_pixels(want),
+                    "{name} {op:?} w={window} img {}x{}: {:?}",
+                    img.height(),
+                    img.width(),
+                    got.first_diff(want)
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_u16_every_config_and_border_matches_oracle() {
+    forall(202, 25, |rng, _| {
+        let img = random_u16(rng, 30, 34);
+        let w_x = odd_window(rng, 9);
+        let w_y = odd_window(rng, 9);
+        for op in ops() {
+            let want_ident = naive::morph2d_naive(&mut Native, &img, w_x, w_y, op);
+            let want_repl = naive_replicate(&img, w_x, w_y, op);
+            for cfg in all_configs() {
+                let got = morphology::morphology(&mut Native, &img, op, w_x, w_y, &cfg);
+                let want = match cfg.border {
+                    Border::Identity => &want_ident,
+                    Border::Replicate => &want_repl,
+                };
+                assert!(
+                    got.same_pixels(want),
+                    "cfg {cfg:?} op {op:?} se {w_x}x{w_y} img {}x{} diff {:?}",
+                    img.height(),
+                    img.width(),
+                    got.first_diff(want)
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_u16_stride_padded_inputs_match_compact() {
+    // passes read rows through Image::row (padding-agnostic); a padded
+    // clone must produce identical pixels, with poison in the padding
+    forall(203, 20, |rng, _| {
+        let img = random_u16(rng, 24, 28);
+        let extra = 1 + rng.below(19);
+        let padded = img.with_stride(img.width() + extra, 0xABCD);
+        let w_x = odd_window(rng, 7);
+        let w_y = odd_window(rng, 7);
+        for op in ops() {
+            for cfg in [MorphConfig::default(), MorphConfig {
+                method: PassMethod::Vhgw,
+                vertical: VerticalStrategy::Transpose,
+                simd: true,
+                border: Border::Identity,
+                thresholds: HybridThresholds::paper(),
+            }] {
+                let a = morphology::morphology(&mut Native, &img, op, w_x, w_y, &cfg);
+                let b = morphology::morphology(&mut Native, &padded, op, w_x, w_y, &cfg);
+                assert!(
+                    a.same_pixels(&b),
+                    "strided input changed the result: {op:?} {w_x}x{w_y} {:?}",
+                    a.first_diff(&b)
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn degenerate_shapes_all_passes() {
+    // 1×N, N×1 and 1×1 at both depths' worth of windows
+    for &(h, w) in &[(1usize, 1usize), (1, 17), (17, 1), (1, 40), (40, 1), (2, 2)] {
+        let img = synth::noise_u16(h, w, (h * 131 + w) as u64);
+        for &window in &[1, 3, 7] {
+            for op in ops() {
+                let want_r = naive::rows_naive(&mut Native, &img, window, op);
+                let want_c = naive::cols_naive(&mut Native, &img, window, op);
+                assert!(
+                    linear::rows_simd_linear(&mut Native, &img, window, op).same_pixels(&want_r),
+                    "rows linear {h}x{w} w={window}"
+                );
+                assert!(
+                    vhgw::rows_simd_vhgw(&mut Native, &img, window, op).same_pixels(&want_r),
+                    "rows vhgw {h}x{w} w={window}"
+                );
+                assert!(
+                    linear::cols_simd_linear(&mut Native, &img, window, op).same_pixels(&want_c),
+                    "cols linear {h}x{w} w={window}"
+                );
+                assert!(
+                    vhgw::cols_scalar_vhgw(&mut Native, &img, window, op).same_pixels(&want_c),
+                    "cols vhgw {h}x{w} w={window}"
+                );
+                for cfg in all_configs() {
+                    let got = morphology::morphology(&mut Native, &img, op, window, window, &cfg);
+                    assert_eq!((got.height(), got.width()), (h, w), "{cfg:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn u16_values_above_u8_range_survive() {
+    // a plateau at 40_000 with a pit at 30_000: u8 arithmetic would
+    // truncate both; the filtered extrema must be exact u16 values
+    let mut img = Image::filled(20, 20, 40_000u16);
+    img.set(10, 10, 30_000);
+    let e = morphology::erode(&img, 5, 5);
+    let d = morphology::dilate(&img, 5, 5);
+    assert_eq!(e.get(10, 10), 30_000);
+    assert_eq!(e.get(10, 12), 30_000); // window reaches the pit
+    assert_eq!(e.get(0, 0), 40_000);
+    assert_eq!(d.get(10, 10), 40_000);
+    assert_eq!(d.min_max(), Some((40_000, 40_000)));
+}
+
+#[test]
+fn prop_u16_separability_matches_2d() {
+    // rows∘cols == 2-D window, the §5 separability claim at 16-bit
+    forall(204, 25, |rng, _| {
+        let img = random_u16(rng, 28, 28);
+        let w_x = odd_window(rng, 9);
+        let w_y = odd_window(rng, 9);
+        for op in ops() {
+            let two_d = naive::morph2d_naive(&mut Native, &img, w_x, w_y, op);
+            let rows = naive::rows_naive(&mut Native, &img, w_y, op);
+            let sep = naive::cols_naive(&mut Native, &rows, w_x, op);
+            assert!(sep.same_pixels(&two_d));
+        }
+    });
+}

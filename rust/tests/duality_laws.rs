@@ -1,0 +1,110 @@
+//! Algebraic laws of mathematical morphology, checked at BOTH pixel
+//! depths (the dilation-as-convolution equivalences of Sridhar et al.,
+//! arXiv:2305.03018, rest on the same lattice identities):
+//!
+//! * duality:      `dilate(img) == invert(erode(invert(img)))` under
+//!                  identity borders (invert = dtype-MAX − v),
+//! * composition:  `opening == dilate ∘ erode`,
+//!                 `closing == erode ∘ dilate`,
+//! * idempotence:  `opening ∘ opening == opening`,
+//!                 `closing ∘ closing == closing`.
+
+use neon_morph::image::synth::{self, Rng};
+use neon_morph::image::Image;
+use neon_morph::morphology::{self, MorphConfig, MorphOp, MorphPixel};
+use neon_morph::neon::Native;
+use neon_morph::util::prop::{dims, forall, odd_window};
+
+fn invert<P: MorphPixel>(img: &Image<P>) -> Image<P> {
+    Image::from_fn(img.height(), img.width(), |y, x| img.get(y, x).invert())
+}
+
+fn check_duality<P: MorphPixel>(img: &Image<P>, w_x: usize, w_y: usize) {
+    let d = morphology::dilate(img, w_x, w_y);
+    let e_dual = invert(&morphology::erode(&invert(img), w_x, w_y));
+    assert!(
+        d.same_pixels(&e_dual),
+        "dilate != !erode(!img) at {w_x}x{w_y}: {:?}",
+        d.first_diff(&e_dual)
+    );
+}
+
+fn check_composition_laws<P: MorphPixel>(img: &Image<P>, w_x: usize, w_y: usize) {
+    let cfg = MorphConfig::default();
+    let b = &mut Native;
+
+    // opening = dilate ∘ erode, closing = erode ∘ dilate
+    let o = morphology::opening(b, img, w_x, w_y, &cfg);
+    let e = morphology::morphology(b, img, MorphOp::Erode, w_x, w_y, &cfg);
+    let de = morphology::morphology(b, &e, MorphOp::Dilate, w_x, w_y, &cfg);
+    assert!(o.same_pixels(&de), "opening != dilate∘erode");
+
+    let c = morphology::closing(b, img, w_x, w_y, &cfg);
+    let d = morphology::morphology(b, img, MorphOp::Dilate, w_x, w_y, &cfg);
+    let ed = morphology::morphology(b, &d, MorphOp::Erode, w_x, w_y, &cfg);
+    assert!(c.same_pixels(&ed), "closing != erode∘dilate");
+
+    // idempotence
+    let oo = morphology::opening(b, &o, w_x, w_y, &cfg);
+    assert!(oo.same_pixels(&o), "opening not idempotent");
+    let cc = morphology::closing(b, &c, w_x, w_y, &cfg);
+    assert!(cc.same_pixels(&c), "closing not idempotent");
+
+    // sandwich: opening <= img <= closing
+    for y in 0..img.height() {
+        for x in 0..img.width() {
+            assert!(o.get(y, x) <= img.get(y, x), "opening anti-extensive");
+            assert!(c.get(y, x) >= img.get(y, x), "closing extensive");
+        }
+    }
+}
+
+fn random_u16(rng: &mut Rng, max_h: usize, max_w: usize) -> Image<u16> {
+    let (h, w) = dims(rng, max_h, max_w);
+    let seed = rng.next_u64();
+    synth::noise_u16(h, w, seed)
+}
+
+#[test]
+fn prop_duality_u8() {
+    forall(301, 30, |rng, _| {
+        let (h, w) = dims(rng, 32, 32);
+        let img = synth::noise(h, w, rng.next_u64());
+        check_duality(&img, odd_window(rng, 9), odd_window(rng, 9));
+    });
+}
+
+#[test]
+fn prop_duality_u16() {
+    forall(302, 30, |rng, _| {
+        let img = random_u16(rng, 32, 32);
+        check_duality(&img, odd_window(rng, 9), odd_window(rng, 9));
+    });
+}
+
+#[test]
+fn prop_composition_and_idempotence_u8() {
+    forall(303, 15, |rng, _| {
+        let (h, w) = dims(rng, 28, 28);
+        let img = synth::noise(h, w, rng.next_u64());
+        check_composition_laws(&img, odd_window(rng, 7), odd_window(rng, 7));
+    });
+}
+
+#[test]
+fn prop_composition_and_idempotence_u16() {
+    forall(304, 15, |rng, _| {
+        let img = random_u16(rng, 28, 28);
+        check_composition_laws(&img, odd_window(rng, 7), odd_window(rng, 7));
+    });
+}
+
+#[test]
+fn duality_survives_full_range_u16() {
+    // extreme values: 0 and 65535 must round-trip through the inversion
+    let mut img = Image::filled(16, 16, 65_535u16);
+    img.set(3, 3, 0);
+    img.set(12, 12, 40_000);
+    check_duality(&img, 5, 3);
+    check_composition_laws(&img, 3, 5);
+}

@@ -36,13 +36,13 @@ fn auto_routes_artifact_shapes_to_xla_and_others_to_native() {
     let r = coord.filter("erode", 3, 3, img.clone()).unwrap();
     assert_eq!(r.backend, "xla-pjrt");
     let want = morphology::erode(&img, 3, 3);
-    assert!(r.result.unwrap().same_pixels(&want));
+    assert!(r.result.unwrap().expect_u8().same_pixels(&want));
 
     // 100x100 has no artifact -> native
     let img2 = Arc::new(synth::noise(100, 100, 12));
     let r2 = coord.filter("erode", 3, 3, img2.clone()).unwrap();
     assert_eq!(r2.backend, "native");
-    assert!(r2.result.unwrap().same_pixels(&morphology::erode(&img2, 3, 3)));
+    assert!(r2.result.unwrap().expect_u8().same_pixels(&morphology::erode(&img2, 3, 3)));
     coord.shutdown();
 }
 
@@ -118,7 +118,7 @@ fn native_fallback_when_artifact_dir_missing() {
     let img = Arc::new(synth::noise(32, 32, 17));
     let r = coord.filter("erode", 3, 3, img.clone()).unwrap();
     assert_eq!(r.backend, "native");
-    assert!(r.result.unwrap().same_pixels(&morphology::erode(&img, 3, 3)));
+    assert!(r.result.unwrap().expect_u8().same_pixels(&morphology::erode(&img, 3, 3)));
     coord.shutdown();
 }
 
@@ -145,7 +145,7 @@ fn derived_ops_through_full_xla_path() {
     for (op, wx, wy) in [("opening", 7usize, 7usize), ("closing", 7, 7), ("gradient", 15, 15)] {
         let r = coord.filter(op, wx, wy, img.clone()).unwrap();
         assert_eq!(r.backend, "xla-pjrt", "{op}");
-        let got = r.result.unwrap();
+        let got = r.result.unwrap().expect_u8();
         let want = match op {
             "opening" => morphology::opening(&mut Native, &img, wx, wy, &cfg),
             "closing" => morphology::closing(&mut Native, &img, wx, wy, &cfg),
