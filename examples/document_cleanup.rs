@@ -13,8 +13,9 @@
 //! ```
 
 use neon_morph::image::{read_pgm, synth, write_pgm, Image};
-use neon_morph::morphology::{self, Border, HybridThresholds, MorphConfig, PassMethod,
-                             VerticalStrategy};
+use neon_morph::morphology::{
+    self, Border, HybridThresholds, MorphConfig, PassMethod, VerticalStrategy,
+};
 use neon_morph::neon::Native;
 
 fn count_dark(img: &Image<u8>) -> usize {
@@ -44,6 +45,7 @@ fn main() -> anyhow::Result<()> {
         simd: false,
         border: Border::Identity,
         thresholds: HybridThresholds::paper(),
+        ..MorphConfig::default()
     };
 
     // 1. despeckle: closing kills pepper (dark specks), opening kills salt

@@ -1,0 +1,146 @@
+"""Independent verification of the band/halo geometry used by
+``rust/src/morphology/parallel.rs``.
+
+The rust banded passes copy a haloed row slab, run the *unchanged*
+sequential pass on it, and stitch the core rows back.  Their
+bit-identity claim reduces to a pure geometry theorem: for a 1-D
+window reduction with identity padding, computing rows ``[b0, b1)``
+on the sub-image of rows ``[b0 - wing, b1 + wing) ∩ [0, h)`` yields
+exactly the full-image result.  This file mirrors ``split_bands`` /
+``split_bands_aligned`` / ``halo`` and checks the theorem against a
+brute-force oracle over randomized shapes, windows and band counts —
+including the degenerate cases the rust property tests pin (bands >
+rows, window > band height, single-row images).
+"""
+
+import random
+
+# ---- mirrors of rust/src/morphology/parallel.rs geometry ----------------
+
+
+def split_bands_aligned(length, parts, align):
+    align = max(align, 1)
+    parts = max(parts, 1)
+    if length == 0:
+        return []
+    out = []
+    start = 0
+    for i in range(1, parts + 1):
+        end = i * length // parts
+        if i != parts:
+            end = end // align * align
+        else:
+            end = length
+        if end > start:
+            out.append((start, end))
+            start = end
+    return out
+
+
+def split_bands(length, parts):
+    return split_bands_aligned(length, parts, 1)
+
+
+def halo(band, wing, length):
+    b0, b1 = band
+    return (max(0, b0 - wing), min(b1 + wing, length))
+
+
+# ---- oracle: 1-D window reduction over rows with identity padding -------
+
+
+def rows_pass(img, window, ident, comb):
+    """out[y][x] = comb over rows [y-wing, y+wing] ∩ image (identity pad)."""
+    wing = window // 2
+    h = len(img)
+    out = []
+    for y in range(h):
+        row = []
+        for x in range(len(img[0])):
+            acc = ident
+            for k in range(y - wing, y + wing + 1):
+                v = img[k][x] if 0 <= k < h else ident
+                acc = comb(acc, v)
+            row.append(acc)
+        out.append(row)
+    return out
+
+
+def banded_rows_pass(img, window, ident, comb, bands):
+    """The rust strategy: haloed slab -> sequential pass -> core rows."""
+    h = len(img)
+    wing = window // 2
+    out = [None] * h
+    for band in split_bands(h, bands):
+        lo, hi = halo(band, wing, h)
+        slab = img[lo:hi]
+        slab_out = rows_pass(slab, window, ident, comb)
+        for y in range(band[0], band[1]):
+            out[y] = slab_out[y - lo]
+    return out
+
+
+# ---- tests --------------------------------------------------------------
+
+
+def test_split_bands_tile_and_cover():
+    for length, parts in [(10, 3), (1, 4), (7, 7), (7, 20), (600, 8), (16, 1), (0, 3)]:
+        plan = split_bands(length, parts)
+        if length == 0:
+            assert plan == []
+            continue
+        assert plan[0][0] == 0
+        assert plan[-1][1] == length
+        for (a0, a1), (b0, b1) in zip(plan, plan[1:]):
+            assert a1 == b0, "bands must tile contiguously"
+        assert all(b1 > b0 for b0, b1 in plan)
+        assert len(plan) <= parts
+
+
+def test_aligned_bands_interior_boundaries():
+    plan = split_bands_aligned(100, 3, 16)
+    assert plan[-1][1] == 100
+    for b0, b1 in plan[:-1]:
+        assert b1 % 16 == 0
+    assert split_bands_aligned(10, 4, 16) == [(0, 10)]
+
+
+def test_halo_clamps():
+    assert halo((0, 10), 3, 100) == (0, 13)
+    assert halo((50, 60), 3, 100) == (47, 63)
+    assert halo((90, 100), 3, 100) == (87, 100)
+    assert halo((0, 5), 7, 5) == (0, 5)
+
+
+def test_banding_theorem_randomized():
+    rng = random.Random(0xBA2D)
+    for case in range(200):
+        h = rng.randint(1, 24)
+        w = rng.randint(1, 6)
+        window = rng.choice([1, 3, 5, 9, 15])
+        bands = rng.randint(1, h + 4)
+        img = [[rng.randint(0, 255) for _ in range(w)] for _ in range(h)]
+        for ident, comb in [(255, min), (0, max)]:
+            want = rows_pass(img, window, ident, comb)
+            got = banded_rows_pass(img, window, ident, comb, bands)
+            assert got == want, (
+                f"case {case}: h={h} w={w} window={window} bands={bands} "
+                f"ident={ident} diverged"
+            )
+
+
+def test_window_larger_than_band_height():
+    rng = random.Random(7)
+    img = [[rng.randint(0, 255) for _ in range(4)] for _ in range(9)]
+    # 9 bands of one row each, window spanning 15 rows
+    want = rows_pass(img, 15, 255, min)
+    got = banded_rows_pass(img, 15, 255, min, 9)
+    assert got == want
+
+
+def test_u16_range_identity_values():
+    rng = random.Random(16)
+    img = [[rng.randint(0, 65535) for _ in range(3)] for _ in range(11)]
+    want = rows_pass(img, 5, 65535, min)
+    got = banded_rows_pass(img, 5, 65535, min, 4)
+    assert got == want

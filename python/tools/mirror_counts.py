@@ -1,0 +1,300 @@
+#!/usr/bin/env python3
+"""Instruction-count mirror of the rust Counting backend.
+
+Transcribes, loop for loop, the accounting of the passes that feed the
+CI perf baselines (``rust/benches/baselines/BENCH_*.json``):
+
+* ``rows_scalar_vhgw`` / ``rows_simd_vhgw`` / ``rows_simd_linear``
+  (``rust/src/morphology/vhgw.rs`` / ``linear.rs``) on the 800x600 u8
+  workload at the smoke windows — the Fig. 3 headline ratios, and
+* ``rows_simd_linear + cols_simd_linear`` at w = 31 — the instruction
+  mix of the section-5.3 hybrid erosion behind the band-parallel
+  scaling sweep (saturation point, speedups, bandwidth ceiling).
+
+Counts are pure functions of the loop structure (no pixel data), so the
+mirror and the rust Counting backend must agree exactly; prices are the
+same closed-form cost model (``CostModel::exynos5422``).  This is how
+the *committed* baselines were generated in an environment without a
+rust toolchain; with one available, ``cargo run --release -- bench
+smoke --update-baselines`` regenerates them from the rust side and must
+reproduce these numbers (the CI gate allows 10 percent, the expected
+agreement is exact).
+
+Usage:  python3 python/tools/mirror_counts.py [outdir]
+        (default outdir: rust/benches/baselines)
+"""
+
+import json
+import math
+import os
+import sys
+
+# CostModel::exynos5422 (rust/src/costmodel/mod.rs) — keep in sync.
+CYCLES = {
+    "simd_load": 1.1,
+    "simd_load_u": 1.58,
+    "simd_store": 1.0,
+    "simd_minmax": 0.62,
+    "simd_permute": 1.0,
+    "simd_combine": 0.5,
+    "simd_reinterpret": 0.0,
+    "scalar_load": 1.8,
+    "scalar_store": 1.8,
+    "scalar_cmp": 0.8,
+    "scalar_alu": 0.5,
+}
+FREQ_GHZ = 2.0
+BW_BYTES_PER_CYCLE = 1.1
+CALL_OVERHEAD_NS = 18.0
+FORK_NS = 15_000.0
+BAND_OVERHEAD_NS = 4_000.0
+SATURATION_EPSILON = 0.05
+
+H, W = 600, 800  # synth::paper_image dimensions (u8, px = 1 byte)
+LANES = 16
+SMOKE_WINDOWS = [3, 31, 61, 91]
+SCALING_WINDOW = 31
+MAX_WORKERS = 16
+PAPER_WY0 = 69
+
+
+class Mix(dict):
+    """Instruction histogram + streamed bytes."""
+
+    def __init__(self):
+        super().__init__({k: 0 for k in CYCLES})
+        self.stream = 0
+
+    def bump(self, cls, n=1):
+        self[cls] += n
+
+    def __iadd__(self, other):
+        for k in CYCLES:
+            self[k] += other[k]
+        self.stream += other.stream
+        return self
+
+    def compute_ns(self):
+        return sum(self[k] * CYCLES[k] for k in CYCLES) / FREQ_GHZ
+
+    def memory_ns(self):
+        return self.stream / BW_BYTES_PER_CYCLE / FREQ_GHZ
+
+    def price_ns(self):
+        return self.compute_ns() + self.memory_ns() + CALL_OVERHEAD_NS
+
+
+def rows_simd_linear(h, w, window):
+    m = Mix()
+    wing = window // 2
+    wv = w - w % LANES
+    chunks = wv // LANES
+    m.stream += 2 * h * w
+    y = 0
+    while y < h:
+        pair = y + 1 < h
+        c0 = max(0, (y + 1) - wing)
+        c1 = min(y + wing, h - 1)
+        top = y >= wing
+        bot = y + wing + 1 < h
+        loads = 1 + (c1 - c0) + (1 if top else 0) + (1 if pair and bot else 0)
+        mms = (c1 - c0) + (1 if top else 0) + (1 if pair and bot else 0)
+        stores = 1 + (1 if pair else 0)
+        m.bump("scalar_alu", 2 * chunks)
+        m.bump("simd_load", loads * chunks)
+        m.bump("simd_minmax", mms * chunks)
+        m.bump("simd_store", stores * chunks)
+        for _ in range(wv, w):  # scalar tail (empty at w=800)
+            m.bump("scalar_alu", 2)
+            m.bump("scalar_load", loads)
+            m.bump("scalar_cmp", mms)
+            m.bump("scalar_store", stores)
+        y += 2
+    return m
+
+
+def rows_simd_vhgw(h, w, window):
+    m = Mix()
+    wing = window // 2
+    nseg = math.ceil((h + 2 * wing) / window)
+    ph = nseg * window
+    wv = w - w % LANES
+    chunks = wv // LANES
+    tail = w - wv
+    m.stream += (2 * h * w + ph * w) + (ph * w + h * w)
+    for i in range(ph):  # R scan
+        if i % window == 0:
+            m.bump("scalar_alu", chunks)
+            m.bump("simd_load", chunks)
+            m.bump("simd_store", chunks)
+            m.bump("scalar_load", tail)
+            m.bump("scalar_store", tail)
+        else:
+            m.bump("scalar_alu", chunks)
+            m.bump("simd_load", 2 * chunks)
+            m.bump("simd_minmax", chunks)
+            m.bump("simd_store", chunks)
+            m.bump("scalar_load", 2 * tail)
+            m.bump("scalar_cmp", tail)
+            m.bump("scalar_store", tail)
+    for i in reversed(range(ph)):  # S scan fused with merge
+        seg_last = i % window == window - 1
+        loads, mms, stores = 1, 0, 1
+        if not seg_last:
+            loads += 1
+            mms += 1
+        if i < h:
+            loads += 1
+            mms += 1
+            stores += 1
+        m.bump("scalar_alu", chunks)
+        m.bump("simd_load", loads * chunks)
+        m.bump("simd_minmax", mms * chunks)
+        m.bump("simd_store", stores * chunks)
+        m.bump("scalar_load", loads * tail)
+        m.bump("scalar_cmp", mms * tail)
+        m.bump("scalar_store", stores * tail)
+    return m
+
+
+def rows_scalar_vhgw(h, w, window):
+    m = Mix()
+    wing = window // 2
+    nseg = math.ceil((h + 2 * wing) / window)
+    ph = nseg * window
+    m.stream += (2 * h * w + ph * w) + (ph * w + h * w)
+    for i in range(ph):  # R scan
+        m.bump("scalar_alu", 1)
+        if i % window == 0:
+            m.bump("scalar_load", w)
+            m.bump("scalar_store", w)
+        else:
+            m.bump("scalar_alu", w)
+            m.bump("scalar_load", 2 * w)
+            m.bump("scalar_cmp", w)
+            m.bump("scalar_store", w)
+    for i in reversed(range(ph)):  # S scan
+        seg_last = i % window == window - 1
+        m.bump("scalar_alu", 1)
+        loads, cmps, stores = 1, 0, 1
+        if not seg_last:
+            loads += 1
+            cmps += 1
+        if i < h:
+            loads += 1
+            cmps += 1
+            stores += 1
+        m.bump("scalar_alu", w)
+        m.bump("scalar_load", loads * w)
+        m.bump("scalar_cmp", cmps * w)
+        m.bump("scalar_store", stores * w)
+    return m
+
+
+def cols_simd_linear(h, w, window):
+    m = Mix()
+    wv = w - w % LANES
+    chunks = wv // LANES
+    tail = w - wv
+    m.stream += 2 * h * w
+    for _ in range(h):
+        m.bump("scalar_alu", 2 * chunks)
+        m.bump("simd_load_u", window * chunks)
+        m.bump("simd_minmax", (window - 1) * chunks)
+        m.bump("simd_store", chunks)
+        m.bump("scalar_alu", tail)
+        m.bump("scalar_load", window * tail)
+        m.bump("scalar_cmp", (window - 1) * tail)
+        m.bump("scalar_store", tail)
+    return m
+
+
+def parallel_price_ns(mix, workers):
+    if workers <= 1:
+        return mix.price_ns()
+    return (
+        mix.compute_ns() / workers
+        + mix.memory_ns()
+        + CALL_OVERHEAD_NS
+        + FORK_NS
+        + BAND_OVERHEAD_NS * workers
+    )
+
+
+def fig3_baseline():
+    headline = {}
+    series = {}
+    for w in SMOKE_WINDOWS:
+        ns = [
+            rows_scalar_vhgw(H, W, w).price_ns(),
+            rows_simd_vhgw(H, W, w).price_ns(),
+            rows_simd_linear(H, W, w).price_ns(),
+        ]
+        ns.append(ns[2] if w <= PAPER_WY0 else ns[1])  # hybrid
+        series[w] = ns
+    headline["vhgw_simd_speedup_w31"] = series[31][0] / series[31][1]
+    headline["linear_speedup_w3"] = series[3][0] / series[3][2]
+    headline["crossover_wy0"] = max(w for w in SMOKE_WINDOWS if series[w][2] <= series[w][1])
+    return (
+        {
+            "bench": "fig3",
+            "workload": "horizontal erosion on 800x600 u8",
+            "headline": headline,
+        },
+        series,
+    )
+
+
+def scaling_baseline():
+    mix = Mix()
+    mix += rows_simd_linear(H, W, SCALING_WINDOW)
+    mix += cols_simd_linear(H, W, SCALING_WINDOW)
+    seq = mix.price_ns()
+    speedup = lambda p: seq / parallel_price_ns(mix, p)  # noqa: E731
+    saturation = MAX_WORKERS
+    for p in range(1, MAX_WORKERS):
+        cur, nxt = parallel_price_ns(mix, p), parallel_price_ns(mix, p + 1)
+        if nxt >= cur * (1.0 - SATURATION_EPSILON):
+            saturation = p
+            break
+    margin = parallel_price_ns(mix, saturation + 1) / (
+        parallel_price_ns(mix, saturation) * (1.0 - SATURATION_EPSILON)
+    )
+    ceiling = (mix.compute_ns() + mix.memory_ns()) / mix.memory_ns()
+    return (
+        {
+            "bench": "scaling",
+            "workload": f"erode {SCALING_WINDOW}x{SCALING_WINDOW} hybrid on {H}x{W} u8",
+            "headline": {
+                "saturation_workers": saturation,
+                "speedup_at_2": speedup(2),
+                "speedup_at_4": speedup(4),
+                "speedup_at_saturation": speedup(saturation),
+                "ceiling": ceiling,
+            },
+        },
+        {"seq_ns": seq, "mix": dict(mix), "stream": mix.stream, "margin": margin},
+    )
+
+
+def main():
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "rust/benches/baselines"
+    os.makedirs(outdir, exist_ok=True)
+    fig3, series = fig3_baseline()
+    scaling, debug = scaling_baseline()
+    for name, doc in [("BENCH_fig3.json", fig3), ("BENCH_scaling.json", scaling)]:
+        path = os.path.join(outdir, name)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
+    print("\nfig3 model ns per window [vhgw, vhgw_simd, linear_simd, hybrid]:")
+    for w, ns in series.items():
+        print(f"  w={w:3d}: " + "  ".join(f"{v:12.1f}" for v in ns))
+    print(f"\nscaling: seq {debug['seq_ns']:.0f} ns, stream {debug['stream']} B")
+    print(f"scaling headline: {scaling['headline']}")
+    print(f"saturation boundary margin (want far from 1.0): {debug['margin']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+//! Bench: band-parallel scaling sweep — modeled speedup of the §5.3
+//! hybrid erosion vs band count (compute scales ~1/P, the memory term
+//! does not, so the curve saturates at the memory-bandwidth ceiling),
+//! plus host wall-clock of the real banded execution on this machine.
+//!
+//! Run: `cargo bench --bench scaling`
+//! Env: `NEON_MORPH_QUICK=1` reduces host iterations.
+
+use neon_morph::bench_harness::scaling;
+use neon_morph::costmodel::CostModel;
+use neon_morph::image::synth;
+
+fn main() {
+    let quick = std::env::var("NEON_MORPH_QUICK").is_ok();
+    let model = CostModel::exynos5422();
+    let s = scaling::run(
+        &model,
+        synth::PAPER_HEIGHT,
+        synth::PAPER_WIDTH,
+        scaling::SCALING_WINDOW,
+        16,
+        if quick { 1 } else { 5 },
+    );
+    print!("{}", scaling::render(&s).to_markdown());
+    println!(
+        "\nmodeled saturation: P={} (speedup {:.2}x, ceiling {:.2}x)",
+        s.saturation,
+        s.speedup_at(s.saturation),
+        s.ceiling
+    );
+}

@@ -8,8 +8,10 @@ use std::sync::Arc;
 use crate::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use crate::costmodel::CostModel;
 use crate::image::synth;
-use crate::morphology::{self, Border, HybridThresholds, MorphConfig, MorphOp, PassMethod,
-                        VerticalStrategy};
+use crate::morphology::{
+    self, Border, HybridThresholds, MorphConfig, MorphOp, Parallelism, PassMethod,
+    VerticalStrategy,
+};
 use crate::neon::{Counting, Native};
 use crate::util::timing;
 
@@ -42,6 +44,7 @@ fn cfg_baseline() -> MorphConfig {
         simd: false,
         border: Border::Identity,
         thresholds: HybridThresholds::paper(),
+        parallelism: Parallelism::Sequential,
     }
 }
 

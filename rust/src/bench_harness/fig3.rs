@@ -70,10 +70,13 @@ pub(super) fn sweep_generic<P: MorphPixel>(
             let out = run_pass.run_counting(&mut c, img, w, s);
             std::hint::black_box(out);
             model_ns[s] = model.price_ns(&c.mix);
-            host_ns[s] = timing::bench(1, host_iters, || {
-                run_pass.run_native(&mut Native, img, w, s)
-            })
-            .min_ns;
+            // host_iters == 0 skips wall-clocking entirely (the
+            // deterministic `bench smoke` sweep reads only model_ns)
+            host_ns[s] = if host_iters == 0 {
+                0.0
+            } else {
+                timing::bench(1, host_iters, || run_pass.run_native(&mut Native, img, w, s)).min_ns
+            };
         }
         // hybrid: the §5.3 dispatch — linear below threshold, vHGW above
         let pick = if w <= threshold { 2 } else { 1 };
@@ -98,7 +101,13 @@ pub(super) fn sweep_generic<P: MorphPixel>(
     };
     Sweep {
         crossover_model: crossover(&|p: &Point| (p.model_ns[2], p.model_ns[1])),
-        crossover_host: crossover(&|p: &Point| (p.host_ns[2], p.host_ns[1])),
+        // 0 = "not measured" — with host timing skipped the all-zero
+        // series would otherwise report the largest window as a crossover
+        crossover_host: if host_iters == 0 {
+            0
+        } else {
+            crossover(&|p: &Point| (p.host_ns[2], p.host_ns[1]))
+        },
         points,
     }
 }

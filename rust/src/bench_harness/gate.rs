@@ -1,0 +1,187 @@
+//! The perf-baseline regression gate.
+//!
+//! CI runs the deterministic cost-model sweeps (`bench smoke`), writes
+//! `BENCH_fig3.json` / `BENCH_scaling.json`, and compares their
+//! `headline` sections against the committed baselines in
+//! `rust/benches/baselines/` (`bench gate`).  A headline ratio drifting
+//! beyond the tolerance (±10%) **fails the job** — cost-model numbers
+//! are exact functions of the counted instruction mixes, so any drift
+//! is a real change to the modeled performance of the kernels (or to
+//! the model itself) and must be acknowledged by regenerating the
+//! baselines (`bench smoke --update-baselines`, which re-runs the
+//! sweeps and commits the new numbers).
+
+use crate::util::json::Json;
+
+/// Relative tolerance of the CI gate.
+pub const GATE_TOLERANCE: f64 = 0.10;
+
+/// Compare `measured` against `baseline`, returning one message per
+/// violation (empty = gate passes).
+///
+/// The walk is driven by the **baseline**: every numeric leaf in it
+/// must exist in `measured` within `tol` relative error (absolute error
+/// for baselines near zero), and every string leaf must match exactly.
+/// Keys present only in `measured` are ignored, so benches may add
+/// informational fields without invalidating committed baselines.
+pub fn compare(baseline: &Json, measured: &Json, tol: f64) -> Vec<String> {
+    let mut failures = Vec::new();
+    walk("", baseline, Some(measured), tol, &mut failures);
+    failures
+}
+
+fn walk(path: &str, base: &Json, meas: Option<&Json>, tol: f64, out: &mut Vec<String>) {
+    let Some(meas) = meas else {
+        out.push(format!("{path}: present in baseline but missing from measurement"));
+        return;
+    };
+    match base {
+        Json::Obj(map) => {
+            for (k, v) in map {
+                let child = format!("{path}/{k}");
+                walk(&child, v, meas.get(k), tol, out);
+            }
+        }
+        Json::Arr(items) => {
+            let got = meas.as_arr().unwrap_or(&[]);
+            if got.len() != items.len() {
+                out.push(format!(
+                    "{path}: baseline has {} entries, measurement has {}",
+                    items.len(),
+                    got.len()
+                ));
+                return;
+            }
+            for (i, (b, m)) in items.iter().zip(got).enumerate() {
+                walk(&format!("{path}[{i}]"), b, Some(m), tol, out);
+            }
+        }
+        Json::Num(b) => match meas.as_f64() {
+            None => out.push(format!("{path}: expected a number, got {meas:?}")),
+            Some(m) => {
+                // relative error, degrading to absolute error (scale 1)
+                // for baselines below 1 so near-zero values don't demand
+                // an exact match
+                let scale = b.abs().max(1.0);
+                let rel = (m - b).abs() / scale;
+                if rel > tol {
+                    out.push(format!(
+                        "{path}: {m:.6} drifted {:.1}% from baseline {b:.6} (tolerance {:.0}%)",
+                        rel * 100.0,
+                        tol * 100.0
+                    ));
+                }
+            }
+        },
+        Json::Str(b) => {
+            if meas.as_str() != Some(b.as_str()) {
+                out.push(format!("{path}: expected {b:?}, got {meas:?}"));
+            }
+        }
+        Json::Bool(b) => {
+            if meas != &Json::Bool(*b) {
+                out.push(format!("{path}: expected {b}, got {meas:?}"));
+            }
+        }
+        Json::Null => {
+            if meas != &Json::Null {
+                out.push(format!("{path}: expected null, got {meas:?}"));
+            }
+        }
+    }
+}
+
+/// Extract the gated subset of a bench report: the `bench` tag and the
+/// `headline` section.  This is what `--update-baselines` commits —
+/// baselines deliberately exclude the informational `points` series so
+/// adding sweep points never invalidates them.
+pub fn headline_subset(report: &Json) -> Json {
+    let mut out = std::collections::BTreeMap::new();
+    if let Some(b) = report.get("bench") {
+        out.insert("bench".to_string(), b.clone());
+    }
+    if let Some(w) = report.get("workload") {
+        out.insert("workload".to_string(), w.clone());
+    }
+    if let Some(h) = report.get("headline") {
+        out.insert("headline".to_string(), h.clone());
+    }
+    Json::Obj(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn baseline() -> Json {
+        parse(
+            r#"{"bench":"fig3","headline":{"vhgw_simd_speedup_w31":3.0,"linear_speedup_w3":10.0}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let b = baseline();
+        assert!(compare(&b, &b, GATE_TOLERANCE).is_empty());
+    }
+
+    #[test]
+    fn drift_within_tolerance_passes() {
+        let b = baseline();
+        let m = parse(
+            r#"{"bench":"fig3","headline":{"vhgw_simd_speedup_w31":3.2,"linear_speedup_w3":9.3,"extra_info":42}}"#,
+        )
+        .unwrap();
+        assert!(compare(&b, &m, GATE_TOLERANCE).is_empty());
+    }
+
+    #[test]
+    fn seeded_ten_percent_drift_fails() {
+        let b = baseline();
+        // 15% drift on one ratio: the gate must catch exactly that key
+        let m = parse(
+            r#"{"bench":"fig3","headline":{"vhgw_simd_speedup_w31":3.45,"linear_speedup_w3":10.0}}"#,
+        )
+        .unwrap();
+        let fails = compare(&b, &m, GATE_TOLERANCE);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("vhgw_simd_speedup_w31"));
+        assert!(fails[0].contains("15.0%"));
+    }
+
+    #[test]
+    fn missing_headline_key_fails() {
+        let b = baseline();
+        let m = parse(r#"{"bench":"fig3","headline":{"vhgw_simd_speedup_w31":3.0}}"#).unwrap();
+        let fails = compare(&b, &m, GATE_TOLERANCE);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("linear_speedup_w3"));
+        assert!(fails[0].contains("missing"));
+    }
+
+    #[test]
+    fn bench_tag_mismatch_fails() {
+        let b = baseline();
+        let m = parse(r#"{"bench":"fig4","headline":{"vhgw_simd_speedup_w31":3.0,"linear_speedup_w3":10.0}}"#)
+            .unwrap();
+        assert!(!compare(&b, &m, GATE_TOLERANCE).is_empty());
+    }
+
+    #[test]
+    fn headline_subset_drops_points() {
+        let full = parse(
+            r#"{"bench":"scaling","workload":"x","headline":{"saturation_workers":5},"points":[{"workers":1}]}"#,
+        )
+        .unwrap();
+        let sub = headline_subset(&full);
+        assert!(sub.get("points").is_none());
+        assert_eq!(
+            sub.get("headline").unwrap().usize_field("saturation_workers"),
+            Some(5)
+        );
+        // the subset gates against the full report
+        assert!(compare(&sub, &full, GATE_TOLERANCE).is_empty());
+    }
+}

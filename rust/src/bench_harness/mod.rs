@@ -7,6 +7,12 @@
 //! | Fig 3 u16 | [`fig3::run_u16`] | the same sweep on the 800×600 u16 workload (8 lanes/op) |
 //! | Figure 4 | [`fig4::run`]   | vertical-pass erosion time vs `w_x` |
 //! | headline | [`e2e::run`]    | final hybrid vs vHGW-no-SIMD, ≥3× |
+//! | scaling  | [`scaling::run`] | band-parallel speedup vs workers (extension) |
+//!
+//! [`scaling`] also emits the machine-readable `BENCH_fig3.json` /
+//! `BENCH_scaling.json` reports whose `headline` ratios CI pins against
+//! the committed baselines in `rust/benches/baselines/` via [`gate`]
+//! (±10%; see `bench smoke` / `bench gate`).
 //!
 //! Every experiment reports **two** measurements side by side:
 //!
@@ -25,7 +31,9 @@
 pub mod e2e;
 pub mod fig3;
 pub mod fig4;
+pub mod gate;
 pub mod report;
+pub mod scaling;
 pub mod table1;
 
 /// Default odd-window sweep used by Fig. 3 / Fig. 4 (the paper sweeps

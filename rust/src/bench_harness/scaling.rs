@@ -1,0 +1,272 @@
+//! Band-parallel scaling sweep: modeled (and optionally measured)
+//! speedup of the §5.3 hybrid erosion as the band count grows.
+//!
+//! The model series is fully deterministic: one Counting run produces
+//! the instruction mix of the sequential pass, and
+//! [`crate::costmodel::CostModel::parallel_price_ns`] prices it at each
+//! worker count — compute scales ~1/P, the memory/bandwidth term does
+//! not, so the curve grows and then **saturates at the
+//! memory-bandwidth ceiling**; the saturation point is part of the CI
+//! perf baseline (`rust/benches/baselines/BENCH_scaling.json`).  The
+//! host series wall-clocks the real banded execution
+//! ([`crate::morphology::parallel::morphology_banded`]) and is
+//! reported for information only (never gated — wall clocks are not
+//! deterministic).
+
+use std::collections::BTreeMap;
+
+use crate::costmodel::CostModel;
+use crate::image::synth;
+use crate::morphology::{self, parallel, MorphConfig, MorphOp, Parallelism};
+use crate::neon::{Counting, InstrMix};
+use crate::util::json::Json;
+use crate::util::timing;
+
+use super::report::Table;
+
+/// Windows of the deterministic CI smoke sweep (`bench smoke`): the
+/// paper's headline small window, the mid-range SIMD-speedup anchor,
+/// and two points bracketing the §5.3 crossover.
+pub const SMOKE_WINDOWS: [usize; 4] = [3, 31, 61, 91];
+
+/// Window of the scaling workload (§5.3 hybrid ⇒ linear on both
+/// passes at w = 31, a balanced compute/memory mix).
+pub const SCALING_WINDOW: usize = 31;
+
+/// One point of the scaling sweep.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub workers: usize,
+    pub model_ns: f64,
+    pub speedup: f64,
+    /// Host wall-clock of the banded execution (0 when not measured).
+    pub host_ns: f64,
+}
+
+/// Full sweep result.
+#[derive(Clone, Debug)]
+pub struct ScalingSweep {
+    pub workload: String,
+    pub points: Vec<ScalingPoint>,
+    /// Modeled saturation point (first worker count with < 5% marginal
+    /// gain) — the headline number the CI gate pins.
+    pub saturation: usize,
+    /// Memory-bandwidth ceiling `(compute + memory) / memory`.
+    pub ceiling: f64,
+    pub mix: InstrMix,
+}
+
+impl ScalingSweep {
+    pub fn speedup_at(&self, workers: usize) -> f64 {
+        self.points
+            .iter()
+            .find(|p| p.workers == workers)
+            .map_or(1.0, |p| p.speedup)
+    }
+}
+
+/// Run the scaling sweep on an `h × w` u8 noise image with the hybrid
+/// `window × window` erosion.  `host_iters > 0` also wall-clocks the
+/// real banded execution at each worker count.
+pub fn run(
+    model: &CostModel,
+    h: usize,
+    w: usize,
+    window: usize,
+    max_workers: usize,
+    host_iters: usize,
+) -> ScalingSweep {
+    let img = synth::noise(h, w, 0x5CA11);
+    let cfg = MorphConfig {
+        parallelism: Parallelism::Sequential,
+        ..MorphConfig::default()
+    };
+    let mut c = Counting::new();
+    let _ = morphology::morphology(&mut c, &img, MorphOp::Erode, window, window, &cfg);
+    let mix = c.mix;
+    let seq_ns = model.price_ns(&mix);
+
+    let mut points = Vec::with_capacity(max_workers);
+    for p in 1..=max_workers.max(1) {
+        let model_ns = model.parallel_price_ns(&mix, p);
+        let host_ns = if host_iters > 0 {
+            // pool fetched lazily: model-only sweeps never spawn it
+            let pool = parallel::BandPool::global();
+            timing::bench(1, host_iters, || {
+                parallel::morphology_banded(pool, &img, MorphOp::Erode, window, window, &cfg, p)
+            })
+            .min_ns
+        } else {
+            0.0
+        };
+        points.push(ScalingPoint {
+            workers: p,
+            model_ns,
+            speedup: seq_ns / model_ns,
+            host_ns,
+        });
+    }
+    ScalingSweep {
+        workload: format!("erode {window}x{window} hybrid on {h}x{w} u8"),
+        saturation: model.saturation_workers(&mix, max_workers),
+        ceiling: model.parallel_ceiling(&mix),
+        points,
+        mix,
+    }
+}
+
+/// Render the sweep as a table.
+pub fn render(sweep: &ScalingSweep) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Band-parallel scaling — {} (model saturates at P={}, ceiling {:.2}x)",
+            sweep.workload, sweep.saturation, sweep.ceiling
+        ),
+        &["workers", "model_ns", "model_speedup", "host_ns"],
+    );
+    for p in &sweep.points {
+        t.row(vec![
+            p.workers.to_string(),
+            format!("{:.0}", p.model_ns),
+            format!("{:.3}x", p.speedup),
+            if p.host_ns > 0.0 {
+                format!("{:.0}", p.host_ns)
+            } else {
+                "-".to_string()
+            },
+        ]);
+    }
+    t
+}
+
+/// Machine-readable form (`BENCH_scaling.json`): a gated `headline`
+/// section plus the full informational point list.
+pub fn to_json(sweep: &ScalingSweep) -> Json {
+    let mut headline = BTreeMap::new();
+    headline.insert(
+        "saturation_workers".to_string(),
+        Json::Num(sweep.saturation as f64),
+    );
+    headline.insert("speedup_at_2".to_string(), Json::Num(sweep.speedup_at(2)));
+    headline.insert("speedup_at_4".to_string(), Json::Num(sweep.speedup_at(4)));
+    headline.insert(
+        "speedup_at_saturation".to_string(),
+        Json::Num(sweep.speedup_at(sweep.saturation)),
+    );
+    headline.insert("ceiling".to_string(), Json::Num(sweep.ceiling));
+
+    let points = sweep
+        .points
+        .iter()
+        .map(|p| {
+            let mut o = BTreeMap::new();
+            o.insert("workers".to_string(), Json::Num(p.workers as f64));
+            o.insert("model_ns".to_string(), Json::Num(p.model_ns));
+            o.insert("speedup".to_string(), Json::Num(p.speedup));
+            if p.host_ns > 0.0 {
+                o.insert("host_ns".to_string(), Json::Num(p.host_ns));
+            }
+            Json::Obj(o)
+        })
+        .collect();
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("scaling".to_string()));
+    root.insert("workload".to_string(), Json::Str(sweep.workload.clone()));
+    root.insert("headline".to_string(), Json::Obj(headline));
+    root.insert("points".to_string(), Json::Arr(points));
+    Json::Obj(root)
+}
+
+/// Machine-readable form of a Fig-3 sweep (`BENCH_fig3.json`): the
+/// paper's headline ratios (vHGW+SIMD speedup, linear-vs-scalar-vHGW at
+/// w = 3, the sparse-grid crossover) under `headline`, plus the model
+/// series per window.
+pub fn fig3_json(sweep: &super::fig3::Sweep) -> Json {
+    let at = |w: usize| sweep.points.iter().find(|p| p.window == w);
+    let mut headline = BTreeMap::new();
+    if let Some(p) = at(31) {
+        headline.insert(
+            "vhgw_simd_speedup_w31".to_string(),
+            Json::Num(p.model_ns[0] / p.model_ns[1]),
+        );
+    }
+    if let Some(p) = at(3) {
+        headline.insert(
+            "linear_speedup_w3".to_string(),
+            Json::Num(p.model_ns[0] / p.model_ns[2]),
+        );
+    }
+    headline.insert(
+        "crossover_wy0".to_string(),
+        Json::Num(sweep.crossover_model as f64),
+    );
+
+    let points = sweep
+        .points
+        .iter()
+        .map(|p| {
+            let mut o = BTreeMap::new();
+            o.insert("window".to_string(), Json::Num(p.window as f64));
+            for (i, series) in super::fig3::SERIES.iter().enumerate() {
+                o.insert(format!("{series}_model_ns"), Json::Num(p.model_ns[i]));
+            }
+            Json::Obj(o)
+        })
+        .collect();
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("fig3".to_string()));
+    root.insert(
+        "workload".to_string(),
+        Json::Str("horizontal erosion on 800x600 u8".to_string()),
+    );
+    root.insert("headline".to_string(), Json::Obj(headline));
+    root.insert("points".to_string(), Json::Arr(points));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_sweep_grows_then_saturates() {
+        if cfg!(debug_assertions) {
+            eprintln!("SKIP in debug: scaling counting sweep (runs under --release / make test)");
+            return;
+        }
+        let model = CostModel::exynos5422();
+        let s = run(&model, 600, 800, SCALING_WINDOW, 16, 0);
+        assert_eq!(s.points.len(), 16);
+        assert!((s.speedup_at(1) - 1.0).abs() < 1e-12);
+        // speedup grows with workers up to the saturation point…
+        for w in s.points.windows(2) {
+            if w[1].workers <= s.saturation {
+                assert!(w[1].speedup > w[0].speedup, "p={}", w[1].workers);
+            }
+        }
+        // …and never exceeds the memory-bandwidth ceiling
+        for p in &s.points {
+            assert!(p.speedup < s.ceiling, "p={} exceeds ceiling", p.workers);
+        }
+        assert!((2..=16).contains(&s.saturation), "saturation {}", s.saturation);
+    }
+
+    #[test]
+    fn json_has_gated_headline() {
+        if cfg!(debug_assertions) {
+            eprintln!("SKIP in debug: scaling counting sweep (runs under --release / make test)");
+            return;
+        }
+        let model = CostModel::exynos5422();
+        let s = run(&model, 600, 800, SCALING_WINDOW, 8, 0);
+        let j = to_json(&s);
+        let h = j.get("headline").unwrap();
+        assert!(h.get("saturation_workers").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(h.get("speedup_at_4").unwrap().as_f64().unwrap() > 1.0);
+        // round-trips through the serializer
+        let again = crate::util::json::parse(&crate::util::json::write(&j)).unwrap();
+        assert_eq!(j, again);
+    }
+}

@@ -21,6 +21,15 @@
 //! dtype so batches never mix depths.  AOT artifacts exist only for
 //! `u8`, so u16 requests always execute on the native engine (and fail
 //! under [`BackendChoice::XlaOnly`]).
+//!
+//! Intra-image parallelism: native executions band-shard large images
+//! across the process-wide
+//! [`crate::morphology::parallel::BandPool`] (policy:
+//! `CoordinatorConfig::morph.parallelism`, default `Auto` — the cost
+//! model keeps small requests sequential).  Coordinator workers and
+//! band jobs share that one pool, so serving many small requests and
+//! splitting a few large ones use the same cores instead of
+//! oversubscribing them; results are bit-identical either way.
 
 pub mod metrics;
 pub mod queue;

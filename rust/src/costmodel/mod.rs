@@ -39,6 +39,10 @@ pub fn simd_lanes(dtype: &str) -> Option<usize> {
     }
 }
 
+/// Marginal speedup below which adding one more band is considered
+/// saturated (see [`CostModel::saturation_workers`]).
+pub const SATURATION_EPSILON: f64 = 0.05;
+
 /// Per-instruction-class cycle costs + memory system parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CostModel {
@@ -53,6 +57,11 @@ pub struct CostModel {
     pub bw_bytes_per_cycle: f64,
     /// Fixed overhead per priced call, ns (entry/exit, edge rows).
     pub call_overhead_ns: f64,
+    /// Fixed cost of one band-parallel dispatch, ns (waking the shared
+    /// worker pool + the fork-join latch round trip).
+    pub fork_ns: f64,
+    /// Per-band overhead, ns (job boxing/queueing + band bookkeeping).
+    pub band_overhead_ns: f64,
 }
 
 /// Itemized price of a mix — useful in reports and for perf analysis.
@@ -94,6 +103,8 @@ impl CostModel {
             cycles,
             bw_bytes_per_cycle: 1.1,
             call_overhead_ns: 18.0,
+            fork_ns: 15_000.0,
+            band_overhead_ns: 4_000.0,
         }
     }
 
@@ -131,6 +142,213 @@ impl CostModel {
             return 0.0;
         }
         self.price_ns_marginal(mix) / pixels as f64
+    }
+
+    // -- band-parallel execution --------------------------------------------
+
+    /// Price a mix executed as `workers` parallel bands.
+    ///
+    /// The parallel term models a shared-memory-bus machine: **compute
+    /// scales ~1/P** (bands are independent), the **memory/bandwidth
+    /// term does not** (every band streams over the same bus), and the
+    /// dispatch pays a fixed fork cost plus a per-band overhead.  The
+    /// model therefore predicts speedup that grows with workers and
+    /// saturates at the memory-bandwidth ceiling
+    /// ([`CostModel::parallel_ceiling`]); `workers <= 1` is exactly the
+    /// sequential price.
+    pub fn parallel_breakdown(&self, mix: &InstrMix, workers: usize) -> CostBreakdown {
+        let base = self.breakdown(mix);
+        if workers <= 1 {
+            return base;
+        }
+        CostBreakdown {
+            compute_ns: base.compute_ns / workers as f64,
+            memory_ns: base.memory_ns,
+            overhead_ns: self.parallel_overhead_ns(workers),
+        }
+    }
+
+    /// Fixed + per-band dispatch overhead of a `workers`-band execution
+    /// (includes the per-call overhead) — the single source of the
+    /// parallel overhead formula shared by [`CostModel::parallel_breakdown`]
+    /// and [`CostModel::plan_workers`].
+    fn parallel_overhead_ns(&self, workers: usize) -> f64 {
+        self.call_overhead_ns + self.fork_ns + self.band_overhead_ns * workers as f64
+    }
+
+    /// Total parallel price in nanoseconds.
+    pub fn parallel_price_ns(&self, mix: &InstrMix, workers: usize) -> f64 {
+        self.parallel_breakdown(mix, workers).total_ns()
+    }
+
+    /// Modeled speedup of `workers` bands over sequential execution.
+    pub fn parallel_speedup(&self, mix: &InstrMix, workers: usize) -> f64 {
+        self.price_ns(mix) / self.parallel_price_ns(mix, workers)
+    }
+
+    /// Upper bound on parallel speedup: with infinite workers only the
+    /// unscaled memory term remains, so speedup saturates at
+    /// `(compute + memory) / memory` — the memory-bandwidth ceiling.
+    pub fn parallel_ceiling(&self, mix: &InstrMix) -> f64 {
+        let b = self.breakdown(mix);
+        if b.memory_ns <= 0.0 {
+            return f64::INFINITY;
+        }
+        (b.compute_ns + b.memory_ns) / b.memory_ns
+    }
+
+    /// First worker count whose marginal gain over the previous one
+    /// falls below [`SATURATION_EPSILON`] — the saturation point of the
+    /// modeled scaling curve (capped at `max_workers`).
+    pub fn saturation_workers(&self, mix: &InstrMix, max_workers: usize) -> usize {
+        let mut p = 1usize;
+        while p < max_workers {
+            let cur = self.parallel_price_ns(mix, p);
+            let nxt = self.parallel_price_ns(mix, p + 1);
+            if nxt >= cur * (1.0 - SATURATION_EPSILON) {
+                return p;
+            }
+            p += 1;
+        }
+        max_workers.max(1)
+    }
+
+    /// Band count to use for a pass with the given compute/memory split
+    /// (from [`CostModel::estimate_separable_cost`] or a counted mix):
+    /// the argmin of the modeled parallel price over `1..=max_workers`,
+    /// demoted to 1 unless it beats sequential by ≥10% — the dispatch
+    /// crossover that keeps small images off the worker pool.
+    pub fn plan_workers(&self, compute_ns: f64, memory_ns: f64, max_workers: usize) -> usize {
+        let seq = compute_ns + memory_ns + self.call_overhead_ns;
+        let par = |p: usize| compute_ns / p as f64 + memory_ns + self.parallel_overhead_ns(p);
+        let mut best = 1usize;
+        let mut best_ns = seq;
+        for p in 2..=max_workers.max(1) {
+            let t = par(p);
+            if t < best_ns {
+                best = p;
+                best_ns = t;
+            }
+        }
+        if best_ns > seq * 0.9 {
+            1
+        } else {
+            best
+        }
+    }
+
+    /// Closed-form (compute_ns, memory_ns) estimate of one separable
+    /// 2-D morphology at native speed — the *dispatch heuristic* behind
+    /// `Parallelism::Auto`.  Mirrors the pass selection of
+    /// `separable::pass_rows`/`pass_cols` (`method` resolved per pass
+    /// against `thresholds`, `vertical` choosing the §5.2.2 direct form
+    /// vs the §5.2.1 sandwich) but prices it coarsely (interior-only
+    /// chunk census, vHGW padding approximated as `h + w`); the counted
+    /// mixes remain the source of truth for reproduction numbers, and
+    /// the tests only pin this estimate to the counted price within a
+    /// small factor.
+        pub fn estimate_separable_cost(
+        &self,
+        h: usize,
+        w: usize,
+        w_x: usize,
+        w_y: usize,
+        lanes: usize,
+        px_bytes: usize,
+        simd: bool,
+        method: crate::morphology::PassMethod,
+        vertical: crate::morphology::VerticalStrategy,
+        thresholds: &crate::morphology::HybridThresholds,
+    ) -> (f64, f64) {
+        use crate::morphology::{hybrid::resolve_method, PassMethod};
+        let cyc = |c: InstrClass| self.cycles[c as usize];
+        let (ld, ldu, st, mm) = (
+            cyc(InstrClass::SimdLoad),
+            cyc(InstrClass::SimdLoadUnaligned),
+            cyc(InstrClass::SimdStore),
+            cyc(InstrClass::SimdMinMax),
+        );
+        let (sld, sst, scmp, salu) = (
+            cyc(InstrClass::ScalarLoad),
+            cyc(InstrClass::ScalarStore),
+            cyc(InstrClass::ScalarCmp),
+            cyc(InstrClass::ScalarAlu),
+        );
+        if h == 0 || w == 0 {
+            return (0.0, 0.0);
+        }
+        let pixels = (h * w) as f64;
+        let lanes_f = lanes as f64;
+        let mut compute_cycles = 0.0f64;
+        let mut stream_bytes = 0.0f64;
+
+        if w_y > 1 {
+            let m = resolve_method(method, w_y, thresholds.wy0);
+            let wy = w_y as f64;
+            let per_px = if !simd {
+                // scalar two-row structure: ~ (wy+1)/2 loads + wy/2 cmps
+                // + 1 store + ~wy/2 alu per pixel
+                match m {
+                    PassMethod::Linear => {
+                        ((wy + 1.0) * sld + wy * scmp + 2.0 * sst + wy * salu) / 2.0
+                    }
+                    _ => 5.0 * sld + 3.0 * scmp + 3.0 * sst + 2.0 * salu,
+                }
+            } else {
+                match m {
+                    PassMethod::Linear => {
+                        ((wy + 1.0) * ld + wy * mm + 2.0 * st + 2.0 * salu) / (2.0 * lanes_f)
+                    }
+                    // vHGW R+S chunk census over ~(h + wy)/h padded rows
+                    _ => (5.0 * ld + 3.0 * mm + 3.0 * st + 2.0 * salu) / lanes_f
+                        * ((h as f64 + wy) / h as f64),
+                }
+            };
+            compute_cycles += per_px * pixels;
+            stream_bytes += match m {
+                PassMethod::Linear => 2.0 * pixels * px_bytes as f64,
+                _ => 5.0 * pixels * px_bytes as f64,
+            };
+        }
+        if w_x > 1 {
+            let m = resolve_method(method, w_x, thresholds.wx0);
+            let wx = w_x as f64;
+            // the §5.2.1 sandwich applies exactly when `separable::pass_cols`
+            // would take it (shared predicate)
+            let sandwich = crate::morphology::separable::takes_sandwich(m, simd, vertical);
+            // two tiled transposes: ~2 load/store + 4 permutes per vector
+            let transpose_px = 2.0 * (2.0 * (ld + st) / 2.0 + 4.0) / lanes_f;
+            let per_px = if !simd {
+                match m {
+                    PassMethod::Linear => wx * sld + wx * scmp + sst + wx * salu,
+                    _ => 5.0 * sld + 3.0 * scmp + 3.0 * sst + 2.0 * salu,
+                }
+            } else if !sandwich {
+                // §5.2.2 direct: all window loads unaligned
+                (wx * ldu + (wx - 1.0) * mm + st + 2.0 * salu) / lanes_f
+            } else if m == PassMethod::Linear {
+                // sandwich around an aligned two-row linear mid pass
+                transpose_px
+                    + ((wx + 1.0) * ld + wx * mm + 2.0 * st + 2.0 * salu) / (2.0 * lanes_f)
+            } else {
+                // sandwich around a vHGW mid pass on the transposed image
+                transpose_px
+                    + (5.0 * ld + 3.0 * mm + 3.0 * st + 2.0 * salu) / lanes_f
+                        * ((w as f64 + wx) / w as f64)
+            };
+            compute_cycles += per_px * pixels;
+            stream_bytes += if !simd || !sandwich {
+                2.0 * pixels * px_bytes as f64
+            } else if m == PassMethod::Linear {
+                (2.0 + 4.0) * pixels * px_bytes as f64
+            } else {
+                (5.0 + 4.0) * pixels * px_bytes as f64
+            };
+        }
+        (
+            compute_cycles / self.freq_ghz,
+            stream_bytes / self.bw_bytes_per_cycle / self.freq_ghz,
+        )
     }
 }
 
@@ -207,6 +425,97 @@ mod tests {
             linear::rows_simd_linear(&mut c16, &synth::noise_u16(64, 64, 4), 9, MorphOp::Erode);
         let r = m.price_ns_per_pixel(&c16.mix, px) / m.price_ns_per_pixel(&c8.mix, px);
         assert!((1.7..=2.3).contains(&r), "u16/u8 per-pixel price ratio {r}");
+    }
+
+    #[test]
+    fn parallel_speedup_grows_then_saturates_at_memory_ceiling() {
+        let m = CostModel::exynos5422();
+        // compute-heavy mix with a real memory term
+        let mut mix = InstrMix::new();
+        mix.bump(InstrClass::SimdMinMax, 4_000_000);
+        mix.bump(InstrClass::SimdLoad, 4_000_000);
+        mix.stream_read = 480_000;
+        mix.stream_written = 480_000;
+        let mut last = 0.0;
+        for p in 1..=16 {
+            let s = m.parallel_speedup(&mix, p);
+            assert!(s >= last - 1e-9, "speedup must be non-decreasing early");
+            last = s;
+        }
+        let ceiling = m.parallel_ceiling(&mix);
+        assert!(m.parallel_speedup(&mix, 16) < ceiling);
+        let sat = m.saturation_workers(&mix, 16);
+        assert!((2..=16).contains(&sat), "saturation {sat}");
+        // beyond saturation the marginal gain is < epsilon
+        let gain = m.parallel_price_ns(&mix, sat) / m.parallel_price_ns(&mix, sat + 1);
+        assert!(gain < 1.0 / (1.0 - SATURATION_EPSILON) + 1e-9);
+    }
+
+    #[test]
+    fn parallel_price_of_one_worker_is_sequential() {
+        let m = CostModel::exynos5422();
+        let mut mix = InstrMix::new();
+        mix.bump(InstrClass::SimdLoad, 1000);
+        mix.stream_read = 4096;
+        assert_eq!(m.parallel_price_ns(&mix, 1), m.price_ns(&mix));
+        assert!(m.parallel_price_ns(&mix, 0) == m.price_ns(&mix));
+    }
+
+    #[test]
+    fn memory_bound_mixes_refuse_to_parallelize() {
+        let m = CostModel::exynos5422();
+        // pure memory: compute/P saves nothing, fork costs are real
+        assert_eq!(m.plan_workers(0.0, 1_000_000.0, 8), 1);
+        // tiny work: overhead dominates
+        assert_eq!(m.plan_workers(5_000.0, 1_000.0, 8), 1);
+        // compute-heavy large work parallelizes
+        let p = m.plan_workers(2_000_000.0, 500_000.0, 8);
+        assert!(p > 1, "expected banding for 2ms compute, got {p}");
+    }
+
+    #[test]
+    fn estimate_tracks_counted_price_loosely() {
+        use crate::image::synth;
+        use crate::morphology::{
+            self, HybridThresholds, MorphConfig, MorphOp, Parallelism, PassMethod,
+            VerticalStrategy,
+        };
+        let m = CostModel::exynos5422();
+        let img = synth::noise(120, 160, 9);
+        let cfg = MorphConfig {
+            parallelism: Parallelism::Sequential,
+            ..MorphConfig::default()
+        };
+        let estimate = |h: usize, w: usize, method: PassMethod| {
+            m.estimate_separable_cost(
+                h,
+                w,
+                9,
+                9,
+                16,
+                1,
+                true,
+                method,
+                VerticalStrategy::Direct,
+                &HybridThresholds::paper(),
+            )
+        };
+        let mut c = Counting::new();
+        let _ = morphology::morphology(&mut c, &img, MorphOp::Erode, 9, 9, &cfg);
+        let counted = m.price_ns_marginal(&c.mix);
+        let (comp, mem) = estimate(120, 160, PassMethod::Hybrid);
+        let est = comp + mem;
+        let ratio = est / counted;
+        assert!(
+            (0.2..=5.0).contains(&ratio),
+            "estimate {est} vs counted {counted} (ratio {ratio})"
+        );
+        // estimator must scale with pixels (dispatch monotonicity)
+        let (c2, m2) = estimate(240, 320, PassMethod::Hybrid);
+        assert!(c2 > comp * 3.0 && m2 > mem * 3.0);
+        // a forced-vHGW config prices its extra streaming (sandwich)
+        let (_, mem_vhgw) = estimate(120, 160, PassMethod::Vhgw);
+        assert!(mem_vhgw > mem * 2.0, "vhgw must stream more than linear");
     }
 
     #[test]

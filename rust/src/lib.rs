@@ -32,7 +32,11 @@
 //!   generic over [`morphology::MorphPixel`], so the same code filters
 //!   `Image<u8>` (16 SIMD lanes/op, 16×16.8 transpose tiles) and
 //!   `Image<u16>` (8 lanes/op, 8×8.16 tiles) — the two depths the
-//!   paper's §4 transpose shapes exist for.
+//!   paper's §4 transpose shapes exist for.  `morphology::parallel`
+//!   adds intra-image **band-sharding**: native executions split each
+//!   pass into row bands with `w-1` halos (tile-aligned column stripes
+//!   for the vertical transpose sandwich) and run the bands on a
+//!   shared worker pool, bit-identical to the sequential path.
 //! * [`runtime`] — PJRT bridge executing the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) from Rust; python is never on the
 //!   request path.
@@ -41,6 +45,26 @@
 //!   depth-tagged payloads (`u8`/`u16`); batch keys include the dtype,
 //!   and u16 work always routes to the native engine (AOT artifacts
 //!   are u8-only).
+//!
+//! ## Band-sharded parallelism
+//!
+//! * Policy: [`morphology::Parallelism`] in [`morphology::MorphConfig`]
+//!   (`Sequential` / `Fixed(n)` / `Auto`; default `Auto`).  `Auto`
+//!   shards only when the cost model predicts ≥10% gain over
+//!   sequential ([`costmodel::CostModel::plan_workers`]), so small
+//!   images never touch the pool.
+//! * Geometry: a rows-window band with output rows `[b0, b1)` reads
+//!   input rows `[b0 - w/2, b1 + w/2) ∩ [0, h)`; the direct cols pass
+//!   bands rows with zero halo; the §5.2.1 sandwich bands the
+//!   transposed image in [`morphology::MorphPixel::LANES`]-aligned
+//!   stripes.  Output is bit-identical to sequential for every pass ×
+//!   method × depth × border (`rust/tests/parallel_banding.rs`).
+//! * Cost model: compute scales ~1/P, the memory/bandwidth term does
+//!   not ([`costmodel::CostModel::parallel_breakdown`]), so modeled
+//!   speedup saturates at the memory-bandwidth ceiling; the scaling
+//!   sweep (`bench scaling`, `benches/scaling.rs`) emits
+//!   `BENCH_scaling.json` and CI pins its saturation point (±10%)
+//!   against `rust/benches/baselines/`.
 //!
 //! ## Pixel-depth dispatch rules
 //!
@@ -72,4 +96,4 @@ pub mod util;
 pub mod transpose;
 
 pub use image::Image;
-pub use morphology::{Border, MorphOp, MorphPixel, PassMethod, VerticalStrategy};
+pub use morphology::{Border, MorphOp, MorphPixel, Parallelism, PassMethod, VerticalStrategy};

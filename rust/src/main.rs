@@ -23,14 +23,17 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use neon_morph::bench_harness::{self, e2e, fig3, fig4, table1};
+use neon_morph::bench_harness::{self, e2e, fig3, fig4, gate, scaling, table1};
 use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use neon_morph::costmodel::CostModel;
 use neon_morph::image::{read_pgm, synth, write_pgm};
-use neon_morph::morphology::{self, hybrid, Border, HybridThresholds, MorphConfig,
-                             PassMethod, VerticalStrategy};
+use neon_morph::morphology::{
+    self, hybrid, Border, HybridThresholds, MorphConfig, Parallelism, PassMethod,
+    VerticalStrategy,
+};
 use neon_morph::neon::Native;
 use neon_morph::runtime::{Manifest, XlaRuntime};
+use neon_morph::util::json;
 
 /// Minimal `--key value` / `--flag` argument map.
 struct Args {
@@ -88,8 +91,13 @@ COMMANDS:
     filter     --input in.pgm --output out.pgm [--op erode] [--wx 5] [--wy 5]
                [--backend auto|native|xla] [--method hybrid|linear|vhgw]
                [--vertical direct|transpose] [--border identity|replicate]
-               [--no-simd] [--artifacts DIR]
-    bench      <table1|fig3|fig3u16|fig4|e2e|all> [--quick] [--tsv] [--iters N]
+               [--no-simd] [--parallel auto|off|N] [--artifacts DIR]
+    bench      <table1|fig3|fig3u16|fig4|e2e|scaling|all> [--quick] [--tsv] [--iters N]
+               scaling: [--max-workers 16] [--host]
+    bench      smoke --out DIR [--update-baselines] [--baselines DIR]
+               deterministic cost-model sweeps -> BENCH_fig3.json + BENCH_scaling.json
+    bench      gate [--out DIR] [--baselines DIR]
+               fail if headline ratios drift >10% from the committed baselines
     serve      [--requests 256] [--workers 4] [--window 7]
                [--backend native|xla|auto] [--artifacts DIR]
     calibrate  [--max-window 121]
@@ -143,12 +151,21 @@ fn parse_morph_config(args: &Args) -> Result<MorphConfig> {
         "replicate" => Border::Replicate,
         b => bail!("unknown --border {b:?}"),
     };
+    let parallelism = match args.get("parallel").unwrap_or("auto") {
+        "auto" => Parallelism::Auto,
+        "off" => Parallelism::Sequential,
+        n => Parallelism::Fixed(
+            n.parse()
+                .with_context(|| format!("--parallel must be auto|off|N, got {n:?}"))?,
+        ),
+    };
     Ok(MorphConfig {
         method,
         vertical,
         simd: !args.flag("no-simd"),
         border,
         thresholds: HybridThresholds::paper(),
+        parallelism,
     })
 }
 
@@ -203,8 +220,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .first()
         .map(String::as_str)
         .unwrap_or("all");
-    if !["table1", "fig3", "fig3u16", "fig4", "e2e", "all"].contains(&which) {
-        bail!("unknown bench {which:?} (want table1|fig3|fig3u16|fig4|e2e|all)");
+    if !["table1", "fig3", "fig3u16", "fig4", "e2e", "scaling", "smoke", "gate", "all"]
+        .contains(&which)
+    {
+        bail!("unknown bench {which:?} (want table1|fig3|fig3u16|fig4|e2e|scaling|smoke|gate|all)");
+    }
+    if which == "smoke" {
+        return cmd_bench_smoke(args);
+    }
+    if which == "gate" {
+        return cmd_bench_gate(args);
     }
     let quick = args.flag("quick");
     let tsv = args.flag("tsv");
@@ -285,6 +310,30 @@ fn cmd_bench(args: &Args) -> Result<()> {
             s.crossover_model, s.crossover_host
         );
     }
+    if which == "scaling" || which == "all" {
+        let max_workers = args.get_usize("max-workers", 16)?;
+        let host_iters = if args.flag("host") { iters } else { 0 };
+        let s = scaling::run(
+            &model,
+            synth::PAPER_HEIGHT,
+            synth::PAPER_WIDTH,
+            scaling::SCALING_WINDOW,
+            max_workers,
+            host_iters,
+        );
+        let t = scaling::render(&s);
+        if tsv {
+            print!("{}", t.to_tsv());
+        } else {
+            print!("{}", t.to_markdown());
+        }
+        println!(
+            "modeled saturation: P={} (speedup {:.2}x, memory-bandwidth ceiling {:.2}x)\n",
+            s.saturation,
+            s.speedup_at(s.saturation),
+            s.ceiling
+        );
+    }
     if which == "e2e" || which == "all" {
         let ws = if quick { vec![7, 15] } else { vec![3, 7, 15, 31, 61] };
         let results = e2e::run(&model, &ws, iters);
@@ -301,6 +350,103 @@ fn cmd_bench(args: &Args) -> Result<()> {
             s.mean_batch
         );
     }
+    Ok(())
+}
+
+/// Default location of the committed perf baselines, relative to the
+/// repository root (where CI invokes the binary).
+const BASELINE_DIR: &str = "rust/benches/baselines";
+
+/// `bench smoke`: run the deterministic cost-model sweeps and write the
+/// machine-readable `BENCH_*.json` reports CI uploads and gates.
+fn cmd_bench_smoke(args: &Args) -> Result<()> {
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("bench_out"));
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let model = CostModel::exynos5422();
+
+    let fig3_sweep = fig3::run(&model, &scaling::SMOKE_WINDOWS, 0);
+    let fig3_report = scaling::fig3_json(&fig3_sweep);
+    let scaling_sweep = scaling::run(
+        &model,
+        synth::PAPER_HEIGHT,
+        synth::PAPER_WIDTH,
+        scaling::SCALING_WINDOW,
+        16,
+        0,
+    );
+    let scaling_report = scaling::to_json(&scaling_sweep);
+
+    for (name, report) in
+        [("BENCH_fig3.json", &fig3_report), ("BENCH_scaling.json", &scaling_report)]
+    {
+        let path = out_dir.join(name);
+        std::fs::write(&path, json::write(report))
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
+    print!(
+        "{}",
+        fig3::render("Figure 3 smoke (model, ns)", &fig3_sweep, "model").to_markdown()
+    );
+    println!();
+    print!("{}", scaling::render(&scaling_sweep).to_markdown());
+
+    if args.flag("update-baselines") {
+        let base_dir = PathBuf::from(args.get("baselines").unwrap_or(BASELINE_DIR));
+        std::fs::create_dir_all(&base_dir)
+            .with_context(|| format!("creating {}", base_dir.display()))?;
+        for (name, report) in
+            [("BENCH_fig3.json", &fig3_report), ("BENCH_scaling.json", &scaling_report)]
+        {
+            let path = base_dir.join(name);
+            std::fs::write(&path, json::write(&gate::headline_subset(report)))
+                .with_context(|| format!("writing {}", path.display()))?;
+            println!("updated baseline {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+/// `bench gate`: compare the measured reports against the committed
+/// baselines; non-zero exit on any >10% headline drift.
+fn cmd_bench_gate(args: &Args) -> Result<()> {
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("bench_out"));
+    let base_dir = PathBuf::from(args.get("baselines").unwrap_or(BASELINE_DIR));
+    let mut total_failures = 0usize;
+    let mut checked = 0usize;
+    for name in ["BENCH_fig3.json", "BENCH_scaling.json"] {
+        let base_path = base_dir.join(name);
+        let meas_path = out_dir.join(name);
+        let base_text = std::fs::read_to_string(&base_path)
+            .with_context(|| format!("reading baseline {}", base_path.display()))?;
+        let meas_text = std::fs::read_to_string(&meas_path).with_context(|| {
+            format!("reading measurement {} (run `bench smoke` first)", meas_path.display())
+        })?;
+        let base = json::parse(&base_text)
+            .map_err(|e| anyhow!("{}: {e}", base_path.display()))?;
+        let meas = json::parse(&meas_text)
+            .map_err(|e| anyhow!("{}: {e}", meas_path.display()))?;
+        let failures = gate::compare(&base, &meas, gate::GATE_TOLERANCE);
+        checked += 1;
+        if failures.is_empty() {
+            println!("PASS {name}");
+        } else {
+            total_failures += failures.len();
+            println!("FAIL {name}:");
+            for f in &failures {
+                println!("  {f}");
+            }
+        }
+    }
+    if total_failures > 0 {
+        bail!(
+            "perf gate failed: {total_failures} headline ratio(s) drifted beyond {:.0}% \
+             (regenerate with `bench smoke --update-baselines` if intentional)",
+            gate::GATE_TOLERANCE * 100.0
+        );
+    }
+    println!("perf gate passed ({checked} reports within {:.0}%)", gate::GATE_TOLERANCE * 100.0);
     Ok(())
 }
 

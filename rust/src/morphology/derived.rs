@@ -70,8 +70,9 @@ pub fn blackhat<P: MorphPixel, B: Backend>(
     pixelwise_sub(&c, src)
 }
 
-/// Saturating pixelwise subtraction `a - b` (clamped at 0).
-fn pixelwise_sub<P: MorphPixel>(a: &Image<P>, b: &Image<P>) -> Image<P> {
+/// Saturating pixelwise subtraction `a - b` (clamped at 0).  Shared
+/// with the band-parallel compositions in [`super::parallel`].
+pub(crate) fn pixelwise_sub<P: MorphPixel>(a: &Image<P>, b: &Image<P>) -> Image<P> {
     assert_eq!(a.height(), b.height());
     assert_eq!(a.width(), b.width());
     Image::from_fn(a.height(), a.width(), |y, x| {

@@ -15,6 +15,13 @@
 //! | cols | transpose ∘ rows-vHGW ∘ transpose | NEON | [`separable`] | §5.2.1 |
 //! | 2-D | naive sliding window | scalar | [`naive`] | §2 definition |
 //! | 2-D | separable composition + hybrid dispatch | both | [`separable`], [`hybrid`] | §5.3 |
+//! | any pass | band-sharded parallel execution (row bands with `w-1` halos, tile-aligned stripes for the sandwich) | — | [`parallel`] | extension |
+//!
+//! Band-sharding is bit-identical to sequential execution and applies
+//! only to native-speed runs ([`parallel::filter_native`]); counted
+//! (Counting-backend) runs always execute sequentially so instruction
+//! mixes stay deterministic.  See [`parallel`] for the halo math and
+//! [`Parallelism`] for the dispatch knob.
 //!
 //! ## Pixel depth dispatch
 //!
@@ -47,6 +54,7 @@ pub mod derived;
 pub mod hybrid;
 pub mod linear;
 pub mod naive;
+pub mod parallel;
 pub mod separable;
 pub mod vhgw;
 
@@ -55,6 +63,7 @@ use crate::neon::{Backend, U16x8, U8x16};
 
 pub use derived::{blackhat, closing, gradient, opening, tophat};
 pub use hybrid::{HybridThresholds, PAPER_WX0, PAPER_WY0};
+pub use parallel::{filter_native, BandPool};
 pub use separable::{dilate, erode, morphology};
 
 /// A pixel depth the morphology stack can filter: scalar + SIMD min/max,
@@ -353,6 +362,24 @@ pub enum Border {
     Replicate,
 }
 
+/// Intra-image band-sharding policy for *native* executions (the
+/// generic, backend-accounted [`separable::morphology`] is always
+/// sequential so counted instruction mixes stay deterministic; banding
+/// applies to [`parallel::filter_native`] and everything routed through
+/// it — `erode`/`dilate`, the `NativeEngine`, the coordinator workers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Parallelism {
+    /// Never shard: one thread per pass.
+    Sequential,
+    /// Always shard into exactly this many bands (1 = sequential).
+    Fixed(usize),
+    /// Cost-model crossover: shard only when the modeled parallel price
+    /// (compute ÷ P, memory unscaled, plus fork overhead) beats the
+    /// sequential price by ≥10%, with the band count the model picks
+    /// (see [`crate::costmodel::CostModel::plan_workers`]).
+    Auto,
+}
+
 /// Full configuration of a separable morphology invocation.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MorphConfig {
@@ -364,6 +391,8 @@ pub struct MorphConfig {
     pub border: Border,
     /// Crossover thresholds used when `method == Hybrid`.
     pub thresholds: HybridThresholds,
+    /// Intra-image band-sharding policy (native executions only).
+    pub parallelism: Parallelism,
 }
 
 impl Default for MorphConfig {
@@ -381,6 +410,7 @@ impl Default for MorphConfig {
             simd: true,
             border: Border::Identity,
             thresholds: HybridThresholds::paper(),
+            parallelism: Parallelism::Auto,
         }
     }
 }
@@ -490,5 +520,8 @@ mod tests {
         assert!(c.simd);
         assert_eq!(c.thresholds.wy0, PAPER_WY0);
         assert_eq!(c.thresholds.wx0, PAPER_WX0);
+        // banding is opportunistic by default: the cost-model crossover
+        // keeps small images sequential, results stay bit-identical
+        assert_eq!(c.parallelism, Parallelism::Auto);
     }
 }

@@ -1,0 +1,798 @@
+//! Intra-image band-sharded parallel execution of the separable passes.
+//!
+//! The paper's 1-D passes are embarrassingly parallel *within* one
+//! image: every output row of the rows-window pass depends only on the
+//! `window` input rows around it, and every row of the direct
+//! cols-window pass depends only on itself.  This module splits a pass
+//! into contiguous **row bands** and executes the bands concurrently on
+//! a shared worker pool, producing output that is **bit-identical** to
+//! the sequential pass (asserted exhaustively in
+//! `rust/tests/parallel_banding.rs`).
+//!
+//! ## Band / halo geometry
+//!
+//! For a rows-window pass with window `w` (wing `r = w/2`), output rows
+//! `[b0, b1)` of a band read input rows `[b0 - r, b1 + r) ∩ [0, h)` —
+//! the band plus a `w - 1`-row **halo** (`r` rows on each side, clamped
+//! at the image edges).  Each band job copies its haloed input slab,
+//! runs the *unchanged* sequential pass on it, and writes the core rows
+//! into its disjoint slice of the output.  Bit-identity follows from
+//! the reduction structure: every output pixel is the exact min/max
+//! over `window ∩ image` with identity padding, and the haloed slab
+//! contains precisely that window for every core row — the slab edge
+//! coincides with the image edge exactly where the original pass would
+//! have clamped (proved case-by-case in the module tests; mirrored in
+//! `python/tests/test_band_geometry.py`).
+//!
+//! The direct cols-window pass (window across columns) is banded with a
+//! **zero halo** — rows are independent.  The §5.2.1 transpose sandwich
+//! keeps its two whole-image transposes sequential (they are
+//! memory-bound; zero-copy banded transpose is a ROADMAP follow-on) and
+//! bands the middle rows pass over the *transposed* image in
+//! tile-aligned stripes ([`MorphPixel::LANES`]-row multiples, i.e.
+//! 16-column stripes of the original u8 image, 8-column stripes at
+//! u16), so no §4 transpose tile ever straddles a band boundary.
+//!
+//! ## Execution model
+//!
+//! Bands run on a process-wide [`BandPool`] of `std::thread` workers
+//! ([`BandPool::global`]).  A banded pass submits its band jobs with
+//! [`BandPool::scope`] — a fork-join primitive that runs the first job
+//! on the calling thread, queues the rest, and blocks until every job
+//! has completed (so jobs may borrow the caller's stack).  Band jobs
+//! never spawn nested scopes, so a scope can never deadlock on pool
+//! capacity; coordinator workers are separate threads that *share* the
+//! band pool, so intra-image bands and cross-request concurrency
+//! contend for the same cores instead of oversubscribing them.
+//!
+//! ## Dispatch
+//!
+//! Banding pays a fork cost (pool wake-up + per-band staging), so
+//! [`filter_native`] consults the cost model before sharding: the
+//! sequential pass is priced with
+//! [`crate::costmodel::CostModel::estimate_separable_cost`] and
+//! [`crate::costmodel::CostModel::plan_workers`] picks the band count
+//! whose modeled parallel price (compute ÷ P, memory *not* scaled — the
+//! bands share one memory bus) beats sequential by ≥10%; small images
+//! therefore stay sequential.  [`super::Parallelism`] in
+//! [`super::MorphConfig`] overrides the policy (`Sequential`, `Fixed`,
+//! `Auto`).
+
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use super::hybrid::resolve_method;
+use super::{
+    separable, HybridThresholds, MorphConfig, MorphOp, MorphPixel, Parallelism, PassMethod,
+    VerticalStrategy,
+};
+use crate::costmodel::CostModel;
+use crate::image::Image;
+use crate::neon::Native;
+
+// ---------------------------------------------------------------------------
+// band geometry
+// ---------------------------------------------------------------------------
+
+/// Split `len` items into at most `parts` contiguous, non-empty,
+/// near-even ranges covering `[0, len)`.
+pub fn split_bands(len: usize, parts: usize) -> Vec<Range<usize>> {
+    split_bands_aligned(len, parts, 1)
+}
+
+/// Like [`split_bands`], but every interior band boundary is rounded
+/// down to a multiple of `align` (tile-aligned stripes: no §4 transpose
+/// tile straddles a boundary when `align == LANES`).
+pub fn split_bands_aligned(len: usize, parts: usize, align: usize) -> Vec<Range<usize>> {
+    let align = align.max(1);
+    let parts = parts.max(1);
+    if len == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(parts.min(len));
+    let mut start = 0usize;
+    for i in 1..=parts {
+        let mut end = i * len / parts;
+        if i != parts {
+            end = end / align * align;
+        } else {
+            end = len;
+        }
+        if end > start {
+            out.push(start..end);
+            start = end;
+        }
+    }
+    out
+}
+
+/// Input range a band needs: the band plus a `wing`-sized halo on each
+/// side, clamped to `[0, len)`.
+pub fn halo(band: &Range<usize>, wing: usize, len: usize) -> Range<usize> {
+    band.start.saturating_sub(wing)..(band.end + wing).min(len)
+}
+
+// ---------------------------------------------------------------------------
+// the shared worker pool
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send>;
+
+/// Process-wide pool of band workers (fork-join via [`BandPool::scope`]).
+pub struct BandPool {
+    tx: Sender<Job>,
+    threads: usize,
+}
+
+/// Per-scope completion state: outstanding job count + panic flag.
+struct ScopeSync {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl ScopeSync {
+    fn new(n: usize) -> Self {
+        ScopeSync {
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn count_down(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        while *left > 0 {
+            left = self.done.wait(left).unwrap();
+        }
+    }
+}
+
+/// Counts a job as finished even if it panics (the scope must never
+/// block forever on a job that unwound).
+struct CompletionGuard(Arc<ScopeSync>);
+
+impl Drop for CompletionGuard {
+    fn drop(&mut self) {
+        self.0.count_down();
+    }
+}
+
+/// Pool size used by [`BandPool::global`].
+pub fn default_pool_threads() -> usize {
+    std::thread::available_parallelism().map_or(2, |n| n.get()).clamp(1, 16)
+}
+
+impl BandPool {
+    /// A new pool with `threads` workers.  Workers live until the pool
+    /// (its job sender) is dropped.
+    pub fn new(threads: usize) -> BandPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..threads {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("morph-band-{i}"))
+                .spawn(move || loop {
+                    // hold the lock only while receiving, never while
+                    // running a job
+                    let job = match rx.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => return,
+                    };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => return, // pool dropped
+                    }
+                })
+                .expect("spawning band worker");
+        }
+        BandPool { tx, threads }
+    }
+
+    /// Worker count (an upper bound on useful band counts).
+    pub fn size(&self) -> usize {
+        self.threads
+    }
+
+    /// The process-wide shared pool, created on first use.
+    pub fn global() -> &'static BandPool {
+        static POOL: OnceLock<BandPool> = OnceLock::new();
+        POOL.get_or_init(|| BandPool::new(default_pool_threads()))
+    }
+
+    /// Fork-join: run every job, returning only when all have finished.
+    ///
+    /// The first job runs on the calling thread (the caller is a worker
+    /// too); the rest are queued on the pool.  Jobs may borrow from the
+    /// caller's stack — the scope blocks on a completion latch before
+    /// returning, even when a job panics (panics are re-raised here).
+    pub fn scope<'s>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        let sync = Arc::new(ScopeSync::new(n - 1));
+        let mut iter = jobs.into_iter();
+        let first = iter.next().unwrap();
+        for job in iter {
+            // SAFETY: the job may borrow data living on the caller's
+            // stack ('s).  `scope` does not return — on any path,
+            // including panics — until `sync.wait()` has observed every
+            // queued job's CompletionGuard drop, so all borrows in
+            // `job` strictly outlive its execution.  Erasing 's to
+            // 'static is therefore sound.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 's>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            let sync = Arc::clone(&sync);
+            let wrapped: Job = Box::new(move || {
+                let guard = CompletionGuard(sync);
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    guard.0.panicked.store(true, Ordering::SeqCst);
+                }
+            });
+            if let Err(send_err) = self.tx.send(wrapped) {
+                // pool shut down (impossible for the global pool):
+                // degrade to inline execution, keeping the latch exact
+                (send_err.0)();
+            }
+        }
+        let first_result = catch_unwind(AssertUnwindSafe(first));
+        sync.wait();
+        if sync.panicked.load(Ordering::SeqCst) {
+            panic!("a band job panicked on the worker pool");
+        }
+        if let Err(payload) = first_result {
+            resume_unwind(payload);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// banded passes
+// ---------------------------------------------------------------------------
+
+/// Owned copy of rows `r` of `src` (compact stride).
+fn copy_row_range<P: MorphPixel>(src: &Image<P>, r: Range<usize>) -> Image<P> {
+    let w = src.width();
+    let mut data = Vec::with_capacity(r.len() * w);
+    for y in r.clone() {
+        data.extend_from_slice(src.row(y));
+    }
+    Image::from_vec(r.len(), w, data)
+}
+
+/// Carve `dst`'s storage into per-band disjoint row slabs.
+fn carve_rows<'d, P: MorphPixel>(
+    dst: &'d mut Image<P>,
+    plan: &[Range<usize>],
+) -> Vec<&'d mut [P]> {
+    let w = dst.width();
+    debug_assert_eq!(dst.stride(), w, "banded dst must be compact");
+    let mut chunks = Vec::with_capacity(plan.len());
+    let mut rest: &mut [P] = dst.raw_mut();
+    for band in plan {
+        let (head, tail) = rest.split_at_mut(band.len() * w);
+        chunks.push(head);
+        rest = tail;
+    }
+    chunks
+}
+
+/// Rows-window pass executed as `bands` haloed row bands on `pool`.
+/// Bit-identical to [`separable::pass_rows`] with the same arguments.
+pub fn pass_rows_banded<P: MorphPixel>(
+    pool: &BandPool,
+    src: &Image<P>,
+    window: usize,
+    op: MorphOp,
+    method: PassMethod,
+    simd: bool,
+    thresholds: HybridThresholds,
+    bands: usize,
+) -> Image<P> {
+    pass_rows_banded_aligned(pool, src, window, op, method, simd, thresholds, bands, 1)
+}
+
+/// [`pass_rows_banded`] with band boundaries aligned to `align`-row
+/// multiples (tile-aligned stripes for the transpose sandwich).
+fn pass_rows_banded_aligned<P: MorphPixel>(
+    pool: &BandPool,
+    src: &Image<P>,
+    window: usize,
+    op: MorphOp,
+    method: PassMethod,
+    simd: bool,
+    thresholds: HybridThresholds,
+    bands: usize,
+    align: usize,
+) -> Image<P> {
+    let (h, w) = (src.height(), src.width());
+    if window == 1 || h == 0 || w == 0 {
+        return src.clone();
+    }
+    let plan = split_bands_aligned(h, bands, align);
+    if plan.len() <= 1 {
+        return separable::pass_rows(&mut Native, src, window, op, method, simd, thresholds);
+    }
+    let wing = window / 2;
+    let mut dst = Image::zeros(h, w);
+    let chunks = carve_rows(&mut dst, &plan);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
+    for (band, chunk) in plan.iter().cloned().zip(chunks) {
+        jobs.push(Box::new(move || {
+            let input_range = halo(&band, wing, h);
+            let skip = band.start - input_range.start;
+            let slab = copy_row_range(src, input_range);
+            let out =
+                separable::pass_rows(&mut Native, &slab, window, op, method, simd, thresholds);
+            for (i, row) in chunk.chunks_mut(w).enumerate() {
+                row.copy_from_slice(out.row(skip + i));
+            }
+        }));
+    }
+    pool.scope(jobs);
+    dst
+}
+
+/// Cols-window pass executed as row bands on `pool`.  Bit-identical to
+/// [`separable::pass_cols`] with the same arguments.
+///
+/// * direct forms (scalar, and SIMD-linear §5.2.2) shard rows with a
+///   zero halo — the window runs across columns, so rows are
+///   independent;
+/// * the §5.2.1 transpose sandwich transposes sequentially and bands
+///   the middle rows pass over the transposed image in
+///   [`MorphPixel::LANES`]-aligned stripes (16-/8-column stripes of the
+///   original image).
+pub fn pass_cols_banded<P: MorphPixel>(
+    pool: &BandPool,
+    src: &Image<P>,
+    window: usize,
+    op: MorphOp,
+    method: PassMethod,
+    simd: bool,
+    vertical: VerticalStrategy,
+    thresholds: HybridThresholds,
+    bands: usize,
+) -> Image<P> {
+    let (h, w) = (src.height(), src.width());
+    if window == 1 || h == 0 || w == 0 {
+        return src.clone();
+    }
+    let m = resolve_method(method, window, thresholds.wx0);
+    if separable::takes_sandwich(m, simd, vertical) {
+        // §5.2.1: transpose ∘ banded rows pass ∘ transpose, stripes
+        // aligned to the §4 tile height of this depth
+        let t = P::transpose_image(&mut Native, src);
+        let mid = pass_rows_banded_aligned(
+            pool,
+            &t,
+            window,
+            op,
+            m,
+            true,
+            thresholds,
+            bands,
+            P::LANES,
+        );
+        return P::transpose_image(&mut Native, &mid);
+    }
+    // direct forms: rows are independent, zero halo
+    let plan = split_bands(h, bands);
+    if plan.len() <= 1 {
+        return separable::pass_cols(&mut Native, src, window, op, m, simd, vertical, thresholds);
+    }
+    let mut dst = Image::zeros(h, w);
+    let chunks = carve_rows(&mut dst, &plan);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
+    for (band, chunk) in plan.iter().cloned().zip(chunks) {
+        jobs.push(Box::new(move || {
+            let slab = copy_row_range(src, band);
+            let out = separable::pass_cols(
+                &mut Native,
+                &slab,
+                window,
+                op,
+                m,
+                simd,
+                vertical,
+                thresholds,
+            );
+            for (i, row) in chunk.chunks_mut(w).enumerate() {
+                row.copy_from_slice(out.row(i));
+            }
+        }));
+    }
+    pool.scope(jobs);
+    dst
+}
+
+/// Full separable 2-D morphology with both passes band-sharded into
+/// `bands` bands.  Bit-identical to [`separable::morphology`].
+pub fn morphology_banded<P: MorphPixel>(
+    pool: &BandPool,
+    src: &Image<P>,
+    op: MorphOp,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+    bands: usize,
+) -> Image<P> {
+    let wing_x = super::wing_of(w_x, "w_x");
+    let wing_y = super::wing_of(w_y, "w_y");
+    if src.height() == 0 || src.width() == 0 {
+        return src.clone();
+    }
+    if cfg.border == super::Border::Replicate {
+        let padded = super::replicate_pad(src, wing_x, wing_y);
+        let mut inner = *cfg;
+        inner.border = super::Border::Identity;
+        let out = morphology_banded(pool, &padded, op, w_x, w_y, &inner, bands);
+        return super::crop(&out, wing_y, wing_x, src.height(), src.width());
+    }
+    let after_rows = if w_y > 1 {
+        pass_rows_banded(
+            pool,
+            src,
+            w_y,
+            op,
+            cfg.method,
+            cfg.simd,
+            cfg.thresholds,
+            bands,
+        )
+    } else {
+        src.clone()
+    };
+    if w_x > 1 {
+        pass_cols_banded(
+            pool,
+            &after_rows,
+            w_x,
+            op,
+            cfg.method,
+            cfg.simd,
+            cfg.vertical,
+            cfg.thresholds,
+            bands,
+        )
+    } else {
+        after_rows
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatch: the cost-model crossover
+// ---------------------------------------------------------------------------
+
+/// Band count a native execution of this shape should use, per
+/// [`MorphConfig::parallelism`].  `Auto` prices the pass with the cost
+/// model and picks the band count whose modeled parallel price beats
+/// sequential by ≥10% (1 = stay sequential).
+pub fn effective_bands<P: MorphPixel>(
+    h: usize,
+    w: usize,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> usize {
+    match cfg.parallelism {
+        Parallelism::Sequential => 1,
+        Parallelism::Fixed(n) => n.max(1),
+        Parallelism::Auto => {
+            let pool = BandPool::global().size();
+            if pool <= 1 {
+                return 1;
+            }
+            let model = CostModel::exynos5422();
+            let (compute_ns, memory_ns) = model.estimate_separable_cost(
+                h,
+                w,
+                w_x,
+                w_y,
+                P::LANES,
+                std::mem::size_of::<P>(),
+                cfg.simd,
+                cfg.method,
+                cfg.vertical,
+                &cfg.thresholds,
+            );
+            model.plan_workers(compute_ns, memory_ns, pool)
+        }
+    }
+}
+
+/// Native-speed separable morphology with automatic band-sharding —
+/// the crate's production entry point ([`super::erode`]/[`super::dilate`]
+/// and the coordinator's `NativeEngine` route through here).  Output is
+/// bit-identical to `separable::morphology(&mut Native, ..)` for every
+/// configuration.
+pub fn filter_native<P: MorphPixel>(
+    src: &Image<P>,
+    op: MorphOp,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<P> {
+    let bands = effective_bands::<P>(src.height(), src.width(), w_x, w_y, cfg);
+    if bands <= 1 {
+        return separable::morphology(&mut Native, src, op, w_x, w_y, cfg);
+    }
+    morphology_banded(BandPool::global(), src, op, w_x, w_y, cfg, bands)
+}
+
+// -- parallel-aware derived operations (compositions of filter_native,
+//    matching `super::derived` exactly) ------------------------------------
+
+/// Banded opening: dilation of the erosion.
+pub fn opening_native<P: MorphPixel>(
+    src: &Image<P>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<P> {
+    let e = filter_native(src, MorphOp::Erode, w_x, w_y, cfg);
+    filter_native(&e, MorphOp::Dilate, w_x, w_y, cfg)
+}
+
+/// Banded closing: erosion of the dilation.
+pub fn closing_native<P: MorphPixel>(
+    src: &Image<P>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<P> {
+    let d = filter_native(src, MorphOp::Dilate, w_x, w_y, cfg);
+    filter_native(&d, MorphOp::Erode, w_x, w_y, cfg)
+}
+
+/// Banded morphological gradient: dilation − erosion.
+pub fn gradient_native<P: MorphPixel>(
+    src: &Image<P>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<P> {
+    let d = filter_native(src, MorphOp::Dilate, w_x, w_y, cfg);
+    let e = filter_native(src, MorphOp::Erode, w_x, w_y, cfg);
+    super::derived::pixelwise_sub(&d, &e)
+}
+
+/// Banded white top-hat: src − opening.
+pub fn tophat_native<P: MorphPixel>(
+    src: &Image<P>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<P> {
+    let o = opening_native(src, w_x, w_y, cfg);
+    super::derived::pixelwise_sub(src, &o)
+}
+
+/// Banded black top-hat: closing − src.
+pub fn blackhat_native<P: MorphPixel>(
+    src: &Image<P>,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<P> {
+    let c = closing_native(src, w_x, w_y, cfg);
+    super::derived::pixelwise_sub(&c, src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+    use crate::morphology::Border;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn split_bands_cover_and_are_disjoint() {
+        for &(len, parts) in &[(10, 3), (1, 4), (7, 7), (7, 20), (600, 8), (16, 1)] {
+            let plan = split_bands(len, parts);
+            assert!(plan.len() <= parts.max(1));
+            assert_eq!(plan.first().unwrap().start, 0);
+            assert_eq!(plan.last().unwrap().end, len);
+            for w in plan.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "bands must tile contiguously");
+            }
+            for b in &plan {
+                assert!(!b.is_empty());
+            }
+        }
+        assert!(split_bands(0, 4).is_empty());
+    }
+
+    #[test]
+    fn aligned_bands_respect_alignment() {
+        let plan = split_bands_aligned(100, 3, 16);
+        assert_eq!(plan.last().unwrap().end, 100);
+        for b in &plan[..plan.len() - 1] {
+            assert_eq!(b.end % 16, 0, "interior boundary must be tile-aligned");
+        }
+        // alignment larger than the split collapses to fewer bands
+        let tiny = split_bands_aligned(10, 4, 16);
+        assert_eq!(tiny.len(), 1);
+        assert_eq!(tiny[0], 0..10);
+    }
+
+    #[test]
+    fn halo_clamps_at_edges() {
+        assert_eq!(halo(&(0..10), 3, 100), 0..13);
+        assert_eq!(halo(&(50..60), 3, 100), 47..63);
+        assert_eq!(halo(&(90..100), 3, 100), 87..100);
+        assert_eq!(halo(&(0..5), 7, 5), 0..5);
+    }
+
+    #[test]
+    fn scope_runs_every_job() {
+        let pool = BandPool::new(3);
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..17)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    fn scope_jobs_may_borrow_and_mutate_disjoint_slices() {
+        let pool = BandPool::new(2);
+        let mut data = vec![0u32; 64];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, chunk) in data.chunks_mut(16).enumerate() {
+                jobs.push(Box::new(move || {
+                    for v in chunk.iter_mut() {
+                        *v = i as u32 + 1;
+                    }
+                }));
+            }
+            pool.scope(jobs);
+        }
+        assert_eq!(data[0], 1);
+        assert_eq!(data[63], 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "band job panicked")]
+    fn scope_propagates_worker_panics() {
+        let pool = BandPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("boom")),
+            Box::new(|| {}),
+        ];
+        pool.scope(jobs);
+    }
+
+    #[test]
+    fn banded_rows_match_sequential_bitwise() {
+        let pool = BandPool::new(4);
+        let img = synth::noise(37, 41, 0xBAD5EED);
+        let th = HybridThresholds::paper();
+        for &window in &[3, 9, 15] {
+            for &bands in &[1, 2, 3, 7, 37, 50] {
+                for op in [MorphOp::Erode, MorphOp::Dilate] {
+                    let want = separable::pass_rows(
+                        &mut Native,
+                        &img,
+                        window,
+                        op,
+                        PassMethod::Linear,
+                        true,
+                        th,
+                    );
+                    let got = pass_rows_banded(
+                        &pool,
+                        &img,
+                        window,
+                        op,
+                        PassMethod::Linear,
+                        true,
+                        th,
+                        bands,
+                    );
+                    assert!(
+                        got.same_pixels(&want),
+                        "rows w={window} bands={bands} {op:?}: {:?}",
+                        got.first_diff(&want)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn banded_morphology_matches_sequential_bitwise() {
+        let pool = BandPool::new(3);
+        let img = synth::noise(29, 33, 7);
+        for method in [PassMethod::Linear, PassMethod::Vhgw, PassMethod::Hybrid] {
+            for vertical in [VerticalStrategy::Direct, VerticalStrategy::Transpose] {
+                let cfg = MorphConfig {
+                    method,
+                    vertical,
+                    simd: true,
+                    border: Border::Identity,
+                    thresholds: HybridThresholds::paper(),
+                    parallelism: Parallelism::Sequential,
+                };
+                let want = separable::morphology(&mut Native, &img, MorphOp::Erode, 5, 7, &cfg);
+                let got = morphology_banded(&pool, &img, MorphOp::Erode, 5, 7, &cfg, 4);
+                assert!(
+                    got.same_pixels(&want),
+                    "{method:?}/{vertical:?}: {:?}",
+                    got.first_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_parallelism_routes_through_bands() {
+        let img = synth::noise(40, 48, 3);
+        let cfg = MorphConfig {
+            parallelism: Parallelism::Fixed(3),
+            ..MorphConfig::default()
+        };
+        let got = filter_native(&img, MorphOp::Erode, 5, 5, &cfg);
+        let seq = MorphConfig {
+            parallelism: Parallelism::Sequential,
+            ..cfg
+        };
+        let want = filter_native(&img, MorphOp::Erode, 5, 5, &seq);
+        assert!(got.same_pixels(&want));
+    }
+
+    #[test]
+    fn auto_stays_sequential_on_tiny_images() {
+        let cfg = MorphConfig::default();
+        assert_eq!(effective_bands::<u8>(16, 16, 3, 3, &cfg), 1);
+    }
+
+    #[test]
+    fn derived_native_match_sequential_derived() {
+        let img = synth::noise(26, 31, 21);
+        let cfg = MorphConfig {
+            parallelism: Parallelism::Fixed(3),
+            ..MorphConfig::default()
+        };
+        let seq = MorphConfig {
+            parallelism: Parallelism::Sequential,
+            ..cfg
+        };
+        let b = &mut Native;
+        assert!(opening_native(&img, 5, 3, &cfg)
+            .same_pixels(&super::super::opening(b, &img, 5, 3, &seq)));
+        assert!(closing_native(&img, 3, 5, &cfg)
+            .same_pixels(&super::super::closing(b, &img, 3, 5, &seq)));
+        assert!(gradient_native(&img, 3, 3, &cfg)
+            .same_pixels(&super::super::gradient(b, &img, 3, 3, &seq)));
+        assert!(tophat_native(&img, 5, 5, &cfg)
+            .same_pixels(&super::super::tophat(b, &img, 5, 5, &seq)));
+        assert!(blackhat_native(&img, 5, 5, &cfg)
+            .same_pixels(&super::super::blackhat(b, &img, 5, 5, &seq)));
+    }
+}

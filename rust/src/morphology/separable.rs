@@ -59,18 +59,29 @@ pub fn pass_cols<P: MorphPixel, B: Backend>(
             PassMethod::Hybrid => unreachable!(),
         };
     }
-    match (m, vertical) {
-        (PassMethod::Linear, VerticalStrategy::Direct) => {
-            linear::cols_simd_linear(b, src, window, op)
+    match m {
+        PassMethod::Hybrid => unreachable!("resolve_method returns concrete"),
+        m if takes_sandwich(m, true, vertical) => {
+            transpose_sandwich(b, src, window, op, m, thresholds)
         }
-        (PassMethod::Linear, VerticalStrategy::Transpose) => {
-            transpose_sandwich(b, src, window, op, PassMethod::Linear, thresholds)
-        }
-        (PassMethod::Vhgw, _) => {
-            transpose_sandwich(b, src, window, op, PassMethod::Vhgw, thresholds)
-        }
-        (PassMethod::Hybrid, _) => unreachable!(),
+        _ => linear::cols_simd_linear(b, src, window, op),
     }
+}
+
+/// Whether a *resolved* cols-window method executes as the §5.2.1
+/// transpose sandwich: SIMD vHGW always (it has no direct SIMD form in
+/// the paper), SIMD linear only under [`VerticalStrategy::Transpose`].
+/// Single source of the strategy predicate — shared with the banded
+/// path (`super::parallel`) and the cost-model dispatch estimator.
+pub(crate) fn takes_sandwich(
+    resolved: PassMethod,
+    simd: bool,
+    vertical: VerticalStrategy,
+) -> bool {
+    simd && matches!(
+        (resolved, vertical),
+        (PassMethod::Vhgw, _) | (PassMethod::Linear, VerticalStrategy::Transpose)
+    )
 }
 
 /// §5.2.1: transpose → SIMD rows pass → transpose back, with the §4 NEON
@@ -135,29 +146,17 @@ pub fn morphology<P: MorphPixel, B: Backend>(
 }
 
 /// Erosion with the paper's final (§5.3) configuration, native speed,
-/// at either pixel depth.
+/// at either pixel depth.  Large images are band-sharded across the
+/// shared worker pool when the cost model predicts a win (bit-identical
+/// output; see [`super::parallel`]).
 pub fn erode<P: MorphPixel>(src: &Image<P>, w_x: usize, w_y: usize) -> Image<P> {
-    morphology(
-        &mut crate::neon::Native,
-        src,
-        MorphOp::Erode,
-        w_x,
-        w_y,
-        &MorphConfig::default(),
-    )
+    super::parallel::filter_native(src, MorphOp::Erode, w_x, w_y, &MorphConfig::default())
 }
 
 /// Dilation with the paper's final (§5.3) configuration, native speed,
-/// at either pixel depth.
+/// at either pixel depth.  Band-sharded like [`erode`].
 pub fn dilate<P: MorphPixel>(src: &Image<P>, w_x: usize, w_y: usize) -> Image<P> {
-    morphology(
-        &mut crate::neon::Native,
-        src,
-        MorphOp::Dilate,
-        w_x,
-        w_y,
-        &MorphConfig::default(),
-    )
+    super::parallel::filter_native(src, MorphOp::Dilate, w_x, w_y, &MorphConfig::default())
 }
 
 #[cfg(test)]
@@ -178,6 +177,7 @@ mod tests {
                         simd,
                         border: Border::Identity,
                         thresholds: super::super::HybridThresholds::paper(),
+                        parallelism: super::super::Parallelism::Sequential,
                     });
                 }
             }

@@ -118,43 +118,100 @@ pub fn vdupq_n_u8(v: u8) -> U8x16 {
 // ---------------------------------------------------------------------------
 
 /// `VMIN.U8 q, q, q` — lane-wise minimum of 16 u8 pairs.
+///
+/// On real aarch64 silicon this (and the other min/max semantics below)
+/// lowers to the actual NEON intrinsic; everywhere else a scalar lane
+/// loop carries the identical architectural semantics (the two paths
+/// can never diverge — both are the lane-wise unsigned min).  The
+/// aarch64 path is compile-checked in CI with a cross `cargo check
+/// --target aarch64-unknown-linux-gnu` so it cannot silently rot on
+/// x86 runners.
 #[inline(always)]
 pub fn vminq_u8(a: U8x16, b: U8x16) -> U8x16 {
-    let mut out = [0u8; 16];
-    for i in 0..16 {
-        out[i] = a.0[i].min(b.0[i]);
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: NEON (asimd) is a mandatory feature of aarch64; the
+    // pointers cover exactly 16 lanes of owned array storage.
+    unsafe {
+        use core::arch::aarch64 as neon;
+        let r = neon::vminq_u8(neon::vld1q_u8(a.0.as_ptr()), neon::vld1q_u8(b.0.as_ptr()));
+        let mut out = [0u8; 16];
+        neon::vst1q_u8(out.as_mut_ptr(), r);
+        U8x16(out)
     }
-    U8x16(out)
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        let mut out = [0u8; 16];
+        for i in 0..16 {
+            out[i] = a.0[i].min(b.0[i]);
+        }
+        U8x16(out)
+    }
 }
 
 /// `VMAX.U8 q, q, q` — lane-wise maximum of 16 u8 pairs.
 #[inline(always)]
 pub fn vmaxq_u8(a: U8x16, b: U8x16) -> U8x16 {
-    let mut out = [0u8; 16];
-    for i in 0..16 {
-        out[i] = a.0[i].max(b.0[i]);
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: see `vminq_u8`.
+    unsafe {
+        use core::arch::aarch64 as neon;
+        let r = neon::vmaxq_u8(neon::vld1q_u8(a.0.as_ptr()), neon::vld1q_u8(b.0.as_ptr()));
+        let mut out = [0u8; 16];
+        neon::vst1q_u8(out.as_mut_ptr(), r);
+        U8x16(out)
     }
-    U8x16(out)
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        let mut out = [0u8; 16];
+        for i in 0..16 {
+            out[i] = a.0[i].max(b.0[i]);
+        }
+        U8x16(out)
+    }
 }
 
 /// `VMIN.U16` — lane-wise minimum of 8 u16 pairs.
 #[inline(always)]
 pub fn vminq_u16(a: U16x8, b: U16x8) -> U16x8 {
-    let mut out = [0u16; 8];
-    for i in 0..8 {
-        out[i] = a.0[i].min(b.0[i]);
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: see `vminq_u8`.
+    unsafe {
+        use core::arch::aarch64 as neon;
+        let r = neon::vminq_u16(neon::vld1q_u16(a.0.as_ptr()), neon::vld1q_u16(b.0.as_ptr()));
+        let mut out = [0u16; 8];
+        neon::vst1q_u16(out.as_mut_ptr(), r);
+        U16x8(out)
     }
-    U16x8(out)
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        let mut out = [0u16; 8];
+        for i in 0..8 {
+            out[i] = a.0[i].min(b.0[i]);
+        }
+        U16x8(out)
+    }
 }
 
 /// `VMAX.U16` — lane-wise maximum of 8 u16 pairs.
 #[inline(always)]
 pub fn vmaxq_u16(a: U16x8, b: U16x8) -> U16x8 {
-    let mut out = [0u16; 8];
-    for i in 0..8 {
-        out[i] = a.0[i].max(b.0[i]);
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: see `vminq_u8`.
+    unsafe {
+        use core::arch::aarch64 as neon;
+        let r = neon::vmaxq_u16(neon::vld1q_u16(a.0.as_ptr()), neon::vld1q_u16(b.0.as_ptr()));
+        let mut out = [0u16; 8];
+        neon::vst1q_u16(out.as_mut_ptr(), r);
+        U16x8(out)
     }
-    U16x8(out)
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        let mut out = [0u16; 8];
+        for i in 0..8 {
+            out[i] = a.0[i].max(b.0[i]);
+        }
+        U16x8(out)
+    }
 }
 
 // ---------------------------------------------------------------------------

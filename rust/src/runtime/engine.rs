@@ -15,7 +15,7 @@ use anyhow::{anyhow, Result};
 
 use super::manifest::ArtifactMeta;
 use crate::image::Image;
-use crate::morphology::{self, MorphConfig, MorphOp, MorphPixel};
+use crate::morphology::{parallel, MorphConfig, MorphOp, MorphPixel};
 use crate::neon::Native;
 
 /// Something that can execute a named morphology/transpose artifact.
@@ -38,7 +38,11 @@ pub trait Engine: Send {
 }
 
 /// Pure-rust engine: executes the op with the crate's native morphology
-/// (paper §5.3 final configuration) at either pixel depth.
+/// (paper §5.3 final configuration) at either pixel depth.  Large
+/// images are band-sharded across the process-wide worker pool when the
+/// cost-model crossover predicts a win (`MorphConfig::parallelism`,
+/// default `Auto`) — output stays bit-identical to sequential
+/// execution, so the router's backend choice never changes results.
 #[derive(Clone, Debug, Default)]
 pub struct NativeEngine {
     cfg: MorphConfig,
@@ -50,6 +54,9 @@ impl NativeEngine {
     }
 
     /// Depth-generic execution body shared by `run` and `run_u16`.
+    /// Routes every morphology op through the band-parallel entry
+    /// points ([`parallel::filter_native`] and the `*_native` derived
+    /// compositions).
     fn run_any<P: MorphPixel>(&self, meta: &ArtifactMeta, img: &Image<P>) -> Result<Image<P>> {
         if img.height() != meta.height || img.width() != meta.width {
             return Err(anyhow!(
@@ -61,17 +68,17 @@ impl NativeEngine {
                 meta.width
             ));
         }
-        let b = &mut Native;
         let (w_x, w_y) = (meta.w_x, meta.w_y);
+        let cfg = &self.cfg;
         let out = match meta.op.as_str() {
-            "erode" => morphology::morphology(b, img, MorphOp::Erode, w_x, w_y, &self.cfg),
-            "dilate" => morphology::morphology(b, img, MorphOp::Dilate, w_x, w_y, &self.cfg),
-            "opening" => morphology::opening(b, img, w_x, w_y, &self.cfg),
-            "closing" => morphology::closing(b, img, w_x, w_y, &self.cfg),
-            "gradient" => morphology::gradient(b, img, w_x, w_y, &self.cfg),
-            "tophat" => morphology::tophat(b, img, w_x, w_y, &self.cfg),
-            "blackhat" => morphology::blackhat(b, img, w_x, w_y, &self.cfg),
-            "transpose" => P::transpose_image(b, img),
+            "erode" => parallel::filter_native(img, MorphOp::Erode, w_x, w_y, cfg),
+            "dilate" => parallel::filter_native(img, MorphOp::Dilate, w_x, w_y, cfg),
+            "opening" => parallel::opening_native(img, w_x, w_y, cfg),
+            "closing" => parallel::closing_native(img, w_x, w_y, cfg),
+            "gradient" => parallel::gradient_native(img, w_x, w_y, cfg),
+            "tophat" => parallel::tophat_native(img, w_x, w_y, cfg),
+            "blackhat" => parallel::blackhat_native(img, w_x, w_y, cfg),
+            "transpose" => P::transpose_image(&mut Native, img),
             other => return Err(anyhow!("unknown op {other:?}")),
         };
         Ok(out)
@@ -164,7 +171,7 @@ mod tests {
         let img = synth::noise(24, 40, 9);
         let mut e = NativeEngine::default();
         let got = e.run(&meta("erode", 24, 40, 5, 7), &img).unwrap();
-        let want = morphology::erode(&img, 5, 7);
+        let want = crate::morphology::erode(&img, 5, 7);
         assert!(got.same_pixels(&want));
     }
 
@@ -175,7 +182,7 @@ mod tests {
         let got = e
             .run_u16(&meta_dtype("erode", 24, 40, 5, 7, "u16"), &img)
             .unwrap();
-        let want = morphology::erode(&img, 5, 7);
+        let want = crate::morphology::erode(&img, 5, 7);
         assert!(got.same_pixels(&want));
     }
 }

@@ -6,8 +6,9 @@
 
 use neon_morph::costmodel::{simd_lanes, CostModel};
 use neon_morph::image::synth;
-use neon_morph::morphology::{linear, separable, vhgw, HybridThresholds, MorphOp, PassMethod,
-                             VerticalStrategy};
+use neon_morph::morphology::{
+    linear, separable, vhgw, HybridThresholds, MorphOp, PassMethod, VerticalStrategy,
+};
 use neon_morph::neon::{Counting, InstrClass};
 
 /// Same dimensions, same window, both depths: the u16 pass must issue

@@ -10,8 +10,10 @@
 
 use neon_morph::image::synth::{self, Rng};
 use neon_morph::image::Image;
-use neon_morph::morphology::{self, linear, naive, vhgw, Border, HybridThresholds, MorphConfig,
-                             MorphOp, PassMethod, VerticalStrategy};
+use neon_morph::morphology::{
+    self, linear, naive, vhgw, Border, HybridThresholds, MorphConfig, MorphOp, Parallelism,
+    PassMethod, VerticalStrategy,
+};
 use neon_morph::neon::Native;
 use neon_morph::util::prop::{dims, forall, odd_window};
 
@@ -37,6 +39,7 @@ fn all_configs() -> Vec<MorphConfig> {
                         simd,
                         border,
                         thresholds: HybridThresholds::paper(),
+                        parallelism: Parallelism::Sequential,
                     });
                 }
             }
@@ -151,13 +154,17 @@ fn prop_u16_stride_padded_inputs_match_compact() {
         let w_x = odd_window(rng, 7);
         let w_y = odd_window(rng, 7);
         for op in ops() {
-            for cfg in [MorphConfig::default(), MorphConfig {
-                method: PassMethod::Vhgw,
-                vertical: VerticalStrategy::Transpose,
-                simd: true,
-                border: Border::Identity,
-                thresholds: HybridThresholds::paper(),
-            }] {
+            for cfg in [
+                MorphConfig::default(),
+                MorphConfig {
+                    method: PassMethod::Vhgw,
+                    vertical: VerticalStrategy::Transpose,
+                    simd: true,
+                    border: Border::Identity,
+                    thresholds: HybridThresholds::paper(),
+                    parallelism: Parallelism::Sequential,
+                },
+            ] {
                 let a = morphology::morphology(&mut Native, &img, op, w_x, w_y, &cfg);
                 let b = morphology::morphology(&mut Native, &padded, op, w_x, w_y, &cfg);
                 assert!(

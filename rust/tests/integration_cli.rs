@@ -84,6 +84,93 @@ fn bench_rejects_unknown_target() {
 }
 
 #[test]
+fn bench_smoke_then_gate_round_trip() {
+    if cfg!(debug_assertions) {
+        eprintln!("SKIP in debug: 800x600 counting sweeps (runs under --release)");
+        return;
+    }
+    let dir = tmpdir();
+    let out_dir = dir.join("bench_out");
+    let base_dir = dir.join("baselines");
+
+    // smoke writes the machine-readable reports and (here) baselines
+    let out = bin()
+        .args(["bench", "smoke", "--update-baselines", "--out"])
+        .arg(&out_dir)
+        .arg("--baselines")
+        .arg(&base_dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(out_dir.join("BENCH_fig3.json").exists());
+    assert!(out_dir.join("BENCH_scaling.json").exists());
+    assert!(base_dir.join("BENCH_scaling.json").exists());
+
+    // the gate passes against the just-written baselines
+    let out = bin()
+        .args(["bench", "gate", "--out"])
+        .arg(&out_dir)
+        .arg("--baselines")
+        .arg(&base_dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("perf gate passed"));
+
+    // seed a 20% drift into one baseline ratio: the gate must fail
+    let path = base_dir.join("BENCH_scaling.json");
+    let doc = std::fs::read_to_string(&path).unwrap();
+    let drifted = doc.replacen("\"speedup_at_2\":", "\"speedup_at_2\":1.2e0,\"was\":", 1);
+    assert_ne!(doc, drifted, "fixture edit must apply");
+    std::fs::write(&path, drifted).unwrap();
+    let out = bin()
+        .args(["bench", "gate", "--out"])
+        .arg(&out_dir)
+        .arg("--baselines")
+        .arg(&base_dir)
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "gate must fail on seeded drift");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("speedup_at_2"));
+}
+
+#[test]
+fn filter_parallel_flag_is_bit_identical() {
+    // own subdir: tests run concurrently and `demo` writes fixed names
+    let dir = tmpdir().join("parallel_flag");
+    std::fs::create_dir_all(&dir).unwrap();
+    let input = dir.join("par_input.pgm");
+    let demo = bin()
+        .args(["demo", "--outdir"])
+        .arg(&dir)
+        .args(["--height", "90", "--width", "130"])
+        .output()
+        .unwrap();
+    assert!(demo.status.success());
+    std::fs::rename(dir.join("demo_input.pgm"), &input).unwrap();
+
+    let run = |parallel: &str, name: &str| {
+        let output = dir.join(name);
+        let out = bin()
+            .args(["filter", "--op", "erode", "--wx", "7", "--wy", "5"])
+            .args(["--backend", "native", "--parallel", parallel])
+            .arg("--input")
+            .arg(&input)
+            .arg("--output")
+            .arg(&output)
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        neon_morph::image::read_pgm(&output).unwrap()
+    };
+    let seq = run("off", "seq.pgm");
+    let banded = run("4", "banded.pgm");
+    let auto = run("auto", "auto.pgm");
+    assert!(banded.same_pixels(&seq), "--parallel 4 must be bit-identical");
+    assert!(auto.same_pixels(&seq), "--parallel auto must be bit-identical");
+}
+
+#[test]
 fn calibrate_small_window_runs() {
     let out = bin().args(["calibrate", "--max-window", "9"]).output().unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));

@@ -157,6 +157,62 @@ fn derived_ops_through_full_xla_path() {
 }
 
 #[test]
+fn batching_stays_fair_when_bands_and_requests_contend_for_the_pool() {
+    use neon_morph::morphology::Parallelism;
+    // Two coordinator workers serve two request keys while every
+    // request band-shards across the shared band pool (Fixed(3) forces
+    // banding even for small images).  Same-key batching must stay
+    // fair: both keys complete fully, nothing is shed, and neither key
+    // starves the other even though bands and requests contend for the
+    // same cores.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        queue_capacity: 256,
+        max_batch: 4,
+        backend: BackendChoice::NativeOnly,
+        artifact_dir: None,
+        morph: MorphConfig {
+            parallelism: Parallelism::Fixed(3),
+            ..MorphConfig::default()
+        },
+        precompile: false,
+    })
+    .unwrap();
+    let img = Arc::new(synth::noise(120, 160, 0xFA17));
+    let mut tickets = Vec::new();
+    for i in 0..32 {
+        let op = if i % 2 == 0 { "erode" } else { "dilate" };
+        tickets.push((op, coord.submit(op, 7, 7, img.clone()).unwrap()));
+    }
+    let want_e = morphology::erode(&img, 7, 7);
+    let want_d = morphology::dilate(&img, 7, 7);
+    let (mut done_e, mut done_d) = (0u32, 0u32);
+    for (op, t) in tickets {
+        let r = t.wait().unwrap();
+        let out = r.result.unwrap().expect_u8();
+        if op == "erode" {
+            assert!(out.same_pixels(&want_e), "banded erode under contention");
+            done_e += 1;
+        } else {
+            assert!(out.same_pixels(&want_d), "banded dilate under contention");
+            done_d += 1;
+        }
+    }
+    assert_eq!((done_e, done_d), (16, 16));
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, 32);
+    assert_eq!(snap.shed, 0);
+    // same-key grouping actually happened (batches < requests): 32
+    // quick submissions against slow banded executions must coalesce
+    assert!(
+        snap.mean_batch_size() > 1.0,
+        "expected same-key batching under contention, mean {}",
+        snap.mean_batch_size()
+    );
+    coord.shutdown();
+}
+
+#[test]
 fn queue_latency_reported_nonzero_under_load() {
     let coord = Coordinator::start_native(1).unwrap();
     let img = Arc::new(synth::paper_image(19));

@@ -7,8 +7,10 @@ use std::sync::Arc;
 
 use neon_morph::image::synth::{self, Rng};
 use neon_morph::image::Image;
-use neon_morph::morphology::{self, naive, Border, HybridThresholds, MorphConfig, MorphOp,
-                             PassMethod, VerticalStrategy};
+use neon_morph::morphology::{
+    self, naive, Border, HybridThresholds, MorphConfig, MorphOp, Parallelism, PassMethod,
+    VerticalStrategy,
+};
 use neon_morph::neon::Native;
 use neon_morph::util::prop::{dims, forall, odd_window};
 
@@ -29,6 +31,7 @@ fn all_configs() -> Vec<MorphConfig> {
                     simd,
                     border: Border::Identity,
                     thresholds: HybridThresholds::paper(),
+                    parallelism: Parallelism::Sequential,
                 });
             }
         }
