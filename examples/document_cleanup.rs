@@ -5,6 +5,9 @@
 //!   1. removes the noise with a closing∘opening pair,
 //!   2. extracts text-line masks with a wide horizontal erosion,
 //!   3. computes a morphological gradient as a cheap edge map,
+//!   4. re-runs the text-line erosion on just the page's central band
+//!      through the zero-copy ROI API (`erode_roi` reads a borrowed
+//!      haloed view — no full-image pass, same pixels),
 //! reporting per-stage timings on the §5.3 hybrid implementation versus
 //! the scalar vHGW baseline.
 //!
@@ -74,6 +77,33 @@ fn main() -> anyhow::Result<()> {
     let t = std::time::Instant::now();
     let edges = morphology::gradient(b, &despeckled, 3, 3, &hybrid);
     println!("gradient 3x3: {:?}", t.elapsed());
+
+    // 4. region of interest: the same text-line erosion on just the
+    // central band of the page — erode_roi filters a borrowed haloed
+    // view (work bounded by ROI + halo, not the full page),
+    // pixel-identical to cropping the full result
+    let roi = morphology::Roi::new(
+        page.height() / 4,
+        page.width() / 4,
+        page.height() / 2,
+        page.width() / 2,
+    );
+    let t = std::time::Instant::now();
+    let lines_roi = morphology::erode_roi(&despeckled, 61, 3, roi);
+    println!(
+        "text-line mask on {}x{} ROI: {:?} (zero-copy haloed view)",
+        roi.height,
+        roi.width,
+        t.elapsed()
+    );
+    let want = lines
+        .view()
+        .sub_rect(roi.y, roi.x, roi.height, roi.width)
+        .to_image();
+    assert!(
+        lines_roi.same_pixels(&want),
+        "ROI result must equal the cropped full result"
+    );
 
     let dir = std::env::temp_dir();
     write_pgm(&page, dir.join("doc_input.pgm"))?;

@@ -6,10 +6,16 @@ CI perf baselines (``rust/benches/baselines/BENCH_*.json``):
 
 * ``rows_scalar_vhgw`` / ``rows_simd_vhgw`` / ``rows_simd_linear``
   (``rust/src/morphology/vhgw.rs`` / ``linear.rs``) on the 800x600 u8
-  workload at the smoke windows — the Fig. 3 headline ratios, and
+  workload at the smoke windows — the Fig. 3 headline ratios,
 * ``rows_simd_linear + cols_simd_linear`` at w = 31 — the instruction
   mix of the section-5.3 hybrid erosion behind the band-parallel
-  scaling sweep (saturation point, speedups, bandwidth ceiling).
+  scaling sweep (saturation point, speedups, bandwidth ceiling),
+* ``cols_scalar_vhgw`` / ``cols_simd_linear`` / the section-5.2.1
+  transpose sandwich (``transpose_image`` tiling + ``rows_simd_vhgw``
+  on the transposed 800x600 image) — the Fig. 4 vertical-pass headline
+  ratios, and
+* the section-4 tile transposes (scalar element loops vs the vtrn
+  networks) — the Table 1 scalar/SIMD headline ratios.
 
 Counts are pure functions of the loop structure (no pixel data), so the
 mirror and the rust Counting backend must agree exactly; prices are the
@@ -47,7 +53,10 @@ FREQ_GHZ = 2.0
 BW_BYTES_PER_CYCLE = 1.1
 CALL_OVERHEAD_NS = 18.0
 FORK_NS = 15_000.0
-BAND_OVERHEAD_NS = 4_000.0
+# zero-copy band jobs (ImageView executor): job boxing + queue send +
+# latch only — the old 4 us value also absorbed the per-band staging
+# copies the pre-view executor performed
+BAND_OVERHEAD_NS = 1_200.0
 SATURATION_EPSILON = 0.05
 
 H, W = 600, 800  # synth::paper_image dimensions (u8, px = 1 byte)
@@ -56,6 +65,7 @@ SMOKE_WINDOWS = [3, 31, 61, 91]
 SCALING_WINDOW = 31
 MAX_WORKERS = 16
 PAPER_WY0 = 69
+PAPER_WX0 = 59
 
 
 class Mix(dict):
@@ -82,6 +92,10 @@ class Mix(dict):
 
     def price_ns(self):
         return self.compute_ns() + self.memory_ns() + CALL_OVERHEAD_NS
+
+    def price_ns_marginal(self):
+        # CostModel::price_ns_marginal — no per-call overhead
+        return self.compute_ns() + self.memory_ns()
 
 
 def rows_simd_linear(h, w, window):
@@ -209,6 +223,65 @@ def cols_simd_linear(h, w, window):
     return m
 
 
+def cols_scalar_vhgw(h, w, window):
+    # rust/src/morphology/vhgw.rs::cols_scalar_vhgw_into — per-row 1-D
+    # vHGW, R is one padded row; pval loads only inside [wing, wing+w)
+    m = Mix()
+    wing = window // 2
+    nseg = math.ceil((w + 2 * wing) / window)
+    pw = nseg * window
+    m.stream += 2 * h * w + h * w
+    for _ in range(h):
+        # R: per-segment prefix, ascending
+        m.bump("scalar_alu", pw)
+        m.bump("scalar_load", w)  # pval in-range loads
+        m.bump("scalar_load", pw - nseg)  # r[j-1] on non-segment-start j
+        m.bump("scalar_cmp", pw - nseg)
+        m.bump("scalar_store", pw)
+        # S fused with merge, descending
+        m.bump("scalar_alu", pw)
+        m.bump("scalar_load", w)  # pval in-range loads
+        m.bump("scalar_cmp", pw - nseg)  # carry combine on non-seg-last j
+        m.bump("scalar_load", w)  # r[j + window - 1] for j < w
+        m.bump("scalar_cmp", w)
+        m.bump("scalar_store", w)
+    return m
+
+
+# -- section-4 transposes ---------------------------------------------------
+
+# per-tile census of the vtrn networks (transpose/neon.rs; reinterprets
+# are free and skipped): loads, stores, permutes (vtrn), combines
+# (vget/vcombine)
+TILE16 = {"simd_load": 16, "simd_store": 16, "simd_permute": 24, "simd_combine": 48}
+TILE8 = {"simd_load": 8, "simd_store": 8, "simd_permute": 8, "simd_combine": 24}
+
+
+def transpose_image(h, w):
+    # rust/src/transpose/mod.rs::transpose_image (u8): 16x16 NEON tiles
+    # for the aligned interior, scalar element copies for the edges
+    m = Mix()
+    m.stream += 2 * h * w
+    th, tw = h - h % 16, w - w % 16
+    tiles = (th // 16) * (tw // 16)
+    for cls, n in TILE16.items():
+        m.bump(cls, tiles * n)
+    edge = h * (w - tw) + (h - th) * tw
+    m.bump("scalar_load", edge)
+    m.bump("scalar_store", edge)
+    return m
+
+
+def tile_transpose_mix(census, scalar_elems):
+    simd = Mix()
+    for cls, n in census.items():
+        simd.bump(cls, n)
+    scalar = Mix()
+    scalar.bump("scalar_load", scalar_elems)
+    scalar.bump("scalar_store", scalar_elems)
+    return scalar, simd
+
+
 def parallel_price_ns(mix, workers):
     if workers <= 1:
         return mix.price_ns()
@@ -243,6 +316,59 @@ def fig3_baseline():
         },
         series,
     )
+
+
+def fig4_baseline():
+    # mirrors bench_harness::fig4::run at host_iters=0 + scaling::fig4_json
+    headline = {}
+    series = {}
+    for w in SMOKE_WINDOWS:
+        sandwich = Mix()
+        sandwich += transpose_image(H, W)
+        sandwich += rows_simd_vhgw(W, H, w)  # rows pass on the 800x600 transposed image
+        sandwich += transpose_image(W, H)
+        ns = [
+            cols_scalar_vhgw(H, W, w).price_ns(),
+            sandwich.price_ns(),
+            cols_simd_linear(H, W, w).price_ns(),
+        ]
+        ns.append(ns[2] if w <= PAPER_WX0 else ns[1])  # hybrid
+        series[w] = ns
+    headline["vhgw_sandwich_speedup_w31"] = series[31][0] / series[31][1]
+    headline["linear_speedup_w3"] = series[3][0] / series[3][2]
+    # continuous near-crossover anchor; the discrete crossover itself is
+    # informational only (w=61 sits on a ~1% margin — a step function
+    # would make the +/-10% gate a cliff)
+    headline["linear_vs_sandwich_w61"] = series[61][2] / series[61][1]
+    return (
+        {
+            "bench": "fig4",
+            "workload": "vertical erosion on 800x600 u8",
+            "headline": headline,
+        },
+        series,
+    )
+
+
+def table1_baseline():
+    # mirrors bench_harness::table1::run_model + scaling::table1_json:
+    # marginal (no per-call overhead) model prices of the section-4 tile
+    # transposes, scalar vs NEON
+    s8, v8 = tile_transpose_mix(TILE8, 64)
+    s16, v16 = tile_transpose_mix(TILE16, 256)
+    headline = {
+        "scalar_ns_8x8": s8.price_ns_marginal(),
+        "simd_ns_8x8": v8.price_ns_marginal(),
+        "ratio_8x8": s8.price_ns_marginal() / v8.price_ns_marginal(),
+        "scalar_ns_16x16": s16.price_ns_marginal(),
+        "simd_ns_16x16": v16.price_ns_marginal(),
+        "ratio_16x16": s16.price_ns_marginal() / v16.price_ns_marginal(),
+    }
+    return {
+        "bench": "table1",
+        "workload": "tile transpose 8x8.16 / 16x16.8",
+        "headline": headline,
+    }
 
 
 def scaling_baseline():
@@ -281,8 +407,15 @@ def main():
     outdir = sys.argv[1] if len(sys.argv) > 1 else "rust/benches/baselines"
     os.makedirs(outdir, exist_ok=True)
     fig3, series = fig3_baseline()
+    fig4, series4 = fig4_baseline()
+    table1 = table1_baseline()
     scaling, debug = scaling_baseline()
-    for name, doc in [("BENCH_fig3.json", fig3), ("BENCH_scaling.json", scaling)]:
+    for name, doc in [
+        ("BENCH_fig3.json", fig3),
+        ("BENCH_fig4.json", fig4),
+        ("BENCH_table1.json", table1),
+        ("BENCH_scaling.json", scaling),
+    ]:
         path = os.path.join(outdir, name)
         with open(path, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
@@ -291,6 +424,11 @@ def main():
     print("\nfig3 model ns per window [vhgw, vhgw_simd, linear_simd, hybrid]:")
     for w, ns in series.items():
         print(f"  w={w:3d}: " + "  ".join(f"{v:12.1f}" for v in ns))
+    print("\nfig4 model ns per window [vhgw, vhgw_simd_T, linear_simd, hybrid]:")
+    for w, ns in series4.items():
+        print(f"  w={w:3d}: " + "  ".join(f"{v:12.1f}" for v in ns))
+    print(f"\nfig4 headline: {fig4['headline']}")
+    print(f"table1 headline: {table1['headline']}")
     print(f"\nscaling: seq {debug['seq_ns']:.0f} ns, stream {debug['stream']} B")
     print(f"scaling headline: {scaling['headline']}")
     print(f"saturation boundary margin (want far from 1.0): {debug['margin']:.4f}")

@@ -10,9 +10,11 @@
 //! | scaling  | [`scaling::run`] | band-parallel speedup vs workers (extension) |
 //!
 //! [`scaling`] also emits the machine-readable `BENCH_fig3.json` /
-//! `BENCH_scaling.json` reports whose `headline` ratios CI pins against
-//! the committed baselines in `rust/benches/baselines/` via [`gate`]
-//! (±10%; see `bench smoke` / `bench gate`).
+//! `BENCH_fig4.json` / `BENCH_table1.json` / `BENCH_scaling.json`
+//! reports whose `headline` ratios CI pins against the committed
+//! baselines in `rust/benches/baselines/` via [`gate`] (±10%; see
+//! `bench smoke` / `bench gate`).  The deterministic Table 1 form is
+//! [`table1::run_model`].
 //!
 //! Every experiment reports **two** measurements side by side:
 //!

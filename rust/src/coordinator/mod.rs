@@ -427,7 +427,7 @@ mod tests {
         let img = Arc::new(synth::noise(32, 48, 5));
         let resp = coord.filter("erode", 5, 3, img.clone()).unwrap();
         assert_eq!(resp.backend, "native");
-        let want = morphology::erode(&img, 5, 3);
+        let want = morphology::erode(img.view(), 5, 3);
         assert!(resp.result.unwrap().expect_u8().same_pixels(&want));
         let snap = coord.metrics();
         assert_eq!(snap.completed, 1);
@@ -441,7 +441,7 @@ mod tests {
         let img = Arc::new(synth::noise_u16(32, 48, 5));
         let resp = coord.filter_u16("erode", 5, 3, img.clone()).unwrap();
         assert_eq!(resp.backend, "native");
-        let want = morphology::erode(&img, 5, 3);
+        let want = morphology::erode(img.view(), 5, 3);
         assert!(resp.result.unwrap().expect_u16().same_pixels(&want));
         let snap = coord.metrics();
         assert_eq!(snap.completed, 1);
@@ -545,7 +545,7 @@ mod tests {
             .unwrap()
             .expect_u8();
         assert_eq!((out.height(), out.width()), (20, 10));
-        let want = crate::transpose::transpose_image(&mut Native, &img);
+        let want = crate::transpose::transpose_image(&mut Native, img.view());
         assert!(out.same_pixels(&want));
         coord.shutdown();
     }

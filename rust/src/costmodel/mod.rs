@@ -60,7 +60,16 @@ pub struct CostModel {
     /// Fixed cost of one band-parallel dispatch, ns (waking the shared
     /// worker pool + the fork-join latch round trip).
     pub fork_ns: f64,
-    /// Per-band overhead, ns (job boxing/queueing + band bookkeeping).
+    /// Per-band overhead, ns: job boxing, channel send, completion-latch
+    /// countdown and view-split bookkeeping — **nothing else**.  Band
+    /// jobs are zero-copy (borrowed haloed reads, disjoint in-place
+    /// writes through `split_at_rows_mut`), so no staging traffic hides
+    /// in this constant.  Re-derived for the view-based executor: the
+    /// pre-view value (4 µs/band) was a fudge that also absorbed the
+    /// haloed-slab copy-in + core-row copy-out the PR-2 executor
+    /// performed per band; with those copies deleted, what remains is a
+    /// `Box::new` + `mpsc` send + `Condvar` latch hit, ~1.2 µs on the
+    /// modeled A15-class core.
     pub band_overhead_ns: f64,
 }
 
@@ -104,7 +113,7 @@ impl CostModel {
             bw_bytes_per_cycle: 1.1,
             call_overhead_ns: 18.0,
             fork_ns: 15_000.0,
-            band_overhead_ns: 4_000.0,
+            band_overhead_ns: 1_200.0,
         }
     }
 
@@ -152,10 +161,13 @@ impl CostModel {
     /// scales ~1/P** (bands are independent), the **memory/bandwidth
     /// term does not** (every band streams over the same bus), and the
     /// dispatch pays a fixed fork cost plus a per-band overhead.  The
-    /// model therefore predicts speedup that grows with workers and
-    /// saturates at the memory-bandwidth ceiling
-    /// ([`CostModel::parallel_ceiling`]); `workers <= 1` is exactly the
-    /// sequential price.
+    /// term has always assumed zero-copy bands — and since the
+    /// `ImageView` executor rewrite that *is* the real geometry: band
+    /// jobs read borrowed haloed views and write disjoint views in
+    /// place, so no staging traffic needs modeling.  The model predicts
+    /// speedup that grows with workers and saturates at the
+    /// memory-bandwidth ceiling ([`CostModel::parallel_ceiling`]);
+    /// `workers <= 1` is exactly the sequential price.
     pub fn parallel_breakdown(&self, mix: &InstrMix, workers: usize) -> CostBreakdown {
         let base = self.breakdown(mix);
         if workers <= 1 {

@@ -1,14 +1,23 @@
-//! Image containers, I/O and synthetic workload generation.
+//! Image containers, borrowed views, I/O and synthetic workload
+//! generation.
 //!
 //! The paper's experiments run on an 800×600 gray image with 8-bit
-//! unsigned data; [`Image<u8>`] is the crate-wide pixel container.  The
-//! container is stride-aware so row-aligned SIMD passes can work on
-//! padded rows without copying.
+//! unsigned data; [`Image<u8>`] is the crate-wide *owning* pixel
+//! container.  The container is stride-aware so row-aligned SIMD passes
+//! can work on padded rows without copying, and every kernel in
+//! [`crate::morphology`] / [`crate::transpose`] actually operates on
+//! borrowed [`ImageView`] / [`ImageViewMut`] windows into it (see
+//! [`view`]'s module docs for the ownership rules) — `&Image` converts
+//! into a whole-image view implicitly at every pass entry point, while
+//! sub-row and sub-rectangle views power the zero-copy band-parallel
+//! executor and the region-of-interest API.
 
 mod pgm;
 pub mod synth;
+pub mod view;
 
 pub use pgm::{read_pgm, write_pgm};
+pub use view::{ImageView, ImageViewMut};
 
 /// Pixel element: the subset of integer types the paper's kernels use.
 pub trait Pixel:
@@ -53,7 +62,11 @@ impl Pixel for u16 {
 
 /// A 2-D image with `height` rows × `width` columns, row-major storage
 /// with an explicit row `stride` (in elements, `stride >= width`).
-#[derive(Clone, Debug, PartialEq, Eq)]
+///
+/// Equality (`==`) compares **logical pixels only** — two images with
+/// the same `height × width` content are equal even if their strides
+/// (and therefore padding bytes) differ.
+#[derive(Clone, Debug)]
 pub struct Image<T: Pixel = u8> {
     height: usize,
     width: usize,
@@ -195,6 +208,21 @@ impl<T: Pixel> Image<T> {
         &mut self.data
     }
 
+    /// Borrow the whole image as an [`ImageView`] — the canonical
+    /// kernel argument (also available implicitly through
+    /// `From<&Image>`).
+    #[inline]
+    pub fn view(&self) -> ImageView<'_, T> {
+        ImageView::from_slice(&self.data, self.height, self.width, self.stride)
+    }
+
+    /// Borrow the whole image as a unique mutable [`ImageViewMut`],
+    /// splittable into disjoint row bands for in-place parallel writes.
+    #[inline]
+    pub fn view_mut(&mut self) -> ImageViewMut<'_, T> {
+        ImageViewMut::from_slice_mut(&mut self.data, self.height, self.width, self.stride)
+    }
+
     /// Row-major `height*width` copy without padding.
     pub fn to_vec(&self) -> Vec<T> {
         if self.stride == self.width {
@@ -207,14 +235,17 @@ impl<T: Pixel> Image<T> {
         out
     }
 
-    /// Pointwise equality ignoring padding.
+    /// Pointwise equality of the logical pixels.  Stride-correct by
+    /// construction: rows are compared through the stride-aware view,
+    /// so padding bytes never participate (two images that differ only
+    /// in padding — e.g. a [`Image::with_stride`] copy — compare equal).
     pub fn same_pixels(&self, other: &Self) -> bool {
-        self.height == other.height
-            && self.width == other.width
-            && (0..self.height).all(|y| self.row(y) == other.row(y))
+        self.view().same_pixels(other.view())
     }
 
-    /// First differing pixel `(y, x, self, other)`, if any — test helper.
+    /// First differing *logical* pixel `(y, x, self, other)`, if any —
+    /// test helper.  Like [`Image::same_pixels`], never inspects
+    /// padding bytes.
     pub fn first_diff(&self, other: &Self) -> Option<(usize, usize, T, T)> {
         if self.height != other.height || self.width != other.width {
             return Some((usize::MAX, usize::MAX, T::default(), T::default()));
@@ -230,12 +261,16 @@ impl<T: Pixel> Image<T> {
         None
     }
 
-    /// Transposed copy (naive; fast versions live in [`crate::transpose`]).
+    /// Transposed copy (naive; fast versions live in
+    /// [`crate::transpose`]).  Stride-correct: reads go through the
+    /// row view of this image, so padded inputs transpose their
+    /// logical pixels only (the result is compact).
     pub fn transposed(&self) -> Self {
         let mut out = Self::zeros(self.width, self.height);
         for y in 0..self.height {
-            for x in 0..self.width {
-                out.set(x, y, self.get(y, x));
+            let row = self.row(y);
+            for (x, &v) in row.iter().enumerate() {
+                out.set(x, y, v);
             }
         }
         out
@@ -269,6 +304,19 @@ impl<T: Pixel> Image<T> {
         sum as f64 / self.pixels() as f64
     }
 }
+
+/// Logical-pixel equality: strides and padding bytes are ignored, so a
+/// padded copy ([`Image::with_stride`]) equals its compact original.
+/// (The former derived `PartialEq` compared the raw backing vectors,
+/// padding included — a stride bug for any comparison involving padded
+/// images.)
+impl<T: Pixel> PartialEq for Image<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.same_pixels(other)
+    }
+}
+
+impl<T: Pixel> Eq for Image<T> {}
 
 impl Image<u8> {
     /// Borrow pixels as raw bytes (requires compact stride).
@@ -346,6 +394,39 @@ mod tests {
         assert_eq!(a.first_diff(&b), None);
         b.set(1, 0, 9);
         assert_eq!(a.first_diff(&b), Some((1, 0, 3, 9)));
+    }
+
+    #[test]
+    fn equality_and_diff_ignore_padding_bytes() {
+        // regression: stride-correctness of transposed / same_pixels /
+        // first_diff / == on padded images
+        let img = Image::from_fn(5, 7, |y, x| (3 * y + x) as u8);
+        let padded = img.with_stride(12, 0x5A);
+        let padded_other_fill = img.with_stride(16, 0xA5);
+        assert!(padded.same_pixels(&img));
+        assert_eq!(padded.first_diff(&img), None);
+        assert_eq!(padded, img, "== must ignore stride and padding");
+        assert_eq!(padded, padded_other_fill, "padding fill must not matter");
+        let mut tweaked = padded.clone();
+        tweaked.set(4, 6, 0xFF);
+        assert_ne!(tweaked, img);
+        assert_eq!(tweaked.first_diff(&img), Some((4, 6, 0xFF, img.get(4, 6))));
+    }
+
+    #[test]
+    fn transposed_is_stride_correct() {
+        // regression: transpose of a padded image must read logical
+        // rows only, never padding
+        let img = Image::from_fn(4, 9, |y, x| (y * 10 + x) as u8);
+        let padded = img.with_stride(16, 0xEE);
+        let t = padded.transposed();
+        assert_eq!((t.height(), t.width()), (9, 4));
+        assert!(t.same_pixels(&img.transposed()));
+        assert_eq!(t.get(8, 3), img.get(3, 8));
+        // u16 as well (different element width)
+        let img16 = Image::<u16>::from_fn(3, 5, |y, x| (y * 1000 + x) as u16);
+        let padded16 = img16.with_stride(8, 0xBEEF);
+        assert!(padded16.transposed().same_pixels(&img16.transposed()));
     }
 
     #[test]

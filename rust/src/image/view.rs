@@ -1,0 +1,442 @@
+//! Borrowed, strided image views — the crate's canonical kernel
+//! argument.
+//!
+//! An [`ImageView`] is `(data ptr, height, width, stride)` over a
+//! borrowed pixel buffer; an [`ImageViewMut`] is the same over a
+//! mutable borrow.  Every morphology pass and transpose driver takes
+//! views, so kernels run equally on
+//!
+//! * a whole [`Image`] (`img.view()` / `img.view_mut()`, or the
+//!   `&Image → ImageView` [`From`] adapter every pass accepts),
+//! * a **sub-rectangle** of one ([`ImageView::sub_rect`] — the
+//!   region-of-interest entry points `erode_roi` / `dilate_roi` are
+//!   built on this), and
+//! * a **row band** of one ([`ImageView::sub_rows`] /
+//!   [`ImageViewMut::split_at_rows_mut`]) — which is what makes the
+//!   band-sharded parallel executor zero-copy: band jobs read
+//!   overlapping haloed `src` views and write disjoint `dst` views
+//!   in place, with no staging slab and no core-row stitch.
+//!
+//! ## Ownership rules
+//!
+//! * `ImageView` is `Copy` and many may alias the same pixels —
+//!   overlapping *reads* (rows-pass halos) are plain shared borrows.
+//! * `ImageViewMut` is unique: the only way to get two is
+//!   [`ImageViewMut::split_at_rows_mut`] (or [`ImageViewMut::split_rows_mut`]),
+//!   which partitions the underlying `&mut [P]` with
+//!   `slice::split_at_mut`, so disjointness of concurrent band writes
+//!   is enforced by the borrow checker, not by convention.
+//! * Views never own pixels; whatever they borrow (usually an
+//!   [`Image`]) must outlive them — ordinary Rust lifetimes, no
+//!   `unsafe` in this module.
+
+use super::{Image, Pixel};
+
+/// Minimum buffer length backing an `h × w` view with row `stride`:
+/// `h - 1` full strides plus one final `width`-row (the final row's
+/// padding need not exist).
+#[inline]
+fn required_len(height: usize, width: usize, stride: usize) -> usize {
+    if height == 0 || width == 0 {
+        0
+    } else {
+        (height - 1) * stride + width
+    }
+}
+
+/// A shared `height × width` view with row `stride` over borrowed
+/// pixels.  See the module docs for the ownership rules.
+#[derive(Clone, Copy, Debug)]
+pub struct ImageView<'a, P: Pixel = u8> {
+    height: usize,
+    width: usize,
+    stride: usize,
+    data: &'a [P],
+}
+
+impl<'a, P: Pixel> ImageView<'a, P> {
+    /// View over a row-major buffer (`data.len()` must cover
+    /// `(height-1)*stride + width`; `stride >= width`).
+    pub fn from_slice(data: &'a [P], height: usize, width: usize, stride: usize) -> Self {
+        assert!(stride >= width, "stride {stride} < width {width}");
+        assert!(
+            data.len() >= required_len(height, width, stride),
+            "buffer of {} elements cannot back a {height}x{width} view at stride {stride}",
+            data.len()
+        );
+        ImageView {
+            height,
+            width,
+            stride,
+            data,
+        }
+    }
+
+    pub fn height(self) -> usize {
+        self.height
+    }
+
+    pub fn width(self) -> usize {
+        self.width
+    }
+
+    pub fn stride(self) -> usize {
+        self.stride
+    }
+
+    /// Logical pixels (excludes padding).
+    pub fn pixels(self) -> usize {
+        self.height * self.width
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.height == 0 || self.width == 0
+    }
+
+    /// Row `y` as a slice of `width` elements (excludes padding).
+    #[inline]
+    pub fn row(self, y: usize) -> &'a [P] {
+        &self.data[y * self.stride..y * self.stride + self.width]
+    }
+
+    /// Row `y` including its padding — `stride` elements, except for
+    /// the final row of a sub-view whose padding lies outside the
+    /// borrowed buffer (then it is clipped to what exists).
+    #[inline]
+    pub fn row_padded(self, y: usize) -> &'a [P] {
+        let start = y * self.stride;
+        &self.data[start..((y + 1) * self.stride).min(self.data.len())]
+    }
+
+    #[inline]
+    pub fn get(self, y: usize, x: usize) -> P {
+        debug_assert!(y < self.height && x < self.width);
+        self.data[y * self.stride + x]
+    }
+
+    /// Sub-view of rows `rows.start..rows.end` (same width/stride) —
+    /// how band jobs borrow their haloed input.
+    pub fn sub_rows(self, rows: std::ops::Range<usize>) -> ImageView<'a, P> {
+        assert!(
+            rows.start <= rows.end && rows.end <= self.height,
+            "sub_rows {rows:?} out of 0..{}",
+            self.height
+        );
+        let h = rows.len();
+        let data = if h == 0 || self.width == 0 {
+            &self.data[0..0]
+        } else {
+            let start = rows.start * self.stride;
+            &self.data[start..start + required_len(h, self.width, self.stride)]
+        };
+        ImageView {
+            height: h,
+            width: self.width,
+            stride: self.stride,
+            data,
+        }
+    }
+
+    /// Sub-view of the `height × width` rectangle at `(y0, x0)` — the
+    /// region-of-interest constructor.  The sub-view keeps the parent's
+    /// stride, so no pixel is copied.
+    pub fn sub_rect(self, y0: usize, x0: usize, height: usize, width: usize) -> ImageView<'a, P> {
+        assert!(
+            y0 + height <= self.height && x0 + width <= self.width,
+            "sub_rect {height}x{width}@({y0},{x0}) exceeds {}x{}",
+            self.height,
+            self.width
+        );
+        let data = if height == 0 || width == 0 {
+            &self.data[0..0]
+        } else {
+            let start = y0 * self.stride + x0;
+            &self.data[start..start + required_len(height, width, self.stride)]
+        };
+        ImageView {
+            height,
+            width,
+            stride: self.stride,
+            data,
+        }
+    }
+
+    /// Owned compact copy (`stride == width`) of the viewed pixels.
+    pub fn to_image(self) -> Image<P> {
+        if self.height == 0 || self.width == 0 {
+            return Image::zeros(self.height, self.width);
+        }
+        if self.stride == self.width {
+            return Image::from_vec(self.height, self.width, self.data[..self.pixels()].to_vec());
+        }
+        let mut data = Vec::with_capacity(self.pixels());
+        for y in 0..self.height {
+            data.extend_from_slice(self.row(y));
+        }
+        Image::from_vec(self.height, self.width, data)
+    }
+
+    /// Pointwise equality of the logical pixels (padding ignored).
+    pub fn same_pixels(self, other: ImageView<'_, P>) -> bool {
+        self.height == other.height
+            && self.width == other.width
+            // width-0 sub-views carry an empty buffer; don't index it
+            && (self.width == 0 || (0..self.height).all(|y| self.row(y) == other.row(y)))
+    }
+}
+
+/// `&Image → ImageView` — the thin adapter that lets every pass keep
+/// accepting `&Image<P>` at call sites while the kernels themselves
+/// only know about borrowed views.
+impl<'a, P: Pixel> From<&'a Image<P>> for ImageView<'a, P> {
+    fn from(img: &'a Image<P>) -> Self {
+        img.view()
+    }
+}
+
+/// A unique mutable `height × width` view with row `stride` over
+/// borrowed pixels.  Produced by [`Image::view_mut`] and split into
+/// disjoint row bands with [`ImageViewMut::split_at_rows_mut`].
+#[derive(Debug)]
+pub struct ImageViewMut<'a, P: Pixel = u8> {
+    height: usize,
+    width: usize,
+    stride: usize,
+    data: &'a mut [P],
+}
+
+impl<'a, P: Pixel> ImageViewMut<'a, P> {
+    /// Mutable view over a row-major buffer (same length contract as
+    /// [`ImageView::from_slice`]).
+    pub fn from_slice_mut(data: &'a mut [P], height: usize, width: usize, stride: usize) -> Self {
+        assert!(stride >= width, "stride {stride} < width {width}");
+        assert!(
+            data.len() >= required_len(height, width, stride),
+            "buffer of {} elements cannot back a {height}x{width} view at stride {stride}",
+            data.len()
+        );
+        ImageViewMut {
+            height,
+            width,
+            stride,
+            data,
+        }
+    }
+
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Reborrow as a shared view (for reading what was just written).
+    pub fn as_view(&self) -> ImageView<'_, P> {
+        ImageView {
+            height: self.height,
+            width: self.width,
+            stride: self.stride,
+            data: self.data,
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, y: usize) -> &[P] {
+        &self.data[y * self.stride..y * self.stride + self.width]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, y: usize) -> &mut [P] {
+        &mut self.data[y * self.stride..y * self.stride + self.width]
+    }
+
+    /// Copy `self.height()` rows out of `src` starting at its row `y0`
+    /// (the `window == 1` identity path of the `_into` kernels).
+    pub fn copy_rows_from(&mut self, src: ImageView<'_, P>, y0: usize) {
+        debug_assert_eq!(self.width, src.width());
+        for i in 0..self.height {
+            self.row_mut(i).copy_from_slice(src.row(y0 + i));
+        }
+    }
+
+    /// Split into two disjoint views: rows `0..y` and rows `y..height`.
+    ///
+    /// This is the primitive the band-parallel executor builds on: the
+    /// two halves borrow non-overlapping halves of the underlying
+    /// buffer (`slice::split_at_mut`), so handing them to concurrent
+    /// band jobs is data-race-free by construction.
+    pub fn split_at_rows_mut(self, y: usize) -> (ImageViewMut<'a, P>, ImageViewMut<'a, P>) {
+        assert!(y <= self.height, "split row {y} > height {}", self.height);
+        // a minimally-sized buffer may omit the final row's padding, so
+        // the y == height split point is clamped to what exists
+        let mid = (y * self.stride).min(self.data.len());
+        let (head, tail) = self.data.split_at_mut(mid);
+        (
+            ImageViewMut {
+                height: y,
+                width: self.width,
+                stride: self.stride,
+                data: head,
+            },
+            ImageViewMut {
+                height: self.height - y,
+                width: self.width,
+                stride: self.stride,
+                data: tail,
+            },
+        )
+    }
+
+    /// Partition into per-band disjoint views following `plan`, which
+    /// must tile `0..height` contiguously (the output of
+    /// `parallel::split_bands`).
+    pub fn split_rows_mut(self, plan: &[std::ops::Range<usize>]) -> Vec<ImageViewMut<'a, P>> {
+        let mut out = Vec::with_capacity(plan.len());
+        let mut rest = self;
+        let mut consumed = 0usize;
+        for band in plan {
+            assert_eq!(band.start, consumed, "plan must tile contiguously");
+            let (head, tail) = rest.split_at_rows_mut(band.len());
+            out.push(head);
+            rest = tail;
+            consumed = band.end;
+        }
+        assert_eq!(rest.height, 0, "plan must cover every row");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img() -> Image<u8> {
+        Image::from_fn(6, 9, |y, x| (y * 16 + x) as u8)
+    }
+
+    #[test]
+    fn view_mirrors_image_accessors() {
+        let im = img();
+        let v = im.view();
+        assert_eq!((v.height(), v.width(), v.stride()), (6, 9, 9));
+        assert_eq!(v.pixels(), 54);
+        assert_eq!(v.row(3), im.row(3));
+        assert_eq!(v.row_padded(2), im.row_padded(2));
+        assert_eq!(v.get(5, 8), im.get(5, 8));
+        assert!(v.to_image().same_pixels(&im));
+    }
+
+    #[test]
+    fn view_of_padded_image_is_stride_correct() {
+        let im = img().with_stride(16, 0xEE);
+        let v = im.view();
+        assert_eq!(v.stride(), 16);
+        assert_eq!(v.row(4), img().row(4));
+        assert_eq!(v.row_padded(0).len(), 16);
+        assert!(v.to_image().same_pixels(&img()));
+        assert!(v.same_pixels(img().view()));
+    }
+
+    #[test]
+    fn sub_rows_and_sub_rect_share_pixels() {
+        let im = img();
+        let v = im.view();
+        let band = v.sub_rows(2..5);
+        assert_eq!((band.height(), band.width()), (3, 9));
+        assert_eq!(band.row(0), im.row(2));
+        let r = v.sub_rect(1, 3, 4, 5);
+        assert_eq!((r.height(), r.width()), (4, 5));
+        assert_eq!(r.get(0, 0), im.get(1, 3));
+        assert_eq!(r.get(3, 4), im.get(4, 7));
+        // sub-view of a sub-view composes
+        let rr = r.sub_rect(1, 1, 2, 2);
+        assert_eq!(rr.get(0, 0), im.get(2, 4));
+        assert_eq!(rr.to_image().get(1, 1), im.get(3, 5));
+    }
+
+    #[test]
+    fn empty_sub_views_are_fine() {
+        let im = img();
+        let v = im.view();
+        assert!(v.sub_rows(3..3).is_empty());
+        assert!(v.sub_rect(0, 0, 0, 4).is_empty());
+        assert_eq!(v.sub_rect(2, 2, 0, 0).to_image().pixels(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sub_rect")]
+    fn sub_rect_out_of_bounds_panics() {
+        let im = img();
+        let _ = im.view().sub_rect(3, 3, 4, 9);
+    }
+
+    #[test]
+    fn split_at_rows_mut_handles_minimal_buffers() {
+        // regression: a buffer without the final row's padding must
+        // still split at y == height (empty tail)
+        let mut buf = vec![0u8; 2 * 10 + 4]; // h=3, w=4, stride=10
+        let v = ImageViewMut::from_slice_mut(&mut buf, 3, 4, 10);
+        let (head, tail) = v.split_at_rows_mut(3);
+        assert_eq!((head.height(), tail.height()), (3, 0));
+        let v = ImageViewMut::from_slice_mut(&mut buf, 3, 4, 10);
+        let parts = v.split_rows_mut(&[0..1, 1..3]);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].height(), 2);
+    }
+
+    #[test]
+    fn split_at_rows_mut_partitions() {
+        let mut im = Image::<u8>::zeros(6, 4);
+        {
+            let (mut top, mut bot) = im.view_mut().split_at_rows_mut(2);
+            assert_eq!((top.height(), bot.height()), (2, 4));
+            top.row_mut(1).fill(7);
+            bot.row_mut(0).fill(9);
+        }
+        assert_eq!(im.row(1), &[7, 7, 7, 7]);
+        assert_eq!(im.row(2), &[9, 9, 9, 9]);
+        assert_eq!(im.row(0), &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn split_rows_mut_follows_plan() {
+        let mut im = Image::<u8>::zeros(7, 3);
+        {
+            let views = im.view_mut().split_rows_mut(&[0..2, 2..3, 3..7]);
+            assert_eq!(views.len(), 3);
+            for (i, mut v) in views.into_iter().enumerate() {
+                for y in 0..v.height() {
+                    v.row_mut(y).fill(i as u8 + 1);
+                }
+            }
+        }
+        assert_eq!(im.row(0)[0], 1);
+        assert_eq!(im.row(2)[0], 2);
+        assert_eq!(im.row(6)[0], 3);
+    }
+
+    #[test]
+    fn mut_view_on_padded_image_writes_logical_rows_only() {
+        let mut im = Image::<u8>::zeros(3, 5).with_stride(8, 0xAA);
+        {
+            let mut v = im.view_mut();
+            v.row_mut(1).fill(3);
+        }
+        assert_eq!(im.row(1), &[3, 3, 3, 3, 3]);
+        assert_eq!(im.row_padded(1)[5], 0xAA, "padding untouched");
+    }
+
+    #[test]
+    fn copy_rows_from_with_offset() {
+        let src = img();
+        let mut dst = Image::<u8>::zeros(2, 9);
+        dst.view_mut().copy_rows_from(src.view(), 3);
+        assert_eq!(dst.row(0), src.row(3));
+        assert_eq!(dst.row(1), src.row(4));
+    }
+}

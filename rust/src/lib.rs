@@ -14,8 +14,10 @@
 //!
 //! Crate layout (see `DESIGN.md` for the full inventory):
 //!
-//! * [`image`] — stride-aware `u8`/`u16` image containers, PGM I/O,
-//!   synthetic workload generators (the paper's 800×600 gray input).
+//! * [`image`] — stride-aware `u8`/`u16` image containers, the
+//!   borrowed [`image::ImageView`]/[`image::ImageViewMut`] types every
+//!   kernel operates on, PGM I/O, synthetic workload generators (the
+//!   paper's 800×600 gray input).
 //! * [`neon`] — an ARM NEON *simulator*: 128-bit register types plus the
 //!   instruction subset the paper uses, behind a [`neon::Backend`] trait
 //!   with a fast native implementation and a counting implementation
@@ -46,6 +48,28 @@
 //!   and u16 work always routes to the native engine (AOT artifacts
 //!   are u8-only).
 //!
+//! ## Zero-copy view contract
+//!
+//! Every kernel's canonical source argument is a borrowed
+//! [`image::ImageView`] (`&Image` coerces through `From` at each call
+//! site), and the 1-D passes have `_into` forms writing straight into
+//! a caller-provided [`image::ImageViewMut`].  The ownership rules:
+//!
+//! * `ImageView` is `Copy`; arbitrarily many may alias the same pixels
+//!   — overlapping *reads* (band halos) are plain shared borrows.
+//! * `ImageViewMut` is unique; disjoint concurrent *writes* exist only
+//!   through [`image::ImageViewMut::split_at_rows_mut`], which
+//!   partitions the underlying `&mut [P]`, so band-job disjointness is
+//!   borrow-checker-enforced, not conventional.
+//!
+//! This is what makes band-sharding zero-copy (no haloed-slab copy in,
+//! no core-row stitch out — `rust/tests/zero_copy_alloc.rs` pins the
+//! allocation budget) and what powers the region-of-interest API:
+//! [`morphology::erode_roi`] / [`morphology::dilate_roi`] /
+//! [`morphology::filter_roi`] compute exactly
+//! `crop(filter(full), roi)` from a borrowed haloed sub-rectangle
+//! ([`morphology::Roi`]; CLI: `filter --roi Y,X,H,W`).
+//!
 //! ## Band-sharded parallelism
 //!
 //! * Policy: [`morphology::Parallelism`] in [`morphology::MorphConfig`]
@@ -53,18 +77,22 @@
 //!   shards only when the cost model predicts ≥10% gain over
 //!   sequential ([`costmodel::CostModel::plan_workers`]), so small
 //!   images never touch the pool.
-//! * Geometry: a rows-window band with output rows `[b0, b1)` reads
-//!   input rows `[b0 - w/2, b1 + w/2) ∩ [0, h)`; the direct cols pass
-//!   bands rows with zero halo; the §5.2.1 sandwich bands the
-//!   transposed image in [`morphology::MorphPixel::LANES`]-aligned
-//!   stripes.  Output is bit-identical to sequential for every pass ×
-//!   method × depth × border (`rust/tests/parallel_banding.rs`).
+//! * Geometry: a rows-window band with output rows `[b0, b1)` *reads*
+//!   input rows `[b0 - w/2, b1 + w/2) ∩ [0, h)` through an overlapping
+//!   borrowed view and *writes* its disjoint split of the destination
+//!   in place; the direct cols pass bands rows with zero halo; the
+//!   §5.2.1 sandwich stripes the transposed buffer in place in
+//!   [`morphology::MorphPixel::LANES`]-aligned bands.  Output is
+//!   bit-identical to sequential for every pass × method × depth ×
+//!   border (`rust/tests/parallel_banding.rs`).
 //! * Cost model: compute scales ~1/P, the memory/bandwidth term does
 //!   not ([`costmodel::CostModel::parallel_breakdown`]), so modeled
-//!   speedup saturates at the memory-bandwidth ceiling; the scaling
-//!   sweep (`bench scaling`, `benches/scaling.rs`) emits
-//!   `BENCH_scaling.json` and CI pins its saturation point (±10%)
-//!   against `rust/benches/baselines/`.
+//!   speedup saturates at the memory-bandwidth ceiling; since the
+//!   zero-copy executor the per-band overhead constant models only job
+//!   dispatch (no staging fudge).  The scaling sweep (`bench scaling`,
+//!   `benches/scaling.rs`) emits `BENCH_scaling.json` and CI pins its
+//!   saturation point (±10%) against `rust/benches/baselines/`,
+//!   alongside the Fig-3, Fig-4 and Table-1 headline ratios.
 //!
 //! ## Pixel-depth dispatch rules
 //!
@@ -95,5 +123,5 @@ pub mod runtime;
 pub mod util;
 pub mod transpose;
 
-pub use image::Image;
-pub use morphology::{Border, MorphOp, MorphPixel, Parallelism, PassMethod, VerticalStrategy};
+pub use image::{Image, ImageView, ImageViewMut};
+pub use morphology::{Border, MorphOp, MorphPixel, Parallelism, PassMethod, Roi, VerticalStrategy};

@@ -28,7 +28,7 @@ use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use neon_morph::costmodel::CostModel;
 use neon_morph::image::{read_pgm, synth, write_pgm};
 use neon_morph::morphology::{
-    self, hybrid, Border, HybridThresholds, MorphConfig, Parallelism, PassMethod,
+    self, hybrid, Border, HybridThresholds, MorphConfig, MorphOp, Parallelism, PassMethod, Roi,
     VerticalStrategy,
 };
 use neon_morph::neon::Native;
@@ -92,10 +92,12 @@ COMMANDS:
                [--backend auto|native|xla] [--method hybrid|linear|vhgw]
                [--vertical direct|transpose] [--border identity|replicate]
                [--no-simd] [--parallel auto|off|N] [--artifacts DIR]
+               [--roi Y,X,H,W]   filter only a sub-rectangle (zero-copy
+               haloed view; erode/dilate, native backend; output is HxW)
     bench      <table1|fig3|fig3u16|fig4|e2e|scaling|all> [--quick] [--tsv] [--iters N]
                scaling: [--max-workers 16] [--host]
     bench      smoke --out DIR [--update-baselines] [--baselines DIR]
-               deterministic cost-model sweeps -> BENCH_fig3.json + BENCH_scaling.json
+               deterministic sweeps -> BENCH_{fig3,fig4,table1,scaling}.json
     bench      gate [--out DIR] [--baselines DIR]
                fail if headline ratios drift >10% from the committed baselines
     serve      [--requests 256] [--workers 4] [--window 7]
@@ -187,6 +189,47 @@ fn cmd_filter(args: &Args) -> Result<()> {
     let backend = parse_backend(args)?;
     let morph = parse_morph_config(args)?;
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+
+    // --roi: zero-copy region-of-interest filtering on the native path
+    // (the output equals crop(filter(full), roi) exactly, but only the
+    // ROI plus its window halo is ever read)
+    if let Some(spec) = args.get("roi") {
+        if backend == BackendChoice::XlaOnly {
+            bail!("--roi runs on the native engine and cannot honour --backend xla");
+        }
+        let roi: Roi = spec.parse().map_err(|e| anyhow!("--roi: {e}"))?;
+        let op_enum = match op.as_str() {
+            "erode" => MorphOp::Erode,
+            "dilate" => MorphOp::Dilate,
+            other => bail!("--roi supports erode|dilate, got {other:?}"),
+        };
+        let img = read_pgm(input).with_context(|| format!("reading {input}"))?;
+        let (ih, iw) = (img.height(), img.width());
+        let fits = roi.height <= ih
+            && roi.y <= ih - roi.height
+            && roi.width <= iw
+            && roi.x <= iw - roi.width;
+        if !fits {
+            bail!("--roi {spec} exceeds image {ih}x{iw}");
+        }
+        let t0 = std::time::Instant::now();
+        let out = morphology::filter_roi(&img, op_enum, w_x, w_y, &morph, roi);
+        let elapsed = t0.elapsed();
+        write_pgm(&out, output).with_context(|| format!("writing {output}"))?;
+        println!(
+            "{} roi {},{},{}x{} of {ih}x{iw} SE={}x{} via native in {:.2} ms -> {}",
+            op,
+            roi.y,
+            roi.x,
+            roi.height,
+            roi.width,
+            w_x,
+            w_y,
+            elapsed.as_secs_f64() * 1e3,
+            output
+        );
+        return Ok(());
+    }
 
     let img = Arc::new(read_pgm(input).with_context(|| format!("reading {input}"))?);
     let coord = Coordinator::start(CoordinatorConfig {
@@ -367,6 +410,10 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
 
     let fig3_sweep = fig3::run(&model, &scaling::SMOKE_WINDOWS, 0);
     let fig3_report = scaling::fig3_json(&fig3_sweep);
+    let fig4_sweep = fig4::run(&model, &scaling::SMOKE_WINDOWS, 0);
+    let fig4_report = scaling::fig4_json(&fig4_sweep);
+    let table1_rows = table1::run_model(&model);
+    let table1_report = scaling::table1_json(&table1_rows);
     let scaling_sweep = scaling::run(
         &model,
         synth::PAPER_HEIGHT,
@@ -377,9 +424,13 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     );
     let scaling_report = scaling::to_json(&scaling_sweep);
 
-    for (name, report) in
-        [("BENCH_fig3.json", &fig3_report), ("BENCH_scaling.json", &scaling_report)]
-    {
+    let reports = [
+        ("BENCH_fig3.json", &fig3_report),
+        ("BENCH_fig4.json", &fig4_report),
+        ("BENCH_table1.json", &table1_report),
+        ("BENCH_scaling.json", &scaling_report),
+    ];
+    for (name, report) in reports {
         let path = out_dir.join(name);
         std::fs::write(&path, json::write(report))
             .with_context(|| format!("writing {}", path.display()))?;
@@ -390,15 +441,20 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
         fig3::render("Figure 3 smoke (model, ns)", &fig3_sweep, "model").to_markdown()
     );
     println!();
+    print!(
+        "{}",
+        fig4::render("Figure 4 smoke (model, ns)", &fig4_sweep, "model").to_markdown()
+    );
+    println!();
+    print!("{}", table1::render(&table1_rows).to_markdown());
+    println!();
     print!("{}", scaling::render(&scaling_sweep).to_markdown());
 
     if args.flag("update-baselines") {
         let base_dir = PathBuf::from(args.get("baselines").unwrap_or(BASELINE_DIR));
         std::fs::create_dir_all(&base_dir)
             .with_context(|| format!("creating {}", base_dir.display()))?;
-        for (name, report) in
-            [("BENCH_fig3.json", &fig3_report), ("BENCH_scaling.json", &scaling_report)]
-        {
+        for (name, report) in reports {
             let path = base_dir.join(name);
             std::fs::write(&path, json::write(&gate::headline_subset(report)))
                 .with_context(|| format!("writing {}", path.display()))?;
@@ -415,7 +471,12 @@ fn cmd_bench_gate(args: &Args) -> Result<()> {
     let base_dir = PathBuf::from(args.get("baselines").unwrap_or(BASELINE_DIR));
     let mut total_failures = 0usize;
     let mut checked = 0usize;
-    for name in ["BENCH_fig3.json", "BENCH_scaling.json"] {
+    for name in [
+        "BENCH_fig3.json",
+        "BENCH_fig4.json",
+        "BENCH_table1.json",
+        "BENCH_scaling.json",
+    ] {
         let base_path = base_dir.join(name);
         let meas_path = out_dir.join(name);
         let base_text = std::fs::read_to_string(&base_path)

@@ -8,14 +8,15 @@
 //! binarization boundary and the common binary compositions.
 
 use super::{morphology, MorphConfig, MorphOp};
-use crate::image::Image;
+use crate::image::{Image, ImageView};
 use crate::neon::Backend;
 
 /// Foreground value of a binary image (background is 0).
 pub const FG: u8 = 255;
 
 /// Threshold to a binary image: `>= thresh` → foreground.
-pub fn threshold(src: &Image<u8>, thresh: u8) -> Image<u8> {
+pub fn threshold<'a>(src: impl Into<ImageView<'a, u8>>, thresh: u8) -> Image<u8> {
+    let src = src.into();
     Image::from_fn(src.height(), src.width(), |y, x| {
         if src.get(y, x) >= thresh {
             FG
@@ -27,7 +28,8 @@ pub fn threshold(src: &Image<u8>, thresh: u8) -> Image<u8> {
 
 /// Otsu's threshold (maximal between-class variance) — the standard
 /// automatic binarizer for document images.
-pub fn otsu_threshold(src: &Image<u8>) -> u8 {
+pub fn otsu_threshold<'a>(src: impl Into<ImageView<'a, u8>>) -> u8 {
+    let src = src.into();
     let mut hist = [0u64; 256];
     for y in 0..src.height() {
         for &v in src.row(y) {
@@ -63,38 +65,41 @@ pub fn otsu_threshold(src: &Image<u8>) -> u8 {
 }
 
 /// True iff every pixel is 0 or [`FG`].
-pub fn is_binary(img: &Image<u8>) -> bool {
+pub fn is_binary<'a>(img: impl Into<ImageView<'a, u8>>) -> bool {
+    let img = img.into();
     (0..img.height()).all(|y| img.row(y).iter().all(|&v| v == 0 || v == FG))
 }
 
 /// Binary erosion: foreground survives only where the whole SE fits.
-pub fn erode_binary<B: Backend>(
+pub fn erode_binary<'a, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: impl Into<ImageView<'a, u8>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<u8> {
+    let src = src.into();
     debug_assert!(is_binary(src), "erode_binary expects a 0/255 image");
     morphology(b, src, MorphOp::Erode, w_x, w_y, cfg)
 }
 
 /// Binary dilation: foreground grows by the SE footprint.
-pub fn dilate_binary<B: Backend>(
+pub fn dilate_binary<'a, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: impl Into<ImageView<'a, u8>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<u8> {
+    let src = src.into();
     debug_assert!(is_binary(src), "dilate_binary expects a 0/255 image");
     morphology(b, src, MorphOp::Dilate, w_x, w_y, cfg)
 }
 
 /// Remove foreground components thinner than the SE (binary opening).
-pub fn open_binary<B: Backend>(
+pub fn open_binary<'a, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: impl Into<ImageView<'a, u8>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
@@ -104,9 +109,9 @@ pub fn open_binary<B: Backend>(
 }
 
 /// Fill background gaps thinner than the SE (binary closing).
-pub fn close_binary<B: Backend>(
+pub fn close_binary<'a, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: impl Into<ImageView<'a, u8>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
@@ -116,13 +121,14 @@ pub fn close_binary<B: Backend>(
 }
 
 /// Boundary extraction: src − erosion (one-SE-thick outline).
-pub fn boundary<B: Backend>(
+pub fn boundary<'a, B: Backend>(
     b: &mut B,
-    src: &Image<u8>,
+    src: impl Into<ImageView<'a, u8>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<u8> {
+    let src = src.into();
     let e = erode_binary(b, src, w_x, w_y, cfg);
     Image::from_fn(src.height(), src.width(), |y, x| {
         src.get(y, x).saturating_sub(e.get(y, x))

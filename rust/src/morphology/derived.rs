@@ -4,14 +4,14 @@
 //! generic over the pixel depth.
 
 use super::{morphology, MorphConfig, MorphOp, MorphPixel};
-use crate::image::Image;
+use crate::image::{Image, ImageView};
 use crate::neon::Backend;
 
 /// Opening: dilation of the erosion.  Removes bright structures smaller
 /// than the SE.
-pub fn opening<P: MorphPixel, B: Backend>(
+pub fn opening<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
@@ -22,9 +22,9 @@ pub fn opening<P: MorphPixel, B: Backend>(
 
 /// Closing: erosion of the dilation.  Removes dark structures smaller
 /// than the SE.
-pub fn closing<P: MorphPixel, B: Backend>(
+pub fn closing<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
@@ -34,45 +34,48 @@ pub fn closing<P: MorphPixel, B: Backend>(
 }
 
 /// Morphological gradient: dilation − erosion (edge strength).
-pub fn gradient<P: MorphPixel, B: Backend>(
+pub fn gradient<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
+    let src = src.into();
     let d = morphology(b, src, MorphOp::Dilate, w_x, w_y, cfg);
     let e = morphology(b, src, MorphOp::Erode, w_x, w_y, cfg);
-    pixelwise_sub(&d, &e)
+    pixelwise_sub(d.view(), e.view())
 }
 
 /// White top-hat: src − opening (bright details smaller than the SE).
-pub fn tophat<P: MorphPixel, B: Backend>(
+pub fn tophat<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
+    let src = src.into();
     let o = opening(b, src, w_x, w_y, cfg);
-    pixelwise_sub(src, &o)
+    pixelwise_sub(src, o.view())
 }
 
 /// Black top-hat: closing − src (dark details smaller than the SE).
-pub fn blackhat<P: MorphPixel, B: Backend>(
+pub fn blackhat<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
+    let src = src.into();
     let c = closing(b, src, w_x, w_y, cfg);
-    pixelwise_sub(&c, src)
+    pixelwise_sub(c.view(), src)
 }
 
 /// Saturating pixelwise subtraction `a - b` (clamped at 0).  Shared
 /// with the band-parallel compositions in [`super::parallel`].
-pub(crate) fn pixelwise_sub<P: MorphPixel>(a: &Image<P>, b: &Image<P>) -> Image<P> {
+pub(crate) fn pixelwise_sub<P: MorphPixel>(a: ImageView<'_, P>, b: ImageView<'_, P>) -> Image<P> {
     assert_eq!(a.height(), b.height());
     assert_eq!(a.width(), b.width());
     Image::from_fn(a.height(), a.width(), |y, x| {

@@ -13,7 +13,7 @@
 
 use super::{linear, vhgw, MorphOp, MorphPixel, PassMethod};
 use crate::costmodel::CostModel;
-use crate::image::Image;
+use crate::image::ImageView;
 use crate::neon::Counting;
 
 /// Paper values (Exynos 5422, 800×600 u8).
@@ -67,10 +67,10 @@ pub fn resolve_method(method: PassMethod, window: usize, threshold: usize) -> Pa
 }
 
 /// Cost-model price (ns) of one SIMD rows pass at `window` on a probe
-/// image — used by calibration and the Fig. 3 harness.
+/// view — used by calibration and the Fig. 3 harness.
 pub fn price_rows_pass<P: MorphPixel>(
     model: &CostModel,
-    probe: &Image<P>,
+    probe: ImageView<'_, P>,
     window: usize,
     method: PassMethod,
 ) -> f64 {
@@ -88,11 +88,11 @@ pub fn price_rows_pass<P: MorphPixel>(
 }
 
 /// Cost-model price (ns) of one SIMD cols pass at `window` on a probe
-/// image (linear = §5.2.2 direct; vHGW = §5.2.1 transpose sandwich at
+/// view (linear = §5.2.2 direct; vHGW = §5.2.1 transpose sandwich at
 /// this pixel depth).
 pub fn price_cols_pass<P: MorphPixel>(
     model: &CostModel,
-    probe: &Image<P>,
+    probe: ImageView<'_, P>,
     window: usize,
     method: PassMethod,
 ) -> f64 {
@@ -104,7 +104,7 @@ pub fn price_cols_pass<P: MorphPixel>(
         PassMethod::Vhgw => {
             let t = P::transpose_image(&mut c, probe);
             let f = vhgw::rows_simd_vhgw(&mut c, &t, window, MorphOp::Erode);
-            let _ = P::transpose_image(&mut c, &f);
+            let _ = P::transpose_image(&mut c, f.view());
         }
         PassMethod::Hybrid => panic!("price a concrete method"),
     }
@@ -113,11 +113,11 @@ pub fn price_cols_pass<P: MorphPixel>(
 
 /// Find the largest odd window for which linear is still no slower than
 /// vHGW under the cost model (scanning odd windows up to `max_window`).
-fn crossover<P: MorphPixel>(
+fn crossover<'a, P: MorphPixel>(
     model: &CostModel,
-    probe: &Image<P>,
+    probe: ImageView<'a, P>,
     max_window: usize,
-    price: impl Fn(&CostModel, &Image<P>, usize, PassMethod) -> f64,
+    price: impl Fn(&CostModel, ImageView<'a, P>, usize, PassMethod) -> f64,
 ) -> usize {
     let mut last_linear_win = 1;
     let mut w = 3;
@@ -141,11 +141,12 @@ fn crossover<P: MorphPixel>(
 /// needs to be large enough to amortize per-call overhead (mixes scale
 /// linearly in pixels, so the crossover is size-stable — verified in
 /// tests).
-pub fn calibrate_thresholds<P: MorphPixel>(
+pub fn calibrate_thresholds<'a, P: MorphPixel>(
     model: &CostModel,
-    probe: &Image<P>,
+    probe: impl Into<ImageView<'a, P>>,
     max_window: usize,
 ) -> HybridThresholds {
+    let probe = probe.into();
     HybridThresholds {
         wy0: crossover(model, probe, max_window, price_rows_pass),
         wx0: crossover(model, probe, max_window, price_cols_pass),
@@ -175,15 +176,15 @@ mod tests {
         // vHGW stays ~flat, and linear wins small windows outright
         let model = CostModel::exynos5422();
         let probe = synth::paper_image(2);
-        let lin3 = price_rows_pass(&model, &probe, 3, PassMethod::Linear);
-        let lin31 = price_rows_pass(&model, &probe, 31, PassMethod::Linear);
+        let lin3 = price_rows_pass(&model, probe.view(), 3, PassMethod::Linear);
+        let lin31 = price_rows_pass(&model, probe.view(), 31, PassMethod::Linear);
         assert!(lin31 > 1.4 * lin3, "linear should scale with w: {lin3} {lin31}");
-        let vh3 = price_rows_pass(&model, &probe, 3, PassMethod::Vhgw);
-        let vh31 = price_rows_pass(&model, &probe, 31, PassMethod::Vhgw);
+        let vh3 = price_rows_pass(&model, probe.view(), 3, PassMethod::Vhgw);
+        let vh31 = price_rows_pass(&model, probe.view(), 31, PassMethod::Vhgw);
         assert!(vh31 < 1.4 * vh3, "vhgw should be ~flat in w: {vh3} {vh31}");
         assert!(lin3 < vh3, "linear must win small windows (rows)");
-        let cl3 = price_cols_pass(&model, &probe, 3, PassMethod::Linear);
-        let cv3 = price_cols_pass(&model, &probe, 3, PassMethod::Vhgw);
+        let cl3 = price_cols_pass(&model, probe.view(), 3, PassMethod::Linear);
+        let cv3 = price_cols_pass(&model, probe.view(), 3, PassMethod::Vhgw);
         assert!(cl3 < cv3, "linear must win small windows (cols)");
     }
 
@@ -194,8 +195,8 @@ mod tests {
         let model = CostModel::exynos5422();
         let probe8 = synth::noise(60, 80, 3);
         let probe16 = synth::noise_u16(60, 80, 3);
-        let p8 = price_rows_pass(&model, &probe8, 9, PassMethod::Linear);
-        let p16 = price_rows_pass(&model, &probe16, 9, PassMethod::Linear);
+        let p8 = price_rows_pass(&model, probe8.view(), 9, PassMethod::Linear);
+        let p16 = price_rows_pass(&model, probe16.view(), 9, PassMethod::Linear);
         assert!(
             p16 > 1.5 * p8,
             "u16 rows pass should price ~2x u8: {p8} vs {p16}"

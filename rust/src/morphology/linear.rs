@@ -16,31 +16,70 @@
 //! NEON form, all four generic over [`Backend`] *and* over
 //! [`MorphPixel`]: the same code processes 16 `u8` lanes or 8 `u16`
 //! lanes per vector op.
+//!
+//! ## View contract
+//!
+//! Every kernel reads a borrowed [`ImageView`] (a `&Image` coerces at
+//! the call site).  Each pass also has an `_into` form writing straight
+//! into a caller-provided [`ImageViewMut`] — the zero-copy primitive the
+//! band-parallel executor is built on: a rows `_into` kernel computes
+//! output rows `y0 .. y0 + dst.height()` of filtering `src` (so a band
+//! job hands it a *haloed* source view and its disjoint slice of the
+//! destination), and the allocating wrappers are just
+//! `_into(src, whole_dst, y0 = 0)`.
 
 use super::{wing_of, MorphOp, MorphPixel};
-use crate::image::Image;
+use crate::image::{Image, ImageView, ImageViewMut};
 use crate::neon::Backend;
 
 /// Rows-window pass, NEON, two output rows per iteration (§5.1.2).
-pub fn rows_simd_linear<P: MorphPixel, B: Backend>(
+pub fn rows_simd_linear<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
 ) -> Image<P> {
-    let wing = wing_of(window, "w_y");
+    let src = src.into();
+    let _ = wing_of(window, "w_y");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
-        return src.clone();
+        return src.to_image();
+    }
+    let mut dst = Image::zeros(h, w);
+    rows_simd_linear_into(b, src, dst.view_mut(), 0, window, op);
+    dst
+}
+
+/// [`rows_simd_linear`] writing output rows `y0 .. y0 + dst.height()`
+/// of the `src` filtering directly into `dst` (no allocation).
+pub fn rows_simd_linear_into<P: MorphPixel, B: Backend>(
+    b: &mut B,
+    src: ImageView<'_, P>,
+    mut dst: ImageViewMut<'_, P>,
+    y0: usize,
+    window: usize,
+    op: MorphOp,
+) {
+    let wing = wing_of(window, "w_y");
+    let (h, w) = (src.height(), src.width());
+    let n = dst.height();
+    debug_assert_eq!(dst.width(), w, "dst width must match src");
+    debug_assert!(y0 + n <= h, "output rows {y0}..{} exceed src height {h}", y0 + n);
+    if n == 0 || w == 0 {
+        return;
+    }
+    if window == 1 {
+        dst.copy_rows_from(src, y0);
+        return;
     }
     let px = std::mem::size_of::<P>() as u64;
-    let mut dst = Image::zeros(h, w);
-    b.record_stream((h * w) as u64 * px, (h * w) as u64 * px);
+    b.record_stream((n * w) as u64 * px, (n * w) as u64 * px);
     let wv = w - w % P::LANES;
+    let end = y0 + n;
 
-    let mut y = 0usize;
-    while y < h {
-        let pair = y + 1 < h; // last row of odd-height images is alone
+    let mut y = y0;
+    while y < end {
+        let pair = y + 1 < end; // last row of odd-count outputs is alone
         // common rows shared by outputs y and y+1: [y-wing+1, y+wing]
         let c0 = (y + 1).saturating_sub(wing);
         let c1 = (y + wing).min(h - 1);
@@ -63,7 +102,7 @@ pub fn rows_simd_linear<P: MorphPixel, B: Backend>(
                 }
                 None => val,
             };
-            P::vstore(b, &mut dst.row_mut(y)[x..], out0);
+            P::vstore(b, &mut dst.row_mut(y - y0)[x..], out0);
             if pair {
                 let out1 = match bot {
                     Some(t) => {
@@ -72,7 +111,7 @@ pub fn rows_simd_linear<P: MorphPixel, B: Backend>(
                     }
                     None => val,
                 };
-                P::vstore(b, &mut dst.row_mut(y + 1)[x..], out1);
+                P::vstore(b, &mut dst.row_mut(y + 1 - y0)[x..], out1);
             }
             x += P::LANES;
         }
@@ -92,7 +131,7 @@ pub fn rows_simd_linear<P: MorphPixel, B: Backend>(
                 }
                 None => val,
             };
-            P::store(b, dst.row_mut(y), x, out0);
+            P::store(b, dst.row_mut(y - y0), x, out0);
             if pair {
                 let out1 = match bot {
                     Some(t) => {
@@ -101,28 +140,28 @@ pub fn rows_simd_linear<P: MorphPixel, B: Backend>(
                     }
                     None => val,
                 };
-                P::store(b, dst.row_mut(y + 1), x, out1);
+                P::store(b, dst.row_mut(y + 1 - y0), x, out1);
             }
         }
         y += 2;
     }
-    dst
 }
 
 /// ABLATION variant: rows-window pass, NEON, one output row at a time —
 /// no shared-reduction trick, `w_y - 1` combines per row instead of
 /// ~`w_y/2 + 1`.  Exists to quantify the §5.1.2 two-row optimization
 /// (see `cargo bench --bench ablations`).
-pub fn rows_simd_linear_single<P: MorphPixel, B: Backend>(
+pub fn rows_simd_linear_single<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
 ) -> Image<P> {
+    let src = src.into();
     let wing = wing_of(window, "w_y");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
-        return src.clone();
+        return src.to_image();
     }
     let px = std::mem::size_of::<P>() as u64;
     let mut dst = Image::zeros(h, w);
@@ -158,24 +197,52 @@ pub fn rows_simd_linear_single<P: MorphPixel, B: Backend>(
 
 /// Rows-window pass, scalar (the "without SIMD" comparator with the same
 /// two-row structure).
-pub fn rows_scalar_linear<P: MorphPixel, B: Backend>(
+pub fn rows_scalar_linear<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
 ) -> Image<P> {
-    let wing = wing_of(window, "w_y");
+    let src = src.into();
+    let _ = wing_of(window, "w_y");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
-        return src.clone();
+        return src.to_image();
+    }
+    let mut dst = Image::zeros(h, w);
+    rows_scalar_linear_into(b, src, dst.view_mut(), 0, window, op);
+    dst
+}
+
+/// [`rows_scalar_linear`] writing output rows `y0 .. y0 + dst.height()`
+/// directly into `dst`.
+pub fn rows_scalar_linear_into<P: MorphPixel, B: Backend>(
+    b: &mut B,
+    src: ImageView<'_, P>,
+    mut dst: ImageViewMut<'_, P>,
+    y0: usize,
+    window: usize,
+    op: MorphOp,
+) {
+    let wing = wing_of(window, "w_y");
+    let (h, w) = (src.height(), src.width());
+    let n = dst.height();
+    debug_assert_eq!(dst.width(), w);
+    debug_assert!(y0 + n <= h);
+    if n == 0 || w == 0 {
+        return;
+    }
+    if window == 1 {
+        dst.copy_rows_from(src, y0);
+        return;
     }
     let px = std::mem::size_of::<P>() as u64;
-    let mut dst = Image::zeros(h, w);
-    b.record_stream((h * w) as u64 * px, (h * w) as u64 * px);
+    b.record_stream((n * w) as u64 * px, (n * w) as u64 * px);
+    let end = y0 + n;
 
-    let mut y = 0usize;
-    while y < h {
-        let pair = y + 1 < h;
+    let mut y = y0;
+    while y < end {
+        let pair = y + 1 < end;
         let c0 = (y + 1).saturating_sub(wing);
         let c1 = (y + wing).min(h - 1);
         let top = if y >= wing { Some(y - wing) } else { None };
@@ -195,7 +262,7 @@ pub fn rows_scalar_linear<P: MorphPixel, B: Backend>(
                 }
                 None => val,
             };
-            P::store(b, dst.row_mut(y), x, out0);
+            P::store(b, dst.row_mut(y - y0), x, out0);
             if pair {
                 let out1 = match bot {
                     Some(t) => {
@@ -204,12 +271,11 @@ pub fn rows_scalar_linear<P: MorphPixel, B: Backend>(
                     }
                     None => val,
                 };
-                P::store(b, dst.row_mut(y + 1), x, out1);
+                P::store(b, dst.row_mut(y + 1 - y0), x, out1);
             }
         }
         y += 2;
     }
-    dst
 }
 
 /// Cols-window pass, NEON, direct strategy with offset loads (§5.2.2).
@@ -218,19 +284,43 @@ pub fn rows_scalar_linear<P: MorphPixel, B: Backend>(
 /// (cache-resident, reused across rows) so the unrolled offset loads
 /// never leave the buffer; all window loads are unaligned, matching the
 /// `vld1q(src + x - wing + j)` pattern of the listing.
-pub fn cols_simd_linear<P: MorphPixel, B: Backend>(
+pub fn cols_simd_linear<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
 ) -> Image<P> {
-    let wing = wing_of(window, "w_x");
+    let src = src.into();
+    let _ = wing_of(window, "w_x");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
-        return src.clone();
+        return src.to_image();
+    }
+    let mut dst = Image::zeros(h, w);
+    cols_simd_linear_into(b, src, dst.view_mut(), window, op);
+    dst
+}
+
+/// [`cols_simd_linear`] writing directly into `dst` (same shape as
+/// `src`; rows are independent, so there is no row offset).
+pub fn cols_simd_linear_into<P: MorphPixel, B: Backend>(
+    b: &mut B,
+    src: ImageView<'_, P>,
+    mut dst: ImageViewMut<'_, P>,
+    window: usize,
+    op: MorphOp,
+) {
+    let wing = wing_of(window, "w_x");
+    let (h, w) = (src.height(), src.width());
+    debug_assert_eq!((dst.height(), dst.width()), (h, w));
+    if h == 0 || w == 0 {
+        return;
+    }
+    if window == 1 {
+        dst.copy_rows_from(src, 0);
+        return;
     }
     let px = std::mem::size_of::<P>() as u64;
-    let mut dst = Image::zeros(h, w);
     b.record_stream((h * w) as u64 * px, (h * w) as u64 * px);
     let wv = w - w % P::LANES;
     let ident: P = op.identity();
@@ -266,23 +356,45 @@ pub fn cols_simd_linear<P: MorphPixel, B: Backend>(
             P::store(b, dst.row_mut(y), x, val);
         }
     }
-    dst
 }
 
 /// Cols-window pass, scalar.
-pub fn cols_scalar_linear<P: MorphPixel, B: Backend>(
+pub fn cols_scalar_linear<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
 ) -> Image<P> {
-    let wing = wing_of(window, "w_x");
+    let src = src.into();
+    let _ = wing_of(window, "w_x");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
-        return src.clone();
+        return src.to_image();
+    }
+    let mut dst = Image::zeros(h, w);
+    cols_scalar_linear_into(b, src, dst.view_mut(), window, op);
+    dst
+}
+
+/// [`cols_scalar_linear`] writing directly into `dst`.
+pub fn cols_scalar_linear_into<P: MorphPixel, B: Backend>(
+    b: &mut B,
+    src: ImageView<'_, P>,
+    mut dst: ImageViewMut<'_, P>,
+    window: usize,
+    op: MorphOp,
+) {
+    let wing = wing_of(window, "w_x");
+    let (h, w) = (src.height(), src.width());
+    debug_assert_eq!((dst.height(), dst.width()), (h, w));
+    if h == 0 || w == 0 {
+        return;
+    }
+    if window == 1 {
+        dst.copy_rows_from(src, 0);
+        return;
     }
     let px = std::mem::size_of::<P>() as u64;
-    let mut dst = Image::zeros(h, w);
     b.record_stream((h * w) as u64 * px, (h * w) as u64 * px);
 
     for y in 0..h {
@@ -300,7 +412,6 @@ pub fn cols_scalar_linear<P: MorphPixel, B: Backend>(
             P::store(b, dst.row_mut(y), x, val);
         }
     }
-    dst
 }
 
 #[cfg(test)]
@@ -379,6 +490,49 @@ mod tests {
         // the two-row trick must handle the odd last row
         for &h in &[1, 2, 3, 7, 8] {
             check_rows(h, 20, 3, MorphOp::Erode, h as u64);
+        }
+    }
+
+    #[test]
+    fn into_variants_band_equals_full_pass_rows() {
+        // the zero-copy banding primitive: output rows [y0, y0+n) of a
+        // haloed sub-view must equal rows [y0, y0+n) of the full pass
+        let img = synth::noise(21, 24, 77);
+        for window in [3usize, 7] {
+            for op in [MorphOp::Erode, MorphOp::Dilate] {
+                let full = rows_simd_linear(&mut Native, &img, window, op);
+                let mut out = Image::zeros(6, 24);
+                // band rows 8..14, halo window/2 each side
+                let wing = window / 2;
+                let lo = 8 - wing;
+                let sub = img.view().sub_rows(lo..(14 + wing).min(21));
+                rows_simd_linear_into(&mut Native, sub, out.view_mut(), 8 - lo, window, op);
+                for (i, y) in (8..14).enumerate() {
+                    assert_eq!(out.row(i), full.row(y), "w={window} {op:?} row {y}");
+                }
+                // scalar variant too
+                let fulls = rows_scalar_linear(&mut Native, &img, window, op);
+                let mut outs = Image::zeros(6, 24);
+                rows_scalar_linear_into(&mut Native, sub, outs.view_mut(), 8 - lo, window, op);
+                for (i, y) in (8..14).enumerate() {
+                    assert_eq!(outs.row(i), fulls.row(y), "scalar w={window} row {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn passes_accept_strided_views() {
+        // kernels must honour the view's stride (no compact assumption)
+        let img = synth::noise(12, 20, 5);
+        let padded = img.with_stride(32, 0xCC);
+        for window in [3usize, 9] {
+            let want = rows_simd_linear(&mut Native, &img, window, MorphOp::Erode);
+            let got = rows_simd_linear(&mut Native, &padded, window, MorphOp::Erode);
+            assert!(got.same_pixels(&want), "rows via padded view, w={window}");
+            let wantc = cols_simd_linear(&mut Native, &img, window, MorphOp::Dilate);
+            let gotc = cols_simd_linear(&mut Native, &padded, window, MorphOp::Dilate);
+            assert!(gotc.same_pixels(&wantc), "cols via padded view, w={window}");
         }
     }
 

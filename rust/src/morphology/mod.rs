@@ -43,6 +43,17 @@
 //! bytes; the cost model prices both honestly from the counted mix (see
 //! `rust/tests/counting_u16.rs`).
 //!
+//! ## View contract
+//!
+//! Every pass takes a borrowed [`crate::image::ImageView`] as its
+//! source (a `&Image` coerces through `From` at each call site), and
+//! the 1-D passes have `_into` forms writing straight into a
+//! caller-provided [`crate::image::ImageViewMut`].  This is what lets
+//! [`parallel`] run band jobs with **zero staging copies** (overlapping
+//! haloed reads, disjoint in-place writes) and what powers the
+//! region-of-interest entry points ([`separable::erode_roi`] /
+//! [`separable::dilate_roi`] over a [`Roi`] rectangle).
+//!
 //! Conventions (identical to `python/compile/kernels/ref.py` and the HLO
 //! artifacts): images are `[row, col]`, the SE is `w_x` columns × `w_y`
 //! rows with odd sides and centered anchor, out-of-image samples take
@@ -58,13 +69,13 @@ pub mod parallel;
 pub mod separable;
 pub mod vhgw;
 
-use crate::image::{Image, Pixel};
+use crate::image::{Image, ImageView, Pixel};
 use crate::neon::{Backend, U16x8, U8x16};
 
 pub use derived::{blackhat, closing, gradient, opening, tophat};
 pub use hybrid::{HybridThresholds, PAPER_WX0, PAPER_WY0};
-pub use parallel::{filter_native, BandPool};
-pub use separable::{dilate, erode, morphology};
+pub use parallel::{filter_native, filter_roi, BandPool};
+pub use separable::{dilate, dilate_roi, erode, erode_roi, morphology};
 
 /// A pixel depth the morphology stack can filter: scalar + SIMD min/max,
 /// loads/stores at both alignments, and the §4 tiled transpose for this
@@ -109,9 +120,10 @@ pub trait MorphPixel: Pixel {
     fn max_s<B: Backend>(b: &mut B, x: Self, y: Self) -> Self;
 
     /// Whole-image NEON tiled transpose at this depth (§4): 16×16.8
-    /// tiles for `u8`, 8×8.16 tiles for `u16`.  This is what the
-    /// [`VerticalStrategy::Transpose`] sandwich dispatches through.
-    fn transpose_image<B: Backend>(b: &mut B, img: &Image<Self>) -> Image<Self>;
+    /// tiles for `u8`, 8×8.16 tiles for `u16`, reading any borrowed
+    /// strided view.  This is what the [`VerticalStrategy::Transpose`]
+    /// sandwich dispatches through.
+    fn transpose_image<B: Backend>(b: &mut B, img: ImageView<'_, Self>) -> Image<Self>;
 
     /// Saturating subtraction (derived operations).
     fn sat_sub(self, other: Self) -> Self;
@@ -170,7 +182,7 @@ impl MorphPixel for u8 {
         b.scalar_max_u8(x, y)
     }
 
-    fn transpose_image<B: Backend>(b: &mut B, img: &Image<u8>) -> Image<u8> {
+    fn transpose_image<B: Backend>(b: &mut B, img: ImageView<'_, u8>) -> Image<u8> {
         crate::transpose::transpose_image(b, img)
     }
 
@@ -235,7 +247,7 @@ impl MorphPixel for u16 {
         b.scalar_max_u16(x, y)
     }
 
-    fn transpose_image<B: Backend>(b: &mut B, img: &Image<u16>) -> Image<u16> {
+    fn transpose_image<B: Backend>(b: &mut B, img: ImageView<'_, u16>) -> Image<u16> {
         crate::transpose::transpose_image_u16(b, img)
     }
 
@@ -415,6 +427,60 @@ impl Default for MorphConfig {
     }
 }
 
+/// A region of interest: the `height × width` rectangle whose top-left
+/// corner sits at image coordinates `(y, x)`.
+///
+/// ROI filtering ([`separable::erode_roi`] / [`separable::dilate_roi`]
+/// / [`parallel::filter_roi`]) computes exactly the pixels
+/// `crop(filter(full), roi)` would produce — the implementation filters
+/// a borrowed haloed sub-view of the source, so all reads and compute
+/// are bounded by `(height + w_y - 1) × (width + w_x - 1)` pixels
+/// rather than the full image.
+///
+/// Parses from the CLI shape `"Y,X,H,W"` (`--roi 10,20,100,200`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Roi {
+    pub y: usize,
+    pub x: usize,
+    pub height: usize,
+    pub width: usize,
+}
+
+impl Roi {
+    pub fn new(y: usize, x: usize, height: usize, width: usize) -> Roi {
+        Roi {
+            y,
+            x,
+            height,
+            width,
+        }
+    }
+
+    /// The whole-image ROI.
+    pub fn full(height: usize, width: usize) -> Roi {
+        Roi::new(0, 0, height, width)
+    }
+}
+
+impl std::str::FromStr for Roi {
+    type Err = String;
+
+    /// `"Y,X,H,W"` — four comma-separated non-negative integers.
+    fn from_str(s: &str) -> Result<Roi, String> {
+        let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+        if parts.len() != 4 {
+            return Err(format!("expected Y,X,H,W, got {s:?}"));
+        }
+        let mut nums = [0usize; 4];
+        for (slot, part) in nums.iter_mut().zip(&parts) {
+            *slot = part
+                .parse()
+                .map_err(|_| format!("invalid ROI component {part:?} in {s:?}"))?;
+        }
+        Ok(Roi::new(nums[0], nums[1], nums[2], nums[3]))
+    }
+}
+
 /// Validate an odd window size, returning its wing.
 pub(crate) fn wing_of(window: usize, what: &str) -> usize {
     assert!(
@@ -424,17 +490,17 @@ pub(crate) fn wing_of(window: usize, what: &str) -> usize {
     window / 2
 }
 
-/// Pre-pad an image by (wing_x, wing_y) replicated edges — the
+/// Pre-pad a view by (wing_x, wing_y) replicated edges — the
 /// [`Border::Replicate`] lowering.  The result is filtered with identity
 /// borders and cropped back by the caller.
 pub(crate) fn replicate_pad<P: Pixel>(
-    img: &Image<P>,
+    img: ImageView<'_, P>,
     wing_x: usize,
     wing_y: usize,
 ) -> Image<P> {
     let (h, w) = (img.height(), img.width());
     if h == 0 || w == 0 {
-        return img.clone();
+        return img.to_image();
     }
     Image::from_fn(h + 2 * wing_y, w + 2 * wing_x, |y, x| {
         let sy = y.saturating_sub(wing_y).min(h - 1);
@@ -443,15 +509,16 @@ pub(crate) fn replicate_pad<P: Pixel>(
     })
 }
 
-/// Crop the center `h × w` region starting at (wing_y, wing_x).
+/// Crop the `h × w` region starting at (wing_y, wing_x) — a borrowed
+/// sub-rectangle materialized compactly.
 pub(crate) fn crop<P: Pixel>(
-    img: &Image<P>,
+    img: ImageView<'_, P>,
     wing_y: usize,
     wing_x: usize,
     h: usize,
     w: usize,
 ) -> Image<P> {
-    Image::from_fn(h, w, |y, x| img.get(y + wing_y, x + wing_x))
+    img.sub_rect(wing_y, wing_x, h, w).to_image()
 }
 
 #[cfg(test)]
@@ -493,23 +560,34 @@ mod tests {
     #[test]
     fn replicate_pad_and_crop_round_trip() {
         let img = Image::from_fn(3, 4, |y, x| (10 * y + x) as u8);
-        let p = replicate_pad(&img, 2, 1);
+        let p = replicate_pad(img.view(), 2, 1);
         assert_eq!(p.height(), 5);
         assert_eq!(p.width(), 8);
         assert_eq!(p.get(0, 0), img.get(0, 0)); // corner replication
         assert_eq!(p.get(0, 7), img.get(0, 3));
         assert_eq!(p.get(4, 0), img.get(2, 0));
-        let c = crop(&p, 1, 2, 3, 4);
+        let c = crop(p.view(), 1, 2, 3, 4);
         assert!(c.same_pixels(&img));
     }
 
     #[test]
     fn replicate_pad_works_on_u16() {
         let img = Image::from_fn(2, 2, |y, x| (1000 * y + x) as u16);
-        let p = replicate_pad(&img, 1, 1);
+        let p = replicate_pad(img.view(), 1, 1);
         assert_eq!(p.get(0, 0), img.get(0, 0));
         assert_eq!(p.get(3, 3), img.get(1, 1));
-        assert!(crop(&p, 1, 1, 2, 2).same_pixels(&img));
+        assert!(crop(p.view(), 1, 1, 2, 2).same_pixels(&img));
+    }
+
+    #[test]
+    fn roi_parses_from_cli_shape() {
+        let r: Roi = "10,20,100,200".parse().unwrap();
+        assert_eq!(r, Roi::new(10, 20, 100, 200));
+        let r: Roi = " 0, 0, 5, 6 ".parse().unwrap();
+        assert_eq!(r, Roi::new(0, 0, 5, 6));
+        assert!("1,2,3".parse::<Roi>().is_err());
+        assert!("1,2,3,x".parse::<Roi>().is_err());
+        assert_eq!(Roi::full(4, 7), Roi::new(0, 0, 4, 7));
     }
 
     #[test]

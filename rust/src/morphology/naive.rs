@@ -5,17 +5,19 @@
 //! separability claim.
 
 use super::{wing_of, MorphOp, MorphPixel};
-use crate::image::Image;
+use crate::image::{Image, ImageView};
 use crate::neon::Backend;
 
-/// Direct 2-D windowed reduction with identity borders.
-pub fn morph2d_naive<P: MorphPixel, B: Backend>(
+/// Direct 2-D windowed reduction with identity borders.  Like every
+/// kernel, takes a borrowed [`ImageView`] (a `&Image` coerces).
+pub fn morph2d_naive<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     w_x: usize,
     w_y: usize,
     op: MorphOp,
 ) -> Image<P> {
+    let src = src.into();
     let wing_x = wing_of(w_x, "w_x");
     let wing_y = wing_of(w_y, "w_y");
     let (h, w) = (src.height(), src.width());
@@ -44,9 +46,9 @@ pub fn morph2d_naive<P: MorphPixel, B: Backend>(
 
 /// Naive 1-D reduction over a window of ROWS (oracle for the fast rows
 /// passes).
-pub fn rows_naive<P: MorphPixel, B: Backend>(
+pub fn rows_naive<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
 ) -> Image<P> {
@@ -55,9 +57,9 @@ pub fn rows_naive<P: MorphPixel, B: Backend>(
 
 /// Naive 1-D reduction over a window of COLUMNS (oracle for the fast
 /// cols passes).
-pub fn cols_naive<P: MorphPixel, B: Backend>(
+pub fn cols_naive<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
 ) -> Image<P> {

@@ -1,4 +1,6 @@
-//! Intra-image band-sharded parallel execution of the separable passes.
+//! Intra-image band-sharded parallel execution of the separable passes
+//! — **zero-copy**: band jobs borrow their inputs and outputs as
+//! strided views, never staging a slab.
 //!
 //! The paper's 1-D passes are embarrassingly parallel *within* one
 //! image: every output row of the rows-window pass depends only on the
@@ -14,22 +16,45 @@
 //! For a rows-window pass with window `w` (wing `r = w/2`), output rows
 //! `[b0, b1)` of a band read input rows `[b0 - r, b1 + r) ∩ [0, h)` —
 //! the band plus a `w - 1`-row **halo** (`r` rows on each side, clamped
-//! at the image edges).  Each band job copies its haloed input slab,
-//! runs the *unchanged* sequential pass on it, and writes the core rows
-//! into its disjoint slice of the output.  Bit-identity follows from
-//! the reduction structure: every output pixel is the exact min/max
-//! over `window ∩ image` with identity padding, and the haloed slab
-//! contains precisely that window for every core row — the slab edge
-//! coincides with the image edge exactly where the original pass would
-//! have clamped (proved case-by-case in the module tests; mirrored in
+//! at the image edges).  Each band job takes
+//!
+//! * a borrowed [`ImageView`] of its haloed input rows
+//!   ([`ImageView::sub_rows`] — no pixels copied), and
+//! * its disjoint [`crate::image::ImageViewMut`] slice of the
+//!   destination ([`crate::image::ImageViewMut::split_at_rows_mut`]),
+//!
+//! and runs the sequential kernel's `_into` form
+//! ([`separable::pass_rows_into`]) with the halo offset, writing core
+//! rows in place.  Bit-identity follows from the reduction structure:
+//! every output pixel is the exact min/max over `window ∩ image` with
+//! identity padding, and the haloed view contains precisely that window
+//! for every core row — the view edge coincides with the image edge
+//! exactly where the original pass would have clamped (proved
+//! case-by-case in the module tests; mirrored in
 //! `python/tests/test_band_geometry.py`).
 //!
+//! ## Why the aliasing is sound
+//!
+//! Adjacent bands' *input* views overlap (their halos share rows) while
+//! their *output* views are disjoint.  Overlapping reads are plain
+//! shared `&[P]` borrows — many `ImageView`s may alias.  Disjoint
+//! writes are enforced structurally: the only way to obtain two
+//! `ImageViewMut`s into one buffer is `split_at_rows_mut`, which
+//! partitions the underlying `&mut [P]` with `slice::split_at_mut`, so
+//! a band can never write another band's rows — the soundness argument
+//! is the borrow checker's, not a convention.  (Since PR 2 re-used the
+//! owned-`&Image` kernels, it had to *copy* a haloed slab in and stitch
+//! core rows out of every band — two full image copies per banded pass;
+//! this module's view-based rewrite deletes both, which is also what
+//! the cost model's zero-copy parallel term always assumed.)
+//!
 //! The direct cols-window pass (window across columns) is banded with a
-//! **zero halo** — rows are independent.  The §5.2.1 transpose sandwich
-//! keeps its two whole-image transposes sequential (they are
+//! **zero halo** — rows are independent
+//! ([`separable::pass_cols_direct_into`]).  The §5.2.1 transpose
+//! sandwich keeps its two whole-image transposes sequential (they are
 //! memory-bound; zero-copy banded transpose is a ROADMAP follow-on) and
-//! bands the middle rows pass over the *transposed* image in
-//! tile-aligned stripes ([`MorphPixel::LANES`]-row multiples, i.e.
+//! stripes the middle rows pass **in place over the transposed buffer**
+//! in tile-aligned bands ([`MorphPixel::LANES`]-row multiples, i.e.
 //! 16-column stripes of the original u8 image, 8-column stripes at
 //! u16), so no §4 transpose tile ever straddles a band boundary.
 //!
@@ -39,16 +64,17 @@
 //! ([`BandPool::global`]).  A banded pass submits its band jobs with
 //! [`BandPool::scope`] — a fork-join primitive that runs the first job
 //! on the calling thread, queues the rest, and blocks until every job
-//! has completed (so jobs may borrow the caller's stack).  Band jobs
-//! never spawn nested scopes, so a scope can never deadlock on pool
-//! capacity; coordinator workers are separate threads that *share* the
-//! band pool, so intra-image bands and cross-request concurrency
-//! contend for the same cores instead of oversubscribing them.
+//! has completed (so jobs may borrow the caller's stack — here, the
+//! source view and the split destination views).  Band jobs never spawn
+//! nested scopes, so a scope can never deadlock on pool capacity;
+//! coordinator workers are separate threads that *share* the band pool,
+//! so intra-image bands and cross-request concurrency contend for the
+//! same cores instead of oversubscribing them.
 //!
 //! ## Dispatch
 //!
-//! Banding pays a fork cost (pool wake-up + per-band staging), so
-//! [`filter_native`] consults the cost model before sharding: the
+//! Banding pays a fork cost (pool wake-up + per-band job bookkeeping),
+//! so [`filter_native`] consults the cost model before sharding: the
 //! sequential pass is priced with
 //! [`crate::costmodel::CostModel::estimate_separable_cost`] and
 //! [`crate::costmodel::CostModel::plan_workers`] picks the band count
@@ -57,6 +83,13 @@
 //! therefore stay sequential.  [`super::Parallelism`] in
 //! [`super::MorphConfig`] overrides the policy (`Sequential`, `Fixed`,
 //! `Auto`).
+//!
+//! ## Region of interest
+//!
+//! [`filter_roi`] composes the same view machinery in 2-D: it filters
+//! the borrowed haloed sub-rectangle around a [`Roi`] and returns
+//! exactly the pixels `crop(filter(full), roi)` would produce, at both
+//! pixel depths and under both borders.
 
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -66,11 +99,11 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use super::hybrid::resolve_method;
 use super::{
-    separable, HybridThresholds, MorphConfig, MorphOp, MorphPixel, Parallelism, PassMethod,
+    separable, HybridThresholds, MorphConfig, MorphOp, MorphPixel, Parallelism, PassMethod, Roi,
     VerticalStrategy,
 };
 use crate::costmodel::CostModel;
-use crate::image::Image;
+use crate::image::{Image, ImageView};
 use crate::neon::Native;
 
 // ---------------------------------------------------------------------------
@@ -265,41 +298,14 @@ impl BandPool {
 }
 
 // ---------------------------------------------------------------------------
-// banded passes
+// banded passes (zero-copy: borrowed haloed reads, disjoint in-place writes)
 // ---------------------------------------------------------------------------
-
-/// Owned copy of rows `r` of `src` (compact stride).
-fn copy_row_range<P: MorphPixel>(src: &Image<P>, r: Range<usize>) -> Image<P> {
-    let w = src.width();
-    let mut data = Vec::with_capacity(r.len() * w);
-    for y in r.clone() {
-        data.extend_from_slice(src.row(y));
-    }
-    Image::from_vec(r.len(), w, data)
-}
-
-/// Carve `dst`'s storage into per-band disjoint row slabs.
-fn carve_rows<'d, P: MorphPixel>(
-    dst: &'d mut Image<P>,
-    plan: &[Range<usize>],
-) -> Vec<&'d mut [P]> {
-    let w = dst.width();
-    debug_assert_eq!(dst.stride(), w, "banded dst must be compact");
-    let mut chunks = Vec::with_capacity(plan.len());
-    let mut rest: &mut [P] = dst.raw_mut();
-    for band in plan {
-        let (head, tail) = rest.split_at_mut(band.len() * w);
-        chunks.push(head);
-        rest = tail;
-    }
-    chunks
-}
 
 /// Rows-window pass executed as `bands` haloed row bands on `pool`.
 /// Bit-identical to [`separable::pass_rows`] with the same arguments.
-pub fn pass_rows_banded<P: MorphPixel>(
+pub fn pass_rows_banded<'a, P: MorphPixel>(
     pool: &BandPool,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
     method: PassMethod,
@@ -307,6 +313,7 @@ pub fn pass_rows_banded<P: MorphPixel>(
     thresholds: HybridThresholds,
     bands: usize,
 ) -> Image<P> {
+    let src = src.into();
     pass_rows_banded_aligned(pool, src, window, op, method, simd, thresholds, bands, 1)
 }
 
@@ -314,7 +321,7 @@ pub fn pass_rows_banded<P: MorphPixel>(
 /// multiples (tile-aligned stripes for the transpose sandwich).
 fn pass_rows_banded_aligned<P: MorphPixel>(
     pool: &BandPool,
-    src: &Image<P>,
+    src: ImageView<'_, P>,
     window: usize,
     op: MorphOp,
     method: PassMethod,
@@ -325,7 +332,7 @@ fn pass_rows_banded_aligned<P: MorphPixel>(
 ) -> Image<P> {
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
-        return src.clone();
+        return src.to_image();
     }
     let plan = split_bands_aligned(h, bands, align);
     if plan.len() <= 1 {
@@ -333,21 +340,29 @@ fn pass_rows_banded_aligned<P: MorphPixel>(
     }
     let wing = window / 2;
     let mut dst = Image::zeros(h, w);
-    let chunks = carve_rows(&mut dst, &plan);
-    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
-    for (band, chunk) in plan.iter().cloned().zip(chunks) {
-        jobs.push(Box::new(move || {
-            let input_range = halo(&band, wing, h);
-            let skip = band.start - input_range.start;
-            let slab = copy_row_range(src, input_range);
-            let out =
-                separable::pass_rows(&mut Native, &slab, window, op, method, simd, thresholds);
-            for (i, row) in chunk.chunks_mut(w).enumerate() {
-                row.copy_from_slice(out.row(skip + i));
-            }
-        }));
+    {
+        // disjoint per-band output views — no staging slab, no stitch
+        let chunks = dst.view_mut().split_rows_mut(&plan);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
+        for (band, chunk) in plan.iter().cloned().zip(chunks) {
+            jobs.push(Box::new(move || {
+                let input = halo(&band, wing, h);
+                let skip = band.start - input.start;
+                separable::pass_rows_into(
+                    &mut Native,
+                    src.sub_rows(input),
+                    chunk,
+                    skip,
+                    window,
+                    op,
+                    method,
+                    simd,
+                    thresholds,
+                );
+            }));
+        }
+        pool.scope(jobs);
     }
-    pool.scope(jobs);
     dst
 }
 
@@ -356,14 +371,15 @@ fn pass_rows_banded_aligned<P: MorphPixel>(
 ///
 /// * direct forms (scalar, and SIMD-linear §5.2.2) shard rows with a
 ///   zero halo — the window runs across columns, so rows are
-///   independent;
-/// * the §5.2.1 transpose sandwich transposes sequentially and bands
-///   the middle rows pass over the transposed image in
-///   [`MorphPixel::LANES`]-aligned stripes (16-/8-column stripes of the
+///   independent; each band reads its borrowed row view and writes its
+///   disjoint destination band in place;
+/// * the §5.2.1 transpose sandwich transposes sequentially and stripes
+///   the middle rows pass in place over the *transposed* buffer in
+///   [`MorphPixel::LANES`]-aligned bands (16-/8-column stripes of the
 ///   original image).
-pub fn pass_cols_banded<P: MorphPixel>(
+pub fn pass_cols_banded<'a, P: MorphPixel>(
     pool: &BandPool,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
     method: PassMethod,
@@ -372,9 +388,10 @@ pub fn pass_cols_banded<P: MorphPixel>(
     thresholds: HybridThresholds,
     bands: usize,
 ) -> Image<P> {
+    let src = src.into();
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
-        return src.clone();
+        return src.to_image();
     }
     let m = resolve_method(method, window, thresholds.wx0);
     if separable::takes_sandwich(m, simd, vertical) {
@@ -383,7 +400,7 @@ pub fn pass_cols_banded<P: MorphPixel>(
         let t = P::transpose_image(&mut Native, src);
         let mid = pass_rows_banded_aligned(
             pool,
-            &t,
+            t.view(),
             window,
             op,
             m,
@@ -392,7 +409,7 @@ pub fn pass_cols_banded<P: MorphPixel>(
             bands,
             P::LANES,
         );
-        return P::transpose_image(&mut Native, &mid);
+        return P::transpose_image(&mut Native, mid.view());
     }
     // direct forms: rows are independent, zero halo
     let plan = split_bands(h, bands);
@@ -400,52 +417,52 @@ pub fn pass_cols_banded<P: MorphPixel>(
         return separable::pass_cols(&mut Native, src, window, op, m, simd, vertical, thresholds);
     }
     let mut dst = Image::zeros(h, w);
-    let chunks = carve_rows(&mut dst, &plan);
-    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
-    for (band, chunk) in plan.iter().cloned().zip(chunks) {
-        jobs.push(Box::new(move || {
-            let slab = copy_row_range(src, band);
-            let out = separable::pass_cols(
-                &mut Native,
-                &slab,
-                window,
-                op,
-                m,
-                simd,
-                vertical,
-                thresholds,
-            );
-            for (i, row) in chunk.chunks_mut(w).enumerate() {
-                row.copy_from_slice(out.row(i));
-            }
-        }));
+    {
+        let chunks = dst.view_mut().split_rows_mut(&plan);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
+        for (band, chunk) in plan.iter().cloned().zip(chunks) {
+            jobs.push(Box::new(move || {
+                separable::pass_cols_direct_into(
+                    &mut Native,
+                    src.sub_rows(band),
+                    chunk,
+                    window,
+                    op,
+                    m,
+                    simd,
+                    vertical,
+                    thresholds,
+                );
+            }));
+        }
+        pool.scope(jobs);
     }
-    pool.scope(jobs);
     dst
 }
 
 /// Full separable 2-D morphology with both passes band-sharded into
 /// `bands` bands.  Bit-identical to [`separable::morphology`].
-pub fn morphology_banded<P: MorphPixel>(
+pub fn morphology_banded<'a, P: MorphPixel>(
     pool: &BandPool,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     op: MorphOp,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
     bands: usize,
 ) -> Image<P> {
+    let src = src.into();
     let wing_x = super::wing_of(w_x, "w_x");
     let wing_y = super::wing_of(w_y, "w_y");
     if src.height() == 0 || src.width() == 0 {
-        return src.clone();
+        return src.to_image();
     }
     if cfg.border == super::Border::Replicate {
         let padded = super::replicate_pad(src, wing_x, wing_y);
         let mut inner = *cfg;
         inner.border = super::Border::Identity;
         let out = morphology_banded(pool, &padded, op, w_x, w_y, &inner, bands);
-        return super::crop(&out, wing_y, wing_x, src.height(), src.width());
+        return super::crop(out.view(), wing_y, wing_x, src.height(), src.width());
     }
     let after_rows = if w_y > 1 {
         pass_rows_banded(
@@ -459,7 +476,7 @@ pub fn morphology_banded<P: MorphPixel>(
             bands,
         )
     } else {
-        src.clone()
+        src.to_image()
     };
     if w_x > 1 {
         pass_cols_banded(
@@ -521,16 +538,18 @@ pub fn effective_bands<P: MorphPixel>(
 
 /// Native-speed separable morphology with automatic band-sharding —
 /// the crate's production entry point ([`super::erode`]/[`super::dilate`]
-/// and the coordinator's `NativeEngine` route through here).  Output is
+/// and the coordinator's `NativeEngine` route through here).  Accepts
+/// any borrowed view (whole image or ROI sub-rectangle); output is
 /// bit-identical to `separable::morphology(&mut Native, ..)` for every
 /// configuration.
-pub fn filter_native<P: MorphPixel>(
-    src: &Image<P>,
+pub fn filter_native<'a, P: MorphPixel>(
+    src: impl Into<ImageView<'a, P>>,
     op: MorphOp,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
+    let src = src.into();
     let bands = effective_bands::<P>(src.height(), src.width(), w_x, w_y, cfg);
     if bands <= 1 {
         return separable::morphology(&mut Native, src, op, w_x, w_y, cfg);
@@ -538,12 +557,63 @@ pub fn filter_native<P: MorphPixel>(
     morphology_banded(BandPool::global(), src, op, w_x, w_y, cfg, bands)
 }
 
+/// Region-of-interest filtering: exactly the pixels
+/// `crop(filter_native(full), roi)` would produce, computed from a
+/// borrowed haloed sub-view — work is bounded by the haloed block, i.e.
+/// only `(roi.height + w_y - 1) × (roi.width + w_x - 1)` source pixels
+/// are ever read or filtered (the wing-wide ring of block outputs
+/// around the ROI is computed and cropped away), never the full image.
+///
+/// Correctness is the band-halo argument lifted to 2-D: every ROI
+/// output's window extends at most `wing` past the ROI, i.e. stays
+/// inside the haloed block wherever the block edge is interior; and
+/// wherever the halo was clamped, the block edge *coincides with the
+/// image edge*, so the kernel's border handling (identity padding, or
+/// replicate pre-padding of the block) reproduces the full-image
+/// behaviour exactly.  Holds for every ROI position, both borders and
+/// both pixel depths (`rust/tests/roi_views.rs`).
+pub fn filter_roi<'a, P: MorphPixel>(
+    src: impl Into<ImageView<'a, P>>,
+    op: MorphOp,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+    roi: Roi,
+) -> Image<P> {
+    let src = src.into();
+    let wing_x = super::wing_of(w_x, "w_x");
+    let wing_y = super::wing_of(w_y, "w_y");
+    // overflow-proof bounds check (roi fields are caller-supplied)
+    let fits = roi.height <= src.height()
+        && roi.y <= src.height() - roi.height
+        && roi.width <= src.width()
+        && roi.x <= src.width() - roi.width;
+    assert!(
+        fits,
+        "ROI {roi:?} exceeds image {}x{}",
+        src.height(),
+        src.width()
+    );
+    if roi.height == 0 || roi.width == 0 {
+        return Image::zeros(roi.height, roi.width);
+    }
+    let y0 = roi.y.saturating_sub(wing_y);
+    let x0 = roi.x.saturating_sub(wing_x);
+    let y1 = (roi.y + roi.height + wing_y).min(src.height());
+    let x1 = (roi.x + roi.width + wing_x).min(src.width());
+    let block = src.sub_rect(y0, x0, y1 - y0, x1 - x0);
+    let out = filter_native(block, op, w_x, w_y, cfg);
+    out.view()
+        .sub_rect(roi.y - y0, roi.x - x0, roi.height, roi.width)
+        .to_image()
+}
+
 // -- parallel-aware derived operations (compositions of filter_native,
 //    matching `super::derived` exactly) ------------------------------------
 
 /// Banded opening: dilation of the erosion.
-pub fn opening_native<P: MorphPixel>(
-    src: &Image<P>,
+pub fn opening_native<'a, P: MorphPixel>(
+    src: impl Into<ImageView<'a, P>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
@@ -553,8 +623,8 @@ pub fn opening_native<P: MorphPixel>(
 }
 
 /// Banded closing: erosion of the dilation.
-pub fn closing_native<P: MorphPixel>(
-    src: &Image<P>,
+pub fn closing_native<'a, P: MorphPixel>(
+    src: impl Into<ImageView<'a, P>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
@@ -564,37 +634,40 @@ pub fn closing_native<P: MorphPixel>(
 }
 
 /// Banded morphological gradient: dilation − erosion.
-pub fn gradient_native<P: MorphPixel>(
-    src: &Image<P>,
+pub fn gradient_native<'a, P: MorphPixel>(
+    src: impl Into<ImageView<'a, P>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
+    let src = src.into();
     let d = filter_native(src, MorphOp::Dilate, w_x, w_y, cfg);
     let e = filter_native(src, MorphOp::Erode, w_x, w_y, cfg);
-    super::derived::pixelwise_sub(&d, &e)
+    super::derived::pixelwise_sub(d.view(), e.view())
 }
 
 /// Banded white top-hat: src − opening.
-pub fn tophat_native<P: MorphPixel>(
-    src: &Image<P>,
+pub fn tophat_native<'a, P: MorphPixel>(
+    src: impl Into<ImageView<'a, P>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
+    let src = src.into();
     let o = opening_native(src, w_x, w_y, cfg);
-    super::derived::pixelwise_sub(src, &o)
+    super::derived::pixelwise_sub(src, o.view())
 }
 
 /// Banded black top-hat: closing − src.
-pub fn blackhat_native<P: MorphPixel>(
-    src: &Image<P>,
+pub fn blackhat_native<'a, P: MorphPixel>(
+    src: impl Into<ImageView<'a, P>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
+    let src = src.into();
     let c = closing_native(src, w_x, w_y, cfg);
-    super::derived::pixelwise_sub(&c, src)
+    super::derived::pixelwise_sub(c.view(), src)
 }
 
 #[cfg(test)]
@@ -726,6 +799,20 @@ mod tests {
     }
 
     #[test]
+    fn banded_passes_accept_strided_views() {
+        // the zero-copy path must honour non-compact source strides
+        let pool = BandPool::new(3);
+        let img = synth::noise(33, 40, 0x57E1D);
+        let padded = img.with_stride(64, 0xAB);
+        let th = HybridThresholds::paper();
+        for method in [PassMethod::Linear, PassMethod::Vhgw] {
+            let want = separable::pass_rows(&mut Native, &img, 9, MorphOp::Erode, method, true, th);
+            let got = pass_rows_banded(&pool, &padded, 9, MorphOp::Erode, method, true, th, 4);
+            assert!(got.same_pixels(&want), "{method:?}: {:?}", got.first_diff(&want));
+        }
+    }
+
+    #[test]
     fn banded_morphology_matches_sequential_bitwise() {
         let pool = BandPool::new(3);
         let img = synth::noise(29, 33, 7);
@@ -770,6 +857,49 @@ mod tests {
     fn auto_stays_sequential_on_tiny_images() {
         let cfg = MorphConfig::default();
         assert_eq!(effective_bands::<u8>(16, 16, 3, 3, &cfg), 1);
+    }
+
+    #[test]
+    fn filter_roi_equals_cropped_filter_all_positions() {
+        // corner, edge-touching and interior ROIs; banded and sequential
+        let img = synth::noise(36, 44, 0x201);
+        for parallelism in [Parallelism::Sequential, Parallelism::Fixed(3)] {
+            let cfg = MorphConfig {
+                parallelism,
+                ..MorphConfig::default()
+            };
+            let full = filter_native(&img, MorphOp::Erode, 5, 7, &cfg);
+            for roi in [
+                Roi::new(0, 0, 10, 12),
+                Roi::new(0, 30, 8, 14),
+                Roi::new(26, 0, 10, 9),
+                Roi::new(9, 11, 15, 20),
+                Roi::full(36, 44),
+            ] {
+                let want = full
+                    .view()
+                    .sub_rect(roi.y, roi.x, roi.height, roi.width)
+                    .to_image();
+                let got = filter_roi(&img, MorphOp::Erode, 5, 7, &cfg, roi);
+                assert!(
+                    got.same_pixels(&want),
+                    "{parallelism:?} {roi:?}: {:?}",
+                    got.first_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn filter_roi_empty_and_oversized() {
+        let img = synth::noise(10, 10, 1);
+        let cfg = MorphConfig::default();
+        let empty = filter_roi(&img, MorphOp::Erode, 3, 3, &cfg, Roi::new(2, 2, 0, 5));
+        assert_eq!(empty.pixels(), 0);
+        let r = std::panic::catch_unwind(|| {
+            filter_roi(&img, MorphOp::Erode, 3, 3, &cfg, Roi::new(5, 5, 8, 8))
+        });
+        assert!(r.is_err(), "out-of-bounds ROI must panic");
     }
 
     #[test]

@@ -4,29 +4,62 @@
 //! pixel depth ([`MorphPixel`]): the same pass code serves `u8` (16
 //! SIMD lanes, 16×16.8 transpose tiles) and `u16` (8 lanes, 8×8.16
 //! tiles).
+//!
+//! Every pass reads a borrowed [`ImageView`] (a `&Image` coerces at the
+//! call site), and the 1-D passes also exist as `_into` forms writing
+//! straight into a caller-provided [`ImageViewMut`] — the zero-copy
+//! contract [`super::parallel`] band jobs rely on.
 
 use super::hybrid::resolve_method;
 use super::{linear, vhgw, wing_of};
-use super::{Border, MorphConfig, MorphOp, MorphPixel, PassMethod, VerticalStrategy};
-use crate::image::Image;
+use super::{Border, MorphConfig, MorphOp, MorphPixel, PassMethod, Roi, VerticalStrategy};
+use crate::image::{Image, ImageView, ImageViewMut};
 use crate::neon::Backend;
 
 /// One rows-window (paper "horizontal") pass with a *resolved* method.
-pub fn pass_rows<P: MorphPixel, B: Backend>(
+pub fn pass_rows<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
     method: PassMethod,
     simd: bool,
     thresholds: super::HybridThresholds,
 ) -> Image<P> {
+    let src = src.into();
     let m = resolve_method(method, window, thresholds.wy0);
     match (m, simd) {
         (PassMethod::Linear, true) => linear::rows_simd_linear(b, src, window, op),
         (PassMethod::Linear, false) => linear::rows_scalar_linear(b, src, window, op),
         (PassMethod::Vhgw, true) => vhgw::rows_simd_vhgw(b, src, window, op),
         (PassMethod::Vhgw, false) => vhgw::rows_scalar_vhgw(b, src, window, op),
+        (PassMethod::Hybrid, _) => unreachable!("resolve_method returns concrete"),
+    }
+}
+
+/// [`pass_rows`] writing output rows `y0 .. y0 + dst.height()` of the
+/// `src` filtering directly into `dst` — the zero-copy band primitive
+/// (band jobs pass a haloed source view and their disjoint destination
+/// band; `window == 1` degrades to a row copy).
+pub fn pass_rows_into<P: MorphPixel, B: Backend>(
+    b: &mut B,
+    src: ImageView<'_, P>,
+    dst: ImageViewMut<'_, P>,
+    y0: usize,
+    window: usize,
+    op: MorphOp,
+    method: PassMethod,
+    simd: bool,
+    thresholds: super::HybridThresholds,
+) {
+    let m = resolve_method(method, window, thresholds.wy0);
+    match (m, simd) {
+        (PassMethod::Linear, true) => linear::rows_simd_linear_into(b, src, dst, y0, window, op),
+        (PassMethod::Linear, false) => {
+            linear::rows_scalar_linear_into(b, src, dst, y0, window, op)
+        }
+        (PassMethod::Vhgw, true) => vhgw::rows_simd_vhgw_into(b, src, dst, y0, window, op),
+        (PassMethod::Vhgw, false) => vhgw::rows_scalar_vhgw_into(b, src, dst, y0, window, op),
         (PassMethod::Hybrid, _) => unreachable!("resolve_method returns concrete"),
     }
 }
@@ -41,9 +74,9 @@ pub fn pass_rows<P: MorphPixel, B: Backend>(
 /// * `simd == true`, [`VerticalStrategy::Direct`] → §5.2.2 offset-load
 ///   linear pass; vHGW has no direct SIMD form in the paper, so it falls
 ///   back to the transpose sandwich.
-pub fn pass_cols<P: MorphPixel, B: Backend>(
+pub fn pass_cols<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
     method: PassMethod,
@@ -51,6 +84,7 @@ pub fn pass_cols<P: MorphPixel, B: Backend>(
     vertical: VerticalStrategy,
     thresholds: super::HybridThresholds,
 ) -> Image<P> {
+    let src = src.into();
     let m = resolve_method(method, window, thresholds.wx0);
     if !simd {
         return match m {
@@ -68,16 +102,44 @@ pub fn pass_cols<P: MorphPixel, B: Backend>(
     }
 }
 
+/// The *direct* (non-sandwich) cols-window forms of [`pass_cols`],
+/// writing straight into `dst` — rows are independent, so band jobs
+/// pass zero-halo source bands.  Callers must have excluded the §5.2.1
+/// sandwich case with [`takes_sandwich`] first (the sandwich transposes
+/// whole images and is banded on the *transposed* buffer instead).
+pub fn pass_cols_direct_into<P: MorphPixel, B: Backend>(
+    b: &mut B,
+    src: ImageView<'_, P>,
+    dst: ImageViewMut<'_, P>,
+    window: usize,
+    op: MorphOp,
+    method: PassMethod,
+    simd: bool,
+    vertical: VerticalStrategy,
+    thresholds: super::HybridThresholds,
+) {
+    let m = resolve_method(method, window, thresholds.wx0);
+    debug_assert!(
+        !takes_sandwich(m, simd, vertical),
+        "sandwich configurations have no direct _into form"
+    );
+    if !simd {
+        match m {
+            PassMethod::Linear => linear::cols_scalar_linear_into(b, src, dst, window, op),
+            PassMethod::Vhgw => vhgw::cols_scalar_vhgw_into(b, src, dst, window, op),
+            PassMethod::Hybrid => unreachable!(),
+        }
+        return;
+    }
+    linear::cols_simd_linear_into(b, src, dst, window, op);
+}
+
 /// Whether a *resolved* cols-window method executes as the §5.2.1
 /// transpose sandwich: SIMD vHGW always (it has no direct SIMD form in
 /// the paper), SIMD linear only under [`VerticalStrategy::Transpose`].
 /// Single source of the strategy predicate — shared with the banded
 /// path (`super::parallel`) and the cost-model dispatch estimator.
-pub(crate) fn takes_sandwich(
-    resolved: PassMethod,
-    simd: bool,
-    vertical: VerticalStrategy,
-) -> bool {
+pub fn takes_sandwich(resolved: PassMethod, simd: bool, vertical: VerticalStrategy) -> bool {
     simd && matches!(
         (resolved, vertical),
         (PassMethod::Vhgw, _) | (PassMethod::Linear, VerticalStrategy::Transpose)
@@ -89,7 +151,7 @@ pub(crate) fn takes_sandwich(
 /// dispatched through [`MorphPixel::transpose_image`]).
 fn transpose_sandwich<P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: ImageView<'_, P>,
     window: usize,
     op: MorphOp,
     method: PassMethod,
@@ -97,23 +159,25 @@ fn transpose_sandwich<P: MorphPixel, B: Backend>(
 ) -> Image<P> {
     let t = P::transpose_image(b, src);
     let filtered = pass_rows(b, &t, window, op, method, true, thresholds);
-    P::transpose_image(b, &filtered)
+    P::transpose_image(b, filtered.view())
 }
 
 /// Full separable 2-D morphology under a [`MorphConfig`], at either
-/// pixel depth.
-pub fn morphology<P: MorphPixel, B: Backend>(
+/// pixel depth, on any borrowed view (whole image, row band or ROI
+/// sub-rectangle alike).
+pub fn morphology<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     op: MorphOp,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
+    let src = src.into();
     let wing_x = wing_of(w_x, "w_x");
     let wing_y = wing_of(w_y, "w_y");
     if src.height() == 0 || src.width() == 0 {
-        return src.clone();
+        return src.to_image();
     }
 
     if cfg.border == Border::Replicate {
@@ -121,13 +185,13 @@ pub fn morphology<P: MorphPixel, B: Backend>(
         let mut inner = *cfg;
         inner.border = Border::Identity;
         let out = morphology(b, &padded, op, w_x, w_y, &inner);
-        return super::crop(&out, wing_y, wing_x, src.height(), src.width());
+        return super::crop(out.view(), wing_y, wing_x, src.height(), src.width());
     }
 
     let after_rows = if w_y > 1 {
         pass_rows(b, src, w_y, op, cfg.method, cfg.simd, cfg.thresholds)
     } else {
-        src.clone()
+        src.to_image()
     };
     if w_x > 1 {
         pass_cols(
@@ -149,14 +213,46 @@ pub fn morphology<P: MorphPixel, B: Backend>(
 /// at either pixel depth.  Large images are band-sharded across the
 /// shared worker pool when the cost model predicts a win (bit-identical
 /// output; see [`super::parallel`]).
-pub fn erode<P: MorphPixel>(src: &Image<P>, w_x: usize, w_y: usize) -> Image<P> {
+pub fn erode<'a, P: MorphPixel>(
+    src: impl Into<ImageView<'a, P>>,
+    w_x: usize,
+    w_y: usize,
+) -> Image<P> {
     super::parallel::filter_native(src, MorphOp::Erode, w_x, w_y, &MorphConfig::default())
 }
 
 /// Dilation with the paper's final (§5.3) configuration, native speed,
 /// at either pixel depth.  Band-sharded like [`erode`].
-pub fn dilate<P: MorphPixel>(src: &Image<P>, w_x: usize, w_y: usize) -> Image<P> {
+pub fn dilate<'a, P: MorphPixel>(
+    src: impl Into<ImageView<'a, P>>,
+    w_x: usize,
+    w_y: usize,
+) -> Image<P> {
     super::parallel::filter_native(src, MorphOp::Dilate, w_x, w_y, &MorphConfig::default())
+}
+
+/// Region-of-interest erosion: computes exactly the `roi` rectangle of
+/// `erode(src)` — identical to cropping the full result, but all reads
+/// and compute are bounded by the ROI plus its `wing`-sized halo, never
+/// the full image (see [`super::parallel::filter_roi`] for the halo
+/// argument).
+pub fn erode_roi<'a, P: MorphPixel>(
+    src: impl Into<ImageView<'a, P>>,
+    w_x: usize,
+    w_y: usize,
+    roi: Roi,
+) -> Image<P> {
+    super::parallel::filter_roi(src, MorphOp::Erode, w_x, w_y, &MorphConfig::default(), roi)
+}
+
+/// Region-of-interest dilation — the [`erode_roi`] counterpart.
+pub fn dilate_roi<'a, P: MorphPixel>(
+    src: impl Into<ImageView<'a, P>>,
+    w_x: usize,
+    w_y: usize,
+    roi: Roi,
+) -> Image<P> {
+    super::parallel::filter_roi(src, MorphOp::Dilate, w_x, w_y, &MorphConfig::default(), roi)
 }
 
 #[cfg(test)]
@@ -238,6 +334,32 @@ mod tests {
         let d = dilate(&img, 3, 5);
         assert!(e.same_pixels(&naive::morph2d_naive(&mut Native, &img, 5, 3, MorphOp::Erode)));
         assert!(d.same_pixels(&naive::morph2d_naive(&mut Native, &img, 3, 5, MorphOp::Dilate)));
+    }
+
+    #[test]
+    fn roi_api_equals_cropped_full_filter() {
+        let img = synth::noise(40, 52, 31);
+        let roi = Roi::new(7, 9, 20, 24);
+        let full = erode(&img, 5, 7);
+        let want = full.view().sub_rect(7, 9, 20, 24).to_image();
+        let got = erode_roi(&img, 5, 7, roi);
+        assert!(got.same_pixels(&want), "{:?}", got.first_diff(&want));
+        let fulld = dilate(&img, 7, 3);
+        let wantd = fulld.view().sub_rect(7, 9, 20, 24).to_image();
+        let gotd = dilate_roi(&img, 7, 3, roi);
+        assert!(gotd.same_pixels(&wantd));
+    }
+
+    #[test]
+    fn morphology_on_sub_view_matches_cropped_oracle() {
+        // filtering a borrowed sub-rectangle == filtering its owned copy
+        let img = synth::noise(30, 33, 12);
+        let view = img.view().sub_rect(4, 6, 18, 21);
+        let owned = view.to_image();
+        let cfg = MorphConfig::default();
+        let got = morphology(&mut Native, view, MorphOp::Erode, 5, 5, &cfg);
+        let want = morphology(&mut Native, &owned, MorphOp::Erode, 5, 5, &cfg);
+        assert!(got.same_pixels(&want));
     }
 
     #[test]

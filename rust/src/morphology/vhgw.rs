@@ -12,16 +12,19 @@
 //!
 //! Our implementation materializes `R` (one padded image) and fuses the
 //! `S` scan with the merge, carrying the running suffix in a single row
-//! buffer — 3 combines per point, the classic vHGW census.
+//! buffer — 3 combines per point, the classic vHGW census.  The `R`
+//! buffer is the algorithm's inherent "doubled image size" cost, not a
+//! staging copy — the `_into` forms write their output straight into a
+//! caller-provided [`ImageViewMut`] with no other intermediates.
 //!
 //! The rows-window pass vectorizes trivially ([`MorphPixel::LANES`]
 //! columns per `vminq`, all aligned); the cols-window scalar pass is the
 //! paper's "vertical without SIMD" comparator (its SIMD counterpart is
 //! the §5.2.1 transpose sandwich in [`super::separable`]).  All passes
-//! are generic over the pixel depth.
+//! are generic over the pixel depth and read borrowed [`ImageView`]s.
 
 use super::{wing_of, MorphOp, MorphPixel};
-use crate::image::Image;
+use crate::image::{Image, ImageView, ImageViewMut};
 use crate::neon::Backend;
 
 /// Segment count covering `n + 2*wing` samples with segment length `w`.
@@ -35,7 +38,7 @@ pub(crate) fn seg_count(n: usize, window: usize) -> usize {
 /// `P(i) = src[i - wing]`, `ident_row` outside the image.
 #[inline]
 fn padded_row<'a, P: MorphPixel>(
-    src: &'a Image<P>,
+    src: ImageView<'a, P>,
     ident_row: &'a [P],
     wing: usize,
     h: usize,
@@ -49,28 +52,56 @@ fn padded_row<'a, P: MorphPixel>(
 }
 
 /// Rows-window vHGW pass, NEON (the §5.1.1 baseline *with* SIMD).
-pub fn rows_simd_vhgw<P: MorphPixel, B: Backend>(
+pub fn rows_simd_vhgw<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
 ) -> Image<P> {
-    let wing = wing_of(window, "w_y");
+    let src = src.into();
+    let _ = wing_of(window, "w_y");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
-        return src.clone();
+        return src.to_image();
+    }
+    let mut dst = Image::zeros(h, w);
+    rows_simd_vhgw_into(b, src, dst.view_mut(), 0, window, op);
+    dst
+}
+
+/// [`rows_simd_vhgw`] writing output rows `y0 .. y0 + dst.height()` of
+/// the `src` filtering directly into `dst` (band jobs pass a haloed
+/// `src` view and their disjoint destination band).
+pub fn rows_simd_vhgw_into<P: MorphPixel, B: Backend>(
+    b: &mut B,
+    src: ImageView<'_, P>,
+    mut dst: ImageViewMut<'_, P>,
+    y0: usize,
+    window: usize,
+    op: MorphOp,
+) {
+    let wing = wing_of(window, "w_y");
+    let (h, w) = (src.height(), src.width());
+    let n = dst.height();
+    debug_assert_eq!(dst.width(), w);
+    debug_assert!(y0 + n <= h);
+    if n == 0 || w == 0 {
+        return;
+    }
+    if window == 1 {
+        dst.copy_rows_from(src, y0);
+        return;
     }
     let nseg = seg_count(h, window);
     let ph = nseg * window; // padded height
     let px = std::mem::size_of::<P>() as u64;
-    let mut dst = Image::zeros(h, w);
     let wv = w - w % P::LANES;
 
     // streaming: src read twice (R scan + S scan), R written + read,
     // dst written — the "additional memory = doubled image size" cost
     b.record_stream(
         (2 * h * w + ph * w) as u64 * px,
-        (ph * w + h * w) as u64 * px,
+        (ph * w + n * w) as u64 * px,
     );
 
     // padded virtual source row: P(i) = src[i - wing], identity outside
@@ -124,6 +155,7 @@ pub fn rows_simd_vhgw<P: MorphPixel, B: Backend>(
     for i in (0..ph).rev() {
         let p = prow(i);
         let seg_last = i % window == window - 1;
+        let emit = (y0..y0 + n).contains(&i);
         let mut x = 0;
         while x < wv {
             b.scalar_overhead(1);
@@ -135,11 +167,11 @@ pub fn rows_simd_vhgw<P: MorphPixel, B: Backend>(
                 op.simd::<P, _>(b, prev, v)
             };
             P::vstore(b, &mut s_row[x..], s);
-            if i < h {
+            if emit {
                 // out[i] = comb(S[i], R[i + window - 1])
                 let rr = P::vload(b, &r[(i + window - 1) * w + x..]);
                 let o = op.simd::<P, _>(b, s, rr);
-                P::vstore(b, &mut dst.row_mut(i)[x..], o);
+                P::vstore(b, &mut dst.row_mut(i - y0)[x..], o);
             }
             x += P::LANES;
         }
@@ -152,36 +184,62 @@ pub fn rows_simd_vhgw<P: MorphPixel, B: Backend>(
                 op.scalar(b, prev, v)
             };
             P::store(b, &mut s_row, x, s);
-            if i < h {
+            if emit {
                 let rr = P::load(b, &r, (i + window - 1) * w + x);
                 let o = op.scalar(b, s, rr);
-                P::store(b, dst.row_mut(i), x, o);
+                P::store(b, dst.row_mut(i - y0), x, o);
             }
         }
     }
-    dst
 }
 
 /// Rows-window vHGW pass, scalar (the paper's Fig. 3 "without SIMD"
 /// baseline).
-pub fn rows_scalar_vhgw<P: MorphPixel, B: Backend>(
+pub fn rows_scalar_vhgw<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
 ) -> Image<P> {
-    let wing = wing_of(window, "w_y");
+    let src = src.into();
+    let _ = wing_of(window, "w_y");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
-        return src.clone();
+        return src.to_image();
+    }
+    let mut dst = Image::zeros(h, w);
+    rows_scalar_vhgw_into(b, src, dst.view_mut(), 0, window, op);
+    dst
+}
+
+/// [`rows_scalar_vhgw`] writing output rows `y0 .. y0 + dst.height()`
+/// directly into `dst`.
+pub fn rows_scalar_vhgw_into<P: MorphPixel, B: Backend>(
+    b: &mut B,
+    src: ImageView<'_, P>,
+    mut dst: ImageViewMut<'_, P>,
+    y0: usize,
+    window: usize,
+    op: MorphOp,
+) {
+    let wing = wing_of(window, "w_y");
+    let (h, w) = (src.height(), src.width());
+    let n = dst.height();
+    debug_assert_eq!(dst.width(), w);
+    debug_assert!(y0 + n <= h);
+    if n == 0 || w == 0 {
+        return;
+    }
+    if window == 1 {
+        dst.copy_rows_from(src, y0);
+        return;
     }
     let nseg = seg_count(h, window);
     let ph = nseg * window;
     let px = std::mem::size_of::<P>() as u64;
-    let mut dst = Image::zeros(h, w);
     b.record_stream(
         (2 * h * w + ph * w) as u64 * px,
-        (ph * w + h * w) as u64 * px,
+        (ph * w + n * w) as u64 * px,
     );
 
     let ident_row = vec![op.identity::<P>(); w];
@@ -211,6 +269,7 @@ pub fn rows_scalar_vhgw<P: MorphPixel, B: Backend>(
     for i in (0..ph).rev() {
         let p = prow(i);
         let seg_last = i % window == window - 1;
+        let emit = (y0..y0 + n).contains(&i);
         b.scalar_overhead(1);
         for x in 0..w {
             b.scalar_overhead(1);
@@ -222,34 +281,57 @@ pub fn rows_scalar_vhgw<P: MorphPixel, B: Backend>(
                 op.scalar(b, prev, v)
             };
             P::store(b, &mut s_row, x, s);
-            if i < h {
+            if emit {
                 let rr = P::load(b, &r, (i + window - 1) * w + x);
                 let o = op.scalar(b, s, rr);
-                P::store(b, dst.row_mut(i), x, o);
+                P::store(b, dst.row_mut(i - y0), x, o);
             }
         }
     }
-    dst
 }
 
 /// Cols-window vHGW pass, scalar, direct (the paper's Fig. 4 "without
 /// SIMD" comparator).  Per-row 1-D problems; the R buffer is one padded
 /// row, reused (cache-resident).
-pub fn cols_scalar_vhgw<P: MorphPixel, B: Backend>(
+pub fn cols_scalar_vhgw<'a, P: MorphPixel, B: Backend>(
     b: &mut B,
-    src: &Image<P>,
+    src: impl Into<ImageView<'a, P>>,
     window: usize,
     op: MorphOp,
 ) -> Image<P> {
-    let wing = wing_of(window, "w_x");
+    let src = src.into();
+    let _ = wing_of(window, "w_x");
     let (h, w) = (src.height(), src.width());
     if window == 1 || h == 0 || w == 0 {
-        return src.clone();
+        return src.to_image();
+    }
+    let mut dst = Image::zeros(h, w);
+    cols_scalar_vhgw_into(b, src, dst.view_mut(), window, op);
+    dst
+}
+
+/// [`cols_scalar_vhgw`] writing directly into `dst` (same shape as
+/// `src`; rows are independent).
+pub fn cols_scalar_vhgw_into<P: MorphPixel, B: Backend>(
+    b: &mut B,
+    src: ImageView<'_, P>,
+    mut dst: ImageViewMut<'_, P>,
+    window: usize,
+    op: MorphOp,
+) {
+    let wing = wing_of(window, "w_x");
+    let (h, w) = (src.height(), src.width());
+    debug_assert_eq!((dst.height(), dst.width()), (h, w));
+    if h == 0 || w == 0 {
+        return;
+    }
+    if window == 1 {
+        dst.copy_rows_from(src, 0);
+        return;
     }
     let nseg = seg_count(w, window);
     let pw = nseg * window;
     let px = std::mem::size_of::<P>() as u64;
-    let mut dst = Image::zeros(h, w);
     // src read twice, dst written; R is cache-resident per row
     b.record_stream((2 * h * w) as u64 * px, (h * w) as u64 * px);
 
@@ -292,7 +374,6 @@ pub fn cols_scalar_vhgw<P: MorphPixel, B: Backend>(
             }
         }
     }
-    dst
 }
 
 /// Expose the per-chunk combine census for documentation/tests: vHGW
@@ -378,6 +459,33 @@ mod tests {
         // heights that are exact multiples / off-by-one of the segment
         for &h in &[14, 15, 16, 29, 30, 31] {
             check_rows(h, 20, 5, MorphOp::Erode, h as u64);
+        }
+    }
+
+    #[test]
+    fn into_variant_emits_requested_rows_only() {
+        // the banding contract: a haloed view + row offset reproduces
+        // exactly the full pass's core rows
+        let img = synth::noise(26, 19, 9);
+        for window in [5usize, 9] {
+            let wing = window / 2;
+            let full = rows_simd_vhgw(&mut Native, &img, window, MorphOp::Erode);
+            let band = 10..17usize;
+            let lo = band.start - wing;
+            let hi = (band.end + wing).min(26);
+            let sub = img.view().sub_rows(lo..hi);
+            let mut out = Image::zeros(band.len(), 19);
+            rows_simd_vhgw_into(
+                &mut Native,
+                sub,
+                out.view_mut(),
+                band.start - lo,
+                window,
+                MorphOp::Erode,
+            );
+            for (i, y) in band.clone().enumerate() {
+                assert_eq!(out.row(i), full.row(y), "w={window} row {y}");
+            }
         }
     }
 

@@ -78,7 +78,7 @@ impl NativeEngine {
             "gradient" => parallel::gradient_native(img, w_x, w_y, cfg),
             "tophat" => parallel::tophat_native(img, w_x, w_y, cfg),
             "blackhat" => parallel::blackhat_native(img, w_x, w_y, cfg),
-            "transpose" => P::transpose_image(&mut Native, img),
+            "transpose" => P::transpose_image(&mut Native, img.view()),
             other => return Err(anyhow!("unknown op {other:?}")),
         };
         Ok(out)

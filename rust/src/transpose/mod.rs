@@ -15,15 +15,17 @@
 pub mod neon;
 pub mod scalar;
 
-use crate::image::Image;
+use crate::image::{Image, ImageView};
 use crate::neon::Backend;
 
 pub use neon::{transpose16x16_u8, transpose8x8_u16};
 pub use scalar::{transpose16x16_u8_scalar, transpose8x8_u16_scalar};
 
 /// Transpose a u8 image using 16×16 NEON tiles for the aligned interior
-/// and scalar copies for the right/bottom edges.
-pub fn transpose_image<B: Backend>(b: &mut B, img: &Image<u8>) -> Image<u8> {
+/// and scalar copies for the right/bottom edges.  Reads any borrowed
+/// strided [`ImageView`] (a `&Image` coerces).
+pub fn transpose_image<'a, B: Backend>(b: &mut B, img: impl Into<ImageView<'a, u8>>) -> Image<u8> {
+    let img = img.into();
     let (h, w) = (img.height(), img.width());
     let mut out = Image::zeros(w, h);
     b.record_stream((h * w) as u64, (h * w) as u64);
@@ -64,7 +66,11 @@ pub fn transpose_image<B: Backend>(b: &mut B, img: &Image<u8>) -> Image<u8> {
 /// Transpose a u16 image using the paper's 8×8.16 NEON tiles for the
 /// aligned interior and scalar copies for the right/bottom edges — the
 /// 16-bit counterpart of [`transpose_image`].
-pub fn transpose_image_u16<B: Backend>(b: &mut B, img: &Image<u16>) -> Image<u16> {
+pub fn transpose_image_u16<'a, B: Backend>(
+    b: &mut B,
+    img: impl Into<ImageView<'a, u16>>,
+) -> Image<u16> {
+    let img = img.into();
     let (h, w) = (img.height(), img.width());
     let mut out = Image::zeros(w, h);
     b.record_stream((2 * h * w) as u64, (2 * h * w) as u64);
@@ -99,7 +105,11 @@ pub fn transpose_image_u16<B: Backend>(b: &mut B, img: &Image<u16>) -> Image<u16
 }
 
 /// Scalar whole-image transpose (baseline for benches).
-pub fn transpose_image_scalar<B: Backend>(b: &mut B, img: &Image<u8>) -> Image<u8> {
+pub fn transpose_image_scalar<'a, B: Backend>(
+    b: &mut B,
+    img: impl Into<ImageView<'a, u8>>,
+) -> Image<u8> {
+    let img = img.into();
     let (h, w) = (img.height(), img.width());
     let mut out = Image::zeros(w, h);
     b.record_stream((h * w) as u64, (h * w) as u64);
@@ -114,11 +124,12 @@ pub fn transpose_image_scalar<B: Backend>(b: &mut B, img: &Image<u8>) -> Image<u
 
 /// Cache-blocked scalar transpose (the fair non-SIMD comparator for
 /// large images, where naive scalar thrashes the cache).
-pub fn transpose_image_blocked<B: Backend>(
+pub fn transpose_image_blocked<'a, B: Backend>(
     b: &mut B,
-    img: &Image<u8>,
+    img: impl Into<ImageView<'a, u8>>,
     block: usize,
 ) -> Image<u8> {
+    let img = img.into();
     let block = block.max(1);
     let (h, w) = (img.height(), img.width());
     let mut out = Image::zeros(w, h);
@@ -164,6 +175,21 @@ mod tests {
             let got = transpose_image_u16(&mut Native, &img);
             assert!(got.same_pixels(&want), "neon 8x8.16 tiled {h}x{w}");
         }
+    }
+
+    #[test]
+    fn tiled_transpose_reads_strided_and_sub_views() {
+        // view contract: padded strides and ROI sub-rectangles transpose
+        // identically to their compact copies
+        let img = synth::noise(40, 56, 21);
+        let padded = img.with_stride(64, 0xDD);
+        assert!(transpose_image(&mut Native, &padded).same_pixels(&img.transposed()));
+        let sub = img.view().sub_rect(3, 5, 33, 48);
+        let want = sub.to_image().transposed();
+        assert!(transpose_image(&mut Native, sub).same_pixels(&want));
+        let img16 = synth::noise_u16(24, 40, 4);
+        let padded16 = img16.with_stride(48, 7);
+        assert!(transpose_image_u16(&mut Native, &padded16).same_pixels(&img16.transposed()));
     }
 
     #[test]

@@ -103,8 +103,11 @@ fn bench_smoke_then_gate_round_trip() {
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     assert!(out_dir.join("BENCH_fig3.json").exists());
+    assert!(out_dir.join("BENCH_fig4.json").exists());
+    assert!(out_dir.join("BENCH_table1.json").exists());
     assert!(out_dir.join("BENCH_scaling.json").exists());
     assert!(base_dir.join("BENCH_scaling.json").exists());
+    assert!(base_dir.join("BENCH_table1.json").exists());
 
     // the gate passes against the just-written baselines
     let out = bin()
@@ -168,6 +171,84 @@ fn filter_parallel_flag_is_bit_identical() {
     let auto = run("auto", "auto.pgm");
     assert!(banded.same_pixels(&seq), "--parallel 4 must be bit-identical");
     assert!(auto.same_pixels(&seq), "--parallel auto must be bit-identical");
+}
+
+#[test]
+fn filter_roi_flag_equals_cropped_full_filter() {
+    // own subdir: tests run concurrently and `demo` writes fixed names
+    let dir = tmpdir().join("roi_flag");
+    std::fs::create_dir_all(&dir).unwrap();
+    let demo = bin()
+        .args(["demo", "--outdir"])
+        .arg(&dir)
+        .args(["--height", "80", "--width", "110"])
+        .output()
+        .unwrap();
+    assert!(demo.status.success());
+    let input = dir.join("demo_input.pgm");
+
+    let roi_out = dir.join("roi.pgm");
+    let out = bin()
+        .args(["filter", "--op", "erode", "--wx", "5", "--wy", "7"])
+        .args(["--roi", "10,20,32,48"])
+        .arg("--input")
+        .arg(&input)
+        .arg("--output")
+        .arg(&roi_out)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("roi 10,20,32x48"));
+
+    let img = neon_morph::image::read_pgm(&input).unwrap();
+    let got = neon_morph::image::read_pgm(&roi_out).unwrap();
+    assert_eq!((got.height(), got.width()), (32, 48));
+    let full = neon_morph::morphology::erode(&img, 5, 7);
+    let want = full.view().sub_rect(10, 20, 32, 48).to_image();
+    assert!(got.same_pixels(&want), "--roi must equal cropped full filter");
+
+    // malformed and out-of-bounds ROIs fail cleanly
+    let bad = bin()
+        .args(["filter", "--op", "erode", "--roi", "1,2,3"])
+        .arg("--input")
+        .arg(&input)
+        .arg("--output")
+        .arg(dir.join("bad.pgm"))
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    let oob = bin()
+        .args(["filter", "--op", "erode", "--roi", "70,100,30,30"])
+        .arg("--input")
+        .arg(&input)
+        .arg("--output")
+        .arg(dir.join("oob.pgm"))
+        .output()
+        .unwrap();
+    assert!(!oob.status.success());
+    // derived ops are not ROI-capable (documented limitation)
+    let grad = bin()
+        .args(["filter", "--op", "gradient", "--roi", "0,0,8,8"])
+        .arg("--input")
+        .arg(&input)
+        .arg("--output")
+        .arg(dir.join("grad.pgm"))
+        .output()
+        .unwrap();
+    assert!(!grad.status.success());
+    assert!(String::from_utf8_lossy(&grad.stderr).contains("erode|dilate"));
+    // the ROI path is native-only: an explicit --backend xla must be
+    // rejected, not silently ignored
+    let xla = bin()
+        .args(["filter", "--op", "erode", "--roi", "0,0,8,8", "--backend", "xla"])
+        .arg("--input")
+        .arg(&input)
+        .arg("--output")
+        .arg(dir.join("xla.pgm"))
+        .output()
+        .unwrap();
+    assert!(!xla.status.success());
+    assert!(String::from_utf8_lossy(&xla.stderr).contains("native engine"));
 }
 
 #[test]

@@ -35,14 +35,14 @@ fn auto_routes_artifact_shapes_to_xla_and_others_to_native() {
     let img = Arc::new(synth::noise(256, 256, 11));
     let r = coord.filter("erode", 3, 3, img.clone()).unwrap();
     assert_eq!(r.backend, "xla-pjrt");
-    let want = morphology::erode(&img, 3, 3);
+    let want = morphology::erode(img.view(), 3, 3);
     assert!(r.result.unwrap().expect_u8().same_pixels(&want));
 
     // 100x100 has no artifact -> native
     let img2 = Arc::new(synth::noise(100, 100, 12));
     let r2 = coord.filter("erode", 3, 3, img2.clone()).unwrap();
     assert_eq!(r2.backend, "native");
-    assert!(r2.result.unwrap().expect_u8().same_pixels(&morphology::erode(&img2, 3, 3)));
+    assert!(r2.result.unwrap().expect_u8().same_pixels(&morphology::erode(img2.view(), 3, 3)));
     coord.shutdown();
 }
 
@@ -118,7 +118,7 @@ fn native_fallback_when_artifact_dir_missing() {
     let img = Arc::new(synth::noise(32, 32, 17));
     let r = coord.filter("erode", 3, 3, img.clone()).unwrap();
     assert_eq!(r.backend, "native");
-    assert!(r.result.unwrap().expect_u8().same_pixels(&morphology::erode(&img, 3, 3)));
+    assert!(r.result.unwrap().expect_u8().same_pixels(&morphology::erode(img.view(), 3, 3)));
     coord.shutdown();
 }
 
@@ -147,9 +147,9 @@ fn derived_ops_through_full_xla_path() {
         assert_eq!(r.backend, "xla-pjrt", "{op}");
         let got = r.result.unwrap().expect_u8();
         let want = match op {
-            "opening" => morphology::opening(&mut Native, &img, wx, wy, &cfg),
-            "closing" => morphology::closing(&mut Native, &img, wx, wy, &cfg),
-            _ => morphology::gradient(&mut Native, &img, wx, wy, &cfg),
+            "opening" => morphology::opening(&mut Native, img.view(), wx, wy, &cfg),
+            "closing" => morphology::closing(&mut Native, img.view(), wx, wy, &cfg),
+            _ => morphology::gradient(&mut Native, img.view(), wx, wy, &cfg),
         };
         assert!(got.same_pixels(&want), "{op} xla != native");
     }
@@ -184,8 +184,8 @@ fn batching_stays_fair_when_bands_and_requests_contend_for_the_pool() {
         let op = if i % 2 == 0 { "erode" } else { "dilate" };
         tickets.push((op, coord.submit(op, 7, 7, img.clone()).unwrap()));
     }
-    let want_e = morphology::erode(&img, 7, 7);
-    let want_d = morphology::dilate(&img, 7, 7);
+    let want_e = morphology::erode(img.view(), 7, 7);
+    let want_d = morphology::dilate(img.view(), 7, 7);
     let (mut done_e, mut done_d) = (0u32, 0u32);
     for (op, t) in tickets {
         let r = t.wait().unwrap();

@@ -236,9 +236,9 @@ fn prop_coordinator_results_equal_direct_calls() {
         let got = resp.result.unwrap().expect_u8();
         let cfg = MorphConfig::default();
         let want = match op {
-            "erode" => morphology::erode(&img, w_x, w_y),
-            "dilate" => morphology::dilate(&img, w_x, w_y),
-            _ => morphology::gradient(&mut Native, &img, w_x, w_y, &cfg),
+            "erode" => morphology::erode(img.view(), w_x, w_y),
+            "dilate" => morphology::dilate(img.view(), w_x, w_y),
+            _ => morphology::gradient(&mut Native, img.view(), w_x, w_y, &cfg),
         };
         assert!(got.same_pixels(&want), "{op} {w_x}x{w_y}");
     });

@@ -1,0 +1,205 @@
+//! Property suite for the zero-copy view API:
+//!
+//! * **ROI correctness** — `filter_roi(img, roi) ==
+//!   crop(filter_native(img), roi)` across op × method × vertical ×
+//!   simd × border × depth, for random (including edge- and
+//!   corner-touching) ROIs.  This is the halo-containment theorem the
+//!   banded executor also rests on, exercised through the public API.
+//! * **Strided sources** — every pass must read through the view's
+//!   stride, so padded images filter identically to compact ones.
+//! * **`split_at_rows_mut` disjointness smoke** — randomized plans,
+//!   concurrent writers on the shared band pool, every cell written
+//!   exactly once (run under the seeded `util::prop` harness like the
+//!   rest of the differential tests).
+
+use neon_morph::image::{synth, Image, ImageView};
+use neon_morph::morphology::{
+    self, parallel, Border, HybridThresholds, MorphConfig, MorphOp, MorphPixel, Parallelism,
+    PassMethod, Roi, VerticalStrategy,
+};
+use neon_morph::util::prop::{dims, forall, odd_window};
+
+fn crop_of<P: MorphPixel>(full: &Image<P>, roi: Roi) -> Image<P> {
+    full.view()
+        .sub_rect(roi.y, roi.x, roi.height, roi.width)
+        .to_image()
+}
+
+fn random_roi(rng: &mut synth::Rng, h: usize, w: usize) -> Roi {
+    let rh = 1 + rng.below(h);
+    let rw = 1 + rng.below(w);
+    Roi::new(rng.below(h - rh + 1), rng.below(w - rw + 1), rh, rw)
+}
+
+fn configs() -> Vec<MorphConfig> {
+    let mut out = Vec::new();
+    for method in [PassMethod::Linear, PassMethod::Vhgw, PassMethod::Hybrid] {
+        for vertical in [VerticalStrategy::Direct, VerticalStrategy::Transpose] {
+            for simd in [false, true] {
+                for border in [Border::Identity, Border::Replicate] {
+                    out.push(MorphConfig {
+                        method,
+                        vertical,
+                        simd,
+                        border,
+                        // low thresholds so Hybrid exercises vHGW at
+                        // small test windows
+                        thresholds: HybridThresholds { wy0: 5, wx0: 5 },
+                        parallelism: Parallelism::Sequential,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+fn check_roi_grid<P: MorphPixel>(img: &Image<P>, w_x: usize, w_y: usize, roi: Roi, label: &str) {
+    for op in [MorphOp::Erode, MorphOp::Dilate] {
+        for cfg in configs() {
+            let full = parallel::filter_native(img, op, w_x, w_y, &cfg);
+            let want = crop_of(&full, roi);
+            let got = parallel::filter_roi(img, op, w_x, w_y, &cfg, roi);
+            assert!(
+                got.same_pixels(&want),
+                "{label} {op:?} {w_x}x{w_y} roi={roi:?} cfg={cfg:?}: {:?}",
+                got.first_diff(&want)
+            );
+        }
+    }
+}
+
+#[test]
+fn roi_equals_cropped_filter_u8_grid() {
+    let img = synth::noise(25, 31, 0x201A);
+    // interior, corner-touching, full-width band
+    for roi in [Roi::new(8, 9, 11, 13), Roi::new(0, 0, 9, 10), Roi::new(10, 0, 7, 31)] {
+        check_roi_grid(&img, 5, 7, roi, "u8");
+    }
+}
+
+#[test]
+fn roi_equals_cropped_filter_u16_grid() {
+    let img = synth::noise_u16(21, 24, 0x201B);
+    for roi in [Roi::new(6, 5, 10, 12), Roi::new(14, 16, 7, 8)] {
+        check_roi_grid(&img, 7, 5, roi, "u16");
+    }
+}
+
+#[test]
+fn prop_roi_matches_crop_random_everything() {
+    // randomized shapes, windows, ROI positions and depths; banded and
+    // sequential execution; failing cases replay from the printed seed
+    forall(0x5EED_201, 60, |rng, _case| {
+        let (h, w) = dims(rng, 30, 34);
+        let w_x = odd_window(rng, 9);
+        let w_y = odd_window(rng, 9);
+        let roi = random_roi(rng, h, w);
+        let op = if rng.below(2) == 0 { MorphOp::Erode } else { MorphOp::Dilate };
+        let parallelism = if rng.below(2) == 0 {
+            Parallelism::Sequential
+        } else {
+            Parallelism::Fixed(1 + rng.below(4))
+        };
+        let border = if rng.below(2) == 0 { Border::Identity } else { Border::Replicate };
+        let cfg = MorphConfig {
+            parallelism,
+            border,
+            ..MorphConfig::default()
+        };
+        if rng.below(2) == 0 {
+            let img = synth::noise(h, w, rng.next_u64());
+            let want = crop_of(&parallel::filter_native(&img, op, w_x, w_y, &cfg), roi);
+            let got = parallel::filter_roi(&img, op, w_x, w_y, &cfg, roi);
+            assert!(
+                got.same_pixels(&want),
+                "u8 {h}x{w} SE {w_x}x{w_y} {roi:?} {op:?} {cfg:?}: {:?}",
+                got.first_diff(&want)
+            );
+        } else {
+            let img = synth::noise_u16(h, w, rng.next_u64());
+            let want = crop_of(&parallel::filter_native(&img, op, w_x, w_y, &cfg), roi);
+            let got = parallel::filter_roi(&img, op, w_x, w_y, &cfg, roi);
+            assert!(
+                got.same_pixels(&want),
+                "u16 {h}x{w} SE {w_x}x{w_y} {roi:?} {op:?} {cfg:?}: {:?}",
+                got.first_diff(&want)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_simple_roi_api_and_strided_sources() {
+    forall(0x5EED_202, 40, |rng, _case| {
+        let (h, w) = dims(rng, 26, 26);
+        let w_x = odd_window(rng, 7);
+        let w_y = odd_window(rng, 7);
+        let roi = random_roi(rng, h, w);
+        let img = synth::noise(h, w, rng.next_u64());
+        // public one-call ROI API
+        let want = crop_of(&morphology::erode(&img, w_x, w_y), roi);
+        let got = morphology::erode_roi(&img, w_x, w_y, roi);
+        assert!(got.same_pixels(&want), "erode_roi {roi:?}");
+        let wantd = crop_of(&morphology::dilate(&img, w_x, w_y), roi);
+        let gotd = morphology::dilate_roi(&img, w_x, w_y, roi);
+        assert!(gotd.same_pixels(&wantd), "dilate_roi {roi:?}");
+        // a padded (strided) source must filter identically
+        let padded = img.with_stride(w + 1 + rng.below(17), 0xA5u8);
+        let got_padded = morphology::erode(&padded, w_x, w_y);
+        assert!(
+            got_padded.same_pixels(&morphology::erode(&img, w_x, w_y)),
+            "strided source {h}x{w} stride {}",
+            padded.stride()
+        );
+    });
+}
+
+#[test]
+fn prop_split_at_rows_mut_disjoint_concurrent_writes() {
+    // UB/disjointness smoke: random band plans, every band written by a
+    // different pool job, every cell of the image written exactly once
+    // with its band index — overlap or a missed row would corrupt the
+    // pattern (and MIRI/TSan-style aliasing bugs would show as torn
+    // values under the concurrent writers)
+    let pool = parallel::BandPool::global();
+    forall(0x5EED_203, 40, |rng, _case| {
+        let (h, w) = dims(rng, 40, 24);
+        let bands = 1 + rng.below(h + 3);
+        let plan = parallel::split_bands(h, bands);
+        let mut img = Image::<u8>::filled(h, w, 0xFF);
+        {
+            let chunks = img.view_mut().split_rows_mut(&plan);
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, mut chunk) in chunks.into_iter().enumerate() {
+                jobs.push(Box::new(move || {
+                    for y in 0..chunk.height() {
+                        chunk.row_mut(y).fill(i as u8);
+                    }
+                }));
+            }
+            pool.scope(jobs);
+        }
+        for (i, band) in plan.iter().enumerate() {
+            for y in band.clone() {
+                assert!(
+                    img.row(y).iter().all(|&v| v == i as u8),
+                    "row {y} not exclusively owned by band {i} (plan {plan:?})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn sub_views_share_storage_with_parent() {
+    // zero-copy sanity: a sub-view reads the parent's bytes (same
+    // addresses), so constructing one cannot allocate or copy pixels
+    let img = synth::noise(16, 20, 5);
+    let v: ImageView<'_, u8> = img.view();
+    let sub = v.sub_rect(3, 4, 8, 9);
+    assert!(std::ptr::eq(&sub.row(0)[0], &img.row(3)[4]));
+    assert!(std::ptr::eq(&sub.row(7)[8], &img.row(10)[12]));
+    let band = v.sub_rows(5..11);
+    assert!(std::ptr::eq(&band.row(0)[0], &img.row(5)[0]));
+}

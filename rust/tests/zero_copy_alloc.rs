@@ -1,0 +1,156 @@
+//! Allocation-count proof that banded passes are zero-copy.
+//!
+//! The PR-2 executor staged every band: a haloed input slab copied in,
+//! the sequential kernel's owned output allocated, and core rows
+//! stitched out — ≥ 2 extra image-sized heap allocations per banded
+//! pass.  The view-based executor borrows haloed [`ImageView`]s and
+//! writes disjoint `ImageViewMut` bands in place, so a banded linear
+//! pass allocates exactly what the sequential pass does (the
+//! destination image) plus small per-job bookkeeping (job boxes, the
+//! band plan, the scope latch, the cols pass's row-sized scratch
+//! buffer).
+//!
+//! The test measures heap bytes allocated during the calls with a
+//! counting global allocator and pins the banded-minus-sequential
+//! overhead to a small constant — one hidden image copy (64 KiB here)
+//! would blow the budget by an order of magnitude.
+//!
+//! [`ImageView`]: neon_morph::image::ImageView
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use neon_morph::image::synth;
+use neon_morph::morphology::parallel::{pass_cols_banded, pass_rows_banded, BandPool};
+use neon_morph::morphology::{HybridThresholds, MorphOp, PassMethod, VerticalStrategy};
+use neon_morph::neon::Native;
+
+struct CountingAlloc;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ALLOCATED: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ENABLED.load(Ordering::Relaxed) {
+            ALLOCATED.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ENABLED.load(Ordering::Relaxed) {
+            ALLOCATED.fetch_add(new_size as u64, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Heap bytes allocated (on any thread) while running `f`.
+fn allocated_during<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    ALLOCATED.store(0, Ordering::SeqCst);
+    ENABLED.store(true, Ordering::SeqCst);
+    let out = f();
+    ENABLED.store(false, Ordering::SeqCst);
+    (ALLOCATED.load(Ordering::SeqCst), out)
+}
+
+// Single #[test] so no sibling test's allocations pollute the counters
+// (the test harness runs tests in one process, possibly concurrently).
+#[test]
+fn banded_passes_allocate_no_staging_copies() {
+    const H: usize = 128;
+    const W: usize = 512; // dst = 64 KiB at u8
+    const BANDS: usize = 4;
+    let img = synth::noise(H, W, 0xA110C);
+    let th = HybridThresholds::paper();
+    // dedicated pool, created (threads spawned, channel set up) before
+    // measurement starts; one warm-up banded call settles lazy state
+    let pool = BandPool::new(BANDS);
+    let warm = pass_rows_banded(
+        &pool,
+        &img,
+        9,
+        MorphOp::Erode,
+        PassMethod::Linear,
+        true,
+        th,
+        BANDS,
+    );
+
+    // sequential baseline: allocates the destination (+ tiny locals)
+    let (seq_bytes, seq_out) = allocated_during(|| {
+        neon_morph::morphology::separable::pass_rows(
+            &mut Native,
+            &img,
+            9,
+            MorphOp::Erode,
+            PassMethod::Linear,
+            true,
+            th,
+        )
+    });
+
+    // banded rows pass: same dst, plus per-job bookkeeping only
+    let (rows_bytes, rows_out) = allocated_during(|| {
+        pass_rows_banded(
+            &pool,
+            &img,
+            9,
+            MorphOp::Erode,
+            PassMethod::Linear,
+            true,
+            th,
+            BANDS,
+        )
+    });
+    assert!(rows_out.same_pixels(&seq_out));
+    assert!(rows_out.same_pixels(&warm));
+
+    // banded direct cols pass: dst + the kernel's own row-sized scratch
+    // buffer per band
+    let (cols_bytes, _) = allocated_during(|| {
+        pass_cols_banded(
+            &pool,
+            &img,
+            9,
+            MorphOp::Erode,
+            PassMethod::Linear,
+            true,
+            VerticalStrategy::Direct,
+            th,
+            BANDS,
+        )
+    });
+
+    let dst_bytes = (H * W) as u64;
+    assert!(
+        seq_bytes >= dst_bytes,
+        "sequential pass must at least allocate dst: {seq_bytes} < {dst_bytes}"
+    );
+    // Budget: the old staging executor allocated ≥ 2 × (dst + halos)
+    // beyond dst (slab in + kernel output per band), i.e. ≥ 128 KiB of
+    // staging on this shape.  Allow 16 KiB for job boxes / plan /
+    // latch / channel nodes — a single hidden image copy (64 KiB)
+    // fails loudly.
+    let slack = 16 * 1024;
+    assert!(
+        rows_bytes <= seq_bytes + slack,
+        "banded rows pass allocated {rows_bytes} B vs sequential {seq_bytes} B — \
+         staging copies are back?"
+    );
+    // cols: per-band scratch row (W + window - 1 + LANES bytes each)
+    let scratch = (BANDS * (W + 64)) as u64;
+    assert!(
+        cols_bytes <= dst_bytes + scratch + slack,
+        "banded cols pass allocated {cols_bytes} B (budget {})",
+        dst_bytes + scratch + slack
+    );
+}
