@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use neon_morph::coordinator::Coordinator;
 use neon_morph::image::{synth, write_pgm};
-use neon_morph::morphology::{self, MorphConfig};
+use neon_morph::morphology::{self, FilterOp, FilterSpec, MorphConfig};
 use neon_morph::neon::Native;
 
 fn main() -> anyhow::Result<()> {
@@ -41,10 +41,22 @@ fn main() -> anyhow::Result<()> {
     println!("erode <= img <= dilate everywhere: {ok}");
     assert!(ok);
 
-    // 5. The same through the serving layer (router + batcher + workers).
+    // 5. Plan once, run many: a FilterSpec resolved into a FilterPlan
+    //    reuses its scratch arena across a batch of same-shape images.
+    let spec = FilterSpec::new(FilterOp::TopHat, 5, 5);
+    let mut plan = spec.plan::<u8>(img.height(), img.width())?;
+    let t = std::time::Instant::now();
+    let th = plan.run_owned(&img);
+    println!(
+        "tophat 5x5    : {:?} via a reused FilterPlan, range {:?}",
+        t.elapsed(),
+        th.min_max().unwrap()
+    );
+
+    // 6. The same through the serving layer (router + batcher + workers).
     let coord = Coordinator::start_native(2)?;
-    let resp = coord.filter("erode", 7, 7, Arc::new(img.clone()))?;
-    let served = resp.result?.expect_u8();
+    let resp = coord.filter_spec(FilterSpec::new(FilterOp::Erode, 7, 7), Arc::new(img.clone()))?;
+    let served = resp.result?.into_u8()?;
     println!(
         "served erode  : backend={} queue={} µs exec={} µs",
         resp.backend,
@@ -54,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     assert!(served.same_pixels(&eroded), "service must equal direct call");
     coord.shutdown();
 
-    // 6. Write results for eyeballing.
+    // 7. Write results for eyeballing.
     let dir = std::env::temp_dir();
     write_pgm(&img, dir.join("quickstart_input.pgm"))?;
     write_pgm(&eroded, dir.join("quickstart_eroded.pgm"))?;

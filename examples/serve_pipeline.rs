@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use neon_morph::image::synth;
-use neon_morph::runtime::{Engine, NativeEngine};
+use neon_morph::runtime::NativeEngine;
 
 fn main() -> anyhow::Result<()> {
     let requests: usize = std::env::args()
@@ -59,7 +59,9 @@ fn main() -> anyhow::Result<()> {
         .map(|i| {
             let m = &metas[i % metas.len()];
             let img = if m.height == 256 { &img_small } else { &img_paper };
-            (m.clone(), img.clone(), coord.submit(&m.op, m.w_x, m.w_y, img.clone()))
+            let op: neon_morph::morphology::FilterOp = m.op.parse().expect("manifest op");
+            let spec = neon_morph::morphology::FilterSpec::new(op, m.w_x, m.w_y);
+            (m.clone(), img.clone(), coord.submit(spec, img.clone()))
         })
         .collect();
 
@@ -68,7 +70,7 @@ fn main() -> anyhow::Result<()> {
     let mut verified = 0usize;
     for (meta, img, ticket) in submitted {
         let resp = ticket?.wait()?;
-        let out = resp.result?.expect_u8();
+        let out = resp.result?.into_u8()?;
         *by_backend.entry(resp.backend).or_default() += 1;
         // verify EVERY response against the native engine
         let want = native.run(&meta, &img)?;

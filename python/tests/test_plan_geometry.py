@@ -1,0 +1,221 @@
+"""Independent verification of the plan-executor geometry in
+``rust/src/morphology/plan.rs``.
+
+The plan--execute API evaluates a whole op *chain* (erode/dilate plus
+the derived ops lowered to primitive erode/dilate/subtract steps) on a
+region of interest by filtering one haloed **block** around the ROI and
+cropping, instead of filtering the full image.  Its correctness claim
+is the PR-3 ROI halo-containment theorem lifted to chains:
+
+    crop(chain(full), roi) == crop(chain(block), roi - block_origin)
+
+where ``block = clamp(roi expanded by depth * wing per axis)`` and
+``depth`` is the length of the longest erode/dilate dependency path
+through the chain (1 for erode/dilate/gradient, 2 for open/close/
+tophat/blackhat, summed across chain elements).
+
+Why it holds: every primitive morph step's output pixel depends only on
+inputs within ``wing`` of it, so after ``depth`` steps the dependency
+cone has radius ``depth * wing``; inside the block, pixels closer than
+the remaining cone radius to an *interior* block edge may differ from
+the full-image computation, but the ROI sits at distance >= the full
+cone radius from every interior edge, and wherever the halo was clamped
+the block edge *coincides with the image edge*, where the kernel's
+border handling (identity padding, or replicate pre-padding of the
+block, applied per morph step exactly like the rust lowering) matches
+the full-image behaviour.  Subtract steps are pointwise (radius 0).
+
+This file checks the claim with numpy oracles over randomized chains,
+windows, borders and ROI positions (corner / edge-touching / interior),
+mirroring the plan's lowering and block arithmetic exactly.
+"""
+
+import random
+
+import numpy as np
+
+# ---- numpy oracle of the primitive kernels ------------------------------
+
+
+def _pad(img, wing_y, wing_x, mode, fill=None):
+    if mode == "edge":
+        return np.pad(img, ((wing_y, wing_y), (wing_x, wing_x)), mode="edge")
+    return np.pad(
+        img, ((wing_y, wing_y), (wing_x, wing_x)), mode="constant", constant_values=fill
+    )
+
+
+def _morph_identity(img, op, w_x, w_y):
+    """Separable windowed min/max with identity (constant) padding."""
+    wing_x, wing_y = w_x // 2, w_y // 2
+    fill = 255 if op == "min" else 0
+    p = _pad(img, wing_y, wing_x, "constant", fill)
+    h, w = img.shape
+    out = None
+    red = np.minimum if op == "min" else np.maximum
+    for dy in range(w_y):
+        for dx in range(w_x):
+            tile = p[dy : dy + h, dx : dx + w]
+            out = tile if out is None else red(out, tile)
+    return out
+
+
+def morph(img, op, w_x, w_y, border):
+    """One primitive erode/dilate step, mirroring the rust lowering of
+    Border::Replicate: replicate-pad by the wings, filter with identity
+    borders, crop the center back."""
+    if border == "replicate":
+        wing_x, wing_y = w_x // 2, w_y // 2
+        p = _pad(img, wing_y, wing_x, "edge")
+        full = _morph_identity(p, op, w_x, w_y)
+        h, w = img.shape
+        return full[wing_y : wing_y + h, wing_x : wing_x + w]
+    return _morph_identity(img, op, w_x, w_y)
+
+
+def sat_sub(a, b):
+    return np.where(a > b, a - b, np.zeros_like(a))
+
+
+# ---- mirror of plan.rs lowering -----------------------------------------
+
+DEPTH = {
+    "erode": 1,
+    "dilate": 1,
+    "gradient": 1,
+    "open": 2,
+    "close": 2,
+    "tophat": 2,
+    "blackhat": 2,
+}
+
+
+def run_op(img, op, w_x, w_y, border):
+    if op == "erode":
+        return morph(img, "min", w_x, w_y, border)
+    if op == "dilate":
+        return morph(img, "max", w_x, w_y, border)
+    if op == "open":
+        return run_op(run_op(img, "erode", w_x, w_y, border), "dilate", w_x, w_y, border)
+    if op == "close":
+        return run_op(run_op(img, "dilate", w_x, w_y, border), "erode", w_x, w_y, border)
+    if op == "gradient":
+        return sat_sub(
+            run_op(img, "dilate", w_x, w_y, border), run_op(img, "erode", w_x, w_y, border)
+        )
+    if op == "tophat":
+        return sat_sub(img, run_op(img, "open", w_x, w_y, border))
+    if op == "blackhat":
+        return sat_sub(run_op(img, "close", w_x, w_y, border), img)
+    raise ValueError(op)
+
+
+def run_chain(img, ops, w_x, w_y, border):
+    out = img
+    for op in ops:
+        out = run_op(out, op, w_x, w_y, border)
+    return out
+
+
+def plan_block(roi, h, w, ops, w_x, w_y):
+    """Mirror of FilterPlan::build's ROI -> block arithmetic."""
+    y, x, rh, rw = roi
+    depth = sum(DEPTH[o] for o in ops)
+    hx, hy = depth * (w_x // 2), depth * (w_y // 2)
+    y0, x0 = max(0, y - hy), max(0, x - hx)
+    y1, x1 = min(h, y + rh + hy), min(w, x + rw + hx)
+    return y0, x0, y1, x1
+
+
+def plan_roi(img, ops, w_x, w_y, border, roi):
+    """What the rust plan computes: chain on the haloed block, cropped."""
+    h, w = img.shape
+    y0, x0, y1, x1 = plan_block(roi, h, w, ops, w_x, w_y)
+    block = img[y0:y1, x0:x1]
+    out = run_chain(block, ops, w_x, w_y, border)
+    y, x, rh, rw = roi
+    return out[y - y0 : y - y0 + rh, x - x0 : x - x0 + rw]
+
+
+# ---- the property -------------------------------------------------------
+
+OPS = list(DEPTH)
+
+
+def _random_roi(rng, h, w):
+    kind = rng.randrange(4)
+    if kind == 0:  # corner
+        rh, rw = rng.randint(1, h), rng.randint(1, w)
+        return (0, 0, rh, rw)
+    if kind == 1:  # bottom-right corner (both edges clamped)
+        rh, rw = rng.randint(1, h), rng.randint(1, w)
+        return (h - rh, w - rw, rh, rw)
+    if kind == 2:  # full image
+        return (0, 0, h, w)
+    rh, rw = rng.randint(1, h), rng.randint(1, w)
+    return (rng.randint(0, h - rh), rng.randint(0, w - rw), rh, rw)
+
+
+def test_chain_roi_block_equals_cropped_chain():
+    rng = random.Random(0xC4A1)
+    for case in range(250):
+        h = rng.randint(1, 26)
+        w = rng.randint(1, 26)
+        img = np.asarray(
+            [[rng.randrange(256) for _ in range(w)] for _ in range(h)], dtype=np.int64
+        )
+        n_ops = rng.choice([1, 1, 1, 2, 3])
+        ops = [rng.choice(OPS) for _ in range(n_ops)]
+        w_x = rng.choice([1, 3, 5, 7])
+        w_y = rng.choice([1, 3, 5, 7])
+        border = rng.choice(["identity", "replicate"])
+        roi = _random_roi(rng, h, w)
+
+        full = run_chain(img, ops, w_x, w_y, border)
+        y, x, rh, rw = roi
+        want = full[y : y + rh, x : x + rw]
+        got = plan_roi(img, ops, w_x, w_y, border, roi)
+        assert got.shape == want.shape, (case, ops, roi)
+        assert np.array_equal(got, want), (
+            case,
+            ops,
+            (w_x, w_y),
+            border,
+            roi,
+            (h, w),
+        )
+
+
+def test_depth_is_tight_for_single_morphs():
+    # sanity: with one wing less of halo the block computation must be
+    # able to differ (the theorem's bound is not slack) — checked on a
+    # gradient-of-open chain where the cone is deepest
+    rng = random.Random(7)
+    mismatches = 0
+    for _ in range(200):
+        h = w = 16
+        img = np.asarray(
+            [[rng.randrange(256) for _ in range(w)] for _ in range(h)], dtype=np.int64
+        )
+        ops = ["open"]
+        w_x = w_y = 5
+        roi = (6, 6, 4, 4)
+        # under-haloed block: depth 1 instead of 2
+        y, x, rh, rw = roi
+        hy = hx = 1 * 2
+        y0, x0 = max(0, y - hy), max(0, x - hx)
+        y1, x1 = min(h, y + rh + hy), min(w, x + rw + hx)
+        block = img[y0:y1, x0:x1]
+        got = run_chain(block, ops, w_x, w_y, "identity")[
+            y - y0 : y - y0 + rh, x - x0 : x - x0 + rw
+        ]
+        want = run_chain(img, ops, w_x, w_y, "identity")[y : y + rh, x : x + rw]
+        if not np.array_equal(got, want):
+            mismatches += 1
+    assert mismatches > 0, "under-halo must be observable, else the bound is slack"
+
+
+if __name__ == "__main__":
+    test_chain_roi_block_equals_cropped_chain()
+    test_depth_is_tight_for_single_morphs()
+    print("plan geometry: all properties hold")

@@ -98,12 +98,12 @@ class Mix(dict):
         return self.compute_ns() + self.memory_ns()
 
 
-def rows_simd_linear(h, w, window):
+def rows_simd_linear(h, w, window, lanes=LANES, px=1):
     m = Mix()
     wing = window // 2
-    wv = w - w % LANES
-    chunks = wv // LANES
-    m.stream += 2 * h * w
+    wv = w - w % lanes
+    chunks = wv // lanes
+    m.stream += 2 * h * w * px
     y = 0
     while y < h:
         pair = y + 1 < h
@@ -127,15 +127,15 @@ def rows_simd_linear(h, w, window):
     return m
 
 
-def rows_simd_vhgw(h, w, window):
+def rows_simd_vhgw(h, w, window, lanes=LANES, px=1):
     m = Mix()
     wing = window // 2
     nseg = math.ceil((h + 2 * wing) / window)
     ph = nseg * window
-    wv = w - w % LANES
-    chunks = wv // LANES
+    wv = w - w % lanes
+    chunks = wv // lanes
     tail = w - wv
-    m.stream += (2 * h * w + ph * w) + (ph * w + h * w)
+    m.stream += ((2 * h * w + ph * w) + (ph * w + h * w)) * px
     for i in range(ph):  # R scan
         if i % window == 0:
             m.bump("scalar_alu", chunks)
@@ -171,12 +171,12 @@ def rows_simd_vhgw(h, w, window):
     return m
 
 
-def rows_scalar_vhgw(h, w, window):
+def rows_scalar_vhgw(h, w, window, px=1):
     m = Mix()
     wing = window // 2
     nseg = math.ceil((h + 2 * wing) / window)
     ph = nseg * window
-    m.stream += (2 * h * w + ph * w) + (ph * w + h * w)
+    m.stream += ((2 * h * w + ph * w) + (ph * w + h * w)) * px
     for i in range(ph):  # R scan
         m.bump("scalar_alu", 1)
         if i % window == 0:
@@ -318,6 +318,38 @@ def fig3_baseline():
     )
 
 
+def fig3_u16_baseline():
+    # mirrors bench_harness::fig3::run_u16 at host_iters=0 +
+    # scaling::fig3u16_json: the same loop structures at 16-bit depth --
+    # 8 lanes per 128-bit op (so SIMD chunk counts double) and 2 bytes
+    # per element (so streamed bytes double); scalar instruction counts
+    # are depth-invariant.
+    headline = {}
+    series = {}
+    for w in SMOKE_WINDOWS:
+        ns = [
+            rows_scalar_vhgw(H, W, w, px=2).price_ns(),
+            rows_simd_vhgw(H, W, w, lanes=8, px=2).price_ns(),
+            rows_simd_linear(H, W, w, lanes=8, px=2).price_ns(),
+        ]
+        ns.append(ns[2] if w <= PAPER_WY0 else ns[1])  # hybrid
+        series[w] = ns
+    headline["vhgw_simd_speedup_w31"] = series[31][0] / series[31][1]
+    headline["linear_speedup_w3"] = series[3][0] / series[3][2]
+    # continuous series-shape anchors (the discrete crossover stays
+    # informational on the rust side -- never in the gated baseline)
+    headline["linear_w61_over_w31"] = series[61][2] / series[31][2]
+    headline["vhgw_simd_w61_over_w31"] = series[61][1] / series[31][1]
+    return (
+        {
+            "bench": "fig3u16",
+            "workload": "horizontal erosion on 800x600 u16",
+            "headline": headline,
+        },
+        series,
+    )
+
+
 def fig4_baseline():
     # mirrors bench_harness::fig4::run at host_iters=0 + scaling::fig4_json
     headline = {}
@@ -407,11 +439,13 @@ def main():
     outdir = sys.argv[1] if len(sys.argv) > 1 else "rust/benches/baselines"
     os.makedirs(outdir, exist_ok=True)
     fig3, series = fig3_baseline()
+    fig3u16, series16 = fig3_u16_baseline()
     fig4, series4 = fig4_baseline()
     table1 = table1_baseline()
     scaling, debug = scaling_baseline()
     for name, doc in [
         ("BENCH_fig3.json", fig3),
+        ("BENCH_fig3_u16.json", fig3u16),
         ("BENCH_fig4.json", fig4),
         ("BENCH_table1.json", table1),
         ("BENCH_scaling.json", scaling),
@@ -424,6 +458,10 @@ def main():
     print("\nfig3 model ns per window [vhgw, vhgw_simd, linear_simd, hybrid]:")
     for w, ns in series.items():
         print(f"  w={w:3d}: " + "  ".join(f"{v:12.1f}" for v in ns))
+    print("\nfig3 u16 model ns per window [vhgw, vhgw_simd, linear_simd, hybrid]:")
+    for w, ns in series16.items():
+        print(f"  w={w:3d}: " + "  ".join(f"{v:12.1f}" for v in ns))
+    print(f"fig3u16 headline: {fig3u16['headline']}")
     print("\nfig4 model ns per window [vhgw, vhgw_simd_T, linear_simd, hybrid]:")
     for w, ns in series4.items():
         print(f"  w={w:3d}: " + "  ".join(f"{v:12.1f}" for v in ns))

@@ -83,10 +83,17 @@ fn main() {
         })
         .expect("coordinator");
         let img = Arc::new(synth::noise(256, 256, 3));
-        let ops = ["erode", "dilate", "gradient"];
+        let ops = [
+            neon_morph::morphology::FilterOp::Erode,
+            neon_morph::morphology::FilterOp::Dilate,
+            neon_morph::morphology::FilterOp::Gradient,
+        ];
         let t0 = std::time::Instant::now();
         let tickets: Vec<_> = (0..48)
-            .map(|i| coord.submit(ops[i % 3], 3, 3, img.clone()).unwrap())
+            .map(|i| {
+                let spec = neon_morph::morphology::FilterSpec::new(ops[i % 3], 3, 3);
+                coord.submit(spec, img.clone()).unwrap()
+            })
             .collect();
         for t in tickets {
             t.wait().unwrap().result.unwrap();

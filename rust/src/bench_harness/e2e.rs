@@ -131,10 +131,19 @@ pub fn serve_native(requests: usize, workers: usize, w: usize) -> anyhow::Result
         precompile: false,
     })?;
     let img = Arc::new(synth::paper_image(0x5E57E));
-    let ops = ["erode", "dilate", "gradient"];
+    let ops = [
+        crate::morphology::FilterOp::Erode,
+        crate::morphology::FilterOp::Dilate,
+        crate::morphology::FilterOp::Gradient,
+    ];
     let t0 = std::time::Instant::now();
     let tickets: Vec<_> = (0..requests)
-        .map(|i| coord.submit(ops[i % ops.len()], w, w, img.clone()))
+        .map(|i| {
+            coord.submit(
+                crate::morphology::FilterSpec::new(ops[i % ops.len()], w, w),
+                img.clone(),
+            )
+        })
         .collect::<anyhow::Result<_>>()?;
     for t in tickets {
         t.wait()?.result?;

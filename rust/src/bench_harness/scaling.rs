@@ -226,6 +226,70 @@ pub fn fig3_json(sweep: &super::fig3::Sweep) -> Json {
     Json::Obj(root)
 }
 
+/// Machine-readable form of the u16 Fig-3 sweep (`BENCH_fig3_u16.json`):
+/// the same headline ratios as [`fig3_json`] measured on the 800×600
+/// **u16** workload (8 SIMD lanes/op, 2× streamed bytes) — the ROADMAP
+/// "perf-gate breadth, u16" item.  The ratio headlines are gated ±10%
+/// against `rust/benches/baselines/BENCH_fig3_u16.json`; the discrete
+/// smoke-grid crossover is reported as an **informational** top-level
+/// field only (same cliff rationale as Fig 4's `crossover_wx0_info`).
+pub fn fig3u16_json(sweep: &super::fig3::Sweep) -> Json {
+    let at = |w: usize| sweep.points.iter().find(|p| p.window == w);
+    let mut headline = BTreeMap::new();
+    if let Some(p) = at(31) {
+        headline.insert(
+            "vhgw_simd_speedup_w31".to_string(),
+            Json::Num(p.model_ns[0] / p.model_ns[1]),
+        );
+    }
+    if let Some(p) = at(3) {
+        headline.insert(
+            "linear_speedup_w3".to_string(),
+            Json::Num(p.model_ns[0] / p.model_ns[2]),
+        );
+    }
+    if let (Some(p31), Some(p61)) = (at(31), at(61)) {
+        // continuous anchors of the u16 series shapes: linear grows with
+        // w, vHGW stays ~flat — gated without a discrete crossover cliff
+        headline.insert(
+            "linear_w61_over_w31".to_string(),
+            Json::Num(p61.model_ns[2] / p31.model_ns[2]),
+        );
+        headline.insert(
+            "vhgw_simd_w61_over_w31".to_string(),
+            Json::Num(p61.model_ns[1] / p31.model_ns[1]),
+        );
+    }
+
+    let points = sweep
+        .points
+        .iter()
+        .map(|p| {
+            let mut o = BTreeMap::new();
+            o.insert("window".to_string(), Json::Num(p.window as f64));
+            for (i, series) in super::fig3::SERIES.iter().enumerate() {
+                o.insert(format!("{series}_model_ns"), Json::Num(p.model_ns[i]));
+            }
+            Json::Obj(o)
+        })
+        .collect();
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("fig3u16".to_string()));
+    root.insert(
+        "workload".to_string(),
+        Json::Str("horizontal erosion on 800x600 u16".to_string()),
+    );
+    root.insert("headline".to_string(), Json::Obj(headline));
+    // informational only: the u16 crossover sits on the same sparse grid
+    root.insert(
+        "crossover_wy0_info".to_string(),
+        Json::Num(sweep.crossover_model as f64),
+    );
+    root.insert("points".to_string(), Json::Arr(points));
+    Json::Obj(root)
+}
+
 /// Machine-readable form of a Fig-4 sweep (`BENCH_fig4.json`): the
 /// vertical-pass headline ratios — scalar vHGW over the §5.2.1
 /// transpose sandwich at w = 31, scalar vHGW over §5.2.2 direct linear
@@ -351,6 +415,28 @@ mod tests {
         assert!(h.get("linear_vs_sandwich_w61").unwrap().as_f64().unwrap() > 0.5);
         assert!(h.get("crossover_wx0").is_none(), "crossover must not be gated");
         assert!(j.get("crossover_wx0_info").unwrap().as_f64().unwrap() >= 3.0);
+        let again = crate::util::json::parse(&crate::util::json::write(&j)).unwrap();
+        assert_eq!(j, again);
+    }
+
+    #[test]
+    fn fig3u16_json_has_gated_headline() {
+        if cfg!(debug_assertions) {
+            eprintln!("SKIP in debug: 800x600 u16 counting sweep (runs under --release / make test)");
+            return;
+        }
+        let model = CostModel::exynos5422();
+        let s = super::super::fig3::run_u16(&model, &SMOKE_WINDOWS, 0);
+        let j = fig3u16_json(&s);
+        let h = j.get("headline").unwrap();
+        assert!(h.get("vhgw_simd_speedup_w31").unwrap().as_f64().unwrap() > 1.0);
+        assert!(h.get("linear_speedup_w3").unwrap().as_f64().unwrap() > 2.0);
+        // linear grows with w, vHGW stays ~flat — the gated series shapes
+        assert!(h.get("linear_w61_over_w31").unwrap().as_f64().unwrap() > 1.3);
+        assert!(h.get("vhgw_simd_w61_over_w31").unwrap().as_f64().unwrap() < 1.3);
+        assert!(h.get("crossover_wy0").is_none(), "crossover must not be gated");
+        assert!(j.get("crossover_wy0_info").unwrap().as_f64().unwrap() >= 3.0);
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("fig3u16"));
         let again = crate::util::json::parse(&crate::util::json::write(&j)).unwrap();
         assert_eq!(j, again);
     }

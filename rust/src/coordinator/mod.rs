@@ -4,32 +4,53 @@
 //! PJRT CPU client is synchronous anyway):
 //!
 //! ```text
-//!  submit() ──► BatchQueue (bounded, key-grouped)  ──► worker 0 ─► reply
-//!     │               │  backpressure: reject when full  worker 1 ─► reply
-//!     └─ Ticket ◄─────┘  batches keyed by (op, dtype, shape, w) ...
+//!  submit(FilterSpec, payload) ──► BatchQueue (bounded, key-grouped)
+//!     │               │  backpressure: reject when full   worker 0 ─► reply
+//!     └─ Ticket ◄─────┘  batches keyed by typed BatchKey  worker 1 ─► reply
+//!                         (depth, shape, op chain, config, ROI shape)
 //! ```
+//!
+//! Requests carry a full [`crate::morphology::FilterSpec`] — op chain
+//! (including derived ops and multi-op pipelines), window,
+//! configuration and optional ROI — through **one** depth-erased
+//! [`Coordinator::submit`].  The historical per-op × per-depth surface
+//! (`filter`/`filter_u16` with string ops) survives as thin wrappers
+//! that build single-op specs with the coordinator's default
+//! [`MorphConfig`].
 //!
 //! Each worker owns its engines — an optional [`XlaRuntime`] (PJRT,
 //! executing the python-AOT artifacts; `PjRtLoadedExecutable` is not
-//! `Sync`, so runtimes are never shared) and a [`NativeEngine`]
-//! (pure-rust §5.3 hybrid morphology).  The **router** picks per
-//! request: an artifact match on the XLA backend when available, native
-//! otherwise (or as directed by [`BackendChoice`]).
+//! `Sync`, so runtimes are never shared) and a [`NativeEngine`] (§5.3
+//! hybrid morphology behind a **plan cache**: each `(spec, shape)` is
+//! resolved once into a `FilterPlan` and reused across the batch — the
+//! queue's key-affinity makes consecutive pulls hit the same plan.
+//! Caveat: the plan cache keys on the *exact* spec, ROI position
+//! included (an edge-clamped block resolves different geometry), so a
+//! ROI batch only reuses plans across same-position crops;
+//! position-independent ROI plans are a ROADMAP follow-on).
+//! The **router** picks per request: an artifact match on the XLA
+//! backend when available (single-op, no-ROI, u8 specs only — the only
+//! shapes the AOT pipeline lowers), native otherwise (or as directed by
+//! [`BackendChoice`]).
 //!
-//! Depth routing: requests carry a depth-tagged
-//! [`request::ImagePayload`] (`u8` or `u16`); batch keys include the
-//! dtype so batches never mix depths.  AOT artifacts exist only for
-//! `u8`, so u16 requests always execute on the native engine (and fail
-//! under [`BackendChoice::XlaOnly`]).
+//! Depth routing: payloads are depth-tagged
+//! ([`request::ImagePayload`]); batch keys include the dtype so batches
+//! never mix depths, and u16 requests always execute on the native
+//! engine (and fail under [`BackendChoice::XlaOnly`]).
 //!
-//! Intra-image parallelism: native executions band-shard large images
-//! across the process-wide
-//! [`crate::morphology::parallel::BandPool`] (policy:
-//! `CoordinatorConfig::morph.parallelism`, default `Auto` — the cost
-//! model keeps small requests sequential).  Coordinator workers and
-//! band jobs share that one pool, so serving many small requests and
-//! splitting a few large ones use the same cores instead of
-//! oversubscribing them; results are bit-identical either way.
+//! Spec validation happens on the worker: an invalid spec (even window,
+//! out-of-bounds ROI) completes its ticket with an error result and
+//! counts toward the `failed` metric, exactly like the stringly
+//! "unknown op" requests of the previous API.
+//!
+//! Intra-image parallelism: native plans band-shard large images across
+//! the process-wide [`crate::morphology::parallel::BandPool`] (policy:
+//! the spec's `config.parallelism`, default `Auto` — the cost model
+//! keeps small requests sequential, resolved once at plan time).
+//! Coordinator workers and band jobs share that one pool, so serving
+//! many small requests and splitting a few large ones use the same
+//! cores instead of oversubscribing them; results are bit-identical
+//! either way.
 
 pub mod metrics;
 pub mod queue;
@@ -44,16 +65,16 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::image::Image;
-use crate::morphology::MorphConfig;
-use crate::runtime::{ArtifactMeta, Engine, Manifest, NativeEngine, XlaRuntime};
+use crate::morphology::{FilterOp, FilterSpec, MorphConfig};
+use crate::runtime::{Engine, Manifest, NativeEngine, XlaRuntime};
 use metrics::{Metrics, Snapshot};
 use queue::{BatchQueue, Pull};
-use request::{FilterOutput, FilterRequest, FilterResponse, ImagePayload, Pending, Ticket};
+use request::{BatchKey, FilterOutput, FilterResponse, ImagePayload, Pending, Ticket};
 
 /// Which engine(s) the router may use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendChoice {
-    /// XLA for shapes with artifacts, native for everything else.
+    /// XLA for specs with artifacts, native for everything else.
     Auto,
     /// Never touch PJRT (no artifacts needed).
     NativeOnly,
@@ -72,7 +93,8 @@ pub struct CoordinatorConfig {
     pub backend: BackendChoice,
     /// Artifact directory (required unless `NativeOnly`).
     pub artifact_dir: Option<PathBuf>,
-    /// Configuration of the native engine.
+    /// Default configuration applied by the legacy string-op wrappers
+    /// (`filter`/`filter_u16`); spec submissions carry their own.
     pub morph: MorphConfig,
     /// Compile all artifacts at startup instead of lazily.
     pub precompile: bool,
@@ -97,6 +119,7 @@ pub struct Coordinator {
     queue: Arc<BatchQueue>,
     metrics: Arc<Metrics>,
     manifest: Option<Arc<Manifest>>,
+    default_morph: MorphConfig,
     next_id: AtomicU64,
     workers: Vec<JoinHandle<()>>,
 }
@@ -137,6 +160,7 @@ impl Coordinator {
             queue,
             metrics,
             manifest,
+            default_morph: cfg.morph,
             next_id: AtomicU64::new(1),
             workers,
         })
@@ -152,23 +176,17 @@ impl Coordinator {
         })
     }
 
-    /// Submit a request with a depth-tagged payload.  Fails fast when
-    /// the queue is full (backpressure) or closed.
-    pub fn submit_image(
-        &self,
-        op: &str,
-        w_x: usize,
-        w_y: usize,
-        image: impl Into<ImagePayload>,
-    ) -> Result<Ticket> {
+    /// Submit a spec with a depth-tagged payload — the one submission
+    /// path for every op chain, depth and ROI.  Fails fast when the
+    /// queue is full (backpressure) or closed; spec validity is checked
+    /// by the executing worker (the ticket then carries the error).
+    pub fn submit(&self, spec: FilterSpec, image: impl Into<ImagePayload>) -> Result<Ticket> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let pending = Pending {
-            req: FilterRequest {
+            req: request::FilterRequest {
                 id,
-                op: op.to_string(),
-                w_x,
-                w_y,
+                spec,
                 image: image.into(),
                 enqueued: Instant::now(),
             },
@@ -186,29 +204,25 @@ impl Coordinator {
         }
     }
 
-    /// Submit a u8 request.
-    pub fn submit(
+    /// Submit a spec and block for the result.
+    pub fn filter_spec(
         &self,
-        op: &str,
-        w_x: usize,
-        w_y: usize,
-        image: Arc<Image<u8>>,
-    ) -> Result<Ticket> {
-        self.submit_image(op, w_x, w_y, image)
+        spec: FilterSpec,
+        image: impl Into<ImagePayload>,
+    ) -> Result<FilterResponse> {
+        self.submit(spec, image)?.wait()
     }
 
-    /// Submit a u16 request.
-    pub fn submit_u16(
-        &self,
-        op: &str,
-        w_x: usize,
-        w_y: usize,
-        image: Arc<Image<u16>>,
-    ) -> Result<Ticket> {
-        self.submit_image(op, w_x, w_y, image)
+    /// Build the single-op spec a legacy string-op call denotes, using
+    /// the coordinator's default morph configuration.
+    fn legacy_spec(&self, op: &str, w_x: usize, w_y: usize) -> Result<FilterSpec> {
+        let op: FilterOp = op.parse().map_err(|e| anyhow!("{e}"))?;
+        Ok(FilterSpec::new(op, w_x, w_y).with_config(self.default_morph))
     }
 
-    /// Submit a u8 request and block for the result.
+    /// Legacy wrapper: submit a u8 request by op name and block for the
+    /// result.  Bit-identical to `filter_spec` with the equivalent
+    /// single-op spec.
     pub fn filter(
         &self,
         op: &str,
@@ -216,10 +230,10 @@ impl Coordinator {
         w_y: usize,
         image: Arc<Image<u8>>,
     ) -> Result<FilterResponse> {
-        self.submit(op, w_x, w_y, image)?.wait()
+        self.filter_spec(self.legacy_spec(op, w_x, w_y)?, image)
     }
 
-    /// Submit a u16 request and block for the result.
+    /// Legacy wrapper: submit a u16 request by op name and block.
     pub fn filter_u16(
         &self,
         op: &str,
@@ -227,7 +241,7 @@ impl Coordinator {
         w_y: usize,
         image: Arc<Image<u16>>,
     ) -> Result<FilterResponse> {
-        self.submit_u16(op, w_x, w_y, image)?.wait()
+        self.filter_spec(self.legacy_spec(op, w_x, w_y)?, image)
     }
 
     pub fn metrics(&self) -> Snapshot {
@@ -260,30 +274,6 @@ impl Drop for Coordinator {
     }
 }
 
-/// Build the native-path artifact description for a request with no
-/// compiled artifact.
-fn synthetic_meta(req: &FilterRequest) -> ArtifactMeta {
-    let (h, w) = (req.image.height(), req.image.width());
-    ArtifactMeta {
-        name: req.batch_key(),
-        kind: if req.op == "transpose" {
-            "transpose".into()
-        } else {
-            "morphology".into()
-        },
-        op: req.op.clone(),
-        height: h,
-        width: w,
-        w_x: req.w_x,
-        w_y: req.w_y,
-        method: "hybrid".into(),
-        vertical: "transpose".into(),
-        dtype: req.image.dtype().into(),
-        file: String::new(),
-        out_shape: if req.op == "transpose" { (w, h) } else { (h, w) },
-    }
-}
-
 fn worker_loop(
     wid: usize,
     cfg: &CoordinatorConfig,
@@ -303,9 +293,9 @@ fn worker_loop(
         }
     }
 
-    let mut affinity: Option<String> = None;
+    let mut affinity: Option<BatchKey> = None;
     loop {
-        match queue.pull(affinity.as_deref(), Duration::from_millis(100)) {
+        match queue.pull(affinity.as_ref(), Duration::from_millis(100)) {
             Pull::Closed => break,
             Pull::Batch(batch) => {
                 Metrics::inc(&metrics.batches);
@@ -331,13 +321,17 @@ fn serve_one(
     p: Pending,
 ) {
     let queue_ns = p.req.enqueued.elapsed().as_nanos() as u64;
+    let spec = p.req.spec;
     let (h, w) = (p.req.image.height(), p.req.image.width());
-    // compiled artifacts exist only for u8 payloads
-    let compiled = match &p.req.image {
-        ImagePayload::U8(_) => manifest
+    // compiled artifacts exist only for u8 specs in canonical form
+    // (single op, no ROI, identity border — the shared predicate
+    // `FilterSpec::single_identity_op`; a replicate-border spec must
+    // never take the XLA path, its output pixels differ at the edges)
+    let compiled = match (&p.req.image, spec.single_identity_op()) {
+        (ImagePayload::U8(_), Some(op)) => manifest
             .as_ref()
-            .and_then(|m| m.find(&p.req.op, h, w, p.req.w_x, p.req.w_y).cloned()),
-        ImagePayload::U16(_) => None,
+            .and_then(|m| m.find(op.name(), h, w, spec.w_x, spec.w_y).cloned()),
+        _ => None,
     };
 
     let t = Instant::now();
@@ -345,12 +339,14 @@ fn serve_one(
         ImagePayload::U8(img) => {
             if cfg.backend == BackendChoice::XlaOnly {
                 match (compiled, xla.as_mut()) {
-                    (Some(meta), Some(rt)) => (
-                        rt.run(&meta, img).map(FilterOutput::U8),
-                        rt.backend_name(),
-                    ),
+                    (Some(meta), Some(rt)) => {
+                        (rt.run_u8(&meta, img).map(FilterOutput::U8), rt.backend_name())
+                    }
                     (None, _) => (
-                        Err(anyhow!("no artifact for {} (XlaOnly backend)", p.req.batch_key())),
+                        Err(anyhow!(
+                            "no artifact for {} (XlaOnly backend)",
+                            p.req.batch_key()
+                        )),
                         "xla-pjrt",
                     ),
                     (Some(_), None) => (
@@ -359,17 +355,17 @@ fn serve_one(
                     ),
                 }
             } else if let (Some(meta), Some(rt)) = (compiled.as_ref(), xla.as_mut()) {
-                match rt.run(meta, img) {
+                match rt.run_u8(meta, img) {
                     // Auto: degrade to native on runtime errors
                     Err(_) => (
-                        native.run(&synthetic_meta(&p.req), img).map(FilterOutput::U8),
+                        native.run_spec(&spec, img).map(FilterOutput::U8),
                         native.backend_name(),
                     ),
                     ok => (ok.map(FilterOutput::U8), rt.backend_name()),
                 }
             } else {
                 (
-                    native.run(&synthetic_meta(&p.req), img).map(FilterOutput::U8),
+                    native.run_spec(&spec, img).map(FilterOutput::U8),
                     native.backend_name(),
                 )
             }
@@ -385,9 +381,7 @@ fn serve_one(
                 )
             } else {
                 (
-                    native
-                        .run_u16(&synthetic_meta(&p.req), img)
-                        .map(FilterOutput::U16),
+                    native.run_spec_u16(&spec, img).map(FilterOutput::U16),
                     native.backend_name(),
                 )
             }
@@ -418,7 +412,7 @@ fn serve_one(
 mod tests {
     use super::*;
     use crate::image::synth;
-    use crate::morphology;
+    use crate::morphology::{self, Roi};
     use crate::neon::Native;
 
     #[test]
@@ -428,7 +422,7 @@ mod tests {
         let resp = coord.filter("erode", 5, 3, img.clone()).unwrap();
         assert_eq!(resp.backend, "native");
         let want = morphology::erode(img.view(), 5, 3);
-        assert!(resp.result.unwrap().expect_u8().same_pixels(&want));
+        assert!(resp.result.unwrap().into_u8().unwrap().same_pixels(&want));
         let snap = coord.metrics();
         assert_eq!(snap.completed, 1);
         assert_eq!(snap.failed, 0);
@@ -442,10 +436,29 @@ mod tests {
         let resp = coord.filter_u16("erode", 5, 3, img.clone()).unwrap();
         assert_eq!(resp.backend, "native");
         let want = morphology::erode(img.view(), 5, 3);
-        assert!(resp.result.unwrap().expect_u16().same_pixels(&want));
+        assert!(resp.result.unwrap().into_u16().unwrap().same_pixels(&want));
         let snap = coord.metrics();
         assert_eq!(snap.completed, 1);
         assert_eq!(snap.failed, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn spec_submission_runs_chains_and_rois() {
+        let coord = Coordinator::start_native(2).unwrap();
+        let img = Arc::new(synth::noise(40, 40, 9));
+        // a derived op with a ROI — inexpressible in the legacy API
+        let spec = FilterSpec::new(FilterOp::TopHat, 5, 5).with_roi(Roi::new(3, 4, 20, 22));
+        let resp = coord.filter_spec(spec, img.clone()).unwrap();
+        let out = resp.result.unwrap().into_u8().unwrap();
+        let full = morphology::parallel::tophat_native(&*img, 5, 5, &MorphConfig::default());
+        assert!(out.same_pixels(&full.view().sub_rect(3, 4, 20, 22).to_image()));
+        // a two-op chain
+        let chain = FilterSpec::new(FilterOp::Open, 3, 3).then(FilterOp::Gradient);
+        let resp = coord.filter_spec(chain, img.clone()).unwrap();
+        let o = morphology::opening(&mut Native, &*img, 3, 3, &MorphConfig::default());
+        let g = morphology::gradient(&mut Native, &o, 3, 3, &MorphConfig::default());
+        assert!(resp.result.unwrap().into_u8().unwrap().same_pixels(&g));
         coord.shutdown();
     }
 
@@ -454,12 +467,13 @@ mod tests {
         let coord = Coordinator::start_native(2).unwrap();
         let img8 = Arc::new(synth::noise(24, 24, 6));
         let img16 = Arc::new(synth::noise_u16(24, 24, 6));
+        let spec = FilterSpec::new(FilterOp::Erode, 3, 3);
         let mut tickets = Vec::new();
         for i in 0..20 {
             let t = if i % 2 == 0 {
-                coord.submit("erode", 3, 3, img8.clone()).unwrap()
+                coord.submit(spec, img8.clone()).unwrap()
             } else {
-                coord.submit_u16("erode", 3, 3, img16.clone()).unwrap()
+                coord.submit(spec, img16.clone()).unwrap()
             };
             tickets.push((i, t));
         }
@@ -480,8 +494,8 @@ mod tests {
         let img = Arc::new(synth::noise(24, 24, 6));
         let tickets: Vec<_> = (0..40)
             .map(|i| {
-                let op = if i % 2 == 0 { "erode" } else { "dilate" };
-                coord.submit(op, 3, 3, img.clone()).unwrap()
+                let op = if i % 2 == 0 { FilterOp::Erode } else { FilterOp::Dilate };
+                coord.submit(FilterSpec::new(op, 3, 3), img.clone()).unwrap()
             })
             .collect();
         for t in tickets {
@@ -495,12 +509,36 @@ mod tests {
     }
 
     #[test]
-    fn unknown_op_fails_cleanly() {
+    fn unknown_op_rejected_at_submission() {
+        // the typed spec API surfaces bad op names before queueing
         let coord = Coordinator::start_native(1).unwrap();
         let img = Arc::new(synth::noise(8, 8, 2));
-        let resp = coord.filter("sharpen", 3, 3, img).unwrap();
+        let err = coord.filter("sharpen", 3, 3, img).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown op"));
+        assert_eq!(coord.metrics().failed, 0);
+        assert_eq!(coord.metrics().submitted, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn invalid_spec_fails_on_the_worker() {
+        // spec validity (window parity, ROI bounds) is checked at plan
+        // time on the worker: the ticket completes with an error and
+        // the failure is metered
+        let coord = Coordinator::start_native(1).unwrap();
+        let img = Arc::new(synth::noise(8, 8, 2));
+        let resp = coord
+            .filter_spec(FilterSpec::new(FilterOp::Erode, 4, 4), img.clone())
+            .unwrap();
         assert!(resp.result.is_err());
-        assert_eq!(coord.metrics().failed, 1);
+        let resp = coord
+            .filter_spec(
+                FilterSpec::new(FilterOp::Erode, 3, 3).with_roi(Roi::new(6, 6, 5, 5)),
+                img,
+            )
+            .unwrap();
+        assert!(resp.result.is_err());
+        assert_eq!(coord.metrics().failed, 2);
         coord.shutdown();
     }
 
@@ -518,10 +556,11 @@ mod tests {
         })
         .unwrap();
         let img = Arc::new(synth::paper_image(3));
+        let spec = FilterSpec::new(FilterOp::Open, 15, 15);
         let mut shed = 0;
         let mut tickets = Vec::new();
         for _ in 0..64 {
-            match coord.submit("opening", 15, 15, img.clone()) {
+            match coord.submit(spec, img.clone()) {
                 Ok(t) => tickets.push(t),
                 Err(_) => shed += 1,
             }
@@ -543,7 +582,8 @@ mod tests {
             .unwrap()
             .result
             .unwrap()
-            .expect_u8();
+            .into_u8()
+            .unwrap();
         assert_eq!((out.height(), out.width()), (20, 10));
         let want = crate::transpose::transpose_image(&mut Native, img.view());
         assert!(out.same_pixels(&want));
@@ -559,9 +599,10 @@ mod tests {
             .unwrap()
             .result
             .unwrap()
-            .expect_u16();
+            .into_u16()
+            .unwrap();
         assert_eq!((out.height(), out.width()), (24, 16));
-        let want = crate::transpose::transpose_image_u16(&mut Native, &img);
+        let want = crate::transpose::transpose_image_u16(&mut Native, &*img);
         assert!(out.same_pixels(&want));
         coord.shutdown();
     }

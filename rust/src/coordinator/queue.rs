@@ -1,18 +1,23 @@
 //! The dynamic batching queue.
 //!
-//! Requests are grouped by [`FilterRequest::batch_key`]; a worker pull
+//! Requests are grouped by the typed [`BatchKey`]
+//! ([`super::request::FilterRequest::batch_key`]); a worker pull
 //! returns up to `max_batch` requests *of one key*, preferring the key
-//! the worker executed last (executable-cache affinity — on the XLA
-//! backend switching keys means touching a different compiled module).
-//! Total occupancy is bounded: pushes beyond `capacity` are rejected so
-//! overload sheds load at the front door instead of growing latency
-//! without bound (backpressure).
+//! the worker executed last (executable-/plan-cache affinity — on the
+//! XLA backend switching keys means touching a different compiled
+//! module, on the native engine a different resolved
+//! [`crate::morphology::FilterPlan`]).  Keys are `Copy` and hash
+//! without heap allocation, so grouping never allocates per request
+//! beyond the queue nodes themselves (allocation-counter test in
+//! `rust/tests/zero_copy_alloc.rs`).  Total occupancy is bounded:
+//! pushes beyond `capacity` are rejected so overload sheds load at the
+//! front door instead of growing latency without bound (backpressure).
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
-use super::request::Pending;
+use super::request::{BatchKey, Pending};
 
 /// Pop result.
 pub(crate) enum Pull {
@@ -23,7 +28,7 @@ pub(crate) enum Pull {
 }
 
 struct State {
-    by_key: BTreeMap<String, VecDeque<Pending>>,
+    by_key: HashMap<BatchKey, VecDeque<Pending>>,
     len: usize,
     closed: bool,
 }
@@ -40,7 +45,7 @@ impl BatchQueue {
     pub fn new(capacity: usize, max_batch: usize) -> Self {
         BatchQueue {
             state: Mutex::new(State {
-                by_key: BTreeMap::new(),
+                by_key: HashMap::new(),
                 len: 0,
                 closed: false,
             }),
@@ -68,18 +73,18 @@ impl BatchQueue {
     /// `affinity` is the key the caller last served; if it still has
     /// pending requests it is preferred, otherwise the longest queue is
     /// taken (drains hot keys first).
-    pub fn pull(&self, affinity: Option<&str>, wait: Duration) -> Pull {
+    pub fn pull(&self, affinity: Option<&BatchKey>, wait: Duration) -> Pull {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.len > 0 {
                 let key = affinity
                     .filter(|k| st.by_key.get(*k).is_some_and(|q| !q.is_empty()))
-                    .map(str::to_string)
+                    .copied()
                     .or_else(|| {
                         st.by_key
                             .iter()
                             .max_by_key(|(_, q)| q.len())
-                            .map(|(k, _)| k.clone())
+                            .map(|(k, _)| *k)
                     });
                 if let Some(key) = key {
                     let q = st.by_key.get_mut(&key).unwrap();
@@ -124,6 +129,7 @@ mod tests {
     use super::*;
     use crate::image::synth;
     use crate::image::Image;
+    use crate::morphology::{FilterOp, FilterSpec};
     use std::sync::mpsc;
     use std::sync::Arc;
     use std::time::Instant;
@@ -131,12 +137,11 @@ mod tests {
     fn pending(op: &str, w: usize, img: &Arc<Image<u8>>) -> Pending {
         let (tx, _rx) = mpsc::channel();
         std::mem::forget(_rx);
+        let op: FilterOp = op.parse().unwrap();
         Pending {
             req: super::super::request::FilterRequest {
                 id: 0,
-                op: op.into(),
-                w_x: w,
-                w_y: w,
+                spec: FilterSpec::new(op, w, w),
                 image: img.clone().into(),
                 enqueued: Instant::now(),
             },
@@ -158,7 +163,9 @@ mod tests {
             panic!("expected batch");
         };
         assert_eq!(b1.len(), 3); // longest queue first
-        assert!(b1.iter().all(|p| p.req.op == "erode"));
+        assert!(b1
+            .iter()
+            .all(|p| p.req.spec.single_op() == Some(FilterOp::Erode)));
         let Pull::Batch(b2) = q.pull(None, Duration::from_millis(10)) else {
             panic!("expected batch");
         };
@@ -193,7 +200,7 @@ mod tests {
             panic!();
         };
         assert_eq!(b.len(), 1);
-        assert_eq!(b[0].req.op, "dilate");
+        assert_eq!(b[0].req.spec.single_op(), Some(FilterOp::Dilate));
     }
 
     #[test]

@@ -1,16 +1,35 @@
 //! Request/response types of the filtering service.
 //!
-//! Requests carry a depth-tagged payload ([`ImagePayload`]): the same
-//! service filters `u8` and `u16` images, and the batch key includes the
-//! dtype so a batch never mixes depths (different depths run different
-//! compiled executables / kernel instantiations).
+//! Since the plan–execute redesign a request carries a full
+//! [`FilterSpec`] (op chain + window + configuration + optional ROI)
+//! and a depth-tagged payload ([`ImagePayload`]): the same service
+//! filters `u8` and `u16` images through **one** depth-erased
+//! [`super::Coordinator::submit`].
+//!
+//! ## Batch keys
+//!
+//! Requests are grouped by the typed [`BatchKey`] — `Copy`/`Eq`/`Hash`
+//! with **no per-submit heap allocation** (the PR-1..3 era key was a
+//! formatted `String` built on every push/pull).  Two requests share a
+//! key iff they would run the same resolved plan family:
+//!
+//! * pixel depth (a u8 batch and a u16 batch never mix — different
+//!   SIMD lane widths / compiled executables),
+//! * image shape,
+//! * op chain + window,
+//! * configuration (method/vertical/simd/border/thresholds/parallelism),
+//! * ROI **shape** (not position) — server-side ROI batching groups
+//!   same-size crops from document pipelines even when they land at
+//!   different offsets; the engine's plan cache keys on the full spec,
+//!   so clamped edge blocks still resolve their own plans.
 
+use std::fmt;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::image::Image;
-use crate::morphology::MorphPixel;
+use crate::morphology::{FilterSpec, MorphPixel};
 
 /// Pixel depth of a request payload.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -85,15 +104,76 @@ impl From<Arc<Image<u16>>> for ImagePayload {
     }
 }
 
-/// A filtering request: apply `op` with a `w_x × w_y` SE to `image`.
+/// Typed batching key — see the module docs for the grouping contract.
+/// `Copy` and heap-free: pushing, pulling and worker affinity never
+/// allocate (pinned by the allocation-counter test in
+/// `rust/tests/zero_copy_alloc.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub depth: PixelDepth,
+    pub height: usize,
+    pub width: usize,
+    pub spec_shape: SpecShape,
+}
+
+/// The spec portion of a [`BatchKey`]: everything of a [`FilterSpec`]
+/// except the ROI *position*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SpecShape {
+    pub ops: crate::morphology::OpChain,
+    pub w_x: usize,
+    pub w_y: usize,
+    pub config: crate::morphology::MorphConfig,
+    /// `(height, width)` of the ROI, if any.
+    pub roi_shape: Option<(usize, usize)>,
+}
+
+impl BatchKey {
+    /// Key for `spec` applied to an `height × width` image at `depth`.
+    pub fn of(spec: &FilterSpec, depth: PixelDepth, height: usize, width: usize) -> BatchKey {
+        BatchKey {
+            depth,
+            height,
+            width,
+            spec_shape: SpecShape {
+                ops: spec.ops,
+                w_x: spec.w_x,
+                w_y: spec.w_y,
+                config: spec.config,
+                roi_shape: spec.roi.map(|r| (r.height, r.width)),
+            },
+        }
+    }
+}
+
+impl fmt::Display for BatchKey {
+    /// Legacy-shaped rendering for logs/metrics:
+    /// `erode:u8:600x800:w5x3` (+ `:roiHxW` when present).  Display is
+    /// for humans only — grouping always uses the typed key.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}x{}:w{}x{}",
+            self.spec_shape.ops,
+            self.depth.dtype(),
+            self.height,
+            self.width,
+            self.spec_shape.w_x,
+            self.spec_shape.w_y
+        )?;
+        if let Some((h, w)) = self.spec_shape.roi_shape {
+            write!(f, ":roi{h}x{w}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A filtering request: apply `spec` to `image`.
 #[derive(Clone, Debug)]
 pub struct FilterRequest {
     pub id: u64,
-    /// erode / dilate / opening / closing / gradient / tophat /
-    /// blackhat / transpose.
-    pub op: String,
-    pub w_x: usize,
-    pub w_y: usize,
+    /// Full pipeline description (op chain, window, config, ROI).
+    pub spec: FilterSpec,
     /// Shared, zero-copy, depth-tagged input image.
     pub image: ImagePayload,
     pub enqueued: Instant,
@@ -101,18 +181,14 @@ pub struct FilterRequest {
 
 impl FilterRequest {
     /// Batching key: requests with the same key run the same compiled
-    /// executable (same op, dtype, shape and window), so grouping them
-    /// maximizes executable-cache affinity.  Depth is part of the key —
-    /// a u8 batch and a u16 batch never mix.
-    pub fn batch_key(&self) -> String {
-        format!(
-            "{}:{}:{}x{}:w{}x{}",
-            self.op,
-            self.image.dtype(),
+    /// executable / resolved plan family, so grouping them maximizes
+    /// executable- and plan-cache affinity.
+    pub fn batch_key(&self) -> BatchKey {
+        BatchKey::of(
+            &self.spec,
+            self.image.depth(),
             self.image.height(),
             self.image.width(),
-            self.w_x,
-            self.w_y
         )
     }
 }
@@ -139,8 +215,26 @@ impl FilterOutput {
         }
     }
 
-    /// Unwrap a u8 result; panics on a u16 payload (submitting u8 always
-    /// yields u8).
+    /// Unwrap a u8 result, or report the actual depth as an error
+    /// (submitting a u8 payload always yields u8, so a mismatch means
+    /// the caller mixed tickets up).
+    pub fn into_u8(self) -> anyhow::Result<Image<u8>> {
+        match self {
+            FilterOutput::U8(img) => Ok(img),
+            FilterOutput::U16(_) => Err(anyhow::anyhow!("u16 response where u8 was expected")),
+        }
+    }
+
+    /// Unwrap a u16 result, or report the actual depth as an error.
+    pub fn into_u16(self) -> anyhow::Result<Image<u16>> {
+        match self {
+            FilterOutput::U16(img) => Ok(img),
+            FilterOutput::U8(_) => Err(anyhow::anyhow!("u8 response where u16 was expected")),
+        }
+    }
+
+    /// Unwrap a u8 result; panics on a u16 payload.
+    #[deprecated(since = "0.3.0", note = "use into_u8() and handle the depth mismatch")]
     pub fn expect_u8(self) -> Image<u8> {
         match self {
             FilterOutput::U8(img) => img,
@@ -149,6 +243,7 @@ impl FilterOutput {
     }
 
     /// Unwrap a u16 result; panics on a u8 payload.
+    #[deprecated(since = "0.3.0", note = "use into_u16() and handle the depth mismatch")]
     pub fn expect_u16(self) -> Image<u16> {
         match self {
             FilterOutput::U16(img) => img,
@@ -202,40 +297,70 @@ impl Ticket {
 mod tests {
     use super::*;
     use crate::image::synth;
+    use crate::morphology::{FilterOp, MorphConfig, Roi, VerticalStrategy};
+
+    fn mk(spec: FilterSpec, image: ImagePayload) -> FilterRequest {
+        FilterRequest {
+            id: 0,
+            spec,
+            image,
+            enqueued: Instant::now(),
+        }
+    }
 
     #[test]
     fn batch_key_groups_identical_work() {
         let img = Arc::new(synth::noise(10, 12, 1));
-        let mk = |op: &str, wx, wy| FilterRequest {
-            id: 0,
-            op: op.into(),
-            w_x: wx,
-            w_y: wy,
-            image: img.clone().into(),
-            enqueued: Instant::now(),
-        };
-        assert_eq!(mk("erode", 3, 3).batch_key(), mk("erode", 3, 3).batch_key());
-        assert_ne!(mk("erode", 3, 3).batch_key(), mk("erode", 5, 3).batch_key());
-        assert_ne!(mk("erode", 3, 3).batch_key(), mk("dilate", 3, 3).batch_key());
+        let key = |spec: FilterSpec| mk(spec, img.clone().into()).batch_key();
+        let e33 = FilterSpec::new(FilterOp::Erode, 3, 3);
+        assert_eq!(key(e33), key(e33));
+        assert_ne!(key(e33), key(FilterSpec::new(FilterOp::Erode, 5, 3)));
+        assert_ne!(key(e33), key(FilterSpec::new(FilterOp::Dilate, 3, 3)));
+        // config is part of the key: a different vertical strategy is a
+        // different plan family
+        let mut cfg = MorphConfig::default();
+        cfg.vertical = VerticalStrategy::Transpose;
+        assert_ne!(key(e33), key(e33.with_config(cfg)));
+        // chains key differently from their heads
+        assert_ne!(key(e33), key(e33.then(FilterOp::Dilate)));
+    }
+
+    #[test]
+    fn batch_key_groups_roi_by_shape_not_position() {
+        let img = Arc::new(synth::noise(32, 32, 1));
+        let key = |spec: FilterSpec| mk(spec, img.clone().into()).batch_key();
+        let base = FilterSpec::new(FilterOp::Erode, 3, 3);
+        let a = base.with_roi(Roi::new(0, 0, 8, 10));
+        let b = base.with_roi(Roi::new(12, 9, 8, 10));
+        let c = base.with_roi(Roi::new(0, 0, 8, 11));
+        assert_eq!(key(a), key(b), "same ROI shape must batch together");
+        assert_ne!(key(a), key(c), "different ROI shape must not");
+        assert_ne!(key(a), key(base), "ROI and full-image must not mix");
     }
 
     #[test]
     fn batch_key_separates_depths() {
         let img8 = Arc::new(synth::noise(10, 12, 1));
         let img16 = Arc::new(synth::noise_u16(10, 12, 1));
-        let mk = |image: ImagePayload| FilterRequest {
-            id: 0,
-            op: "erode".into(),
-            w_x: 3,
-            w_y: 3,
-            image,
-            enqueued: Instant::now(),
-        };
-        let k8 = mk(img8.into()).batch_key();
-        let k16 = mk(img16.into()).batch_key();
+        let spec = FilterSpec::new(FilterOp::Erode, 3, 3);
+        let k8 = mk(spec, img8.into()).batch_key();
+        let k16 = mk(spec, img16.into()).batch_key();
         assert_ne!(k8, k16, "depth must be part of the batch key");
-        assert!(k8.contains(":u8:"), "{k8}");
-        assert!(k16.contains(":u16:"), "{k16}");
+        assert!(format!("{k8}").contains(":u8:"), "{k8}");
+        assert!(format!("{k16}").contains(":u16:"), "{k16}");
+    }
+
+    #[test]
+    fn batch_key_display_is_legacy_shaped() {
+        let img = Arc::new(synth::noise(10, 12, 1));
+        let k = mk(FilterSpec::new(FilterOp::Erode, 5, 3), img.clone().into()).batch_key();
+        assert_eq!(format!("{k}"), "erode:u8:10x12:w5x3");
+        let kr = mk(
+            FilterSpec::new(FilterOp::TopHat, 3, 3).with_roi(Roi::new(1, 2, 4, 5)),
+            img.into(),
+        )
+        .batch_key();
+        assert_eq!(format!("{kr}"), "tophat:u8:10x12:w3x3:roi4x5");
     }
 
     #[test]
@@ -253,9 +378,23 @@ mod tests {
         let o = FilterOutput::U8(synth::noise(3, 4, 1));
         assert_eq!(o.dtype(), "u8");
         assert_eq!(o.dims(), (3, 4));
-        let img = o.expect_u8();
+        let img = o.into_u8().unwrap();
         assert_eq!(img.height(), 3);
         let o16 = FilterOutput::U16(synth::noise_u16(3, 4, 1));
-        assert_eq!(o16.expect_u16().width(), 4);
+        assert_eq!(o16.into_u16().unwrap().width(), 4);
+        // mismatches error instead of panicking
+        assert!(FilterOutput::U8(synth::noise(3, 4, 1)).into_u16().is_err());
+        assert!(FilterOutput::U16(synth::noise_u16(3, 4, 1)).into_u8().is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_expect_forms_still_panic_on_mismatch() {
+        let o = FilterOutput::U8(synth::noise(2, 2, 1));
+        assert_eq!(o.expect_u8().height(), 2);
+        let r = std::panic::catch_unwind(|| {
+            FilterOutput::U8(synth::noise(2, 2, 1)).expect_u16()
+        });
+        assert!(r.is_err());
     }
 }

@@ -235,6 +235,18 @@ impl<'a, P: Pixel> ImageViewMut<'a, P> {
         self.stride
     }
 
+    /// Reborrow as a shorter-lived unique view — lets a caller hand the
+    /// same destination to several `_into` kernels in sequence (each
+    /// takes an `ImageViewMut` by value).
+    pub fn reborrow(&mut self) -> ImageViewMut<'_, P> {
+        ImageViewMut {
+            height: self.height,
+            width: self.width,
+            stride: self.stride,
+            data: &mut *self.data,
+        }
+    }
+
     /// Reborrow as a shared view (for reading what was just written).
     pub fn as_view(&self) -> ImageView<'_, P> {
         ImageView {

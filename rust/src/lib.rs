@@ -48,6 +48,51 @@
 //!   and u16 work always routes to the native engine (AOT artifacts
 //!   are u8-only).
 //!
+//! ## Plan–execute contract
+//!
+//! The public API is **describe once, resolve once, run many**:
+//!
+//! * [`morphology::FilterSpec`] — a depth-generic, heap-free
+//!   (`Copy + Eq + Hash`) description: an op chain
+//!   ([`morphology::FilterOp`] — erode/dilate plus every derived op,
+//!   lowered to primitive erode/dilate/subtract steps), one `w_x × w_y`
+//!   SE, a [`morphology::MorphConfig`] and an optional
+//!   [`morphology::Roi`].
+//! * [`FilterSpec::plan`](morphology::FilterSpec::plan) resolves the
+//!   spec against a pixel depth and image shape into a
+//!   [`morphology::FilterPlan`]: hybrid method choices, §5.2.1
+//!   sandwich decisions and the cost-model band count are fixed once,
+//!   and a scratch arena (intermediate slot images, the rows→cols
+//!   buffer, transpose-sandwich buffers, replicate staging) is
+//!   preallocated.
+//! * [`FilterPlan::run`](morphology::FilterPlan::run) /
+//!   [`run_owned`](morphology::FilterPlan::run_owned) execute with the
+//!   zero-copy `_into` kernels, reusing the arena: a reused plan's Nth
+//!   run allocates **no intermediate-image bytes**
+//!   (`rust/tests/zero_copy_alloc.rs`).
+//!
+//! Every layer speaks specs: the coordinator's depth-erased
+//! [`coordinator::Coordinator::submit`]`(FilterSpec, ImagePayload)`
+//! groups requests by the typed
+//! [`coordinator::request::BatchKey`] (dtype + shape + op chain +
+//! config + ROI *shape*) and each worker's native engine caches one
+//! resolved plan per `(spec, shape)`; the CLI's `filter --op ... --roi
+//! ...` builds one spec (any op or comma-chain composes with `--roi`).
+//!
+//! ### Migration notes (wrapper entry points)
+//!
+//! The historical entry points survive as thin, bit-identical wrappers
+//! over one-shot plans — `morphology::{erode, dilate, erode_roi,
+//! dilate_roi}`, `morphology::parallel::{filter_native, filter_roi,
+//! opening_native, …}`, and the backend-generic derived ops (which run
+//! the *same lowered step sequence* sequentially, keeping counted
+//! instruction mixes deterministic).  `Coordinator::filter` /
+//! `filter_u16` still accept string ops (now rejecting unknown names at
+//! submission instead of on the worker); per-depth `submit`/`submit_u16`
+//! are gone — pass any `Arc<Image<u8>>`/`Arc<Image<u16>>` straight to
+//! `submit`, and use `FilterOutput::into_u8()`/`into_u16()` (the
+//! panicking `expect_*` forms are deprecated).
+//!
 //! ## Zero-copy view contract
 //!
 //! Every kernel's canonical source argument is a borrowed
@@ -103,10 +148,10 @@
 //!   `rust/tests/differential_u16.rs`).
 //! * The [`VerticalStrategy::Transpose`] sandwich dispatches the §4
 //!   tile shape by depth: 16×16.8 for `u8`, 8×8.16 for `u16`.
-//! * Service calls: [`coordinator::Coordinator::submit`] /
-//!   [`coordinator::Coordinator::submit_u16`] tag the payload; results
-//!   come back as [`coordinator::request::FilterOutput`] (`expect_u8` /
-//!   `expect_u16`).
+//! * Service calls: [`coordinator::Coordinator::submit`] takes any
+//!   depth-tagged [`coordinator::request::ImagePayload`]; results come
+//!   back as [`coordinator::request::FilterOutput`] (`into_u8` /
+//!   `into_u16`).
 //! * Cost accounting: a u16 pass issues ~2× the vector instructions per
 //!   pixel (8 lanes/op vs 16) and streams 2× the bytes; see
 //!   [`costmodel::simd_lanes`].
@@ -124,4 +169,7 @@ pub mod util;
 pub mod transpose;
 
 pub use image::{Image, ImageView, ImageViewMut};
-pub use morphology::{Border, MorphOp, MorphPixel, Parallelism, PassMethod, Roi, VerticalStrategy};
+pub use morphology::{
+    Border, FilterOp, FilterPlan, FilterSpec, MorphOp, MorphPixel, OpChain, Parallelism,
+    PassMethod, PlanError, Roi, VerticalStrategy,
+};

@@ -28,7 +28,7 @@ use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use neon_morph::costmodel::CostModel;
 use neon_morph::image::{read_pgm, synth, write_pgm};
 use neon_morph::morphology::{
-    self, hybrid, Border, HybridThresholds, MorphConfig, MorphOp, Parallelism, PassMethod, Roi,
+    self, hybrid, Border, FilterSpec, HybridThresholds, MorphConfig, Parallelism, PassMethod, Roi,
     VerticalStrategy,
 };
 use neon_morph::neon::Native;
@@ -92,8 +92,16 @@ COMMANDS:
                [--backend auto|native|xla] [--method hybrid|linear|vhgw]
                [--vertical direct|transpose] [--border identity|replicate]
                [--no-simd] [--parallel auto|off|N] [--artifacts DIR]
-               [--roi Y,X,H,W]   filter only a sub-rectangle (zero-copy
-               haloed view; erode/dilate, native backend; output is HxW)
+               [--roi Y,X,H,W]
+               --op takes any op or comma-chain of ops:
+                 erode dilate opening closing gradient tophat blackhat
+                 transpose (alone; ignores --wx/--wy, output is WxH)
+                 e.g. --op opening,gradient runs the ops left to right
+               --roi composes with EVERY op/chain (not just erode/dilate):
+                 computes exactly crop(chain(full), roi) from a haloed
+                 block on the native engine (rejects --backend xla);
+                 output is HxW.  One FilterSpec -> FilterPlan drives the
+                 whole command; see `morphology::plan`.
     bench      <table1|fig3|fig3u16|fig4|e2e|scaling|all> [--quick] [--tsv] [--iters N]
                scaling: [--max-workers 16] [--host]
     bench      smoke --out DIR [--update-baselines] [--baselines DIR]
@@ -183,55 +191,40 @@ fn parse_backend(args: &Args) -> Result<BackendChoice> {
 fn cmd_filter(args: &Args) -> Result<()> {
     let input = args.get("input").ok_or_else(|| anyhow!("--input required"))?;
     let output = args.get("output").ok_or_else(|| anyhow!("--output required"))?;
-    let op = args.get("op").unwrap_or("erode").to_string();
+    let op_str = args.get("op").unwrap_or("erode").to_string();
     let w_x = args.get_usize("wx", 5)?;
     let w_y = args.get_usize("wy", 5)?;
     let backend = parse_backend(args)?;
     let morph = parse_morph_config(args)?;
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
 
-    // --roi: zero-copy region-of-interest filtering on the native path
-    // (the output equals crop(filter(full), roi) exactly, but only the
-    // ROI plus its window halo is ever read)
-    if let Some(spec) = args.get("roi") {
+    // one spec describes the whole command: op chain + window + config
+    // (+ optional ROI); the coordinator plans it once and executes
+    let ops = FilterSpec::parse_ops(&op_str).map_err(|e| anyhow!("--op: {e}"))?;
+    let mut spec = FilterSpec {
+        ops,
+        w_x,
+        w_y,
+        config: morph,
+        roi: None,
+    };
+
+    let img = Arc::new(read_pgm(input).with_context(|| format!("reading {input}"))?);
+    let (ih, iw) = (img.height(), img.width());
+
+    // --roi: region-of-interest filtering on the native path — valid
+    // for every op and chain (the plan computes crop(chain(full), roi)
+    // from a haloed block; only the block is ever read)
+    if let Some(roi_str) = args.get("roi") {
         if backend == BackendChoice::XlaOnly {
             bail!("--roi runs on the native engine and cannot honour --backend xla");
         }
-        let roi: Roi = spec.parse().map_err(|e| anyhow!("--roi: {e}"))?;
-        let op_enum = match op.as_str() {
-            "erode" => MorphOp::Erode,
-            "dilate" => MorphOp::Dilate,
-            other => bail!("--roi supports erode|dilate, got {other:?}"),
-        };
-        let img = read_pgm(input).with_context(|| format!("reading {input}"))?;
-        let (ih, iw) = (img.height(), img.width());
-        let fits = roi.height <= ih
-            && roi.y <= ih - roi.height
-            && roi.width <= iw
-            && roi.x <= iw - roi.width;
-        if !fits {
-            bail!("--roi {spec} exceeds image {ih}x{iw}");
-        }
-        let t0 = std::time::Instant::now();
-        let out = morphology::filter_roi(&img, op_enum, w_x, w_y, &morph, roi);
-        let elapsed = t0.elapsed();
-        write_pgm(&out, output).with_context(|| format!("writing {output}"))?;
-        println!(
-            "{} roi {},{},{}x{} of {ih}x{iw} SE={}x{} via native in {:.2} ms -> {}",
-            op,
-            roi.y,
-            roi.x,
-            roi.height,
-            roi.width,
-            w_x,
-            w_y,
-            elapsed.as_secs_f64() * 1e3,
-            output
-        );
-        return Ok(());
+        let roi: Roi = roi_str.parse().map_err(|e| anyhow!("--roi: {e}"))?;
+        spec = spec.with_roi(roi);
     }
+    spec.validate(ih, iw)
+        .map_err(|e| anyhow!("{e} (image {ih}x{iw})"))?;
 
-    let img = Arc::new(read_pgm(input).with_context(|| format!("reading {input}"))?);
     let coord = Coordinator::start(CoordinatorConfig {
         workers: 1,
         backend,
@@ -239,20 +232,35 @@ fn cmd_filter(args: &Args) -> Result<()> {
         morph,
         ..CoordinatorConfig::default()
     })?;
-    let resp = coord.filter(&op, w_x, w_y, img)?;
-    let out = resp.result?.expect_u8();
+    let resp = coord.filter_spec(spec, img)?;
+    let out = resp.result?.into_u8()?;
     write_pgm(&out, output).with_context(|| format!("writing {output}"))?;
-    println!(
-        "{} {}x{} SE={}x{} via {} in {:.2} ms -> {}",
-        op,
-        out.height(),
-        out.width(),
-        w_x,
-        w_y,
-        resp.backend,
-        resp.exec_ns as f64 / 1e6,
-        output
-    );
+    match spec.roi {
+        Some(roi) => println!(
+            "{} roi {},{},{}x{} of {ih}x{iw} SE={}x{} via {} in {:.2} ms -> {}",
+            op_str,
+            roi.y,
+            roi.x,
+            roi.height,
+            roi.width,
+            w_x,
+            w_y,
+            resp.backend,
+            resp.exec_ns as f64 / 1e6,
+            output
+        ),
+        None => println!(
+            "{} {}x{} SE={}x{} via {} in {:.2} ms -> {}",
+            op_str,
+            out.height(),
+            out.width(),
+            w_x,
+            w_y,
+            resp.backend,
+            resp.exec_ns as f64 / 1e6,
+            output
+        ),
+    }
     coord.shutdown();
     Ok(())
 }
@@ -410,6 +418,8 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
 
     let fig3_sweep = fig3::run(&model, &scaling::SMOKE_WINDOWS, 0);
     let fig3_report = scaling::fig3_json(&fig3_sweep);
+    let fig3u16_sweep = fig3::run_u16(&model, &scaling::SMOKE_WINDOWS, 0);
+    let fig3u16_report = scaling::fig3u16_json(&fig3u16_sweep);
     let fig4_sweep = fig4::run(&model, &scaling::SMOKE_WINDOWS, 0);
     let fig4_report = scaling::fig4_json(&fig4_sweep);
     let table1_rows = table1::run_model(&model);
@@ -426,6 +436,7 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
 
     let reports = [
         ("BENCH_fig3.json", &fig3_report),
+        ("BENCH_fig3_u16.json", &fig3u16_report),
         ("BENCH_fig4.json", &fig4_report),
         ("BENCH_table1.json", &table1_report),
         ("BENCH_scaling.json", &scaling_report),
@@ -439,6 +450,11 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     print!(
         "{}",
         fig3::render("Figure 3 smoke (model, ns)", &fig3_sweep, "model").to_markdown()
+    );
+    println!();
+    print!(
+        "{}",
+        fig3::render("Figure 3 u16 smoke (model, ns)", &fig3u16_sweep, "model").to_markdown()
     );
     println!();
     print!(
@@ -473,6 +489,7 @@ fn cmd_bench_gate(args: &Args) -> Result<()> {
     let mut checked = 0usize;
     for name in [
         "BENCH_fig3.json",
+        "BENCH_fig3_u16.json",
         "BENCH_fig4.json",
         "BENCH_table1.json",
         "BENCH_scaling.json",
@@ -555,7 +572,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let tickets: Vec<_> = (0..requests)
         .map(|i| {
             let m = &metas[i % metas.len()];
-            coord.submit(&m.op, m.w_x, m.w_y, img.clone())
+            let op = m.op.parse().map_err(|e| anyhow!("manifest op: {e}"))?;
+            coord.submit(FilterSpec::new(op, m.w_x, m.w_y), img.clone())
         })
         .collect::<Result<_>>()?;
     let mut xla_count = 0u64;

@@ -2,9 +2,23 @@
 //! operations, such as opening, closing, morphological gradient, can be
 //! expressed via erosion, dilation and arithmetical operations") —
 //! generic over the pixel depth.
+//!
+//! Since the plan–execute redesign these are thin wrappers: each op is
+//! a one-element [`FilterOp`] chain executed through the *same lowered
+//! step sequence* ([`super::plan::lower`]) the native [`FilterPlan`]
+//! executor runs — one source of derived-op structure for both the
+//! counted (backend-generic, sequential) and native (arena-backed,
+//! banded) paths.  Native callers that run an op more than once should
+//! plan a [`super::plan::FilterSpec`] instead and reuse it — derived
+//! ops gain their `_into` form for free via [`FilterPlan::run`].
+//!
+//! [`FilterOp`]: super::plan::FilterOp
+//! [`FilterPlan`]: super::plan::FilterPlan
+//! [`FilterPlan::run`]: super::plan::FilterPlan::run
 
-use super::{morphology, MorphConfig, MorphOp, MorphPixel};
-use crate::image::{Image, ImageView};
+use super::plan::{run_chain, FilterOp};
+use super::{MorphConfig, MorphPixel};
+use crate::image::{Image, ImageView, ImageViewMut};
 use crate::neon::Backend;
 
 /// Opening: dilation of the erosion.  Removes bright structures smaller
@@ -16,8 +30,7 @@ pub fn opening<'a, P: MorphPixel, B: Backend>(
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
-    let e = morphology(b, src, MorphOp::Erode, w_x, w_y, cfg);
-    morphology(b, &e, MorphOp::Dilate, w_x, w_y, cfg)
+    run_chain(b, src, &[FilterOp::Open], w_x, w_y, cfg)
 }
 
 /// Closing: erosion of the dilation.  Removes dark structures smaller
@@ -29,8 +42,7 @@ pub fn closing<'a, P: MorphPixel, B: Backend>(
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
-    let d = morphology(b, src, MorphOp::Dilate, w_x, w_y, cfg);
-    morphology(b, &d, MorphOp::Erode, w_x, w_y, cfg)
+    run_chain(b, src, &[FilterOp::Close], w_x, w_y, cfg)
 }
 
 /// Morphological gradient: dilation − erosion (edge strength).
@@ -41,10 +53,7 @@ pub fn gradient<'a, P: MorphPixel, B: Backend>(
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
-    let src = src.into();
-    let d = morphology(b, src, MorphOp::Dilate, w_x, w_y, cfg);
-    let e = morphology(b, src, MorphOp::Erode, w_x, w_y, cfg);
-    pixelwise_sub(d.view(), e.view())
+    run_chain(b, src, &[FilterOp::Gradient], w_x, w_y, cfg)
 }
 
 /// White top-hat: src − opening (bright details smaller than the SE).
@@ -55,9 +64,7 @@ pub fn tophat<'a, P: MorphPixel, B: Backend>(
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
-    let src = src.into();
-    let o = opening(b, src, w_x, w_y, cfg);
-    pixelwise_sub(src, o.view())
+    run_chain(b, src, &[FilterOp::TopHat], w_x, w_y, cfg)
 }
 
 /// Black top-hat: closing − src (dark details smaller than the SE).
@@ -68,19 +75,35 @@ pub fn blackhat<'a, P: MorphPixel, B: Backend>(
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
-    let src = src.into();
-    let c = closing(b, src, w_x, w_y, cfg);
-    pixelwise_sub(c.view(), src)
+    run_chain(b, src, &[FilterOp::BlackHat], w_x, w_y, cfg)
 }
 
 /// Saturating pixelwise subtraction `a - b` (clamped at 0).  Shared
-/// with the band-parallel compositions in [`super::parallel`].
+/// with the generic chain runner in [`super::plan`].
 pub(crate) fn pixelwise_sub<P: MorphPixel>(a: ImageView<'_, P>, b: ImageView<'_, P>) -> Image<P> {
     assert_eq!(a.height(), b.height());
     assert_eq!(a.width(), b.width());
     Image::from_fn(a.height(), a.width(), |y, x| {
         a.get(y, x).sat_sub(b.get(y, x))
     })
+}
+
+/// [`pixelwise_sub`] writing into a caller-provided destination — the
+/// allocation-free form the plan executor's `Sub` steps use.
+pub(crate) fn pixelwise_sub_into<P: MorphPixel>(
+    a: ImageView<'_, P>,
+    b: ImageView<'_, P>,
+    mut dst: ImageViewMut<'_, P>,
+) {
+    assert_eq!(a.height(), b.height());
+    assert_eq!(a.width(), b.width());
+    assert_eq!((dst.height(), dst.width()), (a.height(), a.width()));
+    for y in 0..a.height() {
+        let (ra, rb, rd) = (a.row(y), b.row(y), dst.row_mut(y));
+        for (x, slot) in rd.iter_mut().enumerate() {
+            *slot = ra[x].sat_sub(rb[x]);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -10,6 +10,11 @@
 //! over the pixel depth: a `u16` probe counts 8-lane vector ops and 2×
 //! the streamed bytes, so its crossovers may legitimately differ from
 //! the u8 ones.
+//!
+//! [`resolve_method`] is the single resolution point for hybrid
+//! dispatch: the sequential passes call it per invocation, while
+//! [`super::plan::FilterSpec::plan`] calls it **once** per pass when
+//! resolving a [`super::plan::FilterPlan`] — plan runs never re-resolve.
 
 use super::{linear, vhgw, MorphOp, MorphPixel, PassMethod};
 use crate::costmodel::CostModel;
@@ -21,7 +26,7 @@ pub const PAPER_WY0: usize = 69;
 pub const PAPER_WX0: usize = 59;
 
 /// Crossover thresholds for hybrid dispatch.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct HybridThresholds {
     /// Rows (horizontal) pass: use linear while `w_y <= wy0`.
     pub wy0: usize,

@@ -16,6 +16,7 @@
 //! | 2-D | naive sliding window | scalar | [`naive`] | §2 definition |
 //! | 2-D | separable composition + hybrid dispatch | both | [`separable`], [`hybrid`] | §5.3 |
 //! | any pass | band-sharded parallel execution (row bands with `w-1` halos, tile-aligned stripes for the sandwich) | — | [`parallel`] | extension |
+//! | pipeline | plan–execute: [`FilterSpec`] → [`FilterPlan`] (one-time method/band resolution + scratch arena, op chains, ROI) | — | [`plan`] | extension |
 //!
 //! Band-sharding is bit-identical to sequential execution and applies
 //! only to native-speed runs ([`parallel::filter_native`]); counted
@@ -66,15 +67,17 @@ pub mod hybrid;
 pub mod linear;
 pub mod naive;
 pub mod parallel;
+pub mod plan;
 pub mod separable;
 pub mod vhgw;
 
-use crate::image::{Image, ImageView, Pixel};
+use crate::image::{Image, ImageView, ImageViewMut, Pixel};
 use crate::neon::{Backend, U16x8, U8x16};
 
 pub use derived::{blackhat, closing, gradient, opening, tophat};
 pub use hybrid::{HybridThresholds, PAPER_WX0, PAPER_WY0};
 pub use parallel::{filter_native, filter_roi, BandPool};
+pub use plan::{FilterOp, FilterPlan, FilterSpec, OpChain, PlanError, MAX_CHAIN};
 pub use separable::{dilate, dilate_roi, erode, erode_roi, morphology};
 
 /// A pixel depth the morphology stack can filter: scalar + SIMD min/max,
@@ -124,6 +127,16 @@ pub trait MorphPixel: Pixel {
     /// strided view.  This is what the [`VerticalStrategy::Transpose`]
     /// sandwich dispatches through.
     fn transpose_image<B: Backend>(b: &mut B, img: ImageView<'_, Self>) -> Image<Self>;
+
+    /// [`MorphPixel::transpose_image`] writing into a caller-provided
+    /// `w × h` destination — the zero-allocation form
+    /// [`plan::FilterPlan`] runs its §5.2.1 sandwich through (the
+    /// transpose buffers live in the plan's scratch arena).
+    fn transpose_image_into<B: Backend>(
+        b: &mut B,
+        img: ImageView<'_, Self>,
+        dst: ImageViewMut<'_, Self>,
+    );
 
     /// Saturating subtraction (derived operations).
     fn sat_sub(self, other: Self) -> Self;
@@ -184,6 +197,14 @@ impl MorphPixel for u8 {
 
     fn transpose_image<B: Backend>(b: &mut B, img: ImageView<'_, u8>) -> Image<u8> {
         crate::transpose::transpose_image(b, img)
+    }
+
+    fn transpose_image_into<B: Backend>(
+        b: &mut B,
+        img: ImageView<'_, u8>,
+        dst: ImageViewMut<'_, u8>,
+    ) {
+        crate::transpose::transpose_image_into(b, img, dst);
     }
 
     #[inline(always)]
@@ -249,6 +270,14 @@ impl MorphPixel for u16 {
 
     fn transpose_image<B: Backend>(b: &mut B, img: ImageView<'_, u16>) -> Image<u16> {
         crate::transpose::transpose_image_u16(b, img)
+    }
+
+    fn transpose_image_into<B: Backend>(
+        b: &mut B,
+        img: ImageView<'_, u16>,
+        dst: ImageViewMut<'_, u16>,
+    ) {
+        crate::transpose::transpose_image_u16_into(b, img, dst);
     }
 
     #[inline(always)]
@@ -392,8 +421,9 @@ pub enum Parallelism {
     Auto,
 }
 
-/// Full configuration of a separable morphology invocation.
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// Full configuration of a separable morphology invocation.  `Eq` +
+/// `Hash` so it can ride inside [`FilterSpec`] batch/plan-cache keys.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct MorphConfig {
     pub method: PassMethod,
     pub vertical: VerticalStrategy,
@@ -438,7 +468,7 @@ impl Default for MorphConfig {
 /// rather than the full image.
 ///
 /// Parses from the CLI shape `"Y,X,H,W"` (`--roi 10,20,100,200`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Roi {
     pub y: usize,
     pub x: usize,
@@ -502,11 +532,38 @@ pub(crate) fn replicate_pad<P: Pixel>(
     if h == 0 || w == 0 {
         return img.to_image();
     }
-    Image::from_fn(h + 2 * wing_y, w + 2 * wing_x, |y, x| {
+    let mut out = Image::zeros(h + 2 * wing_y, w + 2 * wing_x);
+    replicate_pad_into(img, wing_x, wing_y, out.view_mut());
+    out
+}
+
+/// [`replicate_pad`] writing into a caller-provided
+/// `(h + 2·wing_y) × (w + 2·wing_x)` destination — the allocation-free
+/// form [`plan::FilterPlan`] stages its replicate borders through.
+/// Single source of the replicate clamping semantics.
+pub(crate) fn replicate_pad_into<P: Pixel>(
+    src: ImageView<'_, P>,
+    wing_x: usize,
+    wing_y: usize,
+    mut dst: ImageViewMut<'_, P>,
+) {
+    let (h, w) = (src.height(), src.width());
+    debug_assert_eq!(
+        (dst.height(), dst.width()),
+        (h + 2 * wing_y, w + 2 * wing_x)
+    );
+    if h == 0 || w == 0 {
+        return;
+    }
+    for y in 0..h + 2 * wing_y {
         let sy = y.saturating_sub(wing_y).min(h - 1);
-        let sx = x.saturating_sub(wing_x).min(w - 1);
-        img.get(sy, sx)
-    })
+        let drow = dst.row_mut(y);
+        let srow = src.row(sy);
+        for (x, slot) in drow.iter_mut().enumerate() {
+            let sx = x.saturating_sub(wing_x).min(w - 1);
+            *slot = srow[sx];
+        }
+    }
 }
 
 /// Crop the `h × w` region starting at (wing_y, wing_x) — a borrowed

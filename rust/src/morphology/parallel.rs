@@ -90,6 +90,17 @@
 //! the borrowed haloed sub-rectangle around a [`Roi`] and returns
 //! exactly the pixels `crop(filter(full), roi)` would produce, at both
 //! pixel depths and under both borders.
+//!
+//! ## Relation to the plan–execute API
+//!
+//! Since the [`super::plan`] redesign this module provides the banded
+//! **executors** ([`pass_rows_banded_into`] /
+//! [`pass_cols_direct_banded_into`] — zero-copy, caller-provided
+//! destinations) plus the [`BandPool`] and the cost-model dispatch
+//! ([`effective_bands`]); the entry points ([`filter_native`],
+//! [`filter_roi`], the `*_native` derived ops) are thin wrappers over
+//! one-shot [`super::plan::FilterSpec`] plans, which resolve banding
+//! once and drive these executors against their scratch arenas.
 
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -98,12 +109,13 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use super::hybrid::resolve_method;
+use super::plan::{FilterOp, FilterSpec};
 use super::{
     separable, HybridThresholds, MorphConfig, MorphOp, MorphPixel, Parallelism, PassMethod, Roi,
     VerticalStrategy,
 };
 use crate::costmodel::CostModel;
-use crate::image::{Image, ImageView};
+use crate::image::{Image, ImageView, ImageViewMut};
 use crate::neon::Native;
 
 // ---------------------------------------------------------------------------
@@ -334,36 +346,76 @@ fn pass_rows_banded_aligned<P: MorphPixel>(
     if window == 1 || h == 0 || w == 0 {
         return src.to_image();
     }
+    let mut dst = Image::zeros(h, w);
+    pass_rows_banded_into(
+        pool,
+        src,
+        dst.view_mut(),
+        window,
+        op,
+        method,
+        simd,
+        thresholds,
+        bands,
+        align,
+    );
+    dst
+}
+
+/// Rows-window pass banded **into** a caller-provided destination — the
+/// zero-allocation executor [`super::plan::FilterPlan`] runs on its
+/// scratch arena.  `dst` must match `src`'s shape; interior band
+/// boundaries are rounded to `align`-row multiples.  Degrades to the
+/// sequential `_into` kernel when the plan collapses to one band.
+#[allow(clippy::too_many_arguments)]
+pub fn pass_rows_banded_into<P: MorphPixel>(
+    pool: &BandPool,
+    src: ImageView<'_, P>,
+    mut dst: ImageViewMut<'_, P>,
+    window: usize,
+    op: MorphOp,
+    method: PassMethod,
+    simd: bool,
+    thresholds: HybridThresholds,
+    bands: usize,
+    align: usize,
+) {
+    let (h, w) = (src.height(), src.width());
+    debug_assert_eq!((dst.height(), dst.width()), (h, w));
+    if h == 0 || w == 0 {
+        return;
+    }
+    if window == 1 {
+        dst.copy_rows_from(src, 0);
+        return;
+    }
     let plan = split_bands_aligned(h, bands, align);
     if plan.len() <= 1 {
-        return separable::pass_rows(&mut Native, src, window, op, method, simd, thresholds);
+        separable::pass_rows_into(&mut Native, src, dst, 0, window, op, method, simd, thresholds);
+        return;
     }
     let wing = window / 2;
-    let mut dst = Image::zeros(h, w);
-    {
-        // disjoint per-band output views — no staging slab, no stitch
-        let chunks = dst.view_mut().split_rows_mut(&plan);
-        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
-        for (band, chunk) in plan.iter().cloned().zip(chunks) {
-            jobs.push(Box::new(move || {
-                let input = halo(&band, wing, h);
-                let skip = band.start - input.start;
-                separable::pass_rows_into(
-                    &mut Native,
-                    src.sub_rows(input),
-                    chunk,
-                    skip,
-                    window,
-                    op,
-                    method,
-                    simd,
-                    thresholds,
-                );
-            }));
-        }
-        pool.scope(jobs);
+    // disjoint per-band output views — no staging slab, no stitch
+    let chunks = dst.split_rows_mut(&plan);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
+    for (band, chunk) in plan.iter().cloned().zip(chunks) {
+        jobs.push(Box::new(move || {
+            let input = halo(&band, wing, h);
+            let skip = band.start - input.start;
+            separable::pass_rows_into(
+                &mut Native,
+                src.sub_rows(input),
+                chunk,
+                skip,
+                window,
+                op,
+                method,
+                simd,
+                thresholds,
+            );
+        }));
     }
-    dst
+    pool.scope(jobs);
 }
 
 /// Cols-window pass executed as row bands on `pool`.  Bit-identical to
@@ -412,32 +464,87 @@ pub fn pass_cols_banded<'a, P: MorphPixel>(
         return P::transpose_image(&mut Native, mid.view());
     }
     // direct forms: rows are independent, zero halo
+    let mut dst = Image::zeros(h, w);
+    pass_cols_direct_banded_into(
+        pool,
+        src,
+        dst.view_mut(),
+        window,
+        op,
+        m,
+        simd,
+        vertical,
+        thresholds,
+        bands,
+    );
+    dst
+}
+
+/// The *direct* (non-sandwich) cols-window pass banded **into** a
+/// caller-provided destination with a zero halo (rows are independent).
+/// Callers must have excluded the §5.2.1 sandwich case with
+/// [`separable::takes_sandwich`] — the sandwich is banded over the
+/// *transposed* buffer instead (see [`super::plan::FilterPlan`]).
+#[allow(clippy::too_many_arguments)]
+pub fn pass_cols_direct_banded_into<P: MorphPixel>(
+    pool: &BandPool,
+    src: ImageView<'_, P>,
+    mut dst: ImageViewMut<'_, P>,
+    window: usize,
+    op: MorphOp,
+    method: PassMethod,
+    simd: bool,
+    vertical: VerticalStrategy,
+    thresholds: HybridThresholds,
+    bands: usize,
+) {
+    let (h, w) = (src.height(), src.width());
+    debug_assert_eq!((dst.height(), dst.width()), (h, w));
+    if h == 0 || w == 0 {
+        return;
+    }
+    if window == 1 {
+        dst.copy_rows_from(src, 0);
+        return;
+    }
+    let m = resolve_method(method, window, thresholds.wx0);
+    debug_assert!(
+        !separable::takes_sandwich(m, simd, vertical),
+        "sandwich configurations are banded over the transposed buffer"
+    );
     let plan = split_bands(h, bands);
     if plan.len() <= 1 {
-        return separable::pass_cols(&mut Native, src, window, op, m, simd, vertical, thresholds);
+        separable::pass_cols_direct_into(
+            &mut Native,
+            src,
+            dst,
+            window,
+            op,
+            m,
+            simd,
+            vertical,
+            thresholds,
+        );
+        return;
     }
-    let mut dst = Image::zeros(h, w);
-    {
-        let chunks = dst.view_mut().split_rows_mut(&plan);
-        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
-        for (band, chunk) in plan.iter().cloned().zip(chunks) {
-            jobs.push(Box::new(move || {
-                separable::pass_cols_direct_into(
-                    &mut Native,
-                    src.sub_rows(band),
-                    chunk,
-                    window,
-                    op,
-                    m,
-                    simd,
-                    vertical,
-                    thresholds,
-                );
-            }));
-        }
-        pool.scope(jobs);
+    let chunks = dst.split_rows_mut(&plan);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
+    for (band, chunk) in plan.iter().cloned().zip(chunks) {
+        jobs.push(Box::new(move || {
+            separable::pass_cols_direct_into(
+                &mut Native,
+                src.sub_rows(band),
+                chunk,
+                window,
+                op,
+                m,
+                simd,
+                vertical,
+                thresholds,
+            );
+        }));
     }
-    dst
+    pool.scope(jobs);
 }
 
 /// Full separable 2-D morphology with both passes band-sharded into
@@ -538,10 +645,12 @@ pub fn effective_bands<P: MorphPixel>(
 
 /// Native-speed separable morphology with automatic band-sharding —
 /// the crate's production entry point ([`super::erode`]/[`super::dilate`]
-/// and the coordinator's `NativeEngine` route through here).  Accepts
-/// any borrowed view (whole image or ROI sub-rectangle); output is
-/// bit-identical to `separable::morphology(&mut Native, ..)` for every
-/// configuration.
+/// and the coordinator's `NativeEngine` route through here).  Since the
+/// plan–execute redesign this is a thin wrapper over a **one-shot
+/// [`FilterSpec`] plan** (resolve → run → drop); callers that filter
+/// more than once should build the spec themselves and reuse the
+/// [`super::plan::FilterPlan`].  Output is bit-identical to
+/// `separable::morphology(&mut Native, ..)` for every configuration.
 pub fn filter_native<'a, P: MorphPixel>(
     src: impl Into<ImageView<'a, P>>,
     op: MorphOp,
@@ -550,11 +659,14 @@ pub fn filter_native<'a, P: MorphPixel>(
     cfg: &MorphConfig,
 ) -> Image<P> {
     let src = src.into();
-    let bands = effective_bands::<P>(src.height(), src.width(), w_x, w_y, cfg);
-    if bands <= 1 {
-        return separable::morphology(&mut Native, src, op, w_x, w_y, cfg);
-    }
-    morphology_banded(BandPool::global(), src, op, w_x, w_y, cfg, bands)
+    let fop = match op {
+        MorphOp::Erode => FilterOp::Erode,
+        MorphOp::Dilate => FilterOp::Dilate,
+    };
+    FilterSpec::new(fop, w_x, w_y)
+        .with_config(*cfg)
+        .run_once(src)
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Region-of-interest filtering: exactly the pixels
@@ -581,35 +693,32 @@ pub fn filter_roi<'a, P: MorphPixel>(
     roi: Roi,
 ) -> Image<P> {
     let src = src.into();
-    let wing_x = super::wing_of(w_x, "w_x");
-    let wing_y = super::wing_of(w_y, "w_y");
-    // overflow-proof bounds check (roi fields are caller-supplied)
-    let fits = roi.height <= src.height()
-        && roi.y <= src.height() - roi.height
-        && roi.width <= src.width()
-        && roi.x <= src.width() - roi.width;
-    assert!(
-        fits,
-        "ROI {roi:?} exceeds image {}x{}",
-        src.height(),
-        src.width()
-    );
-    if roi.height == 0 || roi.width == 0 {
-        return Image::zeros(roi.height, roi.width);
-    }
-    let y0 = roi.y.saturating_sub(wing_y);
-    let x0 = roi.x.saturating_sub(wing_x);
-    let y1 = (roi.y + roi.height + wing_y).min(src.height());
-    let x1 = (roi.x + roi.width + wing_x).min(src.width());
-    let block = src.sub_rect(y0, x0, y1 - y0, x1 - x0);
-    let out = filter_native(block, op, w_x, w_y, cfg);
-    out.view()
-        .sub_rect(roi.y - y0, roi.x - x0, roi.height, roi.width)
-        .to_image()
+    let fop = match op {
+        MorphOp::Erode => FilterOp::Erode,
+        MorphOp::Dilate => FilterOp::Dilate,
+    };
+    FilterSpec::new(fop, w_x, w_y)
+        .with_config(*cfg)
+        .with_roi(roi)
+        .run_once(src)
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
-// -- parallel-aware derived operations (compositions of filter_native,
-//    matching `super::derived` exactly) ------------------------------------
+// -- parallel-aware derived operations: one-shot plans of the derived
+//    ops (matching `super::derived` bit for bit) ---------------------------
+
+fn derived_native<'a, P: MorphPixel>(
+    src: impl Into<ImageView<'a, P>>,
+    op: FilterOp,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<P> {
+    FilterSpec::new(op, w_x, w_y)
+        .with_config(*cfg)
+        .run_once(src.into())
+        .unwrap_or_else(|e| panic!("{e}"))
+}
 
 /// Banded opening: dilation of the erosion.
 pub fn opening_native<'a, P: MorphPixel>(
@@ -618,8 +727,7 @@ pub fn opening_native<'a, P: MorphPixel>(
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
-    let e = filter_native(src, MorphOp::Erode, w_x, w_y, cfg);
-    filter_native(&e, MorphOp::Dilate, w_x, w_y, cfg)
+    derived_native(src, FilterOp::Open, w_x, w_y, cfg)
 }
 
 /// Banded closing: erosion of the dilation.
@@ -629,8 +737,7 @@ pub fn closing_native<'a, P: MorphPixel>(
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
-    let d = filter_native(src, MorphOp::Dilate, w_x, w_y, cfg);
-    filter_native(&d, MorphOp::Erode, w_x, w_y, cfg)
+    derived_native(src, FilterOp::Close, w_x, w_y, cfg)
 }
 
 /// Banded morphological gradient: dilation − erosion.
@@ -640,10 +747,7 @@ pub fn gradient_native<'a, P: MorphPixel>(
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
-    let src = src.into();
-    let d = filter_native(src, MorphOp::Dilate, w_x, w_y, cfg);
-    let e = filter_native(src, MorphOp::Erode, w_x, w_y, cfg);
-    super::derived::pixelwise_sub(d.view(), e.view())
+    derived_native(src, FilterOp::Gradient, w_x, w_y, cfg)
 }
 
 /// Banded white top-hat: src − opening.
@@ -653,9 +757,7 @@ pub fn tophat_native<'a, P: MorphPixel>(
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
-    let src = src.into();
-    let o = opening_native(src, w_x, w_y, cfg);
-    super::derived::pixelwise_sub(src, o.view())
+    derived_native(src, FilterOp::TopHat, w_x, w_y, cfg)
 }
 
 /// Banded black top-hat: closing − src.
@@ -665,9 +767,7 @@ pub fn blackhat_native<'a, P: MorphPixel>(
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<P> {
-    let src = src.into();
-    let c = closing_native(src, w_x, w_y, cfg);
-    super::derived::pixelwise_sub(c.view(), src)
+    derived_native(src, FilterOp::BlackHat, w_x, w_y, cfg)
 }
 
 #[cfg(test)]

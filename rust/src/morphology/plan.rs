@@ -1,0 +1,1457 @@
+//! Plan–execute morphology (the crate's one-description API).
+//!
+//! A [`FilterSpec`] is a *depth-generic, allocation-free* description of
+//! a morphological pipeline: an op chain ([`FilterOp`] — the primitive
+//! `Erode`/`Dilate` plus every derived op, each lowered to primitive
+//! erode/dilate/subtract steps), one `w_x × w_y` structuring element, a
+//! [`MorphConfig`] (method, vertical strategy, SIMD, border, hybrid
+//! thresholds, parallelism hint) and an optional [`Roi`].  `FilterSpec`
+//! is `Copy + Eq + Hash`, so it doubles as a batch/plan cache key with
+//! no per-use heap allocation.
+//!
+//! [`FilterSpec::plan`] resolves the spec **once** against a concrete
+//! pixel depth and image shape into a [`FilterPlan`]:
+//!
+//! * every hybrid pass choice is resolved to a concrete
+//!   [`PassMethod`] (rows against `wy0`, cols against `wx0`),
+//! * the §5.2.1 transpose-sandwich predicate is evaluated per cols pass,
+//! * the band count is fixed by the cost-model crossover
+//!   ([`super::parallel::effective_bands`]) for the plan's shape,
+//! * the ROI is expanded to its haloed block (halo = chain morph-depth ×
+//!   wing, clamped at the image edges — the 2-D halo-containment
+//!   argument of [`super::parallel::filter_roi`] lifted to chains), and
+//! * a **scratch arena** is preallocated: per-slot intermediate images,
+//!   the rows→cols buffer, the two transpose-sandwich buffers and the
+//!   replicate-border staging pair.
+//!
+//! [`FilterPlan::run`] / [`FilterPlan::run_owned`] then execute the
+//! resolved steps with the zero-copy `_into` kernels, reusing the arena
+//! on every call: after the first run, a reused plan allocates **no
+//! intermediate-image bytes** (pinned by `rust/tests/zero_copy_alloc.rs`;
+//! the vHGW kernels' internal `R` buffer — the algorithm's documented
+//! "2× extra memory" — and the cols pass's row-sized staging buffer
+//! remain per-call, as they do on every legacy path).
+//!
+//! ## Bit-identity contract
+//!
+//! For every spec, `FilterPlan::run` is bit-identical to composing the
+//! legacy entry points (`erode`/`dilate`/`opening`/…/`filter_roi`) with
+//! the same configuration — the plan executes the *same* resolved
+//! kernels over the same values, banding is bit-identical to sequential
+//! by the halo argument, and the ROI block reproduces
+//! `crop(chain(full), roi)` exactly.  The legacy entry points are thin
+//! wrappers over one-shot plans (see [`super::parallel::filter_native`])
+//! and `rust/tests/plan_equivalence.rs` pins the equivalence across
+//! op × method × vertical × simd × border × depth × ROI.
+//!
+//! ## Counted (instruction-accounted) runs
+//!
+//! Plans always execute at native speed.  Counting-backend runs keep
+//! using the generic sequential composition ([`run_chain`] →
+//! [`super::separable::morphology`]) so instruction mixes stay
+//! deterministic; both paths execute the same lowered step sequence
+//! ([`lower`]), which is the single source of derived-op structure.
+
+use std::fmt;
+
+use super::hybrid::resolve_method;
+use super::{
+    derived, parallel, separable, Border, MorphConfig, MorphOp, MorphPixel, PassMethod, Roi,
+};
+use crate::image::{Image, ImageView, ImageViewMut};
+use crate::neon::{Backend, Native};
+
+/// Maximum ops in one [`FilterSpec`] chain (keeps the spec `Copy` and
+/// heap-free; derived ops count as one entry each).
+pub const MAX_CHAIN: usize = 8;
+
+/// One high-level operation of a [`FilterSpec`] chain.  Derived ops are
+/// lowered to primitive erode/dilate/subtract steps by [`lower`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FilterOp {
+    /// Windowed minimum.
+    Erode,
+    /// Windowed maximum.
+    Dilate,
+    /// Opening: dilation of the erosion.
+    Open,
+    /// Closing: erosion of the dilation.
+    Close,
+    /// Morphological gradient: dilation − erosion.
+    Gradient,
+    /// White top-hat: src − opening.
+    TopHat,
+    /// Black top-hat: closing − src.
+    BlackHat,
+    /// Whole-image §4 tiled transpose (must be the only chain element;
+    /// ignores the window; output shape is `w × h`).
+    Transpose,
+}
+
+impl FilterOp {
+    /// Canonical name (the coordinator's historical op strings).
+    pub fn name(self) -> &'static str {
+        match self {
+            FilterOp::Erode => "erode",
+            FilterOp::Dilate => "dilate",
+            FilterOp::Open => "opening",
+            FilterOp::Close => "closing",
+            FilterOp::Gradient => "gradient",
+            FilterOp::TopHat => "tophat",
+            FilterOp::BlackHat => "blackhat",
+            FilterOp::Transpose => "transpose",
+        }
+    }
+
+    /// Longest erode/dilate dependency chain through this op — the ROI
+    /// halo of a chain is `Σ morph_depth × wing` per axis.
+    fn morph_depth(self) -> usize {
+        match self {
+            FilterOp::Erode | FilterOp::Dilate | FilterOp::Gradient => 1,
+            FilterOp::Open | FilterOp::Close | FilterOp::TopHat | FilterOp::BlackHat => 2,
+            FilterOp::Transpose => 0,
+        }
+    }
+
+    /// Every op, in declaration order (test sweeps).
+    pub const ALL: [FilterOp; 8] = [
+        FilterOp::Erode,
+        FilterOp::Dilate,
+        FilterOp::Open,
+        FilterOp::Close,
+        FilterOp::Gradient,
+        FilterOp::TopHat,
+        FilterOp::BlackHat,
+        FilterOp::Transpose,
+    ];
+}
+
+impl fmt::Display for FilterOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for FilterOp {
+    type Err = PlanError;
+
+    fn from_str(s: &str) -> Result<FilterOp, PlanError> {
+        Ok(match s {
+            "erode" => FilterOp::Erode,
+            "dilate" => FilterOp::Dilate,
+            "open" | "opening" => FilterOp::Open,
+            "close" | "closing" => FilterOp::Close,
+            "gradient" => FilterOp::Gradient,
+            "tophat" => FilterOp::TopHat,
+            "blackhat" => FilterOp::BlackHat,
+            "transpose" => FilterOp::Transpose,
+            other => return Err(PlanError(format!("unknown op {other:?}"))),
+        })
+    }
+}
+
+/// Fixed-capacity op chain — `Copy`, `Eq`, `Hash`, no heap.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OpChain {
+    len: u8,
+    ops: [FilterOp; MAX_CHAIN],
+}
+
+impl OpChain {
+    /// A one-op chain.
+    pub fn single(op: FilterOp) -> OpChain {
+        // the fill value beyond `len` must be the same canonical op as
+        // `from_slice` uses, or Eq/Hash would distinguish identically
+        // built chains
+        let mut ops = [FilterOp::Erode; MAX_CHAIN];
+        ops[0] = op;
+        OpChain { len: 1, ops }
+    }
+
+    /// A chain from a slice (1..=[`MAX_CHAIN`] ops).
+    pub fn from_slice(ops: &[FilterOp]) -> Result<OpChain, PlanError> {
+        if ops.is_empty() {
+            return Err(PlanError("op chain must not be empty".into()));
+        }
+        if ops.len() > MAX_CHAIN {
+            return Err(PlanError(format!(
+                "op chain of {} exceeds MAX_CHAIN = {MAX_CHAIN}",
+                ops.len()
+            )));
+        }
+        // the fill value beyond `len` is fixed so Eq/Hash see one
+        // canonical representation
+        let mut chain = OpChain {
+            len: ops.len() as u8,
+            ops: [FilterOp::Erode; MAX_CHAIN],
+        };
+        chain.ops[..ops.len()].copy_from_slice(ops);
+        Ok(chain)
+    }
+
+    /// Append an op (errors past [`MAX_CHAIN`]).
+    pub fn push(&mut self, op: FilterOp) -> Result<(), PlanError> {
+        if (self.len as usize) >= MAX_CHAIN {
+            return Err(PlanError(format!(
+                "op chain already holds MAX_CHAIN = {MAX_CHAIN} ops"
+            )));
+        }
+        self.ops[self.len as usize] = op;
+        self.len += 1;
+        Ok(())
+    }
+
+    pub fn as_slice(&self) -> &[FilterOp] {
+        &self.ops[..self.len as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl fmt::Debug for OpChain {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_list().entries(self.as_slice()).finish()
+    }
+}
+
+impl fmt::Display for OpChain {
+    /// `erode+dilate` — the batch-key / log rendering.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, op) in self.as_slice().iter().enumerate() {
+            if i > 0 {
+                f.write_str("+")?;
+            }
+            f.write_str(op.name())?;
+        }
+        Ok(())
+    }
+}
+
+/// Spec validation / planning error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanError(pub String);
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Depth-generic description of a morphology pipeline: op chain +
+/// window + configuration + optional ROI.  `Copy`/`Eq`/`Hash` with no
+/// heap allocation — see the module docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FilterSpec {
+    pub ops: OpChain,
+    /// SE width (cols window), applied to every op in the chain.
+    pub w_x: usize,
+    /// SE height (rows window).
+    pub w_y: usize,
+    pub config: MorphConfig,
+    /// Compute only this output rectangle (`crop(chain(full), roi)`).
+    pub roi: Option<Roi>,
+}
+
+impl FilterSpec {
+    /// A single-op spec with the default (§5.3 paper) configuration.
+    pub fn new(op: FilterOp, w_x: usize, w_y: usize) -> FilterSpec {
+        FilterSpec {
+            ops: OpChain::single(op),
+            w_x,
+            w_y,
+            config: MorphConfig::default(),
+            roi: None,
+        }
+    }
+
+    /// A multi-op spec (ops run left to right).
+    pub fn chain(ops: &[FilterOp], w_x: usize, w_y: usize) -> Result<FilterSpec, PlanError> {
+        Ok(FilterSpec {
+            ops: OpChain::from_slice(ops)?,
+            w_x,
+            w_y,
+            config: MorphConfig::default(),
+            roi: None,
+        })
+    }
+
+    /// Append an op to the chain (builder; panics past [`MAX_CHAIN`]).
+    pub fn then(mut self, op: FilterOp) -> FilterSpec {
+        self.ops.push(op).unwrap_or_else(|e| panic!("{e}"));
+        self
+    }
+
+    /// Replace the configuration (builder).
+    pub fn with_config(mut self, config: MorphConfig) -> FilterSpec {
+        self.config = config;
+        self
+    }
+
+    /// Restrict to a region of interest (builder).
+    pub fn with_roi(mut self, roi: Roi) -> FilterSpec {
+        self.roi = Some(roi);
+        self
+    }
+
+    pub fn ops(&self) -> &[FilterOp] {
+        self.ops.as_slice()
+    }
+
+    /// The chain's single op, if it has exactly one.
+    pub fn single_op(&self) -> Option<FilterOp> {
+        match self.ops.as_slice() {
+            [op] => Some(*op),
+            _ => None,
+        }
+    }
+
+    /// Whether this spec is the whole-image transpose.
+    pub fn is_transpose(&self) -> bool {
+        self.single_op() == Some(FilterOp::Transpose)
+    }
+
+    /// The single op this spec denotes when it is expressible as one
+    /// canonical (identity-border, whole-image) kernel — the only form
+    /// the AOT artifact pipeline lowers, so this is the shared
+    /// eligibility predicate of every compiled-artifact router.  Border
+    /// is the one config knob that changes output *pixels*;
+    /// method/strategy/parallelism choices are all bit-identical.
+    pub fn single_identity_op(&self) -> Option<FilterOp> {
+        let op = self.single_op()?;
+        if self.roi.is_some() || self.config.border != Border::Identity {
+            return None;
+        }
+        Some(op)
+    }
+
+    /// Parse a CLI op chain: `"erode"` or `"erode,dilate,tophat"`.
+    pub fn parse_ops(s: &str) -> Result<OpChain, PlanError> {
+        let mut chain: Option<OpChain> = None;
+        for part in s.split(',') {
+            let op: FilterOp = part.trim().parse()?;
+            match chain.as_mut() {
+                None => chain = Some(OpChain::single(op)),
+                Some(c) => c.push(op)?,
+            }
+        }
+        chain.ok_or_else(|| PlanError(format!("empty op chain {s:?}")))
+    }
+
+    /// Longest erode/dilate dependency chain through the spec — the ROI
+    /// halo per axis is this times the wing.
+    pub fn morph_depth(&self) -> usize {
+        self.ops.as_slice().iter().map(|o| o.morph_depth()).sum()
+    }
+
+    /// Output shape for an `h × w` input (transpose swaps, ROI crops).
+    pub fn out_dims(&self, h: usize, w: usize) -> (usize, usize) {
+        if self.is_transpose() {
+            return (w, h);
+        }
+        match self.roi {
+            Some(r) => (r.height, r.width),
+            None => (h, w),
+        }
+    }
+
+    /// Check the spec against an `h × w` input without building a plan.
+    pub fn validate(&self, h: usize, w: usize) -> Result<(), PlanError> {
+        if self.ops.is_empty() {
+            return Err(PlanError("op chain must not be empty".into()));
+        }
+        if self.ops.as_slice().contains(&FilterOp::Transpose) {
+            if !self.is_transpose() {
+                return Err(PlanError(
+                    "transpose must be the only op in a chain".into(),
+                ));
+            }
+            if self.roi.is_some() {
+                return Err(PlanError("transpose does not support a ROI".into()));
+            }
+            return Ok(());
+        }
+        for (window, what) in [(self.w_x, "w_x"), (self.w_y, "w_y")] {
+            if window < 1 || window % 2 == 0 {
+                return Err(PlanError(format!(
+                    "{what} window must be odd and >= 1, got {window}"
+                )));
+            }
+        }
+        if let Some(roi) = self.roi {
+            // overflow-proof bounds check (fields are caller-supplied)
+            let fits = roi.height <= h
+                && roi.y <= h - roi.height
+                && roi.width <= w
+                && roi.x <= w - roi.width;
+            if !fits {
+                return Err(PlanError(format!("ROI {roi:?} exceeds image {h}x{w}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve the spec against a pixel depth and image shape: one-time
+    /// method/strategy/banding resolution + scratch-arena allocation.
+    pub fn plan<P: MorphPixel>(&self, h: usize, w: usize) -> Result<FilterPlan<P>, PlanError> {
+        FilterPlan::build(*self, h, w)
+    }
+
+    /// Convenience: plan and run once (native speed).
+    pub fn run_once<'a, P: MorphPixel>(
+        &self,
+        src: impl Into<ImageView<'a, P>>,
+    ) -> Result<Image<P>, PlanError> {
+        let src = src.into();
+        let mut plan = self.plan::<P>(src.height(), src.width())?;
+        Ok(plan.run_owned(src))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lowering: op chain -> primitive steps over virtual slots
+// ---------------------------------------------------------------------------
+
+/// A value slot of the lowered program: the borrowed source view or a
+/// numbered intermediate (arena-backed in [`FilterPlan`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Slot {
+    /// The (possibly ROI-block) source view — read-only.
+    Src,
+    /// Intermediate image `i`.
+    Tmp(usize),
+}
+
+/// One primitive step of a lowered chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimStep {
+    /// Separable 2-D erosion/dilation `src → dst`.
+    Morph { op: MorphOp, src: Slot, dst: Slot },
+    /// Saturating pixelwise subtraction `a − b → dst`.
+    Sub { a: Slot, b: Slot, dst: Slot },
+}
+
+impl PrimStep {
+    fn dst(&self) -> Slot {
+        match *self {
+            PrimStep::Morph { dst, .. } | PrimStep::Sub { dst, .. } => dst,
+        }
+    }
+}
+
+/// Lower an op chain to primitive steps.  Returns `(steps, tmp_slots)`;
+/// the final step's `dst` is the chain output.  Every `dst` is a fresh
+/// slot, so steps never overwrite a value still to be read.
+pub fn lower(ops: &[FilterOp]) -> (Vec<PrimStep>, usize) {
+    let mut steps = Vec::new();
+    let mut n = 0usize;
+    let fresh = |n: &mut usize| {
+        let s = Slot::Tmp(*n);
+        *n += 1;
+        s
+    };
+    let mut cur = Slot::Src;
+    for &o in ops {
+        cur = match o {
+            FilterOp::Erode | FilterOp::Dilate => {
+                let op = if o == FilterOp::Erode {
+                    MorphOp::Erode
+                } else {
+                    MorphOp::Dilate
+                };
+                let d = fresh(&mut n);
+                steps.push(PrimStep::Morph { op, src: cur, dst: d });
+                d
+            }
+            FilterOp::Open => {
+                let e = fresh(&mut n);
+                steps.push(PrimStep::Morph {
+                    op: MorphOp::Erode,
+                    src: cur,
+                    dst: e,
+                });
+                let d = fresh(&mut n);
+                steps.push(PrimStep::Morph {
+                    op: MorphOp::Dilate,
+                    src: e,
+                    dst: d,
+                });
+                d
+            }
+            FilterOp::Close => {
+                let d = fresh(&mut n);
+                steps.push(PrimStep::Morph {
+                    op: MorphOp::Dilate,
+                    src: cur,
+                    dst: d,
+                });
+                let e = fresh(&mut n);
+                steps.push(PrimStep::Morph {
+                    op: MorphOp::Erode,
+                    src: d,
+                    dst: e,
+                });
+                e
+            }
+            FilterOp::Gradient => {
+                let d = fresh(&mut n);
+                steps.push(PrimStep::Morph {
+                    op: MorphOp::Dilate,
+                    src: cur,
+                    dst: d,
+                });
+                let e = fresh(&mut n);
+                steps.push(PrimStep::Morph {
+                    op: MorphOp::Erode,
+                    src: cur,
+                    dst: e,
+                });
+                let s = fresh(&mut n);
+                steps.push(PrimStep::Sub { a: d, b: e, dst: s });
+                s
+            }
+            FilterOp::TopHat => {
+                let e = fresh(&mut n);
+                steps.push(PrimStep::Morph {
+                    op: MorphOp::Erode,
+                    src: cur,
+                    dst: e,
+                });
+                let o = fresh(&mut n);
+                steps.push(PrimStep::Morph {
+                    op: MorphOp::Dilate,
+                    src: e,
+                    dst: o,
+                });
+                let s = fresh(&mut n);
+                steps.push(PrimStep::Sub { a: cur, b: o, dst: s });
+                s
+            }
+            FilterOp::BlackHat => {
+                let d = fresh(&mut n);
+                steps.push(PrimStep::Morph {
+                    op: MorphOp::Dilate,
+                    src: cur,
+                    dst: d,
+                });
+                let c = fresh(&mut n);
+                steps.push(PrimStep::Morph {
+                    op: MorphOp::Erode,
+                    src: d,
+                    dst: c,
+                });
+                let s = fresh(&mut n);
+                steps.push(PrimStep::Sub {
+                    a: c,
+                    b: cur,
+                    dst: s,
+                });
+                s
+            }
+            FilterOp::Transpose => {
+                unreachable!("transpose is validated to never reach lowering")
+            }
+        };
+    }
+    (steps, n)
+}
+
+/// Execute a lowered chain with a *generic* backend via the sequential
+/// composition ([`separable::morphology`]) — the counted path.  The
+/// derived ops ([`super::derived`]) are wrappers over this, so counted
+/// instruction mixes keep their historical, deterministic shape while
+/// the step structure has a single source ([`lower`]).
+pub fn run_chain<'a, P: MorphPixel, B: Backend>(
+    b: &mut B,
+    src: impl Into<ImageView<'a, P>>,
+    ops: &[FilterOp],
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Image<P> {
+    let src = src.into();
+    assert!(!ops.is_empty(), "op chain must not be empty");
+    assert!(
+        !ops.contains(&FilterOp::Transpose),
+        "transpose has no generic chain form"
+    );
+    let (steps, slots) = lower(ops);
+    let mut tmp: Vec<Option<Image<P>>> = (0..slots).map(|_| None).collect();
+    for step in &steps {
+        match *step {
+            PrimStep::Morph { op, src: s, dst } => {
+                let out = match s {
+                    Slot::Src => separable::morphology(b, src, op, w_x, w_y, cfg),
+                    Slot::Tmp(i) => {
+                        separable::morphology(b, tmp[i].as_ref().unwrap(), op, w_x, w_y, cfg)
+                    }
+                };
+                let Slot::Tmp(d) = dst else { unreachable!() };
+                tmp[d] = Some(out);
+            }
+            PrimStep::Sub { a, b: bb, dst } => {
+                let av = match a {
+                    Slot::Src => src,
+                    Slot::Tmp(i) => tmp[i].as_ref().unwrap().view(),
+                };
+                let bv = match bb {
+                    Slot::Src => src,
+                    Slot::Tmp(i) => tmp[i].as_ref().unwrap().view(),
+                };
+                let out = derived::pixelwise_sub(av, bv);
+                let Slot::Tmp(d) = dst else { unreachable!() };
+                tmp[d] = Some(out);
+            }
+        }
+    }
+    let Slot::Tmp(last) = steps.last().unwrap().dst() else {
+        unreachable!()
+    };
+    tmp[last].take().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// the resolved plan
+// ---------------------------------------------------------------------------
+
+/// Resolved rows pass: concrete method (never `Hybrid`).
+#[derive(Clone, Copy, Debug)]
+struct RowsPass {
+    window: usize,
+    method: PassMethod,
+}
+
+/// Resolved cols pass: concrete method + the §5.2.1 sandwich decision.
+#[derive(Clone, Copy, Debug)]
+struct ColsPass {
+    window: usize,
+    method: PassMethod,
+    sandwich: bool,
+}
+
+/// One executable step of a [`FilterPlan`].
+#[derive(Clone, Copy, Debug)]
+enum ExecStep {
+    Morph {
+        op: MorphOp,
+        src: Slot,
+        dst: Slot,
+        rows: Option<RowsPass>,
+        cols: Option<ColsPass>,
+        bands: usize,
+    },
+    Sub {
+        a: Slot,
+        b: Slot,
+        dst: Slot,
+    },
+}
+
+/// Preallocated intermediates, sized once at plan time.
+#[derive(Debug)]
+struct Scratch<P> {
+    /// Block-shaped slot images (`block.h × block.w` each; the final
+    /// slot stays empty when the last step writes straight to the
+    /// caller's destination).
+    slots: Vec<Vec<P>>,
+    /// rows→cols intermediate at the execution shape (padded under
+    /// [`Border::Replicate`]).
+    after_rows: Vec<P>,
+    /// §5.2.1 sandwich buffers (transposed execution shape).
+    t_a: Vec<P>,
+    t_b: Vec<P>,
+    /// Replicate-border staging pair (padded shape).
+    pad_in: Vec<P>,
+    pad_out: Vec<P>,
+}
+
+/// A [`FilterSpec`] resolved against a pixel depth and image shape —
+/// method/strategy/band choices fixed, scratch preallocated.  Build
+/// with [`FilterSpec::plan`]; reuse freely across same-shape images.
+#[derive(Debug)]
+pub struct FilterPlan<P: MorphPixel> {
+    spec: FilterSpec,
+    src_h: usize,
+    src_w: usize,
+    out_h: usize,
+    out_w: usize,
+    /// Source region the plan computes on (haloed ROI block, or full).
+    block: Roi,
+    steps: Vec<ExecStep>,
+    scratch: Scratch<P>,
+}
+
+impl<P: MorphPixel> FilterPlan<P> {
+    fn build(spec: FilterSpec, h: usize, w: usize) -> Result<FilterPlan<P>, PlanError> {
+        spec.validate(h, w)?;
+        let (out_h, out_w) = spec.out_dims(h, w);
+        if spec.is_transpose() {
+            return Ok(FilterPlan {
+                spec,
+                src_h: h,
+                src_w: w,
+                out_h,
+                out_w,
+                block: Roi::full(h, w),
+                steps: Vec::new(),
+                scratch: Scratch {
+                    slots: Vec::new(),
+                    after_rows: Vec::new(),
+                    t_a: Vec::new(),
+                    t_b: Vec::new(),
+                    pad_in: Vec::new(),
+                    pad_out: Vec::new(),
+                },
+            });
+        }
+
+        let cfg = &spec.config;
+        let wing_x = spec.w_x / 2;
+        let wing_y = spec.w_y / 2;
+
+        // ROI -> haloed block (chain depth × wing per axis, clamped)
+        let block = match spec.roi {
+            None => Roi::full(h, w),
+            Some(roi) => {
+                let depth = spec.morph_depth();
+                let (hx, hy) = (depth * wing_x, depth * wing_y);
+                let y0 = roi.y.saturating_sub(hy);
+                let x0 = roi.x.saturating_sub(hx);
+                let y1 = (roi.y + roi.height + hy).min(h);
+                let x1 = (roi.x + roi.width + hx).min(w);
+                Roi::new(y0, x0, y1 - y0, x1 - x0)
+            }
+        };
+        let (hb, wb) = (block.height, block.width);
+
+        // execution shape: padded under Replicate
+        let replicate = cfg.border == Border::Replicate;
+        let (he, we) = if replicate {
+            (hb + 2 * wing_y, wb + 2 * wing_x)
+        } else {
+            (hb, wb)
+        };
+
+        // resolve the pass set once (same windows for every morph step)
+        let rows = (spec.w_y > 1).then(|| RowsPass {
+            window: spec.w_y,
+            method: resolve_method(cfg.method, spec.w_y, cfg.thresholds.wy0),
+        });
+        let cols = (spec.w_x > 1).then(|| {
+            let m = resolve_method(cfg.method, spec.w_x, cfg.thresholds.wx0);
+            ColsPass {
+                window: spec.w_x,
+                method: m,
+                sandwich: separable::takes_sandwich(m, cfg.simd, cfg.vertical),
+            }
+        });
+        let bands = parallel::effective_bands::<P>(hb, wb, spec.w_x, spec.w_y, cfg);
+
+        let (prim, n_slots) = lower(spec.ops.as_slice());
+        let steps: Vec<ExecStep> = prim
+            .iter()
+            .map(|s| match *s {
+                PrimStep::Morph { op, src, dst } => ExecStep::Morph {
+                    op,
+                    src,
+                    dst,
+                    rows,
+                    cols,
+                    bands,
+                },
+                PrimStep::Sub { a, b, dst } => ExecStep::Sub { a, b, dst },
+            })
+            .collect();
+
+        // scratch arena: the final slot is skipped when the last step
+        // can write straight into the caller's destination (no ROI crop)
+        let Slot::Tmp(final_slot) = prim.last().unwrap().dst() else {
+            unreachable!()
+        };
+        let direct_out = spec.roi.is_none();
+        let slot_px = hb * wb;
+        let slots: Vec<Vec<P>> = (0..n_slots)
+            .map(|i| {
+                if direct_out && i == final_slot {
+                    Vec::new()
+                } else {
+                    vec![P::default(); slot_px]
+                }
+            })
+            .collect();
+        let needs_mid = rows.is_some() && cols.is_some();
+        let needs_sandwich = cols.is_some_and(|c| c.sandwich);
+        let exec_px = he * we;
+        // does any step actually run a pass? (1×1 SEs degrade to copies
+        // and need no replicate staging)
+        let has_pass = rows.is_some() || cols.is_some();
+        let morph_steps = has_pass && steps.iter().any(|s| matches!(s, ExecStep::Morph { .. }));
+        Ok(FilterPlan {
+            spec,
+            src_h: h,
+            src_w: w,
+            out_h,
+            out_w,
+            block,
+            steps,
+            scratch: Scratch {
+                slots,
+                after_rows: if needs_mid { vec![P::default(); exec_px] } else { Vec::new() },
+                t_a: if needs_sandwich { vec![P::default(); exec_px] } else { Vec::new() },
+                t_b: if needs_sandwich { vec![P::default(); exec_px] } else { Vec::new() },
+                pad_in: if replicate && morph_steps {
+                    vec![P::default(); exec_px]
+                } else {
+                    Vec::new()
+                },
+                pad_out: if replicate && morph_steps {
+                    vec![P::default(); exec_px]
+                } else {
+                    Vec::new()
+                },
+            },
+        })
+    }
+
+    /// The spec this plan resolves.
+    pub fn spec(&self) -> &FilterSpec {
+        &self.spec
+    }
+
+    /// Expected input shape.
+    pub fn src_dims(&self) -> (usize, usize) {
+        (self.src_h, self.src_w)
+    }
+
+    /// Output shape of every run.
+    pub fn out_dims(&self) -> (usize, usize) {
+        (self.out_h, self.out_w)
+    }
+
+    /// Bytes retained by the scratch arena — what a plan cache pays to
+    /// keep this plan resident (a multi-slot chain on a large image can
+    /// hold several image-sized buffers).
+    pub fn scratch_bytes(&self) -> usize {
+        let elems = self.scratch.slots.iter().map(Vec::len).sum::<usize>()
+            + self.scratch.after_rows.len()
+            + self.scratch.t_a.len()
+            + self.scratch.t_b.len()
+            + self.scratch.pad_in.len()
+            + self.scratch.pad_out.len();
+        elems * std::mem::size_of::<P>()
+    }
+
+    /// Execute the plan into a caller-provided destination (the
+    /// zero-allocation form).  `src` must match [`FilterPlan::src_dims`]
+    /// and `dst` [`FilterPlan::out_dims`].
+    pub fn run<'a>(&mut self, src: impl Into<ImageView<'a, P>>, mut dst: ImageViewMut<'_, P>) {
+        let src = src.into();
+        assert_eq!(
+            (src.height(), src.width()),
+            (self.src_h, self.src_w),
+            "plan was resolved for a {}x{} source",
+            self.src_h,
+            self.src_w
+        );
+        assert_eq!(
+            (dst.height(), dst.width()),
+            (self.out_h, self.out_w),
+            "plan output is {}x{}",
+            self.out_h,
+            self.out_w
+        );
+        if self.spec.is_transpose() {
+            P::transpose_image_into(&mut Native, src, dst);
+            return;
+        }
+        let block = src.sub_rect(self.block.y, self.block.x, self.block.height, self.block.width);
+        // empty output (degenerate source or empty ROI): nothing to
+        // compute — and a nonzero output implies a nonzero block, since
+        // the ROI is validated to fit inside the image
+        if self.out_h == 0 || self.out_w == 0 {
+            return;
+        }
+
+        let n_steps = self.steps.len();
+        for i in 0..n_steps {
+            let step = self.steps[i];
+            let direct_out = self.spec.roi.is_none() && i == n_steps - 1;
+            match step {
+                ExecStep::Morph {
+                    op,
+                    src: s,
+                    dst: d,
+                    rows,
+                    cols,
+                    bands,
+                } => {
+                    self.exec_morph(block, s, d, direct_out, &mut dst, op, rows, cols, bands);
+                }
+                ExecStep::Sub { a, b, dst: d } => {
+                    self.exec_sub(block, a, b, d, direct_out, &mut dst);
+                }
+            }
+        }
+
+        if let Some(roi) = self.spec.roi {
+            let Slot::Tmp(last) = self.steps.last().unwrap().dst_slot() else {
+                unreachable!()
+            };
+            let (hb, wb) = (self.block.height, self.block.width);
+            let full = ImageView::from_slice(&self.scratch.slots[last], hb, wb, wb);
+            dst.copy_rows_from(
+                full.sub_rect(roi.y - self.block.y, roi.x - self.block.x, roi.height, roi.width),
+                0,
+            );
+        }
+    }
+
+    /// Execute the plan, allocating the output image.
+    pub fn run_owned<'a>(&mut self, src: impl Into<ImageView<'a, P>>) -> Image<P> {
+        let mut out = Image::zeros(self.out_h, self.out_w);
+        self.run(src.into(), out.view_mut());
+        out
+    }
+
+    /// Resolve a read slot to a view over the block or an arena buffer.
+    fn slot_view<'s>(&'s self, block: ImageView<'s, P>, s: Slot) -> ImageView<'s, P> {
+        match s {
+            Slot::Src => block,
+            Slot::Tmp(i) => {
+                let (hb, wb) = (self.block.height, self.block.width);
+                ImageView::from_slice(&self.scratch.slots[i], hb, wb, wb)
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_morph(
+        &mut self,
+        block: ImageView<'_, P>,
+        s: Slot,
+        d: Slot,
+        direct_out: bool,
+        out: &mut ImageViewMut<'_, P>,
+        op: MorphOp,
+        rows: Option<RowsPass>,
+        cols: Option<ColsPass>,
+        bands: usize,
+    ) {
+        let (hb, wb) = (self.block.height, self.block.width);
+        let Slot::Tmp(di) = d else { unreachable!() };
+        // take the destination buffer out of the arena so reads can
+        // borrow the rest of it (a lowered dst is always a fresh slot)
+        let mut dstbuf = if direct_out {
+            Vec::new()
+        } else {
+            std::mem::take(&mut self.scratch.slots[di])
+        };
+        let mut after_rows = std::mem::take(&mut self.scratch.after_rows);
+        let mut t_a = std::mem::take(&mut self.scratch.t_a);
+        let mut t_b = std::mem::take(&mut self.scratch.t_b);
+        let mut pad_in = std::mem::take(&mut self.scratch.pad_in);
+        let mut pad_out = std::mem::take(&mut self.scratch.pad_out);
+        {
+            let sv = self.slot_view(block, s);
+            let cfg = &self.spec.config;
+            let mut tv = if direct_out {
+                out.reborrow()
+            } else {
+                ImageViewMut::from_slice_mut(&mut dstbuf, hb, wb, wb)
+            };
+            if rows.is_none() && cols.is_none() {
+                // 1×1 SE: identity at both borders
+                tv.copy_rows_from(sv, 0);
+            } else if cfg.border == Border::Replicate {
+                let wing_x = self.spec.w_x / 2;
+                let wing_y = self.spec.w_y / 2;
+                let (he, we) = (hb + 2 * wing_y, wb + 2 * wing_x);
+                super::replicate_pad_into(
+                    sv,
+                    wing_x,
+                    wing_y,
+                    ImageViewMut::from_slice_mut(&mut pad_in, he, we, we),
+                );
+                exec_morph_ident(
+                    ImageView::from_slice(&pad_in, he, we, we),
+                    ImageViewMut::from_slice_mut(&mut pad_out, he, we, we),
+                    op,
+                    rows,
+                    cols,
+                    bands,
+                    cfg,
+                    &mut after_rows,
+                    &mut t_a,
+                    &mut t_b,
+                );
+                tv.copy_rows_from(
+                    ImageView::from_slice(&pad_out, he, we, we).sub_rect(wing_y, wing_x, hb, wb),
+                    0,
+                );
+            } else {
+                exec_morph_ident(
+                    sv,
+                    tv,
+                    op,
+                    rows,
+                    cols,
+                    bands,
+                    cfg,
+                    &mut after_rows,
+                    &mut t_a,
+                    &mut t_b,
+                );
+            }
+        }
+        self.scratch.after_rows = after_rows;
+        self.scratch.t_a = t_a;
+        self.scratch.t_b = t_b;
+        self.scratch.pad_in = pad_in;
+        self.scratch.pad_out = pad_out;
+        if !direct_out {
+            self.scratch.slots[di] = dstbuf;
+        }
+    }
+
+    fn exec_sub(
+        &mut self,
+        block: ImageView<'_, P>,
+        a: Slot,
+        b: Slot,
+        d: Slot,
+        direct_out: bool,
+        out: &mut ImageViewMut<'_, P>,
+    ) {
+        let (hb, wb) = (self.block.height, self.block.width);
+        let Slot::Tmp(di) = d else { unreachable!() };
+        let mut dstbuf = if direct_out {
+            Vec::new()
+        } else {
+            std::mem::take(&mut self.scratch.slots[di])
+        };
+        {
+            let av = self.slot_view(block, a);
+            let bv = self.slot_view(block, b);
+            let tv = if direct_out {
+                out.reborrow()
+            } else {
+                ImageViewMut::from_slice_mut(&mut dstbuf, hb, wb, wb)
+            };
+            derived::pixelwise_sub_into(av, bv, tv);
+        }
+        if !direct_out {
+            self.scratch.slots[di] = dstbuf;
+        }
+    }
+}
+
+impl ExecStep {
+    fn dst_slot(&self) -> Slot {
+        match *self {
+            ExecStep::Morph { dst, .. } | ExecStep::Sub { dst, .. } => dst,
+        }
+    }
+}
+
+/// One separable erosion/dilation with identity borders into `tv`,
+/// using the plan's resolved passes and band count.
+#[allow(clippy::too_many_arguments)]
+fn exec_morph_ident<P: MorphPixel>(
+    sv: ImageView<'_, P>,
+    mut tv: ImageViewMut<'_, P>,
+    op: MorphOp,
+    rows: Option<RowsPass>,
+    cols: Option<ColsPass>,
+    bands: usize,
+    cfg: &MorphConfig,
+    after_rows: &mut [P],
+    t_a: &mut [P],
+    t_b: &mut [P],
+) {
+    let (h, w) = (sv.height(), sv.width());
+    match (rows, cols) {
+        (None, None) => tv.copy_rows_from(sv, 0),
+        (Some(r), None) => run_rows_pass(sv, tv, op, r, bands, cfg, 1),
+        (None, Some(c)) => run_cols_pass(sv, tv, op, c, bands, cfg, t_a, t_b),
+        (Some(r), Some(c)) => {
+            let mid = &mut after_rows[..h * w];
+            run_rows_pass(
+                sv,
+                ImageViewMut::from_slice_mut(mid, h, w, w),
+                op,
+                r,
+                bands,
+                cfg,
+                1,
+            );
+            run_cols_pass(
+                ImageView::from_slice(mid, h, w, w),
+                tv.reborrow(),
+                op,
+                c,
+                bands,
+                cfg,
+                t_a,
+                t_b,
+            );
+        }
+    }
+}
+
+fn run_rows_pass<P: MorphPixel>(
+    sv: ImageView<'_, P>,
+    tv: ImageViewMut<'_, P>,
+    op: MorphOp,
+    r: RowsPass,
+    bands: usize,
+    cfg: &MorphConfig,
+    align: usize,
+) {
+    if bands > 1 {
+        parallel::pass_rows_banded_into(
+            parallel::BandPool::global(),
+            sv,
+            tv,
+            r.window,
+            op,
+            r.method,
+            cfg.simd,
+            cfg.thresholds,
+            bands,
+            align,
+        );
+    } else {
+        separable::pass_rows_into(
+            &mut Native,
+            sv,
+            tv,
+            0,
+            r.window,
+            op,
+            r.method,
+            cfg.simd,
+            cfg.thresholds,
+        );
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_cols_pass<P: MorphPixel>(
+    sv: ImageView<'_, P>,
+    tv: ImageViewMut<'_, P>,
+    op: MorphOp,
+    c: ColsPass,
+    bands: usize,
+    cfg: &MorphConfig,
+    t_a: &mut [P],
+    t_b: &mut [P],
+) {
+    let (h, w) = (sv.height(), sv.width());
+    if c.sandwich {
+        // §5.2.1: transpose ∘ rows pass ∘ transpose, striped over the
+        // transposed buffer in LANES-aligned bands (sandwich passes are
+        // always SIMD; vHGW resolves here because it has no direct form)
+        let ta = &mut t_a[..h * w];
+        P::transpose_image_into(
+            &mut Native,
+            sv,
+            ImageViewMut::from_slice_mut(ta, w, h, h),
+        );
+        let tb = &mut t_b[..h * w];
+        run_rows_pass(
+            ImageView::from_slice(ta, w, h, h),
+            ImageViewMut::from_slice_mut(tb, w, h, h),
+            op,
+            RowsPass {
+                window: c.window,
+                method: c.method,
+            },
+            bands,
+            cfg,
+            P::LANES,
+        );
+        P::transpose_image_into(&mut Native, ImageView::from_slice(tb, w, h, h), tv);
+    } else if bands > 1 {
+        parallel::pass_cols_direct_banded_into(
+            parallel::BandPool::global(),
+            sv,
+            tv,
+            c.window,
+            op,
+            c.method,
+            cfg.simd,
+            cfg.vertical,
+            cfg.thresholds,
+            bands,
+        );
+    } else {
+        separable::pass_cols_direct_into(
+            &mut Native,
+            sv,
+            tv,
+            c.window,
+            op,
+            c.method,
+            cfg.simd,
+            cfg.vertical,
+            cfg.thresholds,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+    use crate::morphology::{HybridThresholds, Parallelism, PassMethod, VerticalStrategy};
+
+    #[test]
+    fn filter_op_parse_round_trip() {
+        for op in FilterOp::ALL {
+            assert_eq!(op.name().parse::<FilterOp>().unwrap(), op);
+        }
+        assert_eq!("open".parse::<FilterOp>().unwrap(), FilterOp::Open);
+        assert_eq!("close".parse::<FilterOp>().unwrap(), FilterOp::Close);
+        assert!("sharpen".parse::<FilterOp>().is_err());
+    }
+
+    #[test]
+    fn op_chain_is_canonical_for_hash_eq() {
+        let a = OpChain::from_slice(&[FilterOp::Open, FilterOp::Dilate]).unwrap();
+        let mut b = OpChain::single(FilterOp::Open);
+        b.push(FilterOp::Dilate).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(format!("{a}"), "opening+dilate");
+        assert_eq!(a.as_slice(), &[FilterOp::Open, FilterOp::Dilate]);
+        assert!(OpChain::from_slice(&[]).is_err());
+        assert!(OpChain::from_slice(&[FilterOp::Erode; MAX_CHAIN + 1]).is_err());
+        let mut full = OpChain::from_slice(&[FilterOp::Erode; MAX_CHAIN]).unwrap();
+        assert!(full.push(FilterOp::Dilate).is_err());
+    }
+
+    #[test]
+    fn parse_ops_chains() {
+        let c = FilterSpec::parse_ops("erode, dilate ,tophat").unwrap();
+        assert_eq!(
+            c.as_slice(),
+            &[FilterOp::Erode, FilterOp::Dilate, FilterOp::TopHat]
+        );
+        assert!(FilterSpec::parse_ops("erode,,dilate").is_err());
+        assert!(FilterSpec::parse_ops("nope").is_err());
+    }
+
+    #[test]
+    fn lowering_shapes() {
+        let (s, n) = lower(&[FilterOp::Erode]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(n, 1);
+        let (s, n) = lower(&[FilterOp::TopHat]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(n, 3);
+        assert!(matches!(s[2], PrimStep::Sub { a: Slot::Src, .. }));
+        let (s, _) = lower(&[FilterOp::Open, FilterOp::Close]);
+        assert_eq!(s.len(), 4);
+        // every dst is fresh
+        let mut seen = Vec::new();
+        for st in &s {
+            assert!(!seen.contains(&st.dst()));
+            seen.push(st.dst());
+        }
+    }
+
+    #[test]
+    fn spec_validation() {
+        assert!(FilterSpec::new(FilterOp::Erode, 4, 3).validate(10, 10).is_err());
+        assert!(FilterSpec::new(FilterOp::Erode, 3, 0).validate(10, 10).is_err());
+        assert!(FilterSpec::new(FilterOp::Transpose, 0, 0).validate(10, 10).is_ok());
+        let chain = FilterSpec::new(FilterOp::Erode, 3, 3).then(FilterOp::Transpose);
+        assert!(chain.validate(10, 10).is_err());
+        let roi_oob = FilterSpec::new(FilterOp::Erode, 3, 3).with_roi(Roi::new(5, 5, 8, 8));
+        assert!(roi_oob.validate(10, 10).is_err());
+        let roi_ok = FilterSpec::new(FilterOp::Erode, 3, 3).with_roi(Roi::new(5, 5, 5, 5));
+        assert!(roi_ok.validate(10, 10).is_ok());
+    }
+
+    #[test]
+    fn single_identity_op_is_the_artifact_predicate() {
+        let e = FilterSpec::new(FilterOp::Erode, 3, 3);
+        assert_eq!(e.single_identity_op(), Some(FilterOp::Erode));
+        assert_eq!(e.then(FilterOp::Dilate).single_identity_op(), None);
+        assert_eq!(e.with_roi(Roi::new(0, 0, 2, 2)).single_identity_op(), None);
+        let mut repl = MorphConfig::default();
+        repl.border = Border::Replicate;
+        assert_eq!(e.with_config(repl).single_identity_op(), None);
+    }
+
+    #[test]
+    fn out_dims_follow_spec() {
+        let s = FilterSpec::new(FilterOp::Erode, 3, 3);
+        assert_eq!(s.out_dims(10, 20), (10, 20));
+        assert_eq!(
+            s.with_roi(Roi::new(1, 2, 3, 4)).out_dims(10, 20),
+            (3, 4)
+        );
+        assert_eq!(FilterSpec::new(FilterOp::Transpose, 0, 0).out_dims(10, 20), (20, 10));
+    }
+
+    #[test]
+    fn morph_depth_counts_longest_path() {
+        assert_eq!(FilterSpec::new(FilterOp::Erode, 3, 3).morph_depth(), 1);
+        assert_eq!(FilterSpec::new(FilterOp::Gradient, 3, 3).morph_depth(), 1);
+        assert_eq!(FilterSpec::new(FilterOp::TopHat, 3, 3).morph_depth(), 2);
+        assert_eq!(
+            FilterSpec::new(FilterOp::Open, 3, 3)
+                .then(FilterOp::Close)
+                .morph_depth(),
+            4
+        );
+    }
+
+    #[test]
+    fn plan_matches_legacy_single_ops() {
+        let img = synth::noise(30, 37, 0x9A);
+        for (op, fop) in [(MorphOp::Erode, FilterOp::Erode), (MorphOp::Dilate, FilterOp::Dilate)] {
+            for &(wx, wy) in &[(3, 5), (5, 3), (1, 7), (7, 1), (1, 1)] {
+                let want = separable::morphology(
+                    &mut Native,
+                    &img,
+                    op,
+                    wx,
+                    wy,
+                    &MorphConfig::default(),
+                );
+                let got = FilterSpec::new(fop, wx, wy).run_once::<u8>(&img).unwrap();
+                assert!(
+                    got.same_pixels(&want),
+                    "{fop:?} {wx}x{wy}: {:?}",
+                    got.first_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_reuse_is_stable() {
+        let spec = FilterSpec::new(FilterOp::TopHat, 5, 3);
+        let mut plan = spec.plan::<u8>(24, 31).unwrap();
+        // tophat = 3 slots (minus the direct-out final) + after_rows:
+        // the arena must report its resident footprint for cache bounds
+        assert!(plan.scratch_bytes() >= 3 * 24 * 31);
+        let a = synth::noise(24, 31, 1);
+        let b = synth::noise(24, 31, 2);
+        let ra1 = plan.run_owned(&a);
+        let rb = plan.run_owned(&b);
+        let ra2 = plan.run_owned(&a);
+        assert!(ra1.same_pixels(&ra2), "runs must not leak state");
+        let want_b = derived::tophat(&mut Native, &b, 5, 3, &MorphConfig::default());
+        assert!(rb.same_pixels(&want_b));
+    }
+
+    #[test]
+    fn plan_chain_matches_composition() {
+        let img = synth::noise(22, 26, 7);
+        let cfg = MorphConfig::default();
+        let got = FilterSpec::chain(&[FilterOp::Open, FilterOp::Gradient], 3, 3)
+            .unwrap()
+            .run_once::<u8>(&img)
+            .unwrap();
+        let o = derived::opening(&mut Native, &img, 3, 3, &cfg);
+        let want = derived::gradient(&mut Native, &o, 3, 3, &cfg);
+        assert!(got.same_pixels(&want));
+    }
+
+    #[test]
+    fn plan_roi_equals_cropped_chain() {
+        let img = synth::noise(40, 44, 0x717);
+        let roi = Roi::new(6, 9, 18, 22);
+        for op in [FilterOp::Erode, FilterOp::TopHat, FilterOp::Gradient] {
+            let full = FilterSpec::new(op, 5, 7).run_once::<u8>(&img).unwrap();
+            let want = full.view().sub_rect(roi.y, roi.x, roi.height, roi.width).to_image();
+            let got = FilterSpec::new(op, 5, 7)
+                .with_roi(roi)
+                .run_once::<u8>(&img)
+                .unwrap();
+            assert!(got.same_pixels(&want), "{op:?}: {:?}", got.first_diff(&want));
+        }
+    }
+
+    #[test]
+    fn plan_transpose_and_empty() {
+        let img = synth::noise_u16(10, 20, 3);
+        let got = FilterSpec::new(FilterOp::Transpose, 0, 0)
+            .run_once::<u16>(&img)
+            .unwrap();
+        assert!(got.same_pixels(&img.transposed()));
+        let empty = Image::<u8>::zeros(0, 5);
+        let out = FilterSpec::new(FilterOp::Erode, 3, 3).run_once::<u8>(&empty).unwrap();
+        assert_eq!((out.height(), out.width()), (0, 5));
+        let er = FilterSpec::new(FilterOp::Erode, 3, 3)
+            .with_roi(Roi::new(2, 2, 0, 3))
+            .run_once::<u8>(&synth::noise(10, 10, 1))
+            .unwrap();
+        assert_eq!(er.pixels(), 0);
+    }
+
+    #[test]
+    fn run_chain_matches_plan_on_counting_shapes() {
+        // generic chain runner (counted path) == plan (native path)
+        let img = synth::noise(18, 23, 5);
+        let cfg = MorphConfig {
+            parallelism: Parallelism::Sequential,
+            ..MorphConfig::default()
+        };
+        for op in [FilterOp::Open, FilterOp::BlackHat, FilterOp::Gradient] {
+            let a = run_chain(&mut Native, &img, &[op], 5, 3, &cfg);
+            let b = FilterSpec::new(op, 5, 3)
+                .with_config(cfg)
+                .run_once::<u8>(&img)
+                .unwrap();
+            assert!(a.same_pixels(&b), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn plan_respects_explicit_configs() {
+        let img = synth::noise(26, 29, 0xC0);
+        for method in [PassMethod::Linear, PassMethod::Vhgw, PassMethod::Hybrid] {
+            for vertical in [VerticalStrategy::Direct, VerticalStrategy::Transpose] {
+                for simd in [false, true] {
+                    for border in [Border::Identity, Border::Replicate] {
+                        let cfg = MorphConfig {
+                            method,
+                            vertical,
+                            simd,
+                            border,
+                            thresholds: HybridThresholds::paper(),
+                            parallelism: Parallelism::Sequential,
+                        };
+                        let want = separable::morphology(
+                            &mut Native,
+                            &img,
+                            MorphOp::Erode,
+                            5,
+                            7,
+                            &cfg,
+                        );
+                        let got = FilterSpec::new(FilterOp::Erode, 5, 7)
+                            .with_config(cfg)
+                            .run_once::<u8>(&img)
+                            .unwrap();
+                        assert!(
+                            got.same_pixels(&want),
+                            "{method:?}/{vertical:?}/simd={simd}/{border:?}: {:?}",
+                            got.first_diff(&want)
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,32 +1,64 @@
-//! Execution engines: the [`Engine`] trait abstracts "run artifact
-//! `name` on an image" so the coordinator can run against the real PJRT
-//! runtime ([`super::XlaRuntime`]) or the in-process native
+//! Execution engines: the [`Engine`] trait abstracts "run a
+//! [`FilterSpec`] on an image" so the coordinator can run against the
+//! real PJRT runtime ([`super::XlaRuntime`]) or the in-process native
 //! implementation ([`NativeEngine`]) — the latter both serves as the
-//! router's fast path for shapes without artifacts and lets coordinator
+//! router's fast path for specs without artifacts and lets coordinator
 //! tests run without compiled artifacts.
 //!
-//! Depth dispatch: [`Engine::run`] serves u8 images, [`Engine::run_u16`]
-//! serves u16 ones.  The native engine implements both through one
-//! generic body ([`MorphPixel`]); the XLA runtime only has u8 artifacts
-//! and keeps the default erroring `run_u16`, so the coordinator routes
-//! u16 requests to the native engine.
+//! Depth dispatch: [`Engine::run_spec`] serves u8 images,
+//! [`Engine::run_spec_u16`] serves u16 ones.  The native engine
+//! implements both through one generic body; the XLA runtime only has
+//! u8 artifacts (single-op, no ROI) and keeps the default erroring
+//! `run_spec_u16`, so the coordinator routes u16 requests to the native
+//! engine.
+//!
+//! ## Plan cache
+//!
+//! The native engine resolves each `(spec, shape)` **once** into a
+//! [`FilterPlan`] and reuses it across requests — the serving-side
+//! payoff of the plan–execute API: a worker draining a same-key batch
+//! re-runs one resolved plan (methods, band geometry and scratch arena
+//! already fixed) instead of re-dispatching per request.  The cache is
+//! bounded ([`PLAN_CACHE_CAP`]) and cleared wholesale when full — keys
+//! are `Copy` and plans are cheap to rebuild, so eviction sophistication
+//! buys nothing.
+//!
+//! The legacy `(op, w)`-pair surface survives as the [`ArtifactMeta`]
+//! wrappers ([`NativeEngine::run`] / [`NativeEngine::run_u16`]), which
+//! build a spec from the meta and execute it through the same cache.
+
+use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
 use super::manifest::ArtifactMeta;
 use crate::image::Image;
-use crate::morphology::{parallel, MorphConfig, MorphOp, MorphPixel};
-use crate::neon::Native;
+use crate::morphology::{FilterPlan, FilterSpec, MorphConfig, MorphPixel};
 
-/// Something that can execute a named morphology/transpose artifact.
+/// Bound on cached plans per depth (cleared wholesale when exceeded).
+pub const PLAN_CACHE_CAP: usize = 64;
+
+/// Bound on the total scratch-arena bytes a per-depth plan cache may
+/// pin.  Plans own preallocated intermediates — a multi-slot chain on a
+/// large image holds several image-sized buffers — so the cache is
+/// bounded by retained bytes, not just entry count (ROI specs key on
+/// position and could otherwise pin hundreds of near-identical multi-MB
+/// arenas).  Enforcement: entries are evicted one at a time until a new
+/// plan fits (never a wholesale clear, so position-churning ROI specs
+/// cannot flush hot full-image plans), and a plan whose arena alone
+/// exceeds the whole budget runs **uncached** so its memory is freed
+/// immediately.
+pub const PLAN_CACHE_MAX_BYTES: usize = 32 << 20;
+
+/// Something that can execute a filter spec.
 pub trait Engine: Send {
-    /// Execute the operation described by `meta` on a u8 image.
-    fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>>;
+    /// Execute `spec` on a u8 image.
+    fn run_spec(&mut self, spec: &FilterSpec, img: &Image<u8>) -> Result<Image<u8>>;
 
-    /// Execute on a u16 image.  Backends without 16-bit support keep
-    /// this default and the router falls back to the native engine.
-    fn run_u16(&mut self, meta: &ArtifactMeta, img: &Image<u16>) -> Result<Image<u16>> {
-        let _ = (meta, img);
+    /// Execute `spec` on a u16 image.  Backends without 16-bit support
+    /// keep this default and the router falls back to the native engine.
+    fn run_spec_u16(&mut self, spec: &FilterSpec, img: &Image<u16>) -> Result<Image<u16>> {
+        let _ = (spec, img);
         Err(anyhow!(
             "backend {:?} has no u16 support",
             self.backend_name()
@@ -37,27 +69,80 @@ pub trait Engine: Send {
     fn backend_name(&self) -> &'static str;
 }
 
-/// Pure-rust engine: executes the op with the crate's native morphology
-/// (paper §5.3 final configuration) at either pixel depth.  Large
-/// images are band-sharded across the process-wide worker pool when the
-/// cost-model crossover predicts a win (`MorphConfig::parallelism`,
-/// default `Auto`) — output stays bit-identical to sequential
+/// Plan-cache key: the full spec (ROI position included — edge-clamped
+/// blocks resolve different geometry) plus the image shape.
+type PlanKey = (FilterSpec, usize, usize);
+
+/// Pure-rust engine: executes specs with the crate's native morphology
+/// through cached [`FilterPlan`]s.  Large images are band-sharded
+/// across the process-wide worker pool when the plan's cost-model
+/// crossover predicts a win — output stays bit-identical to sequential
 /// execution, so the router's backend choice never changes results.
-#[derive(Clone, Debug, Default)]
+#[derive(Debug, Default)]
 pub struct NativeEngine {
     cfg: MorphConfig,
+    plans_u8: HashMap<PlanKey, FilterPlan<u8>>,
+    plans_u16: HashMap<PlanKey, FilterPlan<u16>>,
 }
 
 impl NativeEngine {
+    /// An engine whose [`ArtifactMeta`] wrappers apply `cfg` (specs
+    /// carry their own configuration and ignore it).
     pub fn new(cfg: MorphConfig) -> Self {
-        NativeEngine { cfg }
+        NativeEngine {
+            cfg,
+            plans_u8: HashMap::new(),
+            plans_u16: HashMap::new(),
+        }
     }
 
-    /// Depth-generic execution body shared by `run` and `run_u16`.
-    /// Routes every morphology op through the band-parallel entry
-    /// points ([`parallel::filter_native`] and the `*_native` derived
-    /// compositions).
-    fn run_any<P: MorphPixel>(&self, meta: &ArtifactMeta, img: &Image<P>) -> Result<Image<P>> {
+    /// Resolved plans currently cached (both depths).
+    pub fn cached_plans(&self) -> usize {
+        self.plans_u8.len() + self.plans_u16.len()
+    }
+
+    /// Depth-generic execution body shared by `run_spec` and
+    /// `run_spec_u16`: plan once per `(spec, shape)`, run many.
+    fn run_any<P: MorphPixel>(
+        cache: &mut HashMap<PlanKey, FilterPlan<P>>,
+        spec: &FilterSpec,
+        img: &Image<P>,
+    ) -> Result<Image<P>> {
+        let key = (*spec, img.height(), img.width());
+        if let Some(plan) = cache.get_mut(&key) {
+            return Ok(plan.run_owned(img));
+        }
+        let mut plan = spec.plan::<P>(img.height(), img.width())?;
+        let new_bytes = plan.scratch_bytes();
+        if new_bytes > PLAN_CACHE_MAX_BYTES {
+            // bigger than the whole budget: run one-shot, never pin
+            return Ok(plan.run_owned(img));
+        }
+        // evict entries one at a time until the new plan fits — never
+        // wholesale, so ROI-position churn cannot flush hot plans
+        let mut resident: usize = cache.values().map(FilterPlan::scratch_bytes).sum();
+        while !cache.is_empty()
+            && (cache.len() >= PLAN_CACHE_CAP || resident + new_bytes > PLAN_CACHE_MAX_BYTES)
+        {
+            let victim = *cache.keys().next().unwrap();
+            if let Some(evicted) = cache.remove(&victim) {
+                resident -= evicted.scratch_bytes();
+            }
+        }
+        Ok(cache.entry(key).or_insert(plan).run_owned(img))
+    }
+
+    /// Build the spec a legacy artifact description denotes, using this
+    /// engine's configuration.
+    fn spec_of(&self, meta: &ArtifactMeta) -> Result<FilterSpec> {
+        let op = meta
+            .op
+            .parse::<crate::morphology::FilterOp>()
+            .map_err(|e| anyhow!("artifact {}: {e}", meta.name))?;
+        Ok(FilterSpec::new(op, meta.w_x, meta.w_y).with_config(self.cfg))
+    }
+
+    fn check_shape<P: MorphPixel>(meta: &ArtifactMeta, img: &Image<P>) -> Result<()> {
         if img.height() != meta.height || img.width() != meta.width {
             return Err(anyhow!(
                 "image {}x{} does not match artifact {} ({}x{})",
@@ -68,30 +153,32 @@ impl NativeEngine {
                 meta.width
             ));
         }
-        let (w_x, w_y) = (meta.w_x, meta.w_y);
-        let cfg = &self.cfg;
-        let out = match meta.op.as_str() {
-            "erode" => parallel::filter_native(img, MorphOp::Erode, w_x, w_y, cfg),
-            "dilate" => parallel::filter_native(img, MorphOp::Dilate, w_x, w_y, cfg),
-            "opening" => parallel::opening_native(img, w_x, w_y, cfg),
-            "closing" => parallel::closing_native(img, w_x, w_y, cfg),
-            "gradient" => parallel::gradient_native(img, w_x, w_y, cfg),
-            "tophat" => parallel::tophat_native(img, w_x, w_y, cfg),
-            "blackhat" => parallel::blackhat_native(img, w_x, w_y, cfg),
-            "transpose" => P::transpose_image(&mut Native, img.view()),
-            other => return Err(anyhow!("unknown op {other:?}")),
-        };
-        Ok(out)
+        Ok(())
+    }
+
+    /// Legacy surface: execute the op described by an [`ArtifactMeta`]
+    /// on a u8 image (spec built from the meta + engine config).
+    pub fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
+        Self::check_shape(meta, img)?;
+        let spec = self.spec_of(meta)?;
+        Self::run_any(&mut self.plans_u8, &spec, img)
+    }
+
+    /// Legacy surface at 16-bit depth.
+    pub fn run_u16(&mut self, meta: &ArtifactMeta, img: &Image<u16>) -> Result<Image<u16>> {
+        Self::check_shape(meta, img)?;
+        let spec = self.spec_of(meta)?;
+        Self::run_any(&mut self.plans_u16, &spec, img)
     }
 }
 
 impl Engine for NativeEngine {
-    fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
-        self.run_any(meta, img)
+    fn run_spec(&mut self, spec: &FilterSpec, img: &Image<u8>) -> Result<Image<u8>> {
+        Self::run_any(&mut self.plans_u8, spec, img)
     }
 
-    fn run_u16(&mut self, meta: &ArtifactMeta, img: &Image<u16>) -> Result<Image<u16>> {
-        self.run_any(meta, img)
+    fn run_spec_u16(&mut self, spec: &FilterSpec, img: &Image<u16>) -> Result<Image<u16>> {
+        Self::run_any(&mut self.plans_u16, spec, img)
     }
 
     fn backend_name(&self) -> &'static str {
@@ -103,6 +190,7 @@ impl Engine for NativeEngine {
 mod tests {
     use super::*;
     use crate::image::synth;
+    use crate::morphology::{FilterOp, Roi};
 
     fn meta(op: &str, h: usize, w: usize, wx: usize, wy: usize) -> ArtifactMeta {
         meta_dtype(op, h, w, wx, wy, "u8")
@@ -184,5 +272,51 @@ mod tests {
             .unwrap();
         let want = crate::morphology::erode(&img, 5, 7);
         assert!(got.same_pixels(&want));
+    }
+
+    #[test]
+    fn run_spec_reuses_cached_plans() {
+        let mut e = NativeEngine::default();
+        let spec = FilterSpec::new(FilterOp::TopHat, 5, 3);
+        let a = synth::noise(20, 28, 1);
+        let b = synth::noise(20, 28, 2);
+        let ra = e.run_spec(&spec, &a).unwrap();
+        assert_eq!(e.cached_plans(), 1);
+        let _rb = e.run_spec(&spec, &b).unwrap();
+        assert_eq!(e.cached_plans(), 1, "same (spec, shape) must reuse the plan");
+        let ra2 = e.run_spec(&spec, &a).unwrap();
+        assert!(ra.same_pixels(&ra2));
+        // a different shape resolves its own plan
+        let c = synth::noise(10, 12, 3);
+        let _ = e.run_spec(&spec, &c).unwrap();
+        assert_eq!(e.cached_plans(), 2);
+        let want = crate::morphology::parallel::tophat_native(&a, 5, 3, &MorphConfig::default());
+        assert!(ra.same_pixels(&want));
+    }
+
+    #[test]
+    fn run_spec_handles_roi_and_errors() {
+        let mut e = NativeEngine::default();
+        let img = synth::noise(30, 30, 4);
+        let spec = FilterSpec::new(FilterOp::Erode, 5, 5).with_roi(Roi::new(4, 6, 10, 12));
+        let got = e.run_spec(&spec, &img).unwrap();
+        let full = crate::morphology::erode(&img, 5, 5);
+        assert!(got.same_pixels(&full.view().sub_rect(4, 6, 10, 12).to_image()));
+        // invalid spec surfaces as an error, not a panic
+        let bad = FilterSpec::new(FilterOp::Erode, 4, 4);
+        assert!(e.run_spec(&bad, &img).is_err());
+        let oob = FilterSpec::new(FilterOp::Erode, 3, 3).with_roi(Roi::new(25, 25, 10, 10));
+        assert!(e.run_spec(&oob, &img).is_err());
+    }
+
+    #[test]
+    fn plan_cache_is_bounded() {
+        let mut e = NativeEngine::default();
+        let img = synth::noise(12, 12, 7);
+        for w in 0..PLAN_CACHE_CAP + 3 {
+            let spec = FilterSpec::new(FilterOp::Erode, 2 * w + 1, 3);
+            let _ = e.run_spec(&spec, &img).unwrap();
+        }
+        assert!(e.cached_plans() <= PLAN_CACHE_CAP);
     }
 }

@@ -147,9 +147,38 @@ mod real {
         }
     }
 
+    impl XlaRuntime {
+        /// Artifact matching a spec, gated on the shared canonical-form
+        /// predicate ([`crate::morphology::FilterSpec::single_identity_op`]
+        /// — the same rule the coordinator's router applies, so the two
+        /// can never drift).
+        fn artifact_for(
+            &self,
+            spec: &crate::morphology::FilterSpec,
+            h: usize,
+            w: usize,
+        ) -> Option<ArtifactMeta> {
+            let op = spec.single_identity_op()?;
+            self.manifest
+                .find(op.name(), h, w, spec.w_x, spec.w_y)
+                .cloned()
+        }
+    }
+
     impl Engine for XlaRuntime {
-        fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
-            self.run_u8(meta, img)
+        fn run_spec(
+            &mut self,
+            spec: &crate::morphology::FilterSpec,
+            img: &Image<u8>,
+        ) -> Result<Image<u8>> {
+            match self.artifact_for(spec, img.height(), img.width()) {
+                Some(meta) => self.run_u8(&meta, img),
+                None => Err(anyhow!(
+                    "no compiled artifact matches spec {spec:?} on {}x{}",
+                    img.height(),
+                    img.width()
+                )),
+            }
         }
 
         fn backend_name(&self) -> &'static str {
@@ -211,8 +240,13 @@ mod stub {
     }
 
     impl Engine for XlaRuntime {
-        fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
-            self.run_u8(meta, img)
+        fn run_spec(
+            &mut self,
+            spec: &crate::morphology::FilterSpec,
+            img: &Image<u8>,
+        ) -> Result<Image<u8>> {
+            let _ = (spec, img);
+            bail!("PJRT support not compiled in")
         }
 
         fn backend_name(&self) -> &'static str {

@@ -15,7 +15,7 @@
 pub mod neon;
 pub mod scalar;
 
-use crate::image::{Image, ImageView};
+use crate::image::{Image, ImageView, ImageViewMut};
 use crate::neon::Backend;
 
 pub use neon::{transpose16x16_u8, transpose8x8_u16};
@@ -26,8 +26,22 @@ pub use scalar::{transpose16x16_u8_scalar, transpose8x8_u16_scalar};
 /// strided [`ImageView`] (a `&Image` coerces).
 pub fn transpose_image<'a, B: Backend>(b: &mut B, img: impl Into<ImageView<'a, u8>>) -> Image<u8> {
     let img = img.into();
+    let mut out = Image::zeros(img.width(), img.height());
+    transpose_image_into(b, img, out.view_mut());
+    out
+}
+
+/// [`transpose_image`] writing into a caller-provided `w × h`
+/// destination view — the zero-allocation form the plan executor's
+/// §5.2.1 sandwich reuses its preallocated buffers through.
+pub fn transpose_image_into<'a, B: Backend>(
+    b: &mut B,
+    img: impl Into<ImageView<'a, u8>>,
+    mut out: ImageViewMut<'_, u8>,
+) {
+    let img = img.into();
     let (h, w) = (img.height(), img.width());
-    let mut out = Image::zeros(w, h);
+    debug_assert_eq!((out.height(), out.width()), (w, h));
     b.record_stream((h * w) as u64, (h * w) as u64);
 
     let th = h - h % 16;
@@ -60,7 +74,6 @@ pub fn transpose_image<'a, B: Backend>(b: &mut B, img: impl Into<ImageView<'a, u
             b.scalar_store_u8(out.row_mut(x), y, v);
         }
     }
-    out
 }
 
 /// Transpose a u16 image using the paper's 8×8.16 NEON tiles for the
@@ -71,8 +84,21 @@ pub fn transpose_image_u16<'a, B: Backend>(
     img: impl Into<ImageView<'a, u16>>,
 ) -> Image<u16> {
     let img = img.into();
+    let mut out = Image::zeros(img.width(), img.height());
+    transpose_image_u16_into(b, img, out.view_mut());
+    out
+}
+
+/// [`transpose_image_u16`] writing into a caller-provided `w × h`
+/// destination view.
+pub fn transpose_image_u16_into<'a, B: Backend>(
+    b: &mut B,
+    img: impl Into<ImageView<'a, u16>>,
+    mut out: ImageViewMut<'_, u16>,
+) {
+    let img = img.into();
     let (h, w) = (img.height(), img.width());
-    let mut out = Image::zeros(w, h);
+    debug_assert_eq!((out.height(), out.width()), (w, h));
     b.record_stream((2 * h * w) as u64, (2 * h * w) as u64);
 
     let th = h - h % 8;
@@ -101,7 +127,6 @@ pub fn transpose_image_u16<'a, B: Backend>(
             b.scalar_store_u16(out.row_mut(x), y, v);
         }
     }
-    out
 }
 
 /// Scalar whole-image transpose (baseline for benches).

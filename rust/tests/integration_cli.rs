@@ -103,11 +103,13 @@ fn bench_smoke_then_gate_round_trip() {
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     assert!(out_dir.join("BENCH_fig3.json").exists());
+    assert!(out_dir.join("BENCH_fig3_u16.json").exists());
     assert!(out_dir.join("BENCH_fig4.json").exists());
     assert!(out_dir.join("BENCH_table1.json").exists());
     assert!(out_dir.join("BENCH_scaling.json").exists());
     assert!(base_dir.join("BENCH_scaling.json").exists());
     assert!(base_dir.join("BENCH_table1.json").exists());
+    assert!(base_dir.join("BENCH_fig3_u16.json").exists());
 
     // the gate passes against the just-written baselines
     let out = bin()
@@ -226,17 +228,34 @@ fn filter_roi_flag_equals_cropped_full_filter() {
         .output()
         .unwrap();
     assert!(!oob.status.success());
-    // derived ops are not ROI-capable (documented limitation)
+    // derived ops compose with --roi since the plan-execute redesign:
+    // crop(gradient(full), roi) through a haloed block
     let grad = bin()
-        .args(["filter", "--op", "gradient", "--roi", "0,0,8,8"])
+        .args(["filter", "--op", "gradient", "--wx", "5", "--wy", "7"])
+        .args(["--roi", "5,6,24,30"])
         .arg("--input")
         .arg(&input)
         .arg("--output")
         .arg(dir.join("grad.pgm"))
         .output()
         .unwrap();
-    assert!(!grad.status.success());
-    assert!(String::from_utf8_lossy(&grad.stderr).contains("erode|dilate"));
+    assert!(
+        grad.status.success(),
+        "{}",
+        String::from_utf8_lossy(&grad.stderr)
+    );
+    let got_g = neon_morph::image::read_pgm(dir.join("grad.pgm")).unwrap();
+    let full_g = neon_morph::morphology::gradient(
+        &mut neon_morph::neon::Native,
+        &img,
+        5,
+        7,
+        &neon_morph::morphology::MorphConfig::default(),
+    );
+    assert!(
+        got_g.same_pixels(&full_g.view().sub_rect(5, 6, 24, 30).to_image()),
+        "--op gradient --roi must equal cropped full gradient"
+    );
     // the ROI path is native-only: an explicit --backend xla must be
     // rejected, not silently ignored
     let xla = bin()
@@ -249,6 +268,49 @@ fn filter_roi_flag_equals_cropped_full_filter() {
         .unwrap();
     assert!(!xla.status.success());
     assert!(String::from_utf8_lossy(&xla.stderr).contains("native engine"));
+}
+
+#[test]
+fn filter_op_chain_runs_left_to_right() {
+    let dir = tmpdir().join("chain_flag");
+    std::fs::create_dir_all(&dir).unwrap();
+    let demo = bin()
+        .args(["demo", "--outdir"])
+        .arg(&dir)
+        .args(["--height", "60", "--width", "90"])
+        .output()
+        .unwrap();
+    assert!(demo.status.success());
+    let input = dir.join("demo_input.pgm");
+    let output = dir.join("chained.pgm");
+    let out = bin()
+        .args(["filter", "--op", "opening,gradient", "--wx", "3", "--wy", "3"])
+        .args(["--backend", "native"])
+        .arg("--input")
+        .arg(&input)
+        .arg("--output")
+        .arg(&output)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let img = neon_morph::image::read_pgm(&input).unwrap();
+    let cfg = neon_morph::morphology::MorphConfig::default();
+    let b = &mut neon_morph::neon::Native;
+    let o = neon_morph::morphology::opening(b, &img, 3, 3, &cfg);
+    let want = neon_morph::morphology::gradient(b, &o, 3, 3, &cfg);
+    let got = neon_morph::image::read_pgm(&output).unwrap();
+    assert!(got.same_pixels(&want), "--op opening,gradient must chain");
+    // unknown chain element fails with the op list intact
+    let bad = bin()
+        .args(["filter", "--op", "opening,sharpen"])
+        .arg("--input")
+        .arg(&input)
+        .arg("--output")
+        .arg(dir.join("bad.pgm"))
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("unknown op"));
 }
 
 #[test]

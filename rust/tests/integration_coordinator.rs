@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use neon_morph::image::synth;
-use neon_morph::morphology::{self, MorphConfig};
+use neon_morph::morphology::{self, FilterOp, FilterSpec, MorphConfig};
 use neon_morph::neon::Native;
 use neon_morph::runtime::Manifest;
 
@@ -36,13 +36,14 @@ fn auto_routes_artifact_shapes_to_xla_and_others_to_native() {
     let r = coord.filter("erode", 3, 3, img.clone()).unwrap();
     assert_eq!(r.backend, "xla-pjrt");
     let want = morphology::erode(img.view(), 3, 3);
-    assert!(r.result.unwrap().expect_u8().same_pixels(&want));
+    assert!(r.result.unwrap().into_u8().unwrap().same_pixels(&want));
 
     // 100x100 has no artifact -> native
     let img2 = Arc::new(synth::noise(100, 100, 12));
     let r2 = coord.filter("erode", 3, 3, img2.clone()).unwrap();
     assert_eq!(r2.backend, "native");
-    assert!(r2.result.unwrap().expect_u8().same_pixels(&morphology::erode(img2.view(), 3, 3)));
+    let out2 = r2.result.unwrap().into_u8().unwrap();
+    assert!(out2.same_pixels(&morphology::erode(img2.view(), 3, 3)));
     coord.shutdown();
 }
 
@@ -118,7 +119,7 @@ fn native_fallback_when_artifact_dir_missing() {
     let img = Arc::new(synth::noise(32, 32, 17));
     let r = coord.filter("erode", 3, 3, img.clone()).unwrap();
     assert_eq!(r.backend, "native");
-    assert!(r.result.unwrap().expect_u8().same_pixels(&morphology::erode(img.view(), 3, 3)));
+    assert!(r.result.unwrap().into_u8().unwrap().same_pixels(&morphology::erode(img.view(), 3, 3)));
     coord.shutdown();
 }
 
@@ -145,7 +146,7 @@ fn derived_ops_through_full_xla_path() {
     for (op, wx, wy) in [("opening", 7usize, 7usize), ("closing", 7, 7), ("gradient", 15, 15)] {
         let r = coord.filter(op, wx, wy, img.clone()).unwrap();
         assert_eq!(r.backend, "xla-pjrt", "{op}");
-        let got = r.result.unwrap().expect_u8();
+        let got = r.result.unwrap().into_u8().unwrap();
         let want = match op {
             "opening" => morphology::opening(&mut Native, img.view(), wx, wy, &cfg),
             "closing" => morphology::closing(&mut Native, img.view(), wx, wy, &cfg),
@@ -179,18 +180,23 @@ fn batching_stays_fair_when_bands_and_requests_contend_for_the_pool() {
     })
     .unwrap();
     let img = Arc::new(synth::noise(120, 160, 0xFA17));
+    let banded = MorphConfig {
+        parallelism: Parallelism::Fixed(3),
+        ..MorphConfig::default()
+    };
     let mut tickets = Vec::new();
     for i in 0..32 {
-        let op = if i % 2 == 0 { "erode" } else { "dilate" };
-        tickets.push((op, coord.submit(op, 7, 7, img.clone()).unwrap()));
+        let op = if i % 2 == 0 { FilterOp::Erode } else { FilterOp::Dilate };
+        let spec = FilterSpec::new(op, 7, 7).with_config(banded);
+        tickets.push((op, coord.submit(spec, img.clone()).unwrap()));
     }
     let want_e = morphology::erode(img.view(), 7, 7);
     let want_d = morphology::dilate(img.view(), 7, 7);
     let (mut done_e, mut done_d) = (0u32, 0u32);
     for (op, t) in tickets {
         let r = t.wait().unwrap();
-        let out = r.result.unwrap().expect_u8();
-        if op == "erode" {
+        let out = r.result.unwrap().into_u8().unwrap();
+        if op == FilterOp::Erode {
             assert!(out.same_pixels(&want_e), "banded erode under contention");
             done_e += 1;
         } else {
@@ -217,7 +223,11 @@ fn queue_latency_reported_nonzero_under_load() {
     let coord = Coordinator::start_native(1).unwrap();
     let img = Arc::new(synth::paper_image(19));
     let tickets: Vec<_> = (0..8)
-        .map(|_| coord.submit("opening", 9, 9, img.clone()).unwrap())
+        .map(|_| {
+            coord
+                .submit(FilterSpec::new(FilterOp::Open, 9, 9), img.clone())
+                .unwrap()
+        })
         .collect();
     for t in tickets {
         t.wait().unwrap().result.unwrap();

@@ -5,7 +5,7 @@
 //! when the manifest is missing so `cargo test` works pre-build.
 
 use neon_morph::image::synth;
-use neon_morph::runtime::{Engine, Manifest, NativeEngine, XlaRuntime};
+use neon_morph::runtime::{Manifest, NativeEngine, XlaRuntime};
 
 fn runtime_or_skip() -> Option<XlaRuntime> {
     match XlaRuntime::new("artifacts") {
@@ -54,7 +54,7 @@ fn xla_artifacts_match_native_on_256() {
         .collect();
     assert!(!metas.is_empty());
     for meta in metas {
-        let got = rt.run(&meta, &img).unwrap_or_else(|e| panic!("{}: {e:#}", meta.name));
+        let got = rt.run_u8(&meta, &img).unwrap_or_else(|e| panic!("{}: {e:#}", meta.name));
         let want = native.run(&meta, &img).unwrap();
         assert!(
             got.same_pixels(&want),
@@ -75,7 +75,7 @@ fn xla_paper_shape_artifact_matches_native() {
         .find("erode", 600, 800, 7, 7)
         .expect("600x800 erode w7x7 artifact")
         .clone();
-    let got = rt.run(&meta, &img).unwrap();
+    let got = rt.run_u8(&meta, &img).unwrap();
     let want = native.run(&meta, &img).unwrap();
     assert!(got.same_pixels(&want), "{:?}", got.first_diff(&want));
 }
@@ -85,7 +85,7 @@ fn xla_transpose_artifact() {
     let Some(mut rt) = runtime_or_skip() else { return };
     let img = synth::noise(256, 256, 5);
     let meta = rt.manifest().get("transpose_256x256").unwrap().clone();
-    let got = rt.run(&meta, &img).unwrap();
+    let got = rt.run_u8(&meta, &img).unwrap();
     assert!(got.same_pixels(&img.transposed()));
 }
 
@@ -94,7 +94,7 @@ fn xla_rejects_wrong_shape() {
     let Some(mut rt) = runtime_or_skip() else { return };
     let meta = rt.manifest().find("erode", 256, 256, 3, 3).unwrap().clone();
     let img = synth::noise(100, 100, 6);
-    assert!(rt.run(&meta, &img).is_err());
+    assert!(rt.run_u8(&meta, &img).is_err());
 }
 
 #[test]
@@ -103,8 +103,8 @@ fn strided_images_are_compacted_before_upload() {
     let meta = rt.manifest().find("dilate", 256, 256, 3, 3).unwrap().clone();
     let img = synth::noise(256, 256, 7);
     let strided = img.with_stride(320, 0xAB);
-    let got = rt.run(&meta, &strided).unwrap();
-    let want = rt.run(&meta, &img).unwrap();
+    let got = rt.run_u8(&meta, &strided).unwrap();
+    let want = rt.run_u8(&meta, &img).unwrap();
     assert!(got.same_pixels(&want));
 }
 
@@ -114,11 +114,11 @@ fn executable_cache_reuses_compilations() {
     let meta = rt.manifest().find("erode", 256, 256, 3, 3).unwrap().clone();
     let img = synth::noise(256, 256, 8);
     assert_eq!(rt.compiled_count(), 0);
-    let _ = rt.run(&meta, &img).unwrap();
+    let _ = rt.run_u8(&meta, &img).unwrap();
     assert_eq!(rt.compiled_count(), 1);
     let t = std::time::Instant::now();
     for _ in 0..3 {
-        let _ = rt.run(&meta, &img).unwrap();
+        let _ = rt.run_u8(&meta, &img).unwrap();
     }
     let warm = t.elapsed();
     assert_eq!(rt.compiled_count(), 1, "no recompilation");

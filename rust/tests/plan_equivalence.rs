@@ -1,0 +1,238 @@
+//! Plan-equivalence property suite: `FilterPlan::run` must be
+//! **bit-identical** to the legacy entry points for every spec.
+//!
+//! The oracle is deliberately the *non-plan* implementation: the
+//! backend-generic sequential composition (`separable::morphology` and
+//! the generic derived ops, which execute the lowered chain through
+//! owned-image composition) — so the arena-backed executor, the banded
+//! `_into` paths and the ROI block arithmetic are checked against an
+//! independently-running implementation, across
+//! op × method × vertical × simd × border × depth × ROI, on strided
+//! sources and degenerate shapes.  The coordinator-level wrappers are
+//! covered by `coordinator::tests` and `integration_coordinator.rs`.
+
+use neon_morph::image::{synth, Image};
+use neon_morph::morphology::{
+    self, separable, Border, FilterOp, FilterSpec, HybridThresholds, MorphConfig, MorphOp,
+    MorphPixel, Parallelism, PassMethod, Roi, VerticalStrategy,
+};
+use neon_morph::neon::Native;
+
+fn configs(parallelism: Parallelism) -> Vec<MorphConfig> {
+    let mut out = Vec::new();
+    for method in [PassMethod::Linear, PassMethod::Vhgw, PassMethod::Hybrid] {
+        for vertical in [VerticalStrategy::Transpose, VerticalStrategy::Direct] {
+            for simd in [false, true] {
+                for border in [Border::Identity, Border::Replicate] {
+                    out.push(MorphConfig {
+                        method,
+                        vertical,
+                        simd,
+                        border,
+                        thresholds: HybridThresholds::paper(),
+                        parallelism,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The non-plan oracle for one op under one config.
+fn legacy<P: MorphPixel>(
+    img: &Image<P>,
+    op: FilterOp,
+    wx: usize,
+    wy: usize,
+    cfg: &MorphConfig,
+) -> Image<P> {
+    let b = &mut Native;
+    match op {
+        FilterOp::Erode => separable::morphology(b, img, MorphOp::Erode, wx, wy, cfg),
+        FilterOp::Dilate => separable::morphology(b, img, MorphOp::Dilate, wx, wy, cfg),
+        FilterOp::Open => morphology::opening(b, img, wx, wy, cfg),
+        FilterOp::Close => morphology::closing(b, img, wx, wy, cfg),
+        FilterOp::Gradient => morphology::gradient(b, img, wx, wy, cfg),
+        FilterOp::TopHat => morphology::tophat(b, img, wx, wy, cfg),
+        FilterOp::BlackHat => morphology::blackhat(b, img, wx, wy, cfg),
+        FilterOp::Transpose => unreachable!(),
+    }
+}
+
+fn sweep_ops<P: MorphPixel>(img: &Image<P>, windows: &[(usize, usize)], parallelism: Parallelism) {
+    for cfg in configs(parallelism) {
+        for &(wx, wy) in windows {
+            for op in [
+                FilterOp::Erode,
+                FilterOp::Dilate,
+                FilterOp::Open,
+                FilterOp::Close,
+                FilterOp::Gradient,
+                FilterOp::TopHat,
+                FilterOp::BlackHat,
+            ] {
+                let want = legacy(img, op, wx, wy, &cfg);
+                let got = FilterSpec::new(op, wx, wy)
+                    .with_config(cfg)
+                    .run_once::<P>(img)
+                    .unwrap();
+                assert!(
+                    got.same_pixels(&want),
+                    "{op:?} {wx}x{wy} cfg={cfg:?}: {:?}",
+                    got.first_diff(&want)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_op_matches_legacy_u8() {
+    let img = synth::noise(28, 33, 0x91A);
+    sweep_ops(&img, &[(3, 5), (5, 3)], Parallelism::Sequential);
+}
+
+#[test]
+fn every_op_matches_legacy_u16() {
+    let img = synth::noise_u16(20, 24, 0xB0B);
+    sweep_ops(&img, &[(3, 3)], Parallelism::Sequential);
+}
+
+#[test]
+fn banded_plans_match_legacy() {
+    // Fixed(3) forces the banded _into executors through the pool
+    let img = synth::noise(40, 48, 0x3AD);
+    sweep_ops(&img, &[(5, 7)], Parallelism::Fixed(3));
+    let img16 = synth::noise_u16(36, 40, 0x3AE);
+    sweep_ops(&img16, &[(5, 5)], Parallelism::Fixed(3));
+}
+
+#[test]
+fn degenerate_shapes_and_windows() {
+    for &(h, w) in &[(1, 1), (1, 17), (17, 1), (2, 2), (16, 16)] {
+        let img = synth::noise(h, w, (h * 31 + w) as u64);
+        for &(wx, wy) in &[(1, 1), (1, 5), (5, 1), (21, 21)] {
+            for op in [FilterOp::Erode, FilterOp::TopHat] {
+                let cfg = MorphConfig::default();
+                let want = legacy(&img, op, wx, wy, &cfg);
+                let got = FilterSpec::new(op, wx, wy).run_once::<u8>(&img).unwrap();
+                assert!(
+                    got.same_pixels(&want),
+                    "{op:?} {wx}x{wy} on {h}x{w}: {:?}",
+                    got.first_diff(&want)
+                );
+            }
+        }
+    }
+    let empty = Image::<u8>::zeros(0, 9);
+    let out = FilterSpec::new(FilterOp::Gradient, 3, 3).run_once::<u8>(&empty).unwrap();
+    assert_eq!((out.height(), out.width()), (0, 9));
+}
+
+#[test]
+fn strided_sources_match_compact() {
+    let img = synth::noise(24, 30, 0x57);
+    let padded = img.with_stride(48, 0xEE);
+    for op in [FilterOp::Erode, FilterOp::Gradient, FilterOp::BlackHat] {
+        let want = FilterSpec::new(op, 5, 3).run_once::<u8>(&img).unwrap();
+        let got = FilterSpec::new(op, 5, 3).run_once::<u8>(&padded).unwrap();
+        assert!(got.same_pixels(&want), "{op:?} via strided view");
+    }
+}
+
+#[test]
+fn roi_specs_match_cropped_legacy() {
+    let img = synth::noise(34, 39, 0x201);
+    let rois = [
+        Roi::new(0, 0, 9, 11),
+        Roi::new(0, 28, 8, 11),
+        Roi::new(25, 0, 9, 8),
+        Roi::new(8, 10, 14, 17),
+        Roi::full(34, 39),
+    ];
+    for border in [Border::Identity, Border::Replicate] {
+        let cfg = MorphConfig {
+            border,
+            parallelism: Parallelism::Sequential,
+            ..MorphConfig::default()
+        };
+        for op in [FilterOp::Erode, FilterOp::Dilate, FilterOp::TopHat, FilterOp::Gradient] {
+            let full = legacy(&img, op, 5, 7, &cfg);
+            for roi in rois {
+                let want = full.view().sub_rect(roi.y, roi.x, roi.height, roi.width).to_image();
+                let got = FilterSpec::new(op, 5, 7)
+                    .with_config(cfg)
+                    .with_roi(roi)
+                    .run_once::<u8>(&img)
+                    .unwrap();
+                assert!(
+                    got.same_pixels(&want),
+                    "{op:?} {border:?} {roi:?}: {:?}",
+                    got.first_diff(&want)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn roi_wrappers_still_equal_plans() {
+    // the legacy ROI entry points are wrappers over one-shot plans;
+    // pin the equivalence explicitly
+    let img = synth::noise_u16(30, 30, 0x88);
+    let roi = Roi::new(4, 5, 12, 13);
+    let a = morphology::erode_roi(&img, 5, 5, roi);
+    let b = FilterSpec::new(FilterOp::Erode, 5, 5)
+        .with_roi(roi)
+        .run_once::<u16>(&img)
+        .unwrap();
+    assert!(a.same_pixels(&b));
+}
+
+#[test]
+fn chains_match_manual_composition() {
+    let img = synth::noise(26, 31, 0xCC);
+    let cfg = MorphConfig::default();
+    let got = FilterSpec::chain(&[FilterOp::Close, FilterOp::TopHat, FilterOp::Dilate], 3, 3)
+        .unwrap()
+        .run_once::<u8>(&img)
+        .unwrap();
+    let c = legacy(&img, FilterOp::Close, 3, 3, &cfg);
+    let t = legacy(&c, FilterOp::TopHat, 3, 3, &cfg);
+    let want = legacy(&t, FilterOp::Dilate, 3, 3, &cfg);
+    assert!(got.same_pixels(&want));
+}
+
+#[test]
+fn reused_plan_is_bit_stable_across_images() {
+    let spec = FilterSpec::new(FilterOp::Gradient, 5, 5);
+    let mut plan = spec.plan::<u8>(32, 40).unwrap();
+    for seed in 0..6u64 {
+        let img = synth::noise(32, 40, seed);
+        let want = legacy(&img, FilterOp::Gradient, 5, 5, &MorphConfig::default());
+        let got = plan.run_owned(&img);
+        assert!(got.same_pixels(&want), "seed {seed}");
+    }
+}
+
+#[test]
+fn run_into_matches_run_owned() {
+    let img = synth::noise(22, 27, 0xF0);
+    let spec = FilterSpec::new(FilterOp::Open, 5, 3).with_roi(Roi::new(2, 3, 15, 18));
+    let mut plan = spec.plan::<u8>(22, 27).unwrap();
+    let owned = plan.run_owned(&img);
+    let mut dst = Image::<u8>::filled(15, 18, 0xAB);
+    plan.run(&img, dst.view_mut());
+    assert!(dst.same_pixels(&owned));
+}
+
+#[test]
+fn transpose_spec_matches_legacy_both_depths() {
+    let img = synth::noise(18, 25, 1);
+    let got = FilterSpec::new(FilterOp::Transpose, 0, 0).run_once::<u8>(&img).unwrap();
+    assert!(got.same_pixels(&img.transposed()));
+    let img16 = synth::noise_u16(18, 25, 1);
+    let got = FilterSpec::new(FilterOp::Transpose, 0, 0).run_once::<u16>(&img16).unwrap();
+    assert!(got.same_pixels(&img16.transposed()));
+}

@@ -233,7 +233,7 @@ fn prop_coordinator_results_equal_direct_calls() {
         let w_y = odd_window(rng, 9);
         let op = ["erode", "dilate", "gradient"][rng.below(3)];
         let resp = coord.filter(op, w_x, w_y, img.clone()).unwrap();
-        let got = resp.result.unwrap().expect_u8();
+        let got = resp.result.unwrap().into_u8().unwrap();
         let cfg = MorphConfig::default();
         let want = match op {
             "erode" => morphology::erode(img.view(), w_x, w_y),

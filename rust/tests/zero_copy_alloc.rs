@@ -10,19 +10,38 @@
 //! band plan, the scope latch, the cols pass's row-sized scratch
 //! buffer).
 //!
-//! The test measures heap bytes allocated during the calls with a
-//! counting global allocator and pins the banded-minus-sequential
-//! overhead to a small constant — one hidden image copy (64 KiB here)
-//! would blow the budget by an order of magnitude.
+//! The tests measure heap bytes allocated during the calls with a
+//! counting global allocator and pin the overheads to small constants —
+//! one hidden image copy (64 KiB here) would blow every budget by an
+//! order of magnitude.  Three properties are pinned:
+//!
+//! 1. banded passes are zero-copy (no staging slab / stitch),
+//! 2. a reused [`FilterPlan`]'s Nth run allocates **zero
+//!    intermediate-image bytes** — every intermediate lives in the
+//!    plan's scratch arena (the only per-run heap traffic is the cols
+//!    kernel's row-sized staging buffer, which every legacy path also
+//!    allocates), and
+//! 3. the coordinator's typed `BatchKey` is built and compared without
+//!    any heap allocation (the pre-plan era formatted a `String` per
+//!    submit and per pull).
+//!
+//! All measuring tests serialize on one lock so a sibling test's
+//! allocations never pollute the counters (the harness runs tests
+//! concurrently in one process).
 //!
 //! [`ImageView`]: neon_morph::image::ImageView
+//! [`FilterPlan`]: neon_morph::morphology::FilterPlan
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 
-use neon_morph::image::synth;
+use neon_morph::image::{synth, Image};
 use neon_morph::morphology::parallel::{pass_cols_banded, pass_rows_banded, BandPool};
-use neon_morph::morphology::{HybridThresholds, MorphOp, PassMethod, VerticalStrategy};
+use neon_morph::morphology::{
+    FilterOp, FilterSpec, HybridThresholds, MorphConfig, MorphOp, Parallelism, PassMethod,
+    VerticalStrategy,
+};
 use neon_morph::neon::Native;
 
 struct CountingAlloc;
@@ -53,6 +72,15 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
 
+/// Serializes the measuring sections: every test in this binary takes
+/// this lock for its whole body, so another test's allocations can
+/// never land inside a measurement window.
+static MEASURE: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    MEASURE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Heap bytes allocated (on any thread) while running `f`.
 fn allocated_during<R>(f: impl FnOnce() -> R) -> (u64, R) {
     ALLOCATED.store(0, Ordering::SeqCst);
@@ -62,10 +90,9 @@ fn allocated_during<R>(f: impl FnOnce() -> R) -> (u64, R) {
     (ALLOCATED.load(Ordering::SeqCst), out)
 }
 
-// Single #[test] so no sibling test's allocations pollute the counters
-// (the test harness runs tests in one process, possibly concurrently).
 #[test]
 fn banded_passes_allocate_no_staging_copies() {
+    let _guard = lock();
     const H: usize = 128;
     const W: usize = 512; // dst = 64 KiB at u8
     const BANDS: usize = 4;
@@ -152,5 +179,91 @@ fn banded_passes_allocate_no_staging_copies() {
         cols_bytes <= dst_bytes + scratch + slack,
         "banded cols pass allocated {cols_bytes} B (budget {})",
         dst_bytes + scratch + slack
+    );
+}
+
+#[test]
+fn reused_plan_runs_allocate_no_intermediate_images() {
+    let _guard = lock();
+    const H: usize = 128;
+    const W: usize = 512; // every intermediate image would be 64 KiB at u8
+    let img = synth::noise(H, W, 0x9147);
+    // generous bound for the cols kernel's per-call row buffer(s) plus
+    // collection bookkeeping — one intermediate image is 8x larger
+    let slack = 8 * 1024u64;
+
+    // (a) hybrid-small spec (rows+cols resolve to Linear, direct
+    //     vertical): the plan's after_rows arena absorbs the rows→cols
+    //     intermediate
+    // (b) forced transpose sandwich: both w×h transpose buffers live in
+    //     the arena too
+    // (c) a derived chain (tophat = 3 steps, 3 slots + sub)
+    let sandwich_cfg = MorphConfig {
+        method: PassMethod::Linear,
+        vertical: VerticalStrategy::Transpose,
+        parallelism: Parallelism::Sequential,
+        ..MorphConfig::default()
+    };
+    let seq_cfg = MorphConfig {
+        parallelism: Parallelism::Sequential,
+        ..MorphConfig::default()
+    };
+    let specs = [
+        FilterSpec::new(FilterOp::Erode, 9, 9).with_config(seq_cfg),
+        FilterSpec::new(FilterOp::Dilate, 9, 9).with_config(sandwich_cfg),
+        FilterSpec::new(FilterOp::TopHat, 9, 9).with_config(seq_cfg),
+    ];
+    for spec in specs {
+        let mut plan = spec.plan::<u8>(H, W).unwrap();
+        let mut dst = Image::<u8>::zeros(H, W);
+        // first run may settle lazy state; the claim is about run N > 1
+        plan.run(&img, dst.view_mut());
+        let (bytes, ()) = allocated_during(|| plan.run(&img, dst.view_mut()));
+        assert!(
+            bytes <= slack,
+            "{spec:?}: reused plan run allocated {bytes} B (budget {slack}) — \
+             an intermediate image escaped the scratch arena?"
+        );
+        // and the result is still right
+        let want = neon_morph::morphology::parallel::filter_native(
+            &img,
+            MorphOp::Erode,
+            9,
+            9,
+            &seq_cfg,
+        );
+        if spec.single_op() == Some(FilterOp::Erode) {
+            assert!(dst.same_pixels(&want));
+        }
+    }
+}
+
+#[test]
+fn typed_batch_keys_allocate_nothing() {
+    let _guard = lock();
+    use neon_morph::coordinator::request::BatchKey;
+    use neon_morph::morphology::Roi;
+    let spec = FilterSpec::new(FilterOp::TopHat, 5, 3)
+        .then(FilterOp::Dilate)
+        .with_roi(Roi::new(2, 3, 40, 50));
+    // warm up (nothing to warm, but symmetric with the others)
+    let k0 = BatchKey::of(&spec, neon_morph::coordinator::request::PixelDepth::U8, 100, 200);
+    let (bytes, ()) = allocated_during(|| {
+        for i in 0..1000usize {
+            let k = BatchKey::of(
+                &spec,
+                neon_morph::coordinator::request::PixelDepth::U8,
+                100 + (i % 3),
+                200,
+            );
+            std::hint::black_box(&k);
+            // affinity comparison — the per-pull hot path
+            std::hint::black_box(k == k0);
+        }
+    });
+    assert_eq!(
+        bytes, 0,
+        "building/comparing 1000 typed batch keys must not allocate \
+         (the stringly keys allocated per call)"
     );
 }
