@@ -1,0 +1,164 @@
+//! STREAMING SERVING DRIVER: the position-independent-plan serving
+//! architecture end to end, no artifacts required.
+//!
+//! Three producer threads each open a [`SubmitStream`] on one shared
+//! coordinator and pump a mixed workload — full-image ops at two pixel
+//! depths plus a same-shape ROI crop *sweep* (the document-pipeline
+//! pattern: many crops of one geometry at scattered offsets).  Workers
+//! pull key-grouped batches and drain each same-key run through one
+//! pinned, position-independent plan; the FIFO-aged queue keeps any one
+//! hot key from starving the rest.
+//!
+//! The driver then proves the architecture's two claims:
+//!
+//! * **bit-identity** — every streamed response equals the fire-and-wait
+//!   `submit` oracle for the same spec, and
+//! * **plan economy** — the crop sweep resolves one plan per worker at
+//!   most, not one per offset (printed as resolutions/request).
+//!
+//! ```bash
+//! cargo run --release --example streaming_serve
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use neon_morph::image::synth;
+use neon_morph::morphology::{FilterOp, FilterSpec, Roi};
+
+const PRODUCERS: usize = 3;
+const PER_PRODUCER: usize = 48;
+const H: usize = 200;
+const W: usize = 260;
+
+/// The mixed request stream each producer pumps: a full-image erode, a
+/// u16 gradient, and an interior 48×64 tophat crop sweep (tophat 5×5
+/// halo = 2·wing = (4, 4) — every position below keeps the full halo,
+/// so the whole sweep canonicalizes to ONE plan key).
+fn spec_of(i: usize) -> (FilterSpec, bool) {
+    match i % 3 {
+        0 => (FilterSpec::new(FilterOp::Erode, 7, 7), false),
+        1 => (FilterSpec::new(FilterOp::Gradient, 5, 5), true),
+        _ => {
+            let y = 4 + (i * 7) % (H - 48 - 8);
+            let x = 4 + (i * 11) % (W - 64 - 8);
+            (
+                FilterSpec::new(FilterOp::TopHat, 5, 5).with_roi(Roi::new(y, x, 48, 64)),
+                false,
+            )
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        queue_capacity: PRODUCERS * PER_PRODUCER + 16,
+        max_batch: 16,
+        backend: BackendChoice::NativeOnly,
+        artifact_dir: None,
+        ..CoordinatorConfig::default()
+    })?;
+    let img8 = Arc::new(synth::document(H, W, 11));
+    let img16 = Arc::new(synth::noise_u16(H, W, 12));
+
+    let t0 = std::time::Instant::now();
+    let results: Vec<(u64, FilterSpec, bool, neon_morph::coordinator::request::FilterOutput)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..PRODUCERS)
+                .map(|p| {
+                    let coord = &coord;
+                    let img8 = &img8;
+                    let img16 = &img16;
+                    scope.spawn(move || {
+                        let mut stream = coord.stream();
+                        let mut meta = HashMap::new();
+                        for i in 0..PER_PRODUCER {
+                            let (spec, is_u16) = spec_of(p * PER_PRODUCER + i);
+                            let id = if is_u16 {
+                                stream.send(spec, img16.clone()).expect("queue sized")
+                            } else {
+                                stream.send(spec, img8.clone()).expect("queue sized")
+                            };
+                            meta.insert(id, (spec, is_u16));
+                        }
+                        // responses arrive in completion order, tagged by id
+                        stream
+                            .drain()
+                            .into_iter()
+                            .map(|r| {
+                                let (spec, is_u16) = meta.remove(&r.id).expect("known id");
+                                (r.id, spec, is_u16, r.result.expect("request succeeds"))
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+    let wall = t0.elapsed().as_secs_f64();
+
+    anyhow::ensure!(results.len() == PRODUCERS * PER_PRODUCER, "every request completes");
+
+    // verify EVERY streamed response against the fire-and-wait oracle
+    let mut oracle_cache: HashMap<FilterSpec, neon_morph::coordinator::request::FilterOutput> =
+        HashMap::new();
+    for (id, spec, is_u16, out) in &results {
+        let want = oracle_cache.entry(*spec).or_insert_with(|| {
+            let payload: neon_morph::coordinator::request::ImagePayload = if *is_u16 {
+                img16.clone().into()
+            } else {
+                img8.clone().into()
+            };
+            coord
+                .filter_spec(*spec, payload)
+                .expect("oracle submit")
+                .result
+                .expect("oracle succeeds")
+        });
+        let same = match (out, &*want) {
+            (
+                neon_morph::coordinator::request::FilterOutput::U8(a),
+                neon_morph::coordinator::request::FilterOutput::U8(b),
+            ) => a.same_pixels(b),
+            (
+                neon_morph::coordinator::request::FilterOutput::U16(a),
+                neon_morph::coordinator::request::FilterOutput::U16(b),
+            ) => a.same_pixels(b),
+            _ => false,
+        };
+        anyhow::ensure!(same, "request {id} disagrees with the submit oracle");
+    }
+
+    let snap = coord.metrics();
+    println!("all {} streamed responses verified against submit ✓", results.len());
+    println!(
+        "throughput: {:.1} req/s over {:.2}s ({} producers x {} reqs, 2 workers)",
+        results.len() as f64 / wall,
+        wall,
+        PRODUCERS,
+        PER_PRODUCER
+    );
+    println!("{snap}");
+    anyhow::ensure!(snap.failed == 0, "no request may fail");
+    // plan economy: 3 plan families (+1 oracle round) on 2 workers — the
+    // ROI sweep must NOT re-plan per offset.  Generous bound: every
+    // family resolved once per worker, twice over (stream + oracle).
+    let max_resolutions = 2 * 2 * 3;
+    anyhow::ensure!(
+        snap.plan_resolutions <= max_resolutions,
+        "plan churn: {} resolutions for 3 plan families ({} allowed)",
+        snap.plan_resolutions,
+        max_resolutions
+    );
+    println!(
+        "plan economy: {} resolutions / {} completed = {:.4} resolutions/req ✓",
+        snap.plan_resolutions,
+        snap.completed,
+        snap.plan_resolutions_per_request()
+    );
+    coord.shutdown();
+    println!("streaming_serve OK");
+    Ok(())
+}

@@ -15,7 +15,12 @@ CI perf baselines (``rust/benches/baselines/BENCH_*.json``):
   on the transposed 800x600 image) — the Fig. 4 vertical-pass headline
   ratios, and
 * the section-4 tile transposes (scalar element loops vs the vtrn
-  networks) — the Table 1 scalar/SIMD headline ratios.
+  networks) — the Table 1 scalar/SIMD headline ratios, and
+* the streamed-serving plan-cache census (``BENCH_serve.json``) — a
+  pure count of distinct canonical plan keys in the fixed
+  ``bench_harness::serve`` request mix, mirroring the
+  ``FilterSpec::canonical_for`` position-independence rule (interior
+  ROIs key by shape, so the crop sweep counts once).
 
 Counts are pure functions of the loop structure (no pixel data), so the
 mirror and the rust Counting backend must agree exactly; prices are the
@@ -435,6 +440,57 @@ def scaling_baseline():
     )
 
 
+def serve_baseline():
+    # Mirrors bench_harness::serve::{smoke_requests, run_smoke, to_json}:
+    # the headline is a pure COUNT of distinct canonical plan keys in the
+    # fixed request mix (1 worker => resolutions == distinct keys), so
+    # the mirror enumerates the same requests and applies the same
+    # canonicalization rule (FilterSpec::canonical_for): an interior ROI
+    # (full chain-halo on every side) keys on its shape at the canonical
+    # anchor; a clamped one would keep its position.
+    sh, sw = 240, 320  # serve::SERVE_H x serve::SERVE_W
+    group = 16  # serve::GROUP
+    keys = set()
+    # erode 7x7 full u8 (halo = depth 1 * wing 3)
+    for _ in range(group):
+        keys.add(("erode", 7, 7, "u8", None))
+    # erode 7x7 + 64x80 ROI swept over interior positions
+    roi_h, roi_w, halo = 64, 80, 3
+    for i in range(group):
+        y = 3 + (i * 10) % (sh - roi_h - 6)
+        x = 3 + (i * 13) % (sw - roi_w - 6)
+        interior = (
+            y >= halo
+            and x >= halo
+            and y + roi_h + halo <= sh
+            and x + roi_w + halo <= sw
+        )
+        assert interior, f"smoke sweep position ({y},{x}) must be interior"
+        # canonical anchor: position-independent key
+        keys.add(("erode", 7, 7, "u8", (halo, halo, roi_h, roi_w)))
+    # tophat 5x5 full u8
+    for _ in range(group):
+        keys.add(("tophat", 5, 5, "u8", None))
+    # dilate 5x5 full u16
+    for _ in range(group):
+        keys.add(("dilate", 5, 5, "u16", None))
+    requests = 4 * group
+    resolutions = len(keys)
+    return {
+        "bench": "serve",
+        "workload": (
+            f"streamed serve: 4 plan families x {group} reqs on {sh}x{sw} "
+            "(interior ROI sweep collapses to one plan), 1 worker"
+        ),
+        "headline": {
+            "requests": requests,
+            "plan_resolutions": resolutions,
+            "plan_hits": requests - resolutions,
+            "plan_resolutions_per_request": resolutions / requests,
+        },
+    }
+
+
 def main():
     outdir = sys.argv[1] if len(sys.argv) > 1 else "rust/benches/baselines"
     os.makedirs(outdir, exist_ok=True)
@@ -443,12 +499,14 @@ def main():
     fig4, series4 = fig4_baseline()
     table1 = table1_baseline()
     scaling, debug = scaling_baseline()
+    serve = serve_baseline()
     for name, doc in [
         ("BENCH_fig3.json", fig3),
         ("BENCH_fig3_u16.json", fig3u16),
         ("BENCH_fig4.json", fig4),
         ("BENCH_table1.json", table1),
         ("BENCH_scaling.json", scaling),
+        ("BENCH_serve.json", serve),
     ]:
         path = os.path.join(outdir, name)
         with open(path, "w") as f:
@@ -470,6 +528,7 @@ def main():
     print(f"\nscaling: seq {debug['seq_ns']:.0f} ns, stream {debug['stream']} B")
     print(f"scaling headline: {scaling['headline']}")
     print(f"saturation boundary margin (want far from 1.0): {debug['margin']:.4f}")
+    print(f"serve headline: {serve['headline']}")
 
 
 if __name__ == "__main__":

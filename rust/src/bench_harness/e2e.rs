@@ -116,10 +116,27 @@ pub struct ServeResult {
     pub p99_us: f64,
     pub mean_batch: f64,
     pub shed: u64,
+    /// Fresh plan resolutions across all workers (cache misses).
+    pub plan_resolutions: u64,
+    /// Plan-cache hits across all workers.
+    pub plan_hits: u64,
+}
+
+impl ServeResult {
+    /// Resolutions per completed request — the streaming headline.
+    pub fn plan_resolutions_per_request(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.plan_resolutions as f64 / self.requests as f64
+        }
+    }
 }
 
 /// Drive the coordinator with `requests` mixed requests on the paper
-/// workload and report throughput + latency percentiles.
+/// workload through the **streaming** submit path
+/// ([`Coordinator::stream`]) and report throughput, latency percentiles
+/// and plan-cache traffic.
 pub fn serve_native(requests: usize, workers: usize, w: usize) -> anyhow::Result<ServeResult> {
     let coord = Coordinator::start(CoordinatorConfig {
         workers,
@@ -129,6 +146,7 @@ pub fn serve_native(requests: usize, workers: usize, w: usize) -> anyhow::Result
         artifact_dir: None,
         morph: MorphConfig::default(),
         precompile: false,
+        max_bands_per_request: 0,
     })?;
     let img = Arc::new(synth::paper_image(0x5E57E));
     let ops = [
@@ -137,17 +155,17 @@ pub fn serve_native(requests: usize, workers: usize, w: usize) -> anyhow::Result
         crate::morphology::FilterOp::Gradient,
     ];
     let t0 = std::time::Instant::now();
-    let tickets: Vec<_> = (0..requests)
-        .map(|i| {
-            coord.submit(
-                crate::morphology::FilterSpec::new(ops[i % ops.len()], w, w),
-                img.clone(),
-            )
-        })
-        .collect::<anyhow::Result<_>>()?;
-    for t in tickets {
-        t.wait()?.result?;
+    let mut stream = coord.stream();
+    for i in 0..requests {
+        stream.send(
+            crate::morphology::FilterSpec::new(ops[i % ops.len()], w, w),
+            img.clone(),
+        )?;
     }
+    while let Some(resp) = stream.recv() {
+        resp.result?;
+    }
+    drop(stream); // release the coordinator borrow before shutdown
     let wall_s = t0.elapsed().as_secs_f64();
     let snap = coord.metrics();
     let out = ServeResult {
@@ -159,6 +177,8 @@ pub fn serve_native(requests: usize, workers: usize, w: usize) -> anyhow::Result
         p99_us: snap.total_p99_us,
         mean_batch: snap.mean_batch_size(),
         shed: snap.shed,
+        plan_resolutions: snap.plan_resolutions,
+        plan_hits: snap.plan_hits,
     };
     coord.shutdown();
     Ok(out)

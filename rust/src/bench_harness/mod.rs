@@ -14,7 +14,9 @@
 //! reports whose `headline` ratios CI pins against the committed
 //! baselines in `rust/benches/baselines/` via [`gate`] (±10%; see
 //! `bench smoke` / `bench gate`).  The deterministic Table 1 form is
-//! [`table1::run_model`].
+//! [`table1::run_model`].  [`serve`] adds the serving-side report
+//! (`BENCH_serve.json`): count-exact plan-cache headlines of a streamed
+//! coordinator workload (plan resolutions per request).
 //!
 //! Every experiment reports **two** measurements side by side:
 //!
@@ -36,6 +38,7 @@ pub mod fig4;
 pub mod gate;
 pub mod report;
 pub mod scaling;
+pub mod serve;
 pub mod table1;
 
 /// Default odd-window sweep used by Fig. 3 / Fig. 4 (the paper sweeps

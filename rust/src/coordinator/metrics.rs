@@ -73,6 +73,15 @@ pub struct Metrics {
     pub shed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Native-engine plan-cache misses aggregated across workers: how
+    /// often serving a request had to *resolve* a fresh
+    /// [`crate::morphology::FilterPlan`].  Position-independent plans
+    /// plus canonical cache keys push `plan_resolutions / completed`
+    /// toward `distinct plan families / requests` — the
+    /// `BENCH_serve.json` headline.
+    pub plan_resolutions: AtomicU64,
+    /// Native-engine plan-cache hits aggregated across workers.
+    pub plan_hits: AtomicU64,
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub total_latency: Histogram,
@@ -91,6 +100,8 @@ impl Metrics {
             shed: self.shed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            plan_resolutions: self.plan_resolutions.load(Ordering::Relaxed),
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
             queue_p50_us: self.queue_latency.quantile_ns(0.5) as f64 / 1e3,
             queue_p99_us: self.queue_latency.quantile_ns(0.99) as f64 / 1e3,
             exec_p50_us: self.exec_latency.quantile_ns(0.5) as f64 / 1e3,
@@ -111,6 +122,8 @@ pub struct Snapshot {
     pub shed: u64,
     pub batches: u64,
     pub batched_requests: u64,
+    pub plan_resolutions: u64,
+    pub plan_hits: u64,
     pub queue_p50_us: f64,
     pub queue_p99_us: f64,
     pub exec_p50_us: f64,
@@ -129,6 +142,17 @@ impl Snapshot {
             self.batched_requests as f64 / self.batches as f64
         }
     }
+
+    /// Fresh plan resolutions per completed request — the streaming
+    /// headline: near 0 when the plan cache and position-independent
+    /// keys are doing their job, 1.0 when every request re-plans.
+    pub fn plan_resolutions_per_request(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.plan_resolutions as f64 / self.completed as f64
+        }
+    }
 }
 
 impl std::fmt::Display for Snapshot {
@@ -136,6 +160,7 @@ impl std::fmt::Display for Snapshot {
         write!(
             f,
             "submitted={} completed={} failed={} shed={} batches={} (mean size {:.2}) \
+             plans resolved/hit = {}/{} ({:.4} resolutions/req) \
              queue p50/p99 = {:.0}/{:.0} µs, exec p50/p99 = {:.0}/{:.0} µs, \
              total mean/p50/p99 = {:.0}/{:.0}/{:.0} µs",
             self.submitted,
@@ -144,6 +169,9 @@ impl std::fmt::Display for Snapshot {
             self.shed,
             self.batches,
             self.mean_batch_size(),
+            self.plan_resolutions,
+            self.plan_hits,
+            self.plan_resolutions_per_request(),
             self.queue_p50_us,
             self.queue_p99_us,
             self.exec_p50_us,

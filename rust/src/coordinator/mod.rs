@@ -4,30 +4,44 @@
 //! PJRT CPU client is synchronous anyway):
 //!
 //! ```text
-//!  submit(FilterSpec, payload) ──► BatchQueue (bounded, key-grouped)
-//!     │               │  backpressure: reject when full   worker 0 ─► reply
-//!     └─ Ticket ◄─────┘  batches keyed by typed BatchKey  worker 1 ─► reply
-//!                         (depth, shape, op chain, config, ROI shape)
+//!  submit(FilterSpec, payload) ──► BatchQueue (bounded, key-grouped,
+//!     │               │            FIFO-aged across keys)
+//!     └─ Ticket ◄─────┘                        worker 0 ─► reply
+//!  stream() ──► SubmitStream::send ──► same queue, one shared
+//!     │                                reply channel per stream
+//!     └─ SubmitStream::recv ◄── completions, any order, tagged by id
 //! ```
 //!
 //! Requests carry a full [`crate::morphology::FilterSpec`] — op chain
 //! (including derived ops and multi-op pipelines), window,
 //! configuration and optional ROI — through **one** depth-erased
-//! [`Coordinator::submit`].  The historical per-op × per-depth surface
-//! (`filter`/`filter_u16` with string ops) survives as thin wrappers
-//! that build single-op specs with the coordinator's default
-//! [`MorphConfig`].
+//! submission path.  [`Coordinator::submit`] is the fire-and-wait form
+//! (one ticket, one reply channel); [`Coordinator::stream`] /
+//! [`Coordinator::submit_many`] are the **streaming** form: producers
+//! enqueue without blocking per ticket and responses flow back over one
+//! shared channel in *completion* order (each
+//! [`request::FilterResponse`] carries its request id).  The historical
+//! per-op × per-depth surface (`filter`/`filter_u16` with string ops)
+//! survives as thin wrappers that build single-op specs with the
+//! coordinator's default [`MorphConfig`].
+//!
+//! ## Plan-pinned worker batches
 //!
 //! Each worker owns its engines — an optional [`XlaRuntime`] (PJRT,
 //! executing the python-AOT artifacts; `PjRtLoadedExecutable` is not
 //! `Sync`, so runtimes are never shared) and a [`NativeEngine`] (§5.3
-//! hybrid morphology behind a **plan cache**: each `(spec, shape)` is
-//! resolved once into a `FilterPlan` and reused across the batch — the
-//! queue's key-affinity makes consecutive pulls hit the same plan.
-//! Caveat: the plan cache keys on the *exact* spec, ROI position
-//! included (an edge-clamped block resolves different geometry), so a
-//! ROI batch only reuses plans across same-position crops;
-//! position-independent ROI plans are a ROADMAP follow-on).
+//! hybrid morphology behind a **plan cache** keyed on the *canonical*
+//! spec, [`crate::morphology::FilterSpec::canonical_for`]).  A worker
+//! pulls a same-key batch, the first request resolves the plan, and the
+//! whole batch — plus every following same-key batch the affinity pull
+//! keeps returning — runs **pinned to that one plan**.  Because plans
+//! are position-independent, this holds across an ROI crop *sweep*: all
+//! interior same-shape crops hit one plan (`plan_resolutions` /
+//! `plan_hits` in [`metrics::Snapshot`] meter it; `BENCH_serve.json`
+//! gates resolutions-per-request in CI).  The queue's FIFO aging
+//! ([`queue`]) bounds how long a pinned worker may ride one hot key
+//! while colder keys wait.
+//!
 //! The **router** picks per request: an artifact match on the XLA
 //! backend when available (single-op, no-ROI, u8 specs only — the only
 //! shapes the AOT pipeline lowers), native otherwise (or as directed by
@@ -43,19 +57,25 @@
 //! counts toward the `failed` metric, exactly like the stringly
 //! "unknown op" requests of the previous API.
 //!
-//! Intra-image parallelism: native plans band-shard large images across
-//! the process-wide [`crate::morphology::parallel::BandPool`] (policy:
-//! the spec's `config.parallelism`, default `Auto` — the cost model
-//! keeps small requests sequential, resolved once at plan time).
-//! Coordinator workers and band jobs share that one pool, so serving
-//! many small requests and splitting a few large ones use the same
-//! cores instead of oversubscribing them; results are bit-identical
-//! either way.
+//! ## Band budget
+//!
+//! Native plans band-shard large images across the process-wide
+//! [`crate::morphology::parallel::BandPool`].  Under streaming load,
+//! `workers` concurrent requests each banding to the full pool would
+//! oversubscribe every core, so
+//! [`CoordinatorConfig::max_bands_per_request`] caps the bands any one
+//! request may use — by default `cores / workers` (so
+//! `workers × max_bands_per_request ≤ cores`), overridable in the
+//! config or with the `NEON_MORPH_MAX_BANDS` environment variable (and
+//! `NEON_MORPH_BAND_WORKERS` sizes the pool itself,
+//! [`crate::morphology::parallel::BandPool::with_workers`]).  The cap
+//! only clamps the band *count*; outputs stay bit-identical.
 
 pub mod metrics;
 pub mod queue;
 pub mod request;
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -65,11 +85,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::image::Image;
-use crate::morphology::{FilterOp, FilterSpec, MorphConfig};
+use crate::morphology::{parallel, FilterOp, FilterSpec, MorphConfig, Parallelism};
 use crate::runtime::{Engine, Manifest, NativeEngine, XlaRuntime};
 use metrics::{Metrics, Snapshot};
 use queue::{BatchQueue, Pull};
-use request::{BatchKey, FilterOutput, FilterResponse, ImagePayload, Pending, Ticket};
+use request::{BatchKey, FilterOutput, FilterResponse, ImagePayload, Pending, PixelDepth, Ticket};
 
 /// Which engine(s) the router may use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -98,6 +118,15 @@ pub struct CoordinatorConfig {
     pub morph: MorphConfig,
     /// Compile all artifacts at startup instead of lazily.
     pub precompile: bool,
+    /// Intra-image band budget per request: no single request may shard
+    /// across more bands than this, so one giant image cannot
+    /// monopolize the shared [`parallel::BandPool`] under streaming
+    /// load.  `0` (the default) derives `cores / workers` (≥ 1) at
+    /// startup, keeping `workers × max_bands_per_request ≤ cores`; a
+    /// nonzero `NEON_MORPH_MAX_BANDS` environment variable overrides
+    /// both (`0` in the env also means "derive").  Clamping the band
+    /// count never changes output pixels.
+    pub max_bands_per_request: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -110,8 +139,27 @@ impl Default for CoordinatorConfig {
             artifact_dir: Some(PathBuf::from("artifacts")),
             morph: MorphConfig::default(),
             precompile: false,
+            max_bands_per_request: 0,
         }
     }
+}
+
+/// Resolve the effective per-request band cap for `cfg` (see
+/// [`CoordinatorConfig::max_bands_per_request`]).
+fn resolve_band_cap(cfg: &CoordinatorConfig) -> usize {
+    // env 0 means the same as config 0 — "derive" — never "cap at 1"
+    if let Some(n) = std::env::var("NEON_MORPH_MAX_BANDS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|n| *n > 0)
+    {
+        return n;
+    }
+    if cfg.max_bands_per_request > 0 {
+        return cfg.max_bands_per_request;
+    }
+    let cores = std::thread::available_parallelism().map_or(2, |n| n.get());
+    (cores / cfg.workers.max(1)).max(1)
 }
 
 /// The running service.
@@ -145,11 +193,14 @@ impl Coordinator {
         let queue = Arc::new(BatchQueue::new(cfg.queue_capacity, cfg.max_batch));
         let metrics = Arc::new(Metrics::default());
         let mut workers = Vec::new();
+        // workers see the *resolved* band budget (default: cores/workers)
+        let band_cap = resolve_band_cap(&cfg);
         for wid in 0..cfg.workers.max(1) {
             let queue = queue.clone();
             let metrics = metrics.clone();
             let manifest = manifest.clone();
-            let cfg = cfg.clone();
+            let mut cfg = cfg.clone();
+            cfg.max_bands_per_request = band_cap;
             let handle = std::thread::Builder::new()
                 .name(format!("morph-worker-{wid}"))
                 .spawn(move || worker_loop(wid, &cfg, manifest, &queue, &metrics))
@@ -176,32 +227,77 @@ impl Coordinator {
         })
     }
 
-    /// Submit a spec with a depth-tagged payload — the one submission
-    /// path for every op chain, depth and ROI.  Fails fast when the
-    /// queue is full (backpressure) or closed; spec validity is checked
-    /// by the executing worker (the ticket then carries the error).
-    pub fn submit(&self, spec: FilterSpec, image: impl Into<ImagePayload>) -> Result<Ticket> {
+    /// Enqueue one request whose response goes to `reply` — the shared
+    /// non-blocking core of [`Coordinator::submit`] (fresh channel per
+    /// ticket) and [`SubmitStream::send`] (one channel per stream).
+    fn enqueue(
+        &self,
+        spec: FilterSpec,
+        image: ImagePayload,
+        reply: mpsc::Sender<FilterResponse>,
+    ) -> Result<u64> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel();
         let pending = Pending {
             req: request::FilterRequest {
                 id,
                 spec,
-                image: image.into(),
+                image,
                 enqueued: Instant::now(),
             },
-            reply: tx,
+            reply,
         };
         match self.queue.push(pending) {
             Ok(()) => {
                 Metrics::inc(&self.metrics.submitted);
-                Ok(Ticket { id, rx })
+                Ok(id)
             }
             Err(_) => {
                 Metrics::inc(&self.metrics.shed);
                 Err(anyhow!("queue full: request shed (backpressure)"))
             }
         }
+    }
+
+    /// Submit a spec with a depth-tagged payload — the one submission
+    /// path for every op chain, depth and ROI.  Fails fast when the
+    /// queue is full (backpressure) or closed; spec validity is checked
+    /// by the executing worker (the ticket then carries the error).
+    pub fn submit(&self, spec: FilterSpec, image: impl Into<ImagePayload>) -> Result<Ticket> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.enqueue(spec, image.into(), tx)?;
+        Ok(Ticket { id, rx })
+    }
+
+    /// Open a streaming submission handle: [`SubmitStream::send`]
+    /// enqueues without blocking (no per-ticket channel), and
+    /// [`SubmitStream::recv`] yields responses in *completion* order —
+    /// the producer keeps the queue full while workers drain whole
+    /// same-key runs through their pinned plans.
+    pub fn stream(&self) -> SubmitStream<'_> {
+        let (tx, rx) = mpsc::channel();
+        SubmitStream {
+            coord: self,
+            tx,
+            rx,
+            sent: 0,
+            received: 0,
+            shed: 0,
+        }
+    }
+
+    /// Stream a whole batch of requests at once: every item is enqueued
+    /// (items shed by backpressure are counted on the returned stream,
+    /// [`SubmitStream::shed`]) and the stream then yields the
+    /// responses.  Equivalent to `stream()` + `send` per item.
+    pub fn submit_many<I>(&self, reqs: I) -> SubmitStream<'_>
+    where
+        I: IntoIterator<Item = (FilterSpec, ImagePayload)>,
+    {
+        let mut s = self.stream();
+        for (spec, image) in reqs {
+            let _ = s.send(spec, image);
+        }
+        s
     }
 
     /// Submit a spec and block for the result.
@@ -274,6 +370,116 @@ impl Drop for Coordinator {
     }
 }
 
+/// Streaming submission handle ([`Coordinator::stream`]): enqueue many
+/// requests without a per-ticket channel, then collect responses in
+/// completion order.
+///
+/// A stream is a single-producer handle (one per producer thread; the
+/// coordinator itself is shared, `&Coordinator` is `Sync`).  Responses
+/// are matched to submissions by [`request::FilterResponse::id`] — with
+/// key-grouped batching, completion order is deliberately *not*
+/// submission order.  Dropping a stream mid-flight is safe: in-flight
+/// requests still execute and their responses are discarded (workers
+/// never block on a gone consumer), so shutting the coordinator down
+/// with a live-then-dropped stream drains gracefully.
+pub struct SubmitStream<'c> {
+    coord: &'c Coordinator,
+    tx: mpsc::Sender<FilterResponse>,
+    rx: mpsc::Receiver<FilterResponse>,
+    sent: u64,
+    received: u64,
+    shed: u64,
+}
+
+impl SubmitStream<'_> {
+    /// Enqueue one request (non-blocking; returns its id).  On
+    /// backpressure the request is shed, counted, and the error
+    /// returned — the stream stays usable.
+    pub fn send(&mut self, spec: FilterSpec, image: impl Into<ImagePayload>) -> Result<u64> {
+        match self.coord.enqueue(spec, image.into(), self.tx.clone()) {
+            Ok(id) => {
+                self.sent += 1;
+                Ok(id)
+            }
+            Err(e) => {
+                self.shed += 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Requests successfully enqueued so far.
+    pub fn sent(&self) -> u64 {
+        self.sent
+    }
+
+    /// Requests rejected by backpressure so far.
+    pub fn shed(&self) -> u64 {
+        self.shed
+    }
+
+    /// Responses not yet received.
+    pub fn in_flight(&self) -> u64 {
+        self.sent - self.received
+    }
+
+    /// Block for the next completed response; `None` once every sent
+    /// request has been received.  Cannot hang on accepted work: the
+    /// worker loop answers every enqueued request exactly once, turning
+    /// even a panic while serving into an error response.
+    pub fn recv(&mut self) -> Option<FilterResponse> {
+        if self.received == self.sent {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(r) => {
+                self.received += 1;
+                Some(r)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Like [`SubmitStream::recv`] with an upper bound on the wait —
+    /// `None` means nothing in flight *or* the timeout elapsed.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Option<FilterResponse> {
+        if self.received == self.sent {
+            return None;
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => {
+                self.received += 1;
+                Some(r)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Non-blocking poll for a completed response.
+    pub fn try_recv(&mut self) -> Option<FilterResponse> {
+        if self.received == self.sent {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.received += 1;
+                Some(r)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Block until every in-flight response has arrived and return them
+    /// (completion order).
+    pub fn drain(&mut self) -> Vec<FilterResponse> {
+        let mut out = Vec::with_capacity(self.in_flight() as usize);
+        while let Some(r) = self.recv() {
+            out.push(r);
+        }
+        out
+    }
+}
+
 fn worker_loop(
     wid: usize,
     cfg: &CoordinatorConfig,
@@ -304,11 +510,109 @@ fn worker_loop(
                     .fetch_add(batch.len() as u64, Ordering::Relaxed);
                 affinity = batch.first().map(|p| p.req.batch_key());
                 for p in batch {
-                    serve_one(wid, cfg, &manifest, &mut native, &mut xla, metrics, p);
+                    let id = p.req.id;
+                    let reply = p.reply.clone();
+                    // a panic while serving must not kill the worker or
+                    // orphan the request: streaming consumers block on
+                    // one reply per send (a per-ticket channel would at
+                    // least disconnect; the stream's shared channel
+                    // cannot), so every Pending is answered exactly once
+                    let panicked = catch_unwind(AssertUnwindSafe(|| {
+                        serve_one(wid, cfg, &manifest, &mut native, &mut xla, metrics, p);
+                    }))
+                    .is_err();
+                    if panicked {
+                        // the engine may hold half-updated state (a plan
+                        // arena taken mid-execution): rebuild it rather
+                        // than reuse poisoned plans — draining its
+                        // counters first, so the pre-panic requests stay
+                        // in the metrics (resolutions + hits must keep
+                        // accounting for every native-served request)
+                        let stats = native.take_plan_stats();
+                        metrics
+                            .plan_resolutions
+                            .fetch_add(stats.resolutions, Ordering::Relaxed);
+                        metrics.plan_hits.fetch_add(stats.hits, Ordering::Relaxed);
+                        native = NativeEngine::new(cfg.morph);
+                        Metrics::inc(&metrics.failed);
+                        let _ = reply.send(FilterResponse {
+                            id,
+                            result: Err(anyhow!(
+                                "worker {wid} panicked while serving request {id}"
+                            )),
+                            queue_ns: 0,
+                            exec_ns: 0,
+                            backend: "panic",
+                            worker: wid,
+                        });
+                    }
                 }
+                // aggregate this batch's plan-cache traffic: a same-key
+                // run pinned to one plan shows up as 1 resolution + N-1
+                // hits here
+                let stats = native.take_plan_stats();
+                metrics
+                    .plan_resolutions
+                    .fetch_add(stats.resolutions, Ordering::Relaxed);
+                metrics.plan_hits.fetch_add(stats.hits, Ordering::Relaxed);
             }
         }
     }
+}
+
+/// Clamp a spec's intra-image parallelism to the coordinator's
+/// per-request band budget (`cap`; 0 = unlimited).  `Auto` stays `Auto`
+/// when the cost model would pick at most `cap` bands anyway (so small
+/// images keep their sequential dispatch) and is pinned to
+/// `Fixed(cap)` otherwise; band counts never change output pixels.
+///
+/// ROI specs are priced on their **haloed block** — the shape the plan
+/// actually bands — not the full image, so a small crop of a huge image
+/// is not needlessly pinned to `Fixed(cap)` when its block would have
+/// dispatched sequentially anyway.
+fn capped_spec(spec: &FilterSpec, image: &ImagePayload, cap: usize) -> FilterSpec {
+    if cap == 0 || spec.is_transpose() {
+        return *spec;
+    }
+    let mut s = *spec;
+    s.config.parallelism = match s.config.parallelism {
+        Parallelism::Sequential => Parallelism::Sequential,
+        Parallelism::Fixed(n) => Parallelism::Fixed(n.clamp(1, cap)),
+        Parallelism::Auto if cap == 1 => Parallelism::Sequential,
+        Parallelism::Auto => {
+            // price the banding once, on the shape the plan will band;
+            // unplannable specs (even windows, out-of-bounds ROIs —
+            // the one validity predicate, `FilterSpec::validate`) fall
+            // through and fail at plan time as before
+            let (h, w) = (image.height(), image.width());
+            let bands = if s.validate(h, w).is_ok() {
+                let (bh, bw) = match s.roi {
+                    None => (h, w),
+                    Some(r) => {
+                        let (hx, hy) = s.roi_halo();
+                        let b = crate::morphology::plan::haloed_block(r, h, w, hx, hy);
+                        (b.height, b.width)
+                    }
+                };
+                match image.depth() {
+                    PixelDepth::U8 => {
+                        parallel::effective_bands::<u8>(bh, bw, s.w_x, s.w_y, &s.config)
+                    }
+                    PixelDepth::U16 => {
+                        parallel::effective_bands::<u16>(bh, bw, s.w_x, s.w_y, &s.config)
+                    }
+                }
+            } else {
+                1
+            };
+            if bands <= cap {
+                Parallelism::Auto
+            } else {
+                Parallelism::Fixed(cap)
+            }
+        }
+    };
+    s
 }
 
 fn serve_one(
@@ -322,6 +626,10 @@ fn serve_one(
 ) {
     let queue_ns = p.req.enqueued.elapsed().as_nanos() as u64;
     let spec = p.req.spec;
+    // native executions honour the per-request band budget (routing and
+    // batch keys always use the submitted spec; the clamp is
+    // bit-identical)
+    let native_spec = capped_spec(&spec, &p.req.image, cfg.max_bands_per_request);
     let (h, w) = (p.req.image.height(), p.req.image.width());
     // compiled artifacts exist only for u8 specs in canonical form
     // (single op, no ROI, identity border — the shared predicate
@@ -358,14 +666,14 @@ fn serve_one(
                 match rt.run_u8(meta, img) {
                     // Auto: degrade to native on runtime errors
                     Err(_) => (
-                        native.run_spec(&spec, img).map(FilterOutput::U8),
+                        native.run_spec(&native_spec, img).map(FilterOutput::U8),
                         native.backend_name(),
                     ),
                     ok => (ok.map(FilterOutput::U8), rt.backend_name()),
                 }
             } else {
                 (
-                    native.run_spec(&spec, img).map(FilterOutput::U8),
+                    native.run_spec(&native_spec, img).map(FilterOutput::U8),
                     native.backend_name(),
                 )
             }
@@ -381,7 +689,7 @@ fn serve_one(
                 )
             } else {
                 (
-                    native.run_spec_u16(&spec, img).map(FilterOutput::U16),
+                    native.run_spec_u16(&native_spec, img).map(FilterOutput::U16),
                     native.backend_name(),
                 )
             }
@@ -553,6 +861,7 @@ mod tests {
             artifact_dir: None,
             morph: MorphConfig::default(),
             precompile: false,
+            max_bands_per_request: 0,
         })
         .unwrap();
         let img = Arc::new(synth::paper_image(3));
@@ -613,5 +922,192 @@ mod tests {
         let img = Arc::new(synth::noise(8, 8, 1));
         let _ = coord.filter("erode", 3, 3, img);
         drop(coord); // must not hang
+    }
+
+    #[test]
+    fn stream_round_trips_and_matches_submit() {
+        let coord = Coordinator::start_native(2).unwrap();
+        let img = Arc::new(synth::noise(24, 28, 0x51));
+        let specs = [
+            FilterSpec::new(FilterOp::Erode, 5, 3),
+            FilterSpec::new(FilterOp::Gradient, 3, 3),
+            FilterSpec::new(FilterOp::TopHat, 5, 5).with_roi(Roi::new(5, 6, 10, 12)),
+        ];
+        let mut stream = coord.stream();
+        let mut want_by_id = std::collections::HashMap::new();
+        for _ in 0..4 {
+            for spec in specs {
+                let id = stream.send(spec, img.clone()).unwrap();
+                // oracle: the fire-and-wait path
+                let want = coord
+                    .filter_spec(spec, img.clone())
+                    .unwrap()
+                    .result
+                    .unwrap()
+                    .into_u8()
+                    .unwrap();
+                want_by_id.insert(id, want);
+            }
+        }
+        assert_eq!(stream.sent(), 12);
+        let responses = stream.drain();
+        assert_eq!(responses.len(), 12);
+        assert_eq!(stream.in_flight(), 0);
+        for r in responses {
+            let got = r.result.unwrap().into_u8().unwrap();
+            let want = want_by_id.remove(&r.id).expect("unknown response id");
+            assert!(got.same_pixels(&want), "request {}", r.id);
+        }
+        assert!(want_by_id.is_empty());
+        // recv on a drained stream is None, not a hang
+        assert!(stream.recv().is_none());
+        drop(stream);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn submit_many_counts_sheds_and_still_yields_accepted() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 2,
+            max_batch: 1,
+            backend: BackendChoice::NativeOnly,
+            artifact_dir: None,
+            morph: MorphConfig::default(),
+            precompile: false,
+            max_bands_per_request: 0,
+        })
+        .unwrap();
+        let img = Arc::new(synth::paper_image(9));
+        let spec = FilterSpec::new(FilterOp::Open, 15, 15);
+        let reqs: Vec<_> = (0..32)
+            .map(|_| (spec, ImagePayload::from(img.clone())))
+            .collect();
+        let mut stream = coord.submit_many(reqs);
+        let accepted = stream.sent();
+        let shed = stream.shed();
+        assert_eq!(accepted + shed, 32);
+        let responses = stream.drain();
+        assert_eq!(responses.len(), accepted as usize);
+        assert!(responses.iter().all(|r| r.result.is_ok()));
+        drop(stream);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dropping_stream_mid_flight_shuts_down_gracefully() {
+        let coord = Coordinator::start_native(2).unwrap();
+        let img = Arc::new(synth::paper_image(3));
+        {
+            let mut stream = coord.stream();
+            for _ in 0..24 {
+                let _ = stream.send(FilterSpec::new(FilterOp::Close, 9, 9), img.clone());
+            }
+            // consume a couple, then abandon the rest in flight
+            let _ = stream.recv_timeout(Duration::from_secs(30));
+            let _ = stream.try_recv();
+        } // stream dropped here with work still queued/executing
+        coord.shutdown(); // must drain and join without hanging
+    }
+
+    #[test]
+    fn roi_sweep_over_stream_resolves_one_plan() {
+        // streaming + position-independent plans: a same-shape interior
+        // crop sweep on ONE worker is served by exactly one resolution
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            backend: BackendChoice::NativeOnly,
+            artifact_dir: None,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let img = Arc::new(synth::noise(64, 64, 0x77));
+        let base = FilterSpec::new(FilterOp::Erode, 5, 5); // halo (2, 2)
+        let full = morphology::erode(img.view(), 5, 5);
+        let mut stream = coord.stream();
+        let mut wants = std::collections::HashMap::new();
+        for (y, x) in [(2usize, 2usize), (10, 30), (30, 10), (64 - 16 - 2, 64 - 16 - 2)] {
+            let id = stream.send(base.with_roi(Roi::new(y, x, 16, 16)), img.clone()).unwrap();
+            wants.insert(id, full.view().sub_rect(y, x, 16, 16).to_image());
+        }
+        for r in stream.drain() {
+            let got = r.result.unwrap().into_u8().unwrap();
+            assert!(got.same_pixels(&wants[&r.id]));
+        }
+        drop(stream);
+        let snap = coord.metrics();
+        assert_eq!(snap.completed, 4);
+        assert_eq!(snap.plan_resolutions, 1, "one plan must serve the sweep");
+        assert_eq!(snap.plan_hits, 3);
+        assert!((snap.plan_resolutions_per_request() - 0.25).abs() < 1e-12);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn capped_spec_clamps_parallelism_bit_identically() {
+        use crate::morphology::Parallelism;
+        let img8: ImagePayload = Arc::new(synth::paper_image(5)).into();
+        let auto = FilterSpec::new(FilterOp::Erode, 31, 31);
+        // cap 1: Auto collapses to Sequential
+        assert_eq!(
+            capped_spec(&auto, &img8, 1).config.parallelism,
+            Parallelism::Sequential
+        );
+        // unlimited: untouched
+        assert_eq!(capped_spec(&auto, &img8, 0), auto);
+        // Fixed above the cap clamps; below it passes through
+        let mut f8 = auto;
+        f8.config.parallelism = Parallelism::Fixed(8);
+        assert_eq!(
+            capped_spec(&f8, &img8, 2).config.parallelism,
+            Parallelism::Fixed(2)
+        );
+        assert_eq!(
+            capped_spec(&f8, &img8, 16).config.parallelism,
+            Parallelism::Fixed(8)
+        );
+        // Sequential is never promoted
+        let mut seq = auto;
+        seq.config.parallelism = Parallelism::Sequential;
+        assert_eq!(
+            capped_spec(&seq, &img8, 4).config.parallelism,
+            Parallelism::Sequential
+        );
+        // a tiny image's Auto stays Auto under a generous cap (the cost
+        // model keeps it sequential anyway)
+        let tiny: ImagePayload = Arc::new(synth::noise(16, 16, 1)).into();
+        let small = FilterSpec::new(FilterOp::Erode, 3, 3);
+        assert_eq!(
+            capped_spec(&small, &tiny, 4).config.parallelism,
+            Parallelism::Auto
+        );
+        // a small interior crop of a BIG image prices its haloed block,
+        // not the full image: Auto must survive the cap (the block
+        // dispatches sequentially; pinning Fixed(cap) would force
+        // banding overhead onto every streamed crop)
+        let crop = FilterSpec::new(FilterOp::Erode, 5, 5).with_roi(Roi::new(100, 100, 24, 24));
+        assert_eq!(
+            capped_spec(&crop, &img8, 2).config.parallelism,
+            Parallelism::Auto
+        );
+        // and the clamp never changes pixels: serve the same request
+        // through coordinators with different caps
+        let img = Arc::new(synth::noise(80, 96, 0xBEEF));
+        let mut outs = Vec::new();
+        for cap in [1usize, 2, 0] {
+            let coord = Coordinator::start(CoordinatorConfig {
+                workers: 1,
+                backend: BackendChoice::NativeOnly,
+                artifact_dir: None,
+                max_bands_per_request: cap,
+                ..CoordinatorConfig::default()
+            })
+            .unwrap();
+            let r = coord.filter_spec(auto, img.clone()).unwrap();
+            outs.push(r.result.unwrap().into_u8().unwrap());
+            coord.shutdown();
+        }
+        assert!(outs[0].same_pixels(&outs[1]));
+        assert!(outs[0].same_pixels(&outs[2]));
     }
 }

@@ -12,12 +12,46 @@
 //! `rust/tests/zero_copy_alloc.rs`).  Total occupancy is bounded:
 //! pushes beyond `capacity` are rejected so overload sheds load at the
 //! front door instead of growing latency without bound (backpressure).
+//!
+//! ## Fairness: FIFO aging across keys
+//!
+//! The HashMap grouping has no inherent order, and pure plan-affinity
+//! would let a continuously-refilled hot key starve every other key.
+//! Two rules bound waiting time:
+//!
+//! * **non-affinity pulls take the oldest-waiting key** — every request
+//!   carries an arrival sequence number, and the key whose *head*
+//!   (oldest pending) request has the smallest sequence wins (not the
+//!   longest queue: length favours exactly the hot keys that need no
+//!   help);
+//! * **affinity yields after bounded bypassing** — a worker may keep
+//!   draining its pinned key (plan-cache affinity is the whole point of
+//!   batching), but the queue counts every pull that *bypasses* the
+//!   oldest-waiting key; once [`MAX_BYPASS_PULLS`] consecutive pulls
+//!   have done so, the next pull serves the oldest key regardless of
+//!   affinity.  Counting bypasses (rather than one key's streak) makes
+//!   the bound independent of how many workers are pinned to how many
+//!   hot keys: two workers ping-ponging between two hot keys still
+//!   advance the same counter, so a third, cold key is reached within
+//!   the same bound.
+//!
+//! Worst-case wait for a cold request is therefore
+//! `MAX_BYPASS_PULLS × max_batch` hot requests once it becomes the
+//! oldest, regression-tested by the starvation scenarios
+//! (`hot_key_cannot_starve_cold_key`,
+//! `two_hot_keys_cannot_starve_cold_key`).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use super::request::{BatchKey, Pending};
+
+/// Consecutive pulls (across ALL workers) that may bypass the
+/// oldest-waiting key for affinity before fairness forces it.  Large
+/// enough to amortize plan pinning, small enough that a cold key waits
+/// at most `MAX_BYPASS_PULLS × max_batch` requests once it is oldest.
+pub(crate) const MAX_BYPASS_PULLS: u32 = 4;
 
 /// Pop result.
 pub(crate) enum Pull {
@@ -28,12 +62,36 @@ pub(crate) enum Pull {
 }
 
 struct State {
-    by_key: HashMap<BatchKey, VecDeque<Pending>>,
+    by_key: HashMap<BatchKey, VecDeque<(u64, Pending)>>,
     len: usize,
     closed: bool,
+    /// Arrival stamp of the next push (FIFO aging).
+    next_seq: u64,
+    /// Consecutive pulls that served some key *other than* the
+    /// oldest-waiting one (queue-global, so many workers pinned to many
+    /// hot keys share one fairness budget).
+    bypass_pulls: u32,
 }
 
-/// Bounded, key-grouping MPMC queue.
+impl State {
+    /// The key whose oldest pending request arrived first.  O(1) for
+    /// the dominant single-key case; otherwise a head scan over the
+    /// distinct keys (bounded by the key diversity of the in-flight
+    /// window, not the queue depth — an incremental minimum would only
+    /// pay off under very wide key mixes).
+    fn oldest_key(&self) -> Option<BatchKey> {
+        if self.by_key.len() <= 1 {
+            return self.by_key.keys().next().copied();
+        }
+        self.by_key
+            .iter()
+            .filter_map(|(k, q)| q.front().map(|(seq, _)| (*seq, *k)))
+            .min_by_key(|(seq, _)| *seq)
+            .map(|(_, k)| k)
+    }
+}
+
+/// Bounded, key-grouping MPMC queue with FIFO aging across keys.
 pub(crate) struct BatchQueue {
     state: Mutex<State>,
     nonempty: Condvar,
@@ -48,6 +106,8 @@ impl BatchQueue {
                 by_key: HashMap::new(),
                 len: 0,
                 closed: false,
+                next_seq: 0,
+                bypass_pulls: 0,
             }),
             nonempty: Condvar::new(),
             capacity: capacity.max(1),
@@ -61,7 +121,12 @@ impl BatchQueue {
         if st.closed || st.len >= self.capacity {
             return Err(p);
         }
-        st.by_key.entry(p.req.batch_key()).or_default().push_back(p);
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.by_key
+            .entry(p.req.batch_key())
+            .or_default()
+            .push_back((seq, p));
         st.len += 1;
         drop(st);
         self.nonempty.notify_one();
@@ -71,25 +136,35 @@ impl BatchQueue {
     /// Dequeue a batch, blocking up to `wait` when empty.
     ///
     /// `affinity` is the key the caller last served; if it still has
-    /// pending requests it is preferred, otherwise the longest queue is
-    /// taken (drains hot keys first).
+    /// pending requests it is preferred (plan-cache locality) unless
+    /// the fairness rule fires — see the module docs.
     pub fn pull(&self, affinity: Option<&BatchKey>, wait: Duration) -> Pull {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.len > 0 {
-                let key = affinity
+                let oldest = st.oldest_key();
+                let aff = affinity
                     .filter(|k| st.by_key.get(*k).is_some_and(|q| !q.is_empty()))
-                    .copied()
-                    .or_else(|| {
-                        st.by_key
-                            .iter()
-                            .max_by_key(|(_, q)| q.len())
-                            .map(|(k, _)| *k)
-                    });
+                    .copied();
+                let key = match (aff, oldest) {
+                    // fairness: the oldest key has been bypassed long
+                    // enough — serve it regardless of affinity
+                    (Some(a), Some(old)) if old != a && st.bypass_pulls >= MAX_BYPASS_PULLS => {
+                        Some(old)
+                    }
+                    (Some(a), _) => Some(a),
+                    (None, old) => old,
+                };
                 if let Some(key) = key {
+                    if oldest.is_some_and(|old| old != key) {
+                        st.bypass_pulls = st.bypass_pulls.saturating_add(1);
+                    } else {
+                        st.bypass_pulls = 0;
+                    }
+                    let max_batch = self.max_batch;
                     let q = st.by_key.get_mut(&key).unwrap();
-                    let n = q.len().min(self.max_batch);
-                    let batch: Vec<Pending> = q.drain(..n).collect();
+                    let n = q.len().min(max_batch);
+                    let batch: Vec<Pending> = q.drain(..n).map(|(_, p)| p).collect();
                     if q.is_empty() {
                         st.by_key.remove(&key);
                     }
@@ -162,7 +237,7 @@ mod tests {
         let Pull::Batch(b1) = q.pull(None, Duration::from_millis(10)) else {
             panic!("expected batch");
         };
-        assert_eq!(b1.len(), 3); // longest queue first
+        assert_eq!(b1.len(), 3); // erode arrived first (oldest key wins)
         assert!(b1
             .iter()
             .all(|p| p.req.spec.single_op() == Some(FilterOp::Erode)));
@@ -171,6 +246,23 @@ mod tests {
         };
         assert_eq!(b2.len(), 2);
         assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn non_affinity_pull_takes_oldest_waiting_key() {
+        // dilate has the LONGER queue but erode arrived first: FIFO
+        // aging must pick erode (length favours hot keys)
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let q = BatchQueue::new(100, 8);
+        q.push(pending("erode", 3, &img)).ok().unwrap();
+        for _ in 0..5 {
+            q.push(pending("dilate", 3, &img)).ok().unwrap();
+        }
+        let Pull::Batch(b) = q.pull(None, Duration::from_millis(10)) else {
+            panic!();
+        };
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].req.spec.single_op(), Some(FilterOp::Erode));
     }
 
     #[test]
@@ -201,6 +293,79 @@ mod tests {
         };
         assert_eq!(b.len(), 1);
         assert_eq!(b[0].req.spec.single_op(), Some(FilterOp::Dilate));
+    }
+
+    #[test]
+    fn hot_key_cannot_starve_cold_key() {
+        // the two-key starvation regression: a worker with affinity for
+        // a continuously-hot key must still serve the cold key within
+        // MAX_BYPASS_PULLS batches of it becoming the oldest
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let q = BatchQueue::new(1000, 2);
+        let hot_key = pending("erode", 3, &img).req.batch_key();
+        for _ in 0..4 {
+            q.push(pending("erode", 3, &img)).ok().unwrap();
+        }
+        q.push(pending("dilate", 3, &img)).ok().unwrap(); // the cold one
+        let mut pulls_until_cold = 0u32;
+        loop {
+            // keep the hot key continuously refilled — pure affinity
+            // would never switch
+            q.push(pending("erode", 3, &img)).ok().unwrap();
+            q.push(pending("erode", 3, &img)).ok().unwrap();
+            let Pull::Batch(b) = q.pull(Some(&hot_key), Duration::from_millis(10)) else {
+                panic!();
+            };
+            pulls_until_cold += 1;
+            if b[0].req.spec.single_op() == Some(FilterOp::Dilate) {
+                break;
+            }
+            assert!(
+                pulls_until_cold <= MAX_BYPASS_PULLS + 2,
+                "cold key starved: {pulls_until_cold} hot batches and counting"
+            );
+        }
+        // and after the fairness pull the worker goes back to its key
+        let Pull::Batch(b) = q.pull(Some(&hot_key), Duration::from_millis(10)) else {
+            panic!();
+        };
+        assert_eq!(b[0].req.spec.single_op(), Some(FilterOp::Erode));
+    }
+
+    #[test]
+    fn two_hot_keys_cannot_starve_cold_key() {
+        // multi-worker shape: two affinity pullers ping-pong between
+        // two continuously-hot keys; the bypass counter is shared, so
+        // the cold third key is still served within the global bound
+        // (a per-key streak would reset on every alternation and never
+        // fire)
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let q = BatchQueue::new(1000, 2);
+        let k_erode = pending("erode", 3, &img).req.batch_key();
+        let k_open = pending("opening", 3, &img).req.batch_key();
+        for _ in 0..2 {
+            q.push(pending("erode", 3, &img)).ok().unwrap();
+            q.push(pending("opening", 3, &img)).ok().unwrap();
+        }
+        q.push(pending("dilate", 3, &img)).ok().unwrap(); // the cold one
+        let mut pulls_until_cold = 0u32;
+        loop {
+            q.push(pending("erode", 3, &img)).ok().unwrap();
+            q.push(pending("opening", 3, &img)).ok().unwrap();
+            // alternate the two pinned workers
+            let aff = if pulls_until_cold % 2 == 0 { &k_erode } else { &k_open };
+            let Pull::Batch(b) = q.pull(Some(aff), Duration::from_millis(10)) else {
+                panic!();
+            };
+            pulls_until_cold += 1;
+            if b[0].req.spec.single_op() == Some(FilterOp::Dilate) {
+                break;
+            }
+            assert!(
+                pulls_until_cold <= MAX_BYPASS_PULLS + 2,
+                "cold key starved by alternating hot keys: {pulls_until_cold} batches"
+            );
+        }
     }
 
     #[test]

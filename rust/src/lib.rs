@@ -63,21 +63,57 @@
 //!   [`morphology::FilterPlan`]: hybrid method choices, §5.2.1
 //!   sandwich decisions and the cost-model band count are fixed once,
 //!   and a scratch arena (intermediate slot images, the rows→cols
-//!   buffer, transpose-sandwich buffers, replicate staging) is
-//!   preallocated.
+//!   buffer, transpose-sandwich buffers, replicate staging, per-band
+//!   vHGW `R` slots) is preallocated.
 //! * [`FilterPlan::run`](morphology::FilterPlan::run) /
 //!   [`run_owned`](morphology::FilterPlan::run_owned) execute with the
 //!   zero-copy `_into` kernels, reusing the arena: a reused plan's Nth
-//!   run allocates **no intermediate-image bytes**
+//!   run allocates **no intermediate-image bytes** for any method —
+//!   vHGW's "2× extra memory" `R` buffer included
 //!   (`rust/tests/zero_copy_alloc.rs`).
+//!
+//! **Position independence.** A plan's resolution depends on the ROI's
+//! haloed-block *shape*, never its origin:
+//! [`FilterPlan::run_at`](morphology::FilterPlan::run_at) takes the
+//! block origin at call time, so one plan serves every *interior*
+//! position of a same-shape crop sweep (edge-clamped positions resolve
+//! their own clamped geometry and keep their own plans).
+//! [`FilterSpec::canonical_for`](morphology::FilterSpec::canonical_for)
+//! is the matching cache-key rule — interior ROIs are keyed at the
+//! canonical anchor — so the engine plan cache resolves a sweep
+//! exactly once (hit-count asserted in `runtime::engine` tests and
+//! gated in CI via `BENCH_serve.json`).
 //!
 //! Every layer speaks specs: the coordinator's depth-erased
 //! [`coordinator::Coordinator::submit`]`(FilterSpec, ImagePayload)`
 //! groups requests by the typed
 //! [`coordinator::request::BatchKey`] (dtype + shape + op chain +
 //! config + ROI *shape*) and each worker's native engine caches one
-//! resolved plan per `(spec, shape)`; the CLI's `filter --op ... --roi
-//! ...` builds one spec (any op or comma-chain composes with `--roi`).
+//! resolved plan per canonical `(spec, shape)`; the CLI's `filter --op
+//! ... --roi ...` builds one spec (any op or comma-chain composes with
+//! `--roi`).
+//!
+//! ### Streaming-serving contract
+//!
+//! [`coordinator::Coordinator::submit`] is fire-and-wait (one ticket,
+//! one reply channel).  For serving-rate producers,
+//! [`coordinator::Coordinator::stream`] /
+//! [`coordinator::Coordinator::submit_many`] return a
+//! [`coordinator::SubmitStream`]: `send` enqueues without blocking or
+//! allocating a per-ticket channel, `recv`/`drain` yield responses in
+//! **completion** order (match them by
+//! [`coordinator::request::FilterResponse::id`]), and backpressure
+//! sheds are counted on the stream rather than aborting it.  Workers
+//! pull same-key batches (FIFO-aged across keys so a hot key cannot
+//! starve others) and drain each run through one **pinned,
+//! position-independent plan**; `plan_resolutions`/`plan_hits` in
+//! [`coordinator::metrics::Snapshot`] meter the economy, and a
+//! per-request band budget
+//! ([`coordinator::CoordinatorConfig::max_bands_per_request`], default
+//! `cores / workers`) keeps one giant request from monopolizing the
+//! shared band pool.  Streamed output is bit-identical to per-ticket
+//! `submit` (`rust/tests/streaming_serve.rs`;
+//! `examples/streaming_serve.rs` is the end-to-end driver).
 //!
 //! ### Migration notes (wrapper entry points)
 //!

@@ -23,7 +23,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use neon_morph::bench_harness::{self, e2e, fig3, fig4, gate, scaling, table1};
+use neon_morph::bench_harness::{self, e2e, fig3, fig4, gate, scaling, serve, table1};
 use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use neon_morph::costmodel::CostModel;
 use neon_morph::image::{read_pgm, synth, write_pgm};
@@ -105,11 +105,15 @@ COMMANDS:
     bench      <table1|fig3|fig3u16|fig4|e2e|scaling|all> [--quick] [--tsv] [--iters N]
                scaling: [--max-workers 16] [--host]
     bench      smoke --out DIR [--update-baselines] [--baselines DIR]
-               deterministic sweeps -> BENCH_{fig3,fig4,table1,scaling}.json
+               deterministic sweeps -> BENCH_{fig3,fig4,table1,scaling,serve}.json
+               (serve: streamed coordinator workload, plan-resolutions-
+               per-request headline — count-exact)
     bench      gate [--out DIR] [--baselines DIR]
                fail if headline ratios drift >10% from the committed baselines
     serve      [--requests 256] [--workers 4] [--window 7]
                [--backend native|xla|auto] [--artifacts DIR]
+               native serving streams requests (SubmitStream) and
+               reports plan-cache traffic alongside latency
     calibrate  [--max-window 121]
     demo       [--outdir /tmp] [--height 600] [--width 800]
     info       [--artifacts DIR]
@@ -433,6 +437,10 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
         0,
     );
     let scaling_report = scaling::to_json(&scaling_sweep);
+    // serving smoke: count-exact plan-cache headlines of a streamed
+    // coordinator workload (1 worker — resolutions are deterministic)
+    let serve_smoke = serve::run_smoke()?;
+    let serve_report = serve::to_json(&serve_smoke);
 
     let reports = [
         ("BENCH_fig3.json", &fig3_report),
@@ -440,6 +448,7 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
         ("BENCH_fig4.json", &fig4_report),
         ("BENCH_table1.json", &table1_report),
         ("BENCH_scaling.json", &scaling_report),
+        ("BENCH_serve.json", &serve_report),
     ];
     for (name, report) in reports {
         let path = out_dir.join(name);
@@ -465,6 +474,14 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     print!("{}", table1::render(&table1_rows).to_markdown());
     println!();
     print!("{}", scaling::render(&scaling_sweep).to_markdown());
+    println!(
+        "serve smoke: {} requests -> {} plan resolutions, {} hits \
+         ({:.4} resolutions/request)",
+        serve_smoke.requests,
+        serve_smoke.plan_resolutions,
+        serve_smoke.plan_hits,
+        serve_smoke.plan_resolutions as f64 / serve_smoke.requests as f64
+    );
 
     if args.flag("update-baselines") {
         let base_dir = PathBuf::from(args.get("baselines").unwrap_or(BASELINE_DIR));
@@ -493,6 +510,7 @@ fn cmd_bench_gate(args: &Args) -> Result<()> {
         "BENCH_fig4.json",
         "BENCH_table1.json",
         "BENCH_scaling.json",
+        "BENCH_serve.json",
     ] {
         let base_path = base_dir.join(name);
         let meas_path = out_dir.join(name);
@@ -536,12 +554,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
 
     if backend == BackendChoice::NativeOnly {
+        // native serving runs the STREAMING submit path: one
+        // SubmitStream producer, plan-pinned workers draining same-key
+        // runs (see `examples/streaming_serve.rs` for the API)
         let s = e2e::serve_native(requests, workers, window)?;
         println!(
             "completed {} requests on {} workers in {:.2}s: {:.1} req/s, \
-             p50 {:.2} ms, p99 {:.2} ms, mean batch {:.2}, shed {}",
+             p50 {:.2} ms, p99 {:.2} ms, mean batch {:.2}, shed {}, \
+             plans resolved/hit {}/{} ({:.4} resolutions/req)",
             s.requests, s.workers, s.wall_s, s.throughput_rps,
-            s.p50_us / 1e3, s.p99_us / 1e3, s.mean_batch, s.shed
+            s.p50_us / 1e3, s.p99_us / 1e3, s.mean_batch, s.shed,
+            s.plan_resolutions, s.plan_hits, s.plan_resolutions_per_request()
         );
         return Ok(());
     }

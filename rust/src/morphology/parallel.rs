@@ -214,8 +214,19 @@ impl Drop for CompletionGuard {
     }
 }
 
-/// Pool size used by [`BandPool::global`].
+/// Pool size used by [`BandPool::global`]: `available_parallelism`
+/// clamped to 16, overridable with the `NEON_MORPH_BAND_WORKERS`
+/// environment variable (serving deployments size the band pool to the
+/// cores they actually own; see
+/// [`crate::coordinator::CoordinatorConfig::max_bands_per_request`] for
+/// the coordinator-side coupling).
 pub fn default_pool_threads() -> usize {
+    if let Some(n) = std::env::var("NEON_MORPH_BAND_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        return n.clamp(1, 64);
+    }
     std::thread::available_parallelism().map_or(2, |n| n.get()).clamp(1, 16)
 }
 
@@ -245,6 +256,13 @@ impl BandPool {
                 .expect("spawning band worker");
         }
         BandPool { tx, threads }
+    }
+
+    /// An explicitly-sized pool — the serving-deployment constructor
+    /// (`workers × max_bands_per_request ≤ cores`; the name matches the
+    /// coordinator-side knob).  Identical to [`BandPool::new`].
+    pub fn with_workers(workers: usize) -> BandPool {
+        BandPool::new(workers)
     }
 
     /// Worker count (an upper bound on useful band counts).
@@ -313,6 +331,17 @@ impl BandPool {
 // banded passes (zero-copy: borrowed haloed reads, disjoint in-place writes)
 // ---------------------------------------------------------------------------
 
+/// Grow a per-band scratch pool to `n` slots and return them.  Empty
+/// `Vec`s cost nothing; each band job gets its own slot, so the vHGW
+/// `R` buffers are disjoint across concurrent bands and — when the
+/// caller retains the pool (a plan arena) — allocation-free on reuse.
+fn scratch_slots<P>(scratch: &mut Vec<Vec<P>>, n: usize) -> &mut [Vec<P>] {
+    if scratch.len() < n {
+        scratch.resize_with(n, Vec::new);
+    }
+    &mut scratch[..n]
+}
+
 /// Rows-window pass executed as `bands` haloed row bands on `pool`.
 /// Bit-identical to [`separable::pass_rows`] with the same arguments.
 pub fn pass_rows_banded<'a, P: MorphPixel>(
@@ -358,6 +387,7 @@ fn pass_rows_banded_aligned<P: MorphPixel>(
         thresholds,
         bands,
         align,
+        &mut Vec::new(),
     );
     dst
 }
@@ -367,6 +397,9 @@ fn pass_rows_banded_aligned<P: MorphPixel>(
 /// scratch arena.  `dst` must match `src`'s shape; interior band
 /// boundaries are rounded to `align`-row multiples.  Degrades to the
 /// sequential `_into` kernel when the plan collapses to one band.
+/// `scratch` holds one vHGW `R`-buffer slot per band (grown on first
+/// use; retained callers reuse them allocation-free — linear bands
+/// leave their slots empty).
 #[allow(clippy::too_many_arguments)]
 pub fn pass_rows_banded_into<P: MorphPixel>(
     pool: &BandPool,
@@ -379,6 +412,7 @@ pub fn pass_rows_banded_into<P: MorphPixel>(
     thresholds: HybridThresholds,
     bands: usize,
     align: usize,
+    scratch: &mut Vec<Vec<P>>,
 ) {
     let (h, w) = (src.height(), src.width());
     debug_assert_eq!((dst.height(), dst.width()), (h, w));
@@ -390,15 +424,27 @@ pub fn pass_rows_banded_into<P: MorphPixel>(
         return;
     }
     let plan = split_bands_aligned(h, bands, align);
+    let slots = scratch_slots(scratch, plan.len().max(1));
     if plan.len() <= 1 {
-        separable::pass_rows_into(&mut Native, src, dst, 0, window, op, method, simd, thresholds);
+        separable::pass_rows_into(
+            &mut Native,
+            src,
+            dst,
+            0,
+            window,
+            op,
+            method,
+            simd,
+            thresholds,
+            &mut slots[0],
+        );
         return;
     }
     let wing = window / 2;
     // disjoint per-band output views — no staging slab, no stitch
     let chunks = dst.split_rows_mut(&plan);
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
-    for (band, chunk) in plan.iter().cloned().zip(chunks) {
+    for ((band, chunk), slot) in plan.iter().cloned().zip(chunks).zip(slots.iter_mut()) {
         jobs.push(Box::new(move || {
             let input = halo(&band, wing, h);
             let skip = band.start - input.start;
@@ -412,6 +458,7 @@ pub fn pass_rows_banded_into<P: MorphPixel>(
                 method,
                 simd,
                 thresholds,
+                slot,
             );
         }));
     }
@@ -476,6 +523,7 @@ pub fn pass_cols_banded<'a, P: MorphPixel>(
         vertical,
         thresholds,
         bands,
+        &mut Vec::new(),
     );
     dst
 }
@@ -485,6 +533,8 @@ pub fn pass_cols_banded<'a, P: MorphPixel>(
 /// Callers must have excluded the §5.2.1 sandwich case with
 /// [`separable::takes_sandwich`] — the sandwich is banded over the
 /// *transposed* buffer instead (see [`super::plan::FilterPlan`]).
+/// `scratch` holds one vHGW `R`-row slot per band, as in
+/// [`pass_rows_banded_into`].
 #[allow(clippy::too_many_arguments)]
 pub fn pass_cols_direct_banded_into<P: MorphPixel>(
     pool: &BandPool,
@@ -497,6 +547,7 @@ pub fn pass_cols_direct_banded_into<P: MorphPixel>(
     vertical: VerticalStrategy,
     thresholds: HybridThresholds,
     bands: usize,
+    scratch: &mut Vec<Vec<P>>,
 ) {
     let (h, w) = (src.height(), src.width());
     debug_assert_eq!((dst.height(), dst.width()), (h, w));
@@ -513,6 +564,7 @@ pub fn pass_cols_direct_banded_into<P: MorphPixel>(
         "sandwich configurations are banded over the transposed buffer"
     );
     let plan = split_bands(h, bands);
+    let slots = scratch_slots(scratch, plan.len().max(1));
     if plan.len() <= 1 {
         separable::pass_cols_direct_into(
             &mut Native,
@@ -524,12 +576,13 @@ pub fn pass_cols_direct_banded_into<P: MorphPixel>(
             simd,
             vertical,
             thresholds,
+            &mut slots[0],
         );
         return;
     }
     let chunks = dst.split_rows_mut(&plan);
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
-    for (band, chunk) in plan.iter().cloned().zip(chunks) {
+    for ((band, chunk), slot) in plan.iter().cloned().zip(chunks).zip(slots.iter_mut()) {
         jobs.push(Box::new(move || {
             separable::pass_cols_direct_into(
                 &mut Native,
@@ -541,6 +594,7 @@ pub fn pass_cols_direct_banded_into<P: MorphPixel>(
                 simd,
                 vertical,
                 thresholds,
+                slot,
             );
         }));
     }

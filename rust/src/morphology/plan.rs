@@ -21,16 +21,32 @@
 //!   wing, clamped at the image edges — the 2-D halo-containment
 //!   argument of [`super::parallel::filter_roi`] lifted to chains), and
 //! * a **scratch arena** is preallocated: per-slot intermediate images,
-//!   the rows→cols buffer, the two transpose-sandwich buffers and the
-//!   replicate-border staging pair.
+//!   the rows→cols buffer, the two transpose-sandwich buffers, the
+//!   replicate-border staging pair, and the per-band vHGW `R`-buffer
+//!   slots (the algorithm's "2× extra memory", grown to their
+//!   high-water mark on the first run).
 //!
 //! [`FilterPlan::run`] / [`FilterPlan::run_owned`] then execute the
 //! resolved steps with the zero-copy `_into` kernels, reusing the arena
 //! on every call: after the first run, a reused plan allocates **no
-//! intermediate-image bytes** (pinned by `rust/tests/zero_copy_alloc.rs`;
-//! the vHGW kernels' internal `R` buffer — the algorithm's documented
-//! "2× extra memory" — and the cols pass's row-sized staging buffer
-//! remain per-call, as they do on every legacy path).
+//! intermediate-image bytes** for *any* method, vHGW included (pinned
+//! by `rust/tests/zero_copy_alloc.rs`; the only per-call heap traffic
+//! left is the cols linear kernel's row-sized staging buffer).
+//!
+//! ## Position independence
+//!
+//! Plan resolution is a function of the ROI's haloed-block **shape**,
+//! never of its absolute origin: [`FilterPlan::run`] executes the
+//! spec's own ROI, and [`FilterPlan::run_at`] takes the block origin at
+//! call time, so **one plan serves every interior position of a
+//! same-shape crop sweep** (an edge-clamped position resolves different
+//! block geometry and keeps its own plan).
+//! [`FilterSpec::canonical_for`] is the cache-key side of the same
+//! rule: it rewrites interior ROIs to the canonical anchor
+//! `(halo_y, halo_x)`, which is how the engine's plan cache and the
+//! coordinator's plan-pinned workers collapse an ROI sweep to a single
+//! resolution (asserted by the hit-count tests in
+//! `rust/src/runtime/engine.rs` and the `BENCH_serve.json` headline).
 //!
 //! ## Bit-identity contract
 //!
@@ -332,6 +348,42 @@ impl FilterSpec {
         Some(op)
     }
 
+    /// The ROI halo this spec's chain needs per axis, `(halo_x,
+    /// halo_y)` — morph depth × wing (see [`FilterSpec::morph_depth`]).
+    pub fn roi_halo(&self) -> (usize, usize) {
+        let depth = self.morph_depth();
+        (depth * (self.w_x / 2), depth * (self.w_y / 2))
+    }
+
+    /// The **cache-canonical** form of this spec for an `h × w` image —
+    /// the position-independence rule of the plan cache.
+    ///
+    /// A [`FilterPlan`] is position-independent: its resolution (pass
+    /// methods, band count, scratch arena) depends only on the ROI's
+    /// haloed-block *shape*, and [`FilterPlan::run_at`] takes the block
+    /// origin at call time.  An **interior** ROI (full halo on every
+    /// side) therefore resolves the same plan at every position, and
+    /// this method rewrites it to the canonical anchor
+    /// `(halo_y, halo_x)` so a same-shape crop sweep collapses to one
+    /// cache key.  Edge-clamped ROIs keep their own position (their
+    /// blocks resolve different clamped geometry), as do specs without
+    /// a ROI and out-of-bounds ROIs (left for [`FilterSpec::validate`]
+    /// to reject).
+    pub fn canonical_for(&self, h: usize, w: usize) -> FilterSpec {
+        let Some(roi) = self.roi else { return *self };
+        if self.ops.as_slice().contains(&FilterOp::Transpose) {
+            return *self;
+        }
+        let (hx, hy) = self.roi_halo();
+        if roi_is_interior(roi, h, w, hx, hy) {
+            let mut s = *self;
+            s.roi = Some(Roi::new(hy, hx, roi.height, roi.width));
+            s
+        } else {
+            *self
+        }
+    }
+
     /// Parse a CLI op chain: `"erode"` or `"erode,dilate,tophat"`.
     pub fn parse_ops(s: &str) -> Result<OpChain, PlanError> {
         let mut chain: Option<OpChain> = None;
@@ -413,6 +465,34 @@ impl FilterSpec {
         let mut plan = self.plan::<P>(src.height(), src.width())?;
         Ok(plan.run_owned(src))
     }
+}
+
+/// Whether `roi`'s chain halo fits inside the `h × w` image on every
+/// side (overflow-proof; implies the ROI itself is in bounds).  Interior
+/// ROIs share one position-independent plan; clamped ones do not.
+pub(crate) fn roi_is_interior(roi: Roi, h: usize, w: usize, hx: usize, hy: usize) -> bool {
+    roi.y >= hy
+        && roi.x >= hx
+        && roi.height <= h
+        && roi.y <= h - roi.height
+        && h - roi.y - roi.height >= hy
+        && roi.width <= w
+        && roi.x <= w - roi.width
+        && w - roi.x - roi.width >= hx
+}
+
+/// The haloed source block a ROI resolves to: the ROI grown by
+/// `(hx, hy)` per side, clamped at the image edges.  Wherever the halo
+/// is clamped the block edge *coincides* with the image edge, which is
+/// what makes the block's border handling reproduce the full-image
+/// behaviour (the 2-D halo-containment argument; python-verified in
+/// `python/tests/test_plan_geometry.py`).
+pub(crate) fn haloed_block(roi: Roi, h: usize, w: usize, hx: usize, hy: usize) -> Roi {
+    let y0 = roi.y.saturating_sub(hy);
+    let x0 = roi.x.saturating_sub(hx);
+    let y1 = (roi.y + roi.height + hy).min(h);
+    let x1 = (roi.x + roi.width + hx).min(w);
+    Roi::new(y0, x0, y1 - y0, x1 - x0)
 }
 
 // ---------------------------------------------------------------------------
@@ -670,11 +750,23 @@ struct Scratch<P> {
     /// Replicate-border staging pair (padded shape).
     pad_in: Vec<P>,
     pad_out: Vec<P>,
+    /// Per-band vHGW `R`-buffer slots (the algorithm's "2× extra
+    /// memory"), grown lazily to each band's high-water mark on the
+    /// first run and reused verbatim after — the arena absorbing these
+    /// is what makes vHGW-method plans allocation-free on reuse.
+    /// Linear-method plans leave them empty.
+    vhgw: Vec<Vec<P>>,
 }
 
 /// A [`FilterSpec`] resolved against a pixel depth and image shape —
 /// method/strategy/band choices fixed, scratch preallocated.  Build
 /// with [`FilterSpec::plan`]; reuse freely across same-shape images.
+///
+/// Plans are **position-independent**: resolution depends on the ROI's
+/// haloed-block *shape*, never its absolute origin — [`FilterPlan::run`]
+/// executes the spec's own ROI, and [`FilterPlan::run_at`] takes a
+/// different same-shape ROI position at call time (one plan serves a
+/// whole crop sweep; see [`FilterSpec::canonical_for`]).
 #[derive(Debug)]
 pub struct FilterPlan<P: MorphPixel> {
     spec: FilterSpec,
@@ -682,7 +774,11 @@ pub struct FilterPlan<P: MorphPixel> {
     src_w: usize,
     out_h: usize,
     out_w: usize,
-    /// Source region the plan computes on (haloed ROI block, or full).
+    /// Chain halo per axis (`halo_x`, `halo_y`).
+    halo: (usize, usize),
+    /// Source region the spec's own ROI resolves to (haloed block, or
+    /// full) — `run_at` recomputes the origin per call; only the
+    /// *shape* is baked into the arena.
     block: Roi,
     steps: Vec<ExecStep>,
     scratch: Scratch<P>,
@@ -699,6 +795,7 @@ impl<P: MorphPixel> FilterPlan<P> {
                 src_w: w,
                 out_h,
                 out_w,
+                halo: (0, 0),
                 block: Roi::full(h, w),
                 steps: Vec::new(),
                 scratch: Scratch {
@@ -708,6 +805,7 @@ impl<P: MorphPixel> FilterPlan<P> {
                     t_b: Vec::new(),
                     pad_in: Vec::new(),
                     pad_out: Vec::new(),
+                    vhgw: Vec::new(),
                 },
             });
         }
@@ -716,18 +814,13 @@ impl<P: MorphPixel> FilterPlan<P> {
         let wing_x = spec.w_x / 2;
         let wing_y = spec.w_y / 2;
 
-        // ROI -> haloed block (chain depth × wing per axis, clamped)
+        // ROI -> haloed block (chain depth × wing per axis, clamped);
+        // only the block *shape* feeds the resolution below — `run_at`
+        // recomputes the origin per call
+        let (hx, hy) = spec.roi_halo();
         let block = match spec.roi {
             None => Roi::full(h, w),
-            Some(roi) => {
-                let depth = spec.morph_depth();
-                let (hx, hy) = (depth * wing_x, depth * wing_y);
-                let y0 = roi.y.saturating_sub(hy);
-                let x0 = roi.x.saturating_sub(hx);
-                let y1 = (roi.y + roi.height + hy).min(h);
-                let x1 = (roi.x + roi.width + hx).min(w);
-                Roi::new(y0, x0, y1 - y0, x1 - x0)
-            }
+            Some(roi) => haloed_block(roi, h, w, hx, hy),
         };
         let (hb, wb) = (block.height, block.width);
 
@@ -799,6 +892,7 @@ impl<P: MorphPixel> FilterPlan<P> {
             src_w: w,
             out_h,
             out_w,
+            halo: (hx, hy),
             block,
             steps,
             scratch: Scratch {
@@ -816,6 +910,10 @@ impl<P: MorphPixel> FilterPlan<P> {
                 } else {
                     Vec::new()
                 },
+                // vHGW R slots grow to their per-band high-water mark on
+                // the first run (the band plan is fixed here, so the
+                // sizes are stable from run 2 on)
+                vhgw: Vec::new(),
             },
         })
     }
@@ -844,15 +942,55 @@ impl<P: MorphPixel> FilterPlan<P> {
             + self.scratch.t_a.len()
             + self.scratch.t_b.len()
             + self.scratch.pad_in.len()
-            + self.scratch.pad_out.len();
+            + self.scratch.pad_out.len()
+            + self.scratch.vhgw.iter().map(Vec::len).sum::<usize>();
         elems * std::mem::size_of::<P>()
     }
 
     /// Execute the plan into a caller-provided destination (the
     /// zero-allocation form).  `src` must match [`FilterPlan::src_dims`]
     /// and `dst` [`FilterPlan::out_dims`].
-    pub fn run<'a>(&mut self, src: impl Into<ImageView<'a, P>>, mut dst: ImageViewMut<'_, P>) {
-        let src = src.into();
+    pub fn run<'a>(&mut self, src: impl Into<ImageView<'a, P>>, dst: ImageViewMut<'_, P>) {
+        let roi = self.spec.roi;
+        self.run_with(src.into(), dst, roi);
+    }
+
+    /// Execute the plan against a **different ROI position** of the same
+    /// shape — the position-independent serving form.  The plan must
+    /// have been resolved from a ROI spec; `roi` must have the spec
+    /// ROI's shape and resolve a haloed block of the same shape (every
+    /// *interior* position qualifies; an edge-clamped position needs the
+    /// plan resolved for its own clamped geometry — see
+    /// [`FilterSpec::canonical_for`]).  Output is bit-identical to
+    /// planning `spec.with_roi(roi)` from scratch.
+    pub fn run_at<'a>(
+        &mut self,
+        src: impl Into<ImageView<'a, P>>,
+        dst: ImageViewMut<'_, P>,
+        roi: Roi,
+    ) {
+        let spec_roi = self
+            .spec
+            .roi
+            .expect("run_at requires a plan resolved from a ROI spec");
+        assert_eq!(
+            (roi.height, roi.width),
+            (spec_roi.height, spec_roi.width),
+            "plan was resolved for a {}x{} ROI",
+            spec_roi.height,
+            spec_roi.width
+        );
+        self.run_with(src.into(), dst, Some(roi));
+    }
+
+    /// [`FilterPlan::run_at`] allocating the output image.
+    pub fn run_owned_at<'a>(&mut self, src: impl Into<ImageView<'a, P>>, roi: Roi) -> Image<P> {
+        let mut out = Image::zeros(self.out_h, self.out_w);
+        self.run_at(src.into(), out.view_mut(), roi);
+        out
+    }
+
+    fn run_with(&mut self, src: ImageView<'_, P>, mut dst: ImageViewMut<'_, P>, roi: Option<Roi>) {
         assert_eq!(
             (src.height(), src.width()),
             (self.src_h, self.src_w),
@@ -871,7 +1009,35 @@ impl<P: MorphPixel> FilterPlan<P> {
             P::transpose_image_into(&mut Native, src, dst);
             return;
         }
-        let block = src.sub_rect(self.block.y, self.block.x, self.block.height, self.block.width);
+        // resolve the block origin at CALL time (position independence):
+        // the arena only fixed the block's shape
+        let (hx, hy) = self.halo;
+        let block_roi = match roi {
+            None => Roi::full(self.src_h, self.src_w),
+            Some(r) => {
+                assert!(
+                    r.height <= self.src_h
+                        && r.y <= self.src_h - r.height
+                        && r.width <= self.src_w
+                        && r.x <= self.src_w - r.width,
+                    "ROI {r:?} exceeds the {}x{} image",
+                    self.src_h,
+                    self.src_w
+                );
+                haloed_block(r, self.src_h, self.src_w, hx, hy)
+            }
+        };
+        assert_eq!(
+            (block_roi.height, block_roi.width),
+            (self.block.height, self.block.width),
+            "plan was resolved for a {}x{} block; ROI {roi:?} resolves {}x{} here \
+             (edge-clamped positions need their own plan)",
+            self.block.height,
+            self.block.width,
+            block_roi.height,
+            block_roi.width
+        );
+        let block = src.sub_rect(block_roi.y, block_roi.x, block_roi.height, block_roi.width);
         // empty output (degenerate source or empty ROI): nothing to
         // compute — and a nonzero output implies a nonzero block, since
         // the ROI is validated to fit inside the image
@@ -882,7 +1048,7 @@ impl<P: MorphPixel> FilterPlan<P> {
         let n_steps = self.steps.len();
         for i in 0..n_steps {
             let step = self.steps[i];
-            let direct_out = self.spec.roi.is_none() && i == n_steps - 1;
+            let direct_out = roi.is_none() && i == n_steps - 1;
             match step {
                 ExecStep::Morph {
                     op,
@@ -900,14 +1066,14 @@ impl<P: MorphPixel> FilterPlan<P> {
             }
         }
 
-        if let Some(roi) = self.spec.roi {
+        if let Some(r) = roi {
             let Slot::Tmp(last) = self.steps.last().unwrap().dst_slot() else {
                 unreachable!()
             };
             let (hb, wb) = (self.block.height, self.block.width);
             let full = ImageView::from_slice(&self.scratch.slots[last], hb, wb, wb);
             dst.copy_rows_from(
-                full.sub_rect(roi.y - self.block.y, roi.x - self.block.x, roi.height, roi.width),
+                full.sub_rect(r.y - block_roi.y, r.x - block_roi.x, r.height, r.width),
                 0,
             );
         }
@@ -958,6 +1124,7 @@ impl<P: MorphPixel> FilterPlan<P> {
         let mut t_b = std::mem::take(&mut self.scratch.t_b);
         let mut pad_in = std::mem::take(&mut self.scratch.pad_in);
         let mut pad_out = std::mem::take(&mut self.scratch.pad_out);
+        let mut vhgw = std::mem::take(&mut self.scratch.vhgw);
         {
             let sv = self.slot_view(block, s);
             let cfg = &self.spec.config;
@@ -990,6 +1157,7 @@ impl<P: MorphPixel> FilterPlan<P> {
                     &mut after_rows,
                     &mut t_a,
                     &mut t_b,
+                    &mut vhgw,
                 );
                 tv.copy_rows_from(
                     ImageView::from_slice(&pad_out, he, we, we).sub_rect(wing_y, wing_x, hb, wb),
@@ -1007,6 +1175,7 @@ impl<P: MorphPixel> FilterPlan<P> {
                     &mut after_rows,
                     &mut t_a,
                     &mut t_b,
+                    &mut vhgw,
                 );
             }
         }
@@ -1015,6 +1184,7 @@ impl<P: MorphPixel> FilterPlan<P> {
         self.scratch.t_b = t_b;
         self.scratch.pad_in = pad_in;
         self.scratch.pad_out = pad_out;
+        self.scratch.vhgw = vhgw;
         if !direct_out {
             self.scratch.slots[di] = dstbuf;
         }
@@ -1061,7 +1231,10 @@ impl ExecStep {
 }
 
 /// One separable erosion/dilation with identity borders into `tv`,
-/// using the plan's resolved passes and band count.
+/// using the plan's resolved passes and band count.  `vhgw` is the
+/// arena's per-band vHGW `R`-slot pool, shared by every pass of the
+/// step (passes run sequentially, and the slots regrow to each pass's
+/// high-water mark exactly once).
 #[allow(clippy::too_many_arguments)]
 fn exec_morph_ident<P: MorphPixel>(
     sv: ImageView<'_, P>,
@@ -1074,12 +1247,13 @@ fn exec_morph_ident<P: MorphPixel>(
     after_rows: &mut [P],
     t_a: &mut [P],
     t_b: &mut [P],
+    vhgw: &mut Vec<Vec<P>>,
 ) {
     let (h, w) = (sv.height(), sv.width());
     match (rows, cols) {
         (None, None) => tv.copy_rows_from(sv, 0),
-        (Some(r), None) => run_rows_pass(sv, tv, op, r, bands, cfg, 1),
-        (None, Some(c)) => run_cols_pass(sv, tv, op, c, bands, cfg, t_a, t_b),
+        (Some(r), None) => run_rows_pass(sv, tv, op, r, bands, cfg, 1, vhgw),
+        (None, Some(c)) => run_cols_pass(sv, tv, op, c, bands, cfg, t_a, t_b, vhgw),
         (Some(r), Some(c)) => {
             let mid = &mut after_rows[..h * w];
             run_rows_pass(
@@ -1090,6 +1264,7 @@ fn exec_morph_ident<P: MorphPixel>(
                 bands,
                 cfg,
                 1,
+                vhgw,
             );
             run_cols_pass(
                 ImageView::from_slice(mid, h, w, w),
@@ -1100,11 +1275,13 @@ fn exec_morph_ident<P: MorphPixel>(
                 cfg,
                 t_a,
                 t_b,
+                vhgw,
             );
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_rows_pass<P: MorphPixel>(
     sv: ImageView<'_, P>,
     tv: ImageViewMut<'_, P>,
@@ -1113,6 +1290,7 @@ fn run_rows_pass<P: MorphPixel>(
     bands: usize,
     cfg: &MorphConfig,
     align: usize,
+    vhgw: &mut Vec<Vec<P>>,
 ) {
     if bands > 1 {
         parallel::pass_rows_banded_into(
@@ -1126,8 +1304,12 @@ fn run_rows_pass<P: MorphPixel>(
             cfg.thresholds,
             bands,
             align,
+            vhgw,
         );
     } else {
+        if vhgw.is_empty() {
+            vhgw.push(Vec::new());
+        }
         separable::pass_rows_into(
             &mut Native,
             sv,
@@ -1138,6 +1320,7 @@ fn run_rows_pass<P: MorphPixel>(
             r.method,
             cfg.simd,
             cfg.thresholds,
+            &mut vhgw[0],
         );
     }
 }
@@ -1152,6 +1335,7 @@ fn run_cols_pass<P: MorphPixel>(
     cfg: &MorphConfig,
     t_a: &mut [P],
     t_b: &mut [P],
+    vhgw: &mut Vec<Vec<P>>,
 ) {
     let (h, w) = (sv.height(), sv.width());
     if c.sandwich {
@@ -1176,6 +1360,7 @@ fn run_cols_pass<P: MorphPixel>(
             bands,
             cfg,
             P::LANES,
+            vhgw,
         );
         P::transpose_image_into(&mut Native, ImageView::from_slice(tb, w, h, h), tv);
     } else if bands > 1 {
@@ -1190,8 +1375,12 @@ fn run_cols_pass<P: MorphPixel>(
             cfg.vertical,
             cfg.thresholds,
             bands,
+            vhgw,
         );
     } else {
+        if vhgw.is_empty() {
+            vhgw.push(Vec::new());
+        }
         separable::pass_cols_direct_into(
             &mut Native,
             sv,
@@ -1202,6 +1391,7 @@ fn run_cols_pass<P: MorphPixel>(
             cfg.simd,
             cfg.vertical,
             cfg.thresholds,
+            &mut vhgw[0],
         );
     }
 }
@@ -1380,6 +1570,114 @@ mod tests {
                 .unwrap();
             assert!(got.same_pixels(&want), "{op:?}: {:?}", got.first_diff(&want));
         }
+    }
+
+    #[test]
+    fn canonical_for_groups_interior_positions_only() {
+        let base = FilterSpec::new(FilterOp::TopHat, 5, 7); // halo (4, 6)
+        // interior positions of one shape collapse to one canonical spec
+        let a = base.with_roi(Roi::new(6, 4, 10, 12)).canonical_for(40, 40);
+        let b = base.with_roi(Roi::new(20, 19, 10, 12)).canonical_for(40, 40);
+        assert_eq!(a, b);
+        assert_eq!(a.roi, Some(Roi::new(6, 4, 10, 12)));
+        // canonicalization is idempotent
+        assert_eq!(a.canonical_for(40, 40), a);
+        // an edge-clamped position keeps its own key
+        let edge = base.with_roi(Roi::new(0, 0, 10, 12)).canonical_for(40, 40);
+        assert_eq!(edge.roi, Some(Roi::new(0, 0, 10, 12)));
+        assert_ne!(a, edge);
+        // a different shape keys separately
+        let other = base.with_roi(Roi::new(6, 4, 10, 13)).canonical_for(40, 40);
+        assert_ne!(a, other);
+        // no-ROI and out-of-bounds specs pass through untouched
+        assert_eq!(base.canonical_for(40, 40), base);
+        let oob = base.with_roi(Roi::new(35, 35, 10, 12));
+        assert_eq!(oob.canonical_for(40, 40), oob);
+    }
+
+    #[test]
+    fn run_at_matches_per_position_plans() {
+        // ONE plan (resolved at the canonical anchor) must reproduce the
+        // per-position plan output at every interior position, for a
+        // chain with subtraction steps and at both borders
+        let img = synth::noise(48, 52, 0xA11);
+        for border in [Border::Identity, Border::Replicate] {
+            let cfg = MorphConfig {
+                border,
+                parallelism: Parallelism::Sequential,
+                ..MorphConfig::default()
+            };
+            let base = FilterSpec::new(FilterOp::Gradient, 5, 7).with_config(cfg);
+            let (hx, hy) = base.roi_halo();
+            let shape = Roi::new(hy, hx, 14, 16);
+            let mut plan = base
+                .with_roi(shape)
+                .canonical_for(48, 52)
+                .plan::<u8>(48, 52)
+                .unwrap();
+            for roi in [
+                Roi::new(hy, hx, 14, 16),
+                Roi::new(20, 19, 14, 16),
+                Roi::new(48 - 14 - hy, 52 - 16 - hx, 14, 16),
+            ] {
+                let want = base.with_roi(roi).run_once::<u8>(&img).unwrap();
+                let got = plan.run_owned_at(&img, roi);
+                assert!(
+                    got.same_pixels(&want),
+                    "{border:?} {roi:?}: {:?}",
+                    got.first_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn run_at_rejects_mismatched_positions() {
+        let img = synth::noise(30, 30, 1);
+        let spec = FilterSpec::new(FilterOp::Erode, 5, 5).with_roi(Roi::new(4, 4, 10, 10));
+        let mut plan = spec.plan::<u8>(30, 30).unwrap();
+        // wrong shape
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.run_owned_at(&img, Roi::new(4, 4, 10, 11))
+        }));
+        assert!(r.is_err(), "shape mismatch must panic");
+        // edge-clamped position under an interior plan
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.run_owned_at(&img, Roi::new(0, 0, 10, 10))
+        }));
+        assert!(r.is_err(), "clamped block shape must panic");
+        // out-of-bounds position
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.run_owned_at(&img, Roi::new(25, 25, 10, 10))
+        }));
+        assert!(r.is_err(), "out-of-bounds ROI must panic");
+        // run_at on a no-ROI plan
+        let mut full = FilterSpec::new(FilterOp::Erode, 5, 5).plan::<u8>(30, 30).unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            full.run_owned_at(&img, Roi::new(4, 4, 10, 10))
+        }));
+        assert!(r.is_err(), "run_at requires a ROI spec");
+    }
+
+    #[test]
+    fn vhgw_plans_reuse_their_arena_r_buffers() {
+        // a forced-vHGW plan must produce correct results across reuse
+        // (the R slots grow once and are reused verbatim)
+        let cfg = MorphConfig {
+            method: PassMethod::Vhgw,
+            parallelism: Parallelism::Sequential,
+            ..MorphConfig::default()
+        };
+        let spec = FilterSpec::new(FilterOp::Close, 9, 9).with_config(cfg);
+        let mut plan = spec.plan::<u8>(33, 41).unwrap();
+        for seed in 0..3u64 {
+            let img = synth::noise(33, 41, seed);
+            let want = derived::closing(&mut Native, &img, 9, 9, &cfg);
+            let got = plan.run_owned(&img);
+            assert!(got.same_pixels(&want), "seed {seed}");
+        }
+        // the arena now retains the R slots it grew
+        assert!(plan.scratch_bytes() > 33 * 41, "vHGW R slots must be arena-resident");
     }
 
     #[test]

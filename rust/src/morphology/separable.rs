@@ -41,6 +41,11 @@ pub fn pass_rows<'a, P: MorphPixel, B: Backend>(
 /// `src` filtering directly into `dst` — the zero-copy band primitive
 /// (band jobs pass a haloed source view and their disjoint destination
 /// band; `window == 1` degrades to a row copy).
+///
+/// `scratch` is the vHGW `R`-buffer slot (grown on first use, reused
+/// verbatim after — see [`vhgw::rows_simd_vhgw_into`]); the linear
+/// kernels ignore it.  Callers that retain the scratch (plan arenas,
+/// band-job slots) make every method allocation-free on reuse.
 pub fn pass_rows_into<P: MorphPixel, B: Backend>(
     b: &mut B,
     src: ImageView<'_, P>,
@@ -51,6 +56,7 @@ pub fn pass_rows_into<P: MorphPixel, B: Backend>(
     method: PassMethod,
     simd: bool,
     thresholds: super::HybridThresholds,
+    scratch: &mut Vec<P>,
 ) {
     let m = resolve_method(method, window, thresholds.wy0);
     match (m, simd) {
@@ -58,8 +64,12 @@ pub fn pass_rows_into<P: MorphPixel, B: Backend>(
         (PassMethod::Linear, false) => {
             linear::rows_scalar_linear_into(b, src, dst, y0, window, op)
         }
-        (PassMethod::Vhgw, true) => vhgw::rows_simd_vhgw_into(b, src, dst, y0, window, op),
-        (PassMethod::Vhgw, false) => vhgw::rows_scalar_vhgw_into(b, src, dst, y0, window, op),
+        (PassMethod::Vhgw, true) => {
+            vhgw::rows_simd_vhgw_into(b, src, dst, y0, window, op, scratch)
+        }
+        (PassMethod::Vhgw, false) => {
+            vhgw::rows_scalar_vhgw_into(b, src, dst, y0, window, op, scratch)
+        }
         (PassMethod::Hybrid, _) => unreachable!("resolve_method returns concrete"),
     }
 }
@@ -107,6 +117,7 @@ pub fn pass_cols<'a, P: MorphPixel, B: Backend>(
 /// pass zero-halo source bands.  Callers must have excluded the §5.2.1
 /// sandwich case with [`takes_sandwich`] first (the sandwich transposes
 /// whole images and is banded on the *transposed* buffer instead).
+/// `scratch` is the vHGW `R`-row slot (see [`pass_rows_into`]).
 pub fn pass_cols_direct_into<P: MorphPixel, B: Backend>(
     b: &mut B,
     src: ImageView<'_, P>,
@@ -117,6 +128,7 @@ pub fn pass_cols_direct_into<P: MorphPixel, B: Backend>(
     simd: bool,
     vertical: VerticalStrategy,
     thresholds: super::HybridThresholds,
+    scratch: &mut Vec<P>,
 ) {
     let m = resolve_method(method, window, thresholds.wx0);
     debug_assert!(
@@ -126,7 +138,7 @@ pub fn pass_cols_direct_into<P: MorphPixel, B: Backend>(
     if !simd {
         match m {
             PassMethod::Linear => linear::cols_scalar_linear_into(b, src, dst, window, op),
-            PassMethod::Vhgw => vhgw::cols_scalar_vhgw_into(b, src, dst, window, op),
+            PassMethod::Vhgw => vhgw::cols_scalar_vhgw_into(b, src, dst, window, op, scratch),
             PassMethod::Hybrid => unreachable!(),
         }
         return;

@@ -15,7 +15,12 @@
 //! buffer — 3 combines per point, the classic vHGW census.  The `R`
 //! buffer is the algorithm's inherent "doubled image size" cost, not a
 //! staging copy — the `_into` forms write their output straight into a
-//! caller-provided [`ImageViewMut`] with no other intermediates.
+//! caller-provided [`ImageViewMut`] and take `R` as **caller-provided
+//! scratch** (`&mut Vec<P>`, grown on first use and reused verbatim
+//! after), so a caller that holds the scratch — a
+//! [`super::plan::FilterPlan`] arena, a band job's per-band slot —
+//! allocates nothing on reuse.  The owned wrappers allocate a fresh
+//! scratch per call, preserving the historical behaviour.
 //!
 //! The rows-window pass vectorizes trivially ([`MorphPixel::LANES`]
 //! columns per `vminq`, all aligned); the cols-window scalar pass is the
@@ -32,6 +37,18 @@ use crate::neon::Backend;
 pub(crate) fn seg_count(n: usize, window: usize) -> usize {
     let wing = window / 2;
     (n + 2 * wing).div_ceil(window)
+}
+
+/// Grow `scratch` to at least `n` elements and return the prefix.  Every
+/// element is fully overwritten before it is read, so stale contents
+/// from a previous (smaller or different-op) use are harmless; once the
+/// scratch has reached its high-water mark, reuse allocates nothing.
+#[inline]
+fn scratch_slice<P: MorphPixel>(scratch: &mut Vec<P>, n: usize) -> &mut [P] {
+    if scratch.len() < n {
+        scratch.resize(n, P::default());
+    }
+    &mut scratch[..n]
 }
 
 /// Padded virtual source row of the rows-window scans:
@@ -65,13 +82,15 @@ pub fn rows_simd_vhgw<'a, P: MorphPixel, B: Backend>(
         return src.to_image();
     }
     let mut dst = Image::zeros(h, w);
-    rows_simd_vhgw_into(b, src, dst.view_mut(), 0, window, op);
+    rows_simd_vhgw_into(b, src, dst.view_mut(), 0, window, op, &mut Vec::new());
     dst
 }
 
 /// [`rows_simd_vhgw`] writing output rows `y0 .. y0 + dst.height()` of
 /// the `src` filtering directly into `dst` (band jobs pass a haloed
-/// `src` view and their disjoint destination band).
+/// `src` view and their disjoint destination band).  `scratch` receives
+/// the `R` prefix-reduction buffer (`seg_count(h) × window × w`
+/// elements) — pass a retained `Vec` to make reuse allocation-free.
 pub fn rows_simd_vhgw_into<P: MorphPixel, B: Backend>(
     b: &mut B,
     src: ImageView<'_, P>,
@@ -79,6 +98,7 @@ pub fn rows_simd_vhgw_into<P: MorphPixel, B: Backend>(
     y0: usize,
     window: usize,
     op: MorphOp,
+    scratch: &mut Vec<P>,
 ) {
     let wing = wing_of(window, "w_y");
     let (h, w) = (src.height(), src.width());
@@ -109,7 +129,8 @@ pub fn rows_simd_vhgw_into<P: MorphPixel, B: Backend>(
     let prow = |i: usize| padded_row(src, &ident_row, wing, h, i);
 
     // R: per-segment prefix reduction, ascending, streaming by rows
-    let mut r = vec![P::default(); ph * w];
+    // (arena-owned when the caller retains the scratch)
+    let r = scratch_slice(scratch, ph * w);
     for i in 0..ph {
         let p = prow(i);
         if i % window == 0 {
@@ -208,12 +229,13 @@ pub fn rows_scalar_vhgw<'a, P: MorphPixel, B: Backend>(
         return src.to_image();
     }
     let mut dst = Image::zeros(h, w);
-    rows_scalar_vhgw_into(b, src, dst.view_mut(), 0, window, op);
+    rows_scalar_vhgw_into(b, src, dst.view_mut(), 0, window, op, &mut Vec::new());
     dst
 }
 
 /// [`rows_scalar_vhgw`] writing output rows `y0 .. y0 + dst.height()`
-/// directly into `dst`.
+/// directly into `dst`.  `scratch` receives the `R` buffer, as in
+/// [`rows_simd_vhgw_into`].
 pub fn rows_scalar_vhgw_into<P: MorphPixel, B: Backend>(
     b: &mut B,
     src: ImageView<'_, P>,
@@ -221,6 +243,7 @@ pub fn rows_scalar_vhgw_into<P: MorphPixel, B: Backend>(
     y0: usize,
     window: usize,
     op: MorphOp,
+    scratch: &mut Vec<P>,
 ) {
     let wing = wing_of(window, "w_y");
     let (h, w) = (src.height(), src.width());
@@ -245,7 +268,7 @@ pub fn rows_scalar_vhgw_into<P: MorphPixel, B: Backend>(
     let ident_row = vec![op.identity::<P>(); w];
     let prow = |i: usize| padded_row(src, &ident_row, wing, h, i);
 
-    let mut r = vec![P::default(); ph * w];
+    let r = scratch_slice(scratch, ph * w);
     for i in 0..ph {
         let p = prow(i);
         b.scalar_overhead(1);
@@ -306,18 +329,20 @@ pub fn cols_scalar_vhgw<'a, P: MorphPixel, B: Backend>(
         return src.to_image();
     }
     let mut dst = Image::zeros(h, w);
-    cols_scalar_vhgw_into(b, src, dst.view_mut(), window, op);
+    cols_scalar_vhgw_into(b, src, dst.view_mut(), window, op, &mut Vec::new());
     dst
 }
 
 /// [`cols_scalar_vhgw`] writing directly into `dst` (same shape as
-/// `src`; rows are independent).
+/// `src`; rows are independent).  `scratch` receives the one padded-row
+/// `R` buffer (reused across rows, cache-resident).
 pub fn cols_scalar_vhgw_into<P: MorphPixel, B: Backend>(
     b: &mut B,
     src: ImageView<'_, P>,
     mut dst: ImageViewMut<'_, P>,
     window: usize,
     op: MorphOp,
+    scratch: &mut Vec<P>,
 ) {
     let wing = wing_of(window, "w_x");
     let (h, w) = (src.height(), src.width());
@@ -335,7 +360,7 @@ pub fn cols_scalar_vhgw_into<P: MorphPixel, B: Backend>(
     // src read twice, dst written; R is cache-resident per row
     b.record_stream((2 * h * w) as u64 * px, (h * w) as u64 * px);
 
-    let mut r = vec![P::default(); pw];
+    let r = scratch_slice(scratch, pw);
     for y in 0..h {
         let row = src.row(y);
         let pval = |b: &mut B, j: usize| -> P {
@@ -482,11 +507,53 @@ mod tests {
                 band.start - lo,
                 window,
                 MorphOp::Erode,
+                &mut Vec::new(),
             );
             for (i, y) in band.clone().enumerate() {
                 assert_eq!(out.row(i), full.row(y), "w={window} row {y}");
             }
         }
+    }
+
+    #[test]
+    fn scratch_reuse_across_ops_and_shapes_is_stale_safe() {
+        // one retained scratch Vec across different shapes, windows and
+        // ops — stale R contents must never leak into outputs
+        let mut scratch = Vec::new();
+        let mut col_scratch = Vec::new();
+        for &(h, w, window, op) in &[
+            (26usize, 19usize, 9usize, MorphOp::Erode),
+            (14, 31, 5, MorphOp::Dilate),
+            (26, 19, 9, MorphOp::Dilate),
+            (7, 7, 3, MorphOp::Erode),
+        ] {
+            let img = synth::noise(h, w, (h * 131 + w) as u64);
+            let want = naive::rows_naive(&mut Native, &img, window, op);
+            let mut out = Image::zeros(h, w);
+            rows_simd_vhgw_into(
+                &mut Native,
+                img.view(),
+                out.view_mut(),
+                0,
+                window,
+                op,
+                &mut scratch,
+            );
+            assert!(out.same_pixels(&want), "rows {h}x{w} w={window} {op:?}");
+            let want_c = naive::cols_naive(&mut Native, &img, window, op);
+            let mut out_c = Image::zeros(h, w);
+            cols_scalar_vhgw_into(
+                &mut Native,
+                img.view(),
+                out_c.view_mut(),
+                window,
+                op,
+                &mut col_scratch,
+            );
+            assert!(out_c.same_pixels(&want_c), "cols {h}x{w} w={window} {op:?}");
+        }
+        // the scratch grew to its high-water mark and was reused
+        assert!(scratch.len() >= 26 * 19);
     }
 
     #[test]

@@ -14,14 +14,23 @@
 //!
 //! ## Plan cache
 //!
-//! The native engine resolves each `(spec, shape)` **once** into a
-//! [`FilterPlan`] and reuses it across requests — the serving-side
-//! payoff of the plan–execute API: a worker draining a same-key batch
-//! re-runs one resolved plan (methods, band geometry and scratch arena
-//! already fixed) instead of re-dispatching per request.  The cache is
-//! bounded ([`PLAN_CACHE_CAP`]) and cleared wholesale when full — keys
-//! are `Copy` and plans are cheap to rebuild, so eviction sophistication
-//! buys nothing.
+//! The native engine resolves each **canonical** `(spec, shape)` pair
+//! **once** into a [`FilterPlan`] and reuses it across requests — the
+//! serving-side payoff of the plan–execute API: a worker draining a
+//! same-key batch re-runs one resolved plan (methods, band geometry and
+//! scratch arena already fixed) instead of re-dispatching per request.
+//!
+//! Keys are canonicalized with
+//! [`FilterSpec::canonical_for`](crate::morphology::FilterSpec::canonical_for):
+//! plans are position-independent, so an *interior* ROI keys on its
+//! shape at the canonical anchor and a same-shape crop sweep resolves
+//! **exactly one plan** regardless of offsets (the actual position is
+//! supplied at run time through `FilterPlan::run_at`); edge-clamped
+//! ROIs resolve different block geometry and keep their own entries.
+//! [`NativeEngine::plan_stats`] / [`NativeEngine::take_plan_stats`]
+//! count resolutions vs cache hits — the coordinator aggregates them
+//! into its metrics and `BENCH_serve.json` gates the
+//! resolutions-per-request headline.
 //!
 //! The legacy `(op, w)`-pair surface survives as the [`ArtifactMeta`]
 //! wrappers ([`NativeEngine::run`] / [`NativeEngine::run_u16`]), which
@@ -69,9 +78,19 @@ pub trait Engine: Send {
     fn backend_name(&self) -> &'static str;
 }
 
-/// Plan-cache key: the full spec (ROI position included — edge-clamped
-/// blocks resolve different geometry) plus the image shape.
+/// Plan-cache key: the **canonical** spec
+/// ([`FilterSpec::canonical_for`] — interior ROIs keyed by shape at the
+/// canonical anchor, edge-clamped ones by their own position) plus the
+/// image shape.
 type PlanKey = (FilterSpec, usize, usize);
+
+/// Plan-cache counters: how many requests resolved a fresh plan vs ran
+/// on a cached one (uncached oversized plans count as resolutions).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    pub resolutions: u64,
+    pub hits: u64,
+}
 
 /// Pure-rust engine: executes specs with the crate's native morphology
 /// through cached [`FilterPlan`]s.  Large images are band-sharded
@@ -83,6 +102,7 @@ pub struct NativeEngine {
     cfg: MorphConfig,
     plans_u8: HashMap<PlanKey, FilterPlan<u8>>,
     plans_u16: HashMap<PlanKey, FilterPlan<u16>>,
+    stats: PlanStats,
 }
 
 impl NativeEngine {
@@ -93,6 +113,7 @@ impl NativeEngine {
             cfg,
             plans_u8: HashMap::new(),
             plans_u16: HashMap::new(),
+            stats: PlanStats::default(),
         }
     }
 
@@ -101,25 +122,46 @@ impl NativeEngine {
         self.plans_u8.len() + self.plans_u16.len()
     }
 
+    /// Cumulative plan-cache counters since construction (or the last
+    /// [`NativeEngine::take_plan_stats`]).
+    pub fn plan_stats(&self) -> PlanStats {
+        self.stats
+    }
+
+    /// Drain the counters (the coordinator pulls per-batch deltas into
+    /// its service metrics).
+    pub fn take_plan_stats(&mut self) -> PlanStats {
+        std::mem::take(&mut self.stats)
+    }
+
     /// Depth-generic execution body shared by `run_spec` and
-    /// `run_spec_u16`: plan once per `(spec, shape)`, run many.
+    /// `run_spec_u16`: plan once per canonical `(spec, shape)`, run
+    /// many — `run_at` supplies the request's actual ROI position.
     fn run_any<P: MorphPixel>(
         cache: &mut HashMap<PlanKey, FilterPlan<P>>,
+        stats: &mut PlanStats,
         spec: &FilterSpec,
         img: &Image<P>,
     ) -> Result<Image<P>> {
-        let key = (*spec, img.height(), img.width());
+        let (h, w) = (img.height(), img.width());
+        // position-independent keying: an interior ROI keys on its
+        // shape; the true position is re-applied at run time by
+        // `exec_cached`
+        let canon = spec.canonical_for(h, w);
+        let key = (canon, h, w);
         if let Some(plan) = cache.get_mut(&key) {
-            return Ok(plan.run_owned(img));
+            stats.hits += 1;
+            return Ok(exec_cached(plan, spec, img));
         }
-        let mut plan = spec.plan::<P>(img.height(), img.width())?;
+        stats.resolutions += 1;
+        let mut plan = canon.plan::<P>(h, w)?;
         let new_bytes = plan.scratch_bytes();
         if new_bytes > PLAN_CACHE_MAX_BYTES {
             // bigger than the whole budget: run one-shot, never pin
-            return Ok(plan.run_owned(img));
+            return Ok(exec_cached(&mut plan, spec, img));
         }
         // evict entries one at a time until the new plan fits — never
-        // wholesale, so ROI-position churn cannot flush hot plans
+        // wholesale, so key churn cannot flush hot plans
         let mut resident: usize = cache.values().map(FilterPlan::scratch_bytes).sum();
         while !cache.is_empty()
             && (cache.len() >= PLAN_CACHE_CAP || resident + new_bytes > PLAN_CACHE_MAX_BYTES)
@@ -129,7 +171,7 @@ impl NativeEngine {
                 resident -= evicted.scratch_bytes();
             }
         }
-        Ok(cache.entry(key).or_insert(plan).run_owned(img))
+        Ok(exec_cached(cache.entry(key).or_insert(plan), spec, img))
     }
 
     /// Build the spec a legacy artifact description denotes, using this
@@ -161,24 +203,39 @@ impl NativeEngine {
     pub fn run(&mut self, meta: &ArtifactMeta, img: &Image<u8>) -> Result<Image<u8>> {
         Self::check_shape(meta, img)?;
         let spec = self.spec_of(meta)?;
-        Self::run_any(&mut self.plans_u8, &spec, img)
+        Self::run_any(&mut self.plans_u8, &mut self.stats, &spec, img)
     }
 
     /// Legacy surface at 16-bit depth.
     pub fn run_u16(&mut self, meta: &ArtifactMeta, img: &Image<u16>) -> Result<Image<u16>> {
         Self::check_shape(meta, img)?;
         let spec = self.spec_of(meta)?;
-        Self::run_any(&mut self.plans_u16, &spec, img)
+        Self::run_any(&mut self.plans_u16, &mut self.stats, &spec, img)
+    }
+}
+
+/// Execute a cached (canonical-key) plan for the *submitted* spec: a
+/// plan canonicalized to a different ROI position runs at the request's
+/// actual position ([`FilterPlan::run_at`]); everything else runs
+/// as resolved.
+fn exec_cached<P: MorphPixel>(
+    plan: &mut FilterPlan<P>,
+    spec: &FilterSpec,
+    img: &Image<P>,
+) -> Image<P> {
+    match spec.roi {
+        Some(roi) if plan.spec().roi != spec.roi => plan.run_owned_at(img, roi),
+        _ => plan.run_owned(img),
     }
 }
 
 impl Engine for NativeEngine {
     fn run_spec(&mut self, spec: &FilterSpec, img: &Image<u8>) -> Result<Image<u8>> {
-        Self::run_any(&mut self.plans_u8, spec, img)
+        Self::run_any(&mut self.plans_u8, &mut self.stats, spec, img)
     }
 
     fn run_spec_u16(&mut self, spec: &FilterSpec, img: &Image<u16>) -> Result<Image<u16>> {
-        Self::run_any(&mut self.plans_u16, spec, img)
+        Self::run_any(&mut self.plans_u16, &mut self.stats, spec, img)
     }
 
     fn backend_name(&self) -> &'static str {
@@ -307,6 +364,47 @@ mod tests {
         assert!(e.run_spec(&bad, &img).is_err());
         let oob = FilterSpec::new(FilterOp::Erode, 3, 3).with_roi(Roi::new(25, 25, 10, 10));
         assert!(e.run_spec(&oob, &img).is_err());
+    }
+
+    #[test]
+    fn interior_roi_sweep_resolves_exactly_one_plan() {
+        // the position-independence acceptance criterion: N same-shape
+        // interior ROIs over one image hit ONE cached plan
+        let mut e = NativeEngine::default();
+        let img = synth::noise(64, 72, 0x404);
+        let base = FilterSpec::new(FilterOp::TopHat, 5, 7); // halo (4, 6)
+        let full = crate::morphology::parallel::tophat_native(&img, 5, 7, &MorphConfig::default());
+        let positions = [(6, 4), (6, 30), (20, 19), (34, 40), (64 - 12 - 6, 72 - 16 - 4)];
+        for &(y, x) in &positions {
+            let spec = base.with_roi(Roi::new(y, x, 12, 16));
+            let got = e.run_spec(&spec, &img).unwrap();
+            let want = full.view().sub_rect(y, x, 12, 16).to_image();
+            assert!(got.same_pixels(&want), "roi at ({y},{x})");
+        }
+        assert_eq!(e.cached_plans(), 1, "one plan must serve every interior position");
+        let stats = e.plan_stats();
+        assert_eq!(stats.resolutions, 1);
+        assert_eq!(stats.hits, positions.len() as u64 - 1);
+        // an edge-clamped position resolves its own plan
+        let clamped = base.with_roi(Roi::new(0, 0, 12, 16));
+        let got = e.run_spec(&clamped, &img).unwrap();
+        assert!(got.same_pixels(&full.view().sub_rect(0, 0, 12, 16).to_image()));
+        assert_eq!(e.cached_plans(), 2);
+        assert_eq!(e.plan_stats().resolutions, 2);
+    }
+
+    #[test]
+    fn take_plan_stats_drains_counters() {
+        let mut e = NativeEngine::default();
+        let img = synth::noise(16, 16, 2);
+        let spec = FilterSpec::new(FilterOp::Erode, 3, 3);
+        let _ = e.run_spec(&spec, &img).unwrap();
+        let _ = e.run_spec(&spec, &img).unwrap();
+        let s = e.take_plan_stats();
+        assert_eq!(s, PlanStats { resolutions: 1, hits: 1 });
+        assert_eq!(e.plan_stats(), PlanStats::default());
+        let _ = e.run_spec(&spec, &img).unwrap();
+        assert_eq!(e.plan_stats().hits, 1, "cache itself survives the drain");
     }
 
     #[test]

@@ -12,6 +12,6 @@ pub mod engine;
 pub mod manifest;
 pub mod xla_rt;
 
-pub use engine::{Engine, NativeEngine};
+pub use engine::{Engine, NativeEngine, PlanStats};
 pub use manifest::{ArtifactMeta, Manifest};
 pub use xla_rt::XlaRuntime;

@@ -177,6 +177,7 @@ fn batching_stays_fair_when_bands_and_requests_contend_for_the_pool() {
             ..MorphConfig::default()
         },
         precompile: false,
+        max_bands_per_request: 0,
     })
     .unwrap();
     let img = Arc::new(synth::noise(120, 160, 0xFA17));

@@ -205,6 +205,55 @@ fn chains_match_manual_composition() {
 }
 
 #[test]
+fn one_plan_serves_every_interior_position() {
+    // the position-independence property against the non-plan oracle:
+    // ONE plan (resolved at the canonical anchor via canonical_for) +
+    // run_at reproduces crop(legacy(full), roi) at every interior
+    // position, across ops × borders × depths
+    let img8 = synth::noise(44, 50, 0x9D1);
+    let img16 = synth::noise_u16(44, 50, 0x9D2);
+    for border in [Border::Identity, Border::Replicate] {
+        let cfg = MorphConfig {
+            border,
+            parallelism: Parallelism::Sequential,
+            ..MorphConfig::default()
+        };
+        for op in [FilterOp::Erode, FilterOp::TopHat, FilterOp::Gradient] {
+            let base = FilterSpec::new(op, 5, 3).with_config(cfg);
+            let (hx, hy) = base.roi_halo();
+            let positions = [
+                (hy, hx),
+                (hy + 7, hx + 11),
+                (44 - 12 - hy, 50 - 14 - hx),
+            ];
+            // u8
+            let full = legacy(&img8, op, 5, 3, &cfg);
+            let canon = base
+                .with_roi(Roi::new(positions[0].0, positions[0].1, 12, 14))
+                .canonical_for(44, 50);
+            let mut plan = canon.plan::<u8>(44, 50).unwrap();
+            for &(y, x) in &positions {
+                let want = full.view().sub_rect(y, x, 12, 14).to_image();
+                let got = plan.run_owned_at(&img8, Roi::new(y, x, 12, 14));
+                assert!(
+                    got.same_pixels(&want),
+                    "u8 {op:?} {border:?} ({y},{x}): {:?}",
+                    got.first_diff(&want)
+                );
+            }
+            // u16
+            let full = legacy(&img16, op, 5, 3, &cfg);
+            let mut plan = canon.plan::<u16>(44, 50).unwrap();
+            for &(y, x) in &positions {
+                let want = full.view().sub_rect(y, x, 12, 14).to_image();
+                let got = plan.run_owned_at(&img16, Roi::new(y, x, 12, 14));
+                assert!(got.same_pixels(&want), "u16 {op:?} {border:?} ({y},{x})");
+            }
+        }
+    }
+}
+
+#[test]
 fn reused_plan_is_bit_stable_across_images() {
     let spec = FilterSpec::new(FilterOp::Gradient, 5, 5);
     let mut plan = spec.plan::<u8>(32, 40).unwrap();

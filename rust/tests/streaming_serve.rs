@@ -1,0 +1,260 @@
+//! Streaming-serving stress suite: [`SubmitStream`] must be
+//! **bit-identical** to per-ticket `submit` under concurrent mixed load,
+//! and the coordinator must shut down gracefully with streams in flight.
+//!
+//! The workload crosses producers × op chains × pixel depths × ROI
+//! positions (interior *and* edge-clamped) × configs — the mix a
+//! recognition-pipeline front end would generate — and every response
+//! is checked against an oracle computed through the fire-and-wait
+//! `submit` path on a separate coordinator (so the two submission paths
+//! are genuinely independent executions).  A second test pins the
+//! plan-economy claim end to end: an interior same-shape crop sweep
+//! across MANY positions resolves one plan per worker at most.
+//!
+//! [`SubmitStream`]: neon_morph::coordinator::SubmitStream
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use neon_morph::coordinator::request::{FilterOutput, ImagePayload};
+use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use neon_morph::image::{synth, Image};
+use neon_morph::morphology::{Border, FilterOp, FilterSpec, MorphConfig, Parallelism, Roi};
+
+const H: usize = 72;
+const W: usize = 84;
+
+fn native_coord(workers: usize, capacity: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers,
+        queue_capacity: capacity,
+        max_batch: 8,
+        backend: BackendChoice::NativeOnly,
+        artifact_dir: None,
+        morph: MorphConfig::default(),
+        precompile: false,
+        max_bands_per_request: 0,
+    })
+    .unwrap()
+}
+
+/// The mixed request stream: op chains, both depths, both borders,
+/// interior and edge-clamped ROIs, explicit parallelism.
+fn spec_of(i: usize) -> (FilterSpec, bool) {
+    let seq = MorphConfig {
+        parallelism: Parallelism::Sequential,
+        ..MorphConfig::default()
+    };
+    let repl = MorphConfig {
+        border: Border::Replicate,
+        ..MorphConfig::default()
+    };
+    match i % 7 {
+        0 => (FilterSpec::new(FilterOp::Erode, 7, 5), false),
+        1 => (FilterSpec::new(FilterOp::Gradient, 5, 5), true), // u16
+        2 => {
+            // interior crop sweep: tophat halo = (4, 4); positions vary
+            let y = 4 + (i * 5) % (H - 24 - 8);
+            let x = 4 + (i * 3) % (W - 30 - 8);
+            (
+                FilterSpec::new(FilterOp::TopHat, 5, 5).with_roi(Roi::new(y, x, 24, 30)),
+                false,
+            )
+        }
+        3 => (
+            // edge-clamped crop (its own plan family)
+            FilterSpec::new(FilterOp::Erode, 5, 5).with_roi(Roi::new(0, 0, 20, 20)),
+            false,
+        ),
+        4 => (
+            FilterSpec::new(FilterOp::Open, 3, 3)
+                .then(FilterOp::Gradient)
+                .with_config(seq),
+            false,
+        ),
+        5 => (FilterSpec::new(FilterOp::Close, 5, 7).with_config(repl), true),
+        _ => (FilterSpec::new(FilterOp::BlackHat, 3, 3), false),
+    }
+}
+
+fn payload(is_u16: bool, img8: &Arc<Image<u8>>, img16: &Arc<Image<u16>>) -> ImagePayload {
+    if is_u16 {
+        img16.clone().into()
+    } else {
+        img8.clone().into()
+    }
+}
+
+fn same_output(a: &FilterOutput, b: &FilterOutput) -> bool {
+    match (a, b) {
+        (FilterOutput::U8(x), FilterOutput::U8(y)) => x.same_pixels(y),
+        (FilterOutput::U16(x), FilterOutput::U16(y)) => x.same_pixels(y),
+        _ => false,
+    }
+}
+
+#[test]
+fn streamed_responses_are_bit_identical_to_submit() {
+    const PRODUCERS: usize = 4;
+    const PER_PRODUCER: usize = 35;
+    let img8 = Arc::new(synth::noise(H, W, 0x57A));
+    let img16 = Arc::new(synth::noise_u16(H, W, 0x57B));
+
+    // oracle coordinator: the fire-and-wait path, one spec each
+    let oracle_coord = native_coord(2, 64);
+    let mut oracles: HashMap<FilterSpec, FilterOutput> = HashMap::new();
+    for i in 0..PRODUCERS * PER_PRODUCER {
+        let (spec, is_u16) = spec_of(i);
+        oracles.entry(spec).or_insert_with(|| {
+            oracle_coord
+                .filter_spec(spec, payload(is_u16, &img8, &img16))
+                .unwrap()
+                .result
+                .unwrap()
+        });
+    }
+    oracle_coord.shutdown();
+
+    // streaming coordinator: concurrent producers, each its own stream
+    let coord = native_coord(3, PRODUCERS * PER_PRODUCER + 8);
+    let all: Vec<(FilterSpec, FilterOutput)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let coord = &coord;
+                let img8 = &img8;
+                let img16 = &img16;
+                scope.spawn(move || {
+                    let mut stream = coord.stream();
+                    let mut by_id = HashMap::new();
+                    for i in 0..PER_PRODUCER {
+                        let (spec, is_u16) = spec_of(p * PER_PRODUCER + i);
+                        let id = stream
+                            .send(spec, payload(is_u16, img8, img16))
+                            .expect("queue sized for the full load");
+                        by_id.insert(id, spec);
+                    }
+                    assert_eq!(stream.sent(), PER_PRODUCER as u64);
+                    assert_eq!(stream.shed(), 0);
+                    let out: Vec<_> = stream
+                        .drain()
+                        .into_iter()
+                        .map(|r| (by_id.remove(&r.id).expect("known id"), r.result.unwrap()))
+                        .collect();
+                    assert!(by_id.is_empty(), "every send must be answered once");
+                    assert_eq!(stream.in_flight(), 0);
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+
+    assert_eq!(all.len(), PRODUCERS * PER_PRODUCER);
+    for (spec, got) in &all {
+        let want = &oracles[spec];
+        assert!(
+            same_output(got, want),
+            "streamed result for {spec:?} differs from the submit oracle"
+        );
+    }
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, (PRODUCERS * PER_PRODUCER) as u64);
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.shed, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn interior_crop_sweep_streams_through_one_plan_per_worker() {
+    const WORKERS: usize = 2;
+    const SWEEP: usize = 40;
+    let coord = native_coord(WORKERS, SWEEP + 8);
+    let img = Arc::new(synth::noise(96, 96, 0xC0FE));
+    let base = FilterSpec::new(FilterOp::Erode, 7, 7); // halo (3, 3)
+    let full = neon_morph::morphology::erode(img.view(), 7, 7);
+    let mut stream = coord.stream();
+    let mut wants = HashMap::new();
+    for i in 0..SWEEP {
+        let y = 3 + (i * 7) % (96 - 32 - 6);
+        let x = 3 + (i * 11) % (96 - 32 - 6);
+        let id = stream
+            .send(base.with_roi(Roi::new(y, x, 32, 32)), img.clone())
+            .unwrap();
+        wants.insert(id, full.view().sub_rect(y, x, 32, 32).to_image());
+    }
+    for r in stream.drain() {
+        let got = r.result.unwrap().into_u8().unwrap();
+        assert!(got.same_pixels(&wants[&r.id]), "request {}", r.id);
+    }
+    drop(stream);
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, SWEEP as u64);
+    // each worker's cache resolves the canonical plan at most once —
+    // NOT once per position (the pre-redesign behaviour was one
+    // resolution per distinct offset)
+    assert!(
+        snap.plan_resolutions <= WORKERS as u64,
+        "{} resolutions for an interior sweep on {WORKERS} workers",
+        snap.plan_resolutions
+    );
+    assert_eq!(snap.plan_resolutions + snap.plan_hits, SWEEP as u64);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_mid_stream_is_graceful() {
+    // drop a stream with work still queued, then shut down: workers
+    // must drain the queue (discarding unreceivable replies) and join
+    let coord = native_coord(2, 256);
+    let img = Arc::new(synth::paper_image(0xD1E));
+    {
+        let mut stream = coord.stream();
+        for _ in 0..48 {
+            stream
+                .send(FilterSpec::new(FilterOp::Close, 9, 9), img.clone())
+                .unwrap();
+        }
+        // receive a few, abandon the rest mid-flight
+        for _ in 0..3 {
+            let r = stream.recv_timeout(std::time::Duration::from_secs(60));
+            assert!(r.is_some_and(|r| r.result.is_ok()));
+        }
+        assert!(stream.in_flight() > 0, "work must still be in flight");
+    } // stream (and its reply receiver) dropped here
+    coord.shutdown(); // must not hang or panic
+}
+
+#[test]
+fn stream_shed_requests_never_produce_responses() {
+    // overload a tiny queue: the stream must account every request as
+    // either answered or shed, with no response for shed ones
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_capacity: 2,
+        max_batch: 1,
+        backend: BackendChoice::NativeOnly,
+        artifact_dir: None,
+        morph: MorphConfig::default(),
+        precompile: false,
+        max_bands_per_request: 0,
+    })
+    .unwrap();
+    let img = Arc::new(synth::paper_image(7));
+    let mut stream = coord.stream();
+    let mut errors = 0u64;
+    for _ in 0..40 {
+        if stream
+            .send(FilterSpec::new(FilterOp::Open, 15, 15), img.clone())
+            .is_err()
+        {
+            errors += 1;
+        }
+    }
+    assert_eq!(stream.shed(), errors);
+    assert!(errors > 0, "the tiny queue must shed under this load");
+    let responses = stream.drain();
+    assert_eq!(responses.len() as u64, 40 - errors);
+    assert!(responses.iter().all(|r| r.result.is_ok()));
+    drop(stream);
+    coord.shutdown();
+}

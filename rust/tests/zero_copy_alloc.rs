@@ -17,10 +17,12 @@
 //!
 //! 1. banded passes are zero-copy (no staging slab / stitch),
 //! 2. a reused [`FilterPlan`]'s Nth run allocates **zero
-//!    intermediate-image bytes** — every intermediate lives in the
-//!    plan's scratch arena (the only per-run heap traffic is the cols
-//!    kernel's row-sized staging buffer, which every legacy path also
-//!    allocates), and
+//!    intermediate-image bytes** for EVERY method — since the
+//!    plan-owned-vHGW-scratch redesign this includes forced-vHGW specs,
+//!    whose image-sized `R` buffer (the algorithm's "2× extra memory")
+//!    now lives in the arena's per-band slots (the only per-run heap
+//!    traffic left is the cols linear kernel's row-sized staging
+//!    buffer, which every legacy path also allocates), and
 //! 3. the coordinator's typed `BatchKey` is built and compared without
 //!    any heap allocation (the pre-plan era formatted a `String` per
 //!    submit and per pull).
@@ -188,9 +190,13 @@ fn reused_plan_runs_allocate_no_intermediate_images() {
     const H: usize = 128;
     const W: usize = 512; // every intermediate image would be 64 KiB at u8
     let img = synth::noise(H, W, 0x9147);
-    // generous bound for the cols kernel's per-call row buffer(s) plus
-    // collection bookkeeping — one intermediate image is 8x larger
-    let slack = 8 * 1024u64;
+    // per-spec budget for row-sized per-call buffers (cols staging, the
+    // vHGW kernels' ident/suffix rows) plus banding bookkeeping (job
+    // boxes, scope latch, channel nodes) — an escaped intermediate
+    // image (64 KiB) or a per-call vHGW R buffer (≥ 68 KiB on this
+    // shape) blows any of them by ~an order of magnitude
+    let seq_slack = 8 * 1024u64;
+    let banded_slack = 24 * 1024u64;
 
     // (a) hybrid-small spec (rows+cols resolve to Linear, direct
     //     vertical): the plan's after_rows arena absorbs the rows→cols
@@ -198,6 +204,10 @@ fn reused_plan_runs_allocate_no_intermediate_images() {
     // (b) forced transpose sandwich: both w×h transpose buffers live in
     //     the arena too
     // (c) a derived chain (tophat = 3 steps, 3 slots + sub)
+    // (d) forced vHGW, sequential: the image-sized R buffer (~(H+2w)·W
+    //     B here, an order of magnitude over the budget) must come from
+    //     the arena's vHGW slots — the closed ROADMAP residual
+    // (e) forced vHGW, banded: one R slot per band, all arena-owned
     let sandwich_cfg = MorphConfig {
         method: PassMethod::Linear,
         vertical: VerticalStrategy::Transpose,
@@ -208,15 +218,32 @@ fn reused_plan_runs_allocate_no_intermediate_images() {
         parallelism: Parallelism::Sequential,
         ..MorphConfig::default()
     };
+    let vhgw_cfg = MorphConfig {
+        method: PassMethod::Vhgw,
+        parallelism: Parallelism::Sequential,
+        ..MorphConfig::default()
+    };
+    let vhgw_banded_cfg = MorphConfig {
+        method: PassMethod::Vhgw,
+        parallelism: Parallelism::Fixed(4),
+        ..MorphConfig::default()
+    };
     let specs = [
-        FilterSpec::new(FilterOp::Erode, 9, 9).with_config(seq_cfg),
-        FilterSpec::new(FilterOp::Dilate, 9, 9).with_config(sandwich_cfg),
-        FilterSpec::new(FilterOp::TopHat, 9, 9).with_config(seq_cfg),
+        (FilterSpec::new(FilterOp::Erode, 9, 9).with_config(seq_cfg), seq_slack),
+        (FilterSpec::new(FilterOp::Dilate, 9, 9).with_config(sandwich_cfg), seq_slack),
+        (FilterSpec::new(FilterOp::TopHat, 9, 9).with_config(seq_cfg), seq_slack),
+        (FilterSpec::new(FilterOp::Erode, 9, 9).with_config(vhgw_cfg), seq_slack),
+        (
+            FilterSpec::new(FilterOp::Erode, 9, 9).with_config(vhgw_banded_cfg),
+            banded_slack,
+        ),
     ];
-    for spec in specs {
+    for (spec, slack) in specs {
         let mut plan = spec.plan::<u8>(H, W).unwrap();
         let mut dst = Image::<u8>::zeros(H, W);
-        // first run may settle lazy state; the claim is about run N > 1
+        // first run may settle lazy state (incl. growing the arena's
+        // vHGW R slots to their high-water mark); the claim is about
+        // run N > 1
         plan.run(&img, dst.view_mut());
         let (bytes, ()) = allocated_during(|| plan.run(&img, dst.view_mut()));
         assert!(
