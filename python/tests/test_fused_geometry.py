@@ -1,0 +1,183 @@
+"""Independent verification of the fused multi-image band geometry used
+by ``rust/src/morphology/parallel.rs`` (``split_fused_bands``).
+
+A fused super-pass stacks a batch of ``n`` same-shape images into a
+virtual ``n*h``-row image and splits bands across the *fused* extent, so
+one fork-join serves the whole batch.  Correctness rests on two
+geometric invariants this file mirrors and checks against brute-force
+oracles:
+
+1. **Tiling**: the fused bands cover ``[0, n*h)`` contiguously, and each
+   band decomposes into per-image row segments that never cross an image
+   seam.
+2. **Seam fences**: each segment's halo is clamped to its *own* image
+   (``halo`` against ``h``, not ``n*h``), so a window reduction never
+   reads a neighboring image's rows — which is exactly why fused output
+   is bit-identical to running each image alone.
+
+Interior band cuts are aligned *image-locally* (``(cut % h) % align ==
+0``), matching the rust snap ``g - (g % h) % align``: a cut landing on a
+seam (``cut % h == 0``) is always legal regardless of alignment.
+"""
+
+import random
+
+# ---- mirrors of rust/src/morphology/parallel.rs fused geometry ----------
+
+
+def split_fused_bands(n, h, parts, align):
+    align = max(align, 1)
+    parts = max(parts, 1)
+    total = n * h
+    if total == 0:
+        return []
+    cuts = [0]
+    for i in range(1, parts):
+        g = i * total // parts
+        snapped = g - (g % h) % align
+        if snapped > cuts[-1]:
+            cuts.append(snapped)
+    cuts.append(total)
+    out = []
+    for a, b in zip(cuts, cuts[1:]):
+        band = []
+        pos = a
+        while pos < b:
+            img = pos // h
+            lo = pos - img * h
+            hi = min(b - img * h, h)
+            band.append((img, (lo, hi)))
+            pos = img * h + hi
+        out.append(band)
+    return out
+
+
+def halo(band, wing, length):
+    b0, b1 = band
+    return (max(0, b0 - wing), min(b1 + wing, length))
+
+
+# ---- oracle: per-image 1-D window reduction (identity padding) ----------
+
+
+def rows_pass(img, window, ident, comb):
+    wing = window // 2
+    h = len(img)
+    out = []
+    for y in range(h):
+        row = []
+        for x in range(len(img[0])):
+            acc = ident
+            for k in range(y - wing, y + wing + 1):
+                v = img[k][x] if 0 <= k < h else ident
+                acc = comb(acc, v)
+            row.append(acc)
+        out.append(row)
+    return out
+
+
+def fused_banded_rows_pass(imgs, window, ident, comb, bands, align=1):
+    """The rust fused strategy: for every per-image segment of every
+    fused band, halo against its OWN image and run the sequential pass
+    on the haloed slab."""
+    n, h = len(imgs), len(imgs[0])
+    outs = [[None] * h for _ in imgs]
+    wing = window // 2
+    for band in split_fused_bands(n, h, bands, align):
+        for img_idx, seg in band:
+            lo, hi = halo(seg, wing, h)  # seam fence: clamp to h, not n*h
+            slab = imgs[img_idx][lo:hi]
+            slab_out = rows_pass(slab, window, ident, comb)
+            for y in range(seg[0], seg[1]):
+                outs[img_idx][y] = slab_out[y - lo]
+    return outs
+
+
+# ---- structural tests ---------------------------------------------------
+
+
+def test_fused_bands_tile_the_fused_extent():
+    for n, h, parts, align in [
+        (5, 13, 3, 1),
+        (5, 13, 4, 8),
+        (2, 7, 9, 1),
+        (4, 1, 3, 1),   # 1-row images: every cut is a seam
+        (1, 20, 4, 16),
+        (8, 3, 5, 4),
+    ]:
+        plan = split_fused_bands(n, h, parts, align)
+        flat = [(i, seg) for band in plan for (i, seg) in band]
+        # contiguous cover of the fused [0, n*h) extent, in order
+        pos = 0
+        for img_idx, (lo, hi) in flat:
+            assert 0 <= lo < hi <= h
+            assert img_idx * h + lo == pos, "segments must tile the fused extent"
+            pos = img_idx * h + hi
+        assert pos == n * h
+        # no segment crosses a seam (by construction hi <= h), and each
+        # image's segments are contiguous from 0 to h
+        per_img = {}
+        for img_idx, seg in flat:
+            per_img.setdefault(img_idx, []).append(seg)
+        assert sorted(per_img) == list(range(n))
+        for segs in per_img.values():
+            assert segs[0][0] == 0 and segs[-1][1] == h
+            for (a0, a1), (b0, b1) in zip(segs, segs[1:]):
+                assert a1 == b0
+        # interior cuts are image-locally aligned OR on a seam
+        cuts = set()
+        pos = 0
+        for band in plan:
+            if pos != 0:
+                cuts.add(pos)
+            pos += sum(hi - lo for _, (lo, hi) in band)
+        for cut in cuts:
+            assert (cut % h) % align == 0, f"cut {cut} not image-locally aligned"
+
+
+def test_degenerate_shapes_are_empty():
+    assert split_fused_bands(0, 10, 3, 1) == []
+    assert split_fused_bands(3, 0, 3, 1) == []
+
+
+def test_single_band_is_the_whole_stack():
+    plan = split_fused_bands(3, 5, 1, 1)
+    assert len(plan) == 1
+    assert plan[0] == [(0, (0, 5)), (1, (0, 5)), (2, (0, 5))]
+
+
+# ---- the fence theorem --------------------------------------------------
+
+
+def test_fused_banding_matches_per_image_randomized():
+    rng = random.Random(0xF5ED)
+    for case in range(200):
+        n = rng.randint(1, 6)
+        h = rng.randint(1, 12)
+        w = rng.randint(1, 5)
+        window = rng.choice([1, 3, 5, 9])
+        bands = rng.randint(1, n * h + 3)
+        align = rng.choice([1, 2, 8])
+        imgs = [
+            [[rng.randint(0, 255) for _ in range(w)] for _ in range(h)]
+            for _ in range(n)
+        ]
+        for ident, comb in [(255, min), (0, max)]:
+            want = [rows_pass(img, window, ident, comb) for img in imgs]
+            got = fused_banded_rows_pass(imgs, window, ident, comb, bands, align)
+            assert got == want, (
+                f"case {case}: n={n} h={h} w={w} window={window} "
+                f"bands={bands} align={align} ident={ident} diverged"
+            )
+
+
+def test_one_row_images_never_leak_across_seams():
+    # h=1 with a tall window: the fence is all that separates neighbors.
+    # Without per-image clamping, image i's output would absorb rows of
+    # images i-1 / i+1; with it, each row reduces over itself only.
+    rng = random.Random(1)
+    imgs = [[[rng.randint(0, 255) for _ in range(4)]] for _ in range(8)]
+    for bands in (1, 3, 8, 11):
+        got = fused_banded_rows_pass(imgs, 9, 255, min, bands)
+        want = [rows_pass(img, 9, 255, min) for img in imgs]
+        assert got == want

@@ -20,7 +20,13 @@ CI perf baselines (``rust/benches/baselines/BENCH_*.json``):
   pure count of distinct canonical plan keys in the fixed
   ``bench_harness::serve`` request mix, mirroring the
   ``FilterSpec::canonical_for`` position-independence rule (interior
-  ROIs key by shape, so the crop sweep counts once).
+  ROIs key by shape, so the crop sweep counts once) — plus the
+  model-priced fused-batch throughput: the hot family's per-image mix
+  (erode 7x7 on 240x320, both passes Linear) priced either as ``n``
+  independent fork-joins or as ONE fork-join over the fused ``n*h``
+  extent (``FusedPlan``), at ``SERVE_FUSED_WORKERS`` workers.  Compute
+  is identical either way; the gated batch-64 ratio is pure
+  fork/band-overhead recovery.
 
 Counts are pure functions of the loop structure (no pixel data), so the
 mirror and the rust Counting backend must agree exactly; prices are the
@@ -69,6 +75,9 @@ LANES = 16
 SMOKE_WINDOWS = [3, 31, 61, 91]
 SCALING_WINDOW = 31
 MAX_WORKERS = 16
+# bench_harness::serve fused-batch headline constants — keep in sync.
+SERVE_FUSED_WORKERS = 4
+FUSED_BATCH_SIZES = [1, 8, 64]
 PAPER_WY0 = 69
 PAPER_WX0 = 59
 
@@ -476,18 +485,45 @@ def serve_baseline():
         keys.add(("dilate", 5, 5, "u16", None))
     requests = 4 * group
     resolutions = len(keys)
+    # fused-batch throughput, model-priced (serve::fused_model): the hot
+    # family's per-image mix is erode 7x7 on sh x sw — window 7 sits
+    # far below both hybrid crossovers (wy0=69, wx0=59), so the rust
+    # Counting run resolves to the two Linear passes exactly.
+    per_image = Mix()
+    per_image += rows_simd_linear(sh, sw, 7)
+    per_image += cols_simd_linear(sh, sw, 7)
+
+    def scaled(n):
+        total = Mix()
+        for _ in range(n):
+            total += per_image
+        return total
+
+    def fused_ns(n):
+        # ONE fork-join over the fused n*h-row extent
+        return parallel_price_ns(scaled(n), SERVE_FUSED_WORKERS)
+
+    def seq_ns(n):
+        # n independent fork-joins through the per-image plan
+        return n * parallel_price_ns(per_image, SERVE_FUSED_WORKERS)
+
+    headline = {
+        "requests": requests,
+        "plan_resolutions": resolutions,
+        "plan_hits": requests - resolutions,
+        "plan_resolutions_per_request": resolutions / requests,
+        "fused_speedup_batch64": seq_ns(64) / fused_ns(64),
+    }
+    for n in FUSED_BATCH_SIZES:
+        headline[f"images_per_sec_batch{n}"] = 1e9 * n / fused_ns(n)
     return {
         "bench": "serve",
         "workload": (
             f"streamed serve: 4 plan families x {group} reqs on {sh}x{sw} "
-            "(interior ROI sweep collapses to one plan), 1 worker"
+            "(interior ROI sweep collapses to one plan), 1 worker; "
+            f"fused-batch throughput modeled at {SERVE_FUSED_WORKERS} workers"
         ),
-        "headline": {
-            "requests": requests,
-            "plan_resolutions": resolutions,
-            "plan_hits": requests - resolutions,
-            "plan_resolutions_per_request": resolutions / requests,
-        },
+        "headline": headline,
     }
 
 

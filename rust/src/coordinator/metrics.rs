@@ -82,6 +82,12 @@ pub struct Metrics {
     pub plan_resolutions: AtomicU64,
     /// Native-engine plan-cache hits aggregated across workers.
     pub plan_hits: AtomicU64,
+    /// Batches served through a fused super-pass: one banded execution
+    /// spanning every image of a same-key batch
+    /// ([`crate::morphology::FusedPlan`]).
+    pub fused_batches: AtomicU64,
+    /// Requests inside those fused batches.
+    pub fused_requests: AtomicU64,
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub total_latency: Histogram,
@@ -102,6 +108,8 @@ impl Metrics {
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             plan_resolutions: self.plan_resolutions.load(Ordering::Relaxed),
             plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            fused_batches: self.fused_batches.load(Ordering::Relaxed),
+            fused_requests: self.fused_requests.load(Ordering::Relaxed),
             queue_p50_us: self.queue_latency.quantile_ns(0.5) as f64 / 1e3,
             queue_p99_us: self.queue_latency.quantile_ns(0.99) as f64 / 1e3,
             exec_p50_us: self.exec_latency.quantile_ns(0.5) as f64 / 1e3,
@@ -124,6 +132,8 @@ pub struct Snapshot {
     pub batched_requests: u64,
     pub plan_resolutions: u64,
     pub plan_hits: u64,
+    pub fused_batches: u64,
+    pub fused_requests: u64,
     pub queue_p50_us: f64,
     pub queue_p99_us: f64,
     pub exec_p50_us: f64,
@@ -160,6 +170,7 @@ impl std::fmt::Display for Snapshot {
         write!(
             f,
             "submitted={} completed={} failed={} shed={} batches={} (mean size {:.2}) \
+             fused batches/requests = {}/{} \
              plans resolved/hit = {}/{} ({:.4} resolutions/req) \
              queue p50/p99 = {:.0}/{:.0} µs, exec p50/p99 = {:.0}/{:.0} µs, \
              total mean/p50/p99 = {:.0}/{:.0}/{:.0} µs",
@@ -169,6 +180,8 @@ impl std::fmt::Display for Snapshot {
             self.shed,
             self.batches,
             self.mean_batch_size(),
+            self.fused_batches,
+            self.fused_requests,
             self.plan_resolutions,
             self.plan_hits,
             self.plan_resolutions_per_request(),

@@ -42,6 +42,19 @@
 //! ([`queue`]) bounds how long a pinned worker may ride one hot key
 //! while colder keys wait.
 //!
+//! ## Fused super-passes
+//!
+//! A pulled batch of **more than one** full-image, non-transpose,
+//! native-routed request is served as ONE fused execution
+//! ([`NativeEngine::run_spec_batch`] →
+//! [`crate::morphology::FusedPlan`]): the batch's images stack into a
+//! virtual `n·h × w` image, bands span image boundaries, and a single
+//! fork-join runs the whole batch — amortizing per-pass fork overhead
+//! that small images otherwise pay per request.  Outputs are
+//! bit-identical to per-image serving; [`metrics::Metrics`] counts
+//! `fused_batches` / `fused_requests`.  ROI or transpose specs, mixed
+//! shapes, XLA-routed batches and singletons keep the per-request path.
+//!
 //! The **router** picks per request: an artifact match on the XLA
 //! backend when available (single-op, no-ROI, u8 specs only — the only
 //! shapes the AOT pipeline lowers), native otherwise (or as directed by
@@ -509,6 +522,15 @@ fn worker_loop(
                     .batched_requests
                     .fetch_add(batch.len() as u64, Ordering::Relaxed);
                 affinity = batch.first().map(|p| p.req.batch_key());
+                // a same-key batch of full-image native-routed requests
+                // runs as ONE fused super-pass; everything else (below)
+                // serves per request
+                let batch = match try_serve_fused(
+                    wid, cfg, &manifest, &mut native, &xla, metrics, batch,
+                ) {
+                    Ok(()) => Vec::new(),
+                    Err(batch) => batch,
+                };
                 for p in batch {
                     let id = p.req.id;
                     let reply = p.reply.clone();
@@ -558,6 +580,155 @@ fn worker_loop(
             }
         }
     }
+}
+
+/// Serve a whole same-key batch through the native engine's fused
+/// super-pass ([`NativeEngine::run_spec_batch`]) when every request
+/// would route native anyway.  The queue guarantees one `BatchKey` per
+/// batch (same spec, shape and depth), so eligibility is a per-batch
+/// decision: more than one request, a full-image non-transpose spec,
+/// and no compiled-artifact route that could peel the batch onto the
+/// XLA backend.  Returns the batch untouched (`Err`) when ineligible
+/// and the caller serves it per request.
+///
+/// The fused run executes under the same [`capped_spec`] clamp as
+/// per-request serving; its one band fork is shared by every request in
+/// the batch, so per-request band pressure only drops relative to
+/// per-image serving.  Outputs stay bit-identical either way.  The
+/// super-pass execution time is attributed to requests in equal shares
+/// (`exec_ns = total / n`).
+fn try_serve_fused(
+    wid: usize,
+    cfg: &CoordinatorConfig,
+    manifest: &Option<Arc<Manifest>>,
+    native: &mut NativeEngine,
+    xla: &Option<XlaRuntime>,
+    metrics: &Metrics,
+    batch: Vec<Pending>,
+) -> std::result::Result<(), Vec<Pending>> {
+    if batch.len() < 2 {
+        return Err(batch);
+    }
+    let spec = batch[0].req.spec;
+    if spec.roi.is_some() || spec.is_transpose() || cfg.backend == BackendChoice::XlaOnly {
+        return Err(batch);
+    }
+    let (h, w) = (batch[0].req.image.height(), batch[0].req.image.width());
+    // under Auto an artifact match routes u8 requests to the XLA
+    // runtime — leave those batches to the per-request router
+    if let (ImagePayload::U8(_), Some(op)) = (&batch[0].req.image, spec.single_identity_op()) {
+        let has_artifact = xla.is_some()
+            && manifest
+                .as_ref()
+                .is_some_and(|m| m.find(op.name(), h, w, spec.w_x, spec.w_y).is_some());
+        if has_artifact {
+            return Err(batch);
+        }
+    }
+
+    let n = batch.len();
+    let native_spec = capped_spec(&spec, &batch[0].req.image, cfg.max_bands_per_request);
+    let queue_ns: Vec<u64> = batch
+        .iter()
+        .map(|p| p.req.enqueued.elapsed().as_nanos() as u64)
+        .collect();
+    let t = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| match &batch[0].req.image {
+        ImagePayload::U8(_) => {
+            let imgs: Vec<&Image<u8>> = batch
+                .iter()
+                .map(|p| match &p.req.image {
+                    ImagePayload::U8(im) => &**im,
+                    ImagePayload::U16(_) => unreachable!("batch keys include the dtype"),
+                })
+                .collect();
+            native.run_spec_batch(&native_spec, &imgs).map(|(outs, fused)| {
+                (outs.into_iter().map(FilterOutput::U8).collect::<Vec<_>>(), fused)
+            })
+        }
+        ImagePayload::U16(_) => {
+            let imgs: Vec<&Image<u16>> = batch
+                .iter()
+                .map(|p| match &p.req.image {
+                    ImagePayload::U16(im) => &**im,
+                    ImagePayload::U8(_) => unreachable!("batch keys include the dtype"),
+                })
+                .collect();
+            native.run_spec_batch_u16(&native_spec, &imgs).map(|(outs, fused)| {
+                (outs.into_iter().map(FilterOutput::U16).collect::<Vec<_>>(), fused)
+            })
+        }
+    }));
+    let exec_ns = t.elapsed().as_nanos() as u64 / n as u64;
+
+    match outcome {
+        Ok(Ok((outs, fused))) => {
+            if fused {
+                Metrics::inc(&metrics.fused_batches);
+                metrics.fused_requests.fetch_add(n as u64, Ordering::Relaxed);
+            }
+            for ((p, out), q_ns) in batch.into_iter().zip(outs).zip(queue_ns) {
+                metrics.queue_latency.record(q_ns);
+                metrics.exec_latency.record(exec_ns);
+                metrics.total_latency.record(q_ns + exec_ns);
+                Metrics::inc(&metrics.completed);
+                let _ = p.reply.send(FilterResponse {
+                    id: p.req.id,
+                    result: Ok(out),
+                    queue_ns: q_ns,
+                    exec_ns,
+                    backend: "native",
+                    worker: wid,
+                });
+            }
+        }
+        Ok(Err(e)) => {
+            // plan-time rejection (invalid spec): every request of the
+            // batch fails identically
+            let msg = format!("{e:#}");
+            for (p, q_ns) in batch.into_iter().zip(queue_ns) {
+                metrics.queue_latency.record(q_ns);
+                metrics.exec_latency.record(exec_ns);
+                metrics.total_latency.record(q_ns + exec_ns);
+                Metrics::inc(&metrics.failed);
+                let _ = p.reply.send(FilterResponse {
+                    id: p.req.id,
+                    result: Err(anyhow!("{msg}")),
+                    queue_ns: q_ns,
+                    exec_ns,
+                    backend: "native",
+                    worker: wid,
+                });
+            }
+        }
+        Err(_) => {
+            // panic mid-super-pass: the engine may hold half-updated
+            // state — drain its counters into the metrics (pre-panic
+            // requests stay accounted for), rebuild it, and fail every
+            // request of the batch
+            let stats = native.take_plan_stats();
+            metrics
+                .plan_resolutions
+                .fetch_add(stats.resolutions, Ordering::Relaxed);
+            metrics.plan_hits.fetch_add(stats.hits, Ordering::Relaxed);
+            *native = NativeEngine::new(cfg.morph);
+            for p in batch {
+                Metrics::inc(&metrics.failed);
+                let _ = p.reply.send(FilterResponse {
+                    id: p.req.id,
+                    result: Err(anyhow!(
+                        "worker {wid} panicked while serving request {}",
+                        p.req.id
+                    )),
+                    queue_ns: 0,
+                    exec_ns: 0,
+                    backend: "panic",
+                    worker: wid,
+                });
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Clamp a spec's intra-image parallelism to the coordinator's
@@ -1040,6 +1211,111 @@ mod tests {
         assert_eq!(snap.plan_resolutions, 1, "one plan must serve the sweep");
         assert_eq!(snap.plan_hits, 3);
         assert!((snap.plan_resolutions_per_request() - 0.25).abs() < 1e-12);
+        coord.shutdown();
+    }
+
+    fn pending_of(id: u64, spec: FilterSpec, img: &Arc<Image<u8>>) -> (Pending, mpsc::Receiver<FilterResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                req: request::FilterRequest {
+                    id,
+                    spec,
+                    image: ImagePayload::from(img.clone()),
+                    enqueued: Instant::now(),
+                },
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn fused_batch_serves_every_request_bit_identically() {
+        // deterministic fused-path test: hand try_serve_fused a batch
+        // directly instead of racing the queue's batch splits
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            backend: BackendChoice::NativeOnly,
+            artifact_dir: None,
+            ..CoordinatorConfig::default()
+        };
+        let mut native = NativeEngine::new(cfg.morph);
+        let metrics = Metrics::default();
+        let spec = FilterSpec::new(FilterOp::TopHat, 5, 3);
+        let imgs: Vec<Arc<Image<u8>>> =
+            (0..6).map(|i| Arc::new(synth::noise(24, 32, 0xF00 + i))).collect();
+        let mut rxs = Vec::new();
+        let batch: Vec<Pending> = imgs
+            .iter()
+            .enumerate()
+            .map(|(i, img)| {
+                let (p, rx) = pending_of(i as u64, spec, img);
+                rxs.push(rx);
+                p
+            })
+            .collect();
+        assert!(try_serve_fused(0, &cfg, &None, &mut native, &None, &metrics, batch).is_ok());
+        for (i, (img, rx)) in imgs.iter().zip(&rxs).enumerate() {
+            let r = rx.try_recv().expect("fused batch must answer every request");
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.backend, "native");
+            let got = r.result.unwrap().into_u8().unwrap();
+            let want =
+                morphology::parallel::tophat_native(img.view(), 5, 3, &MorphConfig::default());
+            assert!(got.same_pixels(&want), "request {i}");
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.completed, 6);
+        assert_eq!(snap.fused_batches, 1);
+        assert_eq!(snap.fused_requests, 6);
+        // ineligible batches come back untouched: singletons…
+        let (p, _rx) = pending_of(9, spec, &imgs[0]);
+        assert!(try_serve_fused(0, &cfg, &None, &mut native, &None, &metrics, vec![p]).is_err());
+        // …and ROI specs
+        let roi_spec = spec.with_roi(Roi::new(2, 2, 8, 8));
+        let batch: Vec<Pending> = (0..2)
+            .map(|i| pending_of(10 + i, roi_spec, &imgs[0]).0)
+            .collect();
+        assert!(try_serve_fused(0, &cfg, &None, &mut native, &None, &metrics, batch).is_err());
+        assert_eq!(metrics.snapshot().fused_batches, 1);
+    }
+
+    #[test]
+    fn fused_stream_keeps_split_independent_plan_counts() {
+        // end-to-end: however the queue splits a same-key stream into
+        // batches (fused or not), the family resolves exactly once
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            backend: BackendChoice::NativeOnly,
+            artifact_dir: None,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let spec = FilterSpec::new(FilterOp::Gradient, 5, 5);
+        let imgs: Vec<Arc<Image<u8>>> =
+            (0..8).map(|i| Arc::new(synth::noise(32, 40, 0xBEEF + i))).collect();
+        let mut stream = coord.stream();
+        let mut wants = std::collections::HashMap::new();
+        for img in &imgs {
+            let id = stream.send(spec, img.clone()).unwrap();
+            wants.insert(
+                id,
+                morphology::parallel::gradient_native(img.view(), 5, 5, &MorphConfig::default()),
+            );
+        }
+        for r in stream.drain() {
+            let got = r.result.unwrap().into_u8().unwrap();
+            assert!(got.same_pixels(&wants[&r.id]), "request {}", r.id);
+        }
+        drop(stream);
+        let snap = coord.metrics();
+        assert_eq!(snap.completed, 8);
+        assert_eq!(snap.plan_resolutions, 1, "one family, one resolution");
+        assert_eq!(snap.plan_hits, 7);
+        // fused counters are split-dependent (producer/worker race), but
+        // they can never disagree with each other
+        assert!(snap.fused_requests >= 2 * snap.fused_batches);
         coord.shutdown();
     }
 

@@ -84,6 +84,30 @@
 //! exactly once (hit-count asserted in `runtime::engine` tests and
 //! gated in CI via `BENCH_serve.json`).
 //!
+//! ### Fused batch execution
+//!
+//! A batch of `n` same-shape images under one spec runs as **one**
+//! banded execution:
+//! [`FilterSpec::plan_fused`](morphology::FilterSpec::plan_fused)
+//! resolves a [`morphology::FusedPlan`] whose
+//! [`run_batch`](morphology::FusedPlan::run_batch) treats the batch as
+//! a virtual `n·h`-row image — band cuts may land anywhere in the fused
+//! extent (snapped image-locally, so a seam cut is always legal), but
+//! every per-image row segment halos against its **own** image, never a
+//! neighbor's rows.  The result is bit-identical, image for image, to
+//! running the per-image [`morphology::FilterPlan`] `n` times
+//! (`rust/tests/fused_batch.rs`; geometry mirrored in
+//! `python/tests/test_fused_geometry.py`) while paying the fork-join
+//! and per-band overhead **once per pass instead of once per image** —
+//! pure overhead recovery that grows with the batch.  The fused arena
+//! is a high-water mark (`reserve(n)` grows, smaller batches reuse);
+//! full-image specs only — ROI and bare-transpose specs return
+//! [`PlanError`](morphology::PlanError) and are served per-image.  The
+//! coordinator routes every multi-request same-key batch through this
+//! path (`fused_batches`/`fused_requests` in
+//! [`coordinator::metrics::Snapshot`]), and `BENCH_serve.json` gates
+//! the modeled fused:sequential ratio at batch 64 ≥ 1.
+//!
 //! Every layer speaks specs: the coordinator's depth-erased
 //! [`coordinator::Coordinator::submit`]`(FilterSpec, ImagePayload)`
 //! groups requests by the typed
@@ -206,6 +230,6 @@ pub mod transpose;
 
 pub use image::{Image, ImageView, ImageViewMut};
 pub use morphology::{
-    Border, FilterOp, FilterPlan, FilterSpec, MorphOp, MorphPixel, OpChain, Parallelism,
-    PassMethod, PlanError, Roi, VerticalStrategy,
+    Border, FilterOp, FilterPlan, FilterSpec, FusedPlan, MorphOp, MorphPixel, OpChain,
+    Parallelism, PassMethod, PlanError, Roi, VerticalStrategy,
 };

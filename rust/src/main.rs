@@ -439,8 +439,10 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     let scaling_report = scaling::to_json(&scaling_sweep);
     // serving smoke: count-exact plan-cache headlines of a streamed
     // coordinator workload (1 worker — resolutions are deterministic)
+    // plus the model-priced fused-batch throughput
     let serve_smoke = serve::run_smoke()?;
-    let serve_report = serve::to_json(&serve_smoke);
+    let serve_fused = serve::fused_model(&model);
+    let serve_report = serve::to_json(&serve_smoke, &serve_fused);
 
     let reports = [
         ("BENCH_fig3.json", &fig3_report),
@@ -476,11 +478,22 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     print!("{}", scaling::render(&scaling_sweep).to_markdown());
     println!(
         "serve smoke: {} requests -> {} plan resolutions, {} hits \
-         ({:.4} resolutions/request)",
+         ({:.4} resolutions/request); {} fused batches / {} fused requests",
         serve_smoke.requests,
         serve_smoke.plan_resolutions,
         serve_smoke.plan_hits,
-        serve_smoke.plan_resolutions as f64 / serve_smoke.requests as f64
+        serve_smoke.plan_resolutions as f64 / serve_smoke.requests as f64,
+        serve_smoke.fused_batches,
+        serve_smoke.fused_requests,
+    );
+    println!(
+        "fused-batch model ({} workers): {:.0}/{:.0}/{:.0} images/s at batch 1/8/64, \
+         x{:.2} fused:sequential at 64",
+        serve::SERVE_FUSED_WORKERS,
+        serve_fused.images_per_sec[0],
+        serve_fused.images_per_sec[1],
+        serve_fused.images_per_sec[2],
+        serve_fused.speedup_at_64,
     );
 
     if args.flag("update-baselines") {

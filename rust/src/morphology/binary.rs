@@ -6,8 +6,18 @@
 //! gray erosion/dilation specialize to set erosion/dilation, so the fast
 //! §5.3 hybrid machinery is reused unchanged; this module adds the
 //! binarization boundary and the common binary compositions.
+//!
+//! The compositions ([`open_binary`], [`close_binary`], [`boundary`])
+//! run through one-shot [`FilterSpec`] plans — the same plan layer that
+//! serves every other multi-step pipeline, with its arena-owned
+//! intermediates — instead of hand-chaining backend calls (the historic
+//! plan bypass).  Outputs are bit-identical to the composed calls; the
+//! single-step wrappers ([`erode_binary`], [`dilate_binary`]) stay
+//! backend-generic so counting backends can still price them.
+//! Thresholding ([`threshold`], [`otsu_threshold`]) remains a pre-step
+//! outside the plan.
 
-use super::{morphology, MorphConfig, MorphOp};
+use super::{morphology, FilterOp, FilterSpec, MorphConfig, MorphOp};
 use crate::image::{Image, ImageView};
 use crate::neon::Backend;
 
@@ -96,40 +106,48 @@ pub fn dilate_binary<'a, B: Backend>(
     morphology(b, src, MorphOp::Dilate, w_x, w_y, cfg)
 }
 
+/// Run a binary composition as a one-shot [`FilterSpec`] plan.
+fn run_composition(src: ImageView<'_, u8>, op: FilterOp, w_x: usize, w_y: usize, cfg: &MorphConfig) -> Image<u8> {
+    debug_assert!(is_binary(src), "{op:?} composition expects a 0/255 image");
+    FilterSpec::new(op, w_x, w_y)
+        .with_config(*cfg)
+        .run_once(src)
+        .unwrap_or_else(|e| panic!("binary {op:?} composition: {e}"))
+}
+
 /// Remove foreground components thinner than the SE (binary opening).
-pub fn open_binary<'a, B: Backend>(
-    b: &mut B,
+/// One [`FilterSpec`] plan (erode → dilate, arena-owned intermediate).
+pub fn open_binary<'a>(
     src: impl Into<ImageView<'a, u8>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<u8> {
-    let e = erode_binary(b, src, w_x, w_y, cfg);
-    dilate_binary(b, &e, w_x, w_y, cfg)
+    run_composition(src.into(), FilterOp::Open, w_x, w_y, cfg)
 }
 
-/// Fill background gaps thinner than the SE (binary closing).
-pub fn close_binary<'a, B: Backend>(
-    b: &mut B,
+/// Fill background gaps thinner than the SE (binary closing).  One
+/// [`FilterSpec`] plan (dilate → erode, arena-owned intermediate).
+pub fn close_binary<'a>(
     src: impl Into<ImageView<'a, u8>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<u8> {
-    let d = dilate_binary(b, src, w_x, w_y, cfg);
-    erode_binary(b, &d, w_x, w_y, cfg)
+    run_composition(src.into(), FilterOp::Close, w_x, w_y, cfg)
 }
 
-/// Boundary extraction: src − erosion (one-SE-thick outline).
-pub fn boundary<'a, B: Backend>(
-    b: &mut B,
+/// Boundary extraction: src − erosion (one-SE-thick outline).  The
+/// erosion runs as a one-shot [`FilterSpec`] plan; the subtraction has
+/// no single [`FilterOp`], so it stays a pixelwise post-step.
+pub fn boundary<'a>(
     src: impl Into<ImageView<'a, u8>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
 ) -> Image<u8> {
     let src = src.into();
-    let e = erode_binary(b, src, w_x, w_y, cfg);
+    let e = run_composition(src, FilterOp::Erode, w_x, w_y, cfg);
     Image::from_fn(src.height(), src.width(), |y, x| {
         src.get(y, x).saturating_sub(e.get(y, x))
     })
@@ -207,7 +225,7 @@ mod tests {
         for x in 7..12 {
             img.set(5, x, FG); // the bridge
         }
-        let opened = open_binary(&mut Native, &img, 3, 3, &cfg());
+        let opened = open_binary(&img, 3, 3, &cfg());
         assert_eq!(opened.get(5, 9), 0, "bridge must be cut");
         assert_eq!(opened.get(5, 4), FG, "left blob survives");
         assert_eq!(opened.get(5, 14), FG, "right blob survives");
@@ -217,17 +235,37 @@ mod tests {
     fn closing_fills_small_hole() {
         let mut img = square(20, 4, 4, 10);
         img.set(8, 8, 0); // pinhole
-        let closed = close_binary(&mut Native, &img, 3, 3, &cfg());
+        let closed = close_binary(&img, 3, 3, &cfg());
         assert_eq!(closed.get(8, 8), FG);
     }
 
     #[test]
     fn boundary_is_one_pixel_ring() {
         let img = square(21, 5, 5, 9);
-        let ring = boundary(&mut Native, &img, 3, 3, &cfg());
+        let ring = boundary(&img, 3, 3, &cfg());
         assert_eq!(ring.get(5, 5), FG); // corner on the ring
         assert_eq!(ring.get(9, 9), 0); // interior removed
         assert_eq!(ring.get(0, 0), 0); // background stays empty
+    }
+
+    #[test]
+    fn plan_routed_compositions_match_hand_chained_calls() {
+        // the closed plan bypass: one-shot FilterSpec plans must be
+        // bit-identical to composing the backend-generic single steps
+        let page = synth::document(60, 80, 4);
+        let bin = threshold(&page, otsu_threshold(&page));
+        for (wx, wy) in [(3usize, 3usize), (5, 3), (3, 7)] {
+            let e = erode_binary(&mut Native, &bin, wx, wy, &cfg());
+            let d = dilate_binary(&mut Native, &bin, wx, wy, &cfg());
+            let open_want = dilate_binary(&mut Native, &e, wx, wy, &cfg());
+            let close_want = erode_binary(&mut Native, &d, wx, wy, &cfg());
+            assert!(open_binary(&bin, wx, wy, &cfg()).same_pixels(&open_want), "open {wx}x{wy}");
+            assert!(close_binary(&bin, wx, wy, &cfg()).same_pixels(&close_want), "close {wx}x{wy}");
+            let ring_want = Image::from_fn(bin.height(), bin.width(), |y, x| {
+                bin.get(y, x).saturating_sub(e.get(y, x))
+            });
+            assert!(boundary(&bin, wx, wy, &cfg()).same_pixels(&ring_want), "boundary {wx}x{wy}");
+        }
     }
 
     #[test]
@@ -235,7 +273,7 @@ mod tests {
         let page = synth::document(120, 160, 9);
         let t = otsu_threshold(&page);
         let bin = threshold(&page, t);
-        let cleaned = close_binary(&mut Native, &bin, 3, 3, &cfg());
+        let cleaned = close_binary(&bin, 3, 3, &cfg());
         assert!(is_binary(&cleaned));
         // structure preserved: still has both classes
         let (mn, mx) = cleaned.min_max().unwrap();

@@ -297,18 +297,25 @@ pub fn cols_simd_linear<'a, P: MorphPixel, B: Backend>(
         return src.to_image();
     }
     let mut dst = Image::zeros(h, w);
-    cols_simd_linear_into(b, src, dst.view_mut(), window, op);
+    cols_simd_linear_into(b, src, dst.view_mut(), window, op, &mut Vec::new());
     dst
 }
 
 /// [`cols_simd_linear`] writing directly into `dst` (same shape as
 /// `src`; rows are independent, so there is no row offset).
+///
+/// `scratch` holds the identity-padded staging row (grown on first use,
+/// reused verbatim after — every cell is rewritten per row, so a
+/// retained slot is stale-safe).  Callers that keep the slot alive
+/// (plan arenas, band-job slots) make the pass allocation-free on
+/// reuse; one-shot callers pass a fresh `Vec`.
 pub fn cols_simd_linear_into<P: MorphPixel, B: Backend>(
     b: &mut B,
     src: ImageView<'_, P>,
     mut dst: ImageViewMut<'_, P>,
     window: usize,
     op: MorphOp,
+    scratch: &mut Vec<P>,
 ) {
     let wing = wing_of(window, "w_x");
     let (h, w) = (src.height(), src.width());
@@ -325,7 +332,11 @@ pub fn cols_simd_linear_into<P: MorphPixel, B: Backend>(
     let wv = w - w % P::LANES;
     let ident: P = op.identity();
     // padded row buffer: buf[j] = src[y][j - wing], identity outside
-    let mut buf = vec![ident; w + 2 * wing + P::LANES];
+    let need = w + 2 * wing + P::LANES;
+    if scratch.len() < need {
+        scratch.resize(need, ident);
+    }
+    let buf = &mut scratch[..need];
 
     for y in 0..h {
         buf[..wing].fill(ident);

@@ -77,7 +77,7 @@ use crate::neon::{Backend, U16x8, U8x16};
 pub use derived::{blackhat, closing, gradient, opening, tophat};
 pub use hybrid::{HybridThresholds, PAPER_WX0, PAPER_WY0};
 pub use parallel::{filter_native, filter_roi, BandPool};
-pub use plan::{FilterOp, FilterPlan, FilterSpec, OpChain, PlanError, MAX_CHAIN};
+pub use plan::{FilterOp, FilterPlan, FilterSpec, FusedPlan, OpChain, PlanError, MAX_CHAIN};
 pub use separable::{dilate, dilate_roi, erode, erode_roi, morphology};
 
 /// A pixel depth the morphology stack can filter: scalar + SIMD min/max,

@@ -84,6 +84,24 @@
 //! [`super::MorphConfig`] overrides the policy (`Sequential`, `Fixed`,
 //! `Auto`).
 //!
+//! ## Fused multi-image super-passes
+//!
+//! Small-image batches pay the fork cost per image under per-image
+//! banding — exactly the document-recognition workload (many small
+//! crops) the paper targets.  The fused executors
+//! ([`pass_rows_fused_into`] / [`pass_cols_direct_fused_into`]) treat a
+//! batch of `n` same-shape images as one **fused virtual image** of
+//! `n × h` rows: [`split_fused_bands`] cuts the fused extent into
+//! bands that may span image boundaries, each band job walks its
+//! per-image segments, and ONE fork-join covers the whole batch.  The
+//! **seam-fence invariant** keeps the result bit-identical to per-image
+//! execution: a band carries an image seam only as a segment boundary —
+//! every segment is haloed against its *own* image's rows (clamped at
+//! that image's edges), so no reduction window ever reads across a
+//! seam.  Pinned against the per-image path in
+//! `rust/tests/fused_batch.rs` and mirrored in
+//! `python/tests/test_fused_geometry.py`.
+//!
 //! ## Region of interest
 //!
 //! [`filter_roi`] composes the same view machinery in 2-D: it filters
@@ -601,6 +619,233 @@ pub fn pass_cols_direct_banded_into<P: MorphPixel>(
     pool.scope(jobs);
 }
 
+// ---------------------------------------------------------------------------
+// fused multi-image super-passes (bands span image boundaries)
+// ---------------------------------------------------------------------------
+
+/// One band of a fused multi-image pass: the per-image row segments
+/// `(image index, local rows)` a single band job covers, in fused-row
+/// order (image `i` contributes fused rows `[i·h, (i+1)·h)`).
+pub type FusedBand = Vec<(usize, Range<usize>)>;
+
+/// Split the fused extent of `n` stacked `h`-row images into at most
+/// `parts` bands of contiguous *fused* rows, decomposed into per-image
+/// segments.  Interior cut points are snapped down to a multiple of
+/// `align` **within the image they fall in** — image seams (`i·h`) are
+/// always legal cuts, so per-image segment boundaries have exactly the
+/// geometry [`split_bands_aligned`] would produce for some band count
+/// of that image.  That is the seam-fence invariant: a band never
+/// *merges* rows across a seam into one kernel call; it carries the
+/// seam as a segment boundary, and each segment is haloed against its
+/// own image only.
+pub fn split_fused_bands(n: usize, h: usize, parts: usize, align: usize) -> Vec<FusedBand> {
+    let align = align.max(1);
+    let parts = parts.max(1);
+    let total = n * h;
+    if total == 0 {
+        return Vec::new();
+    }
+    let mut cuts = vec![0usize];
+    for i in 1..parts {
+        let g = i * total / parts;
+        // snap within the image the cut lands in (g % h is the local
+        // offset); a snapped cut never crosses its image's seam
+        let snapped = g - (g % h) % align;
+        if snapped > *cuts.last().unwrap() {
+            cuts.push(snapped);
+        }
+    }
+    cuts.push(total);
+    let mut out = Vec::with_capacity(cuts.len() - 1);
+    for pair in cuts.windows(2) {
+        let (a, b) = (pair[0], pair[1]);
+        let mut band = FusedBand::new();
+        let mut pos = a;
+        while pos < b {
+            let img = pos / h;
+            let lo = pos - img * h;
+            let hi = (b - img * h).min(h);
+            band.push((img, lo..hi));
+            pos = img * h + hi;
+        }
+        out.push(band);
+    }
+    out
+}
+
+/// Shared skeleton of the fused passes: build the fused band plan over
+/// the `n × h`-row virtual image, split every destination into its
+/// per-band chunks, and run ONE fork-join where each band job walks its
+/// per-image segments through `kernel` (haloed borrowed source view,
+/// disjoint destination chunk, halo skip, per-band scratch slot).
+#[allow(clippy::too_many_arguments)]
+fn fused_pass_into<P: MorphPixel, K>(
+    pool: &BandPool,
+    srcs: &[ImageView<'_, P>],
+    dsts: Vec<ImageViewMut<'_, P>>,
+    window: usize,
+    wing: usize,
+    bands: usize,
+    align: usize,
+    scratch: &mut Vec<Vec<P>>,
+    kernel: K,
+) where
+    K: Fn(ImageView<'_, P>, ImageViewMut<'_, P>, usize, &mut Vec<P>) + Copy + Send,
+{
+    let n = srcs.len();
+    assert_eq!(n, dsts.len(), "fused batch: src/dst counts differ");
+    if n == 0 {
+        return;
+    }
+    let (h, w) = (srcs[0].height(), srcs[0].width());
+    for (s, d) in srcs.iter().zip(&dsts) {
+        assert_eq!((s.height(), s.width()), (h, w), "fused batch must share one shape");
+        assert_eq!((d.height(), d.width()), (h, w), "fused batch must share one shape");
+    }
+    if h == 0 || w == 0 {
+        return;
+    }
+    if window == 1 {
+        for (s, mut d) in srcs.iter().zip(dsts) {
+            d.copy_rows_from(*s, 0);
+        }
+        return;
+    }
+    let plan = split_fused_bands(n, h, bands, align);
+    // each image's segments appear in increasing row order across the
+    // (ordered) bands and tile [0, h) contiguously, so one
+    // `split_rows_mut` per destination yields every band chunk
+    let mut per_img: Vec<Vec<Range<usize>>> = vec![Vec::new(); n];
+    for band in &plan {
+        for (img, rows) in band {
+            per_img[*img].push(rows.clone());
+        }
+    }
+    let mut chunk_queues: Vec<std::collections::VecDeque<ImageViewMut<'_, P>>> = dsts
+        .into_iter()
+        .zip(&per_img)
+        .map(|(d, rows)| d.split_rows_mut(rows).into())
+        .collect();
+    let slots = scratch_slots(scratch, plan.len().max(1));
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
+    for (band, slot) in plan.iter().zip(slots.iter_mut()) {
+        // seam fence: every segment is haloed against its OWN image's
+        // rows, clamped at [0, h) — a window never reads across a seam
+        let segs: Vec<(ImageView<'_, P>, ImageViewMut<'_, P>, usize)> = band
+            .iter()
+            .map(|(img, rows)| {
+                let input = halo(rows, wing, h);
+                let skip = rows.start - input.start;
+                let chunk = chunk_queues[*img].pop_front().expect("band order");
+                (srcs[*img].sub_rows(input), chunk, skip)
+            })
+            .collect();
+        jobs.push(Box::new(move || {
+            for (sv, chunk, skip) in segs {
+                kernel(sv, chunk, skip, slot);
+            }
+        }));
+    }
+    pool.scope(jobs);
+}
+
+/// Rows-window pass over a **fused batch** of same-shape images: one
+/// band plan spans the whole `n × h`-row stack ([`split_fused_bands`]),
+/// one fork-join executes it, and per-image halo fences keep every
+/// output bit-identical to running [`pass_rows_banded_into`] (or the
+/// sequential kernel) per image.  `scratch` holds one slot per fused
+/// band, arena-retained exactly like the per-image executors.
+#[allow(clippy::too_many_arguments)]
+pub fn pass_rows_fused_into<P: MorphPixel>(
+    pool: &BandPool,
+    srcs: &[ImageView<'_, P>],
+    dsts: Vec<ImageViewMut<'_, P>>,
+    window: usize,
+    op: MorphOp,
+    method: PassMethod,
+    simd: bool,
+    thresholds: HybridThresholds,
+    bands: usize,
+    align: usize,
+    scratch: &mut Vec<Vec<P>>,
+) {
+    let wing = window / 2;
+    fused_pass_into(
+        pool,
+        srcs,
+        dsts,
+        window,
+        wing,
+        bands,
+        align,
+        scratch,
+        move |sv, chunk, skip, slot| {
+            separable::pass_rows_into(
+                &mut Native,
+                sv,
+                chunk,
+                skip,
+                window,
+                op,
+                method,
+                simd,
+                thresholds,
+                slot,
+            );
+        },
+    );
+}
+
+/// Direct (non-sandwich) cols-window pass over a fused batch — zero
+/// halo, segments never read outside their own image by construction.
+/// Callers must have excluded the §5.2.1 sandwich case
+/// ([`separable::takes_sandwich`]); the fused sandwich is banded over
+/// the transposed stack instead (see [`super::plan::FusedPlan`]).
+#[allow(clippy::too_many_arguments)]
+pub fn pass_cols_direct_fused_into<P: MorphPixel>(
+    pool: &BandPool,
+    srcs: &[ImageView<'_, P>],
+    dsts: Vec<ImageViewMut<'_, P>>,
+    window: usize,
+    op: MorphOp,
+    method: PassMethod,
+    simd: bool,
+    vertical: VerticalStrategy,
+    thresholds: HybridThresholds,
+    bands: usize,
+    scratch: &mut Vec<Vec<P>>,
+) {
+    let m = resolve_method(method, window, thresholds.wx0);
+    debug_assert!(
+        !separable::takes_sandwich(m, simd, vertical),
+        "sandwich configurations are fused over the transposed stack"
+    );
+    fused_pass_into(
+        pool,
+        srcs,
+        dsts,
+        window,
+        0,
+        bands,
+        1,
+        scratch,
+        move |sv, chunk, _skip, slot| {
+            separable::pass_cols_direct_into(
+                &mut Native,
+                sv,
+                chunk,
+                window,
+                op,
+                m,
+                simd,
+                vertical,
+                thresholds,
+                slot,
+            );
+        },
+    );
+}
+
 /// Full separable 2-D morphology with both passes band-sharded into
 /// `bands` bands.  Bit-identical to [`separable::morphology`].
 pub fn morphology_banded<'a, P: MorphPixel>(
@@ -859,6 +1104,142 @@ mod tests {
         let tiny = split_bands_aligned(10, 4, 16);
         assert_eq!(tiny.len(), 1);
         assert_eq!(tiny[0], 0..10);
+    }
+
+    #[test]
+    fn fused_bands_cover_tile_and_fence_seams() {
+        for &(n, h, parts, align) in &[
+            (1usize, 10usize, 3usize, 1usize),
+            (4, 10, 3, 1),
+            (4, 1, 3, 1), // degenerate 1-row images
+            (8, 7, 5, 16),
+            (3, 33, 4, 16),
+            (64, 5, 8, 1),
+            (2, 100, 1, 1),
+        ] {
+            let plan = split_fused_bands(n, h, parts, align);
+            assert!(plan.len() <= parts.max(1));
+            // fused coverage: concatenated segments tile [0, n*h)
+            let mut pos = 0usize;
+            for band in &plan {
+                assert!(!band.is_empty());
+                for (img, rows) in band {
+                    assert!(!rows.is_empty());
+                    assert!(rows.end <= h);
+                    assert_eq!(img * h + rows.start, pos, "segments must tile the fused extent");
+                    pos = img * h + rows.end;
+                }
+            }
+            assert_eq!(pos, n * h);
+            // seam fence: no segment crosses an image boundary, and
+            // interior cuts are align-multiples within their image
+            let mut per_img: Vec<Vec<Range<usize>>> = vec![Vec::new(); n];
+            for band in &plan {
+                for (img, rows) in band {
+                    per_img[*img].push(rows.clone());
+                }
+            }
+            for rows in &per_img {
+                assert_eq!(rows.first().unwrap().start, 0);
+                assert_eq!(rows.last().unwrap().end, h);
+                for pair in rows.windows(2) {
+                    assert_eq!(pair[0].end, pair[1].start);
+                    assert_eq!(pair[0].end % align, 0, "interior cut must be image-locally aligned");
+                }
+            }
+        }
+        assert!(split_fused_bands(0, 10, 4, 1).is_empty());
+        assert!(split_fused_bands(4, 0, 4, 1).is_empty());
+    }
+
+    #[test]
+    fn fused_rows_pass_matches_per_image_bitwise() {
+        let pool = BandPool::new(4);
+        let th = HybridThresholds::paper();
+        let imgs: Vec<Image<u8>> = (0..5).map(|i| synth::noise(13, 21, 0xF00D + i)).collect();
+        for &window in &[3, 9] {
+            for &bands in &[1, 3, 7] {
+                let want: Vec<Image<u8>> = imgs
+                    .iter()
+                    .map(|im| {
+                        separable::pass_rows(
+                            &mut Native,
+                            im,
+                            window,
+                            MorphOp::Erode,
+                            PassMethod::Linear,
+                            true,
+                            th,
+                        )
+                    })
+                    .collect();
+                let mut out: Vec<Image<u8>> = imgs.iter().map(|_| Image::zeros(13, 21)).collect();
+                let srcs: Vec<ImageView<'_, u8>> = imgs.iter().map(|im| im.view()).collect();
+                let dsts: Vec<ImageViewMut<'_, u8>> =
+                    out.iter_mut().map(|im| im.view_mut()).collect();
+                pass_rows_fused_into(
+                    &pool,
+                    &srcs,
+                    dsts,
+                    window,
+                    MorphOp::Erode,
+                    PassMethod::Linear,
+                    true,
+                    th,
+                    bands,
+                    1,
+                    &mut Vec::new(),
+                );
+                for (got, want) in out.iter().zip(&want) {
+                    assert!(
+                        got.same_pixels(want),
+                        "w={window} bands={bands}: {:?}",
+                        got.first_diff(want)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_cols_pass_matches_per_image_bitwise() {
+        let pool = BandPool::new(3);
+        let th = HybridThresholds::paper();
+        let imgs: Vec<Image<u8>> = (0..4).map(|i| synth::noise(9, 30, 0xCAFE + i)).collect();
+        let want: Vec<Image<u8>> = imgs
+            .iter()
+            .map(|im| {
+                separable::pass_cols(
+                    &mut Native,
+                    im,
+                    7,
+                    MorphOp::Dilate,
+                    PassMethod::Linear,
+                    true,
+                    VerticalStrategy::Direct,
+                    th,
+                )
+            })
+            .collect();
+        let mut out: Vec<Image<u8>> = imgs.iter().map(|_| Image::zeros(9, 30)).collect();
+        let srcs: Vec<ImageView<'_, u8>> = imgs.iter().map(|im| im.view()).collect();
+        let dsts: Vec<ImageViewMut<'_, u8>> = out.iter_mut().map(|im| im.view_mut()).collect();
+        pass_cols_direct_fused_into(
+            &pool,
+            &srcs,
+            dsts,
+            7,
+            MorphOp::Dilate,
+            PassMethod::Linear,
+            true,
+            VerticalStrategy::Direct,
+            th,
+            5,
+            &mut Vec::new(),
+        );
+        for (got, want) in out.iter().zip(&want) {
+            assert!(got.same_pixels(want), "{:?}", got.first_diff(want));
+        }
     }
 
     #[test]

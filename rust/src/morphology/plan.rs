@@ -28,10 +28,11 @@
 //!
 //! [`FilterPlan::run`] / [`FilterPlan::run_owned`] then execute the
 //! resolved steps with the zero-copy `_into` kernels, reusing the arena
-//! on every call: after the first run, a reused plan allocates **no
-//! intermediate-image bytes** for *any* method, vHGW included (pinned
-//! by `rust/tests/zero_copy_alloc.rs`; the only per-call heap traffic
-//! left is the cols linear kernel's row-sized staging buffer).
+//! on every call: after the first run, a reused plan allocates **zero
+//! per-call heap bytes** for *any* method — vHGW's image-sized `R`
+//! buffer and the cols linear kernel's row-sized staging buffer both
+//! live in the arena's per-band scratch slots (pinned by
+//! `rust/tests/zero_copy_alloc.rs`).
 //!
 //! ## Position independence
 //!
@@ -454,6 +455,21 @@ impl FilterSpec {
     /// method/strategy/banding resolution + scratch-arena allocation.
     pub fn plan<P: MorphPixel>(&self, h: usize, w: usize) -> Result<FilterPlan<P>, PlanError> {
         FilterPlan::build(*self, h, w)
+    }
+
+    /// Resolve the spec against a pixel depth, a per-image shape and an
+    /// initial batch capacity into a [`FusedPlan`] — ONE banded
+    /// execution over a whole same-spec, same-shape batch (bands span
+    /// image boundaries behind per-image halo fences).  Full-image
+    /// specs only: a ROI or transpose spec is rejected (those batches
+    /// run per image).
+    pub fn plan_fused<P: MorphPixel>(
+        &self,
+        h: usize,
+        w: usize,
+        n: usize,
+    ) -> Result<FusedPlan<P>, PlanError> {
+        FusedPlan::build(*self, h, w, n)
     }
 
     /// Convenience: plan and run once (native speed).
@@ -1392,6 +1408,520 @@ fn run_cols_pass<P: MorphPixel>(
             cfg.vertical,
             cfg.thresholds,
             &mut vhgw[0],
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fused batch plans (one banded execution across a same-key batch)
+// ---------------------------------------------------------------------------
+
+/// A [`FilterSpec`] resolved for **fused batch execution**: a batch of
+/// `n` same-shape images runs as ONE banded execution per pass — bands
+/// span image boundaries over the fused `n × h`-row virtual image
+/// ([`parallel::split_fused_bands`]), one fork-join covers the whole
+/// batch, and the scratch arena owns fused (batch-capacity-sized)
+/// intermediates.  Per-image **halo fences** keep every output
+/// bit-identical to running a [`FilterPlan`] per image (pinned by
+/// `rust/tests/fused_batch.rs`); what fusion buys is *amortization* —
+/// one fork instead of `n`, which is the §5.2 banding gain recovered
+/// for the paper's many-small-crops document workload.
+///
+/// Build with [`FilterSpec::plan_fused`]; the arena grows once to the
+/// largest batch seen ([`FusedPlan::reserve`]) and is reused
+/// allocation-free after.  Full-image specs only (no ROI, no
+/// transpose — those batches run per image).
+#[derive(Debug)]
+pub struct FusedPlan<P: MorphPixel> {
+    spec: FilterSpec,
+    h: usize,
+    w: usize,
+    /// High-water batch size the arena is sized for.
+    capacity: usize,
+    rows: Option<RowsPass>,
+    cols: Option<ColsPass>,
+    steps: Vec<PrimStep>,
+    /// The lowered chain's final slot — never materialized (the last
+    /// step always writes straight to the caller's destinations).
+    final_slot: usize,
+    scratch: Scratch<P>,
+}
+
+impl<P: MorphPixel> FusedPlan<P> {
+    fn build(spec: FilterSpec, h: usize, w: usize, n: usize) -> Result<FusedPlan<P>, PlanError> {
+        spec.validate(h, w)?;
+        if spec.is_transpose() {
+            return Err(PlanError(
+                "fused plans do not serve transpose specs (run per image)".into(),
+            ));
+        }
+        if spec.roi.is_some() {
+            return Err(PlanError(
+                "fused plans serve full-image specs; ROI batches run per image".into(),
+            ));
+        }
+        let cfg = &spec.config;
+        let rows = (spec.w_y > 1).then(|| RowsPass {
+            window: spec.w_y,
+            method: resolve_method(cfg.method, spec.w_y, cfg.thresholds.wy0),
+        });
+        let cols = (spec.w_x > 1).then(|| {
+            let m = resolve_method(cfg.method, spec.w_x, cfg.thresholds.wx0);
+            ColsPass {
+                window: spec.w_x,
+                method: m,
+                sandwich: separable::takes_sandwich(m, cfg.simd, cfg.vertical),
+            }
+        });
+        let (steps, n_slots) = lower(spec.ops.as_slice());
+        let Slot::Tmp(final_slot) = steps.last().unwrap().dst() else {
+            unreachable!()
+        };
+        let mut plan = FusedPlan {
+            spec,
+            h,
+            w,
+            capacity: 0,
+            rows,
+            cols,
+            steps,
+            final_slot,
+            scratch: Scratch {
+                slots: (0..n_slots).map(|_| Vec::new()).collect(),
+                after_rows: Vec::new(),
+                t_a: Vec::new(),
+                t_b: Vec::new(),
+                pad_in: Vec::new(),
+                pad_out: Vec::new(),
+                vhgw: Vec::new(),
+            },
+        };
+        plan.reserve(n);
+        Ok(plan)
+    }
+
+    /// The spec this plan resolves.
+    pub fn spec(&self) -> &FilterSpec {
+        &self.spec
+    }
+
+    /// Per-image input (and output) shape.
+    pub fn src_dims(&self) -> (usize, usize) {
+        (self.h, self.w)
+    }
+
+    /// Largest batch the arena currently holds buffers for.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Bytes retained by the fused scratch arena (scales with the
+    /// high-water batch size — what a plan cache pays to keep this plan
+    /// resident).
+    pub fn scratch_bytes(&self) -> usize {
+        let elems = self.scratch.slots.iter().map(Vec::len).sum::<usize>()
+            + self.scratch.after_rows.len()
+            + self.scratch.t_a.len()
+            + self.scratch.t_b.len()
+            + self.scratch.pad_in.len()
+            + self.scratch.pad_out.len()
+            + self.scratch.vhgw.iter().map(Vec::len).sum::<usize>();
+        elems * std::mem::size_of::<P>()
+    }
+
+    /// Grow the fused arena to serve batches of `n` images (no-op when
+    /// already large enough; run N > 1 at or under the high-water
+    /// capacity allocates nothing).
+    pub fn reserve(&mut self, n: usize) {
+        if n <= self.capacity {
+            return;
+        }
+        let px = self.h * self.w;
+        let replicate = self.spec.config.border == Border::Replicate;
+        let (he, we) = if replicate {
+            (self.h + 2 * (self.spec.w_y / 2), self.w + 2 * (self.spec.w_x / 2))
+        } else {
+            (self.h, self.w)
+        };
+        let epx = he * we;
+        let needs_mid = self.rows.is_some() && self.cols.is_some();
+        let needs_sandwich = self.cols.is_some_and(|c| c.sandwich);
+        let has_pass = self.rows.is_some() || self.cols.is_some();
+        let morph_steps =
+            has_pass && self.steps.iter().any(|s| matches!(s, PrimStep::Morph { .. }));
+        for (i, slot) in self.scratch.slots.iter_mut().enumerate() {
+            if i != self.final_slot {
+                slot.resize(n * px, P::default());
+            }
+        }
+        if needs_mid {
+            self.scratch.after_rows.resize(n * epx, P::default());
+        }
+        if needs_sandwich {
+            self.scratch.t_a.resize(n * epx, P::default());
+            self.scratch.t_b.resize(n * epx, P::default());
+        }
+        if replicate && morph_steps {
+            self.scratch.pad_in.resize(n * epx, P::default());
+            self.scratch.pad_out.resize(n * epx, P::default());
+        }
+        self.capacity = n;
+    }
+
+    /// Execute the whole batch as fused super-passes into
+    /// caller-provided destinations.  Every source and destination must
+    /// have the plan's per-image shape; `srcs[i]` writes `dsts[i]`.
+    /// Bit-identical, image for image, to running [`FilterPlan::run`]
+    /// per image.
+    pub fn run_batch(&mut self, srcs: &[ImageView<'_, P>], dsts: Vec<ImageViewMut<'_, P>>) {
+        let n = srcs.len();
+        assert_eq!(n, dsts.len(), "fused batch: src/dst counts differ");
+        for (s, d) in srcs.iter().zip(&dsts) {
+            assert_eq!(
+                (s.height(), s.width()),
+                (self.h, self.w),
+                "fused plan was resolved for {}x{} images",
+                self.h,
+                self.w
+            );
+            assert_eq!((d.height(), d.width()), (self.h, self.w));
+        }
+        if n == 0 || self.h == 0 || self.w == 0 {
+            return;
+        }
+        self.reserve(n);
+        // band count priced per call on the FUSED extent — this is the
+        // point of fusion: n small images band like one n·h-row image
+        let bands = parallel::effective_bands::<P>(
+            n * self.h,
+            self.w,
+            self.spec.w_x,
+            self.spec.w_y,
+            &self.spec.config,
+        );
+        let px = self.h * self.w;
+        let n_steps = self.steps.len();
+        let mut finals = Some(dsts);
+        for i in 0..n_steps {
+            let step = self.steps[i];
+            let last = i == n_steps - 1;
+            match step {
+                PrimStep::Morph { op, src: s, dst: d } => {
+                    let Slot::Tmp(di) = d else { unreachable!() };
+                    let mut dstbuf = if last {
+                        Vec::new()
+                    } else {
+                        std::mem::take(&mut self.scratch.slots[di])
+                    };
+                    let mut after_rows = std::mem::take(&mut self.scratch.after_rows);
+                    let mut t_a = std::mem::take(&mut self.scratch.t_a);
+                    let mut t_b = std::mem::take(&mut self.scratch.t_b);
+                    let mut pad_in = std::mem::take(&mut self.scratch.pad_in);
+                    let mut pad_out = std::mem::take(&mut self.scratch.pad_out);
+                    let mut vhgw = std::mem::take(&mut self.scratch.vhgw);
+                    {
+                        let src_views = self.fused_slot_views(srcs, s, n);
+                        let dst_views: Vec<ImageViewMut<'_, P>> = if last {
+                            finals.take().unwrap()
+                        } else {
+                            dstbuf[..n * px]
+                                .chunks_exact_mut(px)
+                                .map(|c| ImageViewMut::from_slice_mut(c, self.h, self.w, self.w))
+                                .collect()
+                        };
+                        fused_exec_morph(
+                            &self.spec,
+                            &src_views,
+                            dst_views,
+                            op,
+                            self.rows,
+                            self.cols,
+                            bands,
+                            &mut after_rows,
+                            &mut t_a,
+                            &mut t_b,
+                            &mut pad_in,
+                            &mut pad_out,
+                            &mut vhgw,
+                        );
+                    }
+                    self.scratch.after_rows = after_rows;
+                    self.scratch.t_a = t_a;
+                    self.scratch.t_b = t_b;
+                    self.scratch.pad_in = pad_in;
+                    self.scratch.pad_out = pad_out;
+                    self.scratch.vhgw = vhgw;
+                    if !last {
+                        self.scratch.slots[di] = dstbuf;
+                    }
+                }
+                PrimStep::Sub { a, b, dst: d } => {
+                    let Slot::Tmp(di) = d else { unreachable!() };
+                    let mut dstbuf = if last {
+                        Vec::new()
+                    } else {
+                        std::mem::take(&mut self.scratch.slots[di])
+                    };
+                    {
+                        let av = self.fused_slot_views(srcs, a, n);
+                        let bv = self.fused_slot_views(srcs, b, n);
+                        let dv: Vec<ImageViewMut<'_, P>> = if last {
+                            finals.take().unwrap()
+                        } else {
+                            dstbuf[..n * px]
+                                .chunks_exact_mut(px)
+                                .map(|c| ImageViewMut::from_slice_mut(c, self.h, self.w, self.w))
+                                .collect()
+                        };
+                        for ((a_img, b_img), d_img) in av.into_iter().zip(bv).zip(dv) {
+                            derived::pixelwise_sub_into(a_img, b_img, d_img);
+                        }
+                    }
+                    if !last {
+                        self.scratch.slots[di] = dstbuf;
+                    }
+                }
+            }
+        }
+    }
+
+    /// [`FusedPlan::run_batch`] allocating the output images.
+    pub fn run_batch_owned(&mut self, srcs: &[ImageView<'_, P>]) -> Vec<Image<P>> {
+        let mut out: Vec<Image<P>> = srcs.iter().map(|_| Image::zeros(self.h, self.w)).collect();
+        let dsts: Vec<ImageViewMut<'_, P>> = out.iter_mut().map(|im| im.view_mut()).collect();
+        self.run_batch(srcs, dsts);
+        out
+    }
+
+    /// Per-image views of a read slot: the caller's sources, or the
+    /// arena slot buffer chunked into its `n` fused segments.
+    fn fused_slot_views<'s>(
+        &'s self,
+        srcs: &[ImageView<'s, P>],
+        s: Slot,
+        n: usize,
+    ) -> Vec<ImageView<'s, P>> {
+        let px = self.h * self.w;
+        match s {
+            Slot::Src => srcs.to_vec(),
+            Slot::Tmp(i) => self.scratch.slots[i][..n * px]
+                .chunks_exact(px)
+                .map(|c| ImageView::from_slice(c, self.h, self.w, self.w))
+                .collect(),
+        }
+    }
+}
+
+/// One fused erosion/dilation over the whole batch, dispatching on
+/// border: identity runs the fused passes directly; replicate pads each
+/// image into the fused `pad_in` stack (per-image geometry — the padded
+/// seams are fences too), runs the identity path over the padded stack,
+/// and crops each image back out.
+#[allow(clippy::too_many_arguments)]
+fn fused_exec_morph<P: MorphPixel>(
+    spec: &FilterSpec,
+    srcs: &[ImageView<'_, P>],
+    dsts: Vec<ImageViewMut<'_, P>>,
+    op: MorphOp,
+    rows: Option<RowsPass>,
+    cols: Option<ColsPass>,
+    bands: usize,
+    after_rows: &mut [P],
+    t_a: &mut [P],
+    t_b: &mut [P],
+    pad_in: &mut [P],
+    pad_out: &mut [P],
+    vhgw: &mut Vec<Vec<P>>,
+) {
+    let n = srcs.len();
+    let (h, w) = (srcs[0].height(), srcs[0].width());
+    let cfg = &spec.config;
+    if rows.is_none() && cols.is_none() {
+        // 1×1 SE: identity at both borders
+        for (s, mut d) in srcs.iter().zip(dsts) {
+            d.copy_rows_from(*s, 0);
+        }
+        return;
+    }
+    if cfg.border == Border::Replicate {
+        let (wing_x, wing_y) = (spec.w_x / 2, spec.w_y / 2);
+        let (he, we) = (h + 2 * wing_y, w + 2 * wing_x);
+        let epx = he * we;
+        for (j, s) in srcs.iter().enumerate() {
+            super::replicate_pad_into(
+                *s,
+                wing_x,
+                wing_y,
+                ImageViewMut::from_slice_mut(&mut pad_in[j * epx..(j + 1) * epx], he, we, we),
+            );
+        }
+        {
+            let pin: Vec<ImageView<'_, P>> = pad_in[..n * epx]
+                .chunks_exact(epx)
+                .map(|c| ImageView::from_slice(c, he, we, we))
+                .collect();
+            let pout: Vec<ImageViewMut<'_, P>> = pad_out[..n * epx]
+                .chunks_exact_mut(epx)
+                .map(|c| ImageViewMut::from_slice_mut(c, he, we, we))
+                .collect();
+            fused_morph_ident(&pin, pout, op, rows, cols, bands, cfg, after_rows, t_a, t_b, vhgw);
+        }
+        for (j, mut d) in dsts.into_iter().enumerate() {
+            d.copy_rows_from(
+                ImageView::from_slice(&pad_out[j * epx..(j + 1) * epx], he, we, we)
+                    .sub_rect(wing_y, wing_x, h, w),
+                0,
+            );
+        }
+        return;
+    }
+    fused_morph_ident(srcs, dsts, op, rows, cols, bands, cfg, after_rows, t_a, t_b, vhgw);
+}
+
+/// Identity-border fused separable step: rows super-pass, mid buffer,
+/// cols super-pass — each ONE fork-join over the whole batch.
+#[allow(clippy::too_many_arguments)]
+fn fused_morph_ident<P: MorphPixel>(
+    srcs: &[ImageView<'_, P>],
+    dsts: Vec<ImageViewMut<'_, P>>,
+    op: MorphOp,
+    rows: Option<RowsPass>,
+    cols: Option<ColsPass>,
+    bands: usize,
+    cfg: &MorphConfig,
+    after_rows: &mut [P],
+    t_a: &mut [P],
+    t_b: &mut [P],
+    vhgw: &mut Vec<Vec<P>>,
+) {
+    let n = srcs.len();
+    let (h, w) = (srcs[0].height(), srcs[0].width());
+    let px = h * w;
+    let pool = parallel::BandPool::global();
+    match (rows, cols) {
+        (None, None) => {
+            for (s, mut d) in srcs.iter().zip(dsts) {
+                d.copy_rows_from(*s, 0);
+            }
+        }
+        (Some(r), None) => parallel::pass_rows_fused_into(
+            pool,
+            srcs,
+            dsts,
+            r.window,
+            op,
+            r.method,
+            cfg.simd,
+            cfg.thresholds,
+            bands,
+            1,
+            vhgw,
+        ),
+        (None, Some(c)) => {
+            run_cols_fused(pool, srcs, dsts, op, c, bands, cfg, t_a, t_b, vhgw);
+        }
+        (Some(r), Some(c)) => {
+            let mid = &mut after_rows[..n * px];
+            {
+                let mid_dsts: Vec<ImageViewMut<'_, P>> = mid
+                    .chunks_exact_mut(px)
+                    .map(|ch| ImageViewMut::from_slice_mut(ch, h, w, w))
+                    .collect();
+                parallel::pass_rows_fused_into(
+                    pool,
+                    srcs,
+                    mid_dsts,
+                    r.window,
+                    op,
+                    r.method,
+                    cfg.simd,
+                    cfg.thresholds,
+                    bands,
+                    1,
+                    vhgw,
+                );
+            }
+            let mid_srcs: Vec<ImageView<'_, P>> = mid
+                .chunks_exact(px)
+                .map(|ch| ImageView::from_slice(ch, h, w, w))
+                .collect();
+            run_cols_fused(pool, &mid_srcs, dsts, op, c, bands, cfg, t_a, t_b, vhgw);
+        }
+    }
+}
+
+/// Fused cols pass: the §5.2.1 sandwich transposes each image into the
+/// fused `t_a` stack (sequential — memory-bound, like the per-image
+/// plan), runs ONE fused rows super-pass over the transposed stack in
+/// [`MorphPixel::LANES`]-aligned (image-local) bands, and transposes
+/// each image back; direct forms run the fused zero-halo executor.
+#[allow(clippy::too_many_arguments)]
+fn run_cols_fused<P: MorphPixel>(
+    pool: &parallel::BandPool,
+    srcs: &[ImageView<'_, P>],
+    dsts: Vec<ImageViewMut<'_, P>>,
+    op: MorphOp,
+    c: ColsPass,
+    bands: usize,
+    cfg: &MorphConfig,
+    t_a: &mut [P],
+    t_b: &mut [P],
+    vhgw: &mut Vec<Vec<P>>,
+) {
+    let n = srcs.len();
+    let (h, w) = (srcs[0].height(), srcs[0].width());
+    let px = h * w;
+    if c.sandwich {
+        for (j, s) in srcs.iter().enumerate() {
+            P::transpose_image_into(
+                &mut Native,
+                *s,
+                ImageViewMut::from_slice_mut(&mut t_a[j * px..(j + 1) * px], w, h, h),
+            );
+        }
+        {
+            let ta: Vec<ImageView<'_, P>> = t_a[..n * px]
+                .chunks_exact(px)
+                .map(|ch| ImageView::from_slice(ch, w, h, h))
+                .collect();
+            let tb: Vec<ImageViewMut<'_, P>> = t_b[..n * px]
+                .chunks_exact_mut(px)
+                .map(|ch| ImageViewMut::from_slice_mut(ch, w, h, h))
+                .collect();
+            parallel::pass_rows_fused_into(
+                pool,
+                &ta,
+                tb,
+                c.window,
+                op,
+                c.method,
+                cfg.simd,
+                cfg.thresholds,
+                bands,
+                P::LANES,
+                vhgw,
+            );
+        }
+        for (j, d) in dsts.into_iter().enumerate() {
+            P::transpose_image_into(
+                &mut Native,
+                ImageView::from_slice(&t_b[j * px..(j + 1) * px], w, h, h),
+                d,
+            );
+        }
+    } else {
+        parallel::pass_cols_direct_fused_into(
+            pool,
+            srcs,
+            dsts,
+            c.window,
+            op,
+            c.method,
+            cfg.simd,
+            cfg.vertical,
+            cfg.thresholds,
+            bands,
+            vhgw,
         );
     }
 }

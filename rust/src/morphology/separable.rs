@@ -117,7 +117,12 @@ pub fn pass_cols<'a, P: MorphPixel, B: Backend>(
 /// pass zero-halo source bands.  Callers must have excluded the §5.2.1
 /// sandwich case with [`takes_sandwich`] first (the sandwich transposes
 /// whole images and is banded on the *transposed* buffer instead).
-/// `scratch` is the vHGW `R`-row slot (see [`pass_rows_into`]).
+///
+/// `scratch` serves whichever kernel the dispatch lands on — the vHGW
+/// `R`-row slot (see [`pass_rows_into`]) or the SIMD-linear kernel's
+/// identity-padded staging row ([`linear::cols_simd_linear_into`]); the
+/// dispatches are mutually exclusive, so one retained slot makes every
+/// cols method allocation-free on reuse.
 pub fn pass_cols_direct_into<P: MorphPixel, B: Backend>(
     b: &mut B,
     src: ImageView<'_, P>,
@@ -143,7 +148,7 @@ pub fn pass_cols_direct_into<P: MorphPixel, B: Backend>(
         }
         return;
     }
-    linear::cols_simd_linear_into(b, src, dst, window, op);
+    linear::cols_simd_linear_into(b, src, dst, window, op, scratch);
 }
 
 /// Whether a *resolved* cols-window method executes as the §5.2.1

@@ -41,8 +41,8 @@ use std::collections::HashMap;
 use anyhow::{anyhow, Result};
 
 use super::manifest::ArtifactMeta;
-use crate::image::Image;
-use crate::morphology::{FilterPlan, FilterSpec, MorphConfig, MorphPixel};
+use crate::image::{Image, ImageView};
+use crate::morphology::{FilterPlan, FilterSpec, FusedPlan, MorphConfig, MorphPixel};
 
 /// Bound on cached plans per depth (cleared wholesale when exceeded).
 pub const PLAN_CACHE_CAP: usize = 64;
@@ -86,10 +86,35 @@ type PlanKey = (FilterSpec, usize, usize);
 
 /// Plan-cache counters: how many requests resolved a fresh plan vs ran
 /// on a cached one (uncached oversized plans count as resolutions).
+///
+/// Counting is **per plan family** (canonical `(spec, shape)` key), not
+/// per cached object: an entry's first-seen request is the resolution
+/// and every later request against the same key is a hit — including
+/// requests that lazily build the entry's *other* execution variant
+/// (single ↔ fused).  That keeps the `BENCH_serve.json` counts exact
+/// functions of the request mix, independent of how the queue happened
+/// to split batches.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PlanStats {
     pub resolutions: u64,
     pub hits: u64,
+}
+
+/// One plan-cache entry: the per-image [`FilterPlan`] and/or the
+/// batch-fused [`FusedPlan`] for one canonical `(spec, shape)` family.
+/// Variants are built lazily on first use; whichever arrives first
+/// creates the entry (and counts the family's one resolution).
+#[derive(Debug)]
+struct PlanEntry<P: MorphPixel> {
+    single: Option<FilterPlan<P>>,
+    fused: Option<FusedPlan<P>>,
+}
+
+impl<P: MorphPixel> PlanEntry<P> {
+    fn scratch_bytes(&self) -> usize {
+        self.single.as_ref().map_or(0, FilterPlan::scratch_bytes)
+            + self.fused.as_ref().map_or(0, FusedPlan::scratch_bytes)
+    }
 }
 
 /// Pure-rust engine: executes specs with the crate's native morphology
@@ -97,11 +122,17 @@ pub struct PlanStats {
 /// across the process-wide worker pool when the plan's cost-model
 /// crossover predicts a win — output stays bit-identical to sequential
 /// execution, so the router's backend choice never changes results.
+///
+/// [`NativeEngine::run_spec_batch`] serves whole same-key batches: a
+/// full-image batch of more than one image runs through the entry's
+/// [`FusedPlan`] — ONE banded execution spanning every image — and
+/// falls back to per-image plans otherwise (ROI or transpose specs,
+/// mixed shapes, singleton batches).
 #[derive(Debug, Default)]
 pub struct NativeEngine {
     cfg: MorphConfig,
-    plans_u8: HashMap<PlanKey, FilterPlan<u8>>,
-    plans_u16: HashMap<PlanKey, FilterPlan<u16>>,
+    plans_u8: HashMap<PlanKey, PlanEntry<u8>>,
+    plans_u16: HashMap<PlanKey, PlanEntry<u16>>,
     stats: PlanStats,
 }
 
@@ -138,7 +169,7 @@ impl NativeEngine {
     /// `run_spec_u16`: plan once per canonical `(spec, shape)`, run
     /// many — `run_at` supplies the request's actual ROI position.
     fn run_any<P: MorphPixel>(
-        cache: &mut HashMap<PlanKey, FilterPlan<P>>,
+        cache: &mut HashMap<PlanKey, PlanEntry<P>>,
         stats: &mut PlanStats,
         spec: &FilterSpec,
         img: &Image<P>,
@@ -149,9 +180,15 @@ impl NativeEngine {
         // `exec_cached`
         let canon = spec.canonical_for(h, w);
         let key = (canon, h, w);
-        if let Some(plan) = cache.get_mut(&key) {
+        if let Some(entry) = cache.get_mut(&key) {
             stats.hits += 1;
-            return Ok(exec_cached(plan, spec, img));
+            if entry.single.is_none() {
+                // warm family, cold variant (the family was first seen
+                // as a fused batch): build the per-image plan without a
+                // resolution — counting is per family, not per object
+                entry.single = Some(canon.plan::<P>(h, w)?);
+            }
+            return Ok(exec_cached(entry.single.as_mut().unwrap(), spec, img));
         }
         stats.resolutions += 1;
         let mut plan = canon.plan::<P>(h, w)?;
@@ -160,18 +197,94 @@ impl NativeEngine {
             // bigger than the whole budget: run one-shot, never pin
             return Ok(exec_cached(&mut plan, spec, img));
         }
-        // evict entries one at a time until the new plan fits — never
-        // wholesale, so key churn cannot flush hot plans
-        let mut resident: usize = cache.values().map(FilterPlan::scratch_bytes).sum();
-        while !cache.is_empty()
-            && (cache.len() >= PLAN_CACHE_CAP || resident + new_bytes > PLAN_CACHE_MAX_BYTES)
-        {
-            let victim = *cache.keys().next().unwrap();
-            if let Some(evicted) = cache.remove(&victim) {
-                resident -= evicted.scratch_bytes();
-            }
+        evict_until_fits(cache, new_bytes);
+        let entry = cache.entry(key).or_insert(PlanEntry {
+            single: Some(plan),
+            fused: None,
+        });
+        Ok(exec_cached(entry.single.as_mut().unwrap(), spec, img))
+    }
+
+    /// Depth-generic **batch** body: a same-key batch of more than one
+    /// same-shape full-image request runs through the family's
+    /// [`FusedPlan`] (ONE banded execution spanning every image);
+    /// anything else — singleton batches, ROI or transpose specs, mixed
+    /// shapes — degrades to per-image [`NativeEngine::run_any`].
+    /// Returns `(outputs, fused)`, where `fused` says whether the fused
+    /// path actually ran (the coordinator's metrics counter).
+    fn run_batch_any<P: MorphPixel>(
+        cache: &mut HashMap<PlanKey, PlanEntry<P>>,
+        stats: &mut PlanStats,
+        spec: &FilterSpec,
+        imgs: &[&Image<P>],
+    ) -> Result<(Vec<Image<P>>, bool)> {
+        let n = imgs.len();
+        if n == 0 {
+            return Ok((Vec::new(), false));
         }
-        Ok(exec_cached(cache.entry(key).or_insert(plan), spec, img))
+        let (h, w) = (imgs[0].height(), imgs[0].width());
+        let fusable = n > 1
+            && spec.roi.is_none()
+            && !spec.is_transpose()
+            && imgs.iter().all(|im| (im.height(), im.width()) == (h, w));
+        if !fusable {
+            let outs = imgs
+                .iter()
+                .map(|im| Self::run_any(cache, stats, spec, im))
+                .collect::<Result<Vec<_>>>()?;
+            return Ok((outs, false));
+        }
+        let canon = spec.canonical_for(h, w);
+        let key = (canon, h, w);
+        let srcs: Vec<ImageView<'_, P>> = imgs.iter().map(|im| im.view()).collect();
+        if let Some(entry) = cache.get_mut(&key) {
+            // every request of a warm-family batch is a hit, however
+            // the queue split the stream into batches
+            stats.hits += n as u64;
+            if entry.fused.is_none() {
+                entry.fused = Some(canon.plan_fused::<P>(h, w, n)?);
+            }
+            let fused = entry.fused.as_mut().unwrap();
+            return Ok((fused.run_batch_owned(&srcs), true));
+        }
+        // cold family: the batch's first request is the resolution, the
+        // rest are hits (split-independent counting)
+        stats.resolutions += 1;
+        stats.hits += n as u64 - 1;
+        let mut fused = canon.plan_fused::<P>(h, w, n)?;
+        let out = fused.run_batch_owned(&srcs);
+        let new_bytes = fused.scratch_bytes();
+        if new_bytes <= PLAN_CACHE_MAX_BYTES {
+            evict_until_fits(cache, new_bytes);
+            cache.insert(
+                key,
+                PlanEntry {
+                    single: None,
+                    fused: Some(fused),
+                },
+            );
+        }
+        Ok((out, true))
+    }
+
+    /// Serve a whole same-spec u8 batch, fusing when possible.  See
+    /// [`NativeEngine::run_batch_any`] for the fusion predicate and the
+    /// returned `fused` flag.
+    pub fn run_spec_batch(
+        &mut self,
+        spec: &FilterSpec,
+        imgs: &[&Image<u8>],
+    ) -> Result<(Vec<Image<u8>>, bool)> {
+        Self::run_batch_any(&mut self.plans_u8, &mut self.stats, spec, imgs)
+    }
+
+    /// [`NativeEngine::run_spec_batch`] at 16-bit depth.
+    pub fn run_spec_batch_u16(
+        &mut self,
+        spec: &FilterSpec,
+        imgs: &[&Image<u16>],
+    ) -> Result<(Vec<Image<u16>>, bool)> {
+        Self::run_batch_any(&mut self.plans_u16, &mut self.stats, spec, imgs)
     }
 
     /// Build the spec a legacy artifact description denotes, using this
@@ -211,6 +324,20 @@ impl NativeEngine {
         Self::check_shape(meta, img)?;
         let spec = self.spec_of(meta)?;
         Self::run_any(&mut self.plans_u16, &mut self.stats, &spec, img)
+    }
+}
+
+/// Evict entries one at a time until `new_bytes` more fit under both
+/// cache bounds — never wholesale, so key churn cannot flush hot plans.
+fn evict_until_fits<P: MorphPixel>(cache: &mut HashMap<PlanKey, PlanEntry<P>>, new_bytes: usize) {
+    let mut resident: usize = cache.values().map(PlanEntry::scratch_bytes).sum();
+    while !cache.is_empty()
+        && (cache.len() >= PLAN_CACHE_CAP || resident + new_bytes > PLAN_CACHE_MAX_BYTES)
+    {
+        let victim = *cache.keys().next().unwrap();
+        if let Some(evicted) = cache.remove(&victim) {
+            resident -= evicted.scratch_bytes();
+        }
     }
 }
 
@@ -405,6 +532,54 @@ mod tests {
         assert_eq!(e.plan_stats(), PlanStats::default());
         let _ = e.run_spec(&spec, &img).unwrap();
         assert_eq!(e.plan_stats().hits, 1, "cache itself survives the drain");
+    }
+
+    #[test]
+    fn fused_batches_match_per_image_and_count_per_family() {
+        let mut e = NativeEngine::default();
+        let spec = FilterSpec::new(FilterOp::Erode, 5, 5);
+        let imgs: Vec<Image<u8>> = (0..4).map(|i| synth::noise(20, 28, i as u64)).collect();
+        let refs: Vec<&Image<u8>> = imgs.iter().collect();
+        let (outs, fused) = e.run_spec_batch(&spec, &refs).unwrap();
+        assert!(fused, "same-shape full-image batch must fuse");
+        assert_eq!(e.plan_stats(), PlanStats { resolutions: 1, hits: 3 });
+        for (img, out) in imgs.iter().zip(&outs) {
+            let want = crate::morphology::erode(img, 5, 5);
+            assert!(out.same_pixels(&want), "fused output must be bit-identical");
+        }
+        // a warm-family singleton lazily builds the single variant — a
+        // hit, not a second resolution
+        let one = e.run_spec(&spec, &imgs[0]).unwrap();
+        assert!(one.same_pixels(&outs[0]));
+        assert_eq!(e.plan_stats(), PlanStats { resolutions: 1, hits: 4 });
+        assert_eq!(e.cached_plans(), 1, "both variants share one family entry");
+        // split-independence: any later batch of the family is all hits
+        let (_, fused2) = e.run_spec_batch(&spec, &refs[..2]).unwrap();
+        assert!(fused2);
+        assert_eq!(e.plan_stats(), PlanStats { resolutions: 1, hits: 6 });
+    }
+
+    #[test]
+    fn non_fusable_batches_fall_back_per_image() {
+        let mut e = NativeEngine::default();
+        let spec = FilterSpec::new(FilterOp::Erode, 3, 3);
+        let a = synth::noise(16, 16, 1);
+        let b = synth::noise(12, 20, 2);
+        // mixed shapes: per-image path, one resolution per shape
+        let (outs, fused) = e.run_spec_batch(&spec, &[&a, &b]).unwrap();
+        assert!(!fused);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(e.plan_stats(), PlanStats { resolutions: 2, hits: 0 });
+        // singleton batches never fuse
+        let (_, f1) = e.run_spec_batch(&spec, &[&a]).unwrap();
+        assert!(!f1);
+        assert_eq!(e.plan_stats().hits, 1);
+        // ROI specs run per image (fused plans are full-image only)
+        let roi_spec = spec.with_roi(Roi::new(4, 4, 6, 6));
+        let c = synth::noise(16, 16, 3);
+        let (roi_outs, fr) = e.run_spec_batch(&roi_spec, &[&a, &c]).unwrap();
+        assert!(!fr);
+        assert_eq!(roi_outs[0].height(), 6);
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Property suite for fused multi-image super-passes.
+//!
+//! The contract under test ([`FusedPlan`]): a batch of `n` same-shape
+//! images run as ONE banded execution — bands spanning image boundaries
+//! over the fused `n·h`-row virtual image, per-image halo fences at
+//! every seam — is **bit-identical**, image for image, to running the
+//! per-image [`FilterPlan`] `n` times.  The sweep crosses op × resolved
+//! method × border × depth × batch size (including the 1-row degenerate
+//! where every fused row is its own image and every band cut lands on a
+//! seam), and the engine-level fallback for mixed-shape batches.
+//!
+//! Band geometry itself (tiling, seam-aligned cuts) is pinned by the
+//! unit tests in `morphology::parallel` and mirrored in
+//! `python/tests/test_fused_geometry.py`.
+//!
+//! [`FusedPlan`]: neon_morph::morphology::FusedPlan
+//! [`FilterPlan`]: neon_morph::morphology::FilterPlan
+
+use neon_morph::image::{synth, Image, ImageView};
+use neon_morph::morphology::{
+    Border, FilterOp, FilterSpec, MorphConfig, MorphPixel, Parallelism, PassMethod,
+    VerticalStrategy,
+};
+use neon_morph::runtime::NativeEngine;
+
+/// Run `spec` fused at each batch size in `batches` (images cycled from
+/// `imgs`) and compare every output against the per-image plan.
+fn check_batches<P: MorphPixel>(spec: FilterSpec, imgs: &[Image<P>], batches: &[usize], label: &str) {
+    let (h, w) = (imgs[0].height(), imgs[0].width());
+    let mut fused = spec.plan_fused::<P>(h, w, 1).unwrap();
+    let mut single = spec.plan::<P>(h, w).unwrap();
+    for &n in batches {
+        let batch: Vec<ImageView<'_, P>> = (0..n).map(|i| imgs[i % imgs.len()].view()).collect();
+        let got = fused.run_batch_owned(&batch);
+        assert_eq!(got.len(), n, "{label}: n={n}");
+        for (i, (src, out)) in batch.iter().zip(&got).enumerate() {
+            let want = single.run_owned(*src);
+            assert!(
+                out.same_pixels(&want),
+                "{label}: batch {n}, image {i} diverges from the per-image plan"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_matches_per_image_across_ops_methods_borders() {
+    let (h, w) = (17, 23);
+    let imgs: Vec<Image<u8>> = (0..4).map(|i| synth::noise(h, w, 0xFA + i as u64)).collect();
+    let ops = [
+        FilterOp::Erode,
+        FilterOp::Dilate,
+        FilterOp::Open,
+        FilterOp::Gradient,
+        FilterOp::TopHat,
+    ];
+    let methods = [PassMethod::Hybrid, PassMethod::Linear, PassMethod::Vhgw];
+    let borders = [Border::Identity, Border::Replicate];
+    for op in ops {
+        for method in methods {
+            for border in borders {
+                let cfg = MorphConfig {
+                    method,
+                    border,
+                    parallelism: Parallelism::Fixed(3),
+                    ..MorphConfig::default()
+                };
+                let spec = FilterSpec::new(op, 5, 3).with_config(cfg);
+                check_batches(spec, &imgs, &[1, 2, 8], &format!("{op:?}/{method:?}/{border:?}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_matches_per_image_at_batch_64() {
+    // the headline batch size, on the two shapes the smoke families use
+    let imgs: Vec<Image<u8>> = (0..8).map(|i| synth::noise(15, 20, 0xB64 + i as u64)).collect();
+    for op in [FilterOp::Erode, FilterOp::TopHat] {
+        let spec = FilterSpec::new(op, 7, 7);
+        check_batches(spec, &imgs, &[64], &format!("{op:?} batch64"));
+    }
+}
+
+#[test]
+fn fused_matches_per_image_u16() {
+    let imgs: Vec<Image<u16>> = (0..3).map(|i| synth::noise_u16(14, 19, 0x16 + i as u64)).collect();
+    for border in [Border::Identity, Border::Replicate] {
+        let cfg = MorphConfig {
+            border,
+            parallelism: Parallelism::Fixed(4),
+            ..MorphConfig::default()
+        };
+        for op in [FilterOp::Dilate, FilterOp::Gradient] {
+            let spec = FilterSpec::new(op, 3, 5).with_config(cfg);
+            check_batches(spec, &imgs, &[1, 2, 8], &format!("u16 {op:?}/{border:?}"));
+        }
+    }
+}
+
+#[test]
+fn fused_transpose_sandwich_matches_per_image() {
+    // forced transpose sandwich: the cols pass runs as ONE fused rows
+    // pass over per-image transposed stacks
+    let imgs: Vec<Image<u8>> = (0..3).map(|i| synth::noise(13, 21, 0x5A + i as u64)).collect();
+    let cfg = MorphConfig {
+        method: PassMethod::Linear,
+        vertical: VerticalStrategy::Transpose,
+        parallelism: Parallelism::Fixed(3),
+        ..MorphConfig::default()
+    };
+    let spec = FilterSpec::new(FilterOp::Erode, 9, 5).with_config(cfg);
+    check_batches(spec, &imgs, &[1, 2, 8], "transpose sandwich");
+}
+
+#[test]
+fn fused_one_row_images_respect_seam_fences() {
+    // degenerate h=1: every fused row is its own image, every band cut
+    // is a seam — a cols window must never reduce across neighbors
+    let imgs: Vec<Image<u8>> = (0..6).map(|i| synth::noise(1, 31, 0x1A + i as u64)).collect();
+    for border in [Border::Identity, Border::Replicate] {
+        let cfg = MorphConfig {
+            border,
+            parallelism: Parallelism::Fixed(4),
+            ..MorphConfig::default()
+        };
+        let spec = FilterSpec::new(FilterOp::Dilate, 5, 1).with_config(cfg);
+        check_batches(spec, &imgs, &[1, 2, 8, 64], &format!("1-row/{border:?}"));
+    }
+}
+
+#[test]
+fn fused_plan_rejects_roi_and_transpose_specs() {
+    let roi = FilterSpec::new(FilterOp::Erode, 3, 3)
+        .with_roi(neon_morph::morphology::Roi::new(2, 2, 4, 4));
+    assert!(roi.plan_fused::<u8>(16, 16, 2).is_err());
+    let t = FilterSpec::new(FilterOp::Transpose, 0, 0);
+    assert!(t.plan_fused::<u8>(16, 16, 2).is_err());
+}
+
+#[test]
+fn engine_serves_mixed_shape_batches_per_image() {
+    // a BatchKey bucket never mixes shapes in the coordinator, but the
+    // engine API can be handed one — it must degrade, not fuse
+    let mut e = NativeEngine::default();
+    let spec = FilterSpec::new(FilterOp::Erode, 5, 5);
+    let a = synth::noise(20, 24, 1);
+    let b = synth::noise(24, 20, 2);
+    let c = synth::noise(20, 24, 3);
+    let (outs, fused) = e.run_spec_batch(&spec, &[&a, &b, &c]).unwrap();
+    assert!(!fused, "mixed shapes must not fuse");
+    let mut plan_a = spec.plan::<u8>(20, 24).unwrap();
+    let mut plan_b = spec.plan::<u8>(24, 20).unwrap();
+    assert!(outs[0].same_pixels(&plan_a.run_owned(&a)));
+    assert!(outs[1].same_pixels(&plan_b.run_owned(&b)));
+    assert!(outs[2].same_pixels(&plan_a.run_owned(&c)));
+    // …and a uniform batch through the same engine does fuse, matching
+    let (outs2, fused2) = e.run_spec_batch(&spec, &[&a, &c]).unwrap();
+    assert!(fused2);
+    assert!(outs2[0].same_pixels(&outs[0]));
+    assert!(outs2[1].same_pixels(&outs[2]));
+}
+
+#[test]
+fn fused_arena_grows_once_and_serves_smaller_batches() {
+    // capacity is a high-water mark: after reserve(8), batches of any
+    // size ≤ 8 reuse the arena; a later larger batch grows it
+    let imgs: Vec<Image<u8>> = (0..8).map(|i| synth::noise(11, 13, 0xCA + i as u64)).collect();
+    let spec = FilterSpec::new(FilterOp::TopHat, 3, 3);
+    let mut fused = spec.plan_fused::<u8>(11, 13, 8).unwrap();
+    assert_eq!(fused.capacity(), 8);
+    let bytes_at_8 = fused.scratch_bytes();
+    let mut single = spec.plan::<u8>(11, 13).unwrap();
+    for n in [1usize, 3, 8] {
+        let batch: Vec<ImageView<'_, u8>> = imgs[..n].iter().map(|im| im.view()).collect();
+        for (src, out) in batch.iter().zip(fused.run_batch_owned(&batch)) {
+            assert!(out.same_pixels(&single.run_owned(*src)));
+        }
+        assert_eq!(fused.capacity(), 8, "smaller batches must not shrink the arena");
+        assert_eq!(fused.scratch_bytes(), bytes_at_8);
+    }
+    let batch: Vec<ImageView<'_, u8>> = (0..12).map(|i| imgs[i % 8].view()).collect();
+    let _ = fused.run_batch_owned(&batch);
+    assert_eq!(fused.capacity(), 12);
+}

@@ -16,13 +16,14 @@
 //! order of magnitude.  Three properties are pinned:
 //!
 //! 1. banded passes are zero-copy (no staging slab / stitch),
-//! 2. a reused [`FilterPlan`]'s Nth run allocates **zero
-//!    intermediate-image bytes** for EVERY method — since the
-//!    plan-owned-vHGW-scratch redesign this includes forced-vHGW specs,
+//! 2. a reused [`FilterPlan`]'s Nth run allocates **zero per-call heap
+//!    bytes** when it dispatches sequentially — since the
+//!    plan-owned-scratch redesign this includes forced-vHGW specs,
 //!    whose image-sized `R` buffer (the algorithm's "2× extra memory")
-//!    now lives in the arena's per-band slots (the only per-run heap
-//!    traffic left is the cols linear kernel's row-sized staging
-//!    buffer, which every legacy path also allocates), and
+//!    lives in the arena's per-band slots, AND the cols linear kernel's
+//!    row-sized staging buffer (the last per-call residual, now an
+//!    arena slot too); banded runs add only fork bookkeeping (job
+//!    boxes, the band plan, the scope latch), and
 //! 3. the coordinator's typed `BatchKey` is built and compared without
 //!    any heap allocation (the pre-plan era formatted a `String` per
 //!    submit and per pull).
@@ -190,13 +191,15 @@ fn reused_plan_runs_allocate_no_intermediate_images() {
     const H: usize = 128;
     const W: usize = 512; // every intermediate image would be 64 KiB at u8
     let img = synth::noise(H, W, 0x9147);
-    // per-spec budget for row-sized per-call buffers (cols staging, the
-    // vHGW kernels' ident/suffix rows) plus banding bookkeeping (job
-    // boxes, scope latch, channel nodes) — an escaped intermediate
-    // image (64 KiB) or a per-call vHGW R buffer (≥ 68 KiB on this
-    // shape) blows any of them by ~an order of magnitude
-    let seq_slack = 8 * 1024u64;
-    let banded_slack = 24 * 1024u64;
+    // sequential dispatch reuses the arena for EVERY buffer — the vHGW
+    // `R` rows and the cols-linear staging row included — so run N > 1
+    // is pinned to literally zero heap bytes (a single escaped staging
+    // row, 536 B here, fails); banded dispatch still forks per call
+    // (job boxes, band plan, split chunks, scope latch, channel nodes),
+    // budgeted an order of magnitude under an escaped intermediate
+    // image or per-call vHGW R buffer (≥ 64 KiB on this shape)
+    let seq_slack = 0u64;
+    let banded_slack = 8 * 1024u64;
 
     // (a) hybrid-small spec (rows+cols resolve to Linear, direct
     //     vertical): the plan's after_rows arena absorbs the rows→cols
