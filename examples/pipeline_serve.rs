@@ -1,0 +1,152 @@
+//! STAGED-PIPELINE SERVING DRIVER: backpressure, per-key admission
+//! budgets and exactly-once replies under a saturating producer.
+//!
+//! One stream fires four 64-request bursts — four slow plan families
+//! (15×15 windows on 240×320, one with an interior ROI, one u16) — at
+//! a pipeline with tiny stage channels and a per-key admission budget.
+//! The producer outruns the lanes by orders of magnitude, so the
+//! driver proves the contracts the staged redesign is for:
+//!
+//! * **admission-only shedding** — every request either sheds at
+//!   `send` (full channel or exhausted per-key budget, counted on the
+//!   stream) or is answered; accepted work is never dropped;
+//! * **bounded stages** — per-stage depth peaks stay within
+//!   `stage_capacity` + sender/batch slack, and blocked inter-stage
+//!   sends show backpressure actually propagating;
+//! * **bit-identity** — every reply equals the one-shot library call
+//!   for its family, saturation or not;
+//! * **budget release** — once replies land, the hot keys admit again.
+//!
+//! ```bash
+//! cargo run --release --example pipeline_serve
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use neon_morph::coordinator::request::{FilterOutput, ImagePayload};
+use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use neon_morph::image::synth;
+use neon_morph::morphology::{self, FilterOp, FilterSpec, MorphConfig, Roi};
+
+const BURST: usize = 64;
+const BUDGET: usize = 8;
+const STAGE_CAP: usize = 4;
+const MAX_BATCH: usize = 8;
+const H: usize = 240;
+const W: usize = 320;
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        queue_capacity: 4 * BURST,
+        max_batch: MAX_BATCH,
+        backend: BackendChoice::NativeOnly,
+        artifact_dir: None,
+        admission_budget: BUDGET,
+        stage_capacity: STAGE_CAP,
+        ..CoordinatorConfig::default()
+    })?;
+    let img8 = Arc::new(synth::noise(H, W, 0xA1));
+    let img16 = Arc::new(synth::noise_u16(H, W, 0xA2));
+    let cfg = MorphConfig::default();
+
+    // four slow plan families and their one-shot library oracles
+    let families: Vec<(FilterSpec, ImagePayload, FilterOutput)> = vec![
+        (
+            FilterSpec::new(FilterOp::Open, 15, 15),
+            img8.clone().into(),
+            FilterOutput::U8(morphology::parallel::opening_native(img8.view(), 15, 15, &cfg)),
+        ),
+        (
+            FilterSpec::new(FilterOp::Erode, 15, 15).with_roi(Roi::new(8, 8, 64, 80)),
+            img8.clone().into(),
+            FilterOutput::U8(
+                morphology::erode(img8.view(), 15, 15).view().sub_rect(8, 8, 64, 80).to_image(),
+            ),
+        ),
+        (
+            FilterSpec::new(FilterOp::Close, 15, 15),
+            img8.clone().into(),
+            FilterOutput::U8(morphology::parallel::closing_native(img8.view(), 15, 15, &cfg)),
+        ),
+        (
+            FilterSpec::new(FilterOp::Dilate, 15, 15),
+            img16.clone().into(),
+            FilterOutput::U16(morphology::dilate(img16.view(), 15, 15)),
+        ),
+    ];
+
+    let t0 = std::time::Instant::now();
+    let mut stream = coord.stream();
+    let mut family_of: HashMap<u64, usize> = HashMap::new();
+    for (fi, (spec, payload, _)) in families.iter().enumerate() {
+        for _ in 0..BURST {
+            if let Ok(id) = stream.send(*spec, payload.clone()) {
+                family_of.insert(id, fi);
+            }
+        }
+    }
+    let accepted = stream.sent();
+    let shed = stream.shed();
+    anyhow::ensure!(
+        accepted + shed == (4 * BURST) as u64,
+        "every request is accounted: accepted or shed"
+    );
+    anyhow::ensure!(shed > 0, "saturating bursts must shed at admission");
+    println!(
+        "admission: {accepted} accepted + {shed} shed = {} submitted \
+         (budget {BUDGET}/key, {BURST}-req bursts x {} keys)",
+        4 * BURST,
+        families.len()
+    );
+
+    // exactly-once + bit-identity: every accepted request is answered,
+    // and every answer equals its family's library oracle
+    let responses = stream.drain();
+    anyhow::ensure!(responses.len() as u64 == accepted, "every accepted request answers once");
+    for r in responses {
+        let fi = family_of.remove(&r.id).expect("known id, never answered twice");
+        let got = r.result?;
+        let want = &families[fi].2;
+        let same = match (&got, want) {
+            (FilterOutput::U8(a), FilterOutput::U8(b)) => a.same_pixels(b),
+            (FilterOutput::U16(a), FilterOutput::U16(b)) => a.same_pixels(b),
+            _ => false,
+        };
+        anyhow::ensure!(same, "request {} diverges from the library oracle", r.id);
+    }
+    anyhow::ensure!(family_of.is_empty());
+    let wall = t0.elapsed().as_secs_f64();
+    println!("all {accepted} replies verified against the library oracles ✓ ({wall:.2}s)");
+
+    // bounded stages + propagated backpressure
+    let snap = coord.metrics();
+    println!("{snap}");
+    anyhow::ensure!(snap.shed == shed && snap.completed == accepted && snap.failed == 0);
+    let peak = snap.stage_peak;
+    // resolve: one channel of STAGE_CAP + the stage thread's holding
+    // slot; execute: per-lane queue + in-flight batch, two lanes
+    anyhow::ensure!(
+        peak[1] <= (STAGE_CAP + 1) as u64 && peak[2] <= (2 * (STAGE_CAP + MAX_BATCH)) as u64,
+        "stage depths must stay bounded: {peak:?}"
+    );
+    anyhow::ensure!(
+        snap.stage_blocked_sends.iter().sum::<u64>() > 0,
+        "a saturating producer must block some handoff"
+    );
+    println!(
+        "stage peaks [in/res/exec/reply] {:?} within bounds, {} blocked handoffs ✓",
+        peak,
+        snap.stage_blocked_sends.iter().sum::<u64>()
+    );
+
+    // budget release: with everything replied, a hot key admits again
+    let (spec, payload, _) = &families[0];
+    let t = coord.submit(*spec, payload.clone())?;
+    anyhow::ensure!(t.wait()?.result.is_ok(), "freed budget must admit and serve");
+    println!("budget slots released after replies ✓");
+    coord.shutdown();
+    println!("pipeline_serve OK");
+    Ok(())
+}

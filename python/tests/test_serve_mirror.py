@@ -1,0 +1,62 @@
+"""Serve-baseline mirror checks: the staged pipeline's admission and
+warm-ahead arithmetic (``python/tools/mirror_counts.py:serve_baseline``)
+must agree with the committed ``BENCH_serve.json`` CI gate baseline —
+the same closed forms ``bench_harness::serve`` computes on the rust
+side.
+
+Pure arithmetic, no jax: runs anywhere pytest does.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(REPO / "python" / "tools"))
+
+import mirror_counts as mc  # noqa: E402
+
+BASELINE = REPO / "rust" / "benches" / "baselines" / "BENCH_serve.json"
+
+
+def headline():
+    return json.loads(BASELINE.read_text())["headline"]
+
+
+def test_serve_baseline_matches_committed_headline():
+    got = mc.serve_baseline()["headline"]
+    want = headline()
+    assert set(got) == set(want)
+    for key, value in want.items():
+        assert got[key] == value, key
+
+
+def test_admission_arithmetic():
+    # 4 plan families, each bursting SATURATE_BURST requests against a
+    # per-key budget of SATURATE_BUDGET: accepted = families x budget,
+    # shed = the rest, and nothing vanishes
+    h = headline()
+    assert h["admission_budget_per_key"] == mc.SATURATE_BUDGET
+    assert h["saturated_accepted"] == 4 * mc.SATURATE_BUDGET
+    assert h["saturated_shed"] == 4 * (mc.SATURATE_BURST - mc.SATURATE_BUDGET)
+    assert h["saturated_accepted"] + h["saturated_shed"] == 4 * mc.SATURATE_BURST
+    assert h["stage_depth_bound"] == mc.SATURATE_STAGE_CAP
+
+
+def test_warm_ahead_doubles_plan_touches():
+    # the resolve stage warms every request's plan before execute
+    # touches it: each request is two cache touches, so
+    # hits == 2 * requests - resolutions
+    h = headline()
+    assert h["plan_hits"] == 2 * h["requests"] - h["plan_resolutions"]
+    assert h["plan_resolutions_per_request"] == h["plan_resolutions"] / h["requests"]
+
+
+def test_saturated_tail_is_budget_times_parallel_price():
+    # tail latency of an accepted same-key burst: the last of BUDGET
+    # requests waits for the whole burst at the fused-serving price
+    h = headline()
+    mix = mc.rows_simd_linear(240, 320, 7)
+    mix += mc.cols_simd_linear(240, 320, 7)
+    want = mc.SATURATE_BUDGET * mc.parallel_price_ns(mix, mc.SERVE_FUSED_WORKERS) / 1e6
+    assert abs(h["saturated_tail_ms"] - want) < 1e-12

@@ -120,6 +120,9 @@ pub struct ServeResult {
     pub plan_resolutions: u64,
     /// Plan-cache hits across all workers.
     pub plan_hits: u64,
+    /// Per-stage depth high-water marks
+    /// (ingress/resolve/execute/reply).
+    pub stage_peak: [u64; crate::coordinator::metrics::PIPELINE_STAGES],
 }
 
 impl ServeResult {
@@ -144,9 +147,7 @@ pub fn serve_native(requests: usize, workers: usize, w: usize) -> anyhow::Result
         max_batch: 16,
         backend: BackendChoice::NativeOnly,
         artifact_dir: None,
-        morph: MorphConfig::default(),
-        precompile: false,
-        max_bands_per_request: 0,
+        ..CoordinatorConfig::default()
     })?;
     let img = Arc::new(synth::paper_image(0x5E57E));
     let ops = [
@@ -179,6 +180,7 @@ pub fn serve_native(requests: usize, workers: usize, w: usize) -> anyhow::Result
         shed: snap.shed,
         plan_resolutions: snap.plan_resolutions,
         plan_hits: snap.plan_hits,
+        stage_peak: snap.stage_peak,
     };
     coord.shutdown();
     Ok(out)

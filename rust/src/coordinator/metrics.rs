@@ -63,6 +63,17 @@ impl Histogram {
     }
 }
 
+/// Number of pipeline stages instrumented with depth/occupancy
+/// counters, in flow order: ingress (validate/decode), plan-resolve,
+/// banded-execute, reply.
+pub const PIPELINE_STAGES: usize = 4;
+
+/// Stage indices into the per-stage arrays.
+pub const STAGE_INGRESS: usize = 0;
+pub const STAGE_RESOLVE: usize = 1;
+pub const STAGE_EXECUTE: usize = 2;
+pub const STAGE_REPLY: usize = 3;
+
 /// All service-level metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -91,11 +102,43 @@ pub struct Metrics {
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub total_latency: Histogram,
+    /// Requests currently **in** each pipeline stage (entered, not yet
+    /// handed to the next stage).  Bounded by the stage's channel
+    /// capacity plus its worker count — the backpressure invariant the
+    /// pipeline tests assert.
+    pub stage_depth: [AtomicU64; PIPELINE_STAGES],
+    /// High-water mark of `stage_depth` per stage.
+    pub stage_peak: [AtomicU64; PIPELINE_STAGES],
+    /// Inter-stage sends that found the downstream channel full and had
+    /// to wait (the backpressure-propagation signal: non-zero under a
+    /// saturating producer, zero when the pipeline keeps up).
+    pub stage_blocked_sends: [AtomicU64; PIPELINE_STAGES],
 }
 
 impl Metrics {
     pub fn inc(counter: &AtomicU64) {
         counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request entered stage `i`: bump the live depth and fold it
+    /// into the stage's high-water mark.
+    pub fn stage_enter(&self, i: usize) {
+        let d = self.stage_depth[i].fetch_add(1, Ordering::Relaxed) + 1;
+        self.stage_peak[i].fetch_max(d, Ordering::Relaxed);
+    }
+
+    /// A request left stage `i` (handed downstream or replied).
+    pub fn stage_exit(&self, i: usize) {
+        self.stage_depth[i].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Total requests currently inside the pipeline (sum of live stage
+    /// depths).
+    pub fn pipeline_depth(&self) -> u64 {
+        self.stage_depth
+            .iter()
+            .map(|d| d.load(Ordering::Relaxed))
+            .sum()
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -117,6 +160,11 @@ impl Metrics {
             total_mean_us: self.total_latency.mean_ns() / 1e3,
             total_p50_us: self.total_latency.quantile_ns(0.5) as f64 / 1e3,
             total_p99_us: self.total_latency.quantile_ns(0.99) as f64 / 1e3,
+            stage_depth: std::array::from_fn(|i| self.stage_depth[i].load(Ordering::Relaxed)),
+            stage_peak: std::array::from_fn(|i| self.stage_peak[i].load(Ordering::Relaxed)),
+            stage_blocked_sends: std::array::from_fn(|i| {
+                self.stage_blocked_sends[i].load(Ordering::Relaxed)
+            }),
         }
     }
 }
@@ -141,6 +189,14 @@ pub struct Snapshot {
     pub total_mean_us: f64,
     pub total_p50_us: f64,
     pub total_p99_us: f64,
+    /// Live per-stage depths at snapshot time (ingress, resolve,
+    /// execute, reply).
+    pub stage_depth: [u64; PIPELINE_STAGES],
+    /// Per-stage depth high-water marks.
+    pub stage_peak: [u64; PIPELINE_STAGES],
+    /// Per-stage counts of downstream sends that had to wait on a full
+    /// channel.
+    pub stage_blocked_sends: [u64; PIPELINE_STAGES],
 }
 
 impl Snapshot {
@@ -173,7 +229,8 @@ impl std::fmt::Display for Snapshot {
              fused batches/requests = {}/{} \
              plans resolved/hit = {}/{} ({:.4} resolutions/req) \
              queue p50/p99 = {:.0}/{:.0} µs, exec p50/p99 = {:.0}/{:.0} µs, \
-             total mean/p50/p99 = {:.0}/{:.0}/{:.0} µs",
+             total mean/p50/p99 = {:.0}/{:.0}/{:.0} µs \
+             stage peaks [in/res/exec/reply] = {:?} blocked sends = {:?}",
             self.submitted,
             self.completed,
             self.failed,
@@ -192,6 +249,8 @@ impl std::fmt::Display for Snapshot {
             self.total_mean_us,
             self.total_p50_us,
             self.total_p99_us,
+            self.stage_peak,
+            self.stage_blocked_sends,
         )
     }
 }
@@ -227,6 +286,25 @@ mod tests {
         h.record(0);
         assert_eq!(h.count(), 1);
         assert!(h.quantile_ns(0.5) >= 1);
+    }
+
+    #[test]
+    fn stage_depth_tracks_enter_exit_and_peak() {
+        let m = Metrics::default();
+        m.stage_enter(STAGE_EXECUTE);
+        m.stage_enter(STAGE_EXECUTE);
+        m.stage_enter(STAGE_INGRESS);
+        assert_eq!(m.pipeline_depth(), 3);
+        m.stage_exit(STAGE_EXECUTE);
+        let s = m.snapshot();
+        assert_eq!(s.stage_depth, [1, 0, 1, 0]);
+        assert_eq!(s.stage_peak, [1, 0, 2, 0]);
+        assert_eq!(s.stage_blocked_sends, [0; PIPELINE_STAGES]);
+        m.stage_exit(STAGE_EXECUTE);
+        m.stage_exit(STAGE_INGRESS);
+        assert_eq!(m.pipeline_depth(), 0);
+        // peaks are sticky
+        assert_eq!(m.snapshot().stage_peak[STAGE_EXECUTE], 2);
     }
 
     #[test]

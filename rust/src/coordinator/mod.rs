@@ -1,16 +1,30 @@
-//! L3 coordinator: the morphology filtering service.
-//!
-//! Architecture (std threads; the offline build has no tokio, and the
-//! PJRT CPU client is synchronous anyway):
+//! L3 coordinator: the morphology filtering service, served by a
+//! **staged pipeline** (std threads; the offline build has no tokio,
+//! and the PJRT CPU client is synchronous anyway):
 //!
 //! ```text
-//!  submit(FilterSpec, payload) ──► BatchQueue (bounded, key-grouped,
-//!     │               │            FIFO-aged across keys)
-//!     └─ Ticket ◄─────┘                        worker 0 ─► reply
-//!  stream() ──► SubmitStream::send ──► same queue, one shared
-//!     │                                reply channel per stream
-//!     └─ SubmitStream::recv ◄── completions, any order, tagged by id
+//!  submit(FilterSpec, payload) ──► admit: try_send + per-key budget —
+//!     │                            the ONLY lossy door (sheds, never
+//!     │                            blocks the caller)
+//!     │                              │ bounded channel
+//!     │                         [ingress]      validate the spec
+//!     │                              │ bounded channel, blocking send
+//!     │                         [plan-resolve] warm the plan on the
+//!     │                              │         lane it will run on
+//!     │                              │ per-lane BatchQueue (key-affine)
+//!     │                         [execute ×N]   fused / per-request
+//!     │                              │ bounded channel
+//!     └─ Ticket ◄──────────────  [reply]       budget release + send
 //! ```
+//!
+//! Each stage is a small worker set over a bounded channel
+//! ([`pipeline`]): past admission, stage-to-stage sends **block** (with
+//! a deadline backstop), so backpressure propagates stage-to-stage and
+//! queue pulls overlap in-flight band execution — the plan-resolve
+//! stage runs ahead of execute, so hot keys are warm before their
+//! batch lands.  Every admitted request is replied **exactly once**,
+//! even across panics while serving (stage-local isolation rebuilds
+//! the poisoned engine and answers the request with an error).
 //!
 //! Requests carry a full [`crate::morphology::FilterSpec`] — op chain
 //! (including derived ops and multi-op pipelines), window,
@@ -20,27 +34,29 @@
 //! [`Coordinator::submit_many`] are the **streaming** form: producers
 //! enqueue without blocking per ticket and responses flow back over one
 //! shared channel in *completion* order (each
-//! [`request::FilterResponse`] carries its request id).  The historical
-//! per-op × per-depth surface (`filter`/`filter_u16` with string ops)
-//! survives as thin wrappers that build single-op specs with the
-//! coordinator's default [`MorphConfig`].
+//! [`request::FilterResponse`] carries its request id).  The client
+//! API is **spec-only**: string op names enter through
+//! [`crate::morphology::FilterSpec::parse_op`], which builds the same
+//! typed spec every other entry point uses.
 //!
-//! ## Plan-pinned worker batches
+//! ## Plan-pinned lanes
 //!
-//! Each worker owns its engines — an optional [`XlaRuntime`] (PJRT,
-//! executing the python-AOT artifacts; `PjRtLoadedExecutable` is not
-//! `Sync`, so runtimes are never shared) and a [`NativeEngine`] (§5.3
-//! hybrid morphology behind a **plan cache** keyed on the *canonical*
-//! spec, [`crate::morphology::FilterSpec::canonical_for`]).  A worker
-//! pulls a same-key batch, the first request resolves the plan, and the
-//! whole batch — plus every following same-key batch the affinity pull
-//! keeps returning — runs **pinned to that one plan**.  Because plans
-//! are position-independent, this holds across an ROI crop *sweep*: all
-//! interior same-shape crops hit one plan (`plan_resolutions` /
-//! `plan_hits` in [`metrics::Snapshot`] meter it; `BENCH_serve.json`
-//! gates resolutions-per-request in CI).  The queue's FIFO aging
-//! ([`queue`]) bounds how long a pinned worker may ride one hot key
-//! while colder keys wait.
+//! Each execute lane owns its engines — an optional [`XlaRuntime`]
+//! (PJRT, executing the python-AOT artifacts; `PjRtLoadedExecutable` is
+//! not `Sync`, so runtimes are never shared) and a [`NativeEngine`]
+//! (§5.3 hybrid morphology behind a **plan cache** keyed on the
+//! *canonical* spec, [`crate::morphology::FilterSpec::canonical_for`]).
+//! One [`request::BatchKey`] always routes to one lane, so a lane pulls
+//! a same-key batch whose plan the resolve stage already warmed, and
+//! the whole batch — plus every following same-key batch the affinity
+//! pull keeps returning — runs **pinned to that one plan**.  Because
+//! plans are position-independent, this holds across an ROI crop
+//! *sweep*: all interior same-shape crops hit one plan
+//! (`plan_resolutions` / `plan_hits` in [`metrics::Snapshot`] meter it,
+//! warm-ahead included — `G` same-family requests score `1` resolution
+//! + `2G − 1` hits; `BENCH_serve.json` gates resolutions-per-request in
+//! CI).  The lane queue's FIFO aging ([`queue`]) bounds how long a
+//! pinned lane may ride one hot key while colder keys wait.
 //!
 //! ## Fused super-passes
 //!
@@ -65,10 +81,10 @@
 //! never mix depths, and u16 requests always execute on the native
 //! engine (and fail under [`BackendChoice::XlaOnly`]).
 //!
-//! Spec validation happens on the worker: an invalid spec (even window,
-//! out-of-bounds ROI) completes its ticket with an error result and
-//! counts toward the `failed` metric, exactly like the stringly
-//! "unknown op" requests of the previous API.
+//! Spec validation happens at **ingress**: an invalid spec (even
+//! window, out-of-bounds ROI) completes its ticket with an error result
+//! and counts toward the `failed` metric without ever touching an
+//! engine.
 //!
 //! ## Band budget
 //!
@@ -85,24 +101,22 @@
 //! only clamps the band *count*; outputs stay bit-identical.
 
 pub mod metrics;
+pub mod pipeline;
 pub mod queue;
 pub mod request;
 
-use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
-use crate::image::Image;
-use crate::morphology::{parallel, FilterOp, FilterSpec, MorphConfig, Parallelism};
-use crate::runtime::{Engine, Manifest, NativeEngine, XlaRuntime};
+use crate::morphology::{FilterOp, FilterSpec, MorphConfig};
+use crate::runtime::{Manifest, NativeEngine, XlaRuntime};
 use metrics::{Metrics, Snapshot};
-use queue::{BatchQueue, Pull};
-use request::{BatchKey, FilterOutput, FilterResponse, ImagePayload, Pending, PixelDepth, Ticket};
+use pipeline::{Pipeline, Shed};
+use request::{FilterResponse, ImagePayload, Pending, Ticket};
 
 /// Which engine(s) the router may use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -118,28 +132,57 @@ pub enum BackendChoice {
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
+    /// Execute lanes (each with its own engines and batch queue).
     pub workers: usize,
-    /// Bound on queued requests (backpressure limit).
+    /// Bound on requests waiting at admission (the global backpressure
+    /// limit: a full admission channel sheds).
     pub queue_capacity: usize,
-    /// Max same-key requests a worker takes per pull.
+    /// Max same-key requests a lane takes per pull.
     pub max_batch: usize,
     pub backend: BackendChoice,
     /// Artifact directory (required unless `NativeOnly`).
     pub artifact_dir: Option<PathBuf>,
-    /// Default configuration applied by the legacy string-op wrappers
-    /// (`filter`/`filter_u16`); spec submissions carry their own.
+    /// Engine-level configuration for the lanes' [`NativeEngine`]s
+    /// (applied by their legacy artifact wrappers); spec submissions
+    /// carry their own configuration.
     pub morph: MorphConfig,
     /// Compile all artifacts at startup instead of lazily.
     pub precompile: bool,
     /// Intra-image band budget per request: no single request may shard
     /// across more bands than this, so one giant image cannot
-    /// monopolize the shared [`parallel::BandPool`] under streaming
+    /// monopolize the shared
+    /// [`crate::morphology::parallel::BandPool`] under streaming
     /// load.  `0` (the default) derives `cores / workers` (≥ 1) at
     /// startup, keeping `workers × max_bands_per_request ≤ cores`; a
     /// nonzero `NEON_MORPH_MAX_BANDS` environment variable overrides
     /// both (`0` in the env also means "derive").  Clamping the band
     /// count never changes output pixels.
     pub max_bands_per_request: usize,
+    /// Per-key admission budget: at most this many requests of one
+    /// [`request::BatchKey`] may be in flight (admitted, not yet
+    /// replied) at once; further same-key submissions shed with an
+    /// error until replies free slots.  `0` (the default) disables the
+    /// budget.  Bounds how far ahead one hot key can fill the pipeline
+    /// before the lane queues' FIFO aging even sees it.
+    pub admission_budget: usize,
+    /// Capacity of each inter-stage channel (ingress→resolve, each
+    /// resolve→execute lane queue, execute→reply).  `0` (the default)
+    /// derives `queue_capacity.clamp(1, 32)`.  Per-stage depths are
+    /// bounded by this plus the stage's sender count — the invariant
+    /// the pipeline tests assert.
+    pub stage_capacity: usize,
+    /// Stall backstop on stage-to-stage handoffs: a blocked send that
+    /// outlives this deadline fails its request with a
+    /// pipeline-stalled error instead of wedging the stage forever.
+    /// Zero means the default (60 s — generous on purpose: it exists
+    /// to catch wedges, not to pace load; pacing is the channel
+    /// bounds' job).
+    pub stage_deadline: Duration,
+    /// Test-only fault injection: panic while serving any request
+    /// whose spec is exactly this single op (both the fused and the
+    /// per-request path), exercising the pipeline's panic isolation.
+    #[doc(hidden)]
+    pub debug_fault_op: Option<FilterOp>,
 }
 
 impl Default for CoordinatorConfig {
@@ -153,13 +196,17 @@ impl Default for CoordinatorConfig {
             morph: MorphConfig::default(),
             precompile: false,
             max_bands_per_request: 0,
+            admission_budget: 0,
+            stage_capacity: 0,
+            stage_deadline: Duration::from_secs(60),
+            debug_fault_op: None,
         }
     }
 }
 
 /// Resolve the effective per-request band cap for `cfg` (see
 /// [`CoordinatorConfig::max_bands_per_request`]).
-fn resolve_band_cap(cfg: &CoordinatorConfig) -> usize {
+pub(crate) fn resolve_band_cap(cfg: &CoordinatorConfig) -> usize {
     // env 0 means the same as config 0 — "derive" — never "cap at 1"
     if let Some(n) = std::env::var("NEON_MORPH_MAX_BANDS")
         .ok()
@@ -177,16 +224,14 @@ fn resolve_band_cap(cfg: &CoordinatorConfig) -> usize {
 
 /// The running service.
 pub struct Coordinator {
-    queue: Arc<BatchQueue>,
+    pipeline: Pipeline,
     metrics: Arc<Metrics>,
     manifest: Option<Arc<Manifest>>,
-    default_morph: MorphConfig,
     next_id: AtomicU64,
-    workers: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Spawn workers and return the running coordinator.
+    /// Spawn the pipeline stages and return the running coordinator.
     pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
         let manifest = match (&cfg.backend, &cfg.artifact_dir) {
             (BackendChoice::NativeOnly, _) => None,
@@ -203,30 +248,13 @@ impl Coordinator {
             (_, None) => None,
         };
 
-        let queue = Arc::new(BatchQueue::new(cfg.queue_capacity, cfg.max_batch));
         let metrics = Arc::new(Metrics::default());
-        let mut workers = Vec::new();
-        // workers see the *resolved* band budget (default: cores/workers)
-        let band_cap = resolve_band_cap(&cfg);
-        for wid in 0..cfg.workers.max(1) {
-            let queue = queue.clone();
-            let metrics = metrics.clone();
-            let manifest = manifest.clone();
-            let mut cfg = cfg.clone();
-            cfg.max_bands_per_request = band_cap;
-            let handle = std::thread::Builder::new()
-                .name(format!("morph-worker-{wid}"))
-                .spawn(move || worker_loop(wid, &cfg, manifest, &queue, &metrics))
-                .context("spawning worker")?;
-            workers.push(handle);
-        }
+        let pipeline = Pipeline::start(&cfg, manifest.clone(), metrics.clone())?;
         Ok(Coordinator {
-            queue,
+            pipeline,
             metrics,
             manifest,
-            default_morph: cfg.morph,
             next_id: AtomicU64::new(1),
-            workers,
         })
     }
 
@@ -240,7 +268,7 @@ impl Coordinator {
         })
     }
 
-    /// Enqueue one request whose response goes to `reply` — the shared
+    /// Admit one request whose response goes to `reply` — the shared
     /// non-blocking core of [`Coordinator::submit`] (fresh channel per
     /// ticket) and [`SubmitStream::send`] (one channel per stream).
     fn enqueue(
@@ -259,22 +287,30 @@ impl Coordinator {
             },
             reply,
         };
-        match self.queue.push(pending) {
+        let key = pending.req.batch_key();
+        match self.pipeline.admit(pending) {
             Ok(()) => {
                 Metrics::inc(&self.metrics.submitted);
                 Ok(id)
             }
-            Err(_) => {
+            Err(shed) => {
                 Metrics::inc(&self.metrics.shed);
-                Err(anyhow!("queue full: request shed (backpressure)"))
+                Err(match shed {
+                    Shed::Full => anyhow!("queue full: request shed (backpressure)"),
+                    Shed::Budget => anyhow!(
+                        "admission budget exhausted for {key}: request shed (backpressure)"
+                    ),
+                    Shed::Closed => anyhow!("pipeline is shut down: request shed"),
+                })
             }
         }
     }
 
     /// Submit a spec with a depth-tagged payload — the one submission
-    /// path for every op chain, depth and ROI.  Fails fast when the
-    /// queue is full (backpressure) or closed; spec validity is checked
-    /// by the executing worker (the ticket then carries the error).
+    /// path for every op chain, depth and ROI.  Fails fast when
+    /// admission sheds (full pipeline, exhausted per-key budget) or the
+    /// pipeline is closed; spec validity is checked by the ingress
+    /// stage (the ticket then carries the error).
     pub fn submit(&self, spec: FilterSpec, image: impl Into<ImagePayload>) -> Result<Ticket> {
         let (tx, rx) = mpsc::channel();
         let id = self.enqueue(spec, image.into(), tx)?;
@@ -284,7 +320,7 @@ impl Coordinator {
     /// Open a streaming submission handle: [`SubmitStream::send`]
     /// enqueues without blocking (no per-ticket channel), and
     /// [`SubmitStream::recv`] yields responses in *completion* order —
-    /// the producer keeps the queue full while workers drain whole
+    /// the producer keeps the pipeline full while lanes drain whole
     /// same-key runs through their pinned plans.
     pub fn stream(&self) -> SubmitStream<'_> {
         let (tx, rx) = mpsc::channel();
@@ -322,64 +358,29 @@ impl Coordinator {
         self.submit(spec, image)?.wait()
     }
 
-    /// Build the single-op spec a legacy string-op call denotes, using
-    /// the coordinator's default morph configuration.
-    fn legacy_spec(&self, op: &str, w_x: usize, w_y: usize) -> Result<FilterSpec> {
-        let op: FilterOp = op.parse().map_err(|e| anyhow!("{e}"))?;
-        Ok(FilterSpec::new(op, w_x, w_y).with_config(self.default_morph))
-    }
-
-    /// Legacy wrapper: submit a u8 request by op name and block for the
-    /// result.  Bit-identical to `filter_spec` with the equivalent
-    /// single-op spec.
-    pub fn filter(
-        &self,
-        op: &str,
-        w_x: usize,
-        w_y: usize,
-        image: Arc<Image<u8>>,
-    ) -> Result<FilterResponse> {
-        self.filter_spec(self.legacy_spec(op, w_x, w_y)?, image)
-    }
-
-    /// Legacy wrapper: submit a u16 request by op name and block.
-    pub fn filter_u16(
-        &self,
-        op: &str,
-        w_x: usize,
-        w_y: usize,
-        image: Arc<Image<u16>>,
-    ) -> Result<FilterResponse> {
-        self.filter_spec(self.legacy_spec(op, w_x, w_y)?, image)
-    }
-
     pub fn metrics(&self) -> Snapshot {
         self.metrics.snapshot()
     }
 
+    /// Requests currently inside the pipeline (sum of live stage
+    /// depths).
     pub fn queue_depth(&self) -> usize {
-        self.queue.len()
+        self.metrics.pipeline_depth() as usize
     }
 
     pub fn manifest(&self) -> Option<&Manifest> {
         self.manifest.as_deref()
     }
 
-    /// Close the queue, drain and join workers.
+    /// Close admission, drain every stage and join the cascade.
     pub fn shutdown(mut self) {
-        self.queue.close();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
+        self.pipeline.shutdown();
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.queue.close();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
+        self.pipeline.shutdown();
     }
 }
 
@@ -392,7 +393,7 @@ impl Drop for Coordinator {
 /// are matched to submissions by [`request::FilterResponse::id`] — with
 /// key-grouped batching, completion order is deliberately *not*
 /// submission order.  Dropping a stream mid-flight is safe: in-flight
-/// requests still execute and their responses are discarded (workers
+/// requests still execute and their responses are discarded (stages
 /// never block on a gone consumer), so shutting the coordinator down
 /// with a live-then-dropped stream drains gracefully.
 pub struct SubmitStream<'c> {
@@ -438,7 +439,7 @@ impl SubmitStream<'_> {
 
     /// Block for the next completed response; `None` once every sent
     /// request has been received.  Cannot hang on accepted work: the
-    /// worker loop answers every enqueued request exactly once, turning
+    /// pipeline answers every admitted request exactly once, turning
     /// even a panic while serving into an error response.
     pub fn recv(&mut self) -> Option<FilterResponse> {
         if self.received == self.sent {
@@ -493,404 +494,11 @@ impl SubmitStream<'_> {
     }
 }
 
-fn worker_loop(
-    wid: usize,
-    cfg: &CoordinatorConfig,
-    manifest: Option<Arc<Manifest>>,
-    queue: &BatchQueue,
-    metrics: &Metrics,
-) {
-    let mut native = NativeEngine::new(cfg.morph);
-    let mut xla: Option<XlaRuntime> = match (&cfg.backend, &cfg.artifact_dir, &manifest) {
-        (BackendChoice::NativeOnly, _, _) | (_, _, None) => None,
-        (_, Some(dir), Some(_)) => XlaRuntime::new(dir).ok(),
-        (_, None, _) => None,
-    };
-    if cfg.precompile {
-        if let Some(rt) = xla.as_mut() {
-            let _ = rt.precompile(|_| true);
-        }
-    }
-
-    let mut affinity: Option<BatchKey> = None;
-    loop {
-        match queue.pull(affinity.as_ref(), Duration::from_millis(100)) {
-            Pull::Closed => break,
-            Pull::Batch(batch) => {
-                Metrics::inc(&metrics.batches);
-                metrics
-                    .batched_requests
-                    .fetch_add(batch.len() as u64, Ordering::Relaxed);
-                affinity = batch.first().map(|p| p.req.batch_key());
-                // a same-key batch of full-image native-routed requests
-                // runs as ONE fused super-pass; everything else (below)
-                // serves per request
-                let batch = match try_serve_fused(
-                    wid, cfg, &manifest, &mut native, &xla, metrics, batch,
-                ) {
-                    Ok(()) => Vec::new(),
-                    Err(batch) => batch,
-                };
-                for p in batch {
-                    let id = p.req.id;
-                    let reply = p.reply.clone();
-                    // a panic while serving must not kill the worker or
-                    // orphan the request: streaming consumers block on
-                    // one reply per send (a per-ticket channel would at
-                    // least disconnect; the stream's shared channel
-                    // cannot), so every Pending is answered exactly once
-                    let panicked = catch_unwind(AssertUnwindSafe(|| {
-                        serve_one(wid, cfg, &manifest, &mut native, &mut xla, metrics, p);
-                    }))
-                    .is_err();
-                    if panicked {
-                        // the engine may hold half-updated state (a plan
-                        // arena taken mid-execution): rebuild it rather
-                        // than reuse poisoned plans — draining its
-                        // counters first, so the pre-panic requests stay
-                        // in the metrics (resolutions + hits must keep
-                        // accounting for every native-served request)
-                        let stats = native.take_plan_stats();
-                        metrics
-                            .plan_resolutions
-                            .fetch_add(stats.resolutions, Ordering::Relaxed);
-                        metrics.plan_hits.fetch_add(stats.hits, Ordering::Relaxed);
-                        native = NativeEngine::new(cfg.morph);
-                        Metrics::inc(&metrics.failed);
-                        let _ = reply.send(FilterResponse {
-                            id,
-                            result: Err(anyhow!(
-                                "worker {wid} panicked while serving request {id}"
-                            )),
-                            queue_ns: 0,
-                            exec_ns: 0,
-                            backend: "panic",
-                            worker: wid,
-                        });
-                    }
-                }
-                // aggregate this batch's plan-cache traffic: a same-key
-                // run pinned to one plan shows up as 1 resolution + N-1
-                // hits here
-                let stats = native.take_plan_stats();
-                metrics
-                    .plan_resolutions
-                    .fetch_add(stats.resolutions, Ordering::Relaxed);
-                metrics.plan_hits.fetch_add(stats.hits, Ordering::Relaxed);
-            }
-        }
-    }
-}
-
-/// Serve a whole same-key batch through the native engine's fused
-/// super-pass ([`NativeEngine::run_spec_batch`]) when every request
-/// would route native anyway.  The queue guarantees one `BatchKey` per
-/// batch (same spec, shape and depth), so eligibility is a per-batch
-/// decision: more than one request, a full-image non-transpose spec,
-/// and no compiled-artifact route that could peel the batch onto the
-/// XLA backend.  Returns the batch untouched (`Err`) when ineligible
-/// and the caller serves it per request.
-///
-/// The fused run executes under the same [`capped_spec`] clamp as
-/// per-request serving; its one band fork is shared by every request in
-/// the batch, so per-request band pressure only drops relative to
-/// per-image serving.  Outputs stay bit-identical either way.  The
-/// super-pass execution time is attributed to requests in equal shares
-/// (`exec_ns = total / n`).
-fn try_serve_fused(
-    wid: usize,
-    cfg: &CoordinatorConfig,
-    manifest: &Option<Arc<Manifest>>,
-    native: &mut NativeEngine,
-    xla: &Option<XlaRuntime>,
-    metrics: &Metrics,
-    batch: Vec<Pending>,
-) -> std::result::Result<(), Vec<Pending>> {
-    if batch.len() < 2 {
-        return Err(batch);
-    }
-    let spec = batch[0].req.spec;
-    if spec.roi.is_some() || spec.is_transpose() || cfg.backend == BackendChoice::XlaOnly {
-        return Err(batch);
-    }
-    let (h, w) = (batch[0].req.image.height(), batch[0].req.image.width());
-    // under Auto an artifact match routes u8 requests to the XLA
-    // runtime — leave those batches to the per-request router
-    if let (ImagePayload::U8(_), Some(op)) = (&batch[0].req.image, spec.single_identity_op()) {
-        let has_artifact = xla.is_some()
-            && manifest
-                .as_ref()
-                .is_some_and(|m| m.find(op.name(), h, w, spec.w_x, spec.w_y).is_some());
-        if has_artifact {
-            return Err(batch);
-        }
-    }
-
-    let n = batch.len();
-    let native_spec = capped_spec(&spec, &batch[0].req.image, cfg.max_bands_per_request);
-    let queue_ns: Vec<u64> = batch
-        .iter()
-        .map(|p| p.req.enqueued.elapsed().as_nanos() as u64)
-        .collect();
-    let t = Instant::now();
-    let outcome = catch_unwind(AssertUnwindSafe(|| match &batch[0].req.image {
-        ImagePayload::U8(_) => {
-            let imgs: Vec<&Image<u8>> = batch
-                .iter()
-                .map(|p| match &p.req.image {
-                    ImagePayload::U8(im) => &**im,
-                    ImagePayload::U16(_) => unreachable!("batch keys include the dtype"),
-                })
-                .collect();
-            native.run_spec_batch(&native_spec, &imgs).map(|(outs, fused)| {
-                (outs.into_iter().map(FilterOutput::U8).collect::<Vec<_>>(), fused)
-            })
-        }
-        ImagePayload::U16(_) => {
-            let imgs: Vec<&Image<u16>> = batch
-                .iter()
-                .map(|p| match &p.req.image {
-                    ImagePayload::U16(im) => &**im,
-                    ImagePayload::U8(_) => unreachable!("batch keys include the dtype"),
-                })
-                .collect();
-            native.run_spec_batch_u16(&native_spec, &imgs).map(|(outs, fused)| {
-                (outs.into_iter().map(FilterOutput::U16).collect::<Vec<_>>(), fused)
-            })
-        }
-    }));
-    let exec_ns = t.elapsed().as_nanos() as u64 / n as u64;
-
-    match outcome {
-        Ok(Ok((outs, fused))) => {
-            if fused {
-                Metrics::inc(&metrics.fused_batches);
-                metrics.fused_requests.fetch_add(n as u64, Ordering::Relaxed);
-            }
-            for ((p, out), q_ns) in batch.into_iter().zip(outs).zip(queue_ns) {
-                metrics.queue_latency.record(q_ns);
-                metrics.exec_latency.record(exec_ns);
-                metrics.total_latency.record(q_ns + exec_ns);
-                Metrics::inc(&metrics.completed);
-                let _ = p.reply.send(FilterResponse {
-                    id: p.req.id,
-                    result: Ok(out),
-                    queue_ns: q_ns,
-                    exec_ns,
-                    backend: "native",
-                    worker: wid,
-                });
-            }
-        }
-        Ok(Err(e)) => {
-            // plan-time rejection (invalid spec): every request of the
-            // batch fails identically
-            let msg = format!("{e:#}");
-            for (p, q_ns) in batch.into_iter().zip(queue_ns) {
-                metrics.queue_latency.record(q_ns);
-                metrics.exec_latency.record(exec_ns);
-                metrics.total_latency.record(q_ns + exec_ns);
-                Metrics::inc(&metrics.failed);
-                let _ = p.reply.send(FilterResponse {
-                    id: p.req.id,
-                    result: Err(anyhow!("{msg}")),
-                    queue_ns: q_ns,
-                    exec_ns,
-                    backend: "native",
-                    worker: wid,
-                });
-            }
-        }
-        Err(_) => {
-            // panic mid-super-pass: the engine may hold half-updated
-            // state — drain its counters into the metrics (pre-panic
-            // requests stay accounted for), rebuild it, and fail every
-            // request of the batch
-            let stats = native.take_plan_stats();
-            metrics
-                .plan_resolutions
-                .fetch_add(stats.resolutions, Ordering::Relaxed);
-            metrics.plan_hits.fetch_add(stats.hits, Ordering::Relaxed);
-            *native = NativeEngine::new(cfg.morph);
-            for p in batch {
-                Metrics::inc(&metrics.failed);
-                let _ = p.reply.send(FilterResponse {
-                    id: p.req.id,
-                    result: Err(anyhow!(
-                        "worker {wid} panicked while serving request {}",
-                        p.req.id
-                    )),
-                    queue_ns: 0,
-                    exec_ns: 0,
-                    backend: "panic",
-                    worker: wid,
-                });
-            }
-        }
-    }
-    Ok(())
-}
-
-/// Clamp a spec's intra-image parallelism to the coordinator's
-/// per-request band budget (`cap`; 0 = unlimited).  `Auto` stays `Auto`
-/// when the cost model would pick at most `cap` bands anyway (so small
-/// images keep their sequential dispatch) and is pinned to
-/// `Fixed(cap)` otherwise; band counts never change output pixels.
-///
-/// ROI specs are priced on their **haloed block** — the shape the plan
-/// actually bands — not the full image, so a small crop of a huge image
-/// is not needlessly pinned to `Fixed(cap)` when its block would have
-/// dispatched sequentially anyway.
-fn capped_spec(spec: &FilterSpec, image: &ImagePayload, cap: usize) -> FilterSpec {
-    if cap == 0 || spec.is_transpose() {
-        return *spec;
-    }
-    let mut s = *spec;
-    s.config.parallelism = match s.config.parallelism {
-        Parallelism::Sequential => Parallelism::Sequential,
-        Parallelism::Fixed(n) => Parallelism::Fixed(n.clamp(1, cap)),
-        Parallelism::Auto if cap == 1 => Parallelism::Sequential,
-        Parallelism::Auto => {
-            // price the banding once, on the shape the plan will band;
-            // unplannable specs (even windows, out-of-bounds ROIs —
-            // the one validity predicate, `FilterSpec::validate`) fall
-            // through and fail at plan time as before
-            let (h, w) = (image.height(), image.width());
-            let bands = if s.validate(h, w).is_ok() {
-                let (bh, bw) = match s.roi {
-                    None => (h, w),
-                    Some(r) => {
-                        let (hx, hy) = s.roi_halo();
-                        let b = crate::morphology::plan::haloed_block(r, h, w, hx, hy);
-                        (b.height, b.width)
-                    }
-                };
-                match image.depth() {
-                    PixelDepth::U8 => {
-                        parallel::effective_bands::<u8>(bh, bw, s.w_x, s.w_y, &s.config)
-                    }
-                    PixelDepth::U16 => {
-                        parallel::effective_bands::<u16>(bh, bw, s.w_x, s.w_y, &s.config)
-                    }
-                }
-            } else {
-                1
-            };
-            if bands <= cap {
-                Parallelism::Auto
-            } else {
-                Parallelism::Fixed(cap)
-            }
-        }
-    };
-    s
-}
-
-fn serve_one(
-    wid: usize,
-    cfg: &CoordinatorConfig,
-    manifest: &Option<Arc<Manifest>>,
-    native: &mut NativeEngine,
-    xla: &mut Option<XlaRuntime>,
-    metrics: &Metrics,
-    p: Pending,
-) {
-    let queue_ns = p.req.enqueued.elapsed().as_nanos() as u64;
-    let spec = p.req.spec;
-    // native executions honour the per-request band budget (routing and
-    // batch keys always use the submitted spec; the clamp is
-    // bit-identical)
-    let native_spec = capped_spec(&spec, &p.req.image, cfg.max_bands_per_request);
-    let (h, w) = (p.req.image.height(), p.req.image.width());
-    // compiled artifacts exist only for u8 specs in canonical form
-    // (single op, no ROI, identity border — the shared predicate
-    // `FilterSpec::single_identity_op`; a replicate-border spec must
-    // never take the XLA path, its output pixels differ at the edges)
-    let compiled = match (&p.req.image, spec.single_identity_op()) {
-        (ImagePayload::U8(_), Some(op)) => manifest
-            .as_ref()
-            .and_then(|m| m.find(op.name(), h, w, spec.w_x, spec.w_y).cloned()),
-        _ => None,
-    };
-
-    let t = Instant::now();
-    let (result, backend): (Result<FilterOutput>, &'static str) = match &p.req.image {
-        ImagePayload::U8(img) => {
-            if cfg.backend == BackendChoice::XlaOnly {
-                match (compiled, xla.as_mut()) {
-                    (Some(meta), Some(rt)) => {
-                        (rt.run_u8(&meta, img).map(FilterOutput::U8), rt.backend_name())
-                    }
-                    (None, _) => (
-                        Err(anyhow!(
-                            "no artifact for {} (XlaOnly backend)",
-                            p.req.batch_key()
-                        )),
-                        "xla-pjrt",
-                    ),
-                    (Some(_), None) => (
-                        Err(anyhow!("XLA runtime unavailable on worker {wid}")),
-                        "xla-pjrt",
-                    ),
-                }
-            } else if let (Some(meta), Some(rt)) = (compiled.as_ref(), xla.as_mut()) {
-                match rt.run_u8(meta, img) {
-                    // Auto: degrade to native on runtime errors
-                    Err(_) => (
-                        native.run_spec(&native_spec, img).map(FilterOutput::U8),
-                        native.backend_name(),
-                    ),
-                    ok => (ok.map(FilterOutput::U8), rt.backend_name()),
-                }
-            } else {
-                (
-                    native.run_spec(&native_spec, img).map(FilterOutput::U8),
-                    native.backend_name(),
-                )
-            }
-        }
-        ImagePayload::U16(img) => {
-            if cfg.backend == BackendChoice::XlaOnly {
-                (
-                    Err(anyhow!(
-                        "no u16 artifacts exist (XlaOnly backend, {})",
-                        p.req.batch_key()
-                    )),
-                    "xla-pjrt",
-                )
-            } else {
-                (
-                    native.run_spec_u16(&native_spec, img).map(FilterOutput::U16),
-                    native.backend_name(),
-                )
-            }
-        }
-    };
-    let exec_ns = t.elapsed().as_nanos() as u64;
-
-    metrics.queue_latency.record(queue_ns);
-    metrics.exec_latency.record(exec_ns);
-    metrics.total_latency.record(queue_ns + exec_ns);
-    if result.is_ok() {
-        Metrics::inc(&metrics.completed);
-    } else {
-        Metrics::inc(&metrics.failed);
-    }
-    // receiver may have given up; dropping the response is fine
-    let _ = p.reply.send(FilterResponse {
-        id: p.req.id,
-        result,
-        queue_ns,
-        exec_ns,
-        backend,
-        worker: wid,
-    });
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::image::synth;
+    use crate::image::Image;
     use crate::morphology::{self, Roi};
     use crate::neon::Native;
 
@@ -898,7 +506,8 @@ mod tests {
     fn native_coordinator_round_trip() {
         let coord = Coordinator::start_native(2).unwrap();
         let img = Arc::new(synth::noise(32, 48, 5));
-        let resp = coord.filter("erode", 5, 3, img.clone()).unwrap();
+        let spec = FilterSpec::parse_op("erode", 5, 3).unwrap();
+        let resp = coord.filter_spec(spec, img.clone()).unwrap();
         assert_eq!(resp.backend, "native");
         let want = morphology::erode(img.view(), 5, 3);
         assert!(resp.result.unwrap().into_u8().unwrap().same_pixels(&want));
@@ -912,7 +521,8 @@ mod tests {
     fn u16_coordinator_round_trip() {
         let coord = Coordinator::start_native(2).unwrap();
         let img = Arc::new(synth::noise_u16(32, 48, 5));
-        let resp = coord.filter_u16("erode", 5, 3, img.clone()).unwrap();
+        let spec = FilterSpec::parse_op("erode", 5, 3).unwrap();
+        let resp = coord.filter_spec(spec, img.clone()).unwrap();
         assert_eq!(resp.backend, "native");
         let want = morphology::erode(img.view(), 5, 3);
         assert!(resp.result.unwrap().into_u16().unwrap().same_pixels(&want));
@@ -926,7 +536,7 @@ mod tests {
     fn spec_submission_runs_chains_and_rois() {
         let coord = Coordinator::start_native(2).unwrap();
         let img = Arc::new(synth::noise(40, 40, 9));
-        // a derived op with a ROI — inexpressible in the legacy API
+        // a derived op with a ROI — inexpressible by op name alone
         let spec = FilterSpec::new(FilterOp::TopHat, 5, 5).with_roi(Roi::new(3, 4, 20, 22));
         let resp = coord.filter_spec(spec, img.clone()).unwrap();
         let out = resp.result.unwrap().into_u8().unwrap();
@@ -988,28 +598,29 @@ mod tests {
     }
 
     #[test]
-    fn unknown_op_rejected_at_submission() {
-        // the typed spec API surfaces bad op names before queueing
+    fn unknown_op_rejected_before_submission() {
+        // the spec-only API surfaces bad op names before anything is
+        // submitted: parse_op is the string-typed door
         let coord = Coordinator::start_native(1).unwrap();
-        let img = Arc::new(synth::noise(8, 8, 2));
-        let err = coord.filter("sharpen", 3, 3, img).unwrap_err();
-        assert!(format!("{err:#}").contains("unknown op"));
+        let err = FilterSpec::parse_op("sharpen", 3, 3).unwrap_err();
+        assert!(format!("{err}").contains("unknown op"));
         assert_eq!(coord.metrics().failed, 0);
         assert_eq!(coord.metrics().submitted, 0);
         coord.shutdown();
     }
 
     #[test]
-    fn invalid_spec_fails_on_the_worker() {
-        // spec validity (window parity, ROI bounds) is checked at plan
-        // time on the worker: the ticket completes with an error and
-        // the failure is metered
+    fn invalid_spec_fails_at_ingress() {
+        // spec validity (window parity, ROI bounds) is checked by the
+        // ingress stage: the ticket completes with an error, the
+        // failure is metered, and no engine is ever touched
         let coord = Coordinator::start_native(1).unwrap();
         let img = Arc::new(synth::noise(8, 8, 2));
         let resp = coord
             .filter_spec(FilterSpec::new(FilterOp::Erode, 4, 4), img.clone())
             .unwrap();
         assert!(resp.result.is_err());
+        assert_eq!(resp.backend, "ingress");
         let resp = coord
             .filter_spec(
                 FilterSpec::new(FilterOp::Erode, 3, 3).with_roi(Roi::new(6, 6, 5, 5)),
@@ -1017,22 +628,24 @@ mod tests {
             )
             .unwrap();
         assert!(resp.result.is_err());
-        assert_eq!(coord.metrics().failed, 2);
+        let snap = coord.metrics();
+        assert_eq!(snap.failed, 2);
+        assert_eq!(snap.plan_resolutions, 0, "invalid specs never reach an engine");
         coord.shutdown();
     }
 
     #[test]
     fn backpressure_sheds_when_overloaded() {
-        // 1 worker, tiny queue, many submissions of slow-ish work
+        // 1 lane, tiny admission channel, many submissions of slow-ish
+        // work: admission must shed, and only admission (every accepted
+        // ticket still completes)
         let coord = Coordinator::start(CoordinatorConfig {
             workers: 1,
             queue_capacity: 2,
             max_batch: 1,
             backend: BackendChoice::NativeOnly,
             artifact_dir: None,
-            morph: MorphConfig::default(),
-            precompile: false,
-            max_bands_per_request: 0,
+            ..CoordinatorConfig::default()
         })
         .unwrap();
         let img = Arc::new(synth::paper_image(3));
@@ -1054,11 +667,49 @@ mod tests {
     }
 
     #[test]
+    fn admission_budget_sheds_per_key_and_frees_on_reply() {
+        // budget 2, one slow key: the 3rd same-key submission in flight
+        // must shed with the budget error; once replies land, the key
+        // admits again
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            max_batch: 1,
+            backend: BackendChoice::NativeOnly,
+            artifact_dir: None,
+            admission_budget: 2,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let img = Arc::new(synth::paper_image(7));
+        let spec = FilterSpec::new(FilterOp::Open, 15, 15);
+        let t1 = coord.submit(spec, img.clone()).unwrap();
+        let t2 = coord.submit(spec, img.clone()).unwrap();
+        let err = coord.submit(spec, img.clone()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("admission budget"),
+            "unexpected shed error: {err:#}"
+        );
+        // a different key is not throttled by the hot key's budget
+        let other = coord
+            .submit(FilterSpec::new(FilterOp::Erode, 3, 3), Arc::new(synth::noise(16, 16, 1)))
+            .unwrap();
+        assert!(other.wait().unwrap().result.is_ok());
+        assert!(t1.wait().unwrap().result.is_ok());
+        assert!(t2.wait().unwrap().result.is_ok());
+        // both replies landed: the key's budget slots are free again
+        let t3 = coord.submit(spec, img).unwrap();
+        assert!(t3.wait().unwrap().result.is_ok());
+        assert_eq!(coord.metrics().shed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
     fn transpose_request_swaps_dims() {
         let coord = Coordinator::start_native(1).unwrap();
         let img = Arc::new(synth::noise(10, 20, 8));
+        let spec = FilterSpec::parse_op("transpose", 0, 0).unwrap();
         let out = coord
-            .filter("transpose", 0, 0, img.clone())
+            .filter_spec(spec, img.clone())
             .unwrap()
             .result
             .unwrap()
@@ -1074,8 +725,9 @@ mod tests {
     fn u16_transpose_uses_8x8_tiles_end_to_end() {
         let coord = Coordinator::start_native(1).unwrap();
         let img = Arc::new(synth::noise_u16(16, 24, 8));
+        let spec = FilterSpec::parse_op("transpose", 0, 0).unwrap();
         let out = coord
-            .filter_u16("transpose", 0, 0, img.clone())
+            .filter_spec(spec, img.clone())
             .unwrap()
             .result
             .unwrap()
@@ -1091,7 +743,7 @@ mod tests {
     fn drop_shuts_down_workers() {
         let coord = Coordinator::start_native(2).unwrap();
         let img = Arc::new(synth::noise(8, 8, 1));
-        let _ = coord.filter("erode", 3, 3, img);
+        let _ = coord.filter_spec(FilterSpec::parse_op("erode", 3, 3).unwrap(), img);
         drop(coord); // must not hang
     }
 
@@ -1144,9 +796,7 @@ mod tests {
             max_batch: 1,
             backend: BackendChoice::NativeOnly,
             artifact_dir: None,
-            morph: MorphConfig::default(),
-            precompile: false,
-            max_bands_per_request: 0,
+            ..CoordinatorConfig::default()
         })
         .unwrap();
         let img = Arc::new(synth::paper_image(9));
@@ -1184,7 +834,9 @@ mod tests {
     #[test]
     fn roi_sweep_over_stream_resolves_one_plan() {
         // streaming + position-independent plans: a same-shape interior
-        // crop sweep on ONE worker is served by exactly one resolution
+        // crop sweep is served by exactly one resolution; warm-ahead
+        // doubles the touch count (each request = 1 warm + 1 exec), so
+        // G requests score 1 resolution + 2G−1 hits
         let coord = Coordinator::start(CoordinatorConfig {
             workers: 1,
             backend: BackendChoice::NativeOnly,
@@ -1209,7 +861,7 @@ mod tests {
         let snap = coord.metrics();
         assert_eq!(snap.completed, 4);
         assert_eq!(snap.plan_resolutions, 1, "one plan must serve the sweep");
-        assert_eq!(snap.plan_hits, 3);
+        assert_eq!(snap.plan_hits, 7, "4 warms + 4 executions − 1 resolution");
         assert!((snap.plan_resolutions_per_request() - 0.25).abs() < 1e-12);
         coord.shutdown();
     }
@@ -1232,7 +884,7 @@ mod tests {
 
     #[test]
     fn fused_batch_serves_every_request_bit_identically() {
-        // deterministic fused-path test: hand try_serve_fused a batch
+        // deterministic fused-path test: hand serve_fused a batch
         // directly instead of racing the queue's batch splits
         let cfg = CoordinatorConfig {
             workers: 1,
@@ -1255,7 +907,12 @@ mod tests {
                 p
             })
             .collect();
-        assert!(try_serve_fused(0, &cfg, &None, &mut native, &None, &metrics, batch).is_ok());
+        let serveds = pipeline::serve_fused(0, &cfg, &None, &mut native, &None, &metrics, batch)
+            .unwrap_or_else(|_| panic!("full-image multi-request batch must fuse"));
+        assert_eq!(serveds.len(), 6);
+        for s in serveds {
+            pipeline::finish(&metrics, s);
+        }
         for (i, (img, rx)) in imgs.iter().zip(&rxs).enumerate() {
             let r = rx.try_recv().expect("fused batch must answer every request");
             assert_eq!(r.id, i as u64);
@@ -1271,20 +928,25 @@ mod tests {
         assert_eq!(snap.fused_requests, 6);
         // ineligible batches come back untouched: singletons…
         let (p, _rx) = pending_of(9, spec, &imgs[0]);
-        assert!(try_serve_fused(0, &cfg, &None, &mut native, &None, &metrics, vec![p]).is_err());
+        assert!(
+            pipeline::serve_fused(0, &cfg, &None, &mut native, &None, &metrics, vec![p]).is_err()
+        );
         // …and ROI specs
         let roi_spec = spec.with_roi(Roi::new(2, 2, 8, 8));
         let batch: Vec<Pending> = (0..2)
             .map(|i| pending_of(10 + i, roi_spec, &imgs[0]).0)
             .collect();
-        assert!(try_serve_fused(0, &cfg, &None, &mut native, &None, &metrics, batch).is_err());
+        assert!(
+            pipeline::serve_fused(0, &cfg, &None, &mut native, &None, &metrics, batch).is_err()
+        );
         assert_eq!(metrics.snapshot().fused_batches, 1);
     }
 
     #[test]
     fn fused_stream_keeps_split_independent_plan_counts() {
         // end-to-end: however the queue splits a same-key stream into
-        // batches (fused or not), the family resolves exactly once
+        // batches (fused or not), the family resolves exactly once —
+        // warm-ahead included, every request is 1 warm + 1 exec touch
         let coord = Coordinator::start(CoordinatorConfig {
             workers: 1,
             backend: BackendChoice::NativeOnly,
@@ -1312,7 +974,7 @@ mod tests {
         let snap = coord.metrics();
         assert_eq!(snap.completed, 8);
         assert_eq!(snap.plan_resolutions, 1, "one family, one resolution");
-        assert_eq!(snap.plan_hits, 7);
+        assert_eq!(snap.plan_hits, 15, "8 warms + 8 executions − 1 resolution");
         // fused counters are split-dependent (producer/worker race), but
         // they can never disagree with each other
         assert!(snap.fused_requests >= 2 * snap.fused_batches);
@@ -1322,6 +984,7 @@ mod tests {
     #[test]
     fn capped_spec_clamps_parallelism_bit_identically() {
         use crate::morphology::Parallelism;
+        use pipeline::capped_spec;
         let img8: ImagePayload = Arc::new(synth::paper_image(5)).into();
         let auto = FilterSpec::new(FilterOp::Erode, 31, 31);
         // cap 1: Auto collapses to Sequential

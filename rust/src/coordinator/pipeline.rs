@@ -1,0 +1,1035 @@
+//! The staged serving pipeline behind [`super::Coordinator`].
+//!
+//! ```text
+//!             try_send            bounded send        key-affine push
+//!  admit() ──► [ingress] ────────► [plan-resolve] ────► lane queues ─► [execute ×N] ─► [reply]
+//!  budget +    validate spec       warm the plan        BatchQueue      fused / per-    release
+//!  try_send    (invalid → reply)   (ahead of its        per lane        request serve   budget,
+//!  (sheds)                          batch landing)      (blocks full)   (own engines)   send resp
+//! ```
+//!
+//! Every stage is a small worker set over a **bounded** channel:
+//! admission is the only lossy door (a full channel or an exhausted
+//! per-key budget sheds the request with an error the caller sees);
+//! past it, stage-to-stage sends **block** — with a per-stage deadline
+//! as a stall backstop — so backpressure propagates upstream instead of
+//! dropping accepted work.  The per-stage depth counters in
+//! [`Metrics`] meter exactly this: each depth is bounded by the stage's
+//! channel capacity plus its sender count, and `stage_blocked_sends`
+//! counts the sends that had to wait (non-zero under a saturating
+//! producer, zero when the pipeline keeps up).
+//!
+//! ## Exactly-once replies
+//!
+//! Every admitted request terminates in **exactly one**
+//! [`FilterResponse`], whatever path it takes: invalid specs reply from
+//! ingress, stalled sends reply with a deadline error, panics while
+//! serving are caught per request (the lane's engine is rebuilt, the
+//! request replies with backend `"panic"`), and everything else flows
+//! through execute → reply.  Stage panics are isolated: a poisoned
+//! request cannot stall its stage or orphan its ticket.
+//!
+//! ## Warm-ahead plan resolution
+//!
+//! The plan-resolve stage runs **ahead of** execute: it resolves (and
+//! caches) the request's [`crate::morphology::FilterPlan`] on the lane
+//! engine the request will execute on, so hot keys are warm before
+//! their batch lands.  Warming counts exactly like execution on the
+//! engine's `PlanStats` (cold family → one resolution, warm → a hit),
+//! so `G` same-family requests score `1` resolution + `2G − 1` hits —
+//! split- and path-independently — which the serving tests pin.
+//!
+//! ## Mutability split
+//!
+//! A request's context (`Pending`: spec, payload, reply handle) is
+//! **immutable** as it flows; all mutable state is stage-local (each
+//! lane's `NativeEngine` behind its own mutex, shared only with the
+//! resolve stage's warm-ahead) or a shared accumulator with interior
+//! mutability ([`Metrics`] atomics, the admission-budget map).  Lanes
+//! never touch each other's engines; one [`BatchKey`] always hashes to
+//! one lane, so plan pinning and batch fusion survive the pipeline
+//! split.
+//!
+//! Head-of-line note: the resolve stage is single-threaded, so one
+//! request blocked on a full lane queue delays later requests bound for
+//! *other* lanes.  The block is bounded by the stage deadline
+//! ([`super::CoordinatorConfig::stage_deadline`]) and only occurs once
+//! execute is already saturated — the regime where admission should be
+//! shedding anyway.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::metrics::{
+    Metrics, STAGE_EXECUTE, STAGE_INGRESS, STAGE_REPLY, STAGE_RESOLVE,
+};
+use super::queue::{BatchQueue, Pull};
+use super::request::{BatchKey, FilterOutput, FilterResponse, ImagePayload, Pending, PixelDepth};
+use super::{BackendChoice, CoordinatorConfig};
+use crate::image::Image;
+use crate::morphology::{parallel, FilterSpec, Parallelism};
+use crate::runtime::{Engine, Manifest, NativeEngine, XlaRuntime};
+
+/// Why admission rejected a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Shed {
+    /// The admission channel is full (global backpressure).
+    Full,
+    /// The request's key already has `admission_budget` requests in
+    /// flight (per-key backpressure).
+    Budget,
+    /// The pipeline is shut down.
+    Closed,
+}
+
+/// A served request on its way to the reply stage: the response plus
+/// what the reply stage needs to close out the request (its batch key
+/// for the budget release, its reply channel).
+pub(crate) struct Served {
+    key: BatchKey,
+    reply: mpsc::Sender<FilterResponse>,
+    resp: FilterResponse,
+}
+
+/// One pipeline stage: a worker thread draining one bounded channel.
+/// `run` handles one item; `finish` runs once after the channel
+/// disconnects (the shutdown cascade hook).
+trait Stage: Send + 'static {
+    type In: Send + 'static;
+    fn run(&mut self, item: Self::In);
+    fn finish(&mut self) {}
+}
+
+/// Drive `stage` on its own named thread until the channel disconnects.
+fn spawn_stage<S: Stage>(name: &str, rx: Receiver<S::In>, mut stage: S) -> Result<JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(move || {
+            while let Ok(item) = rx.recv() {
+                stage.run(item);
+            }
+            stage.finish();
+        })
+        .with_context(|| format!("spawning pipeline stage {name:?}"))
+}
+
+/// Lock a mutex, riding through poisoning: a panic while serving is
+/// already isolated per request (the engine is rebuilt), so a poisoned
+/// lock only means "a panic happened", not "the data is gone".
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Deterministic key → lane routing: one key always executes on one
+/// lane, so plan pinning and batch fusion survive the fan-out.
+fn lane_of(key: &BatchKey, lanes: usize) -> usize {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() % lanes.max(1) as u64) as usize
+}
+
+/// Bounded-channel send with a deadline: try, then poll-wait until the
+/// deadline.  Returns `(Err(item), _)` when the deadline expired or the
+/// receiver is gone; the `bool` reports whether the send ever found the
+/// channel full (the blocked-send metric).
+fn send_deadline<T>(tx: &SyncSender<T>, item: T, deadline: Instant) -> (std::result::Result<(), T>, bool) {
+    let mut item = match tx.try_send(item) {
+        Ok(()) => return (Ok(()), false),
+        Err(TrySendError::Disconnected(it)) => return (Err(it), false),
+        Err(TrySendError::Full(it)) => it,
+    };
+    loop {
+        if Instant::now() >= deadline {
+            return (Err(item), true);
+        }
+        std::thread::sleep(Duration::from_millis(1));
+        match tx.try_send(item) {
+            Ok(()) => return (Ok(()), true),
+            Err(TrySendError::Full(it)) => item = it,
+            Err(TrySendError::Disconnected(it)) => return (Err(it), true),
+        }
+    }
+}
+
+/// Hand a [`Served`] to the reply stage.  The request enters the REPLY
+/// stage *before* the send so the depth counter never underflows; a
+/// full reply channel blocks (counting a blocked send against
+/// `from_stage`) — backpressure, never loss.
+fn send_reply(tx: &SyncSender<Served>, metrics: &Metrics, from_stage: usize, s: Served) {
+    metrics.stage_enter(STAGE_REPLY);
+    match tx.try_send(s) {
+        Ok(()) => {}
+        Err(TrySendError::Full(s)) => {
+            metrics.stage_blocked_sends[from_stage].fetch_add(1, Ordering::Relaxed);
+            if tx.send(s).is_err() {
+                metrics.stage_exit(STAGE_REPLY);
+            }
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            metrics.stage_exit(STAGE_REPLY);
+        }
+    }
+}
+
+/// Close out one served request: record its latencies (panic replies
+/// carry no meaningful timings), bump completed/failed, send the
+/// response.  The receiver may have given up; dropping the response is
+/// fine.
+pub(crate) fn finish(metrics: &Metrics, s: Served) {
+    let resp = s.resp;
+    if resp.backend != "panic" {
+        metrics.queue_latency.record(resp.queue_ns);
+        metrics.exec_latency.record(resp.exec_ns);
+        metrics.total_latency.record(resp.queue_ns + resp.exec_ns);
+    }
+    if resp.result.is_ok() {
+        Metrics::inc(&metrics.completed);
+    } else {
+        Metrics::inc(&metrics.failed);
+    }
+    let _ = s.reply.send(resp);
+}
+
+/// Terminate a request with an error before it reached execute.
+fn error_served(p: Pending, err: anyhow::Error, backend: &'static str) -> Served {
+    let key = p.req.batch_key();
+    Served {
+        key,
+        resp: FilterResponse {
+            id: p.req.id,
+            result: Err(err),
+            queue_ns: p.req.enqueued.elapsed().as_nanos() as u64,
+            exec_ns: 0,
+            backend,
+            worker: 0,
+        },
+        reply: p.reply,
+    }
+}
+
+/// Decrement (and at zero, drop) a key's in-flight admission count.
+fn release_key(inflight: &Mutex<HashMap<BatchKey, u64>>, key: &BatchKey) {
+    let mut m = lock_unpoisoned(inflight);
+    if let Some(n) = m.get_mut(key) {
+        *n -= 1;
+        if *n == 0 {
+            m.remove(key);
+        }
+    }
+}
+
+/// Will this request execute on the native engine?  The warm-ahead
+/// predicate: `false` exactly when the router would send it to the XLA
+/// backend (XlaOnly, or an Auto artifact match on a u8
+/// single-identity-op spec), so warming never touches plan counters for
+/// requests that never reach the native plan cache.
+fn routes_native(cfg: &CoordinatorConfig, manifest: &Option<Arc<Manifest>>, p: &Pending) -> bool {
+    if cfg.backend == BackendChoice::XlaOnly {
+        return false;
+    }
+    if let (ImagePayload::U8(_), Some(op)) = (&p.req.image, p.req.spec.single_identity_op()) {
+        let (h, w) = (p.req.image.height(), p.req.image.width());
+        if manifest
+            .as_ref()
+            .is_some_and(|m| m.find(op.name(), h, w, p.req.spec.w_x, p.req.spec.w_y).is_some())
+        {
+            return false;
+        }
+    }
+    true
+}
+
+/// One execute lane's shared handles: its batch queue (fed by resolve)
+/// and its native engine (shared with resolve for warm-ahead only).
+struct Lane {
+    queue: Arc<BatchQueue>,
+    engine: Arc<Mutex<NativeEngine>>,
+}
+
+/// Stage 1 — ingress: validate the spec (the one validity predicate,
+/// [`FilterSpec::validate`]); invalid requests reply immediately and
+/// never touch an engine.  Valid requests move to resolve over a
+/// bounded channel (blocking send, deadline backstop).
+struct Ingress {
+    deadline: Duration,
+    resolve_tx: SyncSender<Pending>,
+    reply_tx: SyncSender<Served>,
+    metrics: Arc<Metrics>,
+}
+
+impl Stage for Ingress {
+    type In = Pending;
+
+    fn run(&mut self, p: Pending) {
+        let (h, w) = (p.req.image.height(), p.req.image.width());
+        if let Err(e) = p.req.spec.validate(h, w) {
+            self.metrics.stage_exit(STAGE_INGRESS);
+            let s = error_served(p, anyhow!(e), "ingress");
+            send_reply(&self.reply_tx, &self.metrics, STAGE_INGRESS, s);
+            return;
+        }
+        // enter the downstream stage BEFORE the send: the consumer may
+        // exit the stage the instant the item lands, and the depth
+        // counter must never go negative
+        self.metrics.stage_exit(STAGE_INGRESS);
+        self.metrics.stage_enter(STAGE_RESOLVE);
+        let deadline = Instant::now() + self.deadline;
+        let (res, blocked) = send_deadline(&self.resolve_tx, p, deadline);
+        if blocked {
+            self.metrics.stage_blocked_sends[STAGE_INGRESS].fetch_add(1, Ordering::Relaxed);
+        }
+        if let Err(p) = res {
+            self.metrics.stage_exit(STAGE_RESOLVE);
+            let s = error_served(
+                p,
+                anyhow!("pipeline stalled: ingress→resolve handoff exceeded the stage deadline"),
+                "ingress",
+            );
+            send_reply(&self.reply_tx, &self.metrics, STAGE_INGRESS, s);
+        }
+    }
+}
+
+/// Stage 2 — plan-resolve: route the request to its lane and warm the
+/// plan on that lane's engine **before** the request lands in the
+/// lane's queue.  Pushes block when the lane is full (deadline
+/// backstop); closing the lane queues on channel disconnect is the
+/// shutdown cascade's next link.
+struct Resolve {
+    cfg: CoordinatorConfig,
+    manifest: Option<Arc<Manifest>>,
+    deadline: Duration,
+    lanes: Vec<Lane>,
+    reply_tx: SyncSender<Served>,
+    metrics: Arc<Metrics>,
+}
+
+impl Stage for Resolve {
+    type In = Pending;
+
+    fn run(&mut self, p: Pending) {
+        self.metrics.stage_exit(STAGE_RESOLVE);
+        let key = p.req.batch_key();
+        let lane = &self.lanes[lane_of(&key, self.lanes.len())];
+        if routes_native(&self.cfg, &self.manifest, &p) {
+            // warm with the same capped spec execute will run, so the
+            // cache key matches; warm errors are ignored — execute
+            // surfaces them as the request's error
+            let spec = capped_spec(&p.req.spec, &p.req.image, self.cfg.max_bands_per_request);
+            let (h, w) = (p.req.image.height(), p.req.image.width());
+            let mut eng = lock_unpoisoned(&lane.engine);
+            let _ = match &p.req.image {
+                ImagePayload::U8(_) => eng.warm_spec(&spec, h, w),
+                ImagePayload::U16(_) => eng.warm_spec_u16(&spec, h, w),
+            };
+        }
+        self.metrics.stage_enter(STAGE_EXECUTE);
+        if let Err(p) = lane.queue.push(p) {
+            self.metrics.stage_blocked_sends[STAGE_RESOLVE].fetch_add(1, Ordering::Relaxed);
+            let deadline = Instant::now() + self.deadline;
+            if let Err(p) = lane.queue.push_wait(p, deadline) {
+                self.metrics.stage_exit(STAGE_EXECUTE);
+                let s = error_served(
+                    p,
+                    anyhow!("pipeline stalled: resolve→execute handoff exceeded the stage deadline"),
+                    "resolve",
+                );
+                send_reply(&self.reply_tx, &self.metrics, STAGE_RESOLVE, s);
+            }
+        }
+    }
+
+    fn finish(&mut self) {
+        for lane in &self.lanes {
+            lane.queue.close();
+        }
+    }
+}
+
+/// Stage 4 — reply: release the request's admission-budget slot, record
+/// its outcome and send the response.  Runs after execute so a client
+/// that sees its last response observes final plan counters (the lanes
+/// drain `PlanStats` before handing replies over).
+struct Reply {
+    metrics: Arc<Metrics>,
+    inflight: Arc<Mutex<HashMap<BatchKey, u64>>>,
+    budget: u64,
+}
+
+impl Stage for Reply {
+    type In = Served;
+
+    fn run(&mut self, s: Served) {
+        self.metrics.stage_exit(STAGE_REPLY);
+        if self.budget > 0 {
+            release_key(&self.inflight, &s.key);
+        }
+        finish(&self.metrics, s);
+    }
+}
+
+/// Stage 3 — execute: one lane per worker, each with its own engines,
+/// pulling key-affine batches from its own [`BatchQueue`].  A same-key
+/// batch tries the fused super-pass first; otherwise requests serve one
+/// at a time with per-request panic isolation.  Plan-cache counters
+/// drain into the metrics **before** the batch's replies go out.
+#[allow(clippy::too_many_arguments)]
+fn execute_lane(
+    wid: usize,
+    cfg: CoordinatorConfig,
+    manifest: Option<Arc<Manifest>>,
+    queue: Arc<BatchQueue>,
+    engine: Arc<Mutex<NativeEngine>>,
+    metrics: Arc<Metrics>,
+    reply_tx: SyncSender<Served>,
+) {
+    let mut xla: Option<XlaRuntime> = match (&cfg.backend, &cfg.artifact_dir, &manifest) {
+        (BackendChoice::NativeOnly, _, _) | (_, _, None) => None,
+        (_, Some(dir), Some(_)) => XlaRuntime::new(dir).ok(),
+        (_, None, _) => None,
+    };
+    if cfg.precompile {
+        if let Some(rt) = xla.as_mut() {
+            let _ = rt.precompile(|_| true);
+        }
+    }
+
+    let mut affinity: Option<BatchKey> = None;
+    loop {
+        match queue.pull(affinity.as_ref(), Duration::from_millis(100)) {
+            Pull::Closed => break,
+            Pull::Batch(batch) => {
+                Metrics::inc(&metrics.batches);
+                metrics
+                    .batched_requests
+                    .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                affinity = batch.first().map(|p| p.req.batch_key());
+                let batch_len = batch.len();
+                let mut native = lock_unpoisoned(&engine);
+                let serveds = match serve_fused(
+                    wid, &cfg, &manifest, &mut native, &xla, &metrics, batch,
+                ) {
+                    Ok(serveds) => serveds,
+                    Err(batch) => {
+                        let mut serveds = Vec::with_capacity(batch.len());
+                        for p in batch {
+                            let id = p.req.id;
+                            let key = p.req.batch_key();
+                            let reply = p.reply.clone();
+                            // a panic while serving must not kill the
+                            // lane or orphan the request: every Pending
+                            // is answered exactly once
+                            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                                serve_request(wid, &cfg, &manifest, &mut native, &mut xla, p)
+                            }));
+                            match outcome {
+                                Ok(s) => serveds.push(s),
+                                Err(_) => {
+                                    // the engine may hold half-updated
+                                    // state: drain its counters (the
+                                    // pre-panic requests stay accounted
+                                    // for), then rebuild it
+                                    let stats = native.take_plan_stats();
+                                    metrics
+                                        .plan_resolutions
+                                        .fetch_add(stats.resolutions, Ordering::Relaxed);
+                                    metrics.plan_hits.fetch_add(stats.hits, Ordering::Relaxed);
+                                    *native = NativeEngine::new(cfg.morph);
+                                    serveds.push(Served {
+                                        key,
+                                        reply,
+                                        resp: FilterResponse {
+                                            id,
+                                            result: Err(anyhow!(
+                                                "worker {wid} panicked while serving request {id}"
+                                            )),
+                                            queue_ns: 0,
+                                            exec_ns: 0,
+                                            backend: "panic",
+                                            worker: wid,
+                                        },
+                                    });
+                                }
+                            }
+                        }
+                        serveds
+                    }
+                };
+                for _ in 0..batch_len {
+                    metrics.stage_exit(STAGE_EXECUTE);
+                }
+                // drain plan-cache traffic BEFORE the replies go out: a
+                // client observing its last response must see final
+                // counters (a same-key run pinned to one plan shows up
+                // as warm-ahead + execution touches here)
+                let stats = native.take_plan_stats();
+                metrics
+                    .plan_resolutions
+                    .fetch_add(stats.resolutions, Ordering::Relaxed);
+                metrics.plan_hits.fetch_add(stats.hits, Ordering::Relaxed);
+                drop(native);
+                for s in serveds {
+                    send_reply(&reply_tx, &metrics, STAGE_EXECUTE, s);
+                }
+            }
+        }
+    }
+    // shutdown: anything the warm-ahead resolved after the last batch
+    // still belongs in the totals
+    let mut native = lock_unpoisoned(&engine);
+    let stats = native.take_plan_stats();
+    metrics
+        .plan_resolutions
+        .fetch_add(stats.resolutions, Ordering::Relaxed);
+    metrics.plan_hits.fetch_add(stats.hits, Ordering::Relaxed);
+}
+
+/// Serve a whole same-key batch through the native engine's fused
+/// super-pass ([`NativeEngine::run_spec_batch`]) when every request
+/// would route native anyway.  The queue guarantees one `BatchKey` per
+/// batch (same spec, shape and depth), so eligibility is a per-batch
+/// decision: more than one request, a full-image non-transpose spec,
+/// and no compiled-artifact route that could peel the batch onto the
+/// XLA backend.  Returns the batch untouched (`Err`) when ineligible
+/// and the caller serves it per request.
+///
+/// The fused run executes under the same [`capped_spec`] clamp as
+/// per-request serving; its one band fork is shared by every request in
+/// the batch, so per-request band pressure only drops relative to
+/// per-image serving.  Outputs stay bit-identical either way.  The
+/// super-pass execution time is attributed to requests in equal shares
+/// (`exec_ns = total / n`).
+pub(crate) fn serve_fused(
+    wid: usize,
+    cfg: &CoordinatorConfig,
+    manifest: &Option<Arc<Manifest>>,
+    native: &mut NativeEngine,
+    xla: &Option<XlaRuntime>,
+    metrics: &Metrics,
+    batch: Vec<Pending>,
+) -> std::result::Result<Vec<Served>, Vec<Pending>> {
+    if batch.len() < 2 {
+        return Err(batch);
+    }
+    let spec = batch[0].req.spec;
+    if spec.roi.is_some() || spec.is_transpose() || cfg.backend == BackendChoice::XlaOnly {
+        return Err(batch);
+    }
+    let (h, w) = (batch[0].req.image.height(), batch[0].req.image.width());
+    // under Auto an artifact match routes u8 requests to the XLA
+    // runtime — leave those batches to the per-request router
+    if let (ImagePayload::U8(_), Some(op)) = (&batch[0].req.image, spec.single_identity_op()) {
+        let has_artifact = xla.is_some()
+            && manifest
+                .as_ref()
+                .is_some_and(|m| m.find(op.name(), h, w, spec.w_x, spec.w_y).is_some());
+        if has_artifact {
+            return Err(batch);
+        }
+    }
+
+    let n = batch.len();
+    let native_spec = capped_spec(&spec, &batch[0].req.image, cfg.max_bands_per_request);
+    let queue_ns: Vec<u64> = batch
+        .iter()
+        .map(|p| p.req.enqueued.elapsed().as_nanos() as u64)
+        .collect();
+    let t = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        if cfg.debug_fault_op.is_some() && cfg.debug_fault_op == spec.single_op() {
+            panic!("debug fault injected into fused serving");
+        }
+        match &batch[0].req.image {
+            ImagePayload::U8(_) => {
+                let imgs: Vec<&Image<u8>> = batch
+                    .iter()
+                    .map(|p| match &p.req.image {
+                        ImagePayload::U8(im) => &**im,
+                        ImagePayload::U16(_) => unreachable!("batch keys include the dtype"),
+                    })
+                    .collect();
+                native.run_spec_batch(&native_spec, &imgs).map(|(outs, fused)| {
+                    (outs.into_iter().map(FilterOutput::U8).collect::<Vec<_>>(), fused)
+                })
+            }
+            ImagePayload::U16(_) => {
+                let imgs: Vec<&Image<u16>> = batch
+                    .iter()
+                    .map(|p| match &p.req.image {
+                        ImagePayload::U16(im) => &**im,
+                        ImagePayload::U8(_) => unreachable!("batch keys include the dtype"),
+                    })
+                    .collect();
+                native.run_spec_batch_u16(&native_spec, &imgs).map(|(outs, fused)| {
+                    (outs.into_iter().map(FilterOutput::U16).collect::<Vec<_>>(), fused)
+                })
+            }
+        }
+    }));
+    let exec_ns = t.elapsed().as_nanos() as u64 / n as u64;
+
+    match outcome {
+        Ok(Ok((outs, fused))) => {
+            if fused {
+                Metrics::inc(&metrics.fused_batches);
+                metrics.fused_requests.fetch_add(n as u64, Ordering::Relaxed);
+            }
+            Ok(batch
+                .into_iter()
+                .zip(outs)
+                .zip(queue_ns)
+                .map(|((p, out), q_ns)| Served {
+                    key: p.req.batch_key(),
+                    resp: FilterResponse {
+                        id: p.req.id,
+                        result: Ok(out),
+                        queue_ns: q_ns,
+                        exec_ns,
+                        backend: "native",
+                        worker: wid,
+                    },
+                    reply: p.reply,
+                })
+                .collect())
+        }
+        Ok(Err(e)) => {
+            // plan-time rejection: every request of the batch fails
+            // identically
+            let msg = format!("{e:#}");
+            Ok(batch
+                .into_iter()
+                .zip(queue_ns)
+                .map(|(p, q_ns)| Served {
+                    key: p.req.batch_key(),
+                    resp: FilterResponse {
+                        id: p.req.id,
+                        result: Err(anyhow!("{msg}")),
+                        queue_ns: q_ns,
+                        exec_ns,
+                        backend: "native",
+                        worker: wid,
+                    },
+                    reply: p.reply,
+                })
+                .collect())
+        }
+        Err(_) => {
+            // panic mid-super-pass: the engine may hold half-updated
+            // state — drain its counters into the metrics (pre-panic
+            // requests stay accounted for), rebuild it, and fail every
+            // request of the batch
+            let stats = native.take_plan_stats();
+            metrics
+                .plan_resolutions
+                .fetch_add(stats.resolutions, Ordering::Relaxed);
+            metrics.plan_hits.fetch_add(stats.hits, Ordering::Relaxed);
+            *native = NativeEngine::new(cfg.morph);
+            Ok(batch
+                .into_iter()
+                .map(|p| Served {
+                    key: p.req.batch_key(),
+                    resp: FilterResponse {
+                        id: p.req.id,
+                        result: Err(anyhow!(
+                            "worker {wid} panicked while serving request {}",
+                            p.req.id
+                        )),
+                        queue_ns: 0,
+                        exec_ns: 0,
+                        backend: "panic",
+                        worker: wid,
+                    },
+                    reply: p.reply,
+                })
+                .collect())
+        }
+    }
+}
+
+/// Clamp a spec's intra-image parallelism to the coordinator's
+/// per-request band budget (`cap`; 0 = unlimited).  `Auto` stays `Auto`
+/// when the cost model would pick at most `cap` bands anyway (so small
+/// images keep their sequential dispatch) and is pinned to
+/// `Fixed(cap)` otherwise; band counts never change output pixels.
+///
+/// ROI specs are priced on their **haloed block** — the shape the plan
+/// actually bands — not the full image, so a small crop of a huge image
+/// is not needlessly pinned to `Fixed(cap)` when its block would have
+/// dispatched sequentially anyway.
+pub(crate) fn capped_spec(spec: &FilterSpec, image: &ImagePayload, cap: usize) -> FilterSpec {
+    if cap == 0 || spec.is_transpose() {
+        return *spec;
+    }
+    let mut s = *spec;
+    s.config.parallelism = match s.config.parallelism {
+        Parallelism::Sequential => Parallelism::Sequential,
+        Parallelism::Fixed(n) => Parallelism::Fixed(n.clamp(1, cap)),
+        Parallelism::Auto if cap == 1 => Parallelism::Sequential,
+        Parallelism::Auto => {
+            // price the banding once, on the shape the plan will band;
+            // unplannable specs (even windows, out-of-bounds ROIs —
+            // the one validity predicate, `FilterSpec::validate`) fall
+            // through and fail at plan time as before
+            let (h, w) = (image.height(), image.width());
+            let bands = if s.validate(h, w).is_ok() {
+                let (bh, bw) = match s.roi {
+                    None => (h, w),
+                    Some(r) => {
+                        let (hx, hy) = s.roi_halo();
+                        let b = crate::morphology::plan::haloed_block(r, h, w, hx, hy);
+                        (b.height, b.width)
+                    }
+                };
+                match image.depth() {
+                    PixelDepth::U8 => {
+                        parallel::effective_bands::<u8>(bh, bw, s.w_x, s.w_y, &s.config)
+                    }
+                    PixelDepth::U16 => {
+                        parallel::effective_bands::<u16>(bh, bw, s.w_x, s.w_y, &s.config)
+                    }
+                }
+            } else {
+                1
+            };
+            if bands <= cap {
+                Parallelism::Auto
+            } else {
+                Parallelism::Fixed(cap)
+            }
+        }
+    };
+    s
+}
+
+/// Per-request serving — routing, execution and timing for ONE request,
+/// with **no** side effects on metrics or channels (the caller owns
+/// those): the pipeline's pure core, also the panic-isolation unit.
+pub(crate) fn serve_request(
+    wid: usize,
+    cfg: &CoordinatorConfig,
+    manifest: &Option<Arc<Manifest>>,
+    native: &mut NativeEngine,
+    xla: &mut Option<XlaRuntime>,
+    p: Pending,
+) -> Served {
+    if cfg.debug_fault_op.is_some() && cfg.debug_fault_op == p.req.spec.single_op() {
+        panic!("debug fault injected into per-request serving");
+    }
+    let queue_ns = p.req.enqueued.elapsed().as_nanos() as u64;
+    let key = p.req.batch_key();
+    let spec = p.req.spec;
+    // native executions honour the per-request band budget (routing and
+    // batch keys always use the submitted spec; the clamp is
+    // bit-identical)
+    let native_spec = capped_spec(&spec, &p.req.image, cfg.max_bands_per_request);
+    let (h, w) = (p.req.image.height(), p.req.image.width());
+    // compiled artifacts exist only for u8 specs in canonical form
+    // (single op, no ROI, identity border — the shared predicate
+    // `FilterSpec::single_identity_op`; a replicate-border spec must
+    // never take the XLA path, its output pixels differ at the edges)
+    let compiled = match (&p.req.image, spec.single_identity_op()) {
+        (ImagePayload::U8(_), Some(op)) => manifest
+            .as_ref()
+            .and_then(|m| m.find(op.name(), h, w, spec.w_x, spec.w_y).cloned()),
+        _ => None,
+    };
+
+    let t = Instant::now();
+    let (result, backend): (Result<FilterOutput>, &'static str) = match &p.req.image {
+        ImagePayload::U8(img) => {
+            if cfg.backend == BackendChoice::XlaOnly {
+                match (compiled, xla.as_mut()) {
+                    (Some(meta), Some(rt)) => {
+                        (rt.run_u8(&meta, img).map(FilterOutput::U8), rt.backend_name())
+                    }
+                    (None, _) => (
+                        Err(anyhow!("no artifact for {key} (XlaOnly backend)")),
+                        "xla-pjrt",
+                    ),
+                    (Some(_), None) => (
+                        Err(anyhow!("XLA runtime unavailable on worker {wid}")),
+                        "xla-pjrt",
+                    ),
+                }
+            } else if let (Some(meta), Some(rt)) = (compiled.as_ref(), xla.as_mut()) {
+                match rt.run_u8(meta, img) {
+                    // Auto: degrade to native on runtime errors
+                    Err(_) => (
+                        native.run_spec(&native_spec, img).map(FilterOutput::U8),
+                        native.backend_name(),
+                    ),
+                    ok => (ok.map(FilterOutput::U8), rt.backend_name()),
+                }
+            } else {
+                (
+                    native.run_spec(&native_spec, img).map(FilterOutput::U8),
+                    native.backend_name(),
+                )
+            }
+        }
+        ImagePayload::U16(img) => {
+            if cfg.backend == BackendChoice::XlaOnly {
+                (
+                    Err(anyhow!("no u16 artifacts exist (XlaOnly backend, {key})")),
+                    "xla-pjrt",
+                )
+            } else {
+                (
+                    native.run_spec_u16(&native_spec, img).map(FilterOutput::U16),
+                    native.backend_name(),
+                )
+            }
+        }
+    };
+    let exec_ns = t.elapsed().as_nanos() as u64;
+
+    Served {
+        key,
+        resp: FilterResponse {
+            id: p.req.id,
+            result,
+            queue_ns,
+            exec_ns,
+            backend,
+            worker: wid,
+        },
+        reply: p.reply,
+    }
+}
+
+/// The running staged pipeline: the admission door plus its four stage
+/// thread sets.  Owned by [`super::Coordinator`]; dropping the
+/// admission sender starts the shutdown cascade (ingress drains and
+/// exits → resolve drains, closes the lane queues → lanes drain →
+/// reply drains) and [`Pipeline::shutdown`] joins it.
+pub(crate) struct Pipeline {
+    admission: Option<SyncSender<Pending>>,
+    inflight: Arc<Mutex<HashMap<BatchKey, u64>>>,
+    budget: u64,
+    metrics: Arc<Metrics>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Pipeline {
+    /// Build the stage graph and spawn every stage thread.
+    pub(crate) fn start(
+        cfg: &CoordinatorConfig,
+        manifest: Option<Arc<Manifest>>,
+        metrics: Arc<Metrics>,
+    ) -> Result<Pipeline> {
+        // stages see the *resolved* band budget (default: cores/workers)
+        let mut cfg = cfg.clone();
+        cfg.max_bands_per_request = super::resolve_band_cap(&cfg);
+        let stage_cap = if cfg.stage_capacity > 0 {
+            cfg.stage_capacity
+        } else {
+            cfg.queue_capacity.clamp(1, 32)
+        };
+        let deadline = if cfg.stage_deadline.is_zero() {
+            Duration::from_secs(60)
+        } else {
+            cfg.stage_deadline
+        };
+        let lanes = cfg.workers.max(1);
+        let budget = cfg.admission_budget as u64;
+        let inflight = Arc::new(Mutex::new(HashMap::new()));
+
+        let (admit_tx, admit_rx) = mpsc::sync_channel::<Pending>(cfg.queue_capacity.max(1));
+        let (resolve_tx, resolve_rx) = mpsc::sync_channel::<Pending>(stage_cap);
+        let (reply_tx, reply_rx) = mpsc::sync_channel::<Served>(stage_cap);
+
+        let lane_queues: Vec<Arc<BatchQueue>> = (0..lanes)
+            .map(|_| Arc::new(BatchQueue::new(stage_cap, cfg.max_batch)))
+            .collect();
+        let lane_engines: Vec<Arc<Mutex<NativeEngine>>> = (0..lanes)
+            .map(|_| Arc::new(Mutex::new(NativeEngine::new(cfg.morph))))
+            .collect();
+
+        let mut threads = Vec::new();
+        threads.push(spawn_stage(
+            "morph-ingress",
+            admit_rx,
+            Ingress {
+                deadline,
+                resolve_tx,
+                reply_tx: reply_tx.clone(),
+                metrics: metrics.clone(),
+            },
+        )?);
+        threads.push(spawn_stage(
+            "morph-resolve",
+            resolve_rx,
+            Resolve {
+                cfg: cfg.clone(),
+                manifest: manifest.clone(),
+                deadline,
+                lanes: lane_queues
+                    .iter()
+                    .zip(&lane_engines)
+                    .map(|(queue, engine)| Lane {
+                        queue: queue.clone(),
+                        engine: engine.clone(),
+                    })
+                    .collect(),
+                reply_tx: reply_tx.clone(),
+                metrics: metrics.clone(),
+            },
+        )?);
+        for (wid, (queue, engine)) in lane_queues.iter().zip(&lane_engines).enumerate() {
+            let cfg = cfg.clone();
+            let manifest = manifest.clone();
+            let queue = queue.clone();
+            let engine = engine.clone();
+            let metrics = metrics.clone();
+            let reply_tx = reply_tx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("morph-lane-{wid}"))
+                    .spawn(move || {
+                        execute_lane(wid, cfg, manifest, queue, engine, metrics, reply_tx)
+                    })
+                    .context("spawning execute lane")?,
+            );
+        }
+        // the stages hold the only reply senders now: when the last lane
+        // exits, the reply stage drains and exits
+        drop(reply_tx);
+        threads.push(spawn_stage(
+            "morph-reply",
+            reply_rx,
+            Reply {
+                metrics: metrics.clone(),
+                inflight: inflight.clone(),
+                budget,
+            },
+        )?);
+
+        Ok(Pipeline {
+            admission: Some(admit_tx),
+            inflight,
+            budget,
+            metrics,
+            threads,
+        })
+    }
+
+    /// Admit one request into the pipeline — the only lossy door.
+    /// Sheds (never blocks) when the admission channel is full, the
+    /// request's key has exhausted its in-flight budget, or the
+    /// pipeline is shut down.
+    pub(crate) fn admit(&self, p: Pending) -> std::result::Result<(), Shed> {
+        let Some(tx) = self.admission.as_ref() else {
+            return Err(Shed::Closed);
+        };
+        let key = p.req.batch_key();
+        if self.budget > 0 {
+            let mut inflight = lock_unpoisoned(&self.inflight);
+            let n = inflight.entry(key).or_insert(0);
+            if *n >= self.budget {
+                return Err(Shed::Budget);
+            }
+            *n += 1;
+        }
+        // enter INGRESS before the send (see the ordering note in
+        // `Ingress::run`); undo on failure
+        self.metrics.stage_enter(STAGE_INGRESS);
+        match tx.try_send(p) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.metrics.stage_exit(STAGE_INGRESS);
+                if self.budget > 0 {
+                    release_key(&self.inflight, &key);
+                }
+                match e {
+                    TrySendError::Full(_) => Err(Shed::Full),
+                    TrySendError::Disconnected(_) => Err(Shed::Closed),
+                }
+            }
+        }
+    }
+
+    /// Close the admission door and join the whole cascade.  Idempotent
+    /// (both [`super::Coordinator::shutdown`] and its `Drop` call it).
+    pub(crate) fn shutdown(&mut self) {
+        self.admission = None;
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Pipeline {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+    use crate::morphology::FilterOp;
+
+    fn key_of(op: FilterOp, w: usize) -> BatchKey {
+        let img: ImagePayload = Arc::new(synth::noise(16, 16, 1)).into();
+        BatchKey::of(&FilterSpec::new(op, w, w), img.depth(), 16, 16)
+    }
+
+    #[test]
+    fn lane_routing_is_stable_and_in_range() {
+        for lanes in [1usize, 2, 3, 8] {
+            for op in [FilterOp::Erode, FilterOp::Dilate, FilterOp::TopHat] {
+                let k = key_of(op, 5);
+                let lane = lane_of(&k, lanes);
+                assert!(lane < lanes);
+                // same key, same lane — every time (plan pinning)
+                assert_eq!(lane, lane_of(&k, lanes));
+            }
+        }
+        // lanes == 0 must not divide by zero (degenerate config)
+        assert_eq!(lane_of(&key_of(FilterOp::Erode, 3), 0), 0);
+    }
+
+    #[test]
+    fn send_deadline_delivers_reports_blocking_and_expires() {
+        let (tx, rx) = mpsc::sync_channel::<u32>(1);
+        // room available: immediate, unblocked
+        let (r, blocked) = send_deadline(&tx, 1, Instant::now() + Duration::from_secs(1));
+        assert!(r.is_ok() && !blocked);
+        // full: blocks until the consumer frees room
+        let consumer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            rx.recv().unwrap()
+        });
+        let (r, blocked) = send_deadline(&tx, 2, Instant::now() + Duration::from_secs(5));
+        assert!(r.is_ok() && blocked, "send must wait out the full channel");
+        assert_eq!(consumer.join().unwrap(), 1);
+        // full with nobody pulling: the deadline hands the item back
+        let t0 = Instant::now();
+        let (r, blocked) = send_deadline(&tx, 3, t0 + Duration::from_millis(30));
+        assert_eq!(r, Err(3));
+        assert!(blocked);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn release_key_drops_entry_at_zero_and_tolerates_missing() {
+        let key = key_of(FilterOp::Erode, 3);
+        let inflight = Mutex::new(HashMap::from([(key, 2u64)]));
+        release_key(&inflight, &key);
+        assert_eq!(lock_unpoisoned(&inflight)[&key], 1);
+        release_key(&inflight, &key);
+        assert!(lock_unpoisoned(&inflight).is_empty());
+        // releasing an unknown key (budget disabled) is a no-op
+        release_key(&inflight, &key);
+        assert!(lock_unpoisoned(&inflight).is_empty());
+    }
+}

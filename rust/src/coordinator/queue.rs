@@ -95,6 +95,7 @@ impl State {
 pub(crate) struct BatchQueue {
     state: Mutex<State>,
     nonempty: Condvar,
+    nonfull: Condvar,
     capacity: usize,
     max_batch: usize,
 }
@@ -110,6 +111,7 @@ impl BatchQueue {
                 bypass_pulls: 0,
             }),
             nonempty: Condvar::new(),
+            nonfull: Condvar::new(),
             capacity: capacity.max(1),
             max_batch: max_batch.max(1),
         }
@@ -119,6 +121,36 @@ impl BatchQueue {
     pub fn push(&self, p: Pending) -> Result<(), Pending> {
         let mut st = self.state.lock().unwrap();
         if st.closed || st.len >= self.capacity {
+            return Err(p);
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.by_key
+            .entry(p.req.batch_key())
+            .or_default()
+            .push_back((seq, p));
+        st.len += 1;
+        drop(st);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue, **blocking** until room frees up or `deadline` passes —
+    /// the pipeline's stage-to-stage send: upstream stages propagate
+    /// backpressure by waiting here instead of shedding (admission is
+    /// the only lossy door).  `Err(p)` gives the request back when the
+    /// queue is closed or the deadline expires while still full.
+    pub fn push_wait(&self, p: Pending, deadline: std::time::Instant) -> Result<(), Pending> {
+        let mut st = self.state.lock().unwrap();
+        while !st.closed && st.len >= self.capacity {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(p);
+            }
+            let (next, _) = self.nonfull.wait_timeout(st, deadline - now).unwrap();
+            st = next;
+        }
+        if st.closed {
             return Err(p);
         }
         let seq = st.next_seq;
@@ -169,6 +201,8 @@ impl BatchQueue {
                         st.by_key.remove(&key);
                     }
                     st.len -= batch.len();
+                    drop(st);
+                    self.nonfull.notify_all();
                     return Pull::Batch(batch);
                 }
             }
@@ -196,6 +230,7 @@ impl BatchQueue {
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.nonempty.notify_all();
+        self.nonfull.notify_all(); // blocked push_wait callers must see closed
     }
 }
 
@@ -375,6 +410,54 @@ mod tests {
         assert!(q.push(pending("erode", 3, &img)).is_ok());
         assert!(q.push(pending("erode", 3, &img)).is_ok());
         assert!(q.push(pending("erode", 3, &img)).is_err());
+    }
+
+    #[test]
+    fn push_wait_blocks_until_pull_frees_room() {
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let q = Arc::new(BatchQueue::new(1, 8));
+        q.push(pending("erode", 3, &img)).ok().unwrap();
+        // a generous deadline: the push must ride out the full queue
+        // until the puller drains it, NOT time out
+        let q2 = q.clone();
+        let p = pending("dilate", 3, &img);
+        let h = std::thread::spawn(move || {
+            q2.push_wait(p, Instant::now() + Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let Pull::Batch(b) = q.pull(None, Duration::from_millis(100)) else {
+            panic!();
+        };
+        assert_eq!(b[0].req.spec.single_op(), Some(FilterOp::Erode));
+        assert!(h.join().unwrap().is_ok(), "push_wait must land after the pull");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn push_wait_times_out_when_still_full() {
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let q = BatchQueue::new(1, 8);
+        q.push(pending("erode", 3, &img)).ok().unwrap();
+        let t0 = Instant::now();
+        let r = q.push_wait(pending("dilate", 3, &img), t0 + Duration::from_millis(30));
+        assert!(r.is_err(), "deadline expiry must hand the request back");
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn push_wait_wakes_on_close() {
+        let img = Arc::new(synth::noise(8, 8, 1));
+        let q = Arc::new(BatchQueue::new(1, 8));
+        q.push(pending("erode", 3, &img)).ok().unwrap();
+        let q2 = q.clone();
+        let p = pending("dilate", 3, &img);
+        let h = std::thread::spawn(move || {
+            q2.push_wait(p, Instant::now() + Duration::from_secs(30))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_err(), "close must fail blocked pushes promptly");
     }
 
     #[test]

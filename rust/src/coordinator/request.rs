@@ -233,23 +233,6 @@ impl FilterOutput {
         }
     }
 
-    /// Unwrap a u8 result; panics on a u16 payload.
-    #[deprecated(since = "0.3.0", note = "use into_u8() and handle the depth mismatch")]
-    pub fn expect_u8(self) -> Image<u8> {
-        match self {
-            FilterOutput::U8(img) => img,
-            FilterOutput::U16(_) => panic!("u16 response where u8 was expected"),
-        }
-    }
-
-    /// Unwrap a u16 result; panics on a u8 payload.
-    #[deprecated(since = "0.3.0", note = "use into_u16() and handle the depth mismatch")]
-    pub fn expect_u16(self) -> Image<u16> {
-        match self {
-            FilterOutput::U16(img) => img,
-            FilterOutput::U8(_) => panic!("u8 response where u16 was expected"),
-        }
-    }
 }
 
 /// Completed request.
@@ -387,14 +370,4 @@ mod tests {
         assert!(FilterOutput::U16(synth::noise_u16(3, 4, 1)).into_u8().is_err());
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_expect_forms_still_panic_on_mismatch() {
-        let o = FilterOutput::U8(synth::noise(2, 2, 1));
-        assert_eq!(o.expect_u8().height(), 2);
-        let r = std::panic::catch_unwind(|| {
-            FilterOutput::U8(synth::noise(2, 2, 1)).expect_u16()
-        });
-        assert!(r.is_err());
-    }
 }

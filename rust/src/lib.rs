@@ -42,11 +42,12 @@
 //! * [`runtime`] — PJRT bridge executing the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) from Rust; python is never on the
 //!   request path.
-//! * [`coordinator`] — the serving layer: router, dynamic batcher,
-//!   worker pool, backpressure and metrics.  Requests carry
-//!   depth-tagged payloads (`u8`/`u16`); batch keys include the dtype,
-//!   and u16 work always routes to the native engine (AOT artifacts
-//!   are u8-only).
+//! * [`coordinator`] — the serving layer: a **staged pipeline**
+//!   (admit → ingress → plan-resolve → execute lanes → reply) over
+//!   bounded channels, with router, dynamic batcher, admission-only
+//!   backpressure and per-stage metrics.  Requests carry depth-tagged
+//!   payloads (`u8`/`u16`); batch keys include the dtype, and u16 work
+//!   always routes to the native engine (AOT artifacts are u8-only).
 //!
 //! ## Plan–execute contract
 //!
@@ -119,39 +120,60 @@
 //!
 //! ### Streaming-serving contract
 //!
-//! [`coordinator::Coordinator::submit`] is fire-and-wait (one ticket,
-//! one reply channel).  For serving-rate producers,
-//! [`coordinator::Coordinator::stream`] /
+//! Serving is a **staged pipeline** behind one lossless rule: *sheds
+//! happen only at admission, and every admitted request is answered
+//! exactly once.*  [`coordinator::Coordinator::submit`] is
+//! fire-and-wait (one ticket, one reply channel).  For serving-rate
+//! producers, [`coordinator::Coordinator::stream`] /
 //! [`coordinator::Coordinator::submit_many`] return a
 //! [`coordinator::SubmitStream`]: `send` enqueues without blocking or
 //! allocating a per-ticket channel, `recv`/`drain` yield responses in
 //! **completion** order (match them by
-//! [`coordinator::request::FilterResponse::id`]), and backpressure
-//! sheds are counted on the stream rather than aborting it.  Workers
-//! pull same-key batches (FIFO-aged across keys so a hot key cannot
-//! starve others) and drain each run through one **pinned,
-//! position-independent plan**; `plan_resolutions`/`plan_hits` in
-//! [`coordinator::metrics::Snapshot`] meter the economy, and a
-//! per-request band budget
+//! [`coordinator::request::FilterResponse::id`]), and admission sheds
+//! — a full pipeline, or an exhausted per-key budget
+//! ([`coordinator::CoordinatorConfig::admission_budget`]) — are
+//! counted on the stream rather than aborting it.  Past admission,
+//! stage-to-stage handoffs **block** over bounded channels
+//! ([`coordinator::CoordinatorConfig::stage_capacity`], deadline
+//! backstop [`coordinator::CoordinatorConfig::stage_deadline`]), so
+//! backpressure propagates stage to stage while queue pulls overlap
+//! in-flight band execution; the plan-resolve stage **warms** each
+//! request's plan on its execute lane ahead of the batch, so lanes
+//! drain same-key runs (FIFO-aged so a hot key cannot starve others)
+//! through one **pinned, position-independent plan**.
+//! `plan_resolutions`/`plan_hits` meter the economy (each request is a
+//! warm + an execute touch: `G` same-family requests score `1`
+//! resolution + `2G − 1` hits) and per-stage depth/peak/blocked-send
+//! counters in [`coordinator::metrics::Snapshot`] meter the pipeline;
+//! a per-request band budget
 //! ([`coordinator::CoordinatorConfig::max_bands_per_request`], default
 //! `cores / workers`) keeps one giant request from monopolizing the
-//! shared band pool.  Streamed output is bit-identical to per-ticket
-//! `submit` (`rust/tests/streaming_serve.rs`;
-//! `examples/streaming_serve.rs` is the end-to-end driver).
+//! shared band pool.  A panic while serving is stage-local: the lane
+//! rebuilds its engine and answers that request with an error, so
+//! streams never hang on accepted work.  Streamed output is
+//! bit-identical to per-ticket `submit`
+//! (`rust/tests/streaming_serve.rs`, `rust/tests/pipeline_serve.rs`;
+//! `examples/streaming_serve.rs` and `examples/pipeline_serve.rs` are
+//! the end-to-end drivers).
 //!
 //! ### Migration notes (wrapper entry points)
 //!
-//! The historical entry points survive as thin, bit-identical wrappers
-//! over one-shot plans — `morphology::{erode, dilate, erode_roi,
-//! dilate_roi}`, `morphology::parallel::{filter_native, filter_roi,
-//! opening_native, …}`, and the backend-generic derived ops (which run
-//! the *same lowered step sequence* sequentially, keeping counted
-//! instruction mixes deterministic).  `Coordinator::filter` /
-//! `filter_u16` still accept string ops (now rejecting unknown names at
-//! submission instead of on the worker); per-depth `submit`/`submit_u16`
-//! are gone — pass any `Arc<Image<u8>>`/`Arc<Image<u16>>` straight to
-//! `submit`, and use `FilterOutput::into_u8()`/`into_u16()` (the
-//! panicking `expect_*` forms are deprecated).
+//! The historical *library* entry points survive as thin, bit-identical
+//! wrappers over one-shot plans — `morphology::{erode, dilate,
+//! erode_roi, dilate_roi}`, `morphology::parallel::{filter_native,
+//! filter_roi, opening_native, …}`, and the backend-generic derived ops
+//! (which run the *same lowered step sequence* sequentially, keeping
+//! counted instruction mixes deterministic).  The *service* surface is
+//! now spec-only: the string-op wrappers `Coordinator::filter` /
+//! `filter_u16` are **gone** — parse the op name once with
+//! [`FilterSpec::parse_op`](morphology::FilterSpec::parse_op) and call
+//! [`coordinator::Coordinator::filter_spec`] / `submit` (unknown names
+//! fail at parse time, before anything is enqueued).  Per-depth
+//! `submit`/`submit_u16` are likewise gone — pass any
+//! `Arc<Image<u8>>`/`Arc<Image<u16>>` straight to `submit` — and the
+//! 0.3.0-deprecated panicking `FilterOutput::expect_u8`/`expect_u16`
+//! accessors have been removed in favour of
+//! `FilterOutput::into_u8()`/`into_u16()`.
 //!
 //! ## Zero-copy view contract
 //!

@@ -439,10 +439,14 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     let scaling_report = scaling::to_json(&scaling_sweep);
     // serving smoke: count-exact plan-cache headlines of a streamed
     // coordinator workload (1 worker — resolutions are deterministic)
-    // plus the model-priced fused-batch throughput
+    // plus the model-priced fused-batch throughput and the saturation
+    // arithmetic (budget-admitted bursts), backed by a live
+    // saturating-producer run (reported, not gated)
     let serve_smoke = serve::run_smoke()?;
     let serve_fused = serve::fused_model(&model);
-    let serve_report = serve::to_json(&serve_smoke, &serve_fused);
+    let serve_sat = serve::saturate_model(&model, &serve_fused);
+    let serve_live = serve::run_saturated()?;
+    let serve_report = serve::to_json(&serve_smoke, &serve_fused, &serve_sat, &serve_live);
 
     let reports = [
         ("BENCH_fig3.json", &fig3_report),
@@ -494,6 +498,20 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
         serve_fused.images_per_sec[1],
         serve_fused.images_per_sec[2],
         serve_fused.speedup_at_64,
+    );
+    println!(
+        "saturation model (budget {}/key, {}-req bursts): {} accepted / {} shed, \
+         tail {:.2} ms; live run: {} accepted / {} shed / {} replied, \
+         stage peaks {:?}",
+        serve::SATURATE_BUDGET,
+        serve::SATURATE_BURST,
+        serve_sat.accepted,
+        serve_sat.shed,
+        serve_sat.tail_ms,
+        serve_live.accepted,
+        serve_live.shed,
+        serve_live.replied,
+        serve_live.stage_peak,
     );
 
     if args.flag("update-baselines") {
@@ -574,10 +592,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "completed {} requests on {} workers in {:.2}s: {:.1} req/s, \
              p50 {:.2} ms, p99 {:.2} ms, mean batch {:.2}, shed {}, \
-             plans resolved/hit {}/{} ({:.4} resolutions/req)",
+             plans resolved/hit {}/{} ({:.4} resolutions/req), \
+             stage peaks [in/res/exec/reply] {:?}",
             s.requests, s.workers, s.wall_s, s.throughput_rps,
             s.p50_us / 1e3, s.p99_us / 1e3, s.mean_batch, s.shed,
-            s.plan_resolutions, s.plan_hits, s.plan_resolutions_per_request()
+            s.plan_resolutions, s.plan_hits, s.plan_resolutions_per_request(),
+            s.stage_peak
         );
         return Ok(());
     }

@@ -385,6 +385,22 @@ impl FilterSpec {
         }
     }
 
+    /// Build a single-op spec from an op **name** — the string-typed
+    /// client entry point (CLI flags, config files).  Replaces the
+    /// removed `Coordinator::filter`/`filter_u16` wrappers: parse once
+    /// at the edge (unknown names fail here, before anything is
+    /// enqueued), then submit the typed spec.
+    ///
+    /// ```
+    /// use neon_morph::morphology::{FilterOp, FilterSpec};
+    /// let spec = FilterSpec::parse_op("erode", 7, 5).unwrap();
+    /// assert_eq!(spec.single_op(), Some(FilterOp::Erode));
+    /// assert!(FilterSpec::parse_op("sharpen", 3, 3).is_err());
+    /// ```
+    pub fn parse_op(s: &str, w_x: usize, w_y: usize) -> Result<FilterSpec, PlanError> {
+        Ok(FilterSpec::new(s.trim().parse()?, w_x, w_y))
+    }
+
     /// Parse a CLI op chain: `"erode"` or `"erode,dilate,tophat"`.
     pub fn parse_ops(s: &str) -> Result<OpChain, PlanError> {
         let mut chain: Option<OpChain> = None;

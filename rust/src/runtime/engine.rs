@@ -205,6 +205,62 @@ impl NativeEngine {
         Ok(exec_cached(entry.single.as_mut().unwrap(), spec, img))
     }
 
+    /// Depth-generic warm-ahead body: resolve (and cache) the plan for a
+    /// canonical `(spec, shape)` family **without executing anything**.
+    /// Counting mirrors [`NativeEngine::run_any`] exactly — a cold
+    /// family costs one resolution, a warm one is a hit — so a pipeline
+    /// that warms every request before executing it doubles the
+    /// per-family touch count deterministically: G requests of one
+    /// family score 1 resolution + (2G − 1) hits regardless of batch
+    /// splits or execution path.
+    fn warm_any<P: MorphPixel>(
+        cache: &mut HashMap<PlanKey, PlanEntry<P>>,
+        stats: &mut PlanStats,
+        spec: &FilterSpec,
+        h: usize,
+        w: usize,
+    ) -> Result<()> {
+        let canon = spec.canonical_for(h, w);
+        let key = (canon, h, w);
+        if let Some(entry) = cache.get_mut(&key) {
+            stats.hits += 1;
+            if entry.single.is_none() {
+                entry.single = Some(canon.plan::<P>(h, w)?);
+            }
+            return Ok(());
+        }
+        stats.resolutions += 1;
+        let plan = canon.plan::<P>(h, w)?;
+        let new_bytes = plan.scratch_bytes();
+        if new_bytes > PLAN_CACHE_MAX_BYTES {
+            // bigger than the whole budget: nothing to pin — the
+            // execute stage will run it one-shot (and count the next
+            // touch as another resolution, exactly like `run_any`)
+            return Ok(());
+        }
+        evict_until_fits(cache, new_bytes);
+        cache.insert(
+            key,
+            PlanEntry {
+                single: Some(plan),
+                fused: None,
+            },
+        );
+        Ok(())
+    }
+
+    /// Resolve the u8 plan for `spec` on an `h × w` image ahead of
+    /// execution (the pipeline's plan-resolve stage).  See
+    /// [`NativeEngine::warm_any`] for the counting contract.
+    pub fn warm_spec(&mut self, spec: &FilterSpec, h: usize, w: usize) -> Result<()> {
+        Self::warm_any(&mut self.plans_u8, &mut self.stats, spec, h, w)
+    }
+
+    /// [`NativeEngine::warm_spec`] at 16-bit depth.
+    pub fn warm_spec_u16(&mut self, spec: &FilterSpec, h: usize, w: usize) -> Result<()> {
+        Self::warm_any(&mut self.plans_u16, &mut self.stats, spec, h, w)
+    }
+
     /// Depth-generic **batch** body: a same-key batch of more than one
     /// same-shape full-image request runs through the family's
     /// [`FusedPlan`] (ONE banded execution spanning every image);
@@ -580,6 +636,37 @@ mod tests {
         let (roi_outs, fr) = e.run_spec_batch(&roi_spec, &[&a, &c]).unwrap();
         assert!(!fr);
         assert_eq!(roi_outs[0].height(), 6);
+    }
+
+    #[test]
+    fn warm_spec_counts_like_run_spec() {
+        let mut e = NativeEngine::default();
+        let img = synth::noise(20, 24, 5);
+        let spec = FilterSpec::new(FilterOp::Erode, 5, 5);
+        e.warm_spec(&spec, 20, 24).unwrap();
+        assert_eq!(e.plan_stats(), PlanStats { resolutions: 1, hits: 0 });
+        assert_eq!(e.cached_plans(), 1);
+        // execution after a warm is a pure cache hit
+        let got = e.run_spec(&spec, &img).unwrap();
+        assert!(got.same_pixels(&crate::morphology::erode(&img, 5, 5)));
+        assert_eq!(e.plan_stats(), PlanStats { resolutions: 1, hits: 1 });
+        // re-warming a warm family is a hit too: warm+exec per request
+        // means G requests of one family score 1 + (2G - 1) touches
+        e.warm_spec(&spec, 20, 24).unwrap();
+        assert_eq!(e.plan_stats(), PlanStats { resolutions: 1, hits: 2 });
+        // u16 warms its own cache with its own resolution
+        e.warm_spec_u16(&spec, 20, 24).unwrap();
+        assert_eq!(e.cached_plans(), 2);
+        assert_eq!(e.plan_stats(), PlanStats { resolutions: 2, hits: 2 });
+        // interior ROIs canonicalize per ROI shape: a position sweep
+        // warms one family and every later position is a hit
+        let base = spec.with_roi(crate::morphology::Roi::new(6, 6, 8, 8));
+        e.warm_spec(&base, 20, 24).unwrap();
+        let moved = spec.with_roi(crate::morphology::Roi::new(7, 9, 8, 8));
+        e.warm_spec(&moved, 20, 24).unwrap();
+        assert_eq!(e.plan_stats(), PlanStats { resolutions: 3, hits: 3 });
+        // plan errors surface without poisoning the cache
+        assert!(e.warm_spec(&FilterSpec::new(FilterOp::Erode, 4, 4), 20, 24).is_err());
     }
 
     #[test]

@@ -33,14 +33,14 @@ fn auto_routes_artifact_shapes_to_xla_and_others_to_native() {
     let coord = auto_coordinator(1);
     // 256x256 erode w3x3 has an artifact -> xla
     let img = Arc::new(synth::noise(256, 256, 11));
-    let r = coord.filter("erode", 3, 3, img.clone()).unwrap();
+    let r = coord.filter_spec(FilterSpec::parse_op("erode", 3, 3).unwrap(), img.clone()).unwrap();
     assert_eq!(r.backend, "xla-pjrt");
     let want = morphology::erode(img.view(), 3, 3);
     assert!(r.result.unwrap().into_u8().unwrap().same_pixels(&want));
 
     // 100x100 has no artifact -> native
     let img2 = Arc::new(synth::noise(100, 100, 12));
-    let r2 = coord.filter("erode", 3, 3, img2.clone()).unwrap();
+    let r2 = coord.filter_spec(FilterSpec::parse_op("erode", 3, 3).unwrap(), img2.clone()).unwrap();
     assert_eq!(r2.backend, "native");
     let out2 = r2.result.unwrap().into_u8().unwrap();
     assert!(out2.same_pixels(&morphology::erode(img2.view(), 3, 3)));
@@ -61,10 +61,10 @@ fn xla_only_fails_for_uncompiled_shape() {
     })
     .unwrap();
     let img = Arc::new(synth::noise(100, 100, 13));
-    let r = coord.filter("erode", 3, 3, img).unwrap();
+    let r = coord.filter_spec(FilterSpec::parse_op("erode", 3, 3).unwrap(), img).unwrap();
     assert!(r.result.is_err(), "no artifact for 100x100 -> must fail");
     let ok = Arc::new(synth::noise(256, 256, 14));
-    let r2 = coord.filter("erode", 3, 3, ok).unwrap();
+    let r2 = coord.filter_spec(FilterSpec::parse_op("erode", 3, 3).unwrap(), ok).unwrap();
     assert_eq!(r2.backend, "xla-pjrt");
     assert!(r2.result.is_ok());
     coord.shutdown();
@@ -92,7 +92,9 @@ fn mixed_concurrent_load_from_many_threads() {
                     _ => ("gradient", img_nat.clone()),
                 };
                 let w = if img.height() == 256 { 3 } else { 5 };
-                let r = coord.filter(op, w, w, img).unwrap();
+                let r = coord
+                    .filter_spec(FilterSpec::parse_op(op, w, w).unwrap(), img)
+                    .unwrap();
                 r.result.unwrap();
             }
         }));
@@ -117,7 +119,7 @@ fn native_fallback_when_artifact_dir_missing() {
     })
     .unwrap();
     let img = Arc::new(synth::noise(32, 32, 17));
-    let r = coord.filter("erode", 3, 3, img.clone()).unwrap();
+    let r = coord.filter_spec(FilterSpec::parse_op("erode", 3, 3).unwrap(), img.clone()).unwrap();
     assert_eq!(r.backend, "native");
     assert!(r.result.unwrap().into_u8().unwrap().same_pixels(&morphology::erode(img.view(), 3, 3)));
     coord.shutdown();
@@ -144,7 +146,9 @@ fn derived_ops_through_full_xla_path() {
     let img = Arc::new(synth::document(256, 256, 18));
     let cfg = MorphConfig::default();
     for (op, wx, wy) in [("opening", 7usize, 7usize), ("closing", 7, 7), ("gradient", 15, 15)] {
-        let r = coord.filter(op, wx, wy, img.clone()).unwrap();
+        let r = coord
+            .filter_spec(FilterSpec::parse_op(op, wx, wy).unwrap(), img.clone())
+            .unwrap();
         assert_eq!(r.backend, "xla-pjrt", "{op}");
         let got = r.result.unwrap().into_u8().unwrap();
         let want = match op {
@@ -176,8 +180,7 @@ fn batching_stays_fair_when_bands_and_requests_contend_for_the_pool() {
             parallelism: Parallelism::Fixed(3),
             ..MorphConfig::default()
         },
-        precompile: false,
-        max_bands_per_request: 0,
+        ..CoordinatorConfig::default()
     })
     .unwrap();
     let img = Arc::new(synth::noise(120, 160, 0xFA17));

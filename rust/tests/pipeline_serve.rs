@@ -1,0 +1,342 @@
+//! Staged-pipeline serving suite: the backpressure, isolation and
+//! exactly-once contracts of the admit → ingress → resolve → execute →
+//! reply pipeline, end to end through the public API.
+//!
+//! What this file pins (beyond `streaming_serve.rs`, which covers
+//! bit-identity under the *default* configuration):
+//!
+//! * **admission-only shedding** — under a saturating producer every
+//!   request either sheds at `send` or is answered, per-stage depths
+//!   stay bounded by `stage_capacity` + the stage's sender/batch count,
+//!   and blocked inter-stage sends (the backpressure-propagation
+//!   signal) actually fire;
+//! * **per-key admission budget** — a hot key sheds with the budget
+//!   error while other keys pass, and replies free the slots;
+//! * **panic isolation** — a fault injected into serving (the hidden
+//!   `debug_fault_op` hook, both the fused and per-request paths)
+//!   answers *those* requests with an error and leaves the lane
+//!   serving;
+//! * **bit-identity under constrained stages** — the seven-way op mix
+//!   streamed through tiny stage channels equals the fire-and-wait
+//!   `submit` oracle bit for bit;
+//! * **warm-ahead accounting** — `G` same-family requests score
+//!   exactly 1 plan resolution + `2G − 1` hits.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use neon_morph::coordinator::metrics::{
+    STAGE_EXECUTE, STAGE_INGRESS, STAGE_REPLY, STAGE_RESOLVE,
+};
+use neon_morph::coordinator::request::{FilterOutput, ImagePayload};
+use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use neon_morph::image::{synth, Image};
+use neon_morph::morphology::{Border, FilterOp, FilterSpec, MorphConfig, Parallelism, Roi};
+
+#[test]
+fn saturating_producer_sheds_only_at_admission_with_bounded_stages() {
+    const BURST: usize = 64;
+    const QUEUE: usize = 8;
+    const STAGE_CAP: usize = 2;
+    const MAX_BATCH: usize = 4;
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_capacity: QUEUE,
+        max_batch: MAX_BATCH,
+        backend: BackendChoice::NativeOnly,
+        artifact_dir: None,
+        stage_capacity: STAGE_CAP,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    // slow requests so the producer outruns the pipeline by far
+    let img = Arc::new(synth::noise(240, 320, 0x5A7));
+    let spec = FilterSpec::new(FilterOp::Open, 15, 15);
+    let mut stream = coord.stream();
+    for _ in 0..BURST {
+        let _ = stream.send(spec, img.clone());
+    }
+    let accepted = stream.sent();
+    let shed = stream.shed();
+    assert_eq!(accepted + shed, BURST as u64);
+    assert!(shed > 0, "a {BURST}-deep burst must overrun queue {QUEUE}");
+    assert!(accepted > 0, "admission must accept up to its bounds");
+
+    // exactly-once: every accepted request is answered, each id once
+    let responses = stream.drain();
+    assert_eq!(responses.len() as u64, accepted);
+    let ids: HashSet<u64> = responses.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len() as u64, accepted, "no id may be answered twice");
+    assert!(responses.iter().all(|r| r.result.is_ok()));
+    drop(stream);
+
+    let snap = coord.metrics();
+    assert_eq!(snap.shed, shed, "sheds happen only at admission");
+    assert_eq!(snap.completed, accepted);
+    assert_eq!(snap.failed, 0);
+    // bounded stage depths: capacity + the stage's sender/batch slack
+    let peak = snap.stage_peak;
+    assert!(peak[STAGE_INGRESS] <= (QUEUE + 1) as u64, "ingress peak {}", peak[STAGE_INGRESS]);
+    assert!(peak[STAGE_RESOLVE] <= (STAGE_CAP + 1) as u64, "resolve peak {}", peak[STAGE_RESOLVE]);
+    assert!(
+        peak[STAGE_EXECUTE] <= (STAGE_CAP + MAX_BATCH) as u64,
+        "execute peak {}",
+        peak[STAGE_EXECUTE]
+    );
+    assert!(peak[STAGE_REPLY] <= (STAGE_CAP + 4) as u64, "reply peak {}", peak[STAGE_REPLY]);
+    // backpressure really propagated: some inter-stage send had to wait
+    assert!(
+        snap.stage_blocked_sends.iter().sum::<u64>() > 0,
+        "a saturating producer must block at least one handoff: {:?}",
+        snap.stage_blocked_sends
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn admission_budget_throttles_hot_key_only() {
+    const BUDGET: usize = 3;
+    const BURST: usize = 32;
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_capacity: 2 * BURST, // never Shed::Full — isolate the budget
+        max_batch: 2,
+        backend: BackendChoice::NativeOnly,
+        artifact_dir: None,
+        admission_budget: BUDGET,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let img = Arc::new(synth::noise(240, 320, 0xB0D));
+    let hot = FilterSpec::new(FilterOp::Open, 15, 15);
+    let mut stream = coord.stream();
+    let mut budget_errors = 0u64;
+    for _ in 0..BURST {
+        if let Err(e) = stream.send(hot, img.clone()) {
+            assert!(
+                format!("{e:#}").contains("admission budget"),
+                "queue sized out of the way, only the budget may shed: {e:#}"
+            );
+            budget_errors += 1;
+        }
+    }
+    assert!(budget_errors > 0, "a fast burst must outrun budget {BUDGET}");
+    assert_eq!(stream.shed(), budget_errors);
+    // a different key is not throttled by the hot key's budget
+    let cold = stream
+        .send(FilterSpec::new(FilterOp::Erode, 3, 3), Arc::new(synth::noise(16, 16, 1)))
+        .expect("cold key must admit while the hot key sheds");
+    let responses = stream.drain();
+    assert_eq!(responses.len() as u64, stream.sent());
+    assert!(responses.iter().all(|r| r.result.is_ok()));
+    assert!(responses.iter().any(|r| r.id == cold));
+    drop(stream);
+    // every reply released its slot: the hot key admits again
+    let t = coord.submit(hot, img).unwrap();
+    assert!(t.wait().unwrap().result.is_ok());
+    assert_eq!(coord.metrics().shed, budget_errors);
+    coord.shutdown();
+}
+
+#[test]
+fn injected_panic_is_isolated_and_answered() {
+    let faulty = FilterSpec::new(FilterOp::Gradient, 3, 3);
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        backend: BackendChoice::NativeOnly,
+        artifact_dir: None,
+        debug_fault_op: Some(FilterOp::Gradient),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let img = Arc::new(synth::noise(32, 32, 0xFA));
+
+    // per-request path: the ticket completes with the panic error
+    let resp = coord.filter_spec(faulty, img.clone()).unwrap();
+    assert_eq!(resp.backend, "panic");
+    let err = resp.result.unwrap_err();
+    assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+
+    // the lane survived: a healthy request serves right after
+    let ok = coord
+        .filter_spec(FilterSpec::new(FilterOp::Erode, 3, 3), img.clone())
+        .unwrap();
+    assert_eq!(ok.backend, "native");
+    assert!(ok.result.is_ok());
+
+    // fused/batched path: a same-key burst of faulty requests — every
+    // one is answered (exactly once) with an error, none hangs
+    let mut stream = coord.submit_many(
+        (0..6).map(|_| (faulty, ImagePayload::from(img.clone()))),
+    );
+    assert_eq!(stream.shed(), 0);
+    let responses = stream.drain();
+    assert_eq!(responses.len(), 6);
+    assert!(responses.iter().all(|r| r.result.is_err() && r.backend == "panic"));
+    drop(stream);
+
+    // and the pipeline still serves afterwards
+    let ok = coord
+        .filter_spec(FilterSpec::new(FilterOp::Close, 5, 5), img)
+        .unwrap();
+    assert!(ok.result.is_ok());
+
+    let snap = coord.metrics();
+    assert_eq!(snap.failed, 7, "1 per-request + 6 burst panics");
+    assert_eq!(snap.completed, 2);
+    assert_eq!(snap.shed, 0, "panics are failures, never sheds");
+    coord.shutdown();
+}
+
+// ---- bit-identity under constrained stages ------------------------------
+
+const H: usize = 72;
+const W: usize = 84;
+
+/// The seven-way mixed request stream (`streaming_serve.rs`): op
+/// chains, both depths, both borders, interior and edge-clamped ROIs,
+/// explicit parallelism.
+fn spec_of(i: usize) -> (FilterSpec, bool) {
+    let seq = MorphConfig {
+        parallelism: Parallelism::Sequential,
+        ..MorphConfig::default()
+    };
+    let repl = MorphConfig {
+        border: Border::Replicate,
+        ..MorphConfig::default()
+    };
+    match i % 7 {
+        0 => (FilterSpec::new(FilterOp::Erode, 7, 5), false),
+        1 => (FilterSpec::new(FilterOp::Gradient, 5, 5), true), // u16
+        2 => {
+            // interior crop sweep: tophat halo = (4, 4); positions vary
+            let y = 4 + (i * 5) % (H - 24 - 8);
+            let x = 4 + (i * 3) % (W - 30 - 8);
+            (
+                FilterSpec::new(FilterOp::TopHat, 5, 5).with_roi(Roi::new(y, x, 24, 30)),
+                false,
+            )
+        }
+        3 => (
+            FilterSpec::new(FilterOp::Erode, 5, 5).with_roi(Roi::new(0, 0, 20, 20)),
+            false,
+        ),
+        4 => (
+            FilterSpec::new(FilterOp::Open, 3, 3)
+                .then(FilterOp::Gradient)
+                .with_config(seq),
+            false,
+        ),
+        5 => (FilterSpec::new(FilterOp::Close, 5, 7).with_config(repl), true),
+        _ => (FilterSpec::new(FilterOp::BlackHat, 3, 3), false),
+    }
+}
+
+fn payload(is_u16: bool, img8: &Arc<Image<u8>>, img16: &Arc<Image<u16>>) -> ImagePayload {
+    if is_u16 {
+        img16.clone().into()
+    } else {
+        img8.clone().into()
+    }
+}
+
+fn same_output(a: &FilterOutput, b: &FilterOutput) -> bool {
+    match (a, b) {
+        (FilterOutput::U8(x), FilterOutput::U8(y)) => x.same_pixels(y),
+        (FilterOutput::U16(x), FilterOutput::U16(y)) => x.same_pixels(y),
+        _ => false,
+    }
+}
+
+#[test]
+fn constrained_stages_stay_bit_identical_to_submit() {
+    // tiny stage channels force blocking handoffs on every request, but
+    // must never change a pixel (or lose a request: admission is sized
+    // out of the way, so nothing sheds)
+    const N: usize = 42;
+    let img8 = Arc::new(synth::noise(H, W, 0x91));
+    let img16 = Arc::new(synth::noise_u16(H, W, 0x92));
+
+    let oracle_coord = Coordinator::start_native(2).unwrap();
+    let mut oracles: HashMap<FilterSpec, FilterOutput> = HashMap::new();
+    for i in 0..N {
+        let (spec, is_u16) = spec_of(i);
+        oracles.entry(spec).or_insert_with(|| {
+            oracle_coord
+                .filter_spec(spec, payload(is_u16, &img8, &img16))
+                .unwrap()
+                .result
+                .unwrap()
+        });
+    }
+    oracle_coord.shutdown();
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        queue_capacity: N + 8,
+        max_batch: 4,
+        backend: BackendChoice::NativeOnly,
+        artifact_dir: None,
+        stage_capacity: 2,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let mut stream = coord.stream();
+    let mut by_id = HashMap::new();
+    for i in 0..N {
+        let (spec, is_u16) = spec_of(i);
+        let id = stream
+            .send(spec, payload(is_u16, &img8, &img16))
+            .expect("admission sized for the full load");
+        by_id.insert(id, spec);
+    }
+    for r in stream.drain() {
+        let spec = by_id.remove(&r.id).expect("known id");
+        let got = r.result.unwrap();
+        assert!(
+            same_output(&got, &oracles[&spec]),
+            "pipeline result for {spec:?} differs from the submit oracle"
+        );
+    }
+    assert!(by_id.is_empty(), "every request must be answered");
+    drop(stream);
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, N as u64);
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.shed, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn warm_ahead_scores_one_resolution_and_2n_minus_1_hits() {
+    // the resolve stage warms each request's plan on its lane before
+    // execute touches it: G same-family requests = 1 resolution +
+    // (2G − 1) hits, independent of how the queue splits batches
+    const G: usize = 10;
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        backend: BackendChoice::NativeOnly,
+        artifact_dir: None,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let img = Arc::new(synth::noise(48, 48, 0xAB));
+    let spec = FilterSpec::new(FilterOp::Close, 5, 5);
+    let want = {
+        let cfg = MorphConfig::default();
+        neon_morph::morphology::parallel::closing_native(img.view(), 5, 5, &cfg)
+    };
+    let mut stream = coord.stream();
+    for _ in 0..G {
+        stream.send(spec, img.clone()).unwrap();
+    }
+    for r in stream.drain() {
+        assert!(r.result.unwrap().into_u8().unwrap().same_pixels(&want));
+    }
+    drop(stream);
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, G as u64);
+    assert_eq!(snap.plan_resolutions, 1, "one family, one resolution");
+    assert_eq!(snap.plan_hits, (2 * G - 1) as u64, "{G} warms + {G} executions − 1 resolution");
+    coord.shutdown();
+}

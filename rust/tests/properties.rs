@@ -232,7 +232,8 @@ fn prop_coordinator_results_equal_direct_calls() {
         let w_x = odd_window(rng, 9);
         let w_y = odd_window(rng, 9);
         let op = ["erode", "dilate", "gradient"][rng.below(3)];
-        let resp = coord.filter(op, w_x, w_y, img.clone()).unwrap();
+        let spec = neon_morph::morphology::FilterSpec::parse_op(op, w_x, w_y).unwrap();
+        let resp = coord.filter_spec(spec, img.clone()).unwrap();
         let got = resp.result.unwrap().into_u8().unwrap();
         let cfg = MorphConfig::default();
         let want = match op {

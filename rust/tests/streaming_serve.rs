@@ -31,9 +31,7 @@ fn native_coord(workers: usize, capacity: usize) -> Coordinator {
         max_batch: 8,
         backend: BackendChoice::NativeOnly,
         artifact_dir: None,
-        morph: MorphConfig::default(),
-        precompile: false,
-        max_bands_per_request: 0,
+        ..CoordinatorConfig::default()
     })
     .unwrap()
 }
@@ -197,7 +195,9 @@ fn interior_crop_sweep_streams_through_one_plan_per_worker() {
         "{} resolutions for an interior sweep on {WORKERS} workers",
         snap.plan_resolutions
     );
-    assert_eq!(snap.plan_resolutions + snap.plan_hits, SWEEP as u64);
+    // the pipeline touches each request's plan twice (resolve-stage
+    // warm + execute), so touches = 2·SWEEP across both lane caches
+    assert_eq!(snap.plan_resolutions + snap.plan_hits, 2 * SWEEP as u64);
     coord.shutdown();
 }
 
@@ -234,9 +234,7 @@ fn stream_shed_requests_never_produce_responses() {
         max_batch: 1,
         backend: BackendChoice::NativeOnly,
         artifact_dir: None,
-        morph: MorphConfig::default(),
-        precompile: false,
-        max_bands_per_request: 0,
+        ..CoordinatorConfig::default()
     })
     .unwrap();
     let img = Arc::new(synth::paper_image(7));
