@@ -195,6 +195,215 @@ def closing_u16(img, w_x: int, w_y: int):
     return erode_u16(dilate_u16(img, w_x, w_y), w_x, w_y)
 
 
+# ---------------------------------------------------------------------------
+# scenario-engine mirrors: run-length binary morphology + geodesic
+# reconstruction
+#
+# Loop-exact transcriptions of ``rust/src/morphology/rle.rs`` (per-row
+# sorted maximal foreground intervals; erosion/dilation as interval
+# arithmetic under identity borders) and ``geodesic.rs`` (reconstruction
+# as repeated clamped sweeps, counting every executed sweep *including*
+# the final one that proves the fixpoint).  ``test_rle_geodesic.py``
+# differential-tests these against the dense oracles above, mirroring
+# ``rust/tests/rle_geodesic.rs``.
+# ---------------------------------------------------------------------------
+
+
+def _check_window(window: int, name: str) -> int:
+    """``wing_of``: windows are odd and >= 1; returns the wing."""
+    if window % 2 != 1 or window < 1:
+        raise ValueError(f"{name} must be odd and >= 1, got {window}")
+    return window // 2
+
+
+def rle_encode(img):
+    """Per-row sorted maximal foreground runs ``[(start, end), ...]``.
+
+    Mirrors ``RleImage::from_view``: every pixel must be the dtype's
+    min or max value (the binary identities); anything else raises —
+    the rust side's "stay on the dense path" cue.
+    """
+    arr = np.asarray(img)
+    info = np.iinfo(arr.dtype)
+    rows = []
+    for row in arr:
+        runs = []
+        open_s = None
+        for x, v in enumerate(row):
+            if v == info.max:
+                if open_s is None:
+                    open_s = x
+            elif v == info.min:
+                if open_s is not None:
+                    runs.append((open_s, x))
+                    open_s = None
+            else:
+                raise ValueError(f"non-binary pixel {v} has no run-length form")
+        if open_s is not None:
+            runs.append((open_s, len(row)))
+        rows.append(runs)
+    return rows
+
+
+def rle_decode(rows, width: int, dtype=np.uint8):
+    """Dense image from per-row runs (inverse of ``rle_encode``)."""
+    info = np.iinfo(dtype)
+    out = np.full((len(rows), width), info.min, dtype=dtype)
+    for y, runs in enumerate(rows):
+        for s, e in runs:
+            out[y, s:e] = info.max
+    return jnp.asarray(out)
+
+
+def _shrink_row(runs, wing: int, width: int):
+    """Horizontal erosion of one row's runs: each run loses ``wing`` per
+    side, except at a side flush with the image border (identity padding
+    is full-foreground there)."""
+    if wing == 0:
+        return list(runs)
+    out = []
+    for s, e in runs:
+        ns = 0 if s == 0 else s + wing
+        ne = width if e == width else max(e - wing, 0)
+        if ns < ne:
+            out.append((ns, ne))
+    return out
+
+
+def _grow_row(runs, wing: int, width: int):
+    """Horizontal dilation: grow each run by ``wing`` per side (clamped
+    to the image) and coalesce touching runs."""
+    if wing == 0:
+        return list(runs)
+    out = []
+    for s, e in runs:
+        ns, ne = max(s - wing, 0), min(e + wing, width)
+        if out and ns <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], ne))
+        else:
+            out.append((ns, ne))
+    return out
+
+
+def _intersect_runs(a, b):
+    """Interval intersection of two sorted maximal run lists."""
+    i = j = 0
+    out = []
+    while i < len(a) and j < len(b):
+        s = max(a[i][0], b[j][0])
+        e = min(a[i][1], b[j][1])
+        if s < e:
+            out.append((s, e))
+        if a[i][1] <= b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return out
+
+
+def _union_runs(lists):
+    """Interval union of several sorted run lists (merge + coalesce)."""
+    merged = sorted(r for runs in lists for r in runs)
+    out = []
+    for s, e in merged:
+        if out and s <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], e))
+        else:
+            out.append((s, e))
+    return out
+
+
+def _fold_rows(rows, width: int, wing: int, erode_fold: bool):
+    """Vertical pass: output row ``y`` combines the in-image rows
+    ``y-wing ..= y+wing`` — intersection for erosion (out-of-image rows
+    are the full-foreground identity and drop out), union for dilation."""
+    if wing == 0 or not rows:
+        return [list(r) for r in rows]
+    h = len(rows)
+    out = []
+    for y in range(h):
+        lo, hi = max(y - wing, 0), min(y + wing, h - 1)
+        if erode_fold:
+            acc = [(0, width)] if width > 0 else []
+            for yy in range(lo, hi + 1):
+                if not acc:
+                    break
+                acc = _intersect_runs(acc, rows[yy])
+            out.append(acc)
+        else:
+            out.append(_union_runs(rows[yy] for yy in range(lo, hi + 1)))
+    return out
+
+
+def rle_erode(img, w_x: int, w_y: int):
+    """Binary erosion via interval arithmetic — bit-identical to
+    ``erode`` on min/max-valued images (``RleImage::erode``)."""
+    wing_x = _check_window(w_x, "w_x")
+    wing_y = _check_window(w_y, "w_y")
+    arr = np.asarray(img)
+    width = arr.shape[1] if arr.ndim == 2 else 0
+    rows = rle_encode(arr)
+    rows = [_shrink_row(r, wing_x, width) for r in rows]
+    rows = _fold_rows(rows, width, wing_y, True)
+    return rle_decode(rows, width, arr.dtype)
+
+
+def rle_dilate(img, w_x: int, w_y: int):
+    """Binary dilation via interval arithmetic (``RleImage::dilate``)."""
+    wing_x = _check_window(w_x, "w_x")
+    wing_y = _check_window(w_y, "w_y")
+    arr = np.asarray(img)
+    width = arr.shape[1] if arr.ndim == 2 else 0
+    rows = rle_encode(arr)
+    rows = [_grow_row(r, wing_x, width) for r in rows]
+    rows = _fold_rows(rows, width, wing_y, False)
+    return rle_decode(rows, width, arr.dtype)
+
+
+def reconstruct_by_dilation(marker, mask, w_x: int, w_y: int):
+    """Geodesic reconstruction by dilation: iterate ``min(dilate(cur),
+    mask)`` from ``min(marker, mask)`` to stability.
+
+    Returns ``(fixpoint, sweeps)`` with the rust stack's sweep
+    accounting (``geodesic::reconstruct_with_plan``): ``sweeps`` counts
+    every executed sweep, *including* the final one that proves nothing
+    changed.
+    """
+    marker = jnp.asarray(marker)
+    mask = jnp.asarray(mask)
+    if marker.shape != mask.shape:
+        raise ValueError(f"marker {marker.shape} does not match mask {mask.shape}")
+    if 0 in mask.shape:
+        return mask, 0
+    cur = jnp.minimum(marker, mask)
+    sweeps = 0
+    while True:
+        sweeps += 1
+        nxt = jnp.minimum(dilate(cur, w_x, w_y), mask)
+        if bool(jnp.array_equal(nxt, cur)):
+            return cur, sweeps
+        cur = nxt
+
+
+def reconstruct_by_erosion(marker, mask, w_x: int, w_y: int):
+    """Dual reconstruction: iterate ``max(erode(cur), mask)`` from
+    ``max(marker, mask)`` to stability; same sweep accounting."""
+    marker = jnp.asarray(marker)
+    mask = jnp.asarray(mask)
+    if marker.shape != mask.shape:
+        raise ValueError(f"marker {marker.shape} does not match mask {mask.shape}")
+    if 0 in mask.shape:
+        return mask, 0
+    cur = jnp.maximum(marker, mask)
+    sweeps = 0
+    while True:
+        sweeps += 1
+        nxt = jnp.maximum(erode(cur, w_x, w_y), mask)
+        if bool(jnp.array_equal(nxt, cur)):
+            return cur, sweeps
+        cur = nxt
+
+
 def vhgw_1d(img, window: int, axis: int, op: str):
     """van Herk/Gil-Werman running min/max — numpy reference of the
     *algorithm* (not just the result), used to cross-check the Pallas vHGW

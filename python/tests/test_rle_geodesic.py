@@ -1,0 +1,178 @@
+"""Scenario-engine mirrors: RLE interval morphology + geodesic
+reconstruction vs the dense oracles.
+
+Python half of the cross-language contract pinned by
+``rust/tests/rle_geodesic.rs``: interval erode/dilate must be
+bit-identical to the dense separable oracle on every 0/255 image, and
+reconstruction must reach the dense fixpoint with the library's sweep
+accounting (every executed sweep counts, including the final one that
+proves stability).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xA11CE)
+
+odd_windows = st.integers(0, 4).map(lambda k: 2 * k + 1)
+small_dims = st.tuples(st.integers(1, 36), st.integers(1, 44))
+densities = st.sampled_from([0, 1, 5, 20, 50, 80, 100])
+
+
+def bernoulli_mask(h, w, fg_percent, dtype=np.uint8):
+    info = np.iinfo(dtype)
+    fg = RNG.random(size=(h, w)) * 100 < fg_percent
+    return jnp.asarray(np.where(fg, info.max, info.min).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# RLE interval engine vs the dense oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(dims=small_dims, wx=odd_windows, wy=odd_windows, density=densities)
+def test_rle_matches_dense_oracle(dims, wx, wy, density):
+    h, w = dims
+    mask = bernoulli_mask(h, w, density)
+    assert jnp.array_equal(ref.rle_erode(mask, wx, wy), ref.erode(mask, wx, wy))
+    assert jnp.array_equal(ref.rle_dilate(mask, wx, wy), ref.dilate(mask, wx, wy))
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims=small_dims, density=st.integers(0, 100))
+def test_rle_round_trip_is_lossless(dims, density):
+    h, w = dims
+    mask = bernoulli_mask(h, w, density)
+    runs = ref.rle_encode(mask)
+    assert jnp.array_equal(ref.rle_decode(runs, w), mask)
+    fg = sum(e - s for row in runs for s, e in row)
+    assert fg == int(jnp.count_nonzero(mask))
+
+
+def test_rle_runs_stay_sorted_maximal():
+    mask = bernoulli_mask(20, 40, 30)
+    for img in [ref.rle_erode(mask, 5, 3), ref.rle_dilate(mask, 5, 3)]:
+        for row in ref.rle_encode(img):
+            for (s0, e0), (s1, e1) in zip(row, row[1:]):
+                assert e0 < s1, "runs must be sorted with a gap"
+            for s, e in row:
+                assert 0 <= s < e <= img.shape[1]
+
+
+def test_rle_edge_geometries():
+    # the same hand-built pathologies as rust/tests/rle_geodesic.rs:
+    # full row, empty row, 1-px runs, runs touching both borders,
+    # border-anchored runs, an interior run, a lone pixel
+    img = np.zeros((9, 12), dtype=np.uint8)
+    img[0, :] = 255
+    img[2, ::2] = 255
+    img[3, [0, 11]] = 255
+    img[4, :3] = 255
+    img[5, 9:] = 255
+    img[6, 3:9] = 255
+    img[7:, 5] = 255
+    img = jnp.asarray(img)
+    for wx, wy in [(1, 1), (3, 1), (1, 3), (3, 3), (5, 7), (13, 3)]:
+        assert jnp.array_equal(ref.rle_erode(img, wx, wy), ref.erode(img, wx, wy)), (wx, wy)
+        assert jnp.array_equal(ref.rle_dilate(img, wx, wy), ref.dilate(img, wx, wy)), (wx, wy)
+
+
+def test_rle_u16_uses_the_u16_identities():
+    mask = bernoulli_mask(17, 22, 30, dtype=np.uint16)
+    assert jnp.array_equal(ref.rle_erode(mask, 5, 3), ref.erode_u16(mask, 5, 3))
+    assert jnp.array_equal(ref.rle_dilate(mask, 5, 3), ref.dilate_u16(mask, 5, 3))
+
+
+def test_rle_rejects_gray_and_even_windows():
+    gray = jnp.asarray(np.full((4, 4), 17, dtype=np.uint8))
+    with pytest.raises(ValueError, match="no run-length form"):
+        ref.rle_encode(gray)
+    mask = bernoulli_mask(4, 4, 50)
+    with pytest.raises(ValueError, match="odd"):
+        ref.rle_erode(mask, 4, 3)
+
+
+# ---------------------------------------------------------------------------
+# geodesic reconstruction vs a naive sweep oracle
+# ---------------------------------------------------------------------------
+
+
+def naive_reconstruct(marker, mask, wx, wy):
+    """Pixel-by-pixel in-bounds max-window sweeps, library accounting."""
+    marker, mask = np.asarray(marker), np.asarray(mask)
+    h, w = mask.shape
+    wing_y, wing_x = wy // 2, wx // 2
+    cur = np.minimum(marker, mask)
+    sweeps = 0
+    while True:
+        sweeps += 1
+        nxt = np.empty_like(cur)
+        for y in range(h):
+            for x in range(w):
+                win = cur[
+                    max(y - wing_y, 0) : y + wing_y + 1,
+                    max(x - wing_x, 0) : x + wing_x + 1,
+                ]
+                nxt[y, x] = min(win.max(), mask[y, x])
+        if np.array_equal(nxt, cur):
+            return jnp.asarray(cur), sweeps
+        cur = nxt
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dims=st.tuples(st.integers(4, 20), st.integers(4, 24)),
+    wx=st.sampled_from([1, 3, 5]),
+    wy=st.sampled_from([1, 3, 5]),
+)
+def test_reconstruction_matches_naive_oracle(dims, wx, wy):
+    h, w = dims
+    mask = bernoulli_mask(h, w, 50)
+    seed = RNG.random(size=(h, w)) < 0.05
+    marker = jnp.asarray(np.where(seed, np.asarray(mask), 0).astype(np.uint8))
+    want, want_sweeps = naive_reconstruct(marker, mask, wx, wy)
+    got, sweeps = ref.reconstruct_by_dilation(marker, mask, wx, wy)
+    assert jnp.array_equal(got, want)
+    assert sweeps == want_sweeps
+
+
+def test_reconstruction_by_erosion_is_the_dual():
+    mask = bernoulli_mask(12, 16, 50)
+    seed = bernoulli_mask(12, 16, 5)
+    marker = jnp.minimum(seed, mask)
+    by_dil, s1 = ref.reconstruct_by_dilation(marker, mask, 3, 3)
+    # complement duality: rec_by_erosion(~marker, ~mask) == ~rec_by_dilation
+    inv = lambda a: jnp.asarray(255 - np.asarray(a), dtype=jnp.uint8)  # noqa: E731
+    by_ero, s2 = ref.reconstruct_by_erosion(inv(marker), inv(mask), 3, 3)
+    assert jnp.array_equal(by_ero, inv(by_dil))
+    assert s1 == s2
+
+
+def test_reconstruction_without_change_counts_one_proving_sweep():
+    # marker already at the fixpoint: the loop still runs (and counts)
+    # exactly the sweep that proves nothing changes
+    mask = jnp.asarray(np.full((6, 6), 255, dtype=np.uint8))
+    out, sweeps = ref.reconstruct_by_dilation(mask, mask, 3, 3)
+    assert jnp.array_equal(out, mask)
+    assert sweeps == 1
+
+
+def test_bench_checkerboard_workload_counts():
+    # the BENCH_rle.json reconstruction workload (bench_harness::rle):
+    # 60x80 checkerboard (cell 8, foreground on odd cells), marker = top
+    # row of the mask.  Odd cells corner-touch, so the fixpoint is the
+    # full mask; the sweep count here is what mirror_counts.py bakes
+    # into the committed baseline.
+    h, w, cell = 60, 80, 8
+    y, x = np.indices((h, w))
+    mask = jnp.asarray(np.where((y // cell + x // cell) % 2 == 1, 255, 0).astype(np.uint8))
+    marker = jnp.asarray(np.where(y == 0, np.asarray(mask), 0).astype(np.uint8))
+    out, sweeps = ref.reconstruct_by_dilation(marker, mask, 3, 3)
+    assert jnp.array_equal(out, mask)
+    assert int(jnp.count_nonzero(out)) == int(jnp.count_nonzero(mask))
+    assert sweeps >= h // 2

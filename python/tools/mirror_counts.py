@@ -29,7 +29,14 @@ CI perf baselines (``rust/benches/baselines/BENCH_*.json``):
   independent fork-joins or as ONE fork-join over the fused ``n*h``
   extent (``FusedPlan``), at ``SERVE_FUSED_WORKERS`` workers.  Compute
   is identical either way; the gated batch-64 ratio is pure
-  fork/band-overhead recovery.
+  fork/band-overhead recovery, and
+* the scenario-engine headlines (``BENCH_rle.json``) — the closed-form
+  RLE-vs-dense cost ratio (``CostModel::estimate_rle_cost`` against the
+  default-config separable estimate) at the sparse headline density,
+  its 0.005-step crossover scan, and a pixel-by-pixel simulation of the
+  geodesic-reconstruction sweep loop on the checkerboard workload
+  (``bench_harness::rle``), with the library's sweep accounting (the
+  final fixpoint-proving sweep counts).
 
 Counts are pure functions of the loop structure (no pixel data), so the
 mirror and the rust Counting backend must agree exactly; prices are the
@@ -552,6 +559,158 @@ def serve_baseline():
     }
 
 
+# -- scenario engines (BENCH_rle.json) --------------------------------------
+
+# CostModel RLE constants (rust/src/costmodel/mod.rs) — keep in sync.
+RLE_SCAN_CYCLES = 0.5
+RLE_RUN_CYCLES = 8.0
+RLE_MERGE_CYCLES = 3.0
+# bench_harness::rle headline constants — keep in sync.
+RLE_WX = RLE_WY = 7
+RLE_STEPS = 1
+RLE_SPARSE_DENSITY = 0.05
+RECON_H, RECON_W, RECON_CELL = 60, 80, 8
+RECON_WX = RECON_WY = 3
+
+
+def runs_per_row(w, density):
+    # costmodel::runs_per_row — Bernoulli expectation of maximal runs
+    if w == 0:
+        return 0.0
+    d = min(max(density, 0.0), 1.0)
+    return (w - 1) * d * (1.0 - d) + d
+
+
+def estimate_separable_cost(h, w, w_x, w_y, lanes=LANES, px=1):
+    """CostModel::estimate_separable_cost under MorphConfig::default()
+    (hybrid dispatch at the paper thresholds, Direct vertical, simd on)
+    — returns (compute_ns, memory_ns)."""
+    ld, ldu = CYCLES["simd_load"], CYCLES["simd_load_u"]
+    st, mm, salu = CYCLES["simd_store"], CYCLES["simd_minmax"], CYCLES["scalar_alu"]
+    if h == 0 or w == 0:
+        return 0.0, 0.0
+    pixels = h * w
+    compute = 0.0
+    stream = 0.0
+    if w_y > 1:
+        if w_y <= PAPER_WY0:  # hybrid resolves to Linear
+            compute += ((w_y + 1.0) * ld + w_y * mm + 2.0 * st + 2.0 * salu) / (
+                2.0 * lanes
+            ) * pixels
+            stream += 2.0 * pixels * px
+        else:  # vHGW R+S chunk census over padded rows
+            compute += (
+                (5.0 * ld + 3.0 * mm + 3.0 * st + 2.0 * salu) / lanes * ((h + w_y) / h)
+            ) * pixels
+            stream += 5.0 * pixels * px
+    if w_x > 1:
+        if w_x <= PAPER_WX0:  # Linear, Direct vertical => no sandwich
+            compute += (
+                (w_x * ldu + (w_x - 1.0) * mm + st + 2.0 * salu) / lanes
+            ) * pixels
+            stream += 2.0 * pixels * px
+        else:  # vHGW always takes the transpose sandwich
+            transpose_px = 2.0 * (2.0 * (ld + st) / 2.0 + 4.0) / lanes
+            compute += (
+                transpose_px
+                + (5.0 * ld + 3.0 * mm + 3.0 * st + 2.0 * salu)
+                / lanes
+                * ((w + w_x) / w)
+            ) * pixels
+            stream += (5.0 + 4.0) * pixels * px
+    return compute / FREQ_GHZ, stream / BW_BYTES_PER_CYCLE / FREQ_GHZ
+
+
+def estimate_rle_cost(h, w, w_y, steps, density, px=1):
+    # CostModel::estimate_rle_cost: encode+decode stream the image twice
+    # and pay a per-pixel scan; each step pays per-run interval work plus
+    # a w_y-way per-run merge
+    if h == 0 or w == 0:
+        return 0.0
+    pixels = h * w
+    runs = runs_per_row(w, density)
+    convert_ns = (
+        2.0 * pixels * px / BW_BYTES_PER_CYCLE / FREQ_GHZ
+        + pixels * RLE_SCAN_CYCLES / FREQ_GHZ
+    )
+    per_step = h * runs * RLE_RUN_CYCLES + h * w_y * runs * RLE_MERGE_CYCLES
+    return convert_ns + steps * per_step / FREQ_GHZ
+
+
+def rle_speedup(h, w, w_x, w_y, steps, density, px=1):
+    rle = estimate_rle_cost(h, w, w_y, steps, density, px)
+    if rle <= 0.0:
+        return 1.0
+    comp, mem = estimate_separable_cost(h, w, w_x, w_y, LANES, px)
+    return steps * (comp + mem) / rle
+
+
+def rle_crossover_density(h, w, w_x, w_y, steps, px=1):
+    # the same 0.005 accumulation loop as CostModel::rle_crossover_density
+    # (f64 addition is identical in both languages)
+    d = 0.0
+    while d <= 1.0:
+        if rle_speedup(h, w, w_x, w_y, steps, d, px) <= 1.0:
+            return d
+        d += 0.005
+    return 1.0
+
+
+def rle_reconstruct_counts():
+    """bench_harness::rle::run_recon, swept pixel-by-pixel: reconstruct
+    the 60x80 checkerboard (cell 8, FG on odd cells) from its top row
+    with 3x3 geodesic dilation, counting every executed sweep including
+    the final fixpoint-proving one (geodesic::reconstruct_with_plan)."""
+    h, w, cell = RECON_H, RECON_W, RECON_CELL
+    mask = [
+        [255 if ((y // cell) + (x // cell)) % 2 == 1 else 0 for x in range(w)]
+        for y in range(h)
+    ]
+    marker = [mask[0][:]] + [[0] * w for _ in range(h - 1)]
+    cur = [[min(marker[y][x], mask[y][x]) for x in range(w)] for y in range(h)]
+    sweeps = 0
+    while True:
+        sweeps += 1
+        nxt = []
+        for y in range(h):
+            row = []
+            for x in range(w):
+                m = 0
+                for yy in range(max(y - 1, 0), min(y + 1, h - 1) + 1):
+                    v = max(cur[yy][max(x - 1, 0) : x + 2])
+                    if v > m:
+                        m = v
+                row.append(min(m, mask[y][x]))
+            nxt.append(row)
+        if nxt == cur:
+            fg = sum(1 for row in cur for v in row if v > 0)
+            return sweeps, fg
+        cur = nxt
+
+
+def rle_baseline():
+    # mirrors bench_harness::rle::{run_smoke, to_json}
+    sweeps, fg = rle_reconstruct_counts()
+    headline = {
+        "rle_speedup_sparse5pct": rle_speedup(
+            H, W, RLE_WX, RLE_WY, RLE_STEPS, RLE_SPARSE_DENSITY
+        ),
+        "rle_crossover_density": rle_crossover_density(H, W, RLE_WX, RLE_WY, RLE_STEPS),
+        "reconstruct_sweeps": sweeps,
+        "reconstruct_foreground": fg,
+    }
+    return {
+        "bench": "rle",
+        "workload": (
+            f"rle model: erode {RLE_WX}x{RLE_WY} on {W}x{H} u8 at density "
+            f"{RLE_SPARSE_DENSITY} (crossover scanned at 0.005); live reconstruct "
+            f"{RECON_WX}x{RECON_WY} on {RECON_W}x{RECON_H} checkerboard (cell "
+            f"{RECON_CELL}) seeded from its top row"
+        ),
+        "headline": headline,
+    }
+
+
 def main():
     outdir = sys.argv[1] if len(sys.argv) > 1 else "rust/benches/baselines"
     os.makedirs(outdir, exist_ok=True)
@@ -561,6 +720,7 @@ def main():
     table1 = table1_baseline()
     scaling, debug = scaling_baseline()
     serve = serve_baseline()
+    rle = rle_baseline()
     for name, doc in [
         ("BENCH_fig3.json", fig3),
         ("BENCH_fig3_u16.json", fig3u16),
@@ -568,6 +728,7 @@ def main():
         ("BENCH_table1.json", table1),
         ("BENCH_scaling.json", scaling),
         ("BENCH_serve.json", serve),
+        ("BENCH_rle.json", rle),
     ]:
         path = os.path.join(outdir, name)
         with open(path, "w") as f:
@@ -590,6 +751,7 @@ def main():
     print(f"scaling headline: {scaling['headline']}")
     print(f"saturation boundary margin (want far from 1.0): {debug['margin']:.4f}")
     print(f"serve headline: {serve['headline']}")
+    print(f"rle headline: {rle['headline']}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ use crate::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use crate::costmodel::CostModel;
 use crate::image::synth;
 use crate::morphology::{
-    self, Border, HybridThresholds, MorphConfig, MorphOp, Parallelism, PassMethod,
+    self, Border, HybridThresholds, MorphConfig, MorphOp, Parallelism, PassMethod, Representation,
     VerticalStrategy,
 };
 use crate::neon::{Counting, Native};
@@ -45,6 +45,7 @@ fn cfg_baseline() -> MorphConfig {
         border: Border::Identity,
         thresholds: HybridThresholds::paper(),
         parallelism: Parallelism::Sequential,
+        representation: Representation::Dense,
     }
 }
 

@@ -16,7 +16,9 @@
 //! `bench smoke` / `bench gate`).  The deterministic Table 1 form is
 //! [`table1::run_model`].  [`serve`] adds the serving-side report
 //! (`BENCH_serve.json`): count-exact plan-cache headlines of a streamed
-//! coordinator workload (plan resolutions per request).
+//! coordinator workload (plan resolutions per request).  [`rle`] adds
+//! the scenario-engine report (`BENCH_rle.json`): modeled RLE-vs-dense
+//! ratios plus a live reconstruction sweep count.
 //!
 //! Every experiment reports **two** measurements side by side:
 //!
@@ -37,6 +39,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod gate;
 pub mod report;
+pub mod rle;
 pub mod scaling;
 pub mod serve;
 pub mod table1;

@@ -275,6 +275,7 @@ impl Coordinator {
         &self,
         spec: FilterSpec,
         image: ImagePayload,
+        marker: Option<ImagePayload>,
         reply: mpsc::Sender<FilterResponse>,
     ) -> Result<u64> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -283,6 +284,7 @@ impl Coordinator {
                 id,
                 spec,
                 image,
+                marker,
                 enqueued: Instant::now(),
             },
             reply,
@@ -313,8 +315,36 @@ impl Coordinator {
     /// stage (the ticket then carries the error).
     pub fn submit(&self, spec: FilterSpec, image: impl Into<ImagePayload>) -> Result<Ticket> {
         let (tx, rx) = mpsc::channel();
-        let id = self.enqueue(spec, image.into(), tx)?;
+        let id = self.enqueue(spec, image.into(), None, tx)?;
         Ok(Ticket { id, rx })
+    }
+
+    /// Submit a two-payload request — the entry point for
+    /// [`FilterOp::Reconstruct`] specs, whose `image` is the geodesic
+    /// mask and `marker` the seed to propagate under it.  The ingress
+    /// stage validates the pairing (reconstruct specs require a
+    /// depth/shape-matched marker; every other spec must come without
+    /// one), so a mispaired submission costs a ticket error, never an
+    /// engine touch.
+    pub fn submit_with_marker(
+        &self,
+        spec: FilterSpec,
+        image: impl Into<ImagePayload>,
+        marker: impl Into<ImagePayload>,
+    ) -> Result<Ticket> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.enqueue(spec, image.into(), Some(marker.into()), tx)?;
+        Ok(Ticket { id, rx })
+    }
+
+    /// Submit a two-payload request and block for the result.
+    pub fn filter_spec_with_marker(
+        &self,
+        spec: FilterSpec,
+        image: impl Into<ImagePayload>,
+        marker: impl Into<ImagePayload>,
+    ) -> Result<FilterResponse> {
+        self.submit_with_marker(spec, image, marker)?.wait()
     }
 
     /// Open a streaming submission handle: [`SubmitStream::send`]
@@ -410,7 +440,7 @@ impl SubmitStream<'_> {
     /// backpressure the request is shed, counted, and the error
     /// returned — the stream stays usable.
     pub fn send(&mut self, spec: FilterSpec, image: impl Into<ImagePayload>) -> Result<u64> {
-        match self.coord.enqueue(spec, image.into(), self.tx.clone()) {
+        match self.coord.enqueue(spec, image.into(), None, self.tx.clone()) {
             Ok(id) => {
                 self.sent += 1;
                 Ok(id)
@@ -704,6 +734,47 @@ mod tests {
     }
 
     #[test]
+    fn reconstruct_round_trip_validates_marker_pairing() {
+        let coord = Coordinator::start_native(2).unwrap();
+        let mask = Arc::new(synth::noise(24, 32, 0x33));
+        let mut seed = Image::<u8>::zeros(24, 32);
+        seed.row_mut(0).copy_from_slice(mask.row(0));
+        let marker = Arc::new(seed);
+        let spec = FilterSpec::new(FilterOp::Reconstruct, 3, 3);
+        let resp = coord
+            .filter_spec_with_marker(spec, mask.clone(), marker.clone())
+            .unwrap();
+        assert_eq!(resp.backend, "native");
+        let (want, _) = morphology::reconstruct_by_dilation(
+            &**marker,
+            &**mask,
+            3,
+            3,
+            &MorphConfig::default(),
+        )
+        .unwrap();
+        assert!(resp.result.unwrap().into_u8().unwrap().same_pixels(&want));
+        // markerless reconstruct fails at ingress without an engine touch
+        let r = coord.filter_spec(spec, mask.clone()).unwrap();
+        assert!(r.result.is_err());
+        assert_eq!(r.backend, "ingress");
+        // a marker on a non-reconstruct spec fails the same way
+        let r = coord
+            .filter_spec_with_marker(FilterSpec::new(FilterOp::Erode, 3, 3), mask.clone(), marker)
+            .unwrap();
+        assert!(r.result.is_err());
+        // shape-mismatched marker
+        let r = coord
+            .filter_spec_with_marker(spec, mask, Arc::new(synth::noise(8, 8, 1)))
+            .unwrap();
+        assert!(r.result.is_err());
+        let snap = coord.metrics();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.failed, 3);
+        coord.shutdown();
+    }
+
+    #[test]
     fn transpose_request_swaps_dims() {
         let coord = Coordinator::start_native(1).unwrap();
         let img = Arc::new(synth::noise(10, 20, 8));
@@ -874,6 +945,7 @@ mod tests {
                     id,
                     spec,
                     image: ImagePayload::from(img.clone()),
+                    marker: None,
                     enqueued: Instant::now(),
                 },
                 reply: tx,

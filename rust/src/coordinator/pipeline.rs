@@ -247,6 +247,37 @@ fn routes_native(cfg: &CoordinatorConfig, manifest: &Option<Arc<Manifest>>, p: &
     true
 }
 
+/// Validate a request's marker pairing (the ingress-stage rule): a
+/// [`FilterOp::Reconstruct`](crate::morphology::FilterOp) spec requires
+/// a marker matching the mask image in depth and shape; any other spec
+/// must not carry one.
+fn check_marker(p: &Pending) -> std::result::Result<(), String> {
+    match (&p.req.marker, p.req.spec.is_reconstruct()) {
+        (None, false) => Ok(()),
+        (None, true) => Err("reconstruct spec requires a marker payload".into()),
+        (Some(_), false) => Err("marker payloads only pair with reconstruct specs".into()),
+        (Some(m), true) => {
+            if m.depth() != p.req.image.depth() {
+                Err(format!(
+                    "marker depth {} does not match the {} mask image",
+                    m.dtype(),
+                    p.req.image.dtype()
+                ))
+            } else if (m.height(), m.width()) != (p.req.image.height(), p.req.image.width()) {
+                Err(format!(
+                    "marker {}x{} does not match the {}x{} mask image",
+                    m.height(),
+                    m.width(),
+                    p.req.image.height(),
+                    p.req.image.width()
+                ))
+            } else {
+                Ok(())
+            }
+        }
+    }
+}
+
 /// One execute lane's shared handles: its batch queue (fed by resolve)
 /// and its native engine (shared with resolve for warm-ahead only).
 struct Lane {
@@ -273,6 +304,15 @@ impl Stage for Ingress {
         if let Err(e) = p.req.spec.validate(h, w) {
             self.metrics.stage_exit(STAGE_INGRESS);
             let s = error_served(p, anyhow!(e), "ingress");
+            send_reply(&self.reply_tx, &self.metrics, STAGE_INGRESS, s);
+            return;
+        }
+        // marker pairing is part of request validity: a reconstruct
+        // spec requires a depth/shape-matched marker, every other spec
+        // must come without one — rejected here, before any engine
+        if let Err(msg) = check_marker(&p) {
+            self.metrics.stage_exit(STAGE_INGRESS);
+            let s = error_served(p, anyhow!(msg), "ingress");
             send_reply(&self.reply_tx, &self.metrics, STAGE_INGRESS, s);
             return;
         }
@@ -520,7 +560,11 @@ pub(crate) fn serve_fused(
         return Err(batch);
     }
     let spec = batch[0].req.spec;
-    if spec.roi.is_some() || spec.is_transpose() || cfg.backend == BackendChoice::XlaOnly {
+    if spec.roi.is_some()
+        || spec.is_transpose()
+        || spec.is_reconstruct()
+        || cfg.backend == BackendChoice::XlaOnly
+    {
         return Err(batch);
     }
     let (h, w) = (batch[0].req.image.height(), batch[0].req.image.width());
@@ -743,49 +787,80 @@ pub(crate) fn serve_request(
     };
 
     let t = Instant::now();
-    let (result, backend): (Result<FilterOutput>, &'static str) = match &p.req.image {
-        ImagePayload::U8(img) => {
-            if cfg.backend == BackendChoice::XlaOnly {
-                match (compiled, xla.as_mut()) {
-                    (Some(meta), Some(rt)) => {
-                        (rt.run_u8(&meta, img).map(FilterOutput::U8), rt.backend_name())
-                    }
-                    (None, _) => (
-                        Err(anyhow!("no artifact for {key} (XlaOnly backend)")),
-                        "xla-pjrt",
-                    ),
-                    (Some(_), None) => (
-                        Err(anyhow!("XLA runtime unavailable on worker {wid}")),
-                        "xla-pjrt",
-                    ),
-                }
-            } else if let (Some(meta), Some(rt)) = (compiled.as_ref(), xla.as_mut()) {
-                match rt.run_u8(meta, img) {
-                    // Auto: degrade to native on runtime errors
-                    Err(_) => (
-                        native.run_spec(&native_spec, img).map(FilterOutput::U8),
-                        native.backend_name(),
-                    ),
-                    ok => (ok.map(FilterOutput::U8), rt.backend_name()),
-                }
-            } else {
-                (
-                    native.run_spec(&native_spec, img).map(FilterOutput::U8),
+    let (result, backend): (Result<FilterOutput>, &'static str) = if spec.is_reconstruct() {
+        // reconstruction is native-only (no AOT artifacts carry a
+        // second payload); ingress validated the marker pairing, but
+        // direct callers of this function get the same checks as errors
+        if cfg.backend == BackendChoice::XlaOnly {
+            (
+                Err(anyhow!("no reconstruct artifacts exist (XlaOnly backend, {key})")),
+                "xla-pjrt",
+            )
+        } else {
+            match (&p.req.image, &p.req.marker) {
+                (ImagePayload::U8(img), Some(ImagePayload::U8(mk))) => (
+                    native
+                        .run_spec_reconstruct(&native_spec, img, mk)
+                        .map(|(out, _sweeps)| FilterOutput::U8(out)),
                     native.backend_name(),
-                )
+                ),
+                (ImagePayload::U16(img), Some(ImagePayload::U16(mk))) => (
+                    native
+                        .run_spec_reconstruct_u16(&native_spec, img, mk)
+                        .map(|(out, _sweeps)| FilterOutput::U16(out)),
+                    native.backend_name(),
+                ),
+                _ => (
+                    Err(anyhow!("reconstruct request {key} has no depth-matched marker")),
+                    native.backend_name(),
+                ),
             }
         }
-        ImagePayload::U16(img) => {
-            if cfg.backend == BackendChoice::XlaOnly {
-                (
-                    Err(anyhow!("no u16 artifacts exist (XlaOnly backend, {key})")),
-                    "xla-pjrt",
-                )
-            } else {
-                (
-                    native.run_spec_u16(&native_spec, img).map(FilterOutput::U16),
-                    native.backend_name(),
-                )
+    } else {
+        match &p.req.image {
+            ImagePayload::U8(img) => {
+                if cfg.backend == BackendChoice::XlaOnly {
+                    match (compiled, xla.as_mut()) {
+                        (Some(meta), Some(rt)) => {
+                            (rt.run_u8(&meta, img).map(FilterOutput::U8), rt.backend_name())
+                        }
+                        (None, _) => (
+                            Err(anyhow!("no artifact for {key} (XlaOnly backend)")),
+                            "xla-pjrt",
+                        ),
+                        (Some(_), None) => (
+                            Err(anyhow!("XLA runtime unavailable on worker {wid}")),
+                            "xla-pjrt",
+                        ),
+                    }
+                } else if let (Some(meta), Some(rt)) = (compiled.as_ref(), xla.as_mut()) {
+                    match rt.run_u8(meta, img) {
+                        // Auto: degrade to native on runtime errors
+                        Err(_) => (
+                            native.run_spec(&native_spec, img).map(FilterOutput::U8),
+                            native.backend_name(),
+                        ),
+                        ok => (ok.map(FilterOutput::U8), rt.backend_name()),
+                    }
+                } else {
+                    (
+                        native.run_spec(&native_spec, img).map(FilterOutput::U8),
+                        native.backend_name(),
+                    )
+                }
+            }
+            ImagePayload::U16(img) => {
+                if cfg.backend == BackendChoice::XlaOnly {
+                    (
+                        Err(anyhow!("no u16 artifacts exist (XlaOnly backend, {key})")),
+                        "xla-pjrt",
+                    )
+                } else {
+                    (
+                        native.run_spec_u16(&native_spec, img).map(FilterOutput::U16),
+                        native.backend_name(),
+                    )
+                }
             }
         }
     };

@@ -174,8 +174,14 @@ pub struct FilterRequest {
     pub id: u64,
     /// Full pipeline description (op chain, window, config, ROI).
     pub spec: FilterSpec,
-    /// Shared, zero-copy, depth-tagged input image.
+    /// Shared, zero-copy, depth-tagged input image.  For
+    /// [`FilterOp::Reconstruct`](crate::morphology::FilterOp) specs this
+    /// is the geodesic **mask** (the clamp bound).
     pub image: ImagePayload,
+    /// Second payload of a reconstruct spec: the marker to propagate
+    /// under `image`.  Must match `image` in depth and shape; required
+    /// iff the spec is a reconstruct (validated at ingress).
+    pub marker: Option<ImagePayload>,
     pub enqueued: Instant,
 }
 
@@ -287,6 +293,7 @@ mod tests {
             id: 0,
             spec,
             image,
+            marker: None,
             enqueued: Instant::now(),
         }
     }

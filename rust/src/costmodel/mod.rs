@@ -362,6 +362,124 @@ impl CostModel {
             stream_bytes / self.bw_bytes_per_cycle / self.freq_ghz,
         )
     }
+
+    // -- run-length representation dispatch ---------------------------------
+
+    /// Modeled cost of one binary-morphology request served through the
+    /// run-length path ([`crate::morphology::RleImage`]): encode + decode
+    /// stream the image twice and pay a per-pixel scan, then each chain
+    /// step pays per-run interval arithmetic (horizontal shrink/grow)
+    /// plus a `w_y`-way per-run merge (vertical intersection/union).
+    /// Returns total nanoseconds.  The run census uses the Bernoulli
+    /// expectation [`runs_per_row`]; like
+    /// [`CostModel::estimate_separable_cost`] this is a *dispatch
+    /// heuristic*, not a reproduction number.
+    pub fn estimate_rle_cost(
+        &self,
+        h: usize,
+        w: usize,
+        w_y: usize,
+        steps: usize,
+        density: f64,
+        px_bytes: usize,
+    ) -> f64 {
+        if h == 0 || w == 0 {
+            return 0.0;
+        }
+        let pixels = (h * w) as f64;
+        let runs = runs_per_row(w, density);
+        let convert_ns = 2.0 * pixels * px_bytes as f64 / self.bw_bytes_per_cycle / self.freq_ghz
+            + pixels * RLE_SCAN_CYCLES / self.freq_ghz;
+        let per_step_cycles =
+            h as f64 * runs * RLE_RUN_CYCLES + h as f64 * w_y as f64 * runs * RLE_MERGE_CYCLES;
+        convert_ns + steps as f64 * per_step_cycles / self.freq_ghz
+    }
+
+    /// Modeled speedup of the RLE path over the dense separable path for
+    /// a `steps`-op binary chain on an `h`×`w` image of the given
+    /// foreground `density` — the `Representation::Auto` dispatch
+    /// predicate (`> 1.0` routes to RLE).  The dense side prices each
+    /// chain step with [`CostModel::estimate_separable_cost`] under the
+    /// request's own config.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rle_speedup(
+        &self,
+        h: usize,
+        w: usize,
+        w_x: usize,
+        w_y: usize,
+        steps: usize,
+        density: f64,
+        px_bytes: usize,
+        cfg: &crate::morphology::MorphConfig,
+    ) -> f64 {
+        let rle = self.estimate_rle_cost(h, w, w_y, steps, density, px_bytes);
+        if rle <= 0.0 {
+            return 1.0;
+        }
+        let lanes = simd_lanes(if px_bytes == 2 { "u16" } else { "u8" }).unwrap_or(1);
+        let (comp, mem) = self.estimate_separable_cost(
+            h,
+            w,
+            w_x,
+            w_y,
+            lanes,
+            px_bytes,
+            cfg.simd,
+            cfg.method,
+            cfg.vertical,
+            &cfg.thresholds,
+        );
+        steps as f64 * (comp + mem) / rle
+    }
+
+    /// First foreground density (scanned in steps of 0.005) at which the
+    /// modeled RLE cost reaches the dense cost — i.e. where the sparse
+    /// representation stops winning.  Returns 1.0 if RLE wins at every
+    /// density.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rle_crossover_density(
+        &self,
+        h: usize,
+        w: usize,
+        w_x: usize,
+        w_y: usize,
+        steps: usize,
+        px_bytes: usize,
+        cfg: &crate::morphology::MorphConfig,
+    ) -> f64 {
+        let mut d = 0.0f64;
+        while d <= 1.0 {
+            if self.rle_speedup(h, w, w_x, w_y, steps, d, px_bytes, cfg) <= 1.0 {
+                return d;
+            }
+            d += 0.005;
+        }
+        1.0
+    }
+}
+
+/// Calibrated per-pixel scan cost of the RLE encoder/decoder (run
+/// detection over a row, amortized across the streaming copy — the
+/// byte traffic itself is priced separately through the bandwidth term).
+pub const RLE_SCAN_CYCLES: f64 = 0.5;
+/// Per-run cost of one horizontal interval shrink/grow (branch + two
+/// clamped adds + a bounds check).
+pub const RLE_RUN_CYCLES: f64 = 8.0;
+/// Per-run-per-window-row cost of the vertical k-way merge (two-pointer
+/// intersection / sort-free union advance).
+pub const RLE_MERGE_CYCLES: f64 = 3.0;
+
+/// Expected maximal foreground runs per row of a width-`w` row whose
+/// pixels are i.i.d. foreground with probability `density`: a run starts
+/// at a FG pixel preceded by BG (or the row edge), so
+/// `E[runs] = (w-1)·d·(1-d) + d`.
+pub fn runs_per_row(w: usize, density: f64) -> f64 {
+    if w == 0 {
+        return 0.0;
+    }
+    let d = density.clamp(0.0, 1.0);
+    (w as f64 - 1.0) * d * (1.0 - d) + d
 }
 
 impl Default for CostModel {
@@ -528,6 +646,40 @@ mod tests {
         // a forced-vHGW config prices its extra streaming (sandwich)
         let (_, mem_vhgw) = estimate(120, 160, PassMethod::Vhgw);
         assert!(mem_vhgw > mem * 2.0, "vhgw must stream more than linear");
+    }
+
+    #[test]
+    fn runs_per_row_is_a_bernoulli_expectation() {
+        assert_eq!(runs_per_row(100, 0.0), 0.0);
+        assert_eq!(runs_per_row(0, 0.5), 0.0);
+        // full row is exactly one run
+        assert!((runs_per_row(100, 1.0) - 1.0).abs() < 1e-12);
+        // sparse rows: runs ≈ w·d (isolated pixels)
+        assert!((runs_per_row(1000, 0.01) - 1000.0 * 0.01).abs() < 1.0);
+        // densest fragmentation near d=0.5
+        assert!(runs_per_row(100, 0.5) > runs_per_row(100, 0.1));
+        assert!(runs_per_row(100, 0.5) > runs_per_row(100, 0.9));
+    }
+
+    #[test]
+    fn rle_wins_sparse_and_loses_dense() {
+        use crate::morphology::MorphConfig;
+        let m = CostModel::exynos5422();
+        let cfg = MorphConfig::default();
+        // headline workload: 600×800 u8 erode 7×7 at 5% foreground
+        let sparse = m.rle_speedup(600, 800, 7, 7, 1, 0.05, 1, &cfg);
+        assert!(sparse > 1.0, "sparse speedup {sparse}");
+        // mid-density masks fragment into ~w·d·(1-d) runs — dense wins
+        let mid = m.rle_speedup(600, 800, 7, 7, 1, 0.5, 1, &cfg);
+        assert!(mid < 1.0, "mid-density speedup {mid}");
+        assert!(sparse > mid);
+        // crossover sits strictly between, and speedup is monotone
+        // around it
+        let x = m.rle_crossover_density(600, 800, 7, 7, 1, 1, &cfg);
+        assert!(x > 0.01 && x < 0.5, "crossover {x}");
+        assert!(m.rle_speedup(600, 800, 7, 7, 1, x - 0.005, 1, &cfg) > 1.0);
+        // degenerate shapes price to the neutral 1.0
+        assert_eq!(m.rle_speedup(0, 800, 7, 7, 1, 0.05, 1, &cfg), 1.0);
     }
 
     #[test]

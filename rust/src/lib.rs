@@ -156,6 +156,43 @@
 //! `examples/streaming_serve.rs` and `examples/pipeline_serve.rs` are
 //! the end-to-end drivers).
 //!
+//! ### Scenario engines: RLE binary morphology + geodesic reconstruction
+//!
+//! Two first-class engines serve the document-imaging scenarios the
+//! dense pipeline is a poor fit for:
+//!
+//! * **Run-length binary morphology** ([`morphology::RleImage`]).  A
+//!   0/255 mask is per-row sorted foreground intervals; rect-SE
+//!   erode/dilate become interval shrink/grow + `w_y`-way
+//!   intersection/union, so work scales with *runs*, not pixels.
+//!   [`morphology::Representation`] in [`morphology::MorphConfig`]
+//!   selects the engine per spec: `Dense` (default), `Rle` (use
+//!   intervals whenever the source is binary), or `Auto` — priced by
+//!   [`costmodel::CostModel::rle_speedup`] from the source's measured
+//!   density (the Bernoulli run census
+//!   [`costmodel::runs_per_row`]), falling back to dense above the
+//!   crossover density.  The dispatch is **whole-image plans only**
+//!   (ROI plans stay dense) and always bit-identical to the dense path
+//!   (`rust/tests/rle_geodesic.rs`; mirrored in
+//!   `python/tests/test_rle_geodesic.py`); non-binary sources fall
+//!   back silently.  `BENCH_rle.json` gates the modeled sparse-mask
+//!   speedup and crossover density in CI.
+//! * **Geodesic reconstruction** ([`morphology::FilterOp::Reconstruct`],
+//!   library forms [`morphology::reconstruct_by_dilation`] /
+//!   [`morphology::reconstruct_by_erosion`], primitives
+//!   [`morphology::geodesic_dilate`] / [`morphology::geodesic_erode`]).
+//!   A reconstruction spec plans like any other op
+//!   ([`FilterPlan::run_reconstruct`](morphology::FilterPlan::run_reconstruct)
+//!   iterates an arena-backed elementary sweep to the fixpoint,
+//!   clamping against the mask each sweep and counting every executed
+//!   sweep including the final proving one), and serves like any other
+//!   request: [`coordinator::Coordinator::submit_with_marker`] /
+//!   [`filter_spec_with_marker`](coordinator::Coordinator::filter_spec_with_marker)
+//!   carry the second (marker) payload through the staged pipeline
+//!   with the same plan-cache economy (`1` resolution + `2G − 1` hits
+//!   per family) — CLI: `filter --op reconstruct --marker seed.pgm`,
+//!   end-to-end driver `examples/document_mask.rs`.
+//!
 //! ### Migration notes (wrapper entry points)
 //!
 //! The historical *library* entry points survive as thin, bit-identical
@@ -253,5 +290,5 @@ pub mod transpose;
 pub use image::{Image, ImageView, ImageViewMut};
 pub use morphology::{
     Border, FilterOp, FilterPlan, FilterSpec, FusedPlan, MorphOp, MorphPixel, OpChain,
-    Parallelism, PassMethod, PlanError, Roi, VerticalStrategy,
+    Parallelism, PassMethod, PlanError, Representation, RleImage, Roi, VerticalStrategy,
 };

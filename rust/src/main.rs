@@ -23,13 +23,13 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use neon_morph::bench_harness::{self, e2e, fig3, fig4, gate, scaling, serve, table1};
+use neon_morph::bench_harness::{self, e2e, fig3, fig4, gate, rle, scaling, serve, table1};
 use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use neon_morph::costmodel::CostModel;
 use neon_morph::image::{read_pgm, synth, write_pgm};
 use neon_morph::morphology::{
-    self, hybrid, Border, FilterSpec, HybridThresholds, MorphConfig, Parallelism, PassMethod, Roi,
-    VerticalStrategy,
+    self, hybrid, Border, FilterSpec, HybridThresholds, MorphConfig, Parallelism, PassMethod,
+    Representation, Roi, VerticalStrategy,
 };
 use neon_morph::neon::Native;
 use neon_morph::runtime::{Manifest, XlaRuntime};
@@ -92,11 +92,16 @@ COMMANDS:
                [--backend auto|native|xla] [--method hybrid|linear|vhgw]
                [--vertical direct|transpose] [--border identity|replicate]
                [--no-simd] [--parallel auto|off|N] [--artifacts DIR]
-               [--roi Y,X,H,W]
+               [--roi Y,X,H,W] [--repr dense|rle|auto] [--marker seed.pgm]
                --op takes any op or comma-chain of ops:
                  erode dilate opening closing gradient tophat blackhat
                  transpose (alone; ignores --wx/--wy, output is WxH)
+                 reconstruct (alone; needs --marker — the input image is
+                 the geodesic mask, the marker the seed; native only)
                  e.g. --op opening,gradient runs the ops left to right
+               --repr picks the engine for 0/255 sources: rle runs the
+                 interval engine, auto prices rle vs dense per request
+                 (gray sources always run dense)
                --roi composes with EVERY op/chain (not just erode/dilate):
                  computes exactly crop(chain(full), roi) from a haloed
                  block on the native engine (rejects --backend xla);
@@ -105,9 +110,10 @@ COMMANDS:
     bench      <table1|fig3|fig3u16|fig4|e2e|scaling|all> [--quick] [--tsv] [--iters N]
                scaling: [--max-workers 16] [--host]
     bench      smoke --out DIR [--update-baselines] [--baselines DIR]
-               deterministic sweeps -> BENCH_{fig3,fig4,table1,scaling,serve}.json
+               deterministic sweeps -> BENCH_{fig3,fig4,table1,scaling,serve,rle}.json
                (serve: streamed coordinator workload, plan-resolutions-
-               per-request headline — count-exact)
+               per-request headline — count-exact; rle: modeled sparse
+               speedup + crossover density + live reconstruction sweeps)
     bench      gate [--out DIR] [--baselines DIR]
                fail if headline ratios drift >10% from the committed baselines
     serve      [--requests 256] [--workers 4] [--window 7]
@@ -173,6 +179,11 @@ fn parse_morph_config(args: &Args) -> Result<MorphConfig> {
                 .with_context(|| format!("--parallel must be auto|off|N, got {n:?}"))?,
         ),
     };
+    let representation: Representation = args
+        .get("repr")
+        .unwrap_or("dense")
+        .parse()
+        .map_err(|e| anyhow!("--repr: {e}"))?;
     Ok(MorphConfig {
         method,
         vertical,
@@ -180,6 +191,7 @@ fn parse_morph_config(args: &Args) -> Result<MorphConfig> {
         border,
         thresholds: HybridThresholds::paper(),
         parallelism,
+        representation,
     })
 }
 
@@ -229,6 +241,22 @@ fn cmd_filter(args: &Args) -> Result<()> {
     spec.validate(ih, iw)
         .map_err(|e| anyhow!("{e} (image {ih}x{iw})"))?;
 
+    // --marker: the reconstruction seed (the input image is the
+    // geodesic mask).  Pairing is validated at pipeline ingress, so a
+    // marker on a non-reconstruct op (or a markerless reconstruct)
+    // comes back as a request error, not a crash.
+    let marker = match args.get("marker") {
+        Some(path) => {
+            if backend == BackendChoice::XlaOnly {
+                bail!("reconstruct runs on the native engine and cannot honour --backend xla");
+            }
+            Some(Arc::new(
+                read_pgm(path).with_context(|| format!("reading marker {path}"))?,
+            ))
+        }
+        None => None,
+    };
+
     let coord = Coordinator::start(CoordinatorConfig {
         workers: 1,
         backend,
@@ -236,7 +264,10 @@ fn cmd_filter(args: &Args) -> Result<()> {
         morph,
         ..CoordinatorConfig::default()
     })?;
-    let resp = coord.filter_spec(spec, img)?;
+    let resp = match marker {
+        Some(mk) => coord.filter_spec_with_marker(spec, img, mk)?,
+        None => coord.filter_spec(spec, img)?,
+    };
     let out = resp.result?.into_u8()?;
     write_pgm(&out, output).with_context(|| format!("writing {output}"))?;
     match spec.roi {
@@ -447,6 +478,10 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     let serve_sat = serve::saturate_model(&model, &serve_fused);
     let serve_live = serve::run_saturated()?;
     let serve_report = serve::to_json(&serve_smoke, &serve_fused, &serve_sat, &serve_live);
+    // scenario-engine smoke: modeled RLE-vs-dense ratios plus the
+    // deterministic sweep count of a live reconstruction plan run
+    let rle_smoke = rle::run_smoke(&model)?;
+    let rle_report = rle::to_json(&rle_smoke);
 
     let reports = [
         ("BENCH_fig3.json", &fig3_report),
@@ -455,6 +490,7 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
         ("BENCH_table1.json", &table1_report),
         ("BENCH_scaling.json", &scaling_report),
         ("BENCH_serve.json", &serve_report),
+        ("BENCH_rle.json", &rle_report),
     ];
     for (name, report) in reports {
         let path = out_dir.join(name);
@@ -513,6 +549,15 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
         serve_live.replied,
         serve_live.stage_peak,
     );
+    println!(
+        "rle smoke: x{:.2} modeled speedup at {:.0}% density (crossover {:.3}); \
+         reconstruction reached its fixpoint in {} sweeps ({} px foreground)",
+        rle_smoke.speedup_sparse5pct,
+        100.0 * rle::RLE_SPARSE_DENSITY,
+        rle_smoke.crossover_density,
+        rle_smoke.reconstruct_sweeps,
+        rle_smoke.reconstruct_foreground,
+    );
 
     if args.flag("update-baselines") {
         let base_dir = PathBuf::from(args.get("baselines").unwrap_or(BASELINE_DIR));
@@ -542,6 +587,7 @@ fn cmd_bench_gate(args: &Args) -> Result<()> {
         "BENCH_table1.json",
         "BENCH_scaling.json",
         "BENCH_serve.json",
+        "BENCH_rle.json",
     ] {
         let base_path = base_dir.join(name);
         let meas_path = out_dir.join(name);

@@ -17,7 +17,7 @@
 //! Thresholding ([`threshold`], [`otsu_threshold`]) remains a pre-step
 //! outside the plan.
 
-use super::{morphology, FilterOp, FilterSpec, MorphConfig, MorphOp};
+use super::{morphology, FilterOp, FilterSpec, MorphConfig, MorphOp, PlanError};
 use crate::image::{Image, ImageView};
 use crate::neon::Backend;
 
@@ -106,51 +106,65 @@ pub fn dilate_binary<'a, B: Backend>(
     morphology(b, src, MorphOp::Dilate, w_x, w_y, cfg)
 }
 
-/// Run a binary composition as a one-shot [`FilterSpec`] plan.
-fn run_composition(src: ImageView<'_, u8>, op: FilterOp, w_x: usize, w_y: usize, cfg: &MorphConfig) -> Image<u8> {
-    debug_assert!(is_binary(src), "{op:?} composition expects a 0/255 image");
-    FilterSpec::new(op, w_x, w_y)
-        .with_config(*cfg)
-        .run_once(src)
-        .unwrap_or_else(|e| panic!("binary {op:?} composition: {e}"))
+/// Run a binary composition as a one-shot [`FilterSpec`] plan.  The
+/// 0/255 precondition is enforced in release builds too — a gray image
+/// here means the caller skipped binarization, and the "binary" result
+/// would silently be gray morphology.
+fn run_composition(
+    src: ImageView<'_, u8>,
+    op: FilterOp,
+    w_x: usize,
+    w_y: usize,
+    cfg: &MorphConfig,
+) -> Result<Image<u8>, PlanError> {
+    if !is_binary(src) {
+        return Err(PlanError(format!(
+            "binary {} composition expects a 0/255 image",
+            op.name()
+        )));
+    }
+    FilterSpec::new(op, w_x, w_y).with_config(*cfg).run_once(src)
 }
 
 /// Remove foreground components thinner than the SE (binary opening).
 /// One [`FilterSpec`] plan (erode → dilate, arena-owned intermediate).
+/// Errors on non-binary input or an invalid window.
 pub fn open_binary<'a>(
     src: impl Into<ImageView<'a, u8>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
-) -> Image<u8> {
+) -> Result<Image<u8>, PlanError> {
     run_composition(src.into(), FilterOp::Open, w_x, w_y, cfg)
 }
 
 /// Fill background gaps thinner than the SE (binary closing).  One
 /// [`FilterSpec`] plan (dilate → erode, arena-owned intermediate).
+/// Errors on non-binary input or an invalid window.
 pub fn close_binary<'a>(
     src: impl Into<ImageView<'a, u8>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
-) -> Image<u8> {
+) -> Result<Image<u8>, PlanError> {
     run_composition(src.into(), FilterOp::Close, w_x, w_y, cfg)
 }
 
 /// Boundary extraction: src − erosion (one-SE-thick outline).  The
 /// erosion runs as a one-shot [`FilterSpec`] plan; the subtraction has
-/// no single [`FilterOp`], so it stays a pixelwise post-step.
+/// no single [`FilterOp`], so it stays a pixelwise post-step.  Errors on
+/// non-binary input or an invalid window.
 pub fn boundary<'a>(
     src: impl Into<ImageView<'a, u8>>,
     w_x: usize,
     w_y: usize,
     cfg: &MorphConfig,
-) -> Image<u8> {
+) -> Result<Image<u8>, PlanError> {
     let src = src.into();
-    let e = run_composition(src, FilterOp::Erode, w_x, w_y, cfg);
-    Image::from_fn(src.height(), src.width(), |y, x| {
+    let e = run_composition(src, FilterOp::Erode, w_x, w_y, cfg)?;
+    Ok(Image::from_fn(src.height(), src.width(), |y, x| {
         src.get(y, x).saturating_sub(e.get(y, x))
-    })
+    }))
 }
 
 #[cfg(test)]
@@ -225,7 +239,7 @@ mod tests {
         for x in 7..12 {
             img.set(5, x, FG); // the bridge
         }
-        let opened = open_binary(&img, 3, 3, &cfg());
+        let opened = open_binary(&img, 3, 3, &cfg()).unwrap();
         assert_eq!(opened.get(5, 9), 0, "bridge must be cut");
         assert_eq!(opened.get(5, 4), FG, "left blob survives");
         assert_eq!(opened.get(5, 14), FG, "right blob survives");
@@ -235,14 +249,14 @@ mod tests {
     fn closing_fills_small_hole() {
         let mut img = square(20, 4, 4, 10);
         img.set(8, 8, 0); // pinhole
-        let closed = close_binary(&img, 3, 3, &cfg());
+        let closed = close_binary(&img, 3, 3, &cfg()).unwrap();
         assert_eq!(closed.get(8, 8), FG);
     }
 
     #[test]
     fn boundary_is_one_pixel_ring() {
         let img = square(21, 5, 5, 9);
-        let ring = boundary(&img, 3, 3, &cfg());
+        let ring = boundary(&img, 3, 3, &cfg()).unwrap();
         assert_eq!(ring.get(5, 5), FG); // corner on the ring
         assert_eq!(ring.get(9, 9), 0); // interior removed
         assert_eq!(ring.get(0, 0), 0); // background stays empty
@@ -259,13 +273,35 @@ mod tests {
             let d = dilate_binary(&mut Native, &bin, wx, wy, &cfg());
             let open_want = dilate_binary(&mut Native, &e, wx, wy, &cfg());
             let close_want = erode_binary(&mut Native, &d, wx, wy, &cfg());
-            assert!(open_binary(&bin, wx, wy, &cfg()).same_pixels(&open_want), "open {wx}x{wy}");
-            assert!(close_binary(&bin, wx, wy, &cfg()).same_pixels(&close_want), "close {wx}x{wy}");
+            assert!(
+                open_binary(&bin, wx, wy, &cfg()).unwrap().same_pixels(&open_want),
+                "open {wx}x{wy}"
+            );
+            assert!(
+                close_binary(&bin, wx, wy, &cfg()).unwrap().same_pixels(&close_want),
+                "close {wx}x{wy}"
+            );
             let ring_want = Image::from_fn(bin.height(), bin.width(), |y, x| {
                 bin.get(y, x).saturating_sub(e.get(y, x))
             });
-            assert!(boundary(&bin, wx, wy, &cfg()).same_pixels(&ring_want), "boundary {wx}x{wy}");
+            assert!(
+                boundary(&bin, wx, wy, &cfg()).unwrap().same_pixels(&ring_want),
+                "boundary {wx}x{wy}"
+            );
         }
+    }
+
+    #[test]
+    fn compositions_reject_bad_inputs_as_errors() {
+        // gray input: the 0/255 precondition holds in release builds too
+        let gray = synth::noise(16, 16, 3);
+        assert!(!is_binary(&gray));
+        assert!(open_binary(&gray, 3, 3, &cfg()).is_err());
+        assert!(close_binary(&gray, 3, 3, &cfg()).is_err());
+        assert!(boundary(&gray, 3, 3, &cfg()).is_err());
+        // invalid windows surface as plan errors, not panics
+        let bin = square(16, 4, 4, 6);
+        assert!(open_binary(&bin, 4, 4, &cfg()).is_err());
     }
 
     #[test]
@@ -273,7 +309,7 @@ mod tests {
         let page = synth::document(120, 160, 9);
         let t = otsu_threshold(&page);
         let bin = threshold(&page, t);
-        let cleaned = close_binary(&bin, 3, 3, &cfg());
+        let cleaned = close_binary(&bin, 3, 3, &cfg()).unwrap();
         assert!(is_binary(&cleaned));
         // structure preserved: still has both classes
         let (mn, mx) = cleaned.min_max().unwrap();

@@ -17,6 +17,8 @@
 //! | 2-D | separable composition + hybrid dispatch | both | [`separable`], [`hybrid`] | §5.3 |
 //! | any pass | band-sharded parallel execution (row bands with `w-1` halos, tile-aligned stripes for the sandwich) | — | [`parallel`] | extension |
 //! | pipeline | plan–execute: [`FilterSpec`] → [`FilterPlan`] (one-time method/band resolution + scratch arena, op chains, ROI) | — | [`plan`] | extension |
+//! | 0/255 scenario | run-length interval arithmetic (per-row foreground runs; erode = shrink + k-row intersect, dilate = grow + union) | — | [`rle`] | extension (arXiv 1504.01052) |
+//! | any scenario | geodesic dilation/erosion + morphological reconstruction (banded sweeps iterated to stability) | — | [`geodesic`] | extension (arXiv 1911.13074) |
 //!
 //! Band-sharding is bit-identical to sequential execution and applies
 //! only to native-speed runs ([`parallel::filter_native`]); counted
@@ -63,11 +65,13 @@
 
 pub mod binary;
 pub mod derived;
+pub mod geodesic;
 pub mod hybrid;
 pub mod linear;
 pub mod naive;
 pub mod parallel;
 pub mod plan;
+pub mod rle;
 pub mod separable;
 pub mod vhgw;
 
@@ -75,9 +79,13 @@ use crate::image::{Image, ImageView, ImageViewMut, Pixel};
 use crate::neon::{Backend, U16x8, U8x16};
 
 pub use derived::{blackhat, closing, gradient, opening, tophat};
+pub use geodesic::{
+    geodesic_dilate, geodesic_erode, reconstruct_by_dilation, reconstruct_by_erosion,
+};
 pub use hybrid::{HybridThresholds, PAPER_WX0, PAPER_WY0};
 pub use parallel::{filter_native, filter_roi, BandPool};
 pub use plan::{FilterOp, FilterPlan, FilterSpec, FusedPlan, OpChain, PlanError, MAX_CHAIN};
+pub use rle::RleImage;
 pub use separable::{dilate, dilate_roi, erode, erode_roi, morphology};
 
 /// A pixel depth the morphology stack can filter: scalar + SIMD min/max,
@@ -421,6 +429,52 @@ pub enum Parallelism {
     Auto,
 }
 
+/// Image-representation dispatch for binary-eligible plans (the RLE
+/// scenario engine, arXiv 1504.01052).  A plan built with `Rle` or
+/// `Auto` probes its source at *run* time: a 0/255 image converts to
+/// per-row foreground intervals and the whole morph chain runs as
+/// interval arithmetic ([`rle`]), bit-identical to the dense passes; a
+/// non-binary image silently falls back to the dense path.  `Auto`
+/// additionally asks the cost model
+/// ([`crate::costmodel::CostModel::rle_speedup`]) whether interval
+/// arithmetic beats the dense passes at the *measured* foreground
+/// density and only then switches representation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Representation {
+    /// Always run the dense separable passes (the paper's path).
+    Dense,
+    /// Run binary sources as run-length interval arithmetic; dense
+    /// fallback for non-binary sources.
+    Rle,
+    /// Cost-model dispatch: RLE only when the modeled interval price at
+    /// the measured density beats the dense price.
+    Auto,
+}
+
+impl Representation {
+    pub fn name(self) -> &'static str {
+        match self {
+            Representation::Dense => "dense",
+            Representation::Rle => "rle",
+            Representation::Auto => "auto",
+        }
+    }
+}
+
+impl std::str::FromStr for Representation {
+    type Err = String;
+
+    /// `dense` / `rle` / `auto` — the CLI `--repr` values.
+    fn from_str(s: &str) -> Result<Representation, String> {
+        Ok(match s.trim() {
+            "dense" => Representation::Dense,
+            "rle" => Representation::Rle,
+            "auto" => Representation::Auto,
+            other => return Err(format!("unknown representation {other:?} (dense|rle|auto)")),
+        })
+    }
+}
+
 /// Full configuration of a separable morphology invocation.  `Eq` +
 /// `Hash` so it can ride inside [`FilterSpec`] batch/plan-cache keys.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -435,6 +489,9 @@ pub struct MorphConfig {
     pub thresholds: HybridThresholds,
     /// Intra-image band-sharding policy (native executions only).
     pub parallelism: Parallelism,
+    /// Dense vs run-length representation dispatch for binary-eligible
+    /// plans (see [`Representation`]).
+    pub representation: Representation,
 }
 
 impl Default for MorphConfig {
@@ -453,6 +510,7 @@ impl Default for MorphConfig {
             border: Border::Identity,
             thresholds: HybridThresholds::paper(),
             parallelism: Parallelism::Auto,
+            representation: Representation::Dense,
         }
     }
 }
@@ -658,5 +716,15 @@ mod tests {
         // banding is opportunistic by default: the cost-model crossover
         // keeps small images sequential, results stay bit-identical
         assert_eq!(c.parallelism, Parallelism::Auto);
+        // the dense paper path stays the default; RLE is opt-in per spec
+        assert_eq!(c.representation, Representation::Dense);
+    }
+
+    #[test]
+    fn representation_parses_from_cli_names() {
+        for r in [Representation::Dense, Representation::Rle, Representation::Auto] {
+            assert_eq!(r.name().parse::<Representation>().unwrap(), r);
+        }
+        assert!("sparse".parse::<Representation>().is_err());
     }
 }

@@ -1073,7 +1073,7 @@ pub fn blackhat_native<'a, P: MorphPixel>(
 mod tests {
     use super::*;
     use crate::image::synth;
-    use crate::morphology::Border;
+    use crate::morphology::{Border, Representation};
     use std::sync::atomic::AtomicUsize;
 
     #[test]
@@ -1360,6 +1360,7 @@ mod tests {
                     border: Border::Identity,
                     thresholds: HybridThresholds::paper(),
                     parallelism: Parallelism::Sequential,
+                    representation: Representation::Dense,
                 };
                 let want = separable::morphology(&mut Native, &img, MorphOp::Erode, 5, 7, &cfg);
                 let got = morphology_banded(&pool, &img, MorphOp::Erode, 5, 7, &cfg, 4);

@@ -73,7 +73,8 @@ use std::fmt;
 
 use super::hybrid::resolve_method;
 use super::{
-    derived, parallel, separable, Border, MorphConfig, MorphOp, MorphPixel, PassMethod, Roi,
+    derived, geodesic, parallel, rle, separable, Border, MorphConfig, MorphOp, MorphPixel,
+    PassMethod, Representation, Roi,
 };
 use crate::image::{Image, ImageView, ImageViewMut};
 use crate::neon::{Backend, Native};
@@ -103,6 +104,14 @@ pub enum FilterOp {
     /// Whole-image §4 tiled transpose (must be the only chain element;
     /// ignores the window; output shape is `w × h`).
     Transpose,
+    /// Morphological reconstruction by dilation: iterate geodesic
+    /// dilations of a **marker** under the request image (the mask) to
+    /// stability, with the spec's `w_x × w_y` SE per sweep (see
+    /// [`super::geodesic`]).  Must be the only chain element; carries a
+    /// second image — the marker — through the request path, so it is
+    /// served via [`FilterPlan::run_reconstruct`] rather than
+    /// [`FilterPlan::run`].
+    Reconstruct,
 }
 
 impl FilterOp {
@@ -117,6 +126,7 @@ impl FilterOp {
             FilterOp::TopHat => "tophat",
             FilterOp::BlackHat => "blackhat",
             FilterOp::Transpose => "transpose",
+            FilterOp::Reconstruct => "reconstruct",
         }
     }
 
@@ -126,12 +136,15 @@ impl FilterOp {
         match self {
             FilterOp::Erode | FilterOp::Dilate | FilterOp::Gradient => 1,
             FilterOp::Open | FilterOp::Close | FilterOp::TopHat | FilterOp::BlackHat => 2,
-            FilterOp::Transpose => 0,
+            // transpose moves no windows; reconstruct iterates to an
+            // unbounded depth — both reject ROIs at validation, so
+            // neither contributes halo
+            FilterOp::Transpose | FilterOp::Reconstruct => 0,
         }
     }
 
     /// Every op, in declaration order (test sweeps).
-    pub const ALL: [FilterOp; 8] = [
+    pub const ALL: [FilterOp; 9] = [
         FilterOp::Erode,
         FilterOp::Dilate,
         FilterOp::Open,
@@ -140,6 +153,7 @@ impl FilterOp {
         FilterOp::TopHat,
         FilterOp::BlackHat,
         FilterOp::Transpose,
+        FilterOp::Reconstruct,
     ];
 }
 
@@ -162,6 +176,7 @@ impl std::str::FromStr for FilterOp {
             "tophat" => FilterOp::TopHat,
             "blackhat" => FilterOp::BlackHat,
             "transpose" => FilterOp::Transpose,
+            "reconstruct" => FilterOp::Reconstruct,
             other => return Err(PlanError(format!("unknown op {other:?}"))),
         })
     }
@@ -335,15 +350,27 @@ impl FilterSpec {
         self.single_op() == Some(FilterOp::Transpose)
     }
 
+    /// Whether this spec is a morphological reconstruction — the one op
+    /// that carries a second (marker) image and is served through
+    /// [`FilterPlan::run_reconstruct`].
+    pub fn is_reconstruct(&self) -> bool {
+        self.single_op() == Some(FilterOp::Reconstruct)
+    }
+
     /// The single op this spec denotes when it is expressible as one
     /// canonical (identity-border, whole-image) kernel — the only form
     /// the AOT artifact pipeline lowers, so this is the shared
     /// eligibility predicate of every compiled-artifact router.  Border
     /// is the one config knob that changes output *pixels*;
     /// method/strategy/parallelism choices are all bit-identical.
+    /// Reconstruction is excluded: its iterate-to-stability loop and
+    /// marker payload have no single-kernel artifact form.
     pub fn single_identity_op(&self) -> Option<FilterOp> {
         let op = self.single_op()?;
-        if self.roi.is_some() || self.config.border != Border::Identity {
+        if self.roi.is_some()
+            || self.config.border != Border::Identity
+            || op == FilterOp::Reconstruct
+        {
             return None;
         }
         Some(op)
@@ -446,6 +473,18 @@ impl FilterSpec {
                 return Err(PlanError("transpose does not support a ROI".into()));
             }
             return Ok(());
+        }
+        if self.ops.as_slice().contains(&FilterOp::Reconstruct) {
+            if !self.is_reconstruct() {
+                return Err(PlanError(
+                    "reconstruct must be the only op in a chain".into(),
+                ));
+            }
+            if self.roi.is_some() {
+                return Err(PlanError("reconstruct does not support a ROI".into()));
+            }
+            // fall through: the sweep SE windows validate like any
+            // other morph spec
         }
         for (window, what) in [(self.w_x, "w_x"), (self.w_y, "w_y")] {
             if window < 1 || window % 2 == 0 {
@@ -670,6 +709,9 @@ pub fn lower(ops: &[FilterOp]) -> (Vec<PrimStep>, usize) {
             FilterOp::Transpose => {
                 unreachable!("transpose is validated to never reach lowering")
             }
+            FilterOp::Reconstruct => {
+                unreachable!("reconstruct is validated to never reach lowering")
+            }
         };
     }
     (steps, n)
@@ -693,6 +735,10 @@ pub fn run_chain<'a, P: MorphPixel, B: Backend>(
     assert!(
         !ops.contains(&FilterOp::Transpose),
         "transpose has no generic chain form"
+    );
+    assert!(
+        !ops.contains(&FilterOp::Reconstruct),
+        "reconstruct has no generic chain form (needs a marker image)"
     );
     let (steps, slots) = lower(ops);
     let mut tmp: Vec<Option<Image<P>>> = (0..slots).map(|_| None).collect();
@@ -790,6 +836,34 @@ struct Scratch<P> {
     vhgw: Vec<Vec<P>>,
 }
 
+impl<P: MorphPixel> Scratch<P> {
+    /// The all-empty arena (transpose and reconstruct plans own no
+    /// step scratch — reconstruct state lives in [`ReconScratch`]).
+    fn empty() -> Scratch<P> {
+        Scratch {
+            slots: Vec::new(),
+            after_rows: Vec::new(),
+            t_a: Vec::new(),
+            t_b: Vec::new(),
+            pad_in: Vec::new(),
+            pad_out: Vec::new(),
+            vhgw: Vec::new(),
+        }
+    }
+}
+
+/// Reconstruction plan state: the inner elementary-sweep plan (a
+/// single-op dilate at the spec's SE and config — banding, method and
+/// arena all resolved once) plus the two ping-pong buffers the
+/// iterate-to-stability loop flips between.  Boxed inside
+/// [`FilterPlan`] so non-reconstruct plans pay one `Option` tag.
+#[derive(Debug)]
+struct ReconScratch<P: MorphPixel> {
+    sweep: FilterPlan<P>,
+    cur: Vec<P>,
+    next: Vec<P>,
+}
+
 /// A [`FilterSpec`] resolved against a pixel depth and image shape —
 /// method/strategy/band choices fixed, scratch preallocated.  Build
 /// with [`FilterSpec::plan`]; reuse freely across same-shape images.
@@ -814,6 +888,13 @@ pub struct FilterPlan<P: MorphPixel> {
     block: Roi,
     steps: Vec<ExecStep>,
     scratch: Scratch<P>,
+    /// Whether the spec's chain may switch to run-length interval
+    /// arithmetic at run time (no ROI, a pure erode/dilate lowering,
+    /// and a non-`Dense` representation knob) — the final binary-source
+    /// check happens per run ([`rle::try_run_chain_rle`]).
+    rle_eligible: bool,
+    /// Reconstruction-only state ([`FilterOp::Reconstruct`] specs).
+    recon: Option<Box<ReconScratch<P>>>,
 }
 
 impl<P: MorphPixel> FilterPlan<P> {
@@ -830,15 +911,41 @@ impl<P: MorphPixel> FilterPlan<P> {
                 halo: (0, 0),
                 block: Roi::full(h, w),
                 steps: Vec::new(),
-                scratch: Scratch {
-                    slots: Vec::new(),
-                    after_rows: Vec::new(),
-                    t_a: Vec::new(),
-                    t_b: Vec::new(),
-                    pad_in: Vec::new(),
-                    pad_out: Vec::new(),
-                    vhgw: Vec::new(),
-                },
+                scratch: Scratch::empty(),
+                rle_eligible: false,
+                recon: None,
+            });
+        }
+        if spec.is_reconstruct() {
+            // the sweep is an ordinary single-op dilate plan at the
+            // spec's SE and config (banding, method, arena resolved
+            // once); the reconstruction loop ping-pongs between the
+            // boxed cur/next buffers — zero per-run allocation
+            let sweep_spec = FilterSpec {
+                ops: OpChain::single(FilterOp::Dilate),
+                w_x: spec.w_x,
+                w_y: spec.w_y,
+                config: spec.config,
+                roi: None,
+            };
+            let sweep = FilterPlan::build(sweep_spec, h, w)?;
+            let px = h * w;
+            return Ok(FilterPlan {
+                spec,
+                src_h: h,
+                src_w: w,
+                out_h,
+                out_w,
+                halo: (0, 0),
+                block: Roi::full(h, w),
+                steps: Vec::new(),
+                scratch: Scratch::empty(),
+                rle_eligible: false,
+                recon: Some(Box::new(ReconScratch {
+                    sweep,
+                    cur: vec![P::MIN_VALUE; px],
+                    next: vec![P::MIN_VALUE; px],
+                })),
             });
         }
 
@@ -918,6 +1025,9 @@ impl<P: MorphPixel> FilterPlan<P> {
         // and need no replicate staging)
         let has_pass = rows.is_some() || cols.is_some();
         let morph_steps = has_pass && steps.iter().any(|s| matches!(s, ExecStep::Morph { .. }));
+        let rle_eligible = spec.roi.is_none()
+            && spec.config.representation != Representation::Dense
+            && rle::rle_op_sequence(spec.ops.as_slice()).is_some();
         Ok(FilterPlan {
             spec,
             src_h: h,
@@ -947,6 +1057,8 @@ impl<P: MorphPixel> FilterPlan<P> {
                 // sizes are stable from run 2 on)
                 vhgw: Vec::new(),
             },
+            rle_eligible,
+            recon: None,
         })
     }
 
@@ -976,7 +1088,10 @@ impl<P: MorphPixel> FilterPlan<P> {
             + self.scratch.pad_in.len()
             + self.scratch.pad_out.len()
             + self.scratch.vhgw.iter().map(Vec::len).sum::<usize>();
-        elems * std::mem::size_of::<P>()
+        let recon = self.recon.as_ref().map_or(0, |r| {
+            (r.cur.len() + r.next.len()) * std::mem::size_of::<P>() + r.sweep.scratch_bytes()
+        });
+        elems * std::mem::size_of::<P>() + recon
     }
 
     /// Execute the plan into a caller-provided destination (the
@@ -985,6 +1100,55 @@ impl<P: MorphPixel> FilterPlan<P> {
     pub fn run<'a>(&mut self, src: impl Into<ImageView<'a, P>>, dst: ImageViewMut<'_, P>) {
         let roi = self.spec.roi;
         self.run_with(src.into(), dst, roi);
+    }
+
+    /// Execute a [`FilterOp::Reconstruct`] plan: iterate geodesic
+    /// dilations of `marker` under `mask` (the request image) to
+    /// stability, writing the fixpoint into `dst`, and return the
+    /// executed sweep count.  Both images must match
+    /// [`FilterPlan::src_dims`].  Bit-identical to
+    /// [`super::geodesic::reconstruct_by_dilation`] with the spec's SE
+    /// and config; sweeps reuse the plan-owned ping-pong buffers and
+    /// inner sweep arena, so reruns allocate nothing.
+    pub fn run_reconstruct<'a, 'b>(
+        &mut self,
+        mask: impl Into<ImageView<'a, P>>,
+        marker: impl Into<ImageView<'b, P>>,
+        mut dst: ImageViewMut<'_, P>,
+    ) -> usize {
+        let mask = mask.into();
+        let marker = marker.into();
+        assert_eq!(
+            (mask.height(), mask.width()),
+            (self.src_h, self.src_w),
+            "plan was resolved for a {}x{} source",
+            self.src_h,
+            self.src_w
+        );
+        let recon = self
+            .recon
+            .as_mut()
+            .expect("run_reconstruct requires a FilterOp::Reconstruct plan");
+        geodesic::reconstruct_with_plan(
+            &mut recon.sweep,
+            MorphOp::Dilate,
+            marker,
+            mask,
+            &mut recon.cur,
+            &mut recon.next,
+            &mut dst,
+        )
+    }
+
+    /// [`FilterPlan::run_reconstruct`] allocating the output image.
+    pub fn run_reconstruct_owned<'a, 'b>(
+        &mut self,
+        mask: impl Into<ImageView<'a, P>>,
+        marker: impl Into<ImageView<'b, P>>,
+    ) -> (Image<P>, usize) {
+        let mut out = Image::zeros(self.out_h, self.out_w);
+        let sweeps = self.run_reconstruct(mask, marker, out.view_mut());
+        (out, sweeps)
     }
 
     /// Execute the plan against a **different ROI position** of the same
@@ -1041,6 +1205,10 @@ impl<P: MorphPixel> FilterPlan<P> {
             P::transpose_image_into(&mut Native, src, dst);
             return;
         }
+        assert!(
+            !self.spec.is_reconstruct(),
+            "reconstruct plans carry a marker payload; run via FilterPlan::run_reconstruct"
+        );
         // resolve the block origin at CALL time (position independence):
         // the arena only fixed the block's shape
         let (hx, hy) = self.halo;
@@ -1074,6 +1242,15 @@ impl<P: MorphPixel> FilterPlan<P> {
         // compute — and a nonzero output implies a nonzero block, since
         // the ROI is validated to fit inside the image
         if self.out_h == 0 || self.out_w == 0 {
+            return;
+        }
+        // representation dispatch: a plan built with `Rle`/`Auto` on a
+        // binary-eligible chain probes the source at run time (cheap
+        // scan) and routes through interval arithmetic when it wins.
+        // Non-binary sources and losing `Auto` probes fall through to
+        // the dense steps below, bit-identically.
+        if self.rle_eligible && roi.is_none() && rle::try_run_chain_rle(&self.spec, block, &mut dst)
+        {
             return;
         }
 
@@ -1469,6 +1646,12 @@ impl<P: MorphPixel> FusedPlan<P> {
         if spec.is_transpose() {
             return Err(PlanError(
                 "fused plans do not serve transpose specs (run per image)".into(),
+            ));
+        }
+        if spec.is_reconstruct() {
+            return Err(PlanError(
+                "fused plans do not serve reconstruct specs (marker payloads run per request)"
+                    .into(),
             ));
         }
         if spec.roi.is_some() {
@@ -2275,6 +2458,7 @@ mod tests {
                             border,
                             thresholds: HybridThresholds::paper(),
                             parallelism: Parallelism::Sequential,
+                            representation: Representation::Dense,
                         };
                         let want = separable::morphology(
                             &mut Native,
@@ -2296,6 +2480,101 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn reconstruct_specs_validate_their_shape() {
+        // reconstruct must be a lone op with no ROI; windows validate
+        // like any separable spec (they are the sweep SE)
+        assert!(FilterSpec::new(FilterOp::Reconstruct, 3, 3).validate(10, 10).is_ok());
+        let multi = FilterSpec {
+            ops: OpChain::from_slice(&[FilterOp::Erode, FilterOp::Reconstruct]).unwrap(),
+            ..FilterSpec::new(FilterOp::Reconstruct, 3, 3)
+        };
+        assert!(multi.validate(10, 10).is_err());
+        assert!(FilterSpec::new(FilterOp::Reconstruct, 3, 3)
+            .with_roi(Roi::new(1, 1, 4, 4))
+            .validate(10, 10)
+            .is_err());
+        assert!(FilterSpec::new(FilterOp::Reconstruct, 4, 3).validate(10, 10).is_err());
+        // fused batches refuse reconstruct outright
+        assert!(FilterSpec::new(FilterOp::Reconstruct, 3, 3).plan_fused::<u8>(10, 10, 4).is_err());
+    }
+
+    #[test]
+    fn reconstruct_plan_matches_geodesic_library_call() {
+        let mask = synth::noise(21, 34, 11);
+        let mut marker = Image::<u8>::zeros(21, 34);
+        marker.view_mut().row_mut(0).copy_from_slice(mask.view().row(0));
+        let cfg = MorphConfig::default();
+        let (want, want_sweeps) =
+            geodesic::reconstruct_by_dilation(&marker, &mask, 3, 3, &cfg).unwrap();
+        let spec = FilterSpec::new(FilterOp::Reconstruct, 3, 3);
+        let mut plan = spec.plan::<u8>(21, 34).unwrap();
+        // plan-owned buffers: reruns reuse them bit-identically
+        for round in 0..2 {
+            let (got, sweeps) = plan.run_reconstruct_owned(&mask, &marker);
+            assert_eq!(sweeps, want_sweeps, "round {round}");
+            assert!(got.same_pixels(&want), "round {round}");
+        }
+        assert!(plan.scratch_bytes() >= 2 * 21 * 34);
+    }
+
+    #[test]
+    fn rle_representation_plans_match_dense_bitwise() {
+        let cfg_rle = MorphConfig {
+            representation: Representation::Rle,
+            parallelism: Parallelism::Sequential,
+            ..MorphConfig::default()
+        };
+        for density in [0u32, 5, 50, 100] {
+            let noise = synth::noise(19, 27, u64::from(density) * 7 + 1);
+            let img = Image::from_fn(19, 27, |y, x| {
+                if u32::from(noise.view().get(y, x)) * 100 < density * 255 {
+                    255u8
+                } else {
+                    0
+                }
+            });
+            for op in [FilterOp::Erode, FilterOp::Dilate, FilterOp::Open, FilterOp::Close] {
+                let dense = FilterSpec::new(op, 5, 3).run_once::<u8>(&img).unwrap();
+                let rle = FilterSpec::new(op, 5, 3)
+                    .with_config(cfg_rle)
+                    .run_once::<u8>(&img)
+                    .unwrap();
+                assert!(rle.same_pixels(&dense), "{op:?} density {density}");
+            }
+        }
+        // chains RLE can't serve (Gradient needs subtraction) and
+        // non-binary sources both fall back to the dense path
+        let gray = synth::noise(19, 27, 9);
+        for op in [FilterOp::Gradient, FilterOp::Erode] {
+            let dense = FilterSpec::new(op, 3, 3).run_once::<u8>(&gray).unwrap();
+            let rle = FilterSpec::new(op, 3, 3)
+                .with_config(cfg_rle)
+                .run_once::<u8>(&gray)
+                .unwrap();
+            assert!(rle.same_pixels(&dense), "fallback {op:?}");
+        }
+    }
+
+    #[test]
+    fn auto_representation_is_always_bit_identical() {
+        // Auto may pick either route; output must not depend on it
+        let cfg = MorphConfig {
+            representation: Representation::Auto,
+            parallelism: Parallelism::Sequential,
+            ..MorphConfig::default()
+        };
+        for (h, w) in [(16, 16), (64, 96)] {
+            let img = Image::from_fn(h, w, |y, x| if (y * w + x) % 19 == 0 { 255u8 } else { 0 });
+            let dense = FilterSpec::new(FilterOp::Open, 3, 3).run_once::<u8>(&img).unwrap();
+            let auto = FilterSpec::new(FilterOp::Open, 3, 3)
+                .with_config(cfg)
+                .run_once::<u8>(&img)
+                .unwrap();
+            assert!(auto.same_pixels(&dense), "{h}x{w}");
         }
     }
 }

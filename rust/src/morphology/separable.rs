@@ -291,6 +291,7 @@ mod tests {
                         border: Border::Identity,
                         thresholds: super::super::HybridThresholds::paper(),
                         parallelism: super::super::Parallelism::Sequential,
+                        representation: super::super::Representation::Dense,
                     });
                 }
             }

@@ -174,6 +174,11 @@ impl NativeEngine {
         spec: &FilterSpec,
         img: &Image<P>,
     ) -> Result<Image<P>> {
+        if spec.is_reconstruct() {
+            return Err(anyhow!(
+                "reconstruct spec needs a marker; use run_spec_reconstruct"
+            ));
+        }
         let (h, w) = (img.height(), img.width());
         // position-independent keying: an interior ROI keys on its
         // shape; the true position is re-applied at run time by
@@ -282,6 +287,7 @@ impl NativeEngine {
         let fusable = n > 1
             && spec.roi.is_none()
             && !spec.is_transpose()
+            && !spec.is_reconstruct()
             && imgs.iter().all(|im| (im.height(), im.width()) == (h, w));
         if !fusable {
             let outs = imgs
@@ -321,6 +327,78 @@ impl NativeEngine {
             );
         }
         Ok((out, true))
+    }
+
+    /// Depth-generic reconstruction body: plan-cached like
+    /// [`NativeEngine::run_any`] (same per-family hit/resolution
+    /// counting), but executes through
+    /// [`FilterPlan::run_reconstruct`] — the request image is the
+    /// geodesic **mask**, `marker` the second payload.  Returns the
+    /// fixpoint and the executed sweep count.
+    fn run_reconstruct_any<P: MorphPixel>(
+        cache: &mut HashMap<PlanKey, PlanEntry<P>>,
+        stats: &mut PlanStats,
+        spec: &FilterSpec,
+        img: &Image<P>,
+        marker: &Image<P>,
+    ) -> Result<(Image<P>, usize)> {
+        if !spec.is_reconstruct() {
+            return Err(anyhow!(
+                "run_spec_reconstruct serves reconstruct specs only; got {:?}",
+                spec.ops.as_slice()
+            ));
+        }
+        let (h, w) = (img.height(), img.width());
+        if (marker.height(), marker.width()) != (h, w) {
+            return Err(anyhow!(
+                "marker {}x{} does not match the {h}x{w} mask image",
+                marker.height(),
+                marker.width()
+            ));
+        }
+        let canon = spec.canonical_for(h, w);
+        let key = (canon, h, w);
+        if let Some(entry) = cache.get_mut(&key) {
+            stats.hits += 1;
+            if entry.single.is_none() {
+                entry.single = Some(canon.plan::<P>(h, w)?);
+            }
+            return Ok(entry.single.as_mut().unwrap().run_reconstruct_owned(img, marker));
+        }
+        stats.resolutions += 1;
+        let mut plan = canon.plan::<P>(h, w)?;
+        let new_bytes = plan.scratch_bytes();
+        if new_bytes > PLAN_CACHE_MAX_BYTES {
+            return Ok(plan.run_reconstruct_owned(img, marker));
+        }
+        evict_until_fits(cache, new_bytes);
+        let entry = cache.entry(key).or_insert(PlanEntry {
+            single: Some(plan),
+            fused: None,
+        });
+        Ok(entry.single.as_mut().unwrap().run_reconstruct_owned(img, marker))
+    }
+
+    /// Serve a u8 [`FilterOp::Reconstruct`](crate::morphology::FilterOp)
+    /// request: reconstruct `marker` by geodesic dilation under `img`.
+    /// See [`NativeEngine::run_reconstruct_any`].
+    pub fn run_spec_reconstruct(
+        &mut self,
+        spec: &FilterSpec,
+        img: &Image<u8>,
+        marker: &Image<u8>,
+    ) -> Result<(Image<u8>, usize)> {
+        Self::run_reconstruct_any(&mut self.plans_u8, &mut self.stats, spec, img, marker)
+    }
+
+    /// [`NativeEngine::run_spec_reconstruct`] at 16-bit depth.
+    pub fn run_spec_reconstruct_u16(
+        &mut self,
+        spec: &FilterSpec,
+        img: &Image<u16>,
+        marker: &Image<u16>,
+    ) -> Result<(Image<u16>, usize)> {
+        Self::run_reconstruct_any(&mut self.plans_u16, &mut self.stats, spec, img, marker)
     }
 
     /// Serve a whole same-spec u8 batch, fusing when possible.  See
@@ -667,6 +745,59 @@ mod tests {
         assert_eq!(e.plan_stats(), PlanStats { resolutions: 3, hits: 3 });
         // plan errors surface without poisoning the cache
         assert!(e.warm_spec(&FilterSpec::new(FilterOp::Erode, 4, 4), 20, 24).is_err());
+    }
+
+    #[test]
+    fn reconstruct_requests_cache_plans_and_match_the_library() {
+        let mut e = NativeEngine::default();
+        let mask = synth::noise(18, 26, 7);
+        let mut marker = Image::<u8>::zeros(18, 26);
+        marker.row_mut(0).copy_from_slice(mask.row(0));
+        let spec = FilterSpec::new(FilterOp::Reconstruct, 3, 3);
+        let (got, sweeps) = e.run_spec_reconstruct(&spec, &mask, &marker).unwrap();
+        let (want, want_sweeps) = crate::morphology::reconstruct_by_dilation(
+            &marker,
+            &mask,
+            3,
+            3,
+            &MorphConfig::default(),
+        )
+        .unwrap();
+        assert!(got.same_pixels(&want));
+        assert_eq!(sweeps, want_sweeps);
+        assert_eq!(e.plan_stats(), PlanStats { resolutions: 1, hits: 0 });
+        // warm family: later requests are hits on the cached plan
+        let (got2, _) = e.run_spec_reconstruct(&spec, &mask, &marker).unwrap();
+        assert!(got2.same_pixels(&want));
+        assert_eq!(e.plan_stats(), PlanStats { resolutions: 1, hits: 1 });
+        assert_eq!(e.cached_plans(), 1);
+        // markerless entry points refuse reconstruct specs...
+        assert!(e.run_spec(&spec, &mask).is_err());
+        // ...and the marker entry point refuses everything else
+        let erode = FilterSpec::new(FilterOp::Erode, 3, 3);
+        assert!(e.run_spec_reconstruct(&erode, &mask, &marker).is_err());
+        // shape-mismatched markers error instead of panicking
+        let small = synth::noise(6, 6, 1);
+        assert!(e.run_spec_reconstruct(&spec, &mask, &small).is_err());
+    }
+
+    #[test]
+    fn reconstruct_works_at_u16_depth() {
+        let mut e = NativeEngine::default();
+        let mask = synth::noise_u16(12, 16, 5);
+        let mut marker = Image::<u16>::zeros(12, 16);
+        marker.row_mut(0).copy_from_slice(mask.row(0));
+        let spec = FilterSpec::new(FilterOp::Reconstruct, 3, 3);
+        let (got, _) = e.run_spec_reconstruct_u16(&spec, &mask, &marker).unwrap();
+        let (want, _) = crate::morphology::reconstruct_by_dilation(
+            &marker,
+            &mask,
+            3,
+            3,
+            &MorphConfig::default(),
+        )
+        .unwrap();
+        assert!(got.same_pixels(&want));
     }
 
     #[test]

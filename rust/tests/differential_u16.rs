@@ -12,7 +12,7 @@ use neon_morph::image::synth::{self, Rng};
 use neon_morph::image::Image;
 use neon_morph::morphology::{
     self, linear, naive, vhgw, Border, HybridThresholds, MorphConfig, MorphOp, Parallelism,
-    PassMethod, VerticalStrategy,
+    PassMethod, Representation, VerticalStrategy,
 };
 use neon_morph::neon::Native;
 use neon_morph::util::prop::{dims, forall, odd_window};
@@ -40,6 +40,7 @@ fn all_configs() -> Vec<MorphConfig> {
                         border,
                         thresholds: HybridThresholds::paper(),
                         parallelism: Parallelism::Sequential,
+                        representation: Representation::Dense,
                     });
                 }
             }
@@ -163,6 +164,7 @@ fn prop_u16_stride_padded_inputs_match_compact() {
                     border: Border::Identity,
                     thresholds: HybridThresholds::paper(),
                     parallelism: Parallelism::Sequential,
+                    representation: Representation::Dense,
                 },
             ] {
                 let a = morphology::morphology(&mut Native, &img, op, w_x, w_y, &cfg);

@@ -10,7 +10,7 @@ use neon_morph::morphology::parallel::{
 };
 use neon_morph::morphology::{
     separable, Border, HybridThresholds, MorphConfig, MorphOp, MorphPixel, Parallelism,
-    PassMethod, VerticalStrategy,
+    PassMethod, Representation, VerticalStrategy,
 };
 use neon_morph::neon::Native;
 use neon_morph::util::prop;
@@ -41,6 +41,7 @@ fn configs() -> Vec<MorphConfig> {
                         // the vHGW branch at small test windows
                         thresholds: HybridThresholds { wy0: 5, wx0: 5 },
                         parallelism: Parallelism::Sequential,
+                        representation: Representation::Dense,
                     });
                 }
             }

@@ -14,7 +14,7 @@
 use neon_morph::image::{synth, Image};
 use neon_morph::morphology::{
     self, separable, Border, FilterOp, FilterSpec, HybridThresholds, MorphConfig, MorphOp,
-    MorphPixel, Parallelism, PassMethod, Roi, VerticalStrategy,
+    MorphPixel, Parallelism, PassMethod, Representation, Roi, VerticalStrategy,
 };
 use neon_morph::neon::Native;
 
@@ -31,6 +31,7 @@ fn configs(parallelism: Parallelism) -> Vec<MorphConfig> {
                         border,
                         thresholds: HybridThresholds::paper(),
                         parallelism,
+                        representation: Representation::Dense,
                     });
                 }
             }
@@ -56,7 +57,7 @@ fn legacy<P: MorphPixel>(
         FilterOp::Gradient => morphology::gradient(b, img, wx, wy, cfg),
         FilterOp::TopHat => morphology::tophat(b, img, wx, wy, cfg),
         FilterOp::BlackHat => morphology::blackhat(b, img, wx, wy, cfg),
-        FilterOp::Transpose => unreachable!(),
+        FilterOp::Transpose | FilterOp::Reconstruct => unreachable!(),
     }
 }
 

@@ -9,7 +9,7 @@ use neon_morph::image::synth::{self, Rng};
 use neon_morph::image::Image;
 use neon_morph::morphology::{
     self, naive, Border, HybridThresholds, MorphConfig, MorphOp, Parallelism, PassMethod,
-    VerticalStrategy,
+    Representation, VerticalStrategy,
 };
 use neon_morph::neon::Native;
 use neon_morph::util::prop::{dims, forall, odd_window};
@@ -32,6 +32,7 @@ fn all_configs() -> Vec<MorphConfig> {
                     border: Border::Identity,
                     thresholds: HybridThresholds::paper(),
                     parallelism: Parallelism::Sequential,
+                    representation: Representation::Dense,
                 });
             }
         }

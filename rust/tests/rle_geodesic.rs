@@ -1,0 +1,273 @@
+//! Differential suite for the scenario engines: the RLE interval engine
+//! against the dense oracle on randomized masks, and geodesic
+//! reconstruction against a naive sweep oracle — plus the end-to-end
+//! pipeline path ([`Coordinator::submit_with_marker`]) against the
+//! library call.
+//!
+//! The RLE contract under test: for every 0/255 image and every rect-SE
+//! chain of erode/dilate steps, the interval engine is **bit-identical**
+//! to the dense separable path (whole image, either border — replicate
+//! and identity agree on whole-image rect-SE min/max).  The
+//! reconstruction contract: the banded plan sweeps reach the same
+//! fixpoint in the same number of sweeps as a pixel-by-pixel oracle.
+
+use std::sync::Arc;
+
+use neon_morph::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use neon_morph::image::synth::{self, Rng};
+use neon_morph::image::Image;
+use neon_morph::morphology::{
+    reconstruct_by_dilation, Border, FilterOp, FilterSpec, MorphConfig, Parallelism,
+    Representation, RleImage,
+};
+use neon_morph::util::prop::{dims, forall, odd_window};
+
+fn cfg_with(repr: Representation, border: Border) -> MorphConfig {
+    MorphConfig {
+        representation: repr,
+        border,
+        parallelism: Parallelism::Sequential,
+        ..MorphConfig::default()
+    }
+}
+
+/// Bernoulli 0/255 mask at `fg_percent`% foreground.
+fn random_mask(rng: &mut Rng, h: usize, w: usize, fg_percent: usize) -> Image<u8> {
+    Image::from_fn(h, w, |_, _| if rng.below(100) < fg_percent { 255 } else { 0 })
+}
+
+#[test]
+fn rle_representation_matches_dense_on_randomized_masks() {
+    // densities from empty through solid, including the 1% regime where
+    // rows are mostly empty and runs are mostly single pixels
+    let densities = [0usize, 1, 5, 20, 50, 80, 100];
+    forall(0xA11CE, 28, |rng, i| {
+        let (h, w) = dims(rng, 36, 44);
+        let mask = random_mask(rng, h, w, densities[i % densities.len()]);
+        let wx = odd_window(rng, 9);
+        let wy = odd_window(rng, 9);
+        for op in [FilterOp::Erode, FilterOp::Dilate, FilterOp::Open, FilterOp::Close] {
+            for border in [Border::Identity, Border::Replicate] {
+                let spec = FilterSpec::new(op, wx, wy);
+                let dense = spec
+                    .with_config(cfg_with(Representation::Dense, border))
+                    .run_once::<u8>(&mask)
+                    .unwrap();
+                for repr in [Representation::Rle, Representation::Auto] {
+                    let got = spec
+                        .with_config(cfg_with(repr, border))
+                        .run_once::<u8>(&mask)
+                        .unwrap();
+                    assert!(
+                        got.same_pixels(&dense),
+                        "{op:?} {wx}x{wy} {border:?} {repr:?} on {h}x{w}: {:?}",
+                        got.first_diff(&dense)
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn rle_handles_strided_sources_and_gray_fallback() {
+    let mask = random_mask(&mut Rng::new(0x57E), 24, 30, 10);
+    let padded = mask.with_stride(48, 0xEE);
+    let spec = FilterSpec::new(FilterOp::Open, 5, 3);
+    let want = spec
+        .with_config(cfg_with(Representation::Dense, Border::Identity))
+        .run_once::<u8>(&mask)
+        .unwrap();
+    let got = spec
+        .with_config(cfg_with(Representation::Rle, Border::Identity))
+        .run_once::<u8>(&padded)
+        .unwrap();
+    assert!(got.same_pixels(&want), "strided RLE source");
+
+    // a gray source is not representable as intervals: the Rle knob
+    // must fall back to the dense engine, not corrupt pixels
+    let gray = synth::noise(20, 26, 9);
+    let want = spec
+        .with_config(cfg_with(Representation::Dense, Border::Identity))
+        .run_once::<u8>(&gray)
+        .unwrap();
+    let got = spec
+        .with_config(cfg_with(Representation::Rle, Border::Identity))
+        .run_once::<u8>(&gray)
+        .unwrap();
+    assert!(got.same_pixels(&want), "gray fallback");
+}
+
+#[test]
+fn direct_interval_ops_match_dense_and_round_trip() {
+    forall(0xB0B5, 24, |rng, _| {
+        let (h, w) = dims(rng, 30, 36);
+        let mask = random_mask(rng, h, w, rng.below(101));
+        let rle = RleImage::from_view(&mask).expect("binary mask converts");
+        // lossless round trip, exact run bookkeeping
+        assert!(rle.to_image().same_pixels(&mask));
+        let fg = (0..h).flat_map(|y| mask.row(y).iter()).filter(|&&v| v > 0).count();
+        assert_eq!(rle.fg_pixels(), fg);
+        // interval erode/dilate against the dense engine (identity
+        // semantics: valid for whole images under either border)
+        let wx = odd_window(rng, 7);
+        let wy = odd_window(rng, 7);
+        for (op, fop) in [
+            (neon_morph::morphology::MorphOp::Erode, FilterOp::Erode),
+            (neon_morph::morphology::MorphOp::Dilate, FilterOp::Dilate),
+        ] {
+            let want = FilterSpec::new(fop, wx, wy)
+                .with_config(cfg_with(Representation::Dense, Border::Identity))
+                .run_once::<u8>(&mask)
+                .unwrap();
+            let got = rle.apply(op, wx, wy).to_image();
+            assert!(
+                got.same_pixels(&want),
+                "direct {op:?} {wx}x{wy} on {h}x{w}: {:?}",
+                got.first_diff(&want)
+            );
+        }
+    });
+}
+
+#[test]
+fn rle_edge_geometries() {
+    // hand-built pathologies: single-pixel runs on alternating rows,
+    // full rows, empty rows, and runs touching both borders
+    let img = Image::from_fn(9, 12, |y, x| match y {
+        0 => 255,                                // full row
+        1 => 0,                                  // empty row
+        2 => u8::from(x % 2 == 0) * 255,         // 1-px runs
+        3 => u8::from(x == 0 || x == 11) * 255,  // both edges
+        4 => u8::from(x < 3) * 255,              // left-anchored
+        5 => u8::from(x >= 9) * 255,             // right-anchored
+        6 => u8::from((3..9).contains(&x)) * 255, // interior run
+        _ => u8::from(x == 5) * 255,             // lone pixel
+    });
+    let rle = RleImage::from_view(&img).unwrap();
+    assert!(rle.to_image().same_pixels(&img));
+    for (wx, wy) in [(1, 1), (3, 1), (1, 3), (3, 3), (5, 7), (13, 3)] {
+        for op in [FilterOp::Erode, FilterOp::Dilate, FilterOp::Open, FilterOp::Close] {
+            let spec = FilterSpec::new(op, wx, wy);
+            let want = spec
+                .with_config(cfg_with(Representation::Dense, Border::Identity))
+                .run_once::<u8>(&img)
+                .unwrap();
+            let got = spec
+                .with_config(cfg_with(Representation::Rle, Border::Identity))
+                .run_once::<u8>(&img)
+                .unwrap();
+            assert!(got.same_pixels(&want), "{op:?} {wx}x{wy}: {:?}", got.first_diff(&want));
+        }
+    }
+}
+
+/// Pixel-by-pixel reconstruction oracle with the library's sweep
+/// accounting: every executed sweep counts, including the final one
+/// that proves the fixpoint.
+fn naive_reconstruct(
+    marker: &Image<u8>,
+    mask: &Image<u8>,
+    w_x: usize,
+    w_y: usize,
+) -> (Image<u8>, usize) {
+    let (h, w) = (mask.height(), mask.width());
+    let (wing_x, wing_y) = (w_x / 2, w_y / 2);
+    let mut cur = Image::from_fn(h, w, |y, x| marker.get(y, x).min(mask.get(y, x)));
+    let mut sweeps = 0usize;
+    loop {
+        sweeps += 1;
+        let next = Image::from_fn(h, w, |y, x| {
+            let mut m = 0u8;
+            for yy in y.saturating_sub(wing_y)..(y + wing_y + 1).min(h) {
+                for xx in x.saturating_sub(wing_x)..(x + wing_x + 1).min(w) {
+                    m = m.max(cur.get(yy, xx));
+                }
+            }
+            m.min(mask.get(y, x))
+        });
+        if next.same_pixels(&cur) {
+            return (cur, sweeps);
+        }
+        cur = next;
+    }
+}
+
+#[test]
+fn reconstruction_matches_naive_oracle() {
+    forall(0x6E0, 12, |rng, _| {
+        let (h, w) = (4 + rng.below(26), 4 + rng.below(30));
+        let mask = random_mask(rng, h, w, 30 + rng.below(40));
+        // marker: a random subset of the mask (a few seed points)
+        let marker =
+            Image::from_fn(h, w, |y, x| if rng.below(20) == 0 { mask.get(y, x) } else { 0 });
+        let wx = odd_window(rng, 5);
+        let wy = odd_window(rng, 5);
+        let (want, want_sweeps) = naive_reconstruct(&marker, &mask, wx, wy);
+        for parallelism in [Parallelism::Sequential, Parallelism::Fixed(4)] {
+            for border in [Border::Identity, Border::Replicate] {
+                let cfg = MorphConfig {
+                    parallelism,
+                    border,
+                    ..MorphConfig::default()
+                };
+                let (got, sweeps) =
+                    reconstruct_by_dilation(&marker, &mask, wx, wy, &cfg).unwrap();
+                assert!(
+                    got.same_pixels(&want),
+                    "{parallelism:?} {border:?} {wx}x{wy} on {h}x{w}: {:?}",
+                    got.first_diff(&want)
+                );
+                assert_eq!(sweeps, want_sweeps, "{parallelism:?} {border:?} sweep count");
+            }
+        }
+    });
+}
+
+#[test]
+fn pipeline_serves_reconstruct_bit_identically() {
+    // a mask with structure (checkerboard) and a top-row seed: the
+    // fixpoint takes many sweeps, so this really exercises the plan's
+    // sweep loop through the staged pipeline
+    let mask = Arc::new(synth::checkerboard(40, 56, 6));
+    let marker = Arc::new(Image::from_fn(40, 56, |y, x| {
+        if y == 0 {
+            mask.get(0, x)
+        } else {
+            0
+        }
+    }));
+    let spec = FilterSpec::new(FilterOp::Reconstruct, 3, 3);
+    let (want, _) =
+        reconstruct_by_dilation(&*marker, &*mask, 3, 3, &MorphConfig::default()).unwrap();
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        backend: BackendChoice::NativeOnly,
+        artifact_dir: None,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    const G: u64 = 6;
+    let tickets: Vec<_> = (0..G)
+        .map(|_| coord.submit_with_marker(spec, mask.clone(), marker.clone()).unwrap())
+        .collect();
+    for t in tickets {
+        let resp = t.wait().unwrap();
+        assert_eq!(resp.backend, "native");
+        let out = resp.result.unwrap().into_u8().unwrap();
+        assert!(
+            out.same_pixels(&want),
+            "pipeline reconstruct diverged from the library: {:?}",
+            out.first_diff(&want)
+        );
+    }
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, G);
+    assert_eq!(snap.failed, 0);
+    // one plan family: the resolve stage warms it once, every request
+    // is warm + execute — the same 1 + (2G − 1) contract as filter ops
+    assert_eq!(snap.plan_resolutions, 1, "reconstruct plans must cache");
+    assert_eq!(snap.plan_hits, 2 * G - 1);
+    coord.shutdown();
+}

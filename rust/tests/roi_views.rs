@@ -15,7 +15,7 @@
 use neon_morph::image::{synth, Image, ImageView};
 use neon_morph::morphology::{
     self, parallel, Border, HybridThresholds, MorphConfig, MorphOp, MorphPixel, Parallelism,
-    PassMethod, Roi, VerticalStrategy,
+    PassMethod, Representation, Roi, VerticalStrategy,
 };
 use neon_morph::util::prop::{dims, forall, odd_window};
 
@@ -46,6 +46,7 @@ fn configs() -> Vec<MorphConfig> {
                         // small test windows
                         thresholds: HybridThresholds { wy0: 5, wx0: 5 },
                         parallelism: Parallelism::Sequential,
+                        representation: Representation::Dense,
                     });
                 }
             }
