@@ -1,0 +1,182 @@
+"""Independent verification of the banded §4 tile-transpose geometry
+used by ``rust/src/morphology/parallel.rs`` / ``rust/src/transpose``.
+
+``transpose_image_banded_into`` splits the *source* rows into
+tile-aligned bands and hands band ``[y0, y1)`` a destination **column
+stripe**: columns ``[y0, y1)`` of every row of the ``w × h`` transposed
+image (an ``ImageViewMut::split_cols_mut`` stripe).  Its bit-identity
+claim reduces to pure geometry:
+
+* the stripe plans are pairwise disjoint and together cover every
+  destination cell exactly once (so concurrent band jobs never alias),
+* interior stripe boundaries are LANES-aligned, so no §4 tile straddles
+  a boundary and the tiled interior of each band reproduces the
+  whole-image driver's tile grid exactly, and
+* each band's tiled/scalar row partition (``t0``/``t1`` in
+  ``transpose_band_into``) covers the band's source rows exactly once.
+
+This file mirrors that geometry and checks it against brute-force
+oracles over randomized shapes, band counts and source strides.  It
+runs without the rust toolchain (tier-1).
+"""
+
+import random
+
+# ---- mirrors of the rust geometry ---------------------------------------
+
+
+def split_bands_aligned(length, parts, align):
+    """Mirror of ``parallel::split_bands_aligned``."""
+    align = max(align, 1)
+    parts = max(parts, 1)
+    if length == 0:
+        return []
+    out = []
+    start = 0
+    for i in range(1, parts + 1):
+        end = i * length // parts
+        if i != parts:
+            end = end // align * align
+        else:
+            end = length
+        if end > start:
+            out.append((start, end))
+            start = end
+    return out
+
+
+def tile_partition(band, tile):
+    """Mirror of ``transpose_band_into``'s row split: rows ``[t0, t1)``
+    run the tile network, ``[y0, t0) ∪ [t1, y1)`` fall back to scalar."""
+    y0, y1 = band
+    t0 = min((y0 + tile - 1) // tile * tile, y1)
+    t1 = t0 + (y1 - t0) // tile * tile
+    return t0, t1
+
+
+def banded_transpose(img, h, w, bands, lanes, stride=None):
+    """Simulate the banded driver on a flat source buffer: each band
+    writes only its own column stripe of the ``w × h`` destination,
+    through the band kernel's tiled/scalar row partition.  Returns the
+    flat destination plus a per-cell write count (aliasing check)."""
+    stride = w if stride is None else stride
+    dst = [None] * (w * h)
+    writes = [0] * (w * h)
+    for y0, y1 in split_bands_aligned(h, bands, lanes):
+        t0, t1 = tile_partition((y0, y1), lanes)
+        tw = w - w % lanes
+        # tiled interior rows, then the scalar boundary rows and the
+        # right-edge columns — same traversal as the rust kernel
+        spans = [(t0, t1, 0, tw), (y0, t0, 0, tw), (t1, y1, 0, tw), (y0, y1, tw, w)]
+        for ya, yb, xa, xb in spans:
+            for y in range(ya, yb):
+                for x in range(xa, xb):
+                    dst[x * h + y] = img[y * stride + x]
+                    writes[x * h + y] += 1
+    return dst, writes
+
+
+def naive_transpose(img, h, w, stride=None):
+    stride = w if stride is None else stride
+    return [img[y * stride + x] for x in range(w) for y in range(h)]
+
+
+# ---- tests --------------------------------------------------------------
+
+
+def test_stripe_plans_disjoint_cover_aligned():
+    rng = random.Random(0x57121)
+    for _ in range(300):
+        h = rng.randint(0, 70)
+        bands = rng.randint(1, h + 6)
+        lanes = rng.choice([8, 16])
+        plan = split_bands_aligned(h, bands, lanes)
+        if h == 0:
+            assert plan == []
+            continue
+        # contiguous cover of the destination columns [0, h)
+        assert plan[0][0] == 0 and plan[-1][1] == h
+        for (_, a1), (b0, _) in zip(plan, plan[1:]):
+            assert a1 == b0, "stripes must tile contiguously"
+        assert all(b1 > b0 for b0, b1 in plan), "empty stripes are dropped"
+        # interior boundaries tile-aligned: no §4 tile straddles a cut
+        for b0, b1 in plan[:-1]:
+            assert b1 % lanes == 0
+        assert len(plan) <= bands
+
+
+def test_tile_partition_covers_band_exactly_once():
+    rng = random.Random(0x57122)
+    for _ in range(300):
+        h = rng.randint(1, 90)
+        lanes = rng.choice([8, 16])
+        bands = rng.randint(1, h + 4)
+        covered = []
+        for band in split_bands_aligned(h, bands, lanes):
+            y0, y1 = band
+            t0, t1 = tile_partition(band, lanes)
+            assert y0 <= t0 <= t1 <= y1
+            assert (t1 - t0) % lanes == 0, "tiled span must be whole tiles"
+            # aligned band starts make the leading scalar span empty
+            if y0 % lanes == 0:
+                assert t0 == y0
+            covered.extend(range(y0, t0))
+            covered.extend(range(t0, t1))
+            covered.extend(range(t1, y1))
+        assert covered == list(range(h)), "each source row handled exactly once"
+
+
+def test_single_band_is_whole_image_kernel():
+    # one band [0, h) must reduce to the sequential kernel's partition:
+    # tiled rows [0, h - h % lanes), scalar remainder at the bottom
+    for h in [0, 1, 7, 8, 16, 17, 33, 600]:
+        for lanes in [8, 16]:
+            plan = split_bands_aligned(h, 1, lanes)
+            if h == 0:
+                assert plan == []
+                continue
+            assert plan == [(0, h)]
+            t0, t1 = tile_partition((0, h), lanes)
+            assert t0 == 0
+            assert t1 == h - h % lanes
+
+
+def test_banded_transpose_matches_oracle():
+    rng = random.Random(0x57123)
+    for case in range(200):
+        h = rng.randint(1, 40)
+        w = rng.randint(1, 40)
+        lanes = rng.choice([8, 16])
+        bands = rng.randint(1, h + 4)
+        img = [rng.randint(0, 255) for _ in range(h * w)]
+        got, writes = banded_transpose(img, h, w, bands, lanes)
+        assert got == naive_transpose(img, h, w), (
+            f"case {case}: h={h} w={w} lanes={lanes} bands={bands} diverged"
+        )
+        # every destination cell written exactly once: the stripes are
+        # disjoint even though they interleave in the flat buffer
+        assert writes == [1] * (w * h)
+
+
+def test_banded_transpose_strided_sources():
+    rng = random.Random(0x57124)
+    for _ in range(100):
+        h = rng.randint(1, 30)
+        w = rng.randint(1, 30)
+        stride = w + rng.randint(1, 9)
+        lanes = rng.choice([8, 16])
+        bands = rng.randint(1, h + 4)
+        backing = [rng.randint(0, 255) for _ in range(h * stride)]
+        got, writes = banded_transpose(backing, h, w, bands, lanes, stride=stride)
+        assert got == naive_transpose(backing, h, w, stride=stride)
+        assert writes == [1] * (w * h)
+
+
+def test_degenerate_shapes():
+    for h, w in [(1, 20), (20, 1), (1, 1), (16, 16), (8, 8)]:
+        for lanes in [8, 16]:
+            for bands in [1, 2, h, h + 5]:
+                img = list(range(h * w))
+                got, writes = banded_transpose(img, h, w, bands, lanes)
+                assert got == naive_transpose(img, h, w)
+                assert writes == [1] * (w * h)

@@ -7,9 +7,19 @@ CI perf baselines (``rust/benches/baselines/BENCH_*.json``):
 * ``rows_scalar_vhgw`` / ``rows_simd_vhgw`` / ``rows_simd_linear``
   (``rust/src/morphology/vhgw.rs`` / ``linear.rs``) on the 800x600 u8
   workload at the smoke windows — the Fig. 3 headline ratios,
-* ``rows_simd_linear + cols_simd_linear`` at w = 31 — the instruction
-  mix of the section-5.3 hybrid erosion behind the band-parallel
-  scaling sweep (saturation point, speedups, bandwidth ceiling),
+* the w = 121 linear erosion with its vertical pass forced through the
+  section-5.2.1 transpose sandwich (``rows_simd_linear`` + both
+  ``transpose_image`` tilings + ``rows_simd_linear`` on the transposed
+  image) — the instruction mix behind the band-parallel scaling sweep
+  (saturation point, speedups, bandwidth ceiling, and the
+  serial-transpose ceiling the banded transpose lifted),
+* the closed-form banded-transpose headlines (``BENCH_transpose.json``)
+  — ``transpose_breakdown`` below mirrors
+  ``CostModel::transpose_breakdown`` term by term (it is loop-exact
+  against the tile censuses, so closed form and counted mix agree
+  exactly): sequential throughput at both depths, the full-cost banded
+  speedup at P = 4, the ``Parallelism::Auto`` demotion decision, and
+  the in-sandwich (fork-amortized) speedup,
 * ``cols_scalar_vhgw`` / ``cols_simd_linear`` / the section-5.2.1
   transpose sandwich (``transpose_image`` tiling + ``rows_simd_vhgw``
   on the transposed 800x600 image) — the Fig. 4 vertical-pass headline
@@ -83,7 +93,7 @@ SATURATION_EPSILON = 0.05
 H, W = 600, 800  # synth::paper_image dimensions (u8, px = 1 byte)
 LANES = 16
 SMOKE_WINDOWS = [3, 31, 61, 91]
-SCALING_WINDOW = 31
+SCALING_WINDOW = 121
 MAX_WORKERS = 16
 # bench_harness::serve fused-batch headline constants — keep in sync.
 SERVE_FUSED_WORKERS = 4
@@ -322,6 +332,53 @@ def parallel_price_ns(mix, workers):
     )
 
 
+def transpose_breakdown(h, w, lanes=LANES, px=1, workers=1):
+    """CostModel::transpose_breakdown, term by term: closed-form price
+    of one whole-image section-4 tile transpose as ``workers`` tile-row
+    bands.  Loop-exact against ``transpose_image`` (same tile census,
+    same edge census, same 2*h*w stream), so the closed form and a
+    counted mix agree exactly.  Returns (compute_ns, memory_ns,
+    overhead_ns)."""
+    census = TILE16 if lanes == 16 else TILE8
+    tile_cycles = (
+        census["simd_load"] * CYCLES["simd_load"]
+        + census["simd_store"] * CYCLES["simd_store"]
+        + census["simd_permute"] * CYCLES["simd_permute"]
+        + census["simd_combine"] * CYCLES["simd_combine"]
+    )
+    th, tw = h - h % lanes, w - w % lanes
+    tiles = (th // lanes) * (tw // lanes)
+    edge_px = h * (w - tw) + (h - th) * tw
+    edge_cycles = edge_px * (CYCLES["scalar_load"] + CYCLES["scalar_store"])
+    compute_ns = (tiles * tile_cycles + edge_cycles) / FREQ_GHZ
+    stream_bytes = 2.0 * (h * w * px)
+    memory_ns = stream_bytes / BW_BYTES_PER_CYCLE / FREQ_GHZ
+    if workers <= 1:
+        return compute_ns, memory_ns, CALL_OVERHEAD_NS
+    return (
+        compute_ns / workers,
+        memory_ns,
+        CALL_OVERHEAD_NS + FORK_NS + BAND_OVERHEAD_NS * workers,
+    )
+
+
+def plan_transpose_workers(h, w, lanes=LANES, px=1, max_workers=8):
+    # CostModel::plan_transpose_workers -> plan_workers: argmin of the
+    # parallel price, demoted to 1 unless >=10% better than sequential
+    compute_ns, memory_ns, _ = transpose_breakdown(h, w, lanes, px, 1)
+    seq = compute_ns + memory_ns + CALL_OVERHEAD_NS
+    best, best_ns = 1, seq
+    for p in range(2, max(max_workers, 1) + 1):
+        t = (
+            compute_ns / p
+            + memory_ns
+            + (CALL_OVERHEAD_NS + FORK_NS + BAND_OVERHEAD_NS * p)
+        )
+        if t < best_ns:
+            best, best_ns = p, t
+    return 1 if best_ns > seq * 0.9 else best
+
+
 def fig3_baseline():
     headline = {}
     series = {}
@@ -432,9 +489,17 @@ def table1_baseline():
 
 
 def scaling_baseline():
+    # bench_harness::scaling::run with the banded-sandwich workload: a
+    # w=121 linear erosion whose vertical pass is forced through the
+    # section-5.2.1 transpose sandwich, so the counted mix is the rows
+    # pass + both tile transposes + the middle rows pass over the
+    # transposed (800x600) image — every phase the banded executors
+    # cover.
     mix = Mix()
     mix += rows_simd_linear(H, W, SCALING_WINDOW)
-    mix += cols_simd_linear(H, W, SCALING_WINDOW)
+    mix += transpose_image(H, W)
+    mix += rows_simd_linear(W, H, SCALING_WINDOW)
+    mix += transpose_image(W, H)
     seq = mix.price_ns()
     speedup = lambda p: seq / parallel_price_ns(mix, p)  # noqa: E731
     saturation = MAX_WORKERS
@@ -446,21 +511,58 @@ def scaling_baseline():
     margin = parallel_price_ns(mix, saturation + 1) / (
         parallel_price_ns(mix, saturation) * (1.0 - SATURATION_EPSILON)
     )
-    ceiling = (mix.compute_ns() + mix.memory_ns()) / mix.memory_ns()
+    # banded-transpose ceiling vs the old serial-transpose ceiling: with
+    # the two transposes' compute pinned serial, Amdahl moves it from
+    # (C+M)/M down to (C+M)/(M+Ct) — their ratio is the headroom the
+    # banded transpose bought
+    transpose_compute_ns = (
+        transpose_breakdown(H, W, 16, 1, 1)[0] + transpose_breakdown(W, H, 16, 1, 1)[0]
+    )
+    total = mix.compute_ns() + mix.memory_ns()
+    ceiling = total / mix.memory_ns()
+    ceiling_serial_transpose = total / (mix.memory_ns() + transpose_compute_ns)
     return (
         {
             "bench": "scaling",
-            "workload": f"erode {SCALING_WINDOW}x{SCALING_WINDOW} hybrid on {H}x{W} u8",
+            "workload": (
+                f"erode {SCALING_WINDOW}x{SCALING_WINDOW} linear "
+                f"transpose-sandwich on {H}x{W} u8"
+            ),
             "headline": {
                 "saturation_workers": saturation,
                 "speedup_at_2": speedup(2),
                 "speedup_at_4": speedup(4),
                 "speedup_at_saturation": speedup(saturation),
                 "ceiling": ceiling,
+                "ceiling_serial_transpose": ceiling_serial_transpose,
+                "transpose_ceiling_lift": ceiling / ceiling_serial_transpose,
             },
         },
         {"seq_ns": seq, "mix": dict(mix), "stream": mix.stream, "margin": margin},
     )
+
+
+def transpose_baseline():
+    # mirrors bench_harness::transpose::{run_model, to_json}: per depth
+    # case on the paper shape, the marginal sequential price of the
+    # whole-image tile network, its throughput, the full-cost banded
+    # speedup at P=4, the Auto band decision, and the in-sandwich
+    # (fork-amortized) speedup — all closed-form via transpose_breakdown
+    headline = {}
+    for case, lanes, px in [("16x16_u8", 16, 1), ("8x8_u16", 8, 2)]:
+        sc, sm, so = transpose_breakdown(H, W, lanes, px, 1)
+        pc, pm, po = transpose_breakdown(H, W, lanes, px, 4)
+        seq_marginal = sc + sm
+        headline[f"seq_ns_{case}"] = seq_marginal
+        headline[f"mpx_s_{case}"] = (H * W) / seq_marginal * 1000.0
+        headline[f"banded_speedup4_{case}"] = (sc + sm + so) / (pc + pm + po)
+        headline[f"auto_bands_{case}"] = plan_transpose_workers(H, W, lanes, px, 8)
+        headline[f"sandwich_speedup4_{case}"] = seq_marginal / (pc + pm)
+    return {
+        "bench": "transpose",
+        "workload": f"banded tile transpose on {H}x{W}",
+        "headline": headline,
+    }
 
 
 def serve_baseline():
@@ -721,6 +823,7 @@ def main():
     scaling, debug = scaling_baseline()
     serve = serve_baseline()
     rle = rle_baseline()
+    transpose = transpose_baseline()
     for name, doc in [
         ("BENCH_fig3.json", fig3),
         ("BENCH_fig3_u16.json", fig3u16),
@@ -729,6 +832,7 @@ def main():
         ("BENCH_scaling.json", scaling),
         ("BENCH_serve.json", serve),
         ("BENCH_rle.json", rle),
+        ("BENCH_transpose.json", transpose),
     ]:
         path = os.path.join(outdir, name)
         with open(path, "w") as f:
@@ -752,6 +856,7 @@ def main():
     print(f"saturation boundary margin (want far from 1.0): {debug['margin']:.4f}")
     print(f"serve headline: {serve['headline']}")
     print(f"rle headline: {rle['headline']}")
+    print(f"transpose headline: {transpose['headline']}")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@
 //! | Figure 4 | [`fig4::run`]   | vertical-pass erosion time vs `w_x` |
 //! | headline | [`e2e::run`]    | final hybrid vs vHGW-no-SIMD, ≥3× |
 //! | scaling  | [`scaling::run`] | band-parallel speedup vs workers (extension) |
+//! | transpose | [`transpose::run_model`] | banded §4 tile-transpose throughput + speedups (extension) |
 //!
 //! [`scaling`] also emits the machine-readable `BENCH_fig3.json` /
 //! `BENCH_fig4.json` / `BENCH_table1.json` / `BENCH_scaling.json`
@@ -18,7 +19,10 @@
 //! (`BENCH_serve.json`): count-exact plan-cache headlines of a streamed
 //! coordinator workload (plan resolutions per request).  [`rle`] adds
 //! the scenario-engine report (`BENCH_rle.json`): modeled RLE-vs-dense
-//! ratios plus a live reconstruction sweep count.
+//! ratios plus a live reconstruction sweep count.  [`transpose`] adds
+//! the banded-transpose report (`BENCH_transpose.json`): closed-form
+//! tile-network throughput at both depths plus the banded/in-sandwich
+//! speedup and Auto-demotion headlines.
 //!
 //! Every experiment reports **two** measurements side by side:
 //!
@@ -43,6 +47,7 @@ pub mod rle;
 pub mod scaling;
 pub mod serve;
 pub mod table1;
+pub mod transpose;
 
 /// Default odd-window sweep used by Fig. 3 / Fig. 4 (the paper sweeps
 /// roughly 3..120).

@@ -1,14 +1,28 @@
 //! Band-parallel scaling sweep: modeled (and optionally measured)
-//! speedup of the §5.3 hybrid erosion as the band count grows.
+//! speedup of a full §5.2.1 sandwich erosion as the band count grows.
 //!
-//! The model series is fully deterministic: one Counting run produces
-//! the instruction mix of the sequential pass, and
+//! The workload is a large-window (`w = 121`) linear erosion with the
+//! vertical pass forced through the transpose sandwich — every phase
+//! the banded executors cover (rows pass, both §4 tile transposes,
+//! middle pass over the transposed buffer) appears in the mix, so the
+//! sweep prices exactly what `Parallelism::Fixed(P)` executes.  The
+//! model series is fully deterministic: one Counting run produces the
+//! instruction mix of the sequential pass, and
 //! [`crate::costmodel::CostModel::parallel_price_ns`] prices it at each
 //! worker count — compute scales ~1/P, the memory/bandwidth term does
 //! not, so the curve grows and then **saturates at the
 //! memory-bandwidth ceiling**; the saturation point is part of the CI
-//! perf baseline (`rust/benches/baselines/BENCH_scaling.json`).  The
-//! host series wall-clocks the real banded execution
+//! perf baseline (`rust/benches/baselines/BENCH_scaling.json`).
+//!
+//! Two ceiling headlines are gated.  `ceiling` is the memory-bandwidth
+//! limit `(C + M) / M` with *all* compute banded — reachable since the
+//! banded transpose landed.  `ceiling_serial_transpose` re-prices the
+//! limit with the two transposes' compute pinned serial,
+//! `(C + M) / (M + C_t)` — the ceiling the pre-banded-transpose
+//! executor was stuck under (Amdahl on the serial §4 tile networks);
+//! their ratio `transpose_ceiling_lift` is the scaling headroom the
+//! banded transpose bought.  The host series wall-clocks the real
+//! banded execution
 //! ([`crate::morphology::parallel::morphology_banded`]) and is
 //! reported for information only (never gated — wall clocks are not
 //! deterministic).
@@ -17,7 +31,9 @@ use std::collections::BTreeMap;
 
 use crate::costmodel::CostModel;
 use crate::image::synth;
-use crate::morphology::{self, parallel, MorphConfig, MorphOp, Parallelism};
+use crate::morphology::{
+    self, parallel, MorphConfig, MorphOp, Parallelism, PassMethod, VerticalStrategy,
+};
 use crate::neon::{Counting, InstrMix};
 use crate::util::json::Json;
 use crate::util::timing;
@@ -29,9 +45,11 @@ use super::report::Table;
 /// and two points bracketing the §5.3 crossover.
 pub const SMOKE_WINDOWS: [usize; 4] = [3, 31, 61, 91];
 
-/// Window of the scaling workload (§5.3 hybrid ⇒ linear on both
-/// passes at w = 31, a balanced compute/memory mix).
-pub const SCALING_WINDOW: usize = 31;
+/// Window of the scaling workload: a large square SE whose linear
+/// passes carry enough compute to make banding bite, run with the
+/// vertical pass forced through the §5.2.1 transpose sandwich so the
+/// banded tile transposes are part of the priced mix.
+pub const SCALING_WINDOW: usize = 121;
 
 /// One point of the scaling sweep.
 #[derive(Clone, Debug)]
@@ -51,8 +69,13 @@ pub struct ScalingSweep {
     /// Modeled saturation point (first worker count with < 5% marginal
     /// gain) — the headline number the CI gate pins.
     pub saturation: usize,
-    /// Memory-bandwidth ceiling `(compute + memory) / memory`.
+    /// Memory-bandwidth ceiling `(compute + memory) / memory` with all
+    /// compute banded (the banded-transpose executor's limit).
     pub ceiling: f64,
+    /// The same limit with the two §5.2.1 transposes' compute pinned
+    /// serial, `(compute + memory) / (memory + transpose_compute)` —
+    /// what the pre-banded-transpose sandwich saturated at.
+    pub ceiling_serial_transpose: f64,
     pub mix: InstrMix,
 }
 
@@ -65,8 +88,9 @@ impl ScalingSweep {
     }
 }
 
-/// Run the scaling sweep on an `h × w` u8 noise image with the hybrid
-/// `window × window` erosion.  `host_iters > 0` also wall-clocks the
+/// Run the scaling sweep on an `h × w` u8 noise image with a linear
+/// `window × window` erosion whose vertical pass is forced through the
+/// §5.2.1 transpose sandwich.  `host_iters > 0` also wall-clocks the
 /// real banded execution at each worker count.
 pub fn run(
     model: &CostModel,
@@ -79,12 +103,22 @@ pub fn run(
     let img = synth::noise(h, w, 0x5CA11);
     let cfg = MorphConfig {
         parallelism: Parallelism::Sequential,
+        method: PassMethod::Linear,
+        vertical: VerticalStrategy::Transpose,
         ..MorphConfig::default()
     };
     let mut c = Counting::new();
     let _ = morphology::morphology(&mut c, &img, MorphOp::Erode, window, window, &cfg);
     let mix = c.mix;
     let seq_ns = model.price_ns(&mix);
+    // compute of the two §4 tile transposes (h×w forward, w×h back) —
+    // the serial fraction of the pre-banded-transpose executor
+    let transpose_compute_ns = model.transpose_breakdown(h, w, 16, 1, 1).compute_ns
+        + model.transpose_breakdown(w, h, 16, 1, 1).compute_ns;
+    let b = model.breakdown(&mix);
+    let total = b.compute_ns + b.memory_ns;
+    let ceiling = total / b.memory_ns;
+    let ceiling_serial_transpose = total / (b.memory_ns + transpose_compute_ns);
 
     let mut points = Vec::with_capacity(max_workers);
     for p in 1..=max_workers.max(1) {
@@ -107,9 +141,10 @@ pub fn run(
         });
     }
     ScalingSweep {
-        workload: format!("erode {window}x{window} hybrid on {h}x{w} u8"),
+        workload: format!("erode {window}x{window} linear transpose-sandwich on {h}x{w} u8"),
         saturation: model.saturation_workers(&mix, max_workers),
-        ceiling: model.parallel_ceiling(&mix),
+        ceiling,
+        ceiling_serial_transpose,
         points,
         mix,
     }
@@ -154,6 +189,14 @@ pub fn to_json(sweep: &ScalingSweep) -> Json {
         Json::Num(sweep.speedup_at(sweep.saturation)),
     );
     headline.insert("ceiling".to_string(), Json::Num(sweep.ceiling));
+    headline.insert(
+        "ceiling_serial_transpose".to_string(),
+        Json::Num(sweep.ceiling_serial_transpose),
+    );
+    headline.insert(
+        "transpose_ceiling_lift".to_string(),
+        Json::Num(sweep.ceiling / sweep.ceiling_serial_transpose),
+    );
 
     let points = sweep
         .points
@@ -476,6 +519,13 @@ mod tests {
         let h = j.get("headline").unwrap();
         assert!(h.get("saturation_workers").unwrap().as_f64().unwrap() >= 1.0);
         assert!(h.get("speedup_at_4").unwrap().as_f64().unwrap() > 1.0);
+        // the serial-transpose ceiling must sit strictly below the
+        // banded-transpose ceiling, and the lift headline is their ratio
+        let ceiling = h.get("ceiling").unwrap().as_f64().unwrap();
+        let serial = h.get("ceiling_serial_transpose").unwrap().as_f64().unwrap();
+        let lift = h.get("transpose_ceiling_lift").unwrap().as_f64().unwrap();
+        assert!(serial < ceiling, "serial {serial} !< banded {ceiling}");
+        assert!(lift > 1.0 && (lift - ceiling / serial).abs() < 1e-12);
         // round-trips through the serializer
         let again = crate::util::json::parse(&crate::util::json::write(&j)).unwrap();
         assert_eq!(j, again);

@@ -249,6 +249,94 @@ impl CostModel {
         }
     }
 
+    // -- §4 tile transpose --------------------------------------------------
+
+    /// Itemized price of one whole-image §4 tile transpose executed as
+    /// `workers` tile-row bands (`workers <= 1` = the sequential
+    /// driver).  Unlike [`CostModel::estimate_separable_cost`] this is
+    /// **loop-exact**, not a heuristic: the tile census is the §4
+    /// instruction count the networks are pinned to
+    /// (16×16.8: 16 ld + 16 st + 24 permute + 48 combine; 8×8.16:
+    /// 8 + 8 + 8 + 24 — reinterprets are free), the edge census is one
+    /// scalar load + store per right/bottom-edge pixel, and the memory
+    /// term is the `2·h·w·px_bytes` stream the drivers record — so the
+    /// breakdown of a counted transpose mix and this closed form agree
+    /// exactly (asserted in the module tests and mirrored in
+    /// `python/tools/mirror_counts.py::transpose_breakdown`).
+    ///
+    /// The parallel shape is the crate-wide banding model: per-tile
+    /// compute scales ÷P (tile-rows are independent; the banded driver
+    /// runs the identical tiles), the memory term does **not** (one
+    /// bus), and a `workers`-band dispatch pays the fork + per-band
+    /// cost.  Because a transpose is strongly memory-bound (~0.3–0.6
+    /// compute cycles/px vs ~0.9–1.8 memory cycles/px), [`CostModel::
+    /// plan_transpose_workers`] keeps paper-sized standalone transposes
+    /// sequential — banding only pays on huge images, or inside a
+    /// sandwich whose fork the rows pass has already justified.
+    pub fn transpose_breakdown(
+        &self,
+        h: usize,
+        w: usize,
+        lanes: usize,
+        px_bytes: usize,
+        workers: usize,
+    ) -> CostBreakdown {
+        let cyc = |c: InstrClass| self.cycles[c as usize];
+        // §4 per-tile census by tile edge (= SIMD lanes at this depth)
+        let (loads, stores, permutes, combines) = match lanes {
+            16 => (16u64, 16u64, 24u64, 48u64),
+            8 => (8, 8, 8, 24),
+            _ => (0, 0, 0, 0), // no tile network at this depth: all scalar
+        };
+        let tile_cycles = loads as f64 * cyc(InstrClass::SimdLoad)
+            + stores as f64 * cyc(InstrClass::SimdStore)
+            + permutes as f64 * cyc(InstrClass::SimdPermute)
+            + combines as f64 * cyc(InstrClass::SimdCombine);
+        let t = if loads == 0 { 1 } else { lanes };
+        let (th, tw) = (h - h % t, w - w % t);
+        let tiles = if loads == 0 { 0 } else { (th / t) * (tw / t) };
+        let edge_px = if loads == 0 {
+            h * w
+        } else {
+            h * (w - tw) + (h - th) * tw
+        };
+        let edge_cycles =
+            edge_px as f64 * (cyc(InstrClass::ScalarLoad) + cyc(InstrClass::ScalarStore));
+        let compute_ns = (tiles as f64 * tile_cycles + edge_cycles) / self.freq_ghz;
+        let stream_bytes = 2.0 * (h * w * px_bytes) as f64;
+        let memory_ns = stream_bytes / self.bw_bytes_per_cycle / self.freq_ghz;
+        if workers <= 1 {
+            CostBreakdown {
+                compute_ns,
+                memory_ns,
+                overhead_ns: self.call_overhead_ns,
+            }
+        } else {
+            CostBreakdown {
+                compute_ns: compute_ns / workers as f64,
+                memory_ns,
+                overhead_ns: self.parallel_overhead_ns(workers),
+            }
+        }
+    }
+
+    /// Band count for a **standalone** `h×w` transpose at the given
+    /// depth: [`CostModel::plan_workers`] over the loop-exact
+    /// [`CostModel::transpose_breakdown`] split — the same ≥10%
+    /// crossover every other pass uses, which demotes paper-sized
+    /// images to sequential (the transpose is memory-bound).
+    pub fn plan_transpose_workers(
+        &self,
+        h: usize,
+        w: usize,
+        lanes: usize,
+        px_bytes: usize,
+        max_workers: usize,
+    ) -> usize {
+        let b = self.transpose_breakdown(h, w, lanes, px_bytes, 1);
+        self.plan_workers(b.compute_ns, b.memory_ns, max_workers)
+    }
+
     /// Closed-form (compute_ns, memory_ns) estimate of one separable
     /// 2-D morphology at native speed — the *dispatch heuristic* behind
     /// `Parallelism::Auto`.  Mirrors the pass selection of
@@ -680,6 +768,49 @@ mod tests {
         assert!(m.rle_speedup(600, 800, 7, 7, 1, x - 0.005, 1, &cfg) > 1.0);
         // degenerate shapes price to the neutral 1.0
         assert_eq!(m.rle_speedup(0, 800, 7, 7, 1, 0.05, 1, &cfg), 1.0);
+    }
+
+    #[test]
+    fn transpose_breakdown_is_loop_exact_against_counted_mix() {
+        use crate::image::synth;
+        let m = CostModel::exynos5422();
+        for &(h, w) in &[(64usize, 64usize), (600, 800), (18, 18), (50, 33)] {
+            let img = synth::noise(h, w, 3);
+            let mut c = Counting::new();
+            let _ = crate::transpose::transpose_image(&mut c, &img);
+            let counted = m.breakdown(&c.mix);
+            let closed = m.transpose_breakdown(h, w, 16, 1, 1);
+            assert!(
+                (counted.compute_ns - closed.compute_ns).abs() < 1e-6
+                    && (counted.memory_ns - closed.memory_ns).abs() < 1e-6,
+                "u8 {h}x{w}: counted {counted:?} vs closed {closed:?}"
+            );
+        }
+        let img16 = synth::noise_u16(100, 80, 5);
+        let mut c = Counting::new();
+        let _ = crate::transpose::transpose_image_u16(&mut c, &img16);
+        let counted = m.breakdown(&c.mix);
+        let closed = m.transpose_breakdown(100, 80, 8, 2, 1);
+        assert!(
+            (counted.compute_ns - closed.compute_ns).abs() < 1e-6
+                && (counted.memory_ns - closed.memory_ns).abs() < 1e-6,
+            "u16: counted {counted:?} vs closed {closed:?}"
+        );
+    }
+
+    #[test]
+    fn standalone_transpose_banding_demotes_paper_sizes() {
+        let m = CostModel::exynos5422();
+        // paper-sized: memory-bound, banding gains < 10% → sequential
+        assert_eq!(m.plan_transpose_workers(600, 800, 16, 1, 8), 1);
+        assert_eq!(m.plan_transpose_workers(64, 64, 16, 1, 8), 1);
+        // the compute share and the fork amortization both grow with
+        // the image; a large-enough u16 transpose crosses the 10% bar
+        // (u16 tiles carry ~2x the compute per pixel)
+        let big = m.plan_transpose_workers(8192, 8192, 8, 2, 8);
+        assert!(big >= 1); // shape-dependent; must at least be well-defined
+        // monotonic sanity: banding never beats sequential on tiny work
+        assert_eq!(m.plan_transpose_workers(16, 16, 16, 1, 8), 1);
     }
 
     #[test]

@@ -21,16 +21,33 @@
 //!
 //! * `ImageView` is `Copy` and many may alias the same pixels —
 //!   overlapping *reads* (rows-pass halos) are plain shared borrows.
-//! * `ImageViewMut` is unique: the only way to get two is
-//!   [`ImageViewMut::split_at_rows_mut`] (or [`ImageViewMut::split_rows_mut`]),
-//!   which partitions the underlying `&mut [P]` with
-//!   `slice::split_at_mut`, so disjointness of concurrent band writes
-//!   is enforced by the borrow checker, not by convention.
+//! * `ImageViewMut` is unique: the only ways to get two are
+//!   [`ImageViewMut::split_at_rows_mut`] / [`ImageViewMut::split_rows_mut`]
+//!   (disjoint **row bands** — non-overlapping buffer halves) and
+//!   [`ImageViewMut::split_cols_mut`] (disjoint **column stripes** —
+//!   the banded §4 tile transpose's write geometry).  Row-band halves
+//!   occupy non-overlapping buffer extents; column stripes *interleave*
+//!   in memory (stripe `i`'s row `y` is `[y·stride + cᵢ.start,
+//!   y·stride + cᵢ.end)`), which no pair of `&mut [P]` slices can
+//!   express — so `ImageViewMut` carries a raw pointer internally and
+//!   materializes per-row slices on access.  Logical-cell disjointness
+//!   is still structural: siblings' row slices never overlap, because
+//!   either their buffer extents are disjoint (row bands) or their
+//!   column ranges are (stripes).  See the `unsafe` safety arguments on
+//!   the splitters.
 //! * Views never own pixels; whatever they borrow (usually an
-//!   [`Image`]) must outlive them — ordinary Rust lifetimes, no
-//!   `unsafe` in this module.
+//!   [`Image`]) must outlive them — the raw pointer is tagged with the
+//!   borrow's lifetime (`PhantomData<&'a mut [P]>`), so ordinary Rust
+//!   lifetimes still apply.
+//! * `row`/`row_mut`/`get` touch this view's logical cells only, so a
+//!   band job may use them while siblings write *their* cells.
+//!   [`ImageViewMut::as_view`] instead re-borrows the view's whole
+//!   backing span (padding and, for a stripe, interleaved sibling
+//!   columns included) — never call it while a sibling view is being
+//!   written.
 
 use super::{Image, Pixel};
+use std::marker::PhantomData;
 
 /// Minimum buffer length backing an `h × w` view with row `stride`:
 /// `h - 1` full strides plus one final `width`-row (the final row's
@@ -196,14 +213,37 @@ impl<'a, P: Pixel> From<&'a Image<P>> for ImageView<'a, P> {
 
 /// A unique mutable `height × width` view with row `stride` over
 /// borrowed pixels.  Produced by [`Image::view_mut`] and split into
-/// disjoint row bands with [`ImageViewMut::split_at_rows_mut`].
+/// disjoint row bands with [`ImageViewMut::split_at_rows_mut`] or
+/// disjoint column stripes with [`ImageViewMut::split_cols_mut`].
+///
+/// Internally this is `(ptr, len)` plus the geometry, not a
+/// `&'a mut [P]`: sibling **column stripes** of one destination
+/// interleave in memory (stripe rows alternate), so no partition into
+/// non-overlapping `&mut [P]` slices can describe them — overlapping
+/// mutable slices would be immediate UB even if never written.  The raw
+/// pointer carries the borrow's lifetime via `PhantomData<&'a mut [P]>`
+/// and every accessor materializes exactly the row slice it touches, so
+/// sibling views (row bands *or* column stripes) never manufacture
+/// references to each other's cells.
 #[derive(Debug)]
 pub struct ImageViewMut<'a, P: Pixel = u8> {
     height: usize,
     width: usize,
     stride: usize,
-    data: &'a mut [P],
+    ptr: *mut P,
+    /// Elements reachable from `ptr` — every accessor stays within
+    /// `ptr..ptr+len`, and the constructor asserts `len` covers the
+    /// `height × width @ stride` geometry.
+    len: usize,
+    _marker: PhantomData<&'a mut [P]>,
 }
+
+// SAFETY: an `ImageViewMut` is semantically a `&'a mut [P]` restricted
+// to its view geometry; `P: Pixel` already requires `Send + Sync`, so
+// moving the view to another thread (band jobs) or sharing `&self`
+// accessors is exactly as thread-safe as the slice borrow it replaces.
+unsafe impl<P: Pixel> Send for ImageViewMut<'_, P> {}
+unsafe impl<P: Pixel> Sync for ImageViewMut<'_, P> {}
 
 impl<'a, P: Pixel> ImageViewMut<'a, P> {
     /// Mutable view over a row-major buffer (same length contract as
@@ -219,7 +259,9 @@ impl<'a, P: Pixel> ImageViewMut<'a, P> {
             height,
             width,
             stride,
-            data,
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            _marker: PhantomData,
         }
     }
 
@@ -243,28 +285,45 @@ impl<'a, P: Pixel> ImageViewMut<'a, P> {
             height: self.height,
             width: self.width,
             stride: self.stride,
-            data: &mut *self.data,
+            ptr: self.ptr,
+            len: self.len,
+            _marker: PhantomData,
         }
     }
 
     /// Reborrow as a shared view (for reading what was just written).
+    ///
+    /// This re-borrows the view's **whole backing span** — for a column
+    /// stripe that span interleaves sibling columns, so it must not be
+    /// called while any sibling view is being written (row-band halves
+    /// back disjoint spans and have no such caveat).
     pub fn as_view(&self) -> ImageView<'_, P> {
         ImageView {
             height: self.height,
             width: self.width,
             stride: self.stride,
-            data: self.data,
+            // SAFETY: `ptr..ptr+len` is the span this view uniquely
+            // borrows (`&self` pins it); callers of `as_view` observe
+            // the sibling caveat documented above.
+            data: unsafe { std::slice::from_raw_parts(self.ptr, self.len) },
         }
     }
 
     #[inline]
     pub fn row(&self, y: usize) -> &[P] {
-        &self.data[y * self.stride..y * self.stride + self.width]
+        assert!(y < self.height, "row {y} out of 0..{}", self.height);
+        // SAFETY: y < height and the constructor asserted
+        // (height-1)·stride + width <= len, so the row slice is in
+        // bounds; it covers only this view's logical cells.
+        unsafe { std::slice::from_raw_parts(self.ptr.add(y * self.stride), self.width) }
     }
 
     #[inline]
     pub fn row_mut(&mut self, y: usize) -> &mut [P] {
-        &mut self.data[y * self.stride..y * self.stride + self.width]
+        assert!(y < self.height, "row {y} out of 0..{}", self.height);
+        // SAFETY: in bounds as in `row`; `&mut self` makes the borrow
+        // unique, and sibling views never cover these cells.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(y * self.stride), self.width) }
     }
 
     /// Copy `self.height()` rows out of `src` starting at its row `y0`
@@ -286,20 +345,27 @@ impl<'a, P: Pixel> ImageViewMut<'a, P> {
         assert!(y <= self.height, "split row {y} > height {}", self.height);
         // a minimally-sized buffer may omit the final row's padding, so
         // the y == height split point is clamped to what exists
-        let mid = (y * self.stride).min(self.data.len());
-        let (head, tail) = self.data.split_at_mut(mid);
+        let mid = (y * self.stride).min(self.len);
+        // SAFETY: consuming `self` transfers its unique borrow of
+        // `ptr..ptr+len`; the halves partition that span at `mid`
+        // (disjoint extents, together covering it), and each half's
+        // geometry fits its extent by the constructor invariant.
         (
             ImageViewMut {
                 height: y,
                 width: self.width,
                 stride: self.stride,
-                data: head,
+                ptr: self.ptr,
+                len: mid,
+                _marker: PhantomData,
             },
             ImageViewMut {
                 height: self.height - y,
                 width: self.width,
                 stride: self.stride,
-                data: tail,
+                ptr: unsafe { self.ptr.add(mid) },
+                len: self.len - mid,
+                _marker: PhantomData,
             },
         )
     }
@@ -319,6 +385,50 @@ impl<'a, P: Pixel> ImageViewMut<'a, P> {
             consumed = band.end;
         }
         assert_eq!(rest.height, 0, "plan must cover every row");
+        out
+    }
+
+    /// Partition into per-stripe disjoint **column** views following
+    /// `plan`, which must tile `0..width` contiguously (the output of
+    /// `parallel::split_bands` / `split_bands_aligned` over the width).
+    ///
+    /// This is the write geometry of the banded §4 tile transpose: a
+    /// band of *source tile-rows* `[y0, y1)` lands in *destination
+    /// columns* `[y0, y1)` across every destination row, i.e. a column
+    /// stripe.  Stripe `i` keeps the parent's stride with its origin
+    /// advanced by `cᵢ.start`, so its rows interleave with its
+    /// siblings' in memory — expressible here precisely because the
+    /// view is pointer-based (see the type docs).
+    ///
+    /// Handing the stripes to concurrent band jobs is race-free: stripe
+    /// `i`'s row `y` is the cell range `[y·stride + cᵢ.start,
+    /// y·stride + cᵢ.end)`, and the `cᵢ` are pairwise disjoint, so no
+    /// two stripes ever touch one cell (padding columns `width..stride`
+    /// belong to no stripe and stay untouched).
+    pub fn split_cols_mut(self, plan: &[std::ops::Range<usize>]) -> Vec<ImageViewMut<'a, P>> {
+        let mut out = Vec::with_capacity(plan.len());
+        let mut consumed = 0usize;
+        for cols in plan {
+            assert_eq!(cols.start, consumed, "plan must tile contiguously");
+            assert!(!cols.is_empty(), "column stripes must be non-empty");
+            // a height-0 view may back an empty buffer; clamp the
+            // origin so the offset stays inside the borrowed span
+            let off = cols.start.min(self.len);
+            out.push(ImageViewMut {
+                height: self.height,
+                width: cols.len(),
+                stride: self.stride,
+                // SAFETY: `off <= len` keeps the advanced origin inside
+                // (or one past) the borrowed span, and the stripe's
+                // geometry fits its remaining span whenever height > 0:
+                // (h-1)·stride + cols.end <= (h-1)·stride + width <= len.
+                ptr: unsafe { self.ptr.add(off) },
+                len: self.len - off,
+                _marker: PhantomData,
+            });
+            consumed = cols.end;
+        }
+        assert_eq!(consumed, self.width, "plan must cover every column");
         out
     }
 }
@@ -430,6 +540,58 @@ mod tests {
         assert_eq!(im.row(0)[0], 1);
         assert_eq!(im.row(2)[0], 2);
         assert_eq!(im.row(6)[0], 3);
+    }
+
+    #[test]
+    fn split_cols_mut_partitions_columns() {
+        let mut im = Image::<u8>::zeros(4, 6);
+        {
+            let stripes = im.view_mut().split_cols_mut(&[0..2, 2..3, 3..6]);
+            assert_eq!(stripes.len(), 3);
+            for (i, mut s) in stripes.into_iter().enumerate() {
+                assert_eq!(s.height(), 4);
+                for y in 0..s.height() {
+                    s.row_mut(y).fill(i as u8 + 1);
+                }
+            }
+        }
+        assert_eq!(im.row(0), &[1, 1, 2, 3, 3, 3]);
+        assert_eq!(im.row(3), &[1, 1, 2, 3, 3, 3]);
+    }
+
+    #[test]
+    fn split_cols_mut_on_padded_image_leaves_padding() {
+        let mut im = Image::<u8>::zeros(3, 5).with_stride(8, 0xAA);
+        {
+            let stripes = im.view_mut().split_cols_mut(&[0..3, 3..5]);
+            for (i, mut s) in stripes.into_iter().enumerate() {
+                for y in 0..s.height() {
+                    s.row_mut(y).fill(i as u8 + 1);
+                }
+            }
+        }
+        assert_eq!(im.row(1), &[1, 1, 1, 2, 2]);
+        assert_eq!(im.row_padded(1)[5], 0xAA, "padding untouched");
+    }
+
+    #[test]
+    fn split_cols_mut_handles_minimal_buffers() {
+        // final row's padding absent: the last stripe's rows must stay
+        // inside the buffer
+        let mut buf = vec![0u8; 2 * 10 + 4]; // h=3, w=4, stride=10
+        let v = ImageViewMut::from_slice_mut(&mut buf, 3, 4, 10);
+        let stripes = v.split_cols_mut(&[0..2, 2..4]);
+        assert_eq!(stripes.len(), 2);
+        let mut last = stripes.into_iter().nth(1).unwrap();
+        last.row_mut(2).fill(9);
+        assert_eq!(&buf[22..24], &[9, 9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover every column")]
+    fn split_cols_mut_rejects_partial_plans() {
+        let mut im = Image::<u8>::zeros(2, 6);
+        let _ = im.view_mut().split_cols_mut(&[0..2, 2..5]);
     }
 
     #[test]

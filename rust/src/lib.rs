@@ -221,10 +221,16 @@
 //!
 //! * `ImageView` is `Copy`; arbitrarily many may alias the same pixels
 //!   — overlapping *reads* (band halos) are plain shared borrows.
-//! * `ImageViewMut` is unique; disjoint concurrent *writes* exist only
-//!   through [`image::ImageViewMut::split_at_rows_mut`], which
-//!   partitions the underlying `&mut [P]`, so band-job disjointness is
-//!   borrow-checker-enforced, not conventional.
+//! * `ImageViewMut` is unique; disjoint concurrent *writes* come in two
+//!   shapes.  Row bands go through
+//!   [`image::ImageViewMut::split_at_rows_mut`], which partitions the
+//!   underlying storage at a row boundary.  Column stripes (the banded
+//!   §4 transpose writes dest columns, which *interleave* in memory) go
+//!   through [`image::ImageViewMut::split_cols_mut`], whose stripes
+//!   share the parent's raw base pointer and rely on the contiguous,
+//!   non-overlapping column plan — asserted at split time — for
+//!   disjointness; `rust/tests/parallel_banding.rs` and
+//!   `python/tests/test_transpose_bands.py` pin that plan geometry.
 //!
 //! This is what makes band-sharding zero-copy (no haloed-slab copy in,
 //! no core-row stitch out — `rust/tests/zero_copy_alloc.rs` pins the
@@ -245,18 +251,31 @@
 //!   input rows `[b0 - w/2, b1 + w/2) ∩ [0, h)` through an overlapping
 //!   borrowed view and *writes* its disjoint split of the destination
 //!   in place; the direct cols pass bands rows with zero halo; the
-//!   §5.2.1 sandwich stripes the transposed buffer in place in
-//!   [`morphology::MorphPixel::LANES`]-aligned bands.  Output is
+//!   §5.2.1 sandwich is banded **end-to-end** in
+//!   [`morphology::MorphPixel::LANES`]-aligned bands: both §4 tile
+//!   transposes shard over the same pool
+//!   ([`morphology::parallel::transpose_image_banded_into`]; each
+//!   source row band writes its zero-halo destination column stripe),
+//!   with the middle rows pass striping the transposed buffer in
+//!   place.  Standalone `FilterOp::Transpose` plans and the fused
+//!   batch sandwich route through the same banded kernels.  Output is
 //!   bit-identical to sequential for every pass × method × depth ×
 //!   border (`rust/tests/parallel_banding.rs`).
 //! * Cost model: compute scales ~1/P, the memory/bandwidth term does
-//!   not ([`costmodel::CostModel::parallel_breakdown`]), so modeled
-//!   speedup saturates at the memory-bandwidth ceiling; since the
-//!   zero-copy executor the per-band overhead constant models only job
-//!   dispatch (no staging fudge).  The scaling sweep (`bench scaling`,
-//!   `benches/scaling.rs`) emits `BENCH_scaling.json` and CI pins its
-//!   saturation point (±10%) against `rust/benches/baselines/`,
-//!   alongside the Fig-3, Fig-4 and Table-1 headline ratios.
+//!   not ([`costmodel::CostModel::parallel_breakdown`]; the transpose
+//!   analog is [`costmodel::CostModel::transpose_breakdown`], priced
+//!   per tile network), so modeled speedup saturates at the
+//!   memory-bandwidth ceiling; since the zero-copy executor the
+//!   per-band overhead constant models only job dispatch (no staging
+//!   fudge).  `Auto` demotes a standalone transpose to sequential
+//!   whenever the fork cost outweighs the ~10% gain bar
+//!   ([`costmodel::CostModel::plan_transpose_workers`]) — at the paper
+//!   sizes it always does, which `bench gate` pins via the
+//!   `auto_bands_*` headlines of `BENCH_transpose.json`.  The scaling
+//!   sweep (`bench scaling`, `benches/scaling.rs`) emits
+//!   `BENCH_scaling.json` and CI pins its saturation point (±10%)
+//!   against `rust/benches/baselines/`, alongside the Fig-3, Fig-4,
+//!   Table-1 and transpose headline ratios.
 //!
 //! ## Pixel-depth dispatch rules
 //!

@@ -482,6 +482,10 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     // deterministic sweep count of a live reconstruction plan run
     let rle_smoke = rle::run_smoke(&model)?;
     let rle_report = rle::to_json(&rle_smoke);
+    // banded-transpose smoke: closed-form tile-network throughput and
+    // banded/in-sandwich speedups (loop-exact vs the counted censuses)
+    let transpose_cases = bench_harness::transpose::run_model(&model);
+    let transpose_report = bench_harness::transpose::to_json(&transpose_cases);
 
     let reports = [
         ("BENCH_fig3.json", &fig3_report),
@@ -491,6 +495,7 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
         ("BENCH_scaling.json", &scaling_report),
         ("BENCH_serve.json", &serve_report),
         ("BENCH_rle.json", &rle_report),
+        ("BENCH_transpose.json", &transpose_report),
     ];
     for (name, report) in reports {
         let path = out_dir.join(name);
@@ -516,6 +521,8 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     print!("{}", table1::render(&table1_rows).to_markdown());
     println!();
     print!("{}", scaling::render(&scaling_sweep).to_markdown());
+    println!();
+    print!("{}", bench_harness::transpose::render(&transpose_cases).to_markdown());
     println!(
         "serve smoke: {} requests -> {} plan resolutions, {} hits \
          ({:.4} resolutions/request); {} fused batches / {} fused requests",
@@ -588,6 +595,7 @@ fn cmd_bench_gate(args: &Args) -> Result<()> {
         "BENCH_scaling.json",
         "BENCH_serve.json",
         "BENCH_rle.json",
+        "BENCH_transpose.json",
     ] {
         let base_path = base_dir.join(name);
         let meas_path = out_dir.join(name);

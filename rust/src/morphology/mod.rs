@@ -146,6 +146,20 @@ pub trait MorphPixel: Pixel {
         dst: ImageViewMut<'_, Self>,
     );
 
+    /// One **band** of the depth-dispatched §4 tile transpose: source
+    /// row band `[band.start, band.end)` of the full view `img` into
+    /// `dst`, the matching `w × band.len()` destination *column stripe*
+    /// (an [`ImageViewMut::split_cols_mut`] stripe).  Tile-rows are
+    /// independent, so band jobs run concurrently — this is what
+    /// [`parallel::transpose_image_banded_into`] forks per stripe.
+    /// One `[0, h)` band is exactly [`MorphPixel::transpose_image_into`].
+    fn transpose_band_into<B: Backend>(
+        b: &mut B,
+        img: ImageView<'_, Self>,
+        dst: &mut ImageViewMut<'_, Self>,
+        band: std::ops::Range<usize>,
+    );
+
     /// Saturating subtraction (derived operations).
     fn sat_sub(self, other: Self) -> Self;
 
@@ -213,6 +227,15 @@ impl MorphPixel for u8 {
         dst: ImageViewMut<'_, u8>,
     ) {
         crate::transpose::transpose_image_into(b, img, dst);
+    }
+
+    fn transpose_band_into<B: Backend>(
+        b: &mut B,
+        img: ImageView<'_, u8>,
+        dst: &mut ImageViewMut<'_, u8>,
+        band: std::ops::Range<usize>,
+    ) {
+        crate::transpose::transpose_band_into(b, img, dst, band);
     }
 
     #[inline(always)]
@@ -286,6 +309,15 @@ impl MorphPixel for u16 {
         dst: ImageViewMut<'_, u16>,
     ) {
         crate::transpose::transpose_image_u16_into(b, img, dst);
+    }
+
+    fn transpose_band_into<B: Backend>(
+        b: &mut B,
+        img: ImageView<'_, u16>,
+        dst: &mut ImageViewMut<'_, u16>,
+        band: std::ops::Range<usize>,
+    ) {
+        crate::transpose::transpose_band_u16_into(b, img, dst, band);
     }
 
     #[inline(always)]

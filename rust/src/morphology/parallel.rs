@@ -38,25 +38,39 @@
 //! Adjacent bands' *input* views overlap (their halos share rows) while
 //! their *output* views are disjoint.  Overlapping reads are plain
 //! shared `&[P]` borrows — many `ImageView`s may alias.  Disjoint
-//! writes are enforced structurally: the only way to obtain two
-//! `ImageViewMut`s into one buffer is `split_at_rows_mut`, which
-//! partitions the underlying `&mut [P]` with `slice::split_at_mut`, so
-//! a band can never write another band's rows — the soundness argument
-//! is the borrow checker's, not a convention.  (Since PR 2 re-used the
-//! owned-`&Image` kernels, it had to *copy* a haloed slab in and stitch
-//! core rows out of every band — two full image copies per banded pass;
-//! this module's view-based rewrite deletes both, which is also what
-//! the cost model's zero-copy parallel term always assumed.)
+//! writes come in two shapes, both owned by
+//! [`crate::image::ImageViewMut`]:
+//!
+//! * **row bands** ([`crate::image::ImageViewMut::split_rows_mut`]):
+//!   contiguous destination spans, partitioned exactly as
+//!   `slice::split_at_mut` would — a band can never write another
+//!   band's rows;
+//! * **column stripes**
+//!   ([`crate::image::ImageViewMut::split_cols_mut`], used by the
+//!   banded transpose): the stripes interleave in memory (stripe `i`
+//!   owns columns `[c0, c1)` of *every* row), which no partition of a
+//!   `&mut [P]` can express, so `ImageViewMut` carries a raw base
+//!   pointer and each stripe addresses only `row_base + x` for its own
+//!   `x ∈ [c0, c1)` — disjointness is by the column plan (asserted to
+//!   tile `[0, w)` contiguously), not the borrow checker.
+//!
+//! (Since PR 2 re-used the owned-`&Image` kernels, it had to *copy* a
+//! haloed slab in and stitch core rows out of every band — two full
+//! image copies per banded pass; the view-based rewrite deleted both,
+//! which is also what the cost model's zero-copy parallel term always
+//! assumed.)
 //!
 //! The direct cols-window pass (window across columns) is banded with a
 //! **zero halo** — rows are independent
 //! ([`separable::pass_cols_direct_into`]).  The §5.2.1 transpose
-//! sandwich keeps its two whole-image transposes sequential (they are
-//! memory-bound; zero-copy banded transpose is a ROADMAP follow-on) and
-//! stripes the middle rows pass **in place over the transposed buffer**
-//! in tile-aligned bands ([`MorphPixel::LANES`]-row multiples, i.e.
-//! 16-column stripes of the original u8 image, 8-column stripes at
-//! u16), so no §4 transpose tile ever straddles a band boundary.
+//! sandwich is banded **end-to-end**: both whole-image transposes run
+//! through [`transpose_image_banded_into`] — each source row band
+//! (tile-aligned, [`MorphPixel::LANES`]-row multiples) is transposed by
+//! one job into its disjoint destination *column stripe*, zero-copy and
+//! bit-identical to the sequential §4 tile network for any partition —
+//! and the middle rows pass is striped **in place over the transposed
+//! buffer** in the same tile-aligned bands, so no §4 transpose tile
+//! ever straddles a band boundary in either phase.
 //!
 //! ## Execution model
 //!
@@ -483,6 +497,93 @@ pub fn pass_rows_banded_into<P: MorphPixel>(
     pool.scope(jobs);
 }
 
+/// §4 tile-network transpose executed as row bands on `pool`, each band
+/// writing its disjoint destination **column stripe** — zero-copy and
+/// bit-identical to [`MorphPixel::transpose_image_into`] for any band
+/// count (pinned in `rust/tests/parallel_banding.rs`).
+///
+/// Source row band `[y0, y1)` (tile-aligned by [`split_bands_aligned`]
+/// with `align == P::LANES`, so no §4 tile straddles a cut) becomes
+/// destination columns `[y0, y1)` across all `w` destination rows.  The
+/// stripes are carved with [`ImageViewMut::split_cols_mut`]; they
+/// interleave in memory but are index-disjoint, and each band job runs
+/// the sequential tile network [`MorphPixel::transpose_band_into`] over
+/// its own stripe.  With one band (or a degenerate shape) the
+/// sequential whole-image kernel runs on the caller thread — same
+/// instruction census, no fork.
+pub fn transpose_image_banded_into<P: MorphPixel>(
+    pool: &BandPool,
+    src: ImageView<'_, P>,
+    dst: ImageViewMut<'_, P>,
+    bands: usize,
+) {
+    let (h, w) = (src.height(), src.width());
+    debug_assert_eq!(
+        (dst.height(), dst.width()),
+        (w, h),
+        "transpose destination must be the source's transpose shape"
+    );
+    if h == 0 || w == 0 {
+        return;
+    }
+    let plan = split_bands_aligned(h, bands, P::LANES);
+    if plan.len() <= 1 {
+        P::transpose_image_into(&mut Native, src, dst);
+        return;
+    }
+    let stripes = dst.split_cols_mut(&plan);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
+    for (band, mut stripe) in plan.iter().cloned().zip(stripes) {
+        jobs.push(Box::new(move || {
+            P::transpose_band_into(&mut Native, src, &mut stripe, band);
+        }));
+    }
+    pool.scope(jobs);
+}
+
+/// Fused-batch form of [`transpose_image_banded_into`]: transposes `n`
+/// images with ONE fork-join covering every image's column stripes.
+/// The band budget is spread `bands.div_ceil(n)` per image, and each
+/// image's cuts come from its own [`split_bands_aligned`] — **image-
+/// local, tile-aligned** — so no §4 tile ever straddles a batch seam
+/// (the fused seam-fence invariant holds trivially: a transpose band
+/// never reads outside its own image).  With a band budget of 1 the
+/// per-image sequential kernels run on the caller thread.
+pub fn transpose_fused_banded_into<P: MorphPixel>(
+    pool: &BandPool,
+    srcs: &[ImageView<'_, P>],
+    dsts: Vec<ImageViewMut<'_, P>>,
+    bands: usize,
+) {
+    debug_assert_eq!(srcs.len(), dsts.len());
+    let n = srcs.len();
+    if n == 0 {
+        return;
+    }
+    if bands <= 1 {
+        for (src, dst) in srcs.iter().zip(dsts) {
+            P::transpose_image_into(&mut Native, *src, dst);
+        }
+        return;
+    }
+    let per_img = bands.div_ceil(n);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(per_img * n);
+    for (src, dst) in srcs.iter().copied().zip(dsts) {
+        let (h, w) = (src.height(), src.width());
+        debug_assert_eq!((dst.height(), dst.width()), (w, h));
+        if h == 0 || w == 0 {
+            continue;
+        }
+        let plan = split_bands_aligned(h, per_img, P::LANES);
+        for (band, mut stripe) in plan.iter().cloned().zip(dst.split_cols_mut(&plan)) {
+            jobs.push(Box::new(move || {
+                P::transpose_band_into(&mut Native, src, &mut stripe, band);
+            }));
+        }
+    }
+    pool.scope(jobs);
+}
+
 /// Cols-window pass executed as row bands on `pool`.  Bit-identical to
 /// [`separable::pass_cols`] with the same arguments.
 ///
@@ -490,10 +591,11 @@ pub fn pass_rows_banded_into<P: MorphPixel>(
 ///   zero halo — the window runs across columns, so rows are
 ///   independent; each band reads its borrowed row view and writes its
 ///   disjoint destination band in place;
-/// * the §5.2.1 transpose sandwich transposes sequentially and stripes
-///   the middle rows pass in place over the *transposed* buffer in
-///   [`MorphPixel::LANES`]-aligned bands (16-/8-column stripes of the
-///   original image).
+/// * the §5.2.1 transpose sandwich is banded end-to-end: both
+///   transposes run through [`transpose_image_banded_into`] and the
+///   middle rows pass is striped in place over the *transposed* buffer,
+///   all in the same [`MorphPixel::LANES`]-aligned bands (16-/8-column
+///   stripes of the original image).
 pub fn pass_cols_banded<'a, P: MorphPixel>(
     pool: &BandPool,
     src: impl Into<ImageView<'a, P>>,
@@ -512,9 +614,11 @@ pub fn pass_cols_banded<'a, P: MorphPixel>(
     }
     let m = resolve_method(method, window, thresholds.wx0);
     if separable::takes_sandwich(m, simd, vertical) {
-        // §5.2.1: transpose ∘ banded rows pass ∘ transpose, stripes
-        // aligned to the §4 tile height of this depth
-        let t = P::transpose_image(&mut Native, src);
+        // §5.2.1: banded transpose ∘ banded rows pass ∘ banded
+        // transpose, every phase striped to the §4 tile height of
+        // this depth
+        let mut t = Image::zeros(w, h);
+        transpose_image_banded_into(pool, src, t.view_mut(), bands);
         let mid = pass_rows_banded_aligned(
             pool,
             t.view(),
@@ -526,7 +630,9 @@ pub fn pass_cols_banded<'a, P: MorphPixel>(
             bands,
             P::LANES,
         );
-        return P::transpose_image(&mut Native, mid.view());
+        let mut out = Image::zeros(h, w);
+        transpose_image_banded_into(pool, mid.view(), out.view_mut(), bands);
+        return out;
     }
     // direct forms: rows are independent, zero halo
     let mut dst = Image::zeros(h, w);
@@ -938,6 +1044,28 @@ pub fn effective_bands<P: MorphPixel>(
                 &cfg.thresholds,
             );
             model.plan_workers(compute_ns, memory_ns, pool)
+        }
+    }
+}
+
+/// Band count a **standalone** transpose of this shape should use, per
+/// [`MorphConfig::parallelism`].  `Auto` prices the §4 tile network
+/// with [`CostModel::plan_transpose_workers`] — the transpose is
+/// memory-heavy (its stream term does not scale with bands), so
+/// paper-sized images are demoted to sequential; sandwich transposes
+/// instead ride their plan's band count, where the fork is already
+/// paid.
+pub fn effective_transpose_bands<P: MorphPixel>(h: usize, w: usize, cfg: &MorphConfig) -> usize {
+    match cfg.parallelism {
+        Parallelism::Sequential => 1,
+        Parallelism::Fixed(n) => n.max(1),
+        Parallelism::Auto => {
+            let pool = BandPool::global().size();
+            if pool <= 1 {
+                return 1;
+            }
+            let model = CostModel::exynos5422();
+            model.plan_transpose_workers(h, w, P::LANES, std::mem::size_of::<P>(), pool)
         }
     }
 }

@@ -893,6 +893,11 @@ pub struct FilterPlan<P: MorphPixel> {
     /// and a non-`Dense` representation knob) — the final binary-source
     /// check happens per run ([`rle::try_run_chain_rle`]).
     rle_eligible: bool,
+    /// Band count for a standalone [`FilterOp::Transpose`] spec, priced
+    /// once at build time by [`parallel::effective_transpose_bands`]
+    /// (1 = sequential; unused for every other spec — sandwich
+    /// transposes ride their step's `bands`).
+    transpose_bands: usize,
     /// Reconstruction-only state ([`FilterOp::Reconstruct`] specs).
     recon: Option<Box<ReconScratch<P>>>,
 }
@@ -902,6 +907,7 @@ impl<P: MorphPixel> FilterPlan<P> {
         spec.validate(h, w)?;
         let (out_h, out_w) = spec.out_dims(h, w);
         if spec.is_transpose() {
+            let transpose_bands = parallel::effective_transpose_bands::<P>(h, w, &spec.config);
             return Ok(FilterPlan {
                 spec,
                 src_h: h,
@@ -913,6 +919,7 @@ impl<P: MorphPixel> FilterPlan<P> {
                 steps: Vec::new(),
                 scratch: Scratch::empty(),
                 rle_eligible: false,
+                transpose_bands,
                 recon: None,
             });
         }
@@ -941,6 +948,7 @@ impl<P: MorphPixel> FilterPlan<P> {
                 steps: Vec::new(),
                 scratch: Scratch::empty(),
                 rle_eligible: false,
+                transpose_bands: 1,
                 recon: Some(Box::new(ReconScratch {
                     sweep,
                     cur: vec![P::MIN_VALUE; px],
@@ -1058,6 +1066,7 @@ impl<P: MorphPixel> FilterPlan<P> {
                 vhgw: Vec::new(),
             },
             rle_eligible,
+            transpose_bands: 1,
             recon: None,
         })
     }
@@ -1202,7 +1211,16 @@ impl<P: MorphPixel> FilterPlan<P> {
             self.out_w
         );
         if self.spec.is_transpose() {
-            P::transpose_image_into(&mut Native, src, dst);
+            if self.transpose_bands > 1 {
+                parallel::transpose_image_banded_into(
+                    parallel::BandPool::global(),
+                    src,
+                    dst,
+                    self.transpose_bands,
+                );
+            } else {
+                P::transpose_image_into(&mut Native, src, dst);
+            }
             return;
         }
         assert!(
@@ -1534,6 +1552,22 @@ fn run_rows_pass<P: MorphPixel>(
     }
 }
 
+/// One §5.2.1 sandwich transpose at the plan's band count: banded over
+/// destination column stripes when the enclosing pass is banded
+/// (`bands > 1` — the fork is already paid for the middle pass, so the
+/// transposes ride the same partition), sequential otherwise.
+fn run_sandwich_transpose<P: MorphPixel>(
+    sv: ImageView<'_, P>,
+    tv: ImageViewMut<'_, P>,
+    bands: usize,
+) {
+    if bands > 1 {
+        parallel::transpose_image_banded_into(parallel::BandPool::global(), sv, tv, bands);
+    } else {
+        P::transpose_image_into(&mut Native, sv, tv);
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn run_cols_pass<P: MorphPixel>(
     sv: ImageView<'_, P>,
@@ -1548,15 +1582,14 @@ fn run_cols_pass<P: MorphPixel>(
 ) {
     let (h, w) = (sv.height(), sv.width());
     if c.sandwich {
-        // §5.2.1: transpose ∘ rows pass ∘ transpose, striped over the
-        // transposed buffer in LANES-aligned bands (sandwich passes are
-        // always SIMD; vHGW resolves here because it has no direct form)
+        // §5.2.1, banded end-to-end: banded transpose ∘ banded rows
+        // pass ∘ banded transpose, every phase striped over the
+        // transposed buffer in the same LANES-aligned bands (sandwich
+        // passes are always SIMD; vHGW resolves here because it has no
+        // direct form).  Each transpose band writes a disjoint column
+        // stripe of its destination arena buffer — zero-copy, no halo.
         let ta = &mut t_a[..h * w];
-        P::transpose_image_into(
-            &mut Native,
-            sv,
-            ImageViewMut::from_slice_mut(ta, w, h, h),
-        );
+        run_sandwich_transpose(sv, ImageViewMut::from_slice_mut(ta, w, h, h), bands);
         let tb = &mut t_b[..h * w];
         run_rows_pass(
             ImageView::from_slice(ta, w, h, h),
@@ -1571,7 +1604,7 @@ fn run_cols_pass<P: MorphPixel>(
             P::LANES,
             vhgw,
         );
-        P::transpose_image_into(&mut Native, ImageView::from_slice(tb, w, h, h), tv);
+        run_sandwich_transpose(ImageView::from_slice(tb, w, h, h), tv, bands);
     } else if bands > 1 {
         parallel::pass_cols_direct_banded_into(
             parallel::BandPool::global(),
@@ -2049,11 +2082,13 @@ fn fused_morph_ident<P: MorphPixel>(
     }
 }
 
-/// Fused cols pass: the §5.2.1 sandwich transposes each image into the
-/// fused `t_a` stack (sequential — memory-bound, like the per-image
-/// plan), runs ONE fused rows super-pass over the transposed stack in
-/// [`MorphPixel::LANES`]-aligned (image-local) bands, and transposes
-/// each image back; direct forms run the fused zero-halo executor.
+/// Fused cols pass: the §5.2.1 sandwich is banded end-to-end — each
+/// image is transposed into the fused `t_a` stack by
+/// [`parallel::transpose_fused_banded_into`] (one fork-join for the
+/// whole batch, image-local [`MorphPixel::LANES`]-aligned cuts so no §4
+/// tile straddles a seam), ONE fused rows super-pass runs over the
+/// transposed stack, and the batch is transposed back the same way;
+/// direct forms run the fused zero-halo executor.
 #[allow(clippy::too_many_arguments)]
 fn run_cols_fused<P: MorphPixel>(
     pool: &parallel::BandPool,
@@ -2071,12 +2106,12 @@ fn run_cols_fused<P: MorphPixel>(
     let (h, w) = (srcs[0].height(), srcs[0].width());
     let px = h * w;
     if c.sandwich {
-        for (j, s) in srcs.iter().enumerate() {
-            P::transpose_image_into(
-                &mut Native,
-                *s,
-                ImageViewMut::from_slice_mut(&mut t_a[j * px..(j + 1) * px], w, h, h),
-            );
+        {
+            let ta_dsts: Vec<ImageViewMut<'_, P>> = t_a[..n * px]
+                .chunks_exact_mut(px)
+                .map(|ch| ImageViewMut::from_slice_mut(ch, w, h, h))
+                .collect();
+            parallel::transpose_fused_banded_into(pool, srcs, ta_dsts, bands);
         }
         {
             let ta: Vec<ImageView<'_, P>> = t_a[..n * px]
@@ -2101,13 +2136,11 @@ fn run_cols_fused<P: MorphPixel>(
                 vhgw,
             );
         }
-        for (j, d) in dsts.into_iter().enumerate() {
-            P::transpose_image_into(
-                &mut Native,
-                ImageView::from_slice(&t_b[j * px..(j + 1) * px], w, h, h),
-                d,
-            );
-        }
+        let tb_srcs: Vec<ImageView<'_, P>> = t_b[..n * px]
+            .chunks_exact(px)
+            .map(|ch| ImageView::from_slice(ch, w, h, h))
+            .collect();
+        parallel::transpose_fused_banded_into(pool, &tb_srcs, dsts, bands);
     } else {
         parallel::pass_cols_direct_fused_into(
             pool,

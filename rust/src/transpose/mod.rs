@@ -11,12 +11,26 @@
 //!   are what the baseline *vertical* morphology pass (§5.2.1) uses at
 //!   each depth, dispatched through
 //!   [`crate::morphology::MorphPixel::transpose_image`].
+//! * **Band forms** ([`transpose_band_into`] /
+//!   [`transpose_band_u16_into`]) transpose one source row band
+//!   `[y0, y1)` into the matching destination **column stripe**
+//!   (`ImageViewMut::split_cols_mut`): source tile-rows are independent,
+//!   so the banded executor (`morphology::parallel::
+//!   transpose_image_banded_into`) forks one band job per stripe and the
+//!   §5.2.1 sandwich runs end-to-end on the `BandPool`.  With one band
+//!   covering `[0, h)` the band form **is** the sequential driver —
+//!   same tiles, same scalar edges, same counted instruction mix.
+//!
+//! Every driver has an `_into` form writing a caller-provided
+//! [`ImageViewMut`] (the plan arena owns the sandwich buffers) and an
+//! allocating wrapper built on it.
 
 pub mod neon;
 pub mod scalar;
 
 use crate::image::{Image, ImageView, ImageViewMut};
 use crate::neon::Backend;
+use std::ops::Range;
 
 pub use neon::{transpose16x16_u8, transpose8x8_u16};
 pub use scalar::{transpose16x16_u8_scalar, transpose8x8_u16_scalar};
@@ -40,15 +54,45 @@ pub fn transpose_image_into<'a, B: Backend>(
     mut out: ImageViewMut<'_, u8>,
 ) {
     let img = img.into();
-    let (h, w) = (img.height(), img.width());
-    debug_assert_eq!((out.height(), out.width()), (w, h));
-    b.record_stream((h * w) as u64, (h * w) as u64);
+    let h = img.height();
+    debug_assert_eq!((out.height(), out.width()), (img.width(), h));
+    transpose_band_into(b, img, &mut out, 0..h);
+}
 
-    let th = h - h % 16;
+/// Transpose source row band `[y0, y1)` of a u8 image into `out`, the
+/// matching `w × (y1−y0)` destination **column stripe** (columns
+/// `[y0, y1)` of the transposed image, e.g. one
+/// `ImageViewMut::split_cols_mut` stripe).  `img` is the *full* source
+/// view.
+///
+/// Tile rows fully inside the band run the 16×16.8 NEON network;
+/// leading/trailing partial tile rows (only when a band boundary is not
+/// 16-aligned) and the right-edge columns fall back to scalar, exactly
+/// like the whole-image driver's edges.  One band covering `[0, h)`
+/// reproduces [`transpose_image_into`]'s instruction mix verbatim;
+/// each band accounts its own `(y1−y0)·w` share of the memory stream.
+pub fn transpose_band_into<'a, B: Backend>(
+    b: &mut B,
+    img: impl Into<ImageView<'a, u8>>,
+    out: &mut ImageViewMut<'_, u8>,
+    band: Range<usize>,
+) {
+    let img = img.into();
+    let (h, w) = (img.height(), img.width());
+    let (y0, y1) = (band.start, band.end);
+    debug_assert!(y0 <= y1 && y1 <= h, "band {band:?} out of 0..{h}");
+    debug_assert_eq!((out.height(), out.width()), (w, y1 - y0));
+    if y0 == y1 || w == 0 {
+        return;
+    }
+    b.record_stream(((y1 - y0) * w) as u64, ((y1 - y0) * w) as u64);
+
     let tw = w - w % 16;
-    // interior: 16x16 NEON tiles, loaded/stored directly from the
-    // strided rows (no staging copies — EXPERIMENTS.md §Perf iter. 2)
-    for by in (0..th).step_by(16) {
+    // tile rows fully inside the band (16-aligned bands make this the
+    // whole band; the image's own bottom remainder trails the last one)
+    let t0 = (y0.div_ceil(16) * 16).min(y1);
+    let t1 = t0 + (y1 - t0) / 16 * 16;
+    for by in (t0..t1).step_by(16) {
         for bx in (0..tw).step_by(16) {
             let mut rows = [crate::neon::U8x16([0; 16]); 16];
             for (r, reg) in rows.iter_mut().enumerate() {
@@ -56,22 +100,22 @@ pub fn transpose_image_into<'a, B: Backend>(
             }
             neon::transpose16x16_regs(b, &mut rows);
             for (r, reg) in rows.iter().enumerate() {
-                b.vst1q_u8(&mut out.row_mut(bx + r)[by..], *reg);
+                b.vst1q_u8(&mut out.row_mut(bx + r)[by - y0..], *reg);
             }
         }
     }
-    // right edge columns (accounted as scalar work)
-    for y in 0..h {
-        for x in tw..w {
-            let v = b.scalar_load_u8(img.row(y), x);
-            b.scalar_store_u8(out.row_mut(x), y, v);
-        }
-    }
-    // bottom edge rows (excluding the corner already done above)
-    for y in th..h {
+    // partial tile rows at the band boundaries (accounted as scalar)
+    for y in (y0..t0).chain(t1..y1) {
         for x in 0..tw {
             let v = b.scalar_load_u8(img.row(y), x);
-            b.scalar_store_u8(out.row_mut(x), y, v);
+            b.scalar_store_u8(out.row_mut(x), y - y0, v);
+        }
+    }
+    // right edge columns
+    for y in y0..y1 {
+        for x in tw..w {
+            let v = b.scalar_load_u8(img.row(y), x);
+            b.scalar_store_u8(out.row_mut(x), y - y0, v);
         }
     }
 }
@@ -97,13 +141,34 @@ pub fn transpose_image_u16_into<'a, B: Backend>(
     mut out: ImageViewMut<'_, u16>,
 ) {
     let img = img.into();
-    let (h, w) = (img.height(), img.width());
-    debug_assert_eq!((out.height(), out.width()), (w, h));
-    b.record_stream((2 * h * w) as u64, (2 * h * w) as u64);
+    let h = img.height();
+    debug_assert_eq!((out.height(), out.width()), (img.width(), h));
+    transpose_band_u16_into(b, img, &mut out, 0..h);
+}
 
-    let th = h - h % 8;
+/// The u16 band form: source row band `[y0, y1)` into the matching
+/// destination column stripe via 8×8.16 tiles — see
+/// [`transpose_band_into`] for the geometry contract.
+pub fn transpose_band_u16_into<'a, B: Backend>(
+    b: &mut B,
+    img: impl Into<ImageView<'a, u16>>,
+    out: &mut ImageViewMut<'_, u16>,
+    band: Range<usize>,
+) {
+    let img = img.into();
+    let (h, w) = (img.height(), img.width());
+    let (y0, y1) = (band.start, band.end);
+    debug_assert!(y0 <= y1 && y1 <= h, "band {band:?} out of 0..{h}");
+    debug_assert_eq!((out.height(), out.width()), (w, y1 - y0));
+    if y0 == y1 || w == 0 {
+        return;
+    }
+    b.record_stream((2 * (y1 - y0) * w) as u64, (2 * (y1 - y0) * w) as u64);
+
     let tw = w - w % 8;
-    for by in (0..th).step_by(8) {
+    let t0 = (y0.div_ceil(8) * 8).min(y1);
+    let t1 = t0 + (y1 - t0) / 8 * 8;
+    for by in (t0..t1).step_by(8) {
         for bx in (0..tw).step_by(8) {
             let mut rows = [crate::neon::U16x8([0; 8]); 8];
             for (r, reg) in rows.iter_mut().enumerate() {
@@ -111,20 +176,20 @@ pub fn transpose_image_u16_into<'a, B: Backend>(
             }
             neon::transpose8x8_regs(b, &mut rows);
             for (r, reg) in rows.iter().enumerate() {
-                b.vst1q_u16(&mut out.row_mut(bx + r)[by..], *reg);
+                b.vst1q_u16(&mut out.row_mut(bx + r)[by - y0..], *reg);
             }
         }
     }
-    for y in 0..h {
-        for x in tw..w {
-            let v = b.scalar_load_u16(img.row(y), x);
-            b.scalar_store_u16(out.row_mut(x), y, v);
-        }
-    }
-    for y in th..h {
+    for y in (y0..t0).chain(t1..y1) {
         for x in 0..tw {
             let v = b.scalar_load_u16(img.row(y), x);
-            b.scalar_store_u16(out.row_mut(x), y, v);
+            b.scalar_store_u16(out.row_mut(x), y - y0, v);
+        }
+    }
+    for y in y0..y1 {
+        for x in tw..w {
+            let v = b.scalar_load_u16(img.row(y), x);
+            b.scalar_store_u16(out.row_mut(x), y - y0, v);
         }
     }
 }
@@ -135,8 +200,22 @@ pub fn transpose_image_scalar<'a, B: Backend>(
     img: impl Into<ImageView<'a, u8>>,
 ) -> Image<u8> {
     let img = img.into();
+    let mut out = Image::zeros(img.width(), img.height());
+    transpose_image_scalar_into(b, img, out.view_mut());
+    out
+}
+
+/// [`transpose_image_scalar`] writing into a caller-provided `w × h`
+/// destination view — same signature shape as the tiled `_into` drivers
+/// so benches/tests reuse one buffer across repetitions.
+pub fn transpose_image_scalar_into<'a, B: Backend>(
+    b: &mut B,
+    img: impl Into<ImageView<'a, u8>>,
+    mut out: ImageViewMut<'_, u8>,
+) {
+    let img = img.into();
     let (h, w) = (img.height(), img.width());
-    let mut out = Image::zeros(w, h);
+    debug_assert_eq!((out.height(), out.width()), (w, h));
     b.record_stream((h * w) as u64, (h * w) as u64);
     for y in 0..h {
         for x in 0..w {
@@ -144,7 +223,6 @@ pub fn transpose_image_scalar<'a, B: Backend>(
             b.scalar_store_u8(out.row_mut(x), y, v);
         }
     }
-    out
 }
 
 /// Cache-blocked scalar transpose (the fair non-SIMD comparator for
@@ -155,9 +233,23 @@ pub fn transpose_image_blocked<'a, B: Backend>(
     block: usize,
 ) -> Image<u8> {
     let img = img.into();
+    let mut out = Image::zeros(img.width(), img.height());
+    transpose_image_blocked_into(b, img, out.view_mut(), block);
+    out
+}
+
+/// [`transpose_image_blocked`] writing into a caller-provided `w × h`
+/// destination view.
+pub fn transpose_image_blocked_into<'a, B: Backend>(
+    b: &mut B,
+    img: impl Into<ImageView<'a, u8>>,
+    mut out: ImageViewMut<'_, u8>,
+    block: usize,
+) {
+    let img = img.into();
     let block = block.max(1);
     let (h, w) = (img.height(), img.width());
-    let mut out = Image::zeros(w, h);
+    debug_assert_eq!((out.height(), out.width()), (w, h));
     b.record_stream((h * w) as u64, (h * w) as u64);
     for by in (0..h).step_by(block) {
         for bx in (0..w).step_by(block) {
@@ -169,7 +261,6 @@ pub fn transpose_image_blocked<'a, B: Backend>(
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -256,5 +347,93 @@ mod tests {
         assert!(got.same_pixels(&img.transposed()));
         // 1 NEON 8x8 tile + (10*10 - 64) scalar edge pixels
         assert_eq!(c.mix.get(crate::neon::InstrClass::ScalarLoad), (10 * 10 - 64) as u64);
+    }
+
+    /// Run the u8 band kernel over every band of `plan` into
+    /// `split_cols_mut` stripes of one destination (sequentially here;
+    /// the threaded form lives in `morphology::parallel`).
+    fn banded_u8(img: &Image<u8>, plan: &[std::ops::Range<usize>]) -> Image<u8> {
+        let mut out = Image::zeros(img.width(), img.height());
+        let stripes = out.view_mut().split_cols_mut(plan);
+        for (band, mut stripe) in plan.iter().cloned().zip(stripes) {
+            transpose_band_into(&mut Native, img, &mut stripe, band);
+        }
+        out
+    }
+
+    #[test]
+    fn band_form_matches_whole_image_any_partition() {
+        for &(h, w) in &[(64, 48), (50, 33), (17, 16), (1, 20), (3, 3), (100, 7)] {
+            let img = synth::noise(h, w, (h * 77 + w) as u64);
+            let want = img.transposed();
+            // aligned, unaligned, single and per-row partitions
+            let plans: Vec<Vec<std::ops::Range<usize>>> = vec![
+                vec![0..h],
+                crate::morphology::parallel::split_bands_aligned(h, 3, 16),
+                crate::morphology::parallel::split_bands(h, 4),
+                (0..h).map(|y| y..y + 1).collect(),
+            ];
+            for plan in plans {
+                let got = banded_u8(&img, &plan);
+                assert!(got.same_pixels(&want), "{h}x{w} plan {plan:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn band_form_u16_matches_whole_image() {
+        let img = synth::noise_u16(37, 29, 5);
+        let want = img.transposed();
+        for parts in [1usize, 2, 5, 37] {
+            let plan = crate::morphology::parallel::split_bands_aligned(37, parts, 8);
+            let mut out = Image::zeros(29, 37);
+            let stripes = out.view_mut().split_cols_mut(&plan);
+            for (band, mut stripe) in plan.iter().cloned().zip(stripes) {
+                transpose_band_u16_into(&mut Native, &img, &mut stripe, band);
+            }
+            assert!(got_same(&out, &want), "parts={parts}");
+        }
+        fn got_same(a: &Image<u16>, b: &Image<u16>) -> bool {
+            a.same_pixels(b)
+        }
+    }
+
+    #[test]
+    fn single_band_counts_exactly_like_sequential() {
+        // the band form with one [0, h) band must account the identical
+        // instruction mix (tiles, edges, stream) as the whole-image
+        // driver — this is what keeps the cost model honest
+        let img = synth::noise(50, 33, 8);
+        let mut want = Counting::new();
+        let _ = transpose_image(&mut want, &img);
+        let mut got = Counting::new();
+        let mut out = Image::zeros(33, 50);
+        {
+            let mut v = out.view_mut();
+            transpose_band_into(&mut got, &img, &mut v, 0..50);
+        }
+        assert_eq!(got.mix, want.mix);
+        let img16 = synth::noise_u16(26, 19, 9);
+        let mut want16 = Counting::new();
+        let _ = transpose_image_u16(&mut want16, &img16);
+        let mut got16 = Counting::new();
+        let mut out16 = Image::zeros(19, 26);
+        {
+            let mut v = out16.view_mut();
+            transpose_band_u16_into(&mut got16, &img16, &mut v, 0..26);
+        }
+        assert_eq!(got16.mix, want16.mix);
+    }
+
+    #[test]
+    fn into_forms_match_allocating_forms() {
+        let img = synth::noise(21, 34, 3);
+        let want = img.transposed();
+        let mut out = Image::zeros(34, 21);
+        transpose_image_scalar_into(&mut Native, &img, out.view_mut());
+        assert!(out.same_pixels(&want));
+        let mut out2 = Image::zeros(34, 21);
+        transpose_image_blocked_into(&mut Native, &img, out2.view_mut(), 16);
+        assert!(out2.same_pixels(&want));
     }
 }

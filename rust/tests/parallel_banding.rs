@@ -2,12 +2,17 @@
 //! must be **byte-identical** to the sequential oracle for every pass ×
 //! method (naive/linear/vHGW/hybrid) × depth (u8/u16) × border, across
 //! band counts (1, 2, 7, rows, > rows) and degenerate shapes (bands >
-//! rows, window > band height, single-row images).
+//! rows, window > band height, single-row images).  The same contract
+//! covers the banded §4 tile transpose: column-stripe output must match
+//! [`Image::transposed`] for dense and strided sources, standalone
+//! [`FilterOp::Transpose`] plans, and the full §5.2.1 sandwich.
 
-use neon_morph::image::synth;
+use neon_morph::image::{synth, ImageView};
 use neon_morph::morphology::parallel::{
-    self, morphology_banded, pass_cols_banded, pass_rows_banded, BandPool,
+    self, morphology_banded, pass_cols_banded, pass_rows_banded, transpose_image_banded_into,
+    BandPool,
 };
+use neon_morph::morphology::plan::{FilterOp, FilterSpec};
 use neon_morph::morphology::{
     separable, Border, HybridThresholds, MorphConfig, MorphOp, MorphPixel, Parallelism,
     PassMethod, Representation, VerticalStrategy,
@@ -231,5 +236,134 @@ fn filter_native_auto_equals_sequential_on_paper_image() {
     let bands = parallel::effective_bands::<u8>(600, 800, 31, 31, &auto_cfg);
     if BandPool::global().size() > 1 {
         assert!(bands > 1, "Auto should shard the paper workload, got {bands}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// banded §4 tile transpose
+// ---------------------------------------------------------------------------
+
+#[test]
+fn banded_transpose_identical_u8() {
+    // shapes: tile-exact, off-tile both axes, 1-row, 1-col, tall/thin
+    for &(h, w) in &[
+        (1usize, 20usize),
+        (20, 1),
+        (16, 16),
+        (17, 33),
+        (48, 64),
+        (23, 5),
+        (5, 23),
+        (50, 47),
+    ] {
+        let img = synth::noise(h, w, (h * 1009 + w) as u64);
+        let want = img.transposed();
+        for &bands in &band_counts(h) {
+            let mut got = Image::<u8>::zeros(w, h);
+            transpose_image_banded_into(pool(), img.view(), got.view_mut(), bands);
+            assert!(
+                got.same_pixels(&want),
+                "u8 {h}x{w} bands={bands}: {:?}",
+                got.first_diff(&want)
+            );
+        }
+    }
+}
+
+#[test]
+fn banded_transpose_identical_u16() {
+    for &(h, w) in &[(1usize, 9usize), (8, 8), (19, 27), (40, 24), (9, 40)] {
+        let img = synth::noise_u16(h, w, (h * 31 + w) as u64);
+        let want = img.transposed();
+        for &bands in &band_counts(h) {
+            let mut got = Image::<u16>::zeros(w, h);
+            transpose_image_banded_into(pool(), img.view(), got.view_mut(), bands);
+            assert!(
+                got.same_pixels(&want),
+                "u16 {h}x{w} bands={bands}: {:?}",
+                got.first_diff(&want)
+            );
+        }
+    }
+}
+
+#[test]
+fn banded_transpose_reads_strided_sources() {
+    // a borrowed view whose stride exceeds its width (e.g. a sub-rect
+    // of a larger image) must band exactly like a dense image
+    let (h, w, stride) = (21usize, 37usize, 50usize);
+    let backing: Vec<u8> = (0..h * stride).map(|i| (i * 131 % 251) as u8).collect();
+    let view = ImageView::from_slice(&backing, h, w, stride);
+    let dense = view.to_image();
+    let want = dense.transposed();
+    for &bands in &band_counts(h) {
+        let mut got = Image::<u8>::zeros(w, h);
+        transpose_image_banded_into(pool(), view, got.view_mut(), bands);
+        assert!(
+            got.same_pixels(&want),
+            "strided bands={bands}: {:?}",
+            got.first_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn standalone_transpose_spec_bands_are_invisible() {
+    // the FilterOp::Transpose plan under every parallelism policy must
+    // reproduce Image::transposed at both depths
+    let img8 = synth::noise(45, 61, 0x7E57);
+    let img16 = synth::noise_u16(33, 29, 0x7E57_16);
+    for parallelism in [
+        Parallelism::Sequential,
+        Parallelism::Fixed(2),
+        Parallelism::Fixed(7),
+        Parallelism::Fixed(64),
+        Parallelism::Auto,
+    ] {
+        let cfg = MorphConfig {
+            parallelism,
+            ..MorphConfig::default()
+        };
+        let got8 = FilterSpec::new(FilterOp::Transpose, 0, 0)
+            .with_config(cfg)
+            .run_once::<u8>(&img8)
+            .unwrap();
+        assert!(got8.same_pixels(&img8.transposed()), "u8 {parallelism:?}");
+        let got16 = FilterSpec::new(FilterOp::Transpose, 0, 0)
+            .with_config(cfg)
+            .run_once::<u16>(&img16)
+            .unwrap();
+        assert!(got16.same_pixels(&img16.transposed()), "u16 {parallelism:?}");
+    }
+}
+
+#[test]
+fn sandwich_plan_fixed_bands_bit_identical() {
+    // the plan-arena sandwich (run_cols_pass: banded transpose ∘ banded
+    // rows ∘ banded transpose) against the sequential plan, at a window
+    // that forces vHGW through the transpose sandwich and a Linear one
+    // forced through it explicitly
+    let img = synth::noise(37, 53, 0x5A9D);
+    for method in [PassMethod::Vhgw, PassMethod::Linear] {
+        let base = MorphConfig {
+            method,
+            vertical: VerticalStrategy::Transpose,
+            simd: true,
+            parallelism: Parallelism::Sequential,
+            ..MorphConfig::default()
+        };
+        let want = parallel::filter_native(&img, MorphOp::Erode, 9, 9, &base);
+        for bands in [2usize, 5, 37, 64] {
+            let cfg = MorphConfig {
+                parallelism: Parallelism::Fixed(bands),
+                ..base
+            };
+            let got = parallel::filter_native(&img, MorphOp::Erode, 9, 9, &cfg);
+            assert!(
+                got.same_pixels(&want),
+                "{method:?} bands={bands}: {:?}",
+                got.first_diff(&want)
+            );
+        }
     }
 }
